@@ -1,0 +1,125 @@
+//! Distributed Mem-SGD end to end: synchronous parameter-server rounds,
+//! then the asynchronous variant under a network cost model — the
+//! deployment story of the paper's §1/§5.
+//!
+//! Run: `cargo run --release --example distributed`
+//!      `cargo run --release --example distributed -- --dataset rcv1 --workers-count 16`
+
+use anyhow::Result;
+
+use memsgd::coordinator::async_dist::{self, AsyncConfig};
+use memsgd::coordinator::checkpoint::Checkpoint;
+use memsgd::coordinator::distributed::{self, DistributedConfig};
+use memsgd::compress;
+use memsgd::experiments::{self, Which};
+use memsgd::metrics::{fmt_bits, summary_table};
+use memsgd::optim::{MemSgd, Schedule};
+use memsgd::sim::network::{ComputeModel, NetworkModel};
+use memsgd::util::cli::Args;
+use memsgd::util::prng::Prng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let which = Which::parse(&args.get_str("dataset", "epsilon"))?;
+    let scale = args.get("scale", 100usize)?;
+    let workers = args.get("workers-count", 8usize)?;
+    let rounds = args.get("rounds", 2_000usize)?;
+    let seed = args.get("seed", 1u64)?;
+    let data = experiments::dataset(which, scale, seed);
+    let k0 = which.ks()[0];
+
+    println!(
+        "== distributed Mem-SGD on {} (n={}, d={}, {} workers) ==\n",
+        data.name,
+        data.n(),
+        data.d(),
+        workers
+    );
+
+    // ---- 1. Synchronous parameter-server rounds, three wire formats.
+    println!("-- synchronous rounds ({rounds}) --");
+    let mut sync_records = Vec::new();
+    for spec in [format!("top_k:{k0}"), "qsgd:16".into(), "identity".to_string()] {
+        let cfg = DistributedConfig {
+            workers,
+            rounds,
+            compressor: spec.clone(),
+            schedule: Schedule::constant(0.5),
+            eval_points: 8,
+            lam: None,
+            seed,
+        };
+        let rec = distributed::run(&data, &cfg)?;
+        println!(
+            "  {:<28} final loss {:.4}   upload {:>10}  broadcast {:>10}",
+            rec.method,
+            rec.final_loss(),
+            fmt_bits(rec.extra["upload_bits"] as u64),
+            fmt_bits(rec.extra["broadcast_bits"] as u64),
+        );
+        sync_records.push(rec);
+    }
+
+    // ---- 2. Asynchronous parameter server on a slow link: the sparse
+    //         uploads keep the server NIC idle, dense ones queue.
+    println!("\n-- asynchronous server, 1GbE, heterogeneous fleet --");
+    let mean_coords = (data.nnz() as f64 / data.n() as f64).max(1.0);
+    for spec in [format!("top_k:{k0}"), "identity".to_string()] {
+        let cfg = AsyncConfig {
+            workers,
+            total_updates: rounds * workers,
+            compressor: spec.clone(),
+            schedule: Schedule::constant(0.5),
+            network: NetworkModel::eth_1g(),
+            compute: ComputeModel::new(1e-9, mean_coords),
+            hetero: 0.5,
+            eval_points: 8,
+            lam: None,
+            seed,
+        };
+        let (rec, stats) = async_dist::run(&data, &cfg)?;
+        println!(
+            "  {:<36} loss {:.4}  sim {:>8.3}s  staleness {:>5.1} (max {:>3})  link {:>5.1}%",
+            rec.method,
+            rec.final_loss(),
+            stats.sim_seconds,
+            stats.mean_staleness,
+            stats.max_staleness,
+            100.0 * stats.link_utilization,
+        );
+    }
+
+    // ---- 3. Fault tolerance: checkpoint a sequential run mid-flight and
+    //         resume bit-identically (what a preempted worker would do).
+    println!("\n-- checkpoint / resume --");
+    let d = data.d();
+    let mut model = memsgd::models::LogisticModel::with_paper_lambda(&data);
+    let mut opt = MemSgd::new(vec![0.0f32; d], compress::from_spec(&format!("top_k:{k0}"))?);
+    let mut rng = Prng::new(seed);
+    let mut grad = vec![0.0f32; d];
+    use memsgd::models::GradBackend;
+    for t in 0..500 {
+        let i = rng.below(data.n());
+        model.sample_grad(&opt.x, i, &mut grad);
+        opt.step(&grad, 0.1, &mut rng);
+        let _ = t;
+    }
+    let ck = Checkpoint::capture(&opt, &format!("top_k:{k0}"), &rng, None);
+    let path = std::env::temp_dir().join("memsgd_distributed_example.ck");
+    ck.save(&path)?;
+    let (mut resumed, mut rng2, _) = Checkpoint::load(&path)?.restore()?;
+    for _ in 500..1_000 {
+        let i = rng2.below(data.n());
+        model.sample_grad(&resumed.x, i, &mut grad);
+        resumed.step(&grad, 0.1, &mut rng2);
+    }
+    println!(
+        "  checkpointed at t=500 ({} bytes), resumed to t=1000, loss {:.4}",
+        std::fs::metadata(&path)?.len(),
+        model.full_loss(&resumed.x),
+    );
+    std::fs::remove_file(&path).ok();
+
+    println!("\n{}", summary_table(&sync_records));
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Paper Section 4.4 — multicore shared-memory Mem-SGD (Figure 4).
+//!
+//! Two halves, mirroring DESIGN.md §3's substitution:
+//!
+//! 1. **Threaded Algorithm 2** on this machine: real `std::thread`
+//!    workers, one shared lock-free parameter vector, private error
+//!    memories — verifies convergence *under concurrency* for top-k,
+//!    rand-k and the dense Hogwild-style baseline at a fixed total work
+//!    budget.
+//! 2. **Discrete-event speedup model** for the 24-core Xeon the paper
+//!    used (this box has one core, so wall-clock speedup cannot be
+//!    measured): regenerates Figure 4's speedup series from the cache-
+//!    coherence mechanism.
+//!
+//! Run: `cargo run --release --example multicore -- [--dataset epsilon]
+//!       [--workers 1,2,4,8,12,16,20,24] [--steps 40000]`
+
+use memsgd::experiments::{self, Which};
+use memsgd::metrics::summary_table;
+use memsgd::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let which = Which::parse(&args.get_str("dataset", "epsilon"))?;
+    let workers = args.get_list("workers", &[1usize, 2, 4, 8, 12, 16, 20, 24])?;
+    let steps = args.get("steps", 40_000usize)?;
+    let scale = args.get("scale", 100usize)?;
+    let seed = args.get("seed", 1u64)?;
+    args.finish()?;
+
+    // ---- half 1: real threads, convergence under concurrency ----------
+    let thread_workers: Vec<usize> = workers.iter().copied().filter(|&w| w <= 8).collect();
+    println!(
+        "threaded Algorithm 2 on {} — fixed budget {steps} total iterations,\n\
+         final-iterate loss per (workers × compressor):\n",
+        which.name()
+    );
+    let recs = experiments::figure4_threads(which, scale, steps, &thread_workers, seed)?;
+    println!("{}", summary_table(&recs));
+
+    // ---- half 2: simulated 24-core speedup -----------------------------
+    println!("simulated speedup on the 24-core model (paper Figure 4):\n");
+    let series = experiments::figure4_sim(which, &workers, seed);
+    println!("{}", experiments::sim_table(&series));
+    println!("lost (overwritten) updates at each worker count:");
+    print!("{:<24}", "method");
+    for &w in &workers {
+        print!("{w:>8}");
+    }
+    println!();
+    for s in &series {
+        print!("{:<24}", s.method);
+        for p in &s.points {
+            print!("{:>8}", p.lost_updates);
+        }
+        println!();
+    }
+    println!(
+        "\nreading: sparse Mem-SGD scales near-linearly to ~10 workers; the\n\
+         dense lock-free baseline saturates on coherence traffic; top-k's\n\
+         deterministic coordinate choice collides more than rand-k (the\n\
+         paper's explanation for top-k ≈ rand-k in the parallel setting)."
+    );
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Quickstart: Mem-SGD in ~30 lines.
+//!
+//! Trains L2-regularized logistic regression on a dense synthetic
+//! dataset three ways — vanilla SGD, Mem-SGD with top-1 sparsification,
+//! and the unbiased rand-1 baseline the paper's Section 2.2 warns about
+//! — and prints the loss curves plus the communication bill.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use memsgd::coordinator::train::{self, TrainConfig};
+use memsgd::data::synthetic;
+use memsgd::metrics::summary_table;
+
+fn main() -> anyhow::Result<()> {
+    // A small epsilon-like problem: n = 4000 samples, d = 500 features.
+    let data = synthetic::epsilon_like(4_000, 500, 42);
+    println!("dataset: {} ({} samples, {} features)\n", data.name, data.n(), data.d());
+
+    let mut records = Vec::new();
+    for method in ["sgd", "memsgd:top_k:1", "sgd:unbiased_rand_k:1"] {
+        // Theorem 2.4 stepsizes: η_t = γ/(λ(t+a)) with a = d/k.
+        let cfg = TrainConfig {
+            method: method.into(),
+            steps: 2 * data.n(), // two epochs
+            eval_points: 12,
+            seed: 7,
+            ..TrainConfig::default()
+        }
+        .with_paper_schedule(data.d(), data.n(), 2.0, 1.0)?;
+        let record = train::run(&data, &cfg)?;
+        println!(
+            "{:<24} final loss {:.4}   transmitted {}",
+            record.method,
+            record.final_loss(),
+            memsgd::metrics::fmt_bits(record.total_bits)
+        );
+        records.push(record);
+    }
+
+    println!("\n{}", summary_table(&records));
+    println!(
+        "Mem-SGD top-1 matches SGD's loss while sending ~{}x fewer bits;\n\
+         the unbiased rand-1 baseline pays the d/k variance blow-up of §2.2.",
+        records[0].total_bits / records[1].total_bits.max(1)
+    );
+    Ok(())
+}

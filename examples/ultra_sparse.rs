@@ -1,0 +1,84 @@
+//! Ultra-sparsification (Remark 2.3): a `random_p` operator with
+//! `k = p < 1` transmits **less than one coordinate per iteration on
+//! average** — and Mem-SGD still converges, because the memory carries
+//! everything that was not sent.
+//!
+//! Run: `cargo run --release --example ultra_sparse`
+
+use anyhow::Result;
+
+use memsgd::coordinator::train::{self, TrainConfig};
+use memsgd::experiments::{self, Which};
+use memsgd::metrics::{fmt_bits, summary_table};
+use memsgd::optim::Schedule;
+use memsgd::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let scale = args.get("scale", 200usize)?;
+    let steps = args.get("steps", 40_000usize)?;
+    let seed = args.get("seed", 1u64)?;
+    let data = experiments::dataset(Which::Epsilon, scale, seed);
+    let n = data.n();
+    let d = data.d();
+    let lam = 1.0 / n as f64;
+
+    println!(
+        "== ultra-sparsification (Remark 2.3) on {} (n={n}, d={d}) ==\n",
+        data.name
+    );
+    println!("operator random_p:p sends ONE coordinate with probability p,");
+    println!("NOTHING otherwise — k = p < 1 in Definition 2.1.\n");
+
+    let mut records = Vec::new();
+    for p in [1.0, 0.5, 0.25, 0.1] {
+        let k = p; // contraction parameter
+        let shift = Schedule::paper_shift(d, k, 1.0);
+        let cfg = TrainConfig {
+            method: format!("memsgd:random_p:{p}"),
+            schedule: Schedule::inv_t(2.0, lam, shift),
+            steps,
+            eval_points: 12,
+            average: true,
+            seed: seed ^ 0x07,
+            lam: Some(lam),
+        };
+        let rec = train::run(&data, &cfg)?;
+        let bits_per_coord = 32.0 + (d as f64).log2().ceil(); // footnote-5 encoding
+        let sent = rec
+            .curve
+            .last()
+            .map(|pt| pt.bits as f64 / rec.steps as f64 / bits_per_coord)
+            .unwrap_or(0.0);
+        println!(
+            "  p = {p:<5} final loss {:.4}   {:>9} total   {:.3} coords/iteration (expected {p})",
+            rec.final_loss(),
+            fmt_bits(rec.total_bits),
+            sent,
+        );
+        records.push(rec);
+    }
+
+    // Vanilla baseline for the same budget.
+    let cfg = TrainConfig {
+        method: "sgd".into(),
+        schedule: Schedule::inv_t(2.0, lam, 1.0),
+        steps,
+        eval_points: 12,
+        average: true,
+        seed: seed ^ 0x07,
+        lam: Some(lam),
+    };
+    let sgd = train::run(&data, &cfg)?;
+    println!(
+        "  sgd       final loss {:.4}   {:>9} total   {d} coords/iteration",
+        sgd.final_loss(),
+        fmt_bits(sgd.total_bits),
+    );
+    records.push(sgd);
+
+    println!("\n{}", summary_table(&records));
+    println!("note: p<1 needs proportionally more iterations (T = Ω(d/k·√κ), Remark 2.6) —");
+    println!("at this budget p=0.1 is visibly behind, exactly as the theory prices it.");
+    Ok(())
+}

@@ -1,0 +1,214 @@
+"""AOT lowering: every Layer-2 entry point → ``artifacts/*.hlo.txt``.
+
+This is the single build-time bridge between the Python authoring stack
+(JAX + Pallas) and the Rust runtime. Each entry point is jitted, lowered
+to StableHLO, converted to an XlaComputation, and dumped as **HLO text**.
+
+HLO *text* — NOT ``lowered.compile().serialize()`` nor a serialized
+``HloModuleProto`` — is the interchange format: jax >= 0.5 emits protos
+with 64-bit instruction ids which the xla crate's bundled XLA
+(xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``). The text parser
+reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md and DESIGN.md §2.
+
+Outputs (all under ``--outdir``, default ``../artifacts``):
+
+* ``logreg_grad_b{B}_d{D}.hlo.txt``       — (w, x, y) → (grad,)
+* ``logreg_loss_grad_b{B}_d{D}.hlo.txt``  — (w, x, y) → (loss, grad)
+* ``logreg_loss_b{B}_d{D}.hlo.txt``       — (w, x, y) → (loss,)
+* ``memsgd_step_k{K}_d{D}.hlo.txt``       — (x, m, grad, eta) → (x', m', g)
+                                            Algorithm 1 lines 4-6 on-device
+* ``transformer_step.hlo.txt``            — (flat_params, tokens) → (loss, flat_grad)
+* ``transformer_loss.hlo.txt``            — (flat_params, tokens) → (loss,)
+* ``transformer_init.bin``                — flat f32 LE initial parameters
+* ``manifest.json``                       — machine-readable artifact index
+
+Regularization note: the logistic artifacts are lowered with ``lam=0.0``
+(pure data term). The Rust coordinator adds ``lam * w`` / ``0.5*lam*|w|^2``
+itself, which keeps one artifact valid for every regularizer strength
+instead of baking a dataset-specific constant into the HLO.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Logistic-regression shapes exported by default. (B, D) pairs:
+#   256 x 2000 — paper's epsilon dataset width, production batch.
+#   64  x 512  — small shape for integration tests and the quickstart.
+LOGREG_SHAPES: tuple[tuple[int, int], ...] = ((256, 2000), (64, 512))
+
+# Mem-SGD on-device step shapes exported by default: (D, k).
+MEMSGD_STEP_SHAPES: tuple[tuple[int, int], ...] = ((512, 8),)
+
+TRANSFORMER_CFG = model.TransformerConfig()
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the only safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape: Sequence[int], dtype: Any) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dtype_name(dt: Any) -> str:
+    return {"float32": "f32", "int32": "i32", "float64": "f64", "int64": "i64"}[
+        jnp.dtype(dt).name
+    ]
+
+
+def _io_entry(args: Sequence[jax.ShapeDtypeStruct], outs: Sequence[jax.ShapeDtypeStruct]):
+    return (
+        [{"dims": list(a.shape), "dtype": _dtype_name(a.dtype)} for a in args],
+        [{"dims": list(o.shape), "dtype": _dtype_name(o.dtype)} for o in outs],
+    )
+
+
+def lower_entry(fn, args: Sequence[jax.ShapeDtypeStruct], outdir: str, name: str) -> dict:
+    """Lower ``fn`` at ``args`` and write ``{name}.hlo.txt``; return manifest row."""
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(outdir, fname), "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *args)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    inputs, outputs = _io_entry(args, outs)
+    print(f"  {fname}: {len(text)} chars, {len(inputs)} inputs -> {len(outputs)} outputs")
+    return {"name": name, "file": fname, "inputs": inputs, "outputs": outputs}
+
+
+def export_logreg(outdir: str) -> list[dict]:
+    rows: list[dict] = []
+    for b, d in LOGREG_SHAPES:
+        w = _spec((d, 1), jnp.float32)
+        x = _spec((b, d), jnp.float32)
+        y = _spec((b, 1), jnp.float32)
+        rows.append(
+            lower_entry(
+                lambda w, x, y: model.logistic_grad(w, x, y, lam=0.0),
+                (w, x, y), outdir, f"logreg_grad_b{b}_d{d}",
+            )
+        )
+        rows.append(
+            lower_entry(
+                lambda w, x, y: model.logistic_loss_grad(w, x, y, lam=0.0),
+                (w, x, y), outdir, f"logreg_loss_grad_b{b}_d{d}",
+            )
+        )
+        rows.append(
+            lower_entry(
+                lambda w, x, y: model.logistic_loss(w, x, y, lam=0.0),
+                (w, x, y), outdir, f"logreg_loss_b{b}_d{d}",
+            )
+        )
+        for row in rows[-3:]:
+            row["meta"] = {"batch": b, "dim": d, "reg_applied": False}
+    return rows
+
+
+def export_memsgd_step(outdir: str) -> list[dict]:
+    """Algorithm 1 lines 4-6 on-device (kernels/topk.py): one artifact per
+    (d, k). The Rust runtime cross-checks these against the native
+    MemSgd::step (rust/tests/integration_runtime.rs)."""
+    from .kernels import topk
+
+    rows: list[dict] = []
+    for d, k in MEMSGD_STEP_SHAPES:
+        vec = _spec((d, 1), jnp.float32)
+        eta = _spec((), jnp.float32)
+        rows.append(
+            lower_entry(
+                topk.memsgd_step_entry(k),
+                (vec, vec, vec, eta),
+                outdir,
+                f"memsgd_step_k{k}_d{d}",
+            )
+        )
+        rows[-1]["meta"] = {"dim": d, "k": k}
+    return rows
+
+
+def export_transformer(outdir: str) -> list[dict]:
+    cfg = TRANSFORMER_CFG
+    step, flat0, _ = model.make_transformer_step(cfg)
+    loss_fn = model.make_lm_loss_fn(cfg)
+    p = int(flat0.shape[0])
+    params = _spec((p,), jnp.float32)
+    tokens = _spec((cfg.batch, cfg.seq_len + 1), jnp.int32)
+
+    rows = [
+        lower_entry(step, (params, tokens), outdir, "transformer_step"),
+        lower_entry(loss_fn, (params, tokens), outdir, "transformer_loss"),
+    ]
+    init_file = "transformer_init.bin"
+    with open(os.path.join(outdir, init_file), "wb") as f:
+        import numpy as np
+
+        f.write(np.asarray(flat0, dtype="<f4").tobytes())
+    meta = {
+        "param_count": p,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "n_layers": cfg.n_layers,
+        "d_ff": cfg.d_ff,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "init_file": init_file,
+    }
+    for row in rows:
+        row["meta"] = meta
+    print(f"  {init_file}: {p} f32 params")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        choices=["logreg", "memsgd", "transformer", "all"],
+        default="all",
+        help="subset to export (the transformer lowering is the slow part)",
+    )
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    outdir = os.path.dirname(args.out) if args.out else args.outdir
+    os.makedirs(outdir, exist_ok=True)
+
+    rows: list[dict] = []
+    if args.only in ("logreg", "all"):
+        print("exporting logistic-regression artifacts:")
+        rows += export_logreg(outdir)
+    if args.only in ("memsgd", "all"):
+        print("exporting memsgd on-device step artifacts:")
+        rows += export_memsgd_step(outdir)
+    if args.only in ("transformer", "all"):
+        print("exporting transformer artifacts:")
+        rows += export_transformer(outdir)
+
+    manifest = {"format": 1, "entries": rows}
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(outdir, 'manifest.json')} ({len(rows)} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Layer-1 Pallas kernel: tiled causal attention for the e2e transformer.
+
+The kernel tiles the query dimension: each grid step loads one (Sq, Dh)
+query block plus the full (S, Dh) K and V panels into VMEM, computes the
+masked scores on the MXU, softmaxes in-register, and writes one output
+block. For the sequence lengths the e2e driver uses (S <= 256, Dh <= 64)
+K and V fit VMEM whole, so the extra complexity of an online-softmax
+inner loop over key tiles buys nothing; DESIGN.md §6 records the roofline
+estimate.
+
+Differentiability: ``pallas_call`` has no autodiff rule, so the public
+:func:`attention` is a ``jax.custom_vjp`` whose forward runs the Pallas
+kernel and whose backward is the VJP of the pure-jnp oracle
+(:func:`compile.kernels.ref.attention_ref`). The two are asserted
+allclose in python/tests, which makes the substitution exact up to float
+associativity.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_Q = 64
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int):
+    """One query tile of causal attention. Grid: (num_q_tiles,)."""
+    i = pl.program_id(0)
+    q = q_ref[...]  # (Bq, Dh)
+    k = k_ref[...]  # (S, Dh)
+    v = v_ref[...]  # (S, Dh)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # Causal mask: query row (global index i*Bq + r) attends keys <= itself.
+    q_idx = i * block_q + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    k_idx = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(k_idx <= q_idx, scores, -1e30)
+    # Numerically-stable softmax, fully in VMEM.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p.astype(v.dtype), v, preferred_element_type=o_ref.dtype)
+
+
+def _attention_fwd_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, block_q: int
+) -> jax.Array:
+    s, dh = q.shape
+    bq = min(block_q, s)
+    while s % bq != 0:
+        bq -= 1
+    grid = (s // bq,)
+    kernel = functools.partial(_attn_kernel, block_q=bq)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, dh), lambda i: (i, 0)),
+            pl.BlockSpec((s, dh), lambda i: (0, 0)),
+            pl.BlockSpec((s, dh), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+@jax.custom_vjp
+def attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal single-head attention, (S, Dh) x3 -> (S, Dh)."""
+    return _attention_fwd_pallas(q, k, v, block_q=DEFAULT_BLOCK_Q)
+
+
+def _attention_fwd(q, k, v):
+    return attention(q, k, v), (q, k, v)
+
+
+def _attention_bwd(res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(ref.attention_ref, q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)

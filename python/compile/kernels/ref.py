@@ -1,0 +1,110 @@
+"""Pure-jnp reference oracles for the Pallas kernels (Layer 1 correctness).
+
+Every Pallas kernel in this package has a corresponding reference here,
+written in straightforward jax.numpy with no tiling, no pallas, no tricks.
+``python/tests/`` asserts ``allclose`` between kernel and oracle across a
+hypothesis-driven sweep of shapes and dtypes; this is the core correctness
+signal for Layer 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def margin_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """z = X @ w.
+
+    Args:
+        x: (B, D) feature matrix.
+        w: (D, 1) weight column.
+    Returns:
+        (B, 1) margins.
+    """
+    return x @ w
+
+
+def logistic_coef_ref(z: jax.Array, y: jax.Array) -> jax.Array:
+    """Per-example scalar factor of the logistic-loss gradient.
+
+    For the loss l_i(w) = log(1 + exp(-y_i * z_i)) with z_i = x_i^T w,
+    dl_i/dz_i = -y_i * sigmoid(-y_i * z_i). Shapes (B, 1) -> (B, 1).
+    """
+    return -y * jax.nn.sigmoid(-y * z)
+
+
+def logistic_grad_ref(
+    x: jax.Array, y: jax.Array, w: jax.Array, lam: float
+) -> jax.Array:
+    """Full-batch gradient of the L2-regularized logistic loss.
+
+    grad = (1/B) X^T (-y * sigmoid(-y * Xw)) + lam * w
+
+    Args:
+        x: (B, D) features. y: (B, 1) labels in {-1, +1}. w: (D, 1) weights.
+        lam: L2 regularization strength.
+    Returns:
+        (D, 1) gradient.
+    """
+    b = x.shape[0]
+    z = margin_ref(x, w)
+    coef = logistic_coef_ref(z, y)
+    return x.T @ coef / b + lam * w
+
+
+def logistic_loss_ref(
+    x: jax.Array, y: jax.Array, w: jax.Array, lam: float
+) -> jax.Array:
+    """Mean L2-regularized logistic loss (scalar).
+
+    loss = (1/B) sum_i log(1 + exp(-y_i x_i^T w)) + lam/2 ||w||^2
+    Uses the numerically-stable log1p(exp(.)) = logaddexp(0, .) form.
+    """
+    z = margin_ref(x, w)
+    per_example = jnp.logaddexp(0.0, -y * z)
+    return jnp.mean(per_example) + 0.5 * lam * jnp.sum(w * w)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal single-head attention, the oracle for kernels.attention.
+
+    Args:
+        q, k, v: (S, Dh) per-head tensors.
+    Returns:
+        (S, Dh) attention output with causal masking.
+    """
+    s = q.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = (q @ k.T) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask, scores, jnp.asarray(-1e30, q.dtype))
+    probs = jax.nn.softmax(scores, axis=-1)
+    return probs @ v
+
+
+def topk_compress_ref(v: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Oracle for kernels.topk.topk_compress: dense top-k split.
+
+    Keeps every entry whose magnitude is >= the k-th largest magnitude
+    (ties keep all), zeroes the rest; residual is the complement.
+
+    Args:
+        v: (D, 1) vector. k: sparsity, 1 <= k <= D.
+    Returns:
+        (g, r) with g + r == v exactly.
+    """
+    mags = jnp.abs(v[:, 0])
+    tau = jax.lax.top_k(mags, k)[0][-1]
+    keep = (jnp.abs(v) >= tau)
+    g = jnp.where(keep, v, jnp.zeros_like(v))
+    return g, v - g
+
+
+def memsgd_step_ref(
+    x: jax.Array, m: jax.Array, grad: jax.Array, eta: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for kernels.topk.memsgd_step (Algorithm 1, lines 4-6)."""
+    v = m + eta.astype(x.dtype) * grad
+    g, r = topk_compress_ref(v, k)
+    return x - g, r, g

@@ -1,0 +1,137 @@
+"""Layer-1 Pallas kernel for the paper's operator itself: fused
+threshold-compress + error-residual (Algorithm 1, lines 4-6 without the
+parameter update).
+
+Top-k selection decomposes TPU-friendly into two phases:
+
+1. **Threshold**: the magnitude of the k-th largest entry, computed at
+   Layer 2 with ``jax.lax.top_k`` on |v| (an XLA-native sort-free
+   reduction that lowers to efficient TPU code on its own — re-deriving
+   a sorting network in Pallas would be slower and buy nothing).
+2. **Mask + residual** (*the Pallas kernel*): one tiled pass emitting
+
+       g = v * [|v| >= tau]          (the transmitted update)
+       r = v - g                     (the new error memory content)
+
+   fused so ``v`` streams HBM -> VMEM exactly once and both outputs are
+   produced from registers. This is the memory-bandwidth-bound part —
+   exactly the shape of fusion the hardware-adaptation note in
+   DESIGN.md §6 calls for (the CPU-side analogue of this fusion is the
+   §Perf story in EXPERIMENTS.md).
+
+Tie semantics: entries with |v| exactly equal to the threshold are ALL
+kept, so on ties the output may contain more than k nonzeros (still a
+k-contraction — keeping more mass only shrinks the residual). The
+hypothesis sweep in python/tests covers this.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .logistic_grad import _pick_block
+
+
+def _mask_residual_kernel(v_ref, tau_ref, g_ref, r_ref):
+    """One tile of g = v·[|v| ≥ τ], r = v − g. Grid: (num_tiles,)."""
+    v = v_ref[...]
+    tau = tau_ref[0, 0]
+    keep = jnp.abs(v) >= tau
+    g = jnp.where(keep, v, jnp.zeros_like(v))
+    g_ref[...] = g
+    r_ref[...] = v - g
+
+
+def threshold_compress(
+    v: jax.Array, tau: jax.Array, *, block_d: int | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Fused (compressed, residual) split of a (D, 1) vector at |·| ≥ τ.
+
+    Args:
+        v: (D, 1) vector to compress (Algorithm 1's m + η∇f).
+        tau: scalar magnitude threshold (0-d or (1,1) array).
+        block_d: tile length (default: largest divisor of D ≤ 256).
+    Returns:
+        (g, r) with g + r == v, g the entries of magnitude ≥ τ, r the rest.
+    """
+    d = v.shape[0]
+    bd = _pick_block(d, block_d)
+    grid = (d // bd,)
+    tau2 = jnp.reshape(tau.astype(v.dtype), (1, 1))
+    return pl.pallas_call(
+        _mask_residual_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bd, 1), lambda j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bd, 1), lambda j: (j, 0)),
+            pl.BlockSpec((bd, 1), lambda j: (j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, 1), v.dtype),
+            jax.ShapeDtypeStruct((d, 1), v.dtype),
+        ],
+        interpret=True,
+    )(v, tau2)
+
+
+def topk_threshold(v: jax.Array, k: int) -> jax.Array:
+    """Magnitude of the k-th largest |entry| of a (D, 1) vector (Layer 2).
+
+    Implemented with ``jnp.sort`` rather than ``jax.lax.top_k``: the
+    latter lowers to the modern ``topk(…, largest=true)`` HLO op which
+    the runtime's bundled XLA (xla_extension 0.5.1) cannot parse from
+    text, while ``sort`` round-trips fine (same constraint family as the
+    HLO-text-vs-proto choice documented in aot.py).
+    """
+    mags = jnp.abs(v[:, 0])
+    d = mags.shape[0]
+    return jnp.sort(mags)[d - min(k, d)]
+
+
+def topk_compress(
+    v: jax.Array, k: int, *, block_d: int | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Dense top-k split: (g, r) with g carrying the ≥-kth-magnitude
+    entries (all of them on ties) and r the residual memory content."""
+    tau = topk_threshold(v, k)
+    return threshold_compress(v, tau, block_d=block_d)
+
+
+def memsgd_step(
+    x: jax.Array,
+    m: jax.Array,
+    grad: jax.Array,
+    eta: jax.Array,
+    *,
+    k: int,
+    block_d: int | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Algorithm 1, lines 4-6, entirely on-device.
+
+    v = m + η·grad;  g = top_k(v);  x' = x − g;  m' = v − g.
+
+    Args:
+        x: (D, 1) iterate. m: (D, 1) error memory. grad: (D, 1) stochastic
+        gradient. eta: scalar stepsize. k: sparsity.
+    Returns:
+        (x', m', g) — g dense-with-zeros (the wire format is Layer 3's
+        concern; HLO artifacts have fixed shapes).
+    """
+    v = m + eta.astype(x.dtype) * grad
+    g, r = topk_compress(v, k, block_d=block_d)
+    return x - g, r, g
+
+
+# Lowered by aot.py with static k baked into the artifact name.
+def memsgd_step_entry(k: int):
+    return functools.partial(memsgd_step, k=k)

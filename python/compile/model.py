@@ -1,0 +1,197 @@
+"""Layer-2 JAX models: the compute graphs the Rust coordinator executes.
+
+Two model families, both calling the Layer-1 Pallas kernels
+(:mod:`compile.kernels`), both lowered once by :mod:`compile.aot` to HLO
+text and executed from Rust via PJRT. Python never runs at training time.
+
+1. **Logistic regression** — the paper's workload (Section 4): the batched
+   L2-regularized logistic gradient, with the matmul hot spots expressed as
+   the tiled Pallas kernels in ``kernels/logistic_grad.py``.
+
+2. **Decoder-only transformer LM** — the end-to-end validation workload
+   mandated by the brief: a ~1M-parameter causal LM whose per-head
+   attention is the Pallas kernel in ``kernels/attention.py``. The exported
+   entry point takes a *flat* f32 parameter vector and a token batch and
+   returns ``(mean loss, flat gradient)`` so the Rust side can treat the
+   model as an opaque ``R^P -> (R, R^P)`` oracle and run Mem-SGD on the
+   flat gradient exactly as it does for logistic regression.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels import attention as attention_kernel
+from .kernels import logistic_grad as logistic_kernel
+
+# ---------------------------------------------------------------------------
+# Logistic regression (paper Section 4 workload)
+# ---------------------------------------------------------------------------
+
+
+def logistic_grad(w: jax.Array, x: jax.Array, y: jax.Array, *, lam: float) -> tuple[jax.Array]:
+    """Batched gradient of the mean L2-regularized logistic loss.
+
+    Args:
+        w: (D, 1) weights.
+        x: (B, D) features.
+        y: (B, 1) labels in {-1, +1}.
+        lam: L2 regularization strength (baked into the artifact).
+    Returns:
+        1-tuple of the (D, 1) gradient (AOT lowers with return_tuple=True).
+    """
+    return (logistic_kernel.logistic_grad(x, y, w, lam=lam),)
+
+
+def logistic_loss_grad(
+    w: jax.Array, x: jax.Array, y: jax.Array, *, lam: float
+) -> tuple[jax.Array, jax.Array]:
+    """(scalar mean loss, (D,1) gradient), sharing one Pallas margin pass."""
+    loss, g = logistic_kernel.logistic_loss_and_grad(x, y, w, lam=lam)
+    return loss, g
+
+
+def logistic_loss(w: jax.Array, x: jax.Array, y: jax.Array, *, lam: float) -> tuple[jax.Array]:
+    """Scalar mean loss only — used by the Rust loss-evaluation schedule."""
+    z = logistic_kernel.margin(x, w)
+    per_example = jnp.logaddexp(0.0, -y * z)
+    return (jnp.mean(per_example) + 0.5 * lam * jnp.sum(w * w),)
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only transformer LM (end-to-end validation workload)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    """Static architecture of the e2e LM (baked into the HLO artifact)."""
+
+    vocab: int = 512
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 512
+    seq_len: int = 64
+    batch: int = 8
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+def init_params(cfg: TransformerConfig, key: jax.Array) -> dict[str, Any]:
+    """Initialize the LM parameter pytree (scaled-normal init)."""
+    keys = jax.random.split(key, 4 + cfg.n_layers)
+    scale = 0.02
+    params: dict[str, Any] = {
+        "embed": scale * jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)),
+        "pos": scale * jax.random.normal(keys[1], (cfg.seq_len, cfg.d_model)),
+        "unembed": scale * jax.random.normal(keys[2], (cfg.d_model, cfg.vocab)),
+        "ln_f": {"g": jnp.ones((cfg.d_model,)), "b": jnp.zeros((cfg.d_model,))},
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(keys[4 + i], 6)
+        params["layers"].append(
+            {
+                "wq": scale * jax.random.normal(lk[0], (cfg.d_model, cfg.d_model)),
+                "wk": scale * jax.random.normal(lk[1], (cfg.d_model, cfg.d_model)),
+                "wv": scale * jax.random.normal(lk[2], (cfg.d_model, cfg.d_model)),
+                "wo": scale * jax.random.normal(lk[3], (cfg.d_model, cfg.d_model)),
+                "w1": scale * jax.random.normal(lk[4], (cfg.d_model, cfg.d_ff)),
+                "w2": scale * jax.random.normal(lk[5], (cfg.d_ff, cfg.d_model)),
+                "ln1": {"g": jnp.ones((cfg.d_model,)), "b": jnp.zeros((cfg.d_model,))},
+                "ln2": {"g": jnp.ones((cfg.d_model,)), "b": jnp.zeros((cfg.d_model,))},
+            }
+        )
+    return params
+
+
+def param_count(cfg: TransformerConfig) -> int:
+    """Number of scalar parameters for ``cfg``."""
+    flat, _ = ravel_pytree(init_params(cfg, jax.random.PRNGKey(0)))
+    return int(flat.shape[0])
+
+
+def _layer_norm(x: jax.Array, g: jax.Array, b: jax.Array) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return g * (x - mu) * jax.lax.rsqrt(var + 1e-5) + b
+
+
+def _multi_head_attention(x: jax.Array, layer: dict[str, Any], cfg: TransformerConfig) -> jax.Array:
+    """Causal MHA over (B, S, D) activations via the Pallas per-head kernel."""
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    q = (x @ layer["wq"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    k = (x @ layer["wk"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    v = (x @ layer["wv"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    o = jax.vmap(attention_kernel.attention)(q, k, v)  # (B*H, S, Dh)
+    o = o.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return o @ layer["wo"]
+
+
+def _block(x: jax.Array, layer: dict[str, Any], cfg: TransformerConfig) -> jax.Array:
+    h = _layer_norm(x, layer["ln1"]["g"], layer["ln1"]["b"])
+    x = x + _multi_head_attention(h, layer, cfg)
+    h = _layer_norm(x, layer["ln2"]["g"], layer["ln2"]["b"])
+    x = x + jax.nn.gelu(h @ layer["w1"]) @ layer["w2"]
+    return x
+
+
+def lm_loss(params: dict[str, Any], tokens: jax.Array, cfg: TransformerConfig) -> jax.Array:
+    """Mean next-token cross-entropy of a (B, S+1) token batch."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    x = params["embed"][inputs] + params["pos"][None, :, :]
+    for layer in params["layers"]:
+        x = _block(x, layer, cfg)
+    x = _layer_norm(x, params["ln_f"]["g"], params["ln_f"]["b"])
+    logits = x @ params["unembed"]  # (B, S, V)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def make_transformer_step(cfg: TransformerConfig):
+    """Build the exported ``flat params, tokens -> (loss, flat grad)`` fn.
+
+    Returns:
+        (step_fn, flat_init, unravel) where ``flat_init`` is the flat f32
+        initial parameter vector the Rust coordinator starts from.
+    """
+    params0 = init_params(cfg, jax.random.PRNGKey(0))
+    flat0, unravel = ravel_pytree(params0)
+    flat0 = flat0.astype(jnp.float32)
+
+    def step(flat_params: jax.Array, tokens: jax.Array) -> tuple[jax.Array, jax.Array]:
+        params = unravel(flat_params)
+        loss, grads = jax.value_and_grad(lm_loss)(params, tokens, cfg)
+        flat_grad, _ = ravel_pytree(grads)
+        return loss, flat_grad.astype(jnp.float32)
+
+    return step, flat0, unravel
+
+
+def make_lm_loss_fn(cfg: TransformerConfig):
+    """Loss-only flat entry point (Rust evaluation schedule)."""
+    params0 = init_params(cfg, jax.random.PRNGKey(0))
+    _, unravel = ravel_pytree(params0)
+
+    def loss_fn(flat_params: jax.Array, tokens: jax.Array) -> tuple[jax.Array]:
+        return (lm_loss(unravel(flat_params), tokens, cfg),)
+
+    return loss_fn
+
+
+@functools.lru_cache(maxsize=4)
+def transformer_step_jit(cfg: TransformerConfig):
+    """Jitted step for the python test-suite (cached per config)."""
+    return jax.jit(make_transformer_step(cfg)[0])

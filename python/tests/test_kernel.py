@@ -1,0 +1,202 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the core correctness signal for the kernel layer: hypothesis
+sweeps shapes / dtypes / regularizer strengths and asserts allclose
+between ``compile.kernels.*`` (tiled Pallas, interpret=True) and
+``compile.kernels.ref`` (straight jnp).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attention_kernel
+from compile.kernels import logistic_grad as lk
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _logreg_case(b: int, d: int, seed: int, dtype=jnp.float32):
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k0, (b, d), dtype)
+    w = 0.1 * jax.random.normal(k1, (d, 1), dtype)
+    y = jnp.sign(jax.random.normal(k2, (b, 1), dtype))
+    y = jnp.where(y == 0, 1.0, y).astype(dtype)
+    return x, y, w
+
+
+# ---------------------------------------------------------------------------
+# margin kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(min_value=1, max_value=96),
+    d=st.integers(min_value=1, max_value=640),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_margin_matches_ref(b, d, seed):
+    x, _, w = _logreg_case(b, d, seed)
+    got = lk.margin(x, w)
+    want = ref.margin_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_d", [1, 2, 8, 64, 250, 256])
+def test_margin_explicit_blocks(block_d):
+    d = 1000 if 1000 % block_d == 0 else block_d * 4
+    x, _, w = _logreg_case(32, d, 7)
+    got = lk.margin(x, w, block_d=block_d)
+    np.testing.assert_allclose(got, ref.margin_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_margin_rejects_nondividing_block():
+    x, _, w = _logreg_case(4, 10, 0)
+    with pytest.raises(ValueError):
+        lk.margin(x, w, block_d=3)
+
+
+# ---------------------------------------------------------------------------
+# gradient kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(min_value=1, max_value=96),
+    d=st.integers(min_value=1, max_value=640),
+    lam=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_logistic_grad_matches_ref(b, d, lam, seed):
+    x, y, w = _logreg_case(b, d, seed)
+    got = lk.logistic_grad(x, y, w, lam=lam)
+    want = ref.logistic_grad_ref(x, y, w, lam)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(min_value=1, max_value=64),
+    d=st.integers(min_value=1, max_value=512),
+    lam=st.floats(min_value=0.0, max_value=0.5),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_loss_and_grad_matches_ref(b, d, lam, seed):
+    x, y, w = _logreg_case(b, d, seed)
+    loss, g = lk.logistic_loss_and_grad(x, y, w, lam=lam)
+    np.testing.assert_allclose(loss, ref.logistic_loss_ref(x, y, w, lam), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(g, ref.logistic_grad_ref(x, y, w, lam), rtol=1e-4, atol=1e-5)
+
+
+def test_grad_agrees_with_jax_autodiff():
+    """The kernel must match d/dw of the reference loss, not just ref.py."""
+    x, y, w = _logreg_case(48, 300, 3)
+    lam = 0.01
+    auto = jax.grad(lambda w: ref.logistic_loss_ref(x, y, w, lam))(w)
+    got = lk.logistic_grad(x, y, w, lam=lam)
+    np.testing.assert_allclose(got, auto, rtol=1e-4, atol=1e-5)
+
+
+def test_grad_large_margins_stable():
+    """Saturated sigmoids (|z| large) must not produce NaN/Inf."""
+    x = jnp.ones((8, 16), jnp.float32) * 50.0
+    y = jnp.ones((8, 1), jnp.float32)
+    w = jnp.ones((16, 1), jnp.float32)
+    g = lk.logistic_grad(x, y, w, lam=0.0)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    loss, g2 = lk.logistic_loss_and_grad(x, y, w, lam=0.0)
+    assert bool(jnp.isfinite(loss))
+    assert bool(jnp.all(jnp.isfinite(g2)))
+
+
+def test_grad_zero_weights_closed_form():
+    """At w=0 every sigmoid is 1/2, so grad = -X^T y / (2B)."""
+    x, y, _ = _logreg_case(64, 32, 11)
+    w = jnp.zeros((32, 1), jnp.float32)
+    got = lk.logistic_grad(x, y, w, lam=0.0)
+    want = -(x.T @ y) / (2 * x.shape[0])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# attention kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    s=st.integers(min_value=1, max_value=128),
+    dh=st.sampled_from([4, 8, 16, 32, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_attention_matches_ref(s, dh, seed):
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k0, (s, dh), jnp.float32)
+    k = jax.random.normal(k1, (s, dh), jnp.float32)
+    v = jax.random.normal(k2, (s, dh), jnp.float32)
+    got = attention_kernel.attention(q, k, v)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_attention_causality():
+    """Output at position t must not depend on keys/values after t."""
+    s, dh = 32, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (s, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (s, dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (s, dh))
+    o1 = attention_kernel.attention(q, k, v)
+    # Perturb the *future* half of K and V; first half of output must not move.
+    k2 = k.at[s // 2 :].add(100.0)
+    v2 = v.at[s // 2 :].add(-55.0)
+    o2 = attention_kernel.attention(q, k2, v2)
+    np.testing.assert_allclose(o1[: s // 2], o2[: s // 2], rtol=1e-6, atol=1e-6)
+    assert float(jnp.max(jnp.abs(o1[s // 2 :] - o2[s // 2 :]))) > 1e-3
+
+
+def test_attention_first_row_is_v0():
+    """Causal row 0 attends only to key 0 → output row 0 == v[0]."""
+    s, dh = 16, 8
+    q = jax.random.normal(jax.random.PRNGKey(3), (s, dh))
+    k = jax.random.normal(jax.random.PRNGKey(4), (s, dh))
+    v = jax.random.normal(jax.random.PRNGKey(5), (s, dh))
+    o = attention_kernel.attention(q, k, v)
+    np.testing.assert_allclose(o[0], v[0], rtol=1e-5, atol=1e-6)
+
+
+def test_attention_vjp_matches_ref_vjp():
+    s, dh = 48, 16
+    q = jax.random.normal(jax.random.PRNGKey(6), (s, dh))
+
+    def f_kernel(q):
+        return jnp.sum(attention_kernel.attention(q, q, q) ** 2)
+
+    def f_ref(q):
+        return jnp.sum(ref.attention_ref(q, q, q) ** 2)
+
+    g1 = jax.grad(f_kernel)(q)
+    g2 = jax.grad(f_ref)(q)
+    np.testing.assert_allclose(g1, g2, rtol=1e-3, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(min_value=1, max_value=6),
+    s=st.sampled_from([8, 24, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_attention_vmap_batches(n, s, seed):
+    dh = 16
+    q = jax.random.normal(jax.random.PRNGKey(seed), (n, s, dh))
+    got = jax.vmap(attention_kernel.attention)(q, q, q)
+    want = jax.vmap(ref.attention_ref)(q, q, q)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)

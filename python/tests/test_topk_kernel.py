@@ -1,0 +1,126 @@
+"""Layer-1 correctness for kernels/topk.py: the fused threshold-compress
++ residual kernel and the on-device Mem-SGD step, against the pure-jnp
+oracles in kernels/ref.py (hypothesis sweep over shapes/k/seeds)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, topk
+
+
+def _vec(d, seed, scale=3.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(d, 1)) * scale, jnp.float32)
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    d=st.sampled_from([8, 64, 256, 512, 1000]),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_topk_compress_matches_ref(d, k, seed):
+    v = _vec(d, seed)
+    g, r = topk.topk_compress(v, min(k, d))
+    g_ref, r_ref = ref.topk_compress_ref(v, min(k, d))
+    np.testing.assert_allclose(g, g_ref, rtol=0, atol=0)
+    np.testing.assert_allclose(r, r_ref, rtol=0, atol=0)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    d=st.sampled_from([64, 512]),
+    k=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_split_is_exact_partition(d, k, seed):
+    v = _vec(d, seed)
+    g, r = topk.topk_compress(v, k)
+    # g + r reconstructs v exactly (bitwise: the kernel moves, never adds).
+    np.testing.assert_array_equal(np.asarray(g) + np.asarray(r), np.asarray(v))
+    # Disjoint supports.
+    assert not np.any((np.asarray(g) != 0) & (np.asarray(r) != 0))
+    # At least k nonzeros in g (== k when magnitudes are distinct).
+    assert int(np.count_nonzero(np.asarray(g))) >= min(k, d)
+
+
+def test_contraction_property():
+    # Definition 2.1, pointwise for top-k: ‖r‖² ≤ (1 − k/d)‖v‖².
+    for seed in range(5):
+        d, k = 512, 4
+        v = _vec(d, seed)
+        _, r = topk.topk_compress(v, k)
+        lhs = float(jnp.sum(r * r))
+        rhs = (1 - k / d) * float(jnp.sum(v * v))
+        assert lhs <= rhs + 1e-6
+
+
+def test_tie_keeps_all_equal_magnitudes():
+    v = jnp.asarray([[2.0], [-2.0], [1.0], [0.5]], jnp.float32)
+    g, r = topk.topk_compress(v, 1)
+    # |2.0| and |-2.0| tie at the threshold: both kept.
+    np.testing.assert_array_equal(np.asarray(g)[:, 0], [2.0, -2.0, 0.0, 0.0])
+    np.testing.assert_array_equal(np.asarray(r)[:, 0], [0.0, 0.0, 1.0, 0.5])
+
+
+def test_threshold_zero_keeps_everything():
+    v = _vec(64, 7)
+    g, r = topk.threshold_compress(v, jnp.float32(0.0))
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(v))
+    np.testing.assert_array_equal(np.asarray(r), np.zeros_like(v))
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    d=st.sampled_from([64, 512]),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_memsgd_step_matches_ref(d, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(d, 1)), jnp.float32)
+    m = jnp.asarray(rng.normal(size=(d, 1)) * 0.1, jnp.float32)
+    grad = jnp.asarray(rng.normal(size=(d, 1)), jnp.float32)
+    eta = jnp.float32(abs(rng.normal()) * 0.1 + 1e-3)
+    out = topk.memsgd_step(x, m, grad, eta, k=k)
+    want = ref.memsgd_step_ref(x, m, grad, eta, k)
+    for a, b in zip(out, want):
+        np.testing.assert_allclose(a, b, rtol=0, atol=0)
+
+
+def test_memsgd_step_conservation():
+    # x' + m' == x + m + η·grad − ... : the invariant x − x̃ = m (eq. 12)
+    # in one step: (x − g) + (v − g) + g... direct identity:
+    # x' + m' = x + m + η·grad − g. Check g + (x' − x) == 0 and m' == v − g.
+    d, k = 512, 8
+    x, m, grad = _vec(d, 1), _vec(d, 2, 0.1), _vec(d, 3)
+    eta = jnp.float32(0.05)
+    x2, m2, g = topk.memsgd_step(x, m, grad, eta, k=k)
+    v = m + eta * grad
+    np.testing.assert_allclose(np.asarray(x2), np.asarray(x - g), atol=0)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(v - g), atol=0)
+    # Conservation: everything not transmitted stays in memory.
+    np.testing.assert_allclose(
+        np.asarray(g + m2), np.asarray(v), rtol=0, atol=1e-7
+    )
+
+
+def test_memsgd_step_lowers_to_hlo_text():
+    # The artifact path must survive the jit→stablehlo→HLO-text round trip.
+    from compile import aot
+
+    fn = topk.memsgd_step_entry(8)
+    vec = jax.ShapeDtypeStruct((512, 1), jnp.float32)
+    eta = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = jax.jit(fn).lower(vec, vec, vec, eta)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and len(text) > 500
+
+
+def test_block_must_divide():
+    v = _vec(100, 1)
+    with pytest.raises(ValueError):
+        topk.threshold_compress(v, jnp.float32(1.0), block_d=33)

@@ -1,0 +1,121 @@
+//! Robustness ablation for the Figure-4 DES substitution (DESIGN.md §3):
+//! the paper's qualitative conclusion — *sparse updates scale near-
+//! linearly, dense lock-free writers saturate early* — must hold across
+//! the simulator's whole plausible parameter range, not just at the
+//! calibrated defaults. If the conclusion flipped under a reasonable
+//! write cost or miss penalty, the substitution would be unsound.
+//!
+//! Run: `cargo bench --bench ablation_multicore`
+
+use memsgd::sim::{speedup_series, SimConfig, WritePattern};
+use memsgd::util::bench::Bench;
+use std::time::Instant;
+
+fn speedup_at(cfg: &SimConfig, w: usize) -> f64 {
+    speedup_series(cfg, &[w]).pop().unwrap().speedup
+}
+
+fn main() {
+    let mut b = Bench::slow("ablation_multicore");
+    let workers = 12usize;
+
+    // Parameter grid around the calibrated defaults (×1/4 .. ×4).
+    let write_costs = [1.25f64, 5.0, 20.0];
+    let miss_penalties = [0.75f64, 3.0, 12.0];
+    let bus_fixed = [37.5f64, 150.0, 600.0];
+
+    let started = Instant::now();
+    let mut cells = 0usize;
+    let mut min_gap = f64::INFINITY;
+    println!("\n  sparse-vs-dense speedup at W={workers} across the parameter grid:");
+    println!(
+        "  {:>8} {:>8} {:>8} | {:>8} {:>8} {:>6}",
+        "write", "miss", "bus", "top-1", "dense", "ratio"
+    );
+    for &write_ns in &write_costs {
+        for &miss_penalty_ns in &miss_penalties {
+            for &bus in &bus_fixed {
+                let base = SimConfig {
+                    write_ns,
+                    miss_penalty_ns,
+                    bus_fixed_ns: bus,
+                    total_updates: 12_000,
+                    ..SimConfig::default()
+                };
+                let sparse = speedup_at(
+                    &SimConfig {
+                        pattern: WritePattern::Uniform { k: 1 },
+                        ..base.clone()
+                    },
+                    workers,
+                );
+                let dense = speedup_at(
+                    &SimConfig {
+                        pattern: WritePattern::Dense,
+                        ..base.clone()
+                    },
+                    workers,
+                );
+                let ratio = sparse / dense;
+                min_gap = min_gap.min(ratio);
+                cells += 1;
+                println!(
+                    "  {write_ns:>8.2} {miss_penalty_ns:>8.2} {bus:>8.1} | {sparse:>8.2} {dense:>8.2} {ratio:>6.2}"
+                );
+                // The paper's ordering must hold in EVERY cell.
+                assert!(
+                    sparse > dense,
+                    "ordering flipped at write={write_ns} miss={miss_penalty_ns} bus={bus}"
+                );
+                // And sparse must retain meaningful parallelism.
+                assert!(
+                    sparse > 3.0,
+                    "sparse scaling collapsed at write={write_ns} miss={miss_penalty_ns} bus={bus}: {sparse:.2}"
+                );
+            }
+        }
+    }
+    b.record(
+        &format!("grid {cells} cells x 2 patterns x W={workers}"),
+        started.elapsed(),
+        cells * 2 * 12_000,
+    );
+    println!("\n  minimum sparse/dense speedup ratio over the grid: {min_gap:.2} (> 1 required)");
+
+    // Secondary claim: top-k's deterministic coordinate preference loses
+    // more updates to collisions than rand-k (paper §4.4), at defaults.
+    let started = Instant::now();
+    let base = SimConfig {
+        total_updates: 20_000,
+        ..SimConfig::default()
+    };
+    let popular = speedup_series(
+        &SimConfig {
+            pattern: WritePattern::Popular { k: 1, hot_fraction: 0.01 },
+            ..base.clone()
+        },
+        &[24],
+    )
+    .pop()
+    .unwrap();
+    let uniform = speedup_series(
+        &SimConfig {
+            pattern: WritePattern::Uniform { k: 1 },
+            ..base
+        },
+        &[24],
+    )
+    .pop()
+    .unwrap();
+    b.record("collision contrast (2 runs, W=24)", started.elapsed(), 40_000);
+    println!(
+        "  lost updates at W=24: popular(top-k-like) {} vs uniform(rand-k) {}",
+        popular.lost_updates, uniform.lost_updates
+    );
+    assert!(
+        popular.lost_updates > uniform.lost_updates,
+        "top-k-like pattern should collide more"
+    );
+
+    b.finish();
+}

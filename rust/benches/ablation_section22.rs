@@ -1,0 +1,64 @@
+//! Section 2.2 ablation bench: the variance blow-up of unbiased
+//! sparsification, measured, plus the convergence consequence — the
+//! motivating argument for the memory mechanism.
+//!
+//! Run: `cargo bench --bench ablation_section22`
+
+use memsgd::experiments::extensions;
+use memsgd::experiments::Which;
+use memsgd::util::bench::Bench;
+use std::time::Instant;
+
+fn main() {
+    let scale: usize = std::env::var("MEMSGD_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let mut b = Bench::slow("ablation_section22");
+
+    for which in [Which::Epsilon, Which::Rcv1] {
+        let steps = 10_000;
+        let started = Instant::now();
+        let res = extensions::section22(which, scale, steps, 1).expect("section22 failed");
+        b.record(
+            &format!("section22 {} (4 runs x {steps})", which.name()),
+            started.elapsed(),
+            4 * steps,
+        );
+
+        let base = res.variances[0].1;
+        let blown = res.variances[1].1;
+        let measured = blown / base.max(1e-12);
+        println!(
+            "  {}: measured variance blow-up {measured:.0}x (paper predicts ~d/k = {:.0}x)",
+            which.name(),
+            res.predicted_blowup
+        );
+        // The §2.2 claim: the blow-up is Θ(d/k). Accept a 4× band — the
+        // reference variance subtracts ∇f and the constant differs with
+        // data geometry, but the order must match.
+        assert!(
+            measured > res.predicted_blowup / 4.0 && measured < res.predicted_blowup * 4.0,
+            "blow-up {measured:.0}x out of band vs {:.0}x",
+            res.predicted_blowup
+        );
+
+        let find = |pat: &str| {
+            res.records
+                .iter()
+                .find(|r| r.method.contains(pat))
+                .unwrap_or_else(|| panic!("missing {pat}"))
+        };
+        let sgd = find("sgd").final_loss();
+        let unbiased = find("unbiased").final_loss();
+        let mem = find("memsgd(rand").final_loss();
+        println!("  {}: final loss sgd {sgd:.4} | unbiased {unbiased:.4} | mem {mem:.4}", which.name());
+        // Memory closes the gap the unbiased scheme cannot.
+        assert!(mem < unbiased, "memory must beat the unbiased scheme");
+        assert!(
+            (mem - sgd).abs() < 0.1,
+            "Mem-SGD should track vanilla SGD: {mem:.4} vs {sgd:.4}"
+        );
+    }
+    b.finish();
+}

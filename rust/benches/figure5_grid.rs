@@ -1,0 +1,33 @@
+//! Figure 5 regeneration bench: the gamma0 grid search behind Figure 3's
+//! tuned learning rates, per dataset, asserting that the winner is an
+//! interior point of the grid (neither extreme).
+//!
+//! Run: `cargo bench --bench figure5_grid`
+
+use memsgd::experiments::{self, Which};
+use memsgd::util::bench::Bench;
+use std::time::Instant;
+
+fn main() {
+    let mut b = Bench::slow("figure5_grid");
+    for which in [Which::Epsilon, Which::Rcv1] {
+        let started = Instant::now();
+        let res = experiments::figure5(which, 400, 2_000, 1).expect("grid failed");
+        b.record(
+            &format!("figure5 {} ({} cells)", which.name(), res.cells.len()),
+            started.elapsed(),
+            res.cells.len(),
+        );
+        println!("{}", res.table());
+        for method in res.methods() {
+            let best = res.best(&method).unwrap();
+            let grid = memsgd::grid::default_gamma0_grid();
+            assert!(
+                best.gamma0 > grid[0] && best.gamma0 < *grid.last().unwrap(),
+                "{method}: winner {} sits on the grid edge",
+                best.gamma0
+            );
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,62 @@
+//! Figure 6 (extension) regeneration bench: time-to-accuracy of the
+//! distributed methods on real link profiles — the claim the paper's
+//! abstract makes ("better scalability for distributed applications")
+//! priced on 1GbE / 10GbE / 100Gb-IB.
+//!
+//! Run: `cargo bench --bench figure6_network`
+
+use memsgd::experiments::extensions;
+use memsgd::experiments::Which;
+use memsgd::util::bench::Bench;
+use std::time::Instant;
+
+fn main() {
+    let scale: usize = std::env::var("MEMSGD_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let mut b = Bench::slow("figure6_network");
+
+    for which in [Which::Epsilon, Which::Rcv1] {
+        let rounds = 1_200;
+        let workers = 8;
+        let started = Instant::now();
+        let res = extensions::figure6_network(which, scale, rounds, workers, 1)
+            .expect("figure6 driver failed");
+        b.record(
+            &format!("figure6 {} ({} cells)", which.name(), res.cells.len()),
+            started.elapsed(),
+            rounds * workers,
+        );
+        println!("{}", res.table());
+
+        let secs = |m: &str, net: &str| {
+            res.cells
+                .iter()
+                .find(|c| c.method.contains(m) && c.network == net)
+                .and_then(|c| c.seconds_to_target)
+        };
+        // Reproduction check 1: on the slow link, if both reach the
+        // target, sparse must be faster than dense by a wide margin.
+        if let (Some(sparse), Some(dense)) = (secs("top_k", "1GbE"), secs("identity", "1GbE")) {
+            let factor = dense / sparse;
+            println!("  {}: 1GbE dense/top-k time factor = {factor:.1}x", which.name());
+            assert!(
+                factor > 3.0,
+                "sparse should win clearly on 1GbE: {factor:.2}x"
+            );
+        }
+        // Reproduction check 2: the dense method's comm share collapses
+        // on the fast link — the bottleneck story is network-dependent.
+        let frac = |m: &str, net: &str| {
+            res.cells
+                .iter()
+                .find(|c| c.method.contains(m) && c.network == net)
+                .map(|c| c.comm_fraction)
+                .unwrap()
+        };
+        assert!(frac("identity", "1GbE") > frac("identity", "100Gb-IB"));
+        assert!(frac("top_k", "1GbE") < frac("identity", "1GbE"));
+    }
+    b.finish();
+}

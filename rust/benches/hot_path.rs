@@ -1,0 +1,110 @@
+//! Hot-path benchmark: the full Mem-SGD iteration (gradient + compress +
+//! memory update) against the vanilla-SGD iteration, per dataset shape.
+//!
+//! DESIGN.md §7 target: Mem-SGD top-1's iteration must cost ≤ 2× a
+//! vanilla dense-SGD iteration at d = 2000 — compression must not eat
+//! the communication win. This bench regenerates that number, plus the
+//! breakdown (gradient / compress / memory) used in EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench hot_path`
+
+use memsgd::compress::{self, Update};
+use memsgd::data::synthetic;
+use memsgd::models::{GradBackend, LogisticModel};
+use memsgd::optim::{MemSgd, Sgd};
+use memsgd::util::bench::Bench;
+use memsgd::util::prng::Prng;
+
+fn main() {
+    let mut b = Bench::new("hot_path");
+
+    // --- dense epsilon shape ------------------------------------------------
+    {
+        let data = synthetic::epsilon_like(2_000, 2_000, 1);
+        let mut model = LogisticModel::with_paper_lambda(&data);
+        let d = data.d();
+        let mut grad = vec![0.0f32; d];
+        let x = vec![0.01f32; d];
+        let mut i = 0usize;
+
+        b.run("grad only           dense d=2000", || {
+            model.sample_grad(&x, i % 2_000, &mut grad);
+            i += 1;
+        });
+
+        let mut rng = Prng::new(3);
+        let mut mem = MemSgd::new(vec![0.0; d], compress::from_spec("top_k:1").unwrap());
+        b.run("memsgd top_1 step   dense d=2000", || {
+            model.sample_grad(&mem.x, i % 2_000, &mut grad);
+            mem.step(&grad, 1e-3, &mut rng);
+            i += 1;
+        });
+
+        let mut sgd = Sgd::vanilla(vec![0.0; d]);
+        b.run("vanilla sgd step    dense d=2000", || {
+            model.sample_grad(&sgd.x, i % 2_000, &mut grad);
+            sgd.step(&grad, 1e-3, &mut rng);
+            i += 1;
+        });
+
+        // isolated compress+memory cost
+        let mut comp = compress::from_spec("top_k:1").unwrap();
+        let mut out = Update::new_sparse(d);
+        b.run("compress+mem only   dense d=2000", || {
+            comp.compress(&grad, &mut rng, &mut out);
+        });
+    }
+
+    // --- sparse rcv1 shape ----------------------------------------------------
+    {
+        let data = synthetic::rcv1_like(2_000, 47_236, 0.0015, 2);
+        let mut model = LogisticModel::with_paper_lambda(&data);
+        let d = data.d();
+        let mut grad = vec![0.0f32; d];
+        let mut rng = Prng::new(4);
+        let mut i = 0usize;
+
+        let mut mem = MemSgd::new(vec![0.0; d], compress::from_spec("top_k:10").unwrap());
+        b.run("memsgd top_10 step  sparse d=47236", || {
+            model.sample_grad(&mem.x, i % 2_000, &mut grad);
+            mem.step(&grad, 1e-3, &mut rng);
+            i += 1;
+        });
+
+        let mut sgd = Sgd::vanilla(vec![0.0; d]);
+        b.run("vanilla sgd step    sparse d=47236", || {
+            model.sample_grad(&sgd.x, i % 2_000, &mut grad);
+            sgd.step(&grad, 1e-3, &mut rng);
+            i += 1;
+        });
+    }
+
+    // --- weighted averaging overhead ------------------------------------------
+    {
+        let d = 2_000;
+        let mut avg = memsgd::optim::WeightedAverage::new(d, 2_000.0);
+        let x = vec![0.5f32; d];
+        b.run("weighted avg update dense d=2000", || {
+            avg.update(&x);
+        });
+    }
+
+    b.finish();
+
+    // The §7 acceptance check, printed for EXPERIMENTS.md:
+    let ratio_cases: Vec<(&str, f64)> = b
+        .results
+        .iter()
+        .filter(|m| m.name.contains("d=2000") && m.name.contains("step"))
+        .map(|m| (m.name.trim(), m.mean_ns))
+        .collect();
+    if let (Some(mem), Some(sgd)) = (
+        ratio_cases.iter().find(|c| c.0.contains("memsgd")),
+        ratio_cases.iter().find(|c| c.0.contains("vanilla")),
+    ) {
+        println!(
+            "\nDESIGN §7 check: memsgd/vanilla iteration ratio = {:.2} (target <= 2.0)",
+            mem.1 / sgd.1
+        );
+    }
+}

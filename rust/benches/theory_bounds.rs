@@ -1,0 +1,86 @@
+//! Theory-validation bench: Lemma 3.2's memory envelope and Theorem
+//! 2.4's suboptimality bound evaluated against live runs — the
+//! "executable mathematics" check that the implementation and the
+//! analysis describe the same algorithm.
+//!
+//! Run: `cargo bench --bench theory_bounds`
+
+use memsgd::experiments::extensions;
+use memsgd::experiments::Which;
+use memsgd::optim::theory::{lemma_a3_max_ratio, TheoryParams};
+use memsgd::util::bench::Bench;
+use std::time::Instant;
+
+fn main() {
+    let mut b = Bench::slow("theory_bounds");
+
+    // --- Lemma 3.2 on live runs: measured ‖m_t‖² under the envelope.
+    for spec in ["top_k:1", "rand_k:1", "top_k:10"] {
+        let started = Instant::now();
+        let tr = extensions::memory_trace(Which::Epsilon, 400, 12_000, spec, 1)
+            .expect("memory trace failed");
+        b.record(&format!("memory_trace {spec}"), started.elapsed(), 12_000);
+        println!(
+            "  {spec:<10} max ‖m_t‖²/bound = {:.3e} (≤ 1 required; a = {:.0})",
+            tr.max_ratio, tr.shift
+        );
+        assert!(tr.max_ratio <= 1.0, "{spec}: Lemma 3.2 violated");
+        assert!(tr.max_ratio > 0.0, "{spec}: degenerate trace");
+    }
+
+    // --- Lemma A.3 recursion, numerically, across the (d, k, α) grid.
+    let started = Instant::now();
+    let mut worst: f64 = 0.0;
+    for &(d, k) in &[(2_000usize, 1.0f64), (2_000, 10.0), (47_236, 10.0), (64, 64.0)] {
+        for &alpha in &[4.5f64, 5.0, 8.0] {
+            let rho = 4.0 * alpha / ((alpha - 4.0) * (alpha + 1.0).powi(2));
+            let a = (((alpha + 1.0) * d as f64 / k + rho + 1.0) / (rho + 1.0)).ceil();
+            let r = lemma_a3_max_ratio(d, k, alpha, a, 50_000);
+            worst = worst.max(r);
+            assert!(
+                r <= 1.0 + 1e-9,
+                "Lemma A.3 violated at d={d} k={k} alpha={alpha}: {r}"
+            );
+        }
+    }
+    b.record("lemma_a3 grid (12 cells x 50k)", started.elapsed(), 600_000);
+    println!("  lemma A.3 worst h_t/bound over grid: {worst:.4}");
+
+    // --- Theorem 2.4: the transient horizon scales as (d/k)·√κ.
+    let started = Instant::now();
+    let horizon = |d: usize, k: f64, kappa: f64| {
+        TheoryParams {
+            d,
+            k,
+            g_sq: 1.0,
+            mu: 1.0,
+            ell: kappa,
+            x0_dist_sq: 1.0,
+            alpha: 5.0,
+        }
+        .transient_horizon()
+    };
+    let h1 = horizon(2_000, 1.0, 100.0);
+    let h2 = horizon(2_000, 10.0, 100.0);
+    let h3 = horizon(2_000, 1.0, 400.0);
+    b.record("transient_horizon probes", started.elapsed(), 3);
+    println!("  T*(k=1) = {h1:.0}, T*(k=10) = {h2:.0}, T*(4x kappa) = {h3:.0}");
+    // The FULL eq.-(9) crossover (term1 > term2 + term3 at the Remark-2.5
+    // shift) balances G²/(μT) against (d/k)²κG²/(μT²), so it scales as
+    // (d/k)²·κ — quadratic in d/k, linear in κ. (Remark 2.6's Ω((d/k)√κ)
+    // quote describes when the THIRD term alone is dominated; the second
+    // term's crossover is the binding one and is what we probe.)
+    // Power-of-two probing adds up to 2× slack on each side.
+    let kfac = h1 / h2; // (d/k) ratio 10 → expect ~100× within [32, 256]
+    assert!(
+        (32.0..=256.0).contains(&kfac),
+        "(d/k)^2 scaling off: {kfac:.1}"
+    );
+    let kapfac = h3 / h1; // κ ratio 4 → expect ~4× within [2, 8]
+    assert!(
+        (2.0..=8.0).contains(&kapfac),
+        "linear-kappa scaling off: {kapfac:.1}"
+    );
+
+    b.finish();
+}

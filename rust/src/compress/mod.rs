@@ -1,0 +1,241 @@
+//! Gradient compression operators (paper Section 2).
+//!
+//! The paper's algorithmic primitive is a *k-contraction* (Definition 2.1):
+//! an operator `comp: R^d -> R^d` with
+//! `E‖x − comp(x)‖² ≤ (1 − k/d)·‖x‖²`. This module provides:
+//!
+//! * [`top_k::TopK`] — keep the k largest-magnitude coordinates
+//!   (Definition 2.2; deterministic; the paper's best performer).
+//! * [`rand_k::RandK`] — keep k uniformly random coordinates
+//!   (Definition 2.2; a k-contraction in expectation).
+//! * [`random_p::RandomP`] — ultra-sparsification (Remark 2.3): with
+//!   probability `k ∈ (0, 1]` emit one random coordinate, else nothing;
+//!   still a k-contraction, with *less than one* coordinate per step.
+//! * [`qsgd::Qsgd`] — the QSGD random quantizer of Alistarh et al. 2017,
+//!   the paper's Section 4.3 baseline (unbiased, *not* a contraction for
+//!   small `s`, used without memory).
+//! * [`sign::SignSgd`] — the 1Bit-SGD operator of Seide et al. [32]
+//!   (where the error-feedback idea originates): sign + mean-|x| scale,
+//!   a data-dependent contraction with guaranteed `k ≥ 1`.
+//! * [`threshold::Threshold`] — Aji & Heafield's [1] relative-threshold
+//!   sparsification with adaptive cardinality.
+//! * [`identity`] — `comp = id` (vanilla SGD baseline; a d-contraction).
+//!
+//! Every operator implements [`Compressor`], producing a reusable
+//! [`Update`] and reporting the exact number of bits the update costs on
+//! the wire (the currency of Figures 3 and the communication claims).
+
+pub mod block_top_k;
+pub mod elias;
+pub mod qsgd;
+pub mod rand_k;
+pub mod random_p;
+pub mod sign;
+pub mod sparse;
+pub mod threshold;
+pub mod top_k;
+
+use anyhow::{bail, Result};
+
+pub use block_top_k::BlockTopK;
+pub use qsgd::Qsgd;
+pub use rand_k::RandK;
+pub use random_p::RandomP;
+pub use sign::SignSgd;
+pub use sparse::SparseVec;
+pub use threshold::Threshold;
+pub use top_k::TopK;
+
+use crate::util::prng::Prng;
+
+/// A compressed gradient update, reusable across iterations.
+#[derive(Clone, Debug)]
+pub enum Update {
+    /// Sparse coordinate list (top-k, rand-k, random-p).
+    Sparse(SparseVec),
+    /// Dense vector (identity, QSGD quantization).
+    Dense(Vec<f32>),
+}
+
+impl Update {
+    /// An empty update with `dim` capacity hint.
+    pub fn new_sparse(dim: usize) -> Update {
+        Update::Sparse(SparseVec::new(dim))
+    }
+
+    pub fn new_dense(dim: usize) -> Update {
+        Update::Dense(vec![0.0; dim])
+    }
+
+    /// `x -= update` — the parameter step of Algorithm 1 line 5.
+    pub fn sub_from(&self, x: &mut [f32]) {
+        match self {
+            Update::Sparse(s) => s.sub_from(x),
+            Update::Dense(g) => {
+                debug_assert_eq!(g.len(), x.len());
+                for (xi, gi) in x.iter_mut().zip(g) {
+                    *xi -= gi;
+                }
+            }
+        }
+    }
+
+    /// Densify (test / metrics helper; allocates).
+    pub fn to_dense(&self, dim: usize) -> Vec<f32> {
+        match self {
+            Update::Sparse(s) => {
+                debug_assert_eq!(s.dim, dim);
+                s.to_dense()
+            }
+            Update::Dense(g) => {
+                debug_assert_eq!(g.len(), dim);
+                g.clone()
+            }
+        }
+    }
+
+    /// Number of nonzero coordinates actually stored.
+    pub fn nnz(&self) -> usize {
+        match self {
+            Update::Sparse(s) => s.nnz(),
+            Update::Dense(g) => g.iter().filter(|&&v| v != 0.0).count(),
+        }
+    }
+}
+
+/// A gradient compression operator.
+///
+/// `compress` takes `&mut self` so implementations can keep reusable
+/// scratch buffers (the top-k index array, QSGD's norm accumulator) —
+/// the hot loop must not allocate. Each parallel worker owns its own
+/// compressor instance.
+pub trait Compressor: Send {
+    /// Human-readable name used in metric records and plots.
+    fn name(&self) -> String;
+
+    /// The contraction parameter `k` of Definition 2.1 as a function of
+    /// the dimension, or `None` when the operator is not a k-contraction
+    /// (QSGD). Used by theory checks (stepsize shift `a = O(d/k)`).
+    fn contraction_k(&self, d: usize) -> Option<f64>;
+
+    /// Compress `x` into `out`, returning the wire cost in bits.
+    fn compress(&mut self, x: &[f32], rng: &mut Prng, out: &mut Update) -> u64;
+}
+
+/// The identity "compressor" — vanilla SGD's dense transmission.
+#[derive(Clone, Debug, Default)]
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn name(&self) -> String {
+        "identity".into()
+    }
+
+    fn contraction_k(&self, d: usize) -> Option<f64> {
+        Some(d as f64) // exact: ‖x − x‖² = 0 ≤ (1 − d/d)‖x‖²
+    }
+
+    fn compress(&mut self, x: &[f32], _rng: &mut Prng, out: &mut Update) -> u64 {
+        match out {
+            Update::Dense(g) => {
+                g.clear();
+                g.extend_from_slice(x);
+            }
+            other => *other = Update::Dense(x.to_vec()),
+        }
+        32 * x.len() as u64
+    }
+}
+
+/// Parse a compressor spec string: `top_k:1`, `rand_k:10`, `random_p:0.5`,
+/// `qsgd:16` (levels), `qsgd:16:71` (levels + effective sparsity-aware
+/// dimension, Appendix B), or `identity`.
+pub fn from_spec(spec: &str) -> Result<Box<dyn Compressor>> {
+    let mut parts = spec.split(':');
+    let kind = parts.next().unwrap_or_default();
+    let arg = parts.next();
+    let arg2 = parts.next();
+    let parse_usize = |s: Option<&str>, what: &str| -> Result<usize> {
+        match s {
+            Some(v) => Ok(v.parse::<usize>()?),
+            None => bail!("{what} requires an argument, e.g. '{what}:1'"),
+        }
+    };
+    Ok(match kind {
+        "identity" | "none" | "sgd" => Box::new(Identity),
+        "top_k" | "topk" | "top" => Box::new(TopK::new(parse_usize(arg, "top_k")?)),
+        "rand_k" | "randk" | "rand" => Box::new(RandK::new(parse_usize(arg, "rand_k")?)),
+        "random_p" | "ultra" => {
+            let p: f64 = match arg {
+                Some(v) => v.parse()?,
+                None => bail!("random_p requires a probability, e.g. 'random_p:0.5'"),
+            };
+            Box::new(RandomP::new(p))
+        }
+        "qsgd" => {
+            let levels = parse_usize(arg, "qsgd")? as u32;
+            let eff = match arg2 {
+                Some(v) => Some(v.parse::<usize>()?),
+                None => None,
+            };
+            Box::new(Qsgd::with_effective_dim(levels, eff))
+        }
+        "block_top_k" | "block" => Box::new(BlockTopK::new(parse_usize(arg, "block_top_k")?)),
+        "sign" | "1bit" => Box::new(SignSgd::new()),
+        "threshold" | "thresh" => {
+            let tau: f32 = match arg {
+                Some(v) => v.parse()?,
+                None => bail!("threshold requires tau, e.g. 'threshold:0.25'"),
+            };
+            Box::new(Threshold::new(tau))
+        }
+        other => bail!("unknown compressor spec '{other}' (full spec: '{spec}')"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_exact() {
+        let x = vec![1.0f32, -2.0, 3.0];
+        let mut rng = Prng::new(0);
+        let mut out = Update::new_dense(3);
+        let mut c = Identity;
+        let bits = c.compress(&x, &mut rng, &mut out);
+        assert_eq!(bits, 96);
+        assert_eq!(out.to_dense(3), x);
+        assert_eq!(c.contraction_k(3), Some(3.0));
+    }
+
+    #[test]
+    fn update_sub_from_dense_and_sparse() {
+        let mut x = vec![5.0f32; 4];
+        Update::Dense(vec![1.0, 0.0, 0.0, 2.0]).sub_from(&mut x);
+        assert_eq!(x, vec![4.0, 5.0, 5.0, 3.0]);
+        Update::Sparse(SparseVec::from_parts(4, vec![1], vec![1.0])).sub_from(&mut x);
+        assert_eq!(x, vec![4.0, 4.0, 5.0, 3.0]);
+    }
+
+    #[test]
+    fn update_nnz() {
+        assert_eq!(Update::Dense(vec![0.0, 1.0, 0.0]).nnz(), 1);
+        assert_eq!(
+            Update::Sparse(SparseVec::from_parts(4, vec![0, 1], vec![1.0, 2.0])).nnz(),
+            2
+        );
+    }
+
+    #[test]
+    fn spec_parsing() {
+        assert_eq!(from_spec("top_k:3").unwrap().name(), "top_3");
+        assert_eq!(from_spec("rand_k:10").unwrap().name(), "rand_10");
+        assert_eq!(from_spec("random_p:0.25").unwrap().name(), "random_p_0.25");
+        assert_eq!(from_spec("qsgd:16").unwrap().name(), "qsgd_4bit");
+        assert_eq!(from_spec("identity").unwrap().name(), "identity");
+        assert!(from_spec("nope").is_err());
+        assert!(from_spec("top_k").is_err());
+        assert!(from_spec("top_k:x").is_err());
+    }
+}

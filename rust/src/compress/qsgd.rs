@@ -1,0 +1,203 @@
+//! QSGD random quantization (Alistarh et al., NIPS 2017) — the paper's
+//! Section 4.3 baseline. *Unbiased* stochastic quantization to `s` levels:
+//!
+//! `Q_s(x)_i = ‖x‖₂ · sgn(x_i) · ξ_i(x, s)`,
+//!
+//! where `ξ_i = (l+1)/s` with probability `|x_i|/‖x‖·s − l` and `l/s`
+//! otherwise, for `l = ⌊|x_i|/‖x‖·s⌋`. `E[Q_s(x)] = x`, so QSGD needs no
+//! error memory — that is exactly the contrast the paper draws.
+//!
+//! Bit accounting follows Appendix B:
+//! `min( (log₂ s + 1)·d ,  3s(s + √d) + 32 )` bits per gradient — the
+//! first term is the naïve sign+level encoding, the second the Elias
+//! estimate of [3, Theorem 3.2]. For sparse datasets the effective
+//! dimension can be overridden (`d ≈ 71` for RCV1), again as in Appendix B.
+
+use super::{Compressor, Update};
+use crate::util::prng::Prng;
+use crate::util::stats;
+
+/// QSGD quantizer with `levels = s` and optional sparsity-aware effective
+/// dimension for the bit accounting.
+#[derive(Clone, Debug)]
+pub struct Qsgd {
+    pub levels: u32,
+    pub effective_dim: Option<usize>,
+}
+
+impl Qsgd {
+    pub fn new(levels: u32) -> Self {
+        Self::with_effective_dim(levels, None)
+    }
+
+    pub fn with_effective_dim(levels: u32, effective_dim: Option<usize>) -> Self {
+        assert!(levels >= 1, "qsgd requires at least one level");
+        Qsgd {
+            levels,
+            effective_dim,
+        }
+    }
+
+    /// Number of bits QSGD pays to transmit one `d`-dimensional gradient
+    /// (Appendix B formula).
+    pub fn bits_for_dim(&self, d: usize) -> u64 {
+        let d = self.effective_dim.unwrap_or(d) as f64;
+        let s = self.levels as f64;
+        let naive = (s.log2() + 1.0) * d;
+        let elias = 3.0 * s * (s + d.sqrt()) + 32.0;
+        naive.min(elias).ceil() as u64
+    }
+}
+
+impl Compressor for Qsgd {
+    fn name(&self) -> String {
+        format!("qsgd_{}bit", (self.levels as f64).log2().round() as u32)
+    }
+
+    /// QSGD is unbiased but not a k-contraction in the sense of
+    /// Definition 2.1 for small `s` (its relative variance bound is
+    /// `min(d/s², √d/s)`), so it reports `None` and is run without memory.
+    fn contraction_k(&self, _d: usize) -> Option<f64> {
+        None
+    }
+
+    fn compress(&mut self, x: &[f32], rng: &mut Prng, out: &mut Update) -> u64 {
+        let d = x.len();
+        let g = match out {
+            Update::Dense(g) => g,
+            other => {
+                *other = Update::new_dense(d);
+                match other {
+                    Update::Dense(g) => g,
+                    _ => unreachable!(),
+                }
+            }
+        };
+        g.clear();
+        g.resize(d, 0.0);
+        let norm = stats::l2_norm(x) as f32;
+        if norm == 0.0 {
+            return self.bits_for_dim(d);
+        }
+        let s = self.levels as f32;
+        for (gi, &xi) in g.iter_mut().zip(x) {
+            let u = xi.abs() / norm * s; // in [0, s]
+            let l = u.floor();
+            let p = u - l;
+            let level = l + if rng.bernoulli(p as f64) { 1.0 } else { 0.0 };
+            *gi = norm * xi.signum() * (level / s);
+        }
+        self.bits_for_dim(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quantize(x: &[f32], s: u32, seed: u64) -> Vec<f32> {
+        let mut c = Qsgd::new(s);
+        let mut rng = Prng::new(seed);
+        let mut out = Update::new_dense(x.len());
+        c.compress(x, &mut rng, &mut out);
+        out.to_dense(x.len())
+    }
+
+    #[test]
+    fn unbiasedness_monte_carlo() {
+        let x = vec![0.3f32, -0.7, 0.05, 0.0, 1.2];
+        let trials = 40_000;
+        let mut acc = vec![0.0f64; x.len()];
+        let mut c = Qsgd::new(4);
+        let mut rng = Prng::new(1);
+        let mut out = Update::new_dense(x.len());
+        for _ in 0..trials {
+            c.compress(&x, &mut rng, &mut out);
+            if let Update::Dense(g) = &out {
+                for (a, &v) in acc.iter_mut().zip(g) {
+                    *a += v as f64;
+                }
+            }
+        }
+        for (i, (&xi, &ai)) in x.iter().zip(&acc).enumerate() {
+            let mean = ai / trials as f64;
+            assert!(
+                (mean - xi as f64).abs() < 0.02,
+                "coord {i}: mean={mean} x={xi}"
+            );
+        }
+    }
+
+    #[test]
+    fn levels_are_on_the_grid() {
+        let x = vec![0.5f32, -1.0, 0.25, 0.8];
+        let s = 8u32;
+        let norm = stats::l2_norm(&x) as f32;
+        let q = quantize(&x, s, 3);
+        for (&qi, &xi) in q.iter().zip(&x) {
+            let level = qi.abs() / norm * s as f32;
+            assert!(
+                (level - level.round()).abs() < 1e-4,
+                "qi={qi} level={level}"
+            );
+            assert!(qi == 0.0 || qi.signum() == xi.signum());
+        }
+    }
+
+    #[test]
+    fn zero_vector_stays_zero() {
+        let q = quantize(&[0.0f32; 7], 4, 5);
+        assert!(q.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn bit_formula_appendix_b() {
+        // naive: (log2 s + 1) d; elias: 3s(s + sqrt(d)) + 32.
+        let q = Qsgd::new(16); // 4-bit
+        // d = 2000: naive = 5*2000 = 10000; elias = 48*(16+44.7)+32 ≈ 2947 → elias wins.
+        let d = 2000;
+        let elias = (3.0 * 16.0 * (16.0 + (d as f64).sqrt()) + 32.0).ceil() as u64;
+        assert_eq!(q.bits_for_dim(d), elias);
+        // tiny d: naive wins. d=4: naive = 5*4=20; elias = 48*18+32=896.
+        assert_eq!(q.bits_for_dim(4), 20);
+    }
+
+    #[test]
+    fn effective_dim_override() {
+        // RCV1 sparsity-aware accounting: d_eff ≈ 71 (Appendix B).
+        let q = Qsgd::with_effective_dim(4, Some(71));
+        let full = Qsgd::new(4);
+        assert!(q.bits_for_dim(47236) < full.bits_for_dim(47236));
+        assert_eq!(q.bits_for_dim(47236), q.bits_for_dim(123));
+    }
+
+    #[test]
+    fn variance_shrinks_with_levels() {
+        let mut rng = Prng::new(9);
+        let x: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+        let var_of = |s: u32| {
+            let mut c = Qsgd::new(s);
+            let mut r = Prng::new(11);
+            let mut out = Update::new_dense(x.len());
+            let trials = 3_000;
+            let mut acc = 0.0f64;
+            for _ in 0..trials {
+                c.compress(&x, &mut r, &mut out);
+                let g = out.to_dense(x.len());
+                let diff: Vec<f32> = g.iter().zip(&x).map(|(a, b)| a - b).collect();
+                acc += stats::l2_norm_sq(&diff);
+            }
+            acc / trials as f64
+        };
+        let v4 = var_of(4);
+        let v64 = var_of(64);
+        assert!(v64 < v4 / 4.0, "v4={v4} v64={v64}");
+    }
+
+    #[test]
+    fn name_encodes_bit_width() {
+        assert_eq!(Qsgd::new(4).name(), "qsgd_2bit");
+        assert_eq!(Qsgd::new(16).name(), "qsgd_4bit");
+        assert_eq!(Qsgd::new(256).name(), "qsgd_8bit");
+    }
+}

@@ -1,0 +1,161 @@
+//! Rand-k sparsification (Definition 2.2): keep k uniformly random
+//! coordinates (a uniform draw from the `(d choose k)` subsets). A
+//! k-contraction in expectation: `E‖x − rand_k(x)‖² = (1 − k/d)‖x‖²`
+//! with *equality* (Lemma A.1, eq. 19).
+
+use super::{Compressor, Update};
+use crate::util::prng::Prng;
+
+/// Keep `k` uniformly random coordinates.
+#[derive(Clone, Debug)]
+pub struct RandK {
+    pub k: usize,
+    scratch: Vec<u32>,
+}
+
+impl RandK {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "rand_k requires k >= 1");
+        RandK {
+            k,
+            scratch: Vec::new(),
+        }
+    }
+}
+
+impl Compressor for RandK {
+    fn name(&self) -> String {
+        format!("rand_{}", self.k)
+    }
+
+    fn contraction_k(&self, d: usize) -> Option<f64> {
+        Some(self.k.min(d) as f64)
+    }
+
+    fn compress(&mut self, x: &[f32], rng: &mut Prng, out: &mut Update) -> u64 {
+        let d = x.len();
+        let k = self.k.min(d);
+        let sp = match out {
+            Update::Sparse(s) => s,
+            other => {
+                *other = Update::new_sparse(d);
+                match other {
+                    Update::Sparse(s) => s,
+                    _ => unreachable!(),
+                }
+            }
+        };
+        sp.clear(d);
+        rng.sample_distinct(d, k, &mut self.scratch);
+        for &i in &self.scratch {
+            sp.push(i, x[i as usize]);
+        }
+        sp.encoded_bits()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn output_is_a_masked_copy() {
+        let x: Vec<f32> = (0..50).map(|i| i as f32 + 1.0).collect();
+        let mut c = RandK::new(5);
+        let mut rng = Prng::new(3);
+        let mut out = Update::new_sparse(50);
+        c.compress(&x, &mut rng, &mut out);
+        match &out {
+            Update::Sparse(s) => {
+                assert_eq!(s.nnz(), 5);
+                for (&i, &v) in s.idx.iter().zip(&s.val) {
+                    assert_eq!(v, x[i as usize]);
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn contraction_holds_in_expectation() {
+        // E‖x − rand_k(x)‖² = (1 − k/d)‖x‖² exactly; check the Monte Carlo
+        // mean lands within a few standard errors.
+        let d = 64;
+        let k = 8;
+        let mut rng = Prng::new(7);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let norm_sq = stats::l2_norm_sq(&x);
+        let trials = 20_000;
+        let mut c = RandK::new(k);
+        let mut out = Update::new_sparse(d);
+        let mut acc = 0.0f64;
+        for _ in 0..trials {
+            c.compress(&x, &mut rng, &mut out);
+            let dense = out.to_dense(d);
+            let resid: Vec<f32> = x.iter().zip(&dense).map(|(a, b)| a - b).collect();
+            acc += stats::l2_norm_sq(&resid);
+        }
+        let mean = acc / trials as f64;
+        let expected = (1.0 - k as f64 / d as f64) * norm_sq;
+        assert!(
+            (mean - expected).abs() / expected < 0.02,
+            "mean={mean} expected={expected}"
+        );
+    }
+
+    #[test]
+    fn every_coordinate_eventually_selected() {
+        let d = 30;
+        let x = vec![1.0f32; d];
+        let mut c = RandK::new(2);
+        let mut rng = Prng::new(9);
+        let mut out = Update::new_sparse(d);
+        let mut seen = vec![false; d];
+        for _ in 0..2_000 {
+            c.compress(&x, &mut rng, &mut out);
+            if let Update::Sparse(s) = &out {
+                for &i in &s.idx {
+                    seen[i as usize] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some coordinate was never selected");
+    }
+
+    #[test]
+    fn selection_is_roughly_uniform() {
+        let d = 20;
+        let x = vec![1.0f32; d];
+        let mut c = RandK::new(1);
+        let mut rng = Prng::new(11);
+        let mut out = Update::new_sparse(d);
+        let mut counts = vec![0usize; d];
+        let trials = 40_000;
+        for _ in 0..trials {
+            c.compress(&x, &mut rng, &mut out);
+            if let Update::Sparse(s) = &out {
+                counts[s.idx[0] as usize] += 1;
+            }
+        }
+        let expected = trials / d;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expected as f64).abs() < expected as f64 * 0.15,
+                "coordinate {i}: {c} vs {expected}"
+            );
+        }
+    }
+
+    #[test]
+    fn k_geq_d_keeps_everything() {
+        let x = vec![1.0f32, 2.0, 3.0];
+        let mut c = RandK::new(10);
+        let mut rng = Prng::new(13);
+        let mut out = Update::new_sparse(3);
+        c.compress(&x, &mut rng, &mut out);
+        let mut dense = out.to_dense(3);
+        dense.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(dense, x);
+    }
+}

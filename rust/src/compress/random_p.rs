@@ -1,0 +1,133 @@
+//! Ultra-sparsification (Remark 2.3): transmit *less than one coordinate
+//! per iteration on average*. With probability `p = k ∈ (0, 1]` emit one
+//! uniformly random coordinate, otherwise emit nothing. Then
+//!
+//! `E‖x − comp(x)‖² = (1−p)‖x‖² + p(1 − 1/d)‖x‖² = (1 − p/d)‖x‖²`,
+//!
+//! i.e. Definition 2.1 holds with parameter `k = p < 1`. The theory
+//! (Theorem 2.4) still applies — with shift `a = O(d/p)` — which the
+//! ultra-sparsification ablation bench exercises.
+
+use super::{Compressor, Update};
+use crate::util::prng::Prng;
+
+/// With probability `p` keep one random coordinate; else keep nothing.
+#[derive(Clone, Debug)]
+pub struct RandomP {
+    pub p: f64,
+}
+
+impl RandomP {
+    pub fn new(p: f64) -> Self {
+        assert!(p > 0.0 && p <= 1.0, "random_p requires p in (0, 1], got {p}");
+        RandomP { p }
+    }
+}
+
+impl Compressor for RandomP {
+    fn name(&self) -> String {
+        format!("random_p_{}", self.p)
+    }
+
+    fn contraction_k(&self, _d: usize) -> Option<f64> {
+        Some(self.p)
+    }
+
+    fn compress(&mut self, x: &[f32], rng: &mut Prng, out: &mut Update) -> u64 {
+        let d = x.len();
+        let sp = match out {
+            Update::Sparse(s) => s,
+            other => {
+                *other = Update::new_sparse(d);
+                match other {
+                    Update::Sparse(s) => s,
+                    _ => unreachable!(),
+                }
+            }
+        };
+        sp.clear(d);
+        if rng.bernoulli(self.p) {
+            let i = rng.below(d) as u32;
+            sp.push(i, x[i as usize]);
+        }
+        sp.encoded_bits()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn emits_at_most_one_coordinate() {
+        let x = vec![1.0f32; 16];
+        let mut c = RandomP::new(0.5);
+        let mut rng = Prng::new(1);
+        let mut out = Update::new_sparse(16);
+        for _ in 0..100 {
+            c.compress(&x, &mut rng, &mut out);
+            assert!(out.nnz() <= 1);
+        }
+    }
+
+    #[test]
+    fn emission_rate_matches_p() {
+        let x = vec![1.0f32; 8];
+        let mut c = RandomP::new(0.3);
+        let mut rng = Prng::new(2);
+        let mut out = Update::new_sparse(8);
+        let trials = 50_000;
+        let mut emitted = 0usize;
+        for _ in 0..trials {
+            c.compress(&x, &mut rng, &mut out);
+            emitted += out.nnz();
+        }
+        let rate = emitted as f64 / trials as f64;
+        assert!((rate - 0.3).abs() < 0.01, "rate={rate}");
+    }
+
+    #[test]
+    fn contraction_with_fractional_k() {
+        // E‖x − comp(x)‖² = (1 − p/d)‖x‖², exactly. Monte Carlo check.
+        let d = 16;
+        let p = 0.5;
+        let mut rng = Prng::new(5);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let norm_sq = stats::l2_norm_sq(&x);
+        let mut c = RandomP::new(p);
+        let mut out = Update::new_sparse(d);
+        let trials = 100_000;
+        let mut acc = 0.0f64;
+        for _ in 0..trials {
+            c.compress(&x, &mut rng, &mut out);
+            let dense = out.to_dense(d);
+            let resid: Vec<f32> = x.iter().zip(&dense).map(|(a, b)| a - b).collect();
+            acc += stats::l2_norm_sq(&resid);
+        }
+        let mean = acc / trials as f64;
+        let expected = (1.0 - p / d as f64) * norm_sq;
+        assert!(
+            (mean - expected).abs() / expected < 0.01,
+            "mean={mean} expected={expected}"
+        );
+    }
+
+    #[test]
+    fn p_one_always_emits() {
+        let x = vec![2.0f32; 4];
+        let mut c = RandomP::new(1.0);
+        let mut rng = Prng::new(8);
+        let mut out = Update::new_sparse(4);
+        for _ in 0..50 {
+            c.compress(&x, &mut rng, &mut out);
+            assert_eq!(out.nnz(), 1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "random_p requires p in (0, 1]")]
+    fn rejects_bad_p() {
+        RandomP::new(0.0);
+    }
+}

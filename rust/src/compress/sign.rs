@@ -1,0 +1,152 @@
+//! Scaled sign compression — the 1Bit-SGD lineage (Seide et al. [32],
+//! Strom [36]) that *introduced* the error-feedback mechanism this paper
+//! analyzes. The operator transmits one sign per coordinate plus one
+//! scale:
+//!
+//! `comp(x) = (‖x‖₁ / d) · sign(x)`.
+//!
+//! It is a k-contraction (Definition 2.1) with a **data-dependent**
+//! parameter: `‖x − comp(x)‖² = ‖x‖² − ‖x‖₁²/d`, so property (4) holds
+//! with `k = ‖x‖₁² / ‖x‖₂²  ∈ [1, d]`. The guaranteed worst case is
+//! `k = 1` (Cauchy–Schwarz gives `‖x‖₁ ≥ ‖x‖₂`); for isotropic Gaussian
+//! vectors the typical value is `(2/π)·d ≈ 0.64·d`, i.e. near-identity
+//! contraction at 1/32 of the bits.
+
+use super::{Compressor, Update};
+use crate::util::prng::Prng;
+
+/// `(‖x‖₁/d)·sign(x)` with 1 bit per coordinate + 32 bits of scale.
+#[derive(Clone, Debug, Default)]
+pub struct SignSgd;
+
+impl SignSgd {
+    pub fn new() -> Self {
+        SignSgd
+    }
+}
+
+impl Compressor for SignSgd {
+    fn name(&self) -> String {
+        "sign_1bit".into()
+    }
+
+    /// The provable worst-case contraction parameter (see module docs);
+    /// the stepsize shift derived from it (`a ∝ d/k = d`) is therefore
+    /// conservative, exactly like top-1's.
+    fn contraction_k(&self, _d: usize) -> Option<f64> {
+        Some(1.0)
+    }
+
+    fn compress(&mut self, x: &[f32], _rng: &mut Prng, out: &mut Update) -> u64 {
+        let d = x.len();
+        let g = match out {
+            Update::Dense(g) => g,
+            other => {
+                *other = Update::new_dense(d);
+                match other {
+                    Update::Dense(g) => g,
+                    _ => unreachable!(),
+                }
+            }
+        };
+        g.clear();
+        g.resize(d, 0.0);
+        let l1: f64 = x.iter().map(|&v| v.abs() as f64).sum();
+        let scale = (l1 / d as f64) as f32;
+        if scale > 0.0 {
+            for (gi, &xi) in g.iter_mut().zip(x) {
+                // sign(0) = +1 here; a zero coordinate contributes scale,
+                // which the error memory corrects next round.
+                *gi = if xi < 0.0 { -scale } else { scale };
+            }
+        }
+        d as u64 + 32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn compress(x: &[f32]) -> Vec<f32> {
+        let mut c = SignSgd::new();
+        let mut rng = Prng::new(0);
+        let mut out = Update::new_dense(x.len());
+        c.compress(x, &mut rng, &mut out);
+        out.to_dense(x.len())
+    }
+
+    #[test]
+    fn magnitude_is_mean_abs() {
+        let x = vec![3.0f32, -1.0, 0.0, 2.0];
+        let got = compress(&x);
+        let scale = 6.0 / 4.0;
+        assert_eq!(got, vec![scale, -scale, scale, scale]);
+    }
+
+    #[test]
+    fn zero_maps_to_zero() {
+        assert_eq!(compress(&[0.0; 5]), vec![0.0; 5]);
+    }
+
+    #[test]
+    fn residual_identity_holds() {
+        // ‖x − comp(x)‖² = ‖x‖² − ‖x‖₁²/d, exactly.
+        let mut rng = Prng::new(3);
+        for _ in 0..50 {
+            let d = 1 + rng.below(200);
+            let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let c = compress(&x);
+            let resid: Vec<f32> = x.iter().zip(&c).map(|(a, b)| a - b).collect();
+            let l1: f64 = x.iter().map(|&v| v.abs() as f64).sum();
+            let want = stats::l2_norm_sq(&x) - l1 * l1 / d as f64;
+            let got = stats::l2_norm_sq(&resid);
+            assert!((got - want).abs() < 1e-3 * want.abs().max(1.0), "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn contraction_with_guaranteed_k1() {
+        // (1 − 1/d)‖x‖² bound must hold for every x.
+        let mut rng = Prng::new(5);
+        for _ in 0..50 {
+            let d = 2 + rng.below(100);
+            let x: Vec<f32> = (0..d).map(|_| rng.normal_f32() * 5.0).collect();
+            let c = compress(&x);
+            let resid: Vec<f32> = x.iter().zip(&c).map(|(a, b)| a - b).collect();
+            let bound = (1.0 - 1.0 / d as f64) * stats::l2_norm_sq(&x);
+            assert!(stats::l2_norm_sq(&resid) <= bound + 1e-6);
+        }
+    }
+
+    #[test]
+    fn gaussian_vectors_contract_near_two_over_pi_d() {
+        // Typical-case contraction ≈ (2/π)·d for isotropic inputs.
+        let mut rng = Prng::new(7);
+        let d = 2_000;
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let c = compress(&x);
+        let resid: Vec<f32> = x.iter().zip(&c).map(|(a, b)| a - b).collect();
+        let k_emp = (1.0 - stats::l2_norm_sq(&resid) / stats::l2_norm_sq(&x)) * d as f64;
+        let expect = 2.0 / std::f64::consts::PI * d as f64;
+        assert!(
+            (k_emp - expect).abs() < 0.1 * expect,
+            "empirical k {k_emp} vs (2/π)d {expect}"
+        );
+    }
+
+    #[test]
+    fn bit_cost_one_bit_per_coordinate() {
+        let mut c = SignSgd::new();
+        let mut rng = Prng::new(0);
+        let mut out = Update::new_dense(2_000);
+        let bits = c.compress(&vec![1.0f32; 2_000], &mut rng, &mut out);
+        assert_eq!(bits, 2_000 + 32);
+    }
+
+    #[test]
+    fn spec_parsing() {
+        assert_eq!(crate::compress::from_spec("sign").unwrap().name(), "sign_1bit");
+    }
+}

@@ -1,0 +1,154 @@
+//! Sparse update vectors: the wire format of sparsified SGD.
+//!
+//! A [`SparseVec`] is a `(index, value)` pair list over a fixed dimension,
+//! with all hot-path operations (apply, residual, norms) allocation-free.
+//! Buffers are reused across iterations via [`SparseVec::clear`].
+
+/// A sparse vector: parallel `idx`/`val` arrays over dimension `dim`.
+/// Indices are unique but not necessarily sorted (top-k emits them in
+/// selection order; sort only when encoding determinism matters).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseVec {
+    pub idx: Vec<u32>,
+    pub val: Vec<f32>,
+    pub dim: usize,
+}
+
+impl SparseVec {
+    /// Empty sparse vector of dimension `dim`.
+    pub fn new(dim: usize) -> Self {
+        SparseVec {
+            idx: Vec::new(),
+            val: Vec::new(),
+            dim,
+        }
+    }
+
+    /// Build from parallel arrays (debug-asserts index bounds).
+    pub fn from_parts(dim: usize, idx: Vec<u32>, val: Vec<f32>) -> Self {
+        assert_eq!(idx.len(), val.len());
+        debug_assert!(idx.iter().all(|&i| (i as usize) < dim));
+        SparseVec { idx, val, dim }
+    }
+
+    /// Number of stored entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Reset for reuse (keeps capacity, may change dimension).
+    #[inline]
+    pub fn clear(&mut self, dim: usize) {
+        self.idx.clear();
+        self.val.clear();
+        self.dim = dim;
+    }
+
+    /// Append one entry.
+    #[inline]
+    pub fn push(&mut self, i: u32, v: f32) {
+        debug_assert!((i as usize) < self.dim);
+        self.idx.push(i);
+        self.val.push(v);
+    }
+
+    /// `x -= self` (the parameter update of Algorithm 1, line 5).
+    #[inline]
+    pub fn sub_from(&self, x: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.dim);
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            x[i as usize] -= v;
+        }
+    }
+
+    /// `x += self`.
+    #[inline]
+    pub fn add_to(&self, x: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.dim);
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            x[i as usize] += v;
+        }
+    }
+
+    /// Squared L2 norm.
+    pub fn norm_sq(&self) -> f64 {
+        self.val.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// Densify into a fresh vector.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.dim];
+        self.add_to(&mut out);
+        out
+    }
+
+    /// Exact wire size in bits with the paper's footnote-5 encoding: each
+    /// entry costs one f32 value (32 bits) plus `ceil(log2 d)` index bits.
+    pub fn encoded_bits(&self) -> u64 {
+        let index_bits = index_bits(self.dim);
+        self.nnz() as u64 * (32 + index_bits)
+    }
+}
+
+/// Bits to address one coordinate of a `dim`-dimensional vector.
+pub fn index_bits(dim: usize) -> u64 {
+    if dim <= 1 {
+        0
+    } else {
+        (usize::BITS - (dim - 1).leading_zeros()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apply_and_residual() {
+        let g = SparseVec::from_parts(5, vec![1, 3], vec![2.0, -1.0]);
+        let mut x = vec![10.0f32; 5];
+        g.sub_from(&mut x);
+        assert_eq!(x, vec![10.0, 8.0, 10.0, 11.0, 10.0]);
+        g.add_to(&mut x);
+        assert_eq!(x, vec![10.0f32; 5]);
+    }
+
+    #[test]
+    fn dense_round_trip() {
+        let g = SparseVec::from_parts(4, vec![0, 2], vec![1.5, -2.5]);
+        assert_eq!(g.to_dense(), vec![1.5, 0.0, -2.5, 0.0]);
+        assert_eq!(g.norm_sq(), 1.5f64 * 1.5 + 2.5 * 2.5);
+        assert_eq!(g.nnz(), 2);
+    }
+
+    #[test]
+    fn clear_reuses_buffers() {
+        let mut g = SparseVec::from_parts(4, vec![0], vec![1.0]);
+        let cap = g.idx.capacity();
+        g.clear(8);
+        assert_eq!(g.nnz(), 0);
+        assert_eq!(g.dim, 8);
+        assert!(g.idx.capacity() >= cap);
+    }
+
+    #[test]
+    fn index_bits_formula() {
+        assert_eq!(index_bits(1), 0);
+        assert_eq!(index_bits(2), 1);
+        assert_eq!(index_bits(3), 2);
+        assert_eq!(index_bits(4), 2);
+        assert_eq!(index_bits(2000), 11);
+        assert_eq!(index_bits(47236), 16);
+    }
+
+    #[test]
+    fn encoded_bits_matches_footnote5() {
+        // top_10 on RCV1 (d=47236): 10 * (32 + 16) = 480 bits.
+        let mut g = SparseVec::new(47236);
+        for i in 0..10 {
+            g.push(i, 1.0);
+        }
+        assert_eq!(g.encoded_bits(), 480);
+    }
+}

@@ -1,0 +1,134 @@
+//! Relative-threshold sparsification — the Aji & Heafield [1] family:
+//! keep every coordinate whose magnitude is at least `τ·max_j |x_j|`.
+//!
+//! Unlike top-k the *cardinality is adaptive*: flat vectors transmit
+//! many coordinates, peaked vectors few. It is a k-contraction with
+//! guaranteed `k ≥ 1` (the max always survives, and dropping entries
+//! below the max removes at most `(1 − 1/d)` of the energy — Lemma A.1's
+//! top-1 argument), and typically much more.
+
+use super::{Compressor, Update};
+use crate::util::prng::Prng;
+
+/// Keep coordinates with `|x_i| ≥ tau·max|x|`, `tau ∈ (0, 1]`.
+#[derive(Clone, Debug)]
+pub struct Threshold {
+    pub tau: f32,
+}
+
+impl Threshold {
+    pub fn new(tau: f32) -> Self {
+        assert!(tau > 0.0 && tau <= 1.0, "tau must be in (0,1], got {tau}");
+        Threshold { tau }
+    }
+}
+
+impl Compressor for Threshold {
+    fn name(&self) -> String {
+        format!("threshold_{}", self.tau)
+    }
+
+    /// Guaranteed contraction: at least the argmax coordinate survives,
+    /// so the top-1 bound applies pointwise.
+    fn contraction_k(&self, _d: usize) -> Option<f64> {
+        Some(1.0)
+    }
+
+    fn compress(&mut self, x: &[f32], _rng: &mut Prng, out: &mut Update) -> u64 {
+        let d = x.len();
+        let sp = match out {
+            Update::Sparse(s) => s,
+            other => {
+                *other = Update::new_sparse(d);
+                match other {
+                    Update::Sparse(s) => s,
+                    _ => unreachable!(),
+                }
+            }
+        };
+        sp.clear(d);
+        let max = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        if max == 0.0 {
+            return sp.encoded_bits();
+        }
+        let cut = self.tau * max;
+        for (i, &v) in x.iter().enumerate() {
+            if v.abs() >= cut {
+                sp.push(i as u32, v);
+            }
+        }
+        sp.encoded_bits()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn compress(x: &[f32], tau: f32) -> (Vec<f32>, usize) {
+        let mut c = Threshold::new(tau);
+        let mut rng = Prng::new(0);
+        let mut out = Update::new_sparse(x.len());
+        c.compress(x, &mut rng, &mut out);
+        (out.to_dense(x.len()), out.nnz())
+    }
+
+    #[test]
+    fn keeps_everything_above_cut() {
+        let x = vec![1.0f32, -0.5, 0.05, 0.49, -1.0];
+        let (dense, nnz) = compress(&x, 0.5);
+        assert_eq!(dense, vec![1.0, -0.5, 0.0, 0.0, -1.0]);
+        assert_eq!(nnz, 3);
+    }
+
+    #[test]
+    fn tau_one_keeps_only_maxima() {
+        let x = vec![1.0f32, -2.0, 2.0];
+        let (dense, nnz) = compress(&x, 1.0);
+        assert_eq!(dense, vec![0.0, -2.0, 2.0]);
+        assert_eq!(nnz, 2);
+    }
+
+    #[test]
+    fn adaptivity_flat_vs_peaked() {
+        let flat = vec![1.0f32; 64];
+        let mut peaked = vec![0.01f32; 64];
+        peaked[7] = 10.0;
+        assert_eq!(compress(&flat, 0.5).1, 64);
+        assert_eq!(compress(&peaked, 0.5).1, 1);
+    }
+
+    #[test]
+    fn zero_vector_empty() {
+        assert_eq!(compress(&[0.0; 9], 0.3).1, 0);
+    }
+
+    #[test]
+    fn contraction_top1_bound_pointwise() {
+        let mut rng = Prng::new(9);
+        for _ in 0..100 {
+            let d = 1 + rng.below(128);
+            let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let (dense, _) = compress(&x, 0.9);
+            let resid: Vec<f32> = x.iter().zip(&dense).map(|(a, b)| a - b).collect();
+            let bound = (1.0 - 1.0 / d as f64) * stats::l2_norm_sq(&x);
+            assert!(stats::l2_norm_sq(&resid) <= bound + 1e-6);
+        }
+    }
+
+    #[test]
+    fn spec_parsing() {
+        assert_eq!(
+            crate::compress::from_spec("threshold:0.25").unwrap().name(),
+            "threshold_0.25"
+        );
+        assert!(crate::compress::from_spec("threshold").is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "tau must be in (0,1]")]
+    fn rejects_bad_tau() {
+        Threshold::new(0.0);
+    }
+}

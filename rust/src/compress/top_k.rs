@@ -1,0 +1,138 @@
+//! Top-k sparsification (Definition 2.2): keep the k coordinates of
+//! largest magnitude. Deterministic, and the strongest k-contraction of
+//! the family: `‖x − top_k(x)‖² ≤ (1 − k/d)‖x‖²` holds *pointwise*, not
+//! just in expectation (Lemma A.1 via `‖x − top_k(x)‖ ≤ ‖x − rand_k(x)‖`).
+
+use super::{Compressor, Update};
+use crate::util::prng::Prng;
+use crate::util::select;
+
+/// Keep the `k` largest-|x| coordinates.
+#[derive(Clone, Debug)]
+pub struct TopK {
+    pub k: usize,
+    /// Reusable index scratch — the hot loop never allocates.
+    scratch: Vec<u32>,
+    /// Reusable selection heap (§Perf iteration 6).
+    heap: Vec<(u32, u32)>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "top_k requires k >= 1");
+        TopK {
+            k,
+            scratch: Vec::new(),
+            heap: Vec::new(),
+        }
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> String {
+        format!("top_{}", self.k)
+    }
+
+    fn contraction_k(&self, d: usize) -> Option<f64> {
+        Some(self.k.min(d) as f64)
+    }
+
+    fn compress(&mut self, x: &[f32], _rng: &mut Prng, out: &mut Update) -> u64 {
+        let d = x.len();
+        let k = self.k.min(d);
+        let sp = match out {
+            Update::Sparse(s) => s,
+            other => {
+                *other = Update::new_sparse(d);
+                match other {
+                    Update::Sparse(s) => s,
+                    _ => unreachable!(),
+                }
+            }
+        };
+        sp.clear(d);
+        select::top_k_indices_with_heap(x, k, &mut self.heap, &mut self.scratch);
+        for &i in &self.scratch {
+            sp.push(i, x[i as usize]);
+        }
+        sp.encoded_bits()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::stats;
+
+    fn compress_dense(x: &[f32], k: usize) -> Vec<f32> {
+        let mut c = TopK::new(k);
+        let mut rng = Prng::new(0);
+        let mut out = Update::new_sparse(x.len());
+        c.compress(x, &mut rng, &mut out);
+        out.to_dense(x.len())
+    }
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let x = vec![0.1f32, -5.0, 2.0, 0.0, 3.0];
+        assert_eq!(compress_dense(&x, 2), vec![0.0, -5.0, 0.0, 0.0, 3.0]);
+        assert_eq!(compress_dense(&x, 1), vec![0.0, -5.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn k_geq_d_is_identity() {
+        let x = vec![1.0f32, -2.0, 3.0];
+        assert_eq!(compress_dense(&x, 3), x);
+        assert_eq!(compress_dense(&x, 10), x);
+    }
+
+    #[test]
+    fn contraction_property_pointwise() {
+        // Definition 2.1 holds for every x, deterministically.
+        let mut rng = Prng::new(42);
+        for _ in 0..100 {
+            let d = 1 + rng.below(200);
+            let k = 1 + rng.below(d);
+            let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let compressed = compress_dense(&x, k);
+            let resid: Vec<f32> = x.iter().zip(&compressed).map(|(a, b)| a - b).collect();
+            let lhs = stats::l2_norm_sq(&resid);
+            let rhs = (1.0 - k as f64 / d as f64) * stats::l2_norm_sq(&x);
+            assert!(lhs <= rhs + 1e-9, "d={d} k={k}: {lhs} > {rhs}");
+        }
+    }
+
+    #[test]
+    fn bit_cost_is_footnote5() {
+        let mut c = TopK::new(10);
+        let mut rng = Prng::new(0);
+        let mut out = Update::new_sparse(47236);
+        let x: Vec<f32> = (0..47236).map(|i| i as f32).collect();
+        let bits = c.compress(&x, &mut rng, &mut out);
+        assert_eq!(bits, 10 * (32 + 16));
+    }
+
+    #[test]
+    fn reuses_buffers_without_allocation_growth() {
+        let mut c = TopK::new(5);
+        let mut rng = Prng::new(1);
+        let mut out = Update::new_sparse(100);
+        let x: Vec<f32> = (0..100).map(|i| (i as f32).sin()).collect();
+        c.compress(&x, &mut rng, &mut out);
+        let cap = match &out {
+            Update::Sparse(s) => (s.idx.capacity(), s.val.capacity()),
+            _ => unreachable!(),
+        };
+        for _ in 0..10 {
+            c.compress(&x, &mut rng, &mut out);
+        }
+        match &out {
+            Update::Sparse(s) => {
+                assert_eq!((s.idx.capacity(), s.val.capacity()), cap);
+                assert_eq!(s.nnz(), 5);
+            }
+            _ => unreachable!(),
+        }
+    }
+}

@@ -1,0 +1,371 @@
+//! Asynchronous distributed Mem-SGD — the combination the paper singles
+//! out as "a promising approach, as it combines the best of both worlds"
+//! (§1.1) and "the domains where sparsified SGD might have the largest
+//! impact" (§5).
+//!
+//! Event-driven simulation of an asynchronous parameter server:
+//!
+//! * `W` workers with heterogeneous speeds loop independently:
+//!   fetch `x` → compute a stochastic gradient (simulated compute time)
+//!   → compress with their **private** error memory → upload.
+//! * The server's ingress link is a serialized resource (uploads queue
+//!   behind each other, priced by a [`NetworkModel`]); the server applies
+//!   each update the instant it is received — no barrier, no locking.
+//! * Gradients are therefore computed on *stale* iterates; the staleness
+//!   of an update is the number of server applications between its fetch
+//!   and its arrival, and is reported in the run record.
+//!
+//! All time is simulated (integer nanoseconds — deterministic in the
+//! seed); convergence is real: the actual logistic objective on the
+//! actual dataset, so the run shows both the systems effect (sparse
+//! uploads don't queue) and the optimization effect (staleness +
+//! error-feedback still converge).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::compress::{self, Compressor, Update};
+use crate::data::Dataset;
+use crate::metrics::{LossPoint, RunRecord};
+use crate::models::{GradBackend, LogisticModel};
+use crate::optim::Schedule;
+use crate::sim::network::{ComputeModel, NetworkModel};
+use crate::util::prng::Prng;
+
+/// Configuration of an asynchronous distributed run.
+#[derive(Clone, Debug)]
+pub struct AsyncConfig {
+    /// Worker count.
+    pub workers: usize,
+    /// Total updates the server will apply before stopping.
+    pub total_updates: usize,
+    /// Per-worker compressor spec.
+    pub compressor: String,
+    /// Stepsize schedule indexed by the server's update counter.
+    pub schedule: Schedule,
+    /// Network pricing of uploads (server ingress is the shared queue).
+    pub network: NetworkModel,
+    /// Per-gradient compute cost.
+    pub compute: ComputeModel,
+    /// Speed spread: worker `w` computes at `1 + hetero·w/(W−1)` × the
+    /// base time (0 = homogeneous fleet).
+    pub hetero: f64,
+    /// Loss evaluations along the run.
+    pub eval_points: usize,
+    /// L2 strength; `None` = `1/n`.
+    pub lam: Option<f64>,
+    pub seed: u64,
+}
+
+impl Default for AsyncConfig {
+    fn default() -> Self {
+        AsyncConfig {
+            workers: 8,
+            total_updates: 20_000,
+            compressor: "top_k:1".into(),
+            schedule: Schedule::constant(0.1),
+            network: NetworkModel::eth_1g(),
+            compute: ComputeModel::new(1e-9, 2000.0),
+            hetero: 0.5,
+            eval_points: 10,
+            lam: None,
+            seed: 1,
+        }
+    }
+}
+
+/// Per-worker async state.
+struct AsyncWorker {
+    memory: Vec<f32>,
+    v: Vec<f32>,
+    comp: Box<dyn Compressor>,
+    update: Update,
+    rng: Prng,
+    /// Server update-counter value at this worker's last fetch.
+    fetch_version: u64,
+    /// Compute-time multiplier ≥ 1.
+    slow: f64,
+    bits_uploaded: u64,
+}
+
+/// Pending event: a worker finishing its gradient at `t_ns`.
+#[derive(PartialEq, Eq, PartialOrd, Ord)]
+struct Finish {
+    t_ns: u64,
+    worker: usize,
+}
+
+/// Outcome extras beyond the shared [`RunRecord`].
+#[derive(Clone, Debug)]
+pub struct AsyncStats {
+    /// Mean staleness (server updates between fetch and apply).
+    pub mean_staleness: f64,
+    /// Maximum observed staleness.
+    pub max_staleness: u64,
+    /// Simulated wall-clock of the whole run (seconds).
+    pub sim_seconds: f64,
+    /// Fraction of simulated time the server link was busy.
+    pub link_utilization: f64,
+}
+
+/// Run asynchronous distributed Mem-SGD; returns the loss record (curve
+/// is indexed by server updates, `extra` carries the async stats).
+pub fn run(data: &Dataset, cfg: &AsyncConfig) -> Result<(RunRecord, AsyncStats)> {
+    let d = data.d();
+    let n = data.n();
+    let lam = cfg.lam.unwrap_or(1.0 / n as f64);
+    let mut model = LogisticModel::new(data, lam);
+    let mut root_rng = Prng::new(cfg.seed);
+
+    let mut workers: Vec<AsyncWorker> = (0..cfg.workers)
+        .map(|w| {
+            Ok(AsyncWorker {
+                memory: vec![0.0; d],
+                v: vec![0.0; d],
+                comp: compress::from_spec(&cfg.compressor)?,
+                update: Update::new_sparse(d),
+                rng: root_rng.split(w as u64 + 1),
+                fetch_version: 0,
+                slow: 1.0
+                    + if cfg.workers > 1 {
+                        cfg.hetero * w as f64 / (cfg.workers - 1) as f64
+                    } else {
+                        0.0
+                    },
+                bits_uploaded: 0,
+            })
+        })
+        .collect::<Result<_>>()?;
+
+    let mut x = vec![0.0f32; d];
+    let mut grad = vec![0.0f32; d];
+
+    // Event queue: min-heap over finish time.
+    let mut queue: BinaryHeap<Reverse<Finish>> = BinaryHeap::new();
+    let compute_ns = |w: &AsyncWorker, cm: &ComputeModel| -> u64 {
+        (cm.s_per_coord * cm.coords_per_grad * w.slow * 1e9).max(1.0) as u64
+    };
+    for (i, w) in workers.iter().enumerate() {
+        queue.push(Reverse(Finish {
+            t_ns: compute_ns(w, &cfg.compute),
+            worker: i,
+        }));
+    }
+
+    let mut version = 0u64; // server update counter
+    let mut link_free_ns = 0u64; // server ingress link busy-until
+    let mut link_busy_total = 0u64;
+    let mut staleness_sum = 0u64;
+    let mut staleness_max = 0u64;
+    let mut now_ns = 0u64;
+
+    let eval_every = (cfg.total_updates / cfg.eval_points.max(1)).max(1);
+    let mut record = RunRecord {
+        method: format!(
+            "async_memsgd({},W={},{})",
+            cfg.compressor, cfg.workers, cfg.network.name
+        ),
+        dataset: data.name.clone(),
+        schedule: cfg.schedule.describe(),
+        ..Default::default()
+    };
+    let started = Instant::now();
+    record.curve.push(LossPoint {
+        t: 0,
+        bits: 0,
+        loss: model.full_loss(&x),
+    });
+
+    while version < cfg.total_updates as u64 {
+        let Reverse(ev) = queue.pop().expect("queue never empties");
+        now_ns = now_ns.max(ev.t_ns);
+        let w = &mut workers[ev.worker];
+
+        // The worker finished its gradient (computed on the x it fetched;
+        // staleness-wise the fetch snapshot is what matters — we apply
+        // against the *current* x exactly like a real lock-free PS).
+        let i = w.rng.below(n);
+        model.sample_grad(&x, i, &mut grad);
+        let eta = cfg.schedule.eta(version as usize) as f32;
+        // Error feedback only for contraction operators (unbiased
+        // quantizers run memory-free, as in the paper's §4.3 baseline).
+        let use_memory = w.comp.contraction_k(d).is_some();
+        if use_memory {
+            for ((vj, &mj), &gj) in w.v.iter_mut().zip(&w.memory).zip(&grad) {
+                *vj = mj + eta * gj;
+            }
+        } else {
+            for (vj, &gj) in w.v.iter_mut().zip(&grad) {
+                *vj = eta * gj;
+            }
+        }
+        let bits = w.comp.compress(&w.v, &mut w.rng, &mut w.update);
+        w.bits_uploaded += bits;
+        if use_memory {
+            std::mem::swap(&mut w.memory, &mut w.v);
+            w.update.sub_from(&mut w.memory);
+        }
+
+        // Upload queues behind the shared server link. The link is busy
+        // for the serialization time only; propagation latency delays the
+        // arrival but does not occupy the link.
+        let xfer_ns = (cfg.network.xfer_s(bits) * 1e9).max(1.0) as u64;
+        let latency_ns = (cfg.network.latency_s * 1e9) as u64;
+        let start_ns = ev.t_ns.max(link_free_ns);
+        link_free_ns = start_ns + xfer_ns;
+        link_busy_total += xfer_ns;
+        let arrive_ns = link_free_ns + latency_ns;
+        now_ns = now_ns.max(arrive_ns);
+
+        // Server applies instantly on receipt.
+        w.update.sub_from(&mut x);
+        version += 1;
+        let stale = version - 1 - w.fetch_version;
+        staleness_sum += stale;
+        staleness_max = staleness_max.max(stale);
+
+        // Worker refetches and starts the next gradient.
+        w.fetch_version = version;
+        queue.push(Reverse(Finish {
+            t_ns: arrive_ns + compute_ns(w, &cfg.compute),
+            worker: ev.worker,
+        }));
+
+        if version % eval_every as u64 == 0 || version == cfg.total_updates as u64 {
+            let bits: u64 = workers.iter().map(|w| w.bits_uploaded).sum();
+            record.curve.push(LossPoint {
+                t: version as usize,
+                bits,
+                loss: model.full_loss(&x),
+            });
+        }
+    }
+
+    let total_bits: u64 = workers.iter().map(|w| w.bits_uploaded).sum();
+    record.steps = version as usize;
+    record.total_bits = total_bits;
+    record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+    let stats = AsyncStats {
+        mean_staleness: staleness_sum as f64 / version.max(1) as f64,
+        max_staleness: staleness_max,
+        sim_seconds: now_ns as f64 / 1e9,
+        link_utilization: if now_ns > 0 {
+            (link_busy_total as f64 / now_ns as f64).min(1.0)
+        } else {
+            0.0
+        },
+    };
+    record
+        .extra
+        .insert("mean_staleness".into(), stats.mean_staleness);
+    record
+        .extra
+        .insert("max_staleness".into(), stats.max_staleness as f64);
+    record.extra.insert("sim_seconds".into(), stats.sim_seconds);
+    record
+        .extra
+        .insert("link_utilization".into(), stats.link_utilization);
+    record.extra.insert("workers".into(), cfg.workers as f64);
+    Ok((record, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn data() -> Dataset {
+        synthetic::epsilon_like(600, 32, 33)
+    }
+
+    fn cfg(workers: usize, comp: &str, updates: usize) -> AsyncConfig {
+        AsyncConfig {
+            workers,
+            total_updates: updates,
+            compressor: comp.into(),
+            schedule: Schedule::constant(0.4),
+            compute: ComputeModel::new(1e-9, 32.0),
+            eval_points: 4,
+            seed: 7,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn converges_despite_staleness() {
+        let data = data();
+        let (rec, stats) = run(&data, &cfg(8, "top_k:1", 12_000)).unwrap();
+        assert!(rec.final_loss() < 0.64, "loss {}", rec.final_loss());
+        assert!(stats.mean_staleness > 0.0, "8 workers must be stale");
+    }
+
+    #[test]
+    fn single_worker_has_zero_staleness() {
+        let data = data();
+        let (_, stats) = run(&data, &cfg(1, "top_k:2", 2_000)).unwrap();
+        assert_eq!(stats.max_staleness, 0);
+        assert_eq!(stats.mean_staleness, 0.0);
+    }
+
+    #[test]
+    fn staleness_grows_with_workers() {
+        let data = data();
+        let (_, s2) = run(&data, &cfg(2, "top_k:1", 4_000)).unwrap();
+        let (_, s16) = run(&data, &cfg(16, "top_k:1", 4_000)).unwrap();
+        assert!(
+            s16.mean_staleness > s2.mean_staleness,
+            "W=16 {} vs W=2 {}",
+            s16.mean_staleness,
+            s2.mean_staleness
+        );
+    }
+
+    #[test]
+    fn sparse_uploads_saturate_link_less_than_dense() {
+        let data = data();
+        let mut c_sparse = cfg(8, "top_k:1", 3_000);
+        let mut c_dense = cfg(8, "identity", 3_000);
+        // Slow link so the wire matters.
+        c_sparse.network = NetworkModel::new("slow", 10e-6, 1e7);
+        c_dense.network = c_sparse.network.clone();
+        let (_, ss) = run(&data, &c_sparse).unwrap();
+        let (_, sd) = run(&data, &c_dense).unwrap();
+        assert!(
+            ss.sim_seconds < sd.sim_seconds / 3.0,
+            "sparse {}s vs dense {}s",
+            ss.sim_seconds,
+            sd.sim_seconds
+        );
+        assert!(ss.link_utilization < sd.link_utilization);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_still_converges() {
+        let data = data();
+        let mut c = cfg(8, "top_k:1", 10_000);
+        c.hetero = 3.0; // slowest worker 4× the fastest
+        let (rec, _) = run(&data, &c).unwrap();
+        assert!(rec.final_loss() < 0.65, "loss {}", rec.final_loss());
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let data = data();
+        let (a, sa) = run(&data, &cfg(4, "rand_k:2", 1_000)).unwrap();
+        let (b, sb) = run(&data, &cfg(4, "rand_k:2", 1_000)).unwrap();
+        assert_eq!(a.final_loss(), b.final_loss());
+        assert_eq!(sa.sim_seconds, sb.sim_seconds);
+    }
+
+    #[test]
+    fn bit_accounting_matches_steps() {
+        let data = data();
+        let (rec, _) = run(&data, &cfg(4, "top_k:1", 500)).unwrap();
+        // d=32: every upload is exactly 32+5 bits.
+        assert_eq!(rec.total_bits, 500 * 37);
+        assert_eq!(rec.steps, 500);
+    }
+}

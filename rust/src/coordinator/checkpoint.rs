@@ -1,0 +1,335 @@
+//! Training-state checkpoints: save/restore the *complete* Algorithm-1
+//! state so a run can be split across process lifetimes and resume
+//! **bit-identically** — iterate `x_t`, error memory `m_t` (losing it
+//! would silently change the algorithm: the suppressed mass of every
+//! previous step lives there), iteration/bit counters, the weighted
+//! averaging accumulator, and the PRNG position (so the resumed sample /
+//! rand-k stream continues exactly where it stopped).
+//!
+//! Format: a little-endian binary container —
+//!
+//! ```text
+//! magic "MEMSGDCK" | version u32 | compressor-spec (len u32 + utf8)
+//! | t u64 | bits_sent u64 | d u64
+//! | x  [f32; d] | m [f32; d]
+//! | rng [u64; 4]
+//! | has_avg u8 | (shift f64 | sum_w f64 | avg_t u64 | acc [f64; d])?
+//! ```
+//!
+//! No compression, no external deps; `d = 47'236` checkpoints are ~0.9 MB.
+
+use std::fs;
+use std::io::{Cursor, Read as _, Write as _};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress;
+use crate::optim::{MemSgd, WeightedAverage};
+use crate::util::prng::Prng;
+
+const MAGIC: &[u8; 8] = b"MEMSGDCK";
+const VERSION: u32 = 1;
+
+/// Everything needed to resume a sequential Mem-SGD run.
+pub struct Checkpoint {
+    pub compressor_spec: String,
+    pub t: usize,
+    pub bits_sent: u64,
+    pub x: Vec<f32>,
+    pub m: Vec<f32>,
+    pub rng_state: [u64; 4],
+    /// `(shift, acc, sum_w, t)` of the weighted average, if one is kept.
+    pub avg: Option<(f64, Vec<f64>, f64, usize)>,
+}
+
+impl Checkpoint {
+    /// Capture the state of a live optimizer + RNG (+ averager).
+    pub fn capture(
+        opt: &MemSgd,
+        spec: &str,
+        rng: &Prng,
+        avg: Option<&WeightedAverage>,
+    ) -> Checkpoint {
+        Checkpoint {
+            compressor_spec: spec.to_string(),
+            t: opt.t,
+            bits_sent: opt.bits_sent,
+            x: opt.x.clone(),
+            m: opt.m.clone(),
+            rng_state: rng.state(),
+            avg: avg.map(|a| {
+                let (shift, acc, sum_w, t) = a.state();
+                (shift, acc.to_vec(), sum_w, t)
+            }),
+        }
+    }
+
+    /// Rebuild the optimizer, RNG and averager. The compressor is
+    /// re-created from the stored spec (compressors are stateless across
+    /// iterations by design — scratch buffers only).
+    pub fn restore(&self) -> Result<(MemSgd, Prng, Option<WeightedAverage>)> {
+        let comp = compress::from_spec(&self.compressor_spec)?;
+        let mut opt = MemSgd::new(self.x.clone(), comp);
+        opt.m.copy_from_slice(&self.m);
+        opt.t = self.t;
+        opt.bits_sent = self.bits_sent;
+        let rng = Prng::from_state(self.rng_state);
+        let avg = self
+            .avg
+            .as_ref()
+            .map(|(shift, acc, sum_w, t)| WeightedAverage::from_state(*shift, acc.clone(), *sum_w, *t));
+        Ok((opt, rng, avg))
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let d = self.x.len();
+        let mut out = Vec::with_capacity(64 + self.compressor_spec.len() + d * 8 + d * 8);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        let spec = self.compressor_spec.as_bytes();
+        out.extend_from_slice(&(spec.len() as u32).to_le_bytes());
+        out.extend_from_slice(spec);
+        out.extend_from_slice(&(self.t as u64).to_le_bytes());
+        out.extend_from_slice(&self.bits_sent.to_le_bytes());
+        out.extend_from_slice(&(d as u64).to_le_bytes());
+        for &v in &self.x {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for &v in &self.m {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for &s in &self.rng_state {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        match &self.avg {
+            None => out.push(0),
+            Some((shift, acc, sum_w, t)) => {
+                out.push(1);
+                out.extend_from_slice(&shift.to_le_bytes());
+                out.extend_from_slice(&sum_w.to_le_bytes());
+                out.extend_from_slice(&(*t as u64).to_le_bytes());
+                debug_assert_eq!(acc.len(), d);
+                for &v in acc {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        out
+    }
+
+    /// Parse from bytes (validates magic, version, lengths).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        let mut cur = Cursor::new(bytes);
+        let mut magic = [0u8; 8];
+        cur.read_exact(&mut magic).context("truncated magic")?;
+        if &magic != MAGIC {
+            bail!("not a memsgd checkpoint (bad magic)");
+        }
+        let version = read_u32(&mut cur)?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version} (expected {VERSION})");
+        }
+        let spec_len = read_u32(&mut cur)? as usize;
+        if spec_len > 4096 {
+            bail!("implausible compressor-spec length {spec_len}");
+        }
+        let mut spec = vec![0u8; spec_len];
+        cur.read_exact(&mut spec).context("truncated spec")?;
+        let compressor_spec = String::from_utf8(spec).context("spec is not utf-8")?;
+        let t = read_u64(&mut cur)? as usize;
+        let bits_sent = read_u64(&mut cur)?;
+        let d = read_u64(&mut cur)? as usize;
+        let remaining = bytes.len() as u64 - cur.position();
+        if (remaining as usize) < d * 8 + 32 + 1 {
+            bail!("checkpoint truncated: d={d} but only {remaining} bytes left");
+        }
+        let mut x = vec![0.0f32; d];
+        for v in &mut x {
+            *v = f32::from_le_bytes(read_arr(&mut cur)?);
+        }
+        let mut m = vec![0.0f32; d];
+        for v in &mut m {
+            *v = f32::from_le_bytes(read_arr(&mut cur)?);
+        }
+        let mut rng_state = [0u64; 4];
+        for s in &mut rng_state {
+            *s = read_u64(&mut cur)?;
+        }
+        let mut has_avg = [0u8; 1];
+        cur.read_exact(&mut has_avg).context("truncated avg flag")?;
+        let avg = match has_avg[0] {
+            0 => None,
+            1 => {
+                let shift = f64::from_le_bytes(read_arr(&mut cur)?);
+                let sum_w = f64::from_le_bytes(read_arr(&mut cur)?);
+                let at = read_u64(&mut cur)? as usize;
+                let mut acc = vec![0.0f64; d];
+                for v in &mut acc {
+                    *v = f64::from_le_bytes(read_arr(&mut cur)?);
+                }
+                Some((shift, acc, sum_w, at))
+            }
+            other => bail!("bad averager flag {other}"),
+        };
+        Ok(Checkpoint {
+            compressor_spec,
+            t,
+            bits_sent,
+            x,
+            m,
+            rng_state,
+            avg,
+        })
+    }
+
+    /// Write to a file (atomically: temp + rename).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = fs::File::create(&tmp)
+                .with_context(|| format!("create {}", tmp.display()))?;
+            f.write_all(&self.to_bytes())?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, path).with_context(|| format!("rename into {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Read from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let bytes = fs::read(path.as_ref())
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        Checkpoint::from_bytes(&bytes)
+    }
+}
+
+fn read_u32(cur: &mut Cursor<&[u8]>) -> Result<u32> {
+    Ok(u32::from_le_bytes(read_arr(cur)?))
+}
+
+fn read_u64(cur: &mut Cursor<&[u8]>) -> Result<u64> {
+    Ok(u64::from_le_bytes(read_arr(cur)?))
+}
+
+fn read_arr<const N: usize>(cur: &mut Cursor<&[u8]>) -> Result<[u8; N]> {
+    let mut buf = [0u8; N];
+    cur.read_exact(&mut buf).context("checkpoint truncated")?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Update;
+
+    fn trained_state(steps: usize) -> (MemSgd, Prng) {
+        let mut opt = MemSgd::new(vec![0.5f32; 40], compress::from_spec("top_k:2").unwrap());
+        let mut rng = Prng::new(42);
+        let grad: Vec<f32> = (0..40).map(|i| (i as f32 * 0.37).sin()).collect();
+        for t in 0..steps {
+            opt.step(&grad, 0.1 / (t + 1) as f64, &mut rng);
+        }
+        (opt, rng)
+    }
+
+    #[test]
+    fn roundtrip_bytes_exact() {
+        let (opt, rng) = trained_state(50);
+        let mut avg = WeightedAverage::new(40, 10.0);
+        avg.update(&opt.x);
+        let ck = Checkpoint::capture(&opt, "top_k:2", &rng, Some(&avg));
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.x, ck.x);
+        assert_eq!(back.m, ck.m);
+        assert_eq!(back.t, 50);
+        assert_eq!(back.rng_state, rng.state());
+        assert_eq!(back.compressor_spec, "top_k:2");
+        let (_, acc, _, _) = (
+            back.avg.as_ref().unwrap().0,
+            &back.avg.as_ref().unwrap().1,
+            back.avg.as_ref().unwrap().2,
+            back.avg.as_ref().unwrap().3,
+        );
+        assert_eq!(acc.len(), 40);
+    }
+
+    #[test]
+    fn resume_is_bit_identical_to_uninterrupted_run() {
+        // Run 200 steps straight vs 100 + checkpoint/restore + 100: the
+        // iterate, memory and RNG stream must match bit-for-bit.
+        let grad_at = |t: usize| -> Vec<f32> {
+            (0..40).map(|i| ((i + t) as f32 * 0.11).cos()).collect()
+        };
+        let mut full = MemSgd::new(vec![0.0f32; 40], compress::from_spec("rand_k:3").unwrap());
+        let mut full_rng = Prng::new(7);
+        for t in 0..200 {
+            full.step(&grad_at(t), 0.05, &mut full_rng);
+        }
+
+        let mut half = MemSgd::new(vec![0.0f32; 40], compress::from_spec("rand_k:3").unwrap());
+        let mut half_rng = Prng::new(7);
+        for t in 0..100 {
+            half.step(&grad_at(t), 0.05, &mut half_rng);
+        }
+        let ck = Checkpoint::capture(&half, "rand_k:3", &half_rng, None);
+        let (mut resumed, mut resumed_rng, _) = ck.restore().unwrap();
+        for t in 100..200 {
+            resumed.step(&grad_at(t), 0.05, &mut resumed_rng);
+        }
+
+        assert_eq!(resumed.x, full.x);
+        assert_eq!(resumed.m, full.m);
+        assert_eq!(resumed.t, full.t);
+        assert_eq!(resumed.bits_sent, full.bits_sent);
+        assert_eq!(resumed_rng.state(), full_rng.state());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let (opt, rng) = trained_state(10);
+        let ck = Checkpoint::capture(&opt, "top_k:2", &rng, None);
+        let dir = std::env::temp_dir().join("memsgd_ck_test");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.ck");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.x, ck.x);
+        assert_eq!(back.m, ck.m);
+        fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_and_truncation() {
+        assert!(Checkpoint::from_bytes(b"nonsense").is_err());
+        let (opt, rng) = trained_state(5);
+        let bytes = Checkpoint::capture(&opt, "top_k:2", &rng, None).to_bytes();
+        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() / 2]).is_err());
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] ^= 0xFF;
+        assert!(Checkpoint::from_bytes(&bad_magic).is_err());
+        let mut bad_version = bytes;
+        bad_version[8] = 99;
+        assert!(Checkpoint::from_bytes(&bad_version).is_err());
+    }
+
+    #[test]
+    fn restored_optimizer_steps_consistently() {
+        let (opt, rng) = trained_state(30);
+        let ck = Checkpoint::capture(&opt, "top_k:2", &rng, None);
+        let (mut restored, mut r, _) = ck.restore().unwrap();
+        // A step after restore behaves like a step on the original.
+        let mut orig = MemSgd::new(ck.x.clone(), compress::from_spec("top_k:2").unwrap());
+        orig.m.copy_from_slice(&ck.m);
+        orig.t = ck.t;
+        orig.bits_sent = ck.bits_sent;
+        let mut orig_rng = Prng::from_state(ck.rng_state);
+        let grad = vec![0.3f32; 40];
+        let u1 = restored.step(&grad, 0.01, &mut r).to_dense(40);
+        let u2 = orig.step(&grad, 0.01, &mut orig_rng).to_dense(40);
+        assert_eq!(u1, u2);
+        let _ = Update::new_sparse(1); // silence unused import in some cfgs
+    }
+}

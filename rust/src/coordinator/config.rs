@@ -1,0 +1,204 @@
+//! Method specifications: which optimizer + compressor combination runs.
+//!
+//! Spec grammar (used by the CLI, config files and all drivers):
+//!
+//! ```text
+//! memsgd:<compressor-spec>     Algorithm 1 with any compress::from_spec
+//!                              operator, e.g. memsgd:top_k:1
+//! sgd                          vanilla SGD (dense transmission)
+//! sgd:qsgd:<levels>[:<eff_d>]  QSGD baseline (Section 4.3)
+//! sgd:unbiased_rand_k:<k>      the d/k-scaled unbiased baseline (§2.2)
+//! ```
+
+use anyhow::{bail, Result};
+
+use crate::compress;
+use crate::optim::{MemSgd, Sgd};
+
+/// A parsed method specification.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Method {
+    /// Algorithm 1 with the given compressor spec.
+    MemSgd { comp: String },
+    /// Vanilla SGD.
+    Sgd,
+    /// QSGD (levels, optional effective dimension for bit accounting).
+    SgdQsgd { levels: u32, eff: Option<usize> },
+    /// Section 2.2's unbiased rand-k with d/k scaling.
+    SgdUnbiasedRandK { k: usize },
+}
+
+impl Method {
+    pub fn parse(spec: &str) -> Result<Method> {
+        let (head, rest) = match spec.split_once(':') {
+            Some((h, r)) => (h, Some(r)),
+            None => (spec, None),
+        };
+        Ok(match (head, rest) {
+            ("memsgd", Some(comp)) => {
+                compress::from_spec(comp)?; // validate eagerly
+                Method::MemSgd { comp: comp.to_string() }
+            }
+            ("memsgd", None) => bail!("memsgd requires a compressor, e.g. 'memsgd:top_k:1'"),
+            ("sgd", None) => Method::Sgd,
+            ("sgd", Some(r)) => {
+                let mut parts = r.split(':');
+                match parts.next() {
+                    Some("qsgd") => {
+                        let levels: u32 = match parts.next() {
+                            Some(v) => v.parse()?,
+                            None => bail!("sgd:qsgd requires levels, e.g. 'sgd:qsgd:16'"),
+                        };
+                        let eff = match parts.next() {
+                            Some(v) => Some(v.parse::<usize>()?),
+                            None => None,
+                        };
+                        Method::SgdQsgd { levels, eff }
+                    }
+                    Some("unbiased_rand_k") => {
+                        let k: usize = match parts.next() {
+                            Some(v) => v.parse()?,
+                            None => bail!("sgd:unbiased_rand_k requires k"),
+                        };
+                        Method::SgdUnbiasedRandK { k }
+                    }
+                    other => bail!("unknown sgd variant {other:?} in '{spec}'"),
+                }
+            }
+            _ => bail!("unknown method spec '{spec}'"),
+        })
+    }
+
+    /// Display name used in records and plots.
+    pub fn name(&self) -> String {
+        match self {
+            Method::MemSgd { comp } => {
+                let c = compress::from_spec(comp).expect("validated at parse");
+                format!("memsgd({})", c.name())
+            }
+            Method::Sgd => "sgd".into(),
+            Method::SgdQsgd { levels, .. } => {
+                format!("sgd_qsgd_{}bit", (*levels as f64).log2().round() as u32)
+            }
+            Method::SgdUnbiasedRandK { k } => format!("sgd_unbiased_rand_{k}"),
+        }
+    }
+
+    /// Contraction parameter of the underlying operator (drives the
+    /// paper's stepsize shift `a ∝ d/k`); `d` for vanilla, `None` for
+    /// non-contractive QSGD.
+    pub fn contraction_k(&self, d: usize) -> Option<f64> {
+        match self {
+            Method::MemSgd { comp } => compress::from_spec(comp)
+                .expect("validated at parse")
+                .contraction_k(d),
+            Method::Sgd => Some(d as f64),
+            Method::SgdQsgd { .. } => None,
+            Method::SgdUnbiasedRandK { k } => Some(*k as f64),
+        }
+    }
+
+    /// Instantiate the optimizer at `x0`.
+    pub fn build(&self, x0: Vec<f32>) -> Result<Optimizer> {
+        Ok(match self {
+            Method::MemSgd { comp } => Optimizer::Mem(MemSgd::new(x0, compress::from_spec(comp)?)),
+            Method::Sgd => Optimizer::Plain(Sgd::vanilla(x0)),
+            Method::SgdQsgd { levels, eff } => Optimizer::Plain(Sgd::qsgd(x0, *levels, *eff)),
+            Method::SgdUnbiasedRandK { k } => Optimizer::Plain(Sgd::unbiased_rand_k(x0, *k)),
+        })
+    }
+}
+
+/// Either optimizer behind one stepping interface.
+pub enum Optimizer {
+    Mem(MemSgd),
+    Plain(Sgd),
+}
+
+impl Optimizer {
+    #[inline]
+    pub fn step(&mut self, grad: &[f32], eta: f64, rng: &mut crate::util::prng::Prng) {
+        match self {
+            Optimizer::Mem(o) => {
+                o.step(grad, eta, rng);
+            }
+            Optimizer::Plain(o) => o.step(grad, eta, rng),
+        }
+    }
+
+    #[inline]
+    pub fn x(&self) -> &[f32] {
+        match self {
+            Optimizer::Mem(o) => &o.x,
+            Optimizer::Plain(o) => &o.x,
+        }
+    }
+
+    pub fn bits_sent(&self) -> u64 {
+        match self {
+            Optimizer::Mem(o) => o.bits_sent,
+            Optimizer::Plain(o) => o.bits_sent,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_method_kinds() {
+        assert_eq!(
+            Method::parse("memsgd:top_k:1").unwrap(),
+            Method::MemSgd { comp: "top_k:1".into() }
+        );
+        assert_eq!(Method::parse("sgd").unwrap(), Method::Sgd);
+        assert_eq!(
+            Method::parse("sgd:qsgd:16").unwrap(),
+            Method::SgdQsgd { levels: 16, eff: None }
+        );
+        assert_eq!(
+            Method::parse("sgd:qsgd:16:71").unwrap(),
+            Method::SgdQsgd { levels: 16, eff: Some(71) }
+        );
+        assert_eq!(
+            Method::parse("sgd:unbiased_rand_k:10").unwrap(),
+            Method::SgdUnbiasedRandK { k: 10 }
+        );
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(Method::parse("memsgd").is_err());
+        assert!(Method::parse("memsgd:bogus:1").is_err());
+        assert!(Method::parse("sgd:bogus").is_err());
+        assert!(Method::parse("adam").is_err());
+        assert!(Method::parse("sgd:qsgd").is_err());
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(Method::parse("memsgd:top_k:1").unwrap().name(), "memsgd(top_1)");
+        assert_eq!(Method::parse("sgd:qsgd:256").unwrap().name(), "sgd_qsgd_8bit");
+        assert_eq!(Method::parse("sgd").unwrap().name(), "sgd");
+    }
+
+    #[test]
+    fn contraction_parameters() {
+        assert_eq!(Method::parse("memsgd:top_k:3").unwrap().contraction_k(100), Some(3.0));
+        assert_eq!(Method::parse("memsgd:random_p:0.5").unwrap().contraction_k(100), Some(0.5));
+        assert_eq!(Method::parse("sgd").unwrap().contraction_k(100), Some(100.0));
+        assert_eq!(Method::parse("sgd:qsgd:16").unwrap().contraction_k(100), None);
+    }
+
+    #[test]
+    fn build_and_step() {
+        let mut rng = crate::util::prng::Prng::new(0);
+        for spec in ["memsgd:top_k:1", "sgd", "sgd:qsgd:16", "sgd:unbiased_rand_k:2"] {
+            let mut opt = Method::parse(spec).unwrap().build(vec![0.0; 8]).unwrap();
+            opt.step(&[1.0; 8], 0.1, &mut rng);
+            assert!(opt.bits_sent() > 0, "{spec}");
+            assert_eq!(opt.x().len(), 8);
+        }
+    }
+}

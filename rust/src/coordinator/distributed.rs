@@ -1,0 +1,300 @@
+//! Distributed data-parallel Mem-SGD — the paper's motivating setting
+//! ("communicating the stochastic gradients to the other workers is a
+//! major limiting factor", §1; "those are the domains where sparsified
+//! SGD might have the largest impact", §5).
+//!
+//! Synchronous parameter-server rounds over `W` workers, message-passing
+//! semantics (no shared memory):
+//!
+//! ```text
+//! round t:  worker w:  g_t^w ← comp(m_t^w + η_t ∇f_{i_w}(x_t))     (upload)
+//!                      m_{t+1}^w ← m_t^w + η_t ∇f_{i_w}(x_t) − g_t^w
+//!           server:    x_{t+1} ← x_t − (1/W) Σ_w g_t^w             (broadcast)
+//! ```
+//!
+//! Each worker keeps its **own** error memory (exactly Algorithm 2's
+//! per-worker `m^w`, but with consistent reads — the synchronous
+//! analogue). Communication accounting covers both directions: `W`
+//! compressed uploads plus one broadcast whose cost is the *union* of
+//! the workers' supports (at most `W·k` coordinates; the server
+//! aggregates before broadcasting).
+//!
+//! The simulation runs in-process but preserves the exact dataflow of a
+//! real deployment: workers only ever observe `x_t` and their private
+//! memory, and the server only ever observes the compressed uploads.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::compress::{self, Compressor, Update};
+use crate::data::Dataset;
+use crate::metrics::{LossPoint, RunRecord};
+use crate::models::{GradBackend, LogisticModel};
+use crate::optim::Schedule;
+use crate::util::prng::Prng;
+
+/// Configuration of a synchronous distributed run.
+#[derive(Clone, Debug)]
+pub struct DistributedConfig {
+    /// Worker (node) count.
+    pub workers: usize,
+    /// Synchronous rounds (each consumes `workers` stochastic gradients).
+    pub rounds: usize,
+    /// Per-worker compressor spec.
+    pub compressor: String,
+    /// Stepsize schedule over rounds.
+    pub schedule: Schedule,
+    /// Loss evaluations along the run.
+    pub eval_points: usize,
+    /// L2 strength; `None` = `1/n`.
+    pub lam: Option<f64>,
+    pub seed: u64,
+}
+
+impl Default for DistributedConfig {
+    fn default() -> Self {
+        DistributedConfig {
+            workers: 8,
+            rounds: 5_000,
+            compressor: "top_k:1".into(),
+            schedule: Schedule::constant(0.1),
+            eval_points: 10,
+            lam: None,
+            seed: 1,
+        }
+    }
+}
+
+/// One worker's state: private error memory + compressor + RNG stream.
+struct Worker {
+    memory: Vec<f32>,
+    v: Vec<f32>,
+    comp: Box<dyn Compressor>,
+    update: Update,
+    rng: Prng,
+    bits_uploaded: u64,
+}
+
+/// Run synchronous distributed Mem-SGD; evaluates the final server
+/// iterate plus a loss curve, and accounts upload + broadcast bits.
+pub fn run(data: &Dataset, cfg: &DistributedConfig) -> Result<RunRecord> {
+    let d = data.d();
+    let n = data.n();
+    let lam = cfg.lam.unwrap_or(1.0 / n as f64);
+    let mut model = LogisticModel::new(data, lam);
+    let mut root_rng = Prng::new(cfg.seed);
+
+    let mut workers: Vec<Worker> = (0..cfg.workers)
+        .map(|w| {
+            Ok(Worker {
+                memory: vec![0.0; d],
+                v: vec![0.0; d],
+                comp: compress::from_spec(&cfg.compressor)?,
+                update: Update::new_sparse(d),
+                rng: root_rng.split(w as u64 + 1),
+                bits_uploaded: 0,
+            })
+        })
+        .collect::<Result<_>>()?;
+
+    let mut x = vec![0.0f32; d];
+    let mut grad = vec![0.0f32; d];
+    // Server-side aggregation buffer: coordinate → summed update.
+    let mut agg: BTreeMap<u32, f32> = BTreeMap::new();
+    let mut agg_dense = vec![0.0f32; d];
+    let mut broadcast_bits = 0u64;
+    let idx_bits = crate::compress::sparse::index_bits(d);
+
+    let eval_every = (cfg.rounds / cfg.eval_points.max(1)).max(1);
+    let mut record = RunRecord {
+        method: format!("dist_memsgd({},W={})", cfg.compressor, cfg.workers),
+        dataset: data.name.clone(),
+        schedule: cfg.schedule.describe(),
+        ..Default::default()
+    };
+    let started = Instant::now();
+    record.curve.push(LossPoint {
+        t: 0,
+        bits: 0,
+        loss: model.full_loss(&x),
+    });
+
+    for round in 0..cfg.rounds {
+        let eta = cfg.schedule.eta(round);
+        let etaf = eta as f32;
+        agg.clear();
+        let mut any_dense = false;
+        for worker in workers.iter_mut() {
+            // Local stochastic gradient at the *current broadcast* x.
+            let i = worker.rng.below(n);
+            model.sample_grad(&x, i, &mut grad);
+            // Error feedback only for contraction operators; unbiased
+            // quantizers (QSGD) run memory-free exactly as in the paper's
+            // §4.3 baseline — accumulating their unbiased noise would
+            // amplify it instead of correcting it.
+            let use_memory = worker.comp.contraction_k(d).is_some();
+            if use_memory {
+                for ((vj, &mj), &gj) in worker.v.iter_mut().zip(&worker.memory).zip(&grad) {
+                    *vj = mj + etaf * gj;
+                }
+            } else {
+                for (vj, &gj) in worker.v.iter_mut().zip(&grad) {
+                    *vj = etaf * gj;
+                }
+            }
+            worker.bits_uploaded += worker.comp.compress(&worker.v, &mut worker.rng, &mut worker.update);
+            // Server receives the upload and folds it into the aggregate.
+            match &worker.update {
+                Update::Sparse(s) => {
+                    for (&j, &vj) in s.idx.iter().zip(&s.val) {
+                        *agg.entry(j).or_insert(0.0) += vj;
+                    }
+                }
+                Update::Dense(g) => {
+                    any_dense = true;
+                    for (a, &gj) in agg_dense.iter_mut().zip(g) {
+                        *a += gj;
+                    }
+                }
+            }
+            // Local memory update m ← v − g (contraction operators only).
+            if use_memory {
+                std::mem::swap(&mut worker.memory, &mut worker.v);
+                worker.update.sub_from(&mut worker.memory);
+            }
+        }
+        // Server applies the mean update and broadcasts it.
+        let scale = 1.0 / cfg.workers as f32;
+        if any_dense {
+            for (xj, a) in x.iter_mut().zip(agg_dense.iter_mut()) {
+                *xj -= *a * scale;
+                *a = 0.0;
+            }
+            broadcast_bits += 32 * d as u64;
+        } else {
+            for (&j, &vj) in agg.iter() {
+                x[j as usize] -= vj * scale;
+            }
+            broadcast_bits += agg.len() as u64 * (32 + idx_bits);
+        }
+
+        if (round + 1) % eval_every == 0 || round + 1 == cfg.rounds {
+            let uploads: u64 = workers.iter().map(|w| w.bits_uploaded).sum();
+            record.curve.push(LossPoint {
+                t: round + 1,
+                bits: uploads + broadcast_bits,
+                loss: model.full_loss(&x),
+            });
+        }
+    }
+
+    let uploads: u64 = workers.iter().map(|w| w.bits_uploaded).sum();
+    record.steps = cfg.rounds * cfg.workers;
+    record.total_bits = uploads + broadcast_bits;
+    record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+    record.extra.insert("workers".into(), cfg.workers as f64);
+    record.extra.insert("upload_bits".into(), uploads as f64);
+    record
+        .extra
+        .insert("broadcast_bits".into(), broadcast_bits as f64);
+    Ok(record)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn data() -> Dataset {
+        synthetic::epsilon_like(800, 32, 21)
+    }
+
+    fn cfg(workers: usize, comp: &str, rounds: usize) -> DistributedConfig {
+        DistributedConfig {
+            workers,
+            rounds,
+            compressor: comp.into(),
+            schedule: Schedule::constant(0.5),
+            eval_points: 4,
+            seed: 5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn converges_with_top1_uploads() {
+        let data = data();
+        let rec = run(&data, &cfg(8, "top_k:1", 3_000)).unwrap();
+        assert!(rec.final_loss() < 0.64, "loss {}", rec.final_loss());
+        assert_eq!(rec.steps, 24_000);
+    }
+
+    #[test]
+    fn one_worker_equals_sequential_memsgd_shape() {
+        // W = 1 distributed is Algorithm 1 with the same stream: must
+        // converge to the same ballpark as the sequential driver.
+        let data = data();
+        let rec = run(&data, &cfg(1, "top_k:2", 6_000)).unwrap();
+        assert!(rec.final_loss() < 0.64, "loss {}", rec.final_loss());
+    }
+
+    #[test]
+    fn communication_accounting_both_directions() {
+        let data = data();
+        let w = 4;
+        let rounds = 100;
+        let rec = run(&data, &cfg(w, "top_k:1", rounds)).unwrap();
+        // uploads: exactly W·rounds·(32+5) bits for d=32.
+        assert_eq!(rec.extra["upload_bits"] as u64, (w * rounds) as u64 * 37);
+        // broadcast: union support ≤ W coords per round.
+        let bc = rec.extra["broadcast_bits"] as u64;
+        assert!(bc > 0 && bc <= (w * rounds) as u64 * 37, "bc={bc}");
+        assert_eq!(rec.total_bits, rec.extra["upload_bits"] as u64 + bc);
+    }
+
+    #[test]
+    fn dense_uploads_cost_full_vectors() {
+        let data = data();
+        let rec = run(&data, &cfg(2, "identity", 50)).unwrap();
+        // 2 workers × 50 rounds × 32·d upload + 50 × 32·d broadcast.
+        assert_eq!(
+            rec.total_bits,
+            (2 * 50 + 50) as u64 * 32 * 32
+        );
+    }
+
+    #[test]
+    fn more_workers_reduce_rounds_to_target() {
+        // Data-parallel variance reduction: with the same round budget,
+        // W=8 (8 gradients/round) should do at least as well as W=1.
+        let data = data();
+        let w1 = run(&data, &cfg(1, "top_k:1", 2_000)).unwrap();
+        let w8 = run(&data, &cfg(8, "top_k:1", 2_000)).unwrap();
+        assert!(
+            w8.final_loss() <= w1.final_loss() + 0.01,
+            "W=8 {} vs W=1 {}",
+            w8.final_loss(),
+            w1.final_loss()
+        );
+    }
+
+    #[test]
+    fn sign_compressor_works_distributed() {
+        let data = data();
+        let rec = run(&data, &cfg(4, "sign", 1_500)).unwrap();
+        assert!(rec.final_loss() < 0.67, "loss {}", rec.final_loss());
+        // 1 bit per coord per upload: 4·1500·(32+32) upload bits.
+        assert_eq!(rec.extra["upload_bits"] as u64, 4 * 1500 * (32 + 32));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let data = data();
+        let a = run(&data, &cfg(3, "rand_k:2", 300)).unwrap();
+        let b = run(&data, &cfg(3, "rand_k:2", 300)).unwrap();
+        assert_eq!(a.final_loss(), b.final_loss());
+        assert_eq!(a.total_bits, b.total_bits);
+    }
+}

@@ -1,0 +1,30 @@
+//! Layer-3 coordinator: the paper's system contribution.
+//!
+//! * [`config`] — method specs (`memsgd:top_k:1`, `sgd:qsgd:16`, ...) and
+//!   experiment configuration.
+//! * [`train`] — the sequential Mem-SGD / SGD driver (Algorithm 1 plus
+//!   all Section 4.2–4.3 baselines): loss-evaluation schedule,
+//!   communication accounting, weighted-average evaluation.
+//! * [`parallel`] — PARALLEL-MEM-SGD (Algorithm 2): lock-free
+//!   shared-memory workers over `std::thread`, unsynchronized reads and
+//!   non-read-modify-write stores exactly as in the paper's Section 4.4
+//!   implementation.
+
+//! * [`distributed`] — synchronous data-parallel Mem-SGD over a
+//!   parameter-server topology (the paper's §1/§5 motivating setting):
+//!   per-node error memories, compressed uploads, aggregated sparse
+//!   broadcast, both directions accounted.
+
+//! * [`async_dist`] — asynchronous parameter-server Mem-SGD under a
+//!   network cost model: stale gradients, heterogeneous workers,
+//!   serialized server ingress (the §1.1 "sparsification + asynchrony"
+//!   combination, simulated in deterministic event time).
+//! * [`checkpoint`] — binary save/restore of full training state
+//!   (iterate, error memory, averaging, RNG position).
+
+pub mod async_dist;
+pub mod checkpoint;
+pub mod config;
+pub mod distributed;
+pub mod parallel;
+pub mod train;

@@ -1,0 +1,374 @@
+//! PARALLEL-MEM-SGD (Algorithm 2): lock-free shared-memory workers.
+//!
+//! Each of `W` workers keeps a **private** error memory `m^w` and runs
+//! the Mem-SGD recursion against one **shared** parameter vector `x`
+//! with no locks, no CAS loops, and non-atomic read-modify-write
+//! semantics — a worker's `x[i] -= g` is a plain load followed by a
+//! plain store, so concurrent writers can overwrite each other exactly
+//! as in the paper ("We did not use atomic updates of the parameter in
+//! the shared memory, allowing some workers to overwrite the progress of
+//! others"). Rust's memory model forbids genuine data races, so each
+//! cell is an `AtomicU32` accessed with `Relaxed` loads/stores: this
+//! compiles to the same unsynchronized MOVs while keeping behavior
+//! defined; lost updates remain possible because the read-modify-write
+//! is *not* fused.
+//!
+//! The enforced sparsity of the updates is what makes this scheme scale
+//! (Figure 4): a top-k worker dirties k cache lines per iteration where
+//! Hogwild-style dense SGD dirties d/16 of them.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::compress::{self, Update};
+use crate::data::Dataset;
+use crate::metrics::{LossPoint, RunRecord};
+use crate::models::{sigmoid, GradBackend, LogisticModel};
+use crate::optim::Schedule;
+use crate::util::prng::Prng;
+
+/// Shared parameter vector: relaxed atomic f32 cells.
+pub struct SharedParams {
+    cells: Vec<AtomicU32>,
+}
+
+impl SharedParams {
+    pub fn zeros(d: usize) -> Arc<SharedParams> {
+        Arc::new(SharedParams {
+            cells: (0..d).map(|_| AtomicU32::new(0f32.to_bits())).collect(),
+        })
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Unsynchronized read of one coordinate.
+    #[inline]
+    pub fn load(&self, i: usize) -> f32 {
+        f32::from_bits(self.cells[i].load(Ordering::Relaxed))
+    }
+
+    /// Unsynchronized (lossy under contention) `x[i] -= v`.
+    #[inline]
+    pub fn sub(&self, i: usize, v: f32) {
+        let old = f32::from_bits(self.cells[i].load(Ordering::Relaxed));
+        self.cells[i].store((old - v).to_bits(), Ordering::Relaxed);
+    }
+
+    /// Snapshot into a local buffer (a stale, possibly inconsistent view
+    /// — exactly what Algorithm 2's workers compute gradients on).
+    pub fn snapshot_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.cells.len());
+        for (o, c) in out.iter_mut().zip(&self.cells) {
+            *o = f32::from_bits(c.load(Ordering::Relaxed));
+        }
+    }
+
+    pub fn snapshot(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.len()];
+        self.snapshot_into(&mut out);
+        out
+    }
+}
+
+/// Configuration of a parallel run.
+#[derive(Clone, Debug)]
+pub struct ParallelConfig {
+    /// Worker count `W`.
+    pub workers: usize,
+    /// Iterations per worker (total work = `workers · steps_per_worker`
+    /// unless `fixed_total_steps` redistributes it).
+    pub steps_per_worker: usize,
+    /// If true, `steps_per_worker` is interpreted as the *total* budget
+    /// divided evenly across workers (the speedup-experiment convention:
+    /// same total work, more workers).
+    pub fixed_total_steps: bool,
+    /// Compressor spec applied by every worker (`top_k:1`, `identity` for
+    /// the Hogwild-style dense baseline, ...).
+    pub compressor: String,
+    /// Stepsize schedule (constant 0.05 in the paper's epsilon run).
+    pub schedule: Schedule,
+    /// L2 strength; `None` = `1/n`.
+    pub lam: Option<f64>,
+    pub seed: u64,
+}
+
+impl Default for ParallelConfig {
+    fn default() -> Self {
+        ParallelConfig {
+            workers: 2,
+            steps_per_worker: 10_000,
+            fixed_total_steps: true,
+            compressor: "top_k:1".into(),
+            schedule: Schedule::constant(0.05),
+            lam: None,
+            seed: 1,
+        }
+    }
+}
+
+/// Run Algorithm 2 and evaluate the **final iterate** (the paper's
+/// Section 4.4 protocol). The record's `extra` carries `workers` and
+/// `total_steps`.
+pub fn run(data: &Dataset, cfg: &ParallelConfig) -> Result<RunRecord> {
+    compress::from_spec(&cfg.compressor)?; // validate before spawning
+    let d = data.d();
+    let n = data.n();
+    let lam = cfg.lam.unwrap_or(1.0 / n as f64);
+    let steps_per_worker = if cfg.fixed_total_steps {
+        (cfg.steps_per_worker / cfg.workers.max(1)).max(1)
+    } else {
+        cfg.steps_per_worker
+    };
+
+    let shared = SharedParams::zeros(d);
+    let total_bits = Arc::new(AtomicU64::new(0));
+    let started = Instant::now();
+
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for w in 0..cfg.workers {
+            let shared = Arc::clone(&shared);
+            let total_bits = Arc::clone(&total_bits);
+            let comp_spec = cfg.compressor.clone();
+            let schedule = cfg.schedule.clone();
+            let seed = cfg.seed;
+            handles.push(scope.spawn(move || {
+                worker_loop(
+                    data,
+                    &shared,
+                    &total_bits,
+                    &comp_spec,
+                    &schedule,
+                    lam,
+                    steps_per_worker,
+                    seed ^ (w as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15),
+                )
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker panicked")?;
+        }
+        Ok(())
+    })?;
+
+    let elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+    let x = shared.snapshot();
+    let mut model = LogisticModel::new(data, lam);
+    let loss = model.full_loss(&x);
+    let total_steps = steps_per_worker * cfg.workers;
+    let bits = total_bits.load(Ordering::Relaxed);
+
+    let mut record = RunRecord {
+        method: format!("parallel_memsgd({},W={})", cfg.compressor, cfg.workers),
+        dataset: data.name.clone(),
+        schedule: cfg.schedule.describe(),
+        curve: vec![LossPoint {
+            t: total_steps,
+            bits,
+            loss,
+        }],
+        steps: total_steps,
+        total_bits: bits,
+        elapsed_ms,
+        ..Default::default()
+    };
+    record.extra.insert("workers".into(), cfg.workers as f64);
+    record
+        .extra
+        .insert("steps_per_worker".into(), steps_per_worker as f64);
+    Ok(record)
+}
+
+/// One worker's Algorithm-2 loop (lines 3–8).
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    data: &Dataset,
+    shared: &SharedParams,
+    total_bits: &AtomicU64,
+    comp_spec: &str,
+    schedule: &Schedule,
+    lam: f64,
+    steps: usize,
+    seed: u64,
+) -> Result<()> {
+    let d = data.d();
+    let n = data.n();
+    let mut rng = Prng::new(seed);
+    let mut comp = compress::from_spec(comp_spec)?;
+    let mut m = vec![0.0f32; d]; // private memory m^w
+    let mut v = vec![0.0f32; d];
+    let mut xbuf = vec![0.0f32; d];
+    let mut update = Update::new_sparse(d);
+    let lamf = lam as f32;
+    let mut bits = 0u64;
+
+    for t in 0..steps {
+        let i = rng.below(n);
+        // Inconsistent read of the shared iterate (line 5's ∇f(x)).
+        shared.snapshot_into(&mut xbuf);
+        // coef = −y σ(−y ⟨a_i, x⟩); ∇f_i = coef·a_i + λx.
+        let y = data.label(i);
+        let z = data.dot_row(i, &xbuf);
+        let coef = -y * sigmoid(-y * z);
+        let eta = schedule.eta(t) as f32;
+        // v = m + η ∇f_i(x), built without materializing the gradient.
+        for ((vj, &mj), &xj) in v.iter_mut().zip(&*m).zip(&*xbuf) {
+            *vj = mj + eta * lamf * xj;
+        }
+        match data.row(i) {
+            crate::data::RowView::Dense(row) => {
+                for (vj, &aj) in v.iter_mut().zip(row) {
+                    *vj += eta * coef * aj;
+                }
+            }
+            crate::data::RowView::Sparse { idx, val } => {
+                for (&j, &aj) in idx.iter().zip(val) {
+                    v[j as usize] += eta * coef * aj;
+                }
+            }
+        }
+        // g = comp(v); shared x ← x − g (lossy, lock-free); m ← v − g.
+        bits += comp.compress(&v, &mut rng, &mut update);
+        match &update {
+            Update::Sparse(s) => {
+                for (&j, &gj) in s.idx.iter().zip(&s.val) {
+                    shared.sub(j as usize, gj);
+                }
+            }
+            Update::Dense(g) => {
+                for (j, &gj) in g.iter().enumerate() {
+                    if gj != 0.0 {
+                        shared.sub(j, gj);
+                    }
+                }
+            }
+        }
+        m.copy_from_slice(&v);
+        update.sub_from(&mut m);
+    }
+    total_bits.fetch_add(bits, Ordering::Relaxed);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn data() -> Dataset {
+        synthetic::epsilon_like(600, 24, 5)
+    }
+
+    #[test]
+    fn single_worker_converges() {
+        let data = data();
+        let cfg = ParallelConfig {
+            workers: 1,
+            steps_per_worker: 6_000,
+            compressor: "top_k:2".into(),
+            schedule: Schedule::constant(0.5),
+            seed: 3,
+            ..Default::default()
+        };
+        let rec = run(&data, &cfg).unwrap();
+        assert!(rec.final_loss() < 0.62, "loss {}", rec.final_loss());
+        assert_eq!(rec.extra["workers"], 1.0);
+    }
+
+    #[test]
+    fn multiple_workers_reach_similar_loss_on_fixed_budget() {
+        // Same total work split across 1 vs 4 workers: the final losses
+        // must be in the same ballpark (Algorithm 2's claim that sparse
+        // updates tolerate lock-free concurrency).
+        let data = data();
+        let mk = |workers| {
+            run(
+                &data,
+                &ParallelConfig {
+                    workers,
+                    steps_per_worker: 8_000, // total budget
+                    fixed_total_steps: true,
+                    compressor: "top_k:2".into(),
+                    schedule: Schedule::constant(0.5),
+                    seed: 11,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        };
+        let one = mk(1);
+        let four = mk(4);
+        assert!(
+            (one.final_loss() - four.final_loss()).abs() < 0.08,
+            "W=1 {} vs W=4 {}",
+            one.final_loss(),
+            four.final_loss()
+        );
+        assert_eq!(four.extra["steps_per_worker"], 2_000.0);
+    }
+
+    #[test]
+    fn dense_lockfree_baseline_also_runs() {
+        let data = data();
+        let cfg = ParallelConfig {
+            workers: 2,
+            steps_per_worker: 2_000,
+            compressor: "identity".into(),
+            schedule: Schedule::constant(0.2),
+            seed: 7,
+            ..Default::default()
+        };
+        let rec = run(&data, &cfg).unwrap();
+        assert!(rec.final_loss() < 0.69);
+        assert!(rec.method.contains("identity"));
+    }
+
+    #[test]
+    fn shared_params_lossy_sub_semantics() {
+        let p = SharedParams::zeros(3);
+        p.sub(1, 2.5);
+        assert_eq!(p.load(1), -2.5);
+        assert_eq!(p.load(0), 0.0);
+        let snap = p.snapshot();
+        assert_eq!(snap, vec![0.0, -2.5, 0.0]);
+        assert_eq!(p.len(), 3);
+    }
+
+    #[test]
+    fn bits_are_accounted_across_workers() {
+        let data = data();
+        let cfg = ParallelConfig {
+            workers: 3,
+            steps_per_worker: 300,
+            fixed_total_steps: false,
+            compressor: "top_k:1".into(),
+            schedule: Schedule::constant(0.1),
+            seed: 1,
+            ..Default::default()
+        };
+        let rec = run(&data, &cfg).unwrap();
+        // 3 workers × 300 steps × (32 + ceil(log2 24)=5) bits
+        assert_eq!(rec.total_bits, 3 * 300 * 37);
+        assert_eq!(rec.steps, 900);
+    }
+
+    #[test]
+    fn rejects_bad_compressor_before_spawning() {
+        let data = data();
+        let cfg = ParallelConfig {
+            compressor: "bogus:1".into(),
+            ..Default::default()
+        };
+        assert!(run(&data, &cfg).is_err());
+    }
+}

@@ -1,0 +1,486 @@
+//! Sequential training driver: Algorithm 1 and the Section 4 baselines.
+//!
+//! One entry point, [`run`], reproduces any single curve of Figures 2/3:
+//! pick a method spec, a stepsize schedule, and an averaging mode; the
+//! driver samples `i_t` uniformly, steps the optimizer, maintains the
+//! Theorem-2.4 weighted average, evaluates the full objective on a fixed
+//! schedule, and accounts every transmitted bit.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::config::Method;
+use crate::compress;
+use crate::data::Dataset;
+use crate::metrics::{LossPoint, RunRecord};
+use crate::models::{GradBackend, LogisticModel};
+use crate::optim::{Schedule, WeightedAverage};
+use crate::util::prng::Prng;
+
+/// Configuration of one sequential run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Method spec (see [`Method::parse`]), e.g. `memsgd:top_k:1`.
+    pub method: String,
+    /// Stepsize schedule.
+    pub schedule: Schedule,
+    /// Total stochastic-gradient steps.
+    pub steps: usize,
+    /// Number of loss evaluations along the run (plus the final point).
+    pub eval_points: usize,
+    /// Evaluate the Theorem-2.4 weighted average `x̄` (true, Section 4.2)
+    /// or the last iterate `x_t` (false, Section 4.4).
+    pub average: bool,
+    /// Base PRNG seed (sampling, compression randomness).
+    pub seed: u64,
+    /// L2 strength; `None` = the paper's `λ = 1/n`.
+    pub lam: Option<f64>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            method: "memsgd:top_k:1".into(),
+            schedule: Schedule::constant(0.05),
+            steps: 10_000,
+            eval_points: 20,
+            average: true,
+            seed: 1,
+            lam: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Convenience: `steps = epochs · n`.
+    pub fn epochs(mut self, epochs: usize, n: usize) -> Self {
+        self.steps = epochs * n;
+        self
+    }
+
+    /// The paper's theoretical schedule for this dataset/method
+    /// (Table 2): `η_t = γ/(λ(t+a))`, `a = multiplier·d/k`.
+    pub fn with_paper_schedule(
+        mut self,
+        d: usize,
+        n: usize,
+        gamma: f64,
+        shift_multiplier: f64,
+    ) -> Result<Self> {
+        let method = Method::parse(&self.method)?;
+        let k = method.contraction_k(d).unwrap_or(d as f64);
+        let lam = self.lam.unwrap_or(1.0 / n as f64);
+        let a = Schedule::paper_shift(d, k, shift_multiplier);
+        self.schedule = Schedule::inv_t(gamma, lam, a);
+        Ok(self)
+    }
+}
+
+/// Train logistic regression on `data` (λ = 1/n unless overridden).
+pub fn run(data: &Dataset, cfg: &TrainConfig) -> Result<RunRecord> {
+    let lam = cfg.lam.unwrap_or(1.0 / data.n() as f64);
+    let mut model = LogisticModel::new(data, lam);
+    run_with_backend(&mut model, &data.name.clone(), cfg)
+}
+
+/// Train against any gradient backend (the PJRT transformer path uses
+/// this directly).
+pub fn run_with_backend<B: GradBackend>(
+    backend: &mut B,
+    dataset_name: &str,
+    cfg: &TrainConfig,
+) -> Result<RunRecord> {
+    let d = backend.dim();
+    let n = backend.n();
+    let method = Method::parse(&cfg.method)?;
+    let mut opt = method.build(vec![0.0f32; d])?;
+    let mut rng = Prng::new(cfg.seed);
+    let mut avg = cfg
+        .average
+        .then(|| WeightedAverage::new(d, cfg.schedule.averaging_shift().max(1.0)));
+
+    let eval_every = (cfg.steps / cfg.eval_points.max(1)).max(1);
+    let mut grad = vec![0.0f32; d];
+    let mut eval_x = vec![0.0f32; d];
+    let mut record = RunRecord {
+        method: method.name(),
+        dataset: dataset_name.to_string(),
+        schedule: cfg.schedule.describe(),
+        ..Default::default()
+    };
+
+    let started = Instant::now();
+    let eval = |t: usize,
+                    opt: &super::config::Optimizer,
+                    avg: &Option<WeightedAverage>,
+                    backend: &mut B,
+                    eval_x: &mut Vec<f32>,
+                    record: &mut RunRecord| {
+        match avg {
+            Some(a) if a.count() > 0 => a.write_average(eval_x),
+            _ => eval_x.copy_from_slice(opt.x()),
+        }
+        let loss = backend.full_loss(eval_x);
+        record.curve.push(LossPoint {
+            t,
+            bits: opt.bits_sent(),
+            loss,
+        });
+    };
+
+    eval(0, &opt, &avg, backend, &mut eval_x, &mut record);
+    for t in 0..cfg.steps {
+        let i = rng.below(n);
+        backend.sample_grad(opt.x(), i, &mut grad);
+        opt.step(&grad, cfg.schedule.eta(t), &mut rng);
+        if let Some(a) = avg.as_mut() {
+            a.update(opt.x());
+        }
+        if (t + 1) % eval_every == 0 || t + 1 == cfg.steps {
+            eval(t + 1, &opt, &avg, backend, &mut eval_x, &mut record);
+        }
+    }
+    record.steps = cfg.steps;
+    record.total_bits = opt.bits_sent();
+    record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+    Ok(record)
+}
+
+// ---------------------------------------------------------------------------
+// Resumable training (checkpointed Mem-SGD)
+// ---------------------------------------------------------------------------
+
+/// When and where [`run_resumable`] persists its state.
+#[derive(Clone, Debug)]
+pub struct CheckpointPolicy {
+    /// Checkpoint file (written atomically: temp + rename).
+    pub path: std::path::PathBuf,
+    /// Save every this many steps (and always at the end).
+    pub every: usize,
+    /// Load `path` and continue from its iteration if it exists.
+    pub resume: bool,
+}
+
+/// [`run`] with periodic checkpointing and optional resume — the
+/// preempted-worker story: a run killed at any point and restarted with
+/// `resume: true` produces the **bit-identical** final iterate, memory
+/// and RNG stream (see `resume_matches_uninterrupted_run` below and the
+/// property suite). Mem-SGD methods only: the error memory is the state
+/// that must not be lost (dropping it silently changes the algorithm —
+/// every suppressed coordinate since step 0 lives there).
+pub fn run_resumable(
+    data: &Dataset,
+    cfg: &TrainConfig,
+    policy: &CheckpointPolicy,
+) -> Result<RunRecord> {
+    use crate::coordinator::checkpoint::Checkpoint;
+    use crate::optim::MemSgd;
+
+    let comp_spec = cfg
+        .method
+        .strip_prefix("memsgd:")
+        .ok_or_else(|| anyhow::anyhow!("run_resumable requires a memsgd:* method"))?;
+    let lam = cfg.lam.unwrap_or(1.0 / data.n() as f64);
+    let mut model = LogisticModel::new(data, lam);
+    let d = data.d();
+    let n = data.n();
+
+    let (mut opt, mut rng, mut avg) = if policy.resume && policy.path.exists() {
+        let ck = Checkpoint::load(&policy.path)?;
+        anyhow::ensure!(
+            ck.compressor_spec == comp_spec,
+            "checkpoint was written by '{}', config asks for '{}'",
+            ck.compressor_spec,
+            comp_spec
+        );
+        anyhow::ensure!(
+            ck.x.len() == d,
+            "checkpoint dimension {} != dataset dimension {d}",
+            ck.x.len()
+        );
+        ck.restore()?
+    } else {
+        let opt = MemSgd::new(vec![0.0f32; d], compress::from_spec(comp_spec)?);
+        let avg = cfg
+            .average
+            .then(|| WeightedAverage::new(d, cfg.schedule.averaging_shift().max(1.0)));
+        (opt, Prng::new(cfg.seed), avg)
+    };
+    let start_t = opt.t;
+    anyhow::ensure!(
+        start_t <= cfg.steps,
+        "checkpoint is at step {start_t}, past the configured budget {}",
+        cfg.steps
+    );
+
+    let eval_every = (cfg.steps / cfg.eval_points.max(1)).max(1);
+    let mut grad = vec![0.0f32; d];
+    let mut eval_x = vec![0.0f32; d];
+    let mut record = RunRecord {
+        method: format!("memsgd({comp_spec}) resumable"),
+        dataset: data.name.clone(),
+        schedule: cfg.schedule.describe(),
+        ..Default::default()
+    };
+    let started = Instant::now();
+    let mut eval = |t: usize, opt: &MemSgd, avg: &Option<WeightedAverage>,
+                    model: &mut LogisticModel, record: &mut RunRecord| {
+        match avg {
+            Some(a) if a.count() > 0 => a.write_average(&mut eval_x),
+            _ => eval_x.copy_from_slice(&opt.x),
+        }
+        let loss = model.full_loss(&eval_x);
+        record.curve.push(LossPoint { t, bits: opt.bits_sent, loss });
+    };
+
+    eval(start_t, &opt, &avg, &mut model, &mut record);
+    for t in start_t..cfg.steps {
+        let i = rng.below(n);
+        model.sample_grad(&opt.x, i, &mut grad);
+        opt.step(&grad, cfg.schedule.eta(t), &mut rng);
+        if let Some(a) = avg.as_mut() {
+            a.update(&opt.x);
+        }
+        if (t + 1) % eval_every == 0 || t + 1 == cfg.steps {
+            eval(t + 1, &opt, &avg, &mut model, &mut record);
+        }
+        if (t + 1) % policy.every.max(1) == 0 || t + 1 == cfg.steps {
+            Checkpoint::capture(&opt, comp_spec, &rng, avg.as_ref()).save(&policy.path)?;
+        }
+    }
+    record.steps = cfg.steps - start_t;
+    record.total_bits = opt.bits_sent;
+    record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+    record.extra.insert("resumed_from".into(), start_t as f64);
+    Ok(record)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn small_data() -> Dataset {
+        synthetic::epsilon_like(400, 32, 3)
+    }
+
+    fn base_cfg(method: &str, steps: usize) -> TrainConfig {
+        TrainConfig {
+            method: method.into(),
+            steps,
+            eval_points: 5,
+            seed: 7,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn memsgd_converges_on_small_problem() {
+        let data = small_data();
+        let cfg = base_cfg("memsgd:top_k:2", 4_000)
+            .with_paper_schedule(32, 400, 2.0, 1.0)
+            .unwrap();
+        let rec = run(&data, &cfg).unwrap();
+        let first = rec.curve.first().unwrap().loss;
+        let last = rec.final_loss();
+        assert!(last < first * 0.9, "no progress: {first} → {last}");
+        assert!(last < 0.66, "final loss {last}");
+        assert_eq!(rec.steps, 4_000);
+        assert!(rec.total_bits > 0);
+    }
+
+    #[test]
+    fn memsgd_top1_approaches_vanilla_sgd() {
+        // The paper's headline: Mem-SGD reaches the same loss as SGD.
+        let data = small_data();
+        let steps = 12_000;
+        let mk = |method: &str| {
+            run(
+                &data,
+                &base_cfg(method, steps)
+                    .with_paper_schedule(32, 400, 2.0, 1.0)
+                    .unwrap(),
+            )
+            .unwrap()
+        };
+        let mem = mk("memsgd:top_k:1");
+        let sgd = mk("sgd");
+        assert!(
+            mem.final_loss() < sgd.final_loss() + 0.03,
+            "memsgd {} vs sgd {}",
+            mem.final_loss(),
+            sgd.final_loss()
+        );
+        // ...while transmitting far fewer bits (d=32 → ≥ 10× here).
+        assert!(mem.total_bits * 10 < sgd.total_bits);
+    }
+
+    #[test]
+    fn unbiased_rand_k_is_worse_than_memsgd_at_equal_k() {
+        // Section 2.2's variance blow-up: the unbiased d/k-scaled variant
+        // with k=1 must trail Mem-SGD top-1 at equal iteration count.
+        let data = small_data();
+        let steps = 6_000;
+        let mem = run(
+            &data,
+            &base_cfg("memsgd:top_k:1", steps)
+                .with_paper_schedule(32, 400, 2.0, 1.0)
+                .unwrap(),
+        )
+        .unwrap();
+        let unb = run(
+            &data,
+            &base_cfg("sgd:unbiased_rand_k:1", steps)
+                .with_paper_schedule(32, 400, 2.0, 1.0)
+                .unwrap(),
+        )
+        .unwrap();
+        assert!(
+            mem.final_loss() < unb.final_loss(),
+            "memsgd {} vs unbiased {}",
+            mem.final_loss(),
+            unb.final_loss()
+        );
+    }
+
+    #[test]
+    fn curve_is_recorded_on_schedule() {
+        let data = small_data();
+        let cfg = base_cfg("sgd", 1_000);
+        let rec = run(&data, &cfg).unwrap();
+        // initial point + 5 evals
+        assert_eq!(rec.curve.len(), 6);
+        assert_eq!(rec.curve[0].t, 0);
+        assert_eq!(rec.curve.last().unwrap().t, 1_000);
+        // bits monotone non-decreasing along the curve
+        assert!(rec.curve.windows(2).all(|w| w[0].bits <= w[1].bits));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let data = small_data();
+        let cfg = base_cfg("memsgd:rand_k:2", 500);
+        let a = run(&data, &cfg).unwrap();
+        let b = run(&data, &cfg).unwrap();
+        assert_eq!(a.final_loss(), b.final_loss());
+        let mut c = cfg.clone();
+        c.seed = 8;
+        let cr = run(&data, &c).unwrap();
+        assert_ne!(a.final_loss(), cr.final_loss());
+    }
+
+    #[test]
+    fn averaging_off_uses_last_iterate() {
+        let data = small_data();
+        let mut cfg = base_cfg("sgd", 800);
+        cfg.average = false;
+        let rec = run(&data, &cfg).unwrap();
+        assert!(rec.final_loss().is_finite());
+    }
+
+    #[test]
+    fn paper_schedule_sets_shift_from_contraction() {
+        let cfg = base_cfg("memsgd:top_k:2", 100)
+            .with_paper_schedule(64, 1000, 2.0, 1.0)
+            .unwrap();
+        match cfg.schedule {
+            Schedule::InvT { shift, .. } => assert_eq!(shift, 32.0), // d/k = 64/2
+            _ => panic!("expected InvT"),
+        }
+    }
+
+    #[test]
+    fn resume_matches_uninterrupted_run() {
+        // Straight 2000-step run vs 900 steps + kill + resume for the
+        // rest: bit-identical final loss, bits, and (via the averager)
+        // evaluation point.
+        let data = small_data();
+        let dir = std::env::temp_dir().join("memsgd_resumable_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let straight_path = dir.join("straight.ck");
+        let split_path = dir.join("split.ck");
+        std::fs::remove_file(&straight_path).ok();
+        std::fs::remove_file(&split_path).ok();
+
+        let cfg = |steps: usize| base_cfg("memsgd:top_k:2", steps);
+        let straight = run_resumable(
+            &data,
+            &cfg(2_000),
+            &CheckpointPolicy { path: straight_path.clone(), every: 10_000, resume: false },
+        )
+        .unwrap();
+
+        // Phase 1: budget 900, checkpoint at the end.
+        run_resumable(
+            &data,
+            &cfg(900),
+            &CheckpointPolicy { path: split_path.clone(), every: 300, resume: false },
+        )
+        .unwrap();
+        // Phase 2: resume to the full 2000-step budget.
+        let resumed = run_resumable(
+            &data,
+            &cfg(2_000),
+            &CheckpointPolicy { path: split_path.clone(), every: 10_000, resume: true },
+        )
+        .unwrap();
+
+        assert_eq!(resumed.extra["resumed_from"], 900.0);
+        assert_eq!(resumed.steps, 1_100);
+        assert_eq!(resumed.final_loss(), straight.final_loss());
+        assert_eq!(resumed.total_bits, straight.total_bits);
+        std::fs::remove_file(&straight_path).ok();
+        std::fs::remove_file(&split_path).ok();
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_spec_and_dimension() {
+        let data = small_data();
+        let dir = std::env::temp_dir().join("memsgd_resumable_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.ck");
+        std::fs::remove_file(&path).ok();
+        run_resumable(
+            &data,
+            &base_cfg("memsgd:top_k:2", 200),
+            &CheckpointPolicy { path: path.clone(), every: 100, resume: false },
+        )
+        .unwrap();
+        // Different compressor: must refuse.
+        let err = run_resumable(
+            &data,
+            &base_cfg("memsgd:rand_k:2", 400),
+            &CheckpointPolicy { path: path.clone(), every: 100, resume: true },
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("top_k:2"), "{err:#}");
+        // Different dimension: must refuse.
+        let other = synthetic::epsilon_like(100, 16, 4);
+        assert!(run_resumable(
+            &other,
+            &base_cfg("memsgd:top_k:2", 400),
+            &CheckpointPolicy { path: path.clone(), every: 100, resume: true },
+        )
+        .is_err());
+        // Budget already consumed: must refuse.
+        assert!(run_resumable(
+            &data,
+            &base_cfg("memsgd:top_k:2", 100),
+            &CheckpointPolicy { path: path.clone(), every: 100, resume: true },
+        )
+        .is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn non_memsgd_method_is_rejected() {
+        let data = small_data();
+        let policy = CheckpointPolicy {
+            path: std::env::temp_dir().join("never_written.ck"),
+            every: 100,
+            resume: false,
+        };
+        assert!(run_resumable(&data, &base_cfg("sgd", 100), &policy).is_err());
+    }
+}

@@ -1,0 +1,164 @@
+//! LIBSVM/SVMlight text format parser.
+//!
+//! The paper's datasets (*epsilon_normalized*, *rcv1_test.binary*) ship
+//! in this format; when the real files are available they can be loaded
+//! with [`load`] and passed to the same drivers as the synthetic
+//! surrogates. Format, one sample per line:
+//!
+//! ```text
+//! <label> <index>:<value> <index>:<value> ...
+//! ```
+//!
+//! Indices are 1-based in the file and converted to 0-based; labels are
+//! mapped to {−1, +1} (`0` and `-1` both map to −1).
+
+use std::io::BufRead;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Dataset;
+
+/// Parse a LIBSVM file into a CSR [`Dataset`]. `dim` forces the feature
+/// dimension (use the documented d of the dataset); pass `None` to infer
+/// it as the maximum index seen.
+pub fn load(path: impl AsRef<Path>, dim: Option<usize>) -> Result<Dataset> {
+    let path = path.as_ref();
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("cannot open LIBSVM file {}", path.display()))?;
+    let reader = std::io::BufReader::new(file);
+    let name = path
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "libsvm".into());
+    parse(reader, dim, name)
+}
+
+/// Parse from any reader (unit tests feed strings).
+pub fn parse<R: BufRead>(reader: R, dim: Option<usize>, name: String) -> Result<Dataset> {
+    let mut indptr = vec![0usize];
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<f32> = Vec::new();
+    let mut labels: Vec<f32> = Vec::new();
+    let mut max_index = 0usize;
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label_tok = parts.next().unwrap();
+        let label: f32 = label_tok
+            .parse::<f32>()
+            .with_context(|| format!("line {}: bad label '{label_tok}'", lineno + 1))?;
+        let label = if label > 0.0 { 1.0 } else { -1.0 };
+
+        let mut last_index: Option<usize> = None;
+        for tok in parts {
+            let (idx_s, val_s) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: bad pair '{tok}'", lineno + 1))?;
+            let idx1: usize = idx_s
+                .parse()
+                .with_context(|| format!("line {}: bad index '{idx_s}'", lineno + 1))?;
+            if idx1 == 0 {
+                bail!("line {}: LIBSVM indices are 1-based, found 0", lineno + 1);
+            }
+            let idx = idx1 - 1;
+            if let Some(prev) = last_index {
+                if idx <= prev {
+                    bail!("line {}: indices must be strictly increasing", lineno + 1);
+                }
+            }
+            last_index = Some(idx);
+            let val: f32 = val_s
+                .parse()
+                .with_context(|| format!("line {}: bad value '{val_s}'", lineno + 1))?;
+            max_index = max_index.max(idx);
+            indices.push(idx as u32);
+            values.push(val);
+        }
+        labels.push(label);
+        indptr.push(indices.len());
+    }
+    if labels.is_empty() {
+        bail!("empty LIBSVM input");
+    }
+    let inferred = max_index + 1;
+    let d = match dim {
+        Some(d) => {
+            if d < inferred {
+                bail!("given dim {d} is smaller than max index {inferred}");
+            }
+            d
+        }
+        None => inferred,
+    };
+    Ok(Dataset::csr(name, indptr, indices, values, d, labels))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::RowView;
+    use std::io::Cursor;
+
+    const SAMPLE: &str = "\
++1 1:0.5 3:1.5
+-1 2:2.0
+0 1:1.0 2:1.0 4:1.0  # trailing comment
+";
+
+    #[test]
+    fn parses_basic_file() {
+        let ds = parse(Cursor::new(SAMPLE), None, "t".into()).unwrap();
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.d(), 4);
+        assert_eq!(ds.labels, vec![1.0, -1.0, -1.0]); // 0 → −1
+        match ds.row(0) {
+            RowView::Sparse { idx, val } => {
+                assert_eq!(idx, &[0, 2]);
+                assert_eq!(val, &[0.5, 1.5]);
+            }
+            _ => panic!(),
+        }
+        assert_eq!(ds.row_nnz(2), 3);
+    }
+
+    #[test]
+    fn forced_dimension() {
+        let ds = parse(Cursor::new(SAMPLE), Some(100), "t".into()).unwrap();
+        assert_eq!(ds.d(), 100);
+        assert!(parse(Cursor::new(SAMPLE), Some(2), "t".into()).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        assert!(parse(Cursor::new("x 1:1.0\n"), None, "t".into()).is_err());
+        assert!(parse(Cursor::new("+1 0:1.0\n"), None, "t".into()).is_err()); // 0-based index
+        assert!(parse(Cursor::new("+1 5:1.0 2:1.0\n"), None, "t".into()).is_err()); // not increasing
+        assert!(parse(Cursor::new("+1 a:1.0\n"), None, "t".into()).is_err());
+        assert!(parse(Cursor::new("+1 1:zz\n"), None, "t".into()).is_err());
+        assert!(parse(Cursor::new(""), None, "t".into()).is_err());
+    }
+
+    #[test]
+    fn blank_lines_and_comments_skipped() {
+        let src = "\n# full comment\n+1 1:1.0\n\n-1 2:1.0\n";
+        let ds = parse(Cursor::new(src), None, "t".into()).unwrap();
+        assert_eq!(ds.n(), 2);
+    }
+
+    #[test]
+    fn load_from_tempfile() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("memsgd_libsvm_test.txt");
+        std::fs::write(&path, SAMPLE).unwrap();
+        let ds = load(&path, None).unwrap();
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.name, "memsgd_libsvm_test.txt");
+        std::fs::remove_file(&path).ok();
+    }
+}

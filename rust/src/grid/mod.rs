@@ -1,0 +1,157 @@
+//! Learning-rate grid search (Figure 5 / Appendix B).
+//!
+//! For the QSGD comparison the paper fixes the practical schedule
+//! `η_t = γ₀/(1 + γ₀λt)` and grid-searches `γ₀` per method × dataset on
+//! a training subset. [`search`] reproduces that: run every candidate
+//! for a short budget, score by final weighted-average loss, return the
+//! per-method winner (which `memsgd figure3` then consumes).
+
+use anyhow::Result;
+
+use crate::coordinator::train::{self, TrainConfig};
+use crate::data::Dataset;
+use crate::metrics::RunRecord;
+use crate::optim::Schedule;
+
+/// One grid-search cell.
+#[derive(Clone, Debug)]
+pub struct GridCell {
+    pub method: String,
+    pub gamma0: f64,
+    pub final_loss: f64,
+    pub record: RunRecord,
+}
+
+/// Result of a per-method sweep.
+#[derive(Clone, Debug)]
+pub struct GridResult {
+    pub cells: Vec<GridCell>,
+}
+
+impl GridResult {
+    /// The best γ₀ for `method` (lowest final loss).
+    pub fn best(&self, method: &str) -> Option<&GridCell> {
+        self.cells
+            .iter()
+            .filter(|c| c.method == method)
+            .min_by(|a, b| a.final_loss.partial_cmp(&b.final_loss).unwrap())
+    }
+
+    /// All methods present.
+    pub fn methods(&self) -> Vec<String> {
+        let mut out: Vec<String> = self.cells.iter().map(|c| c.method.clone()).collect();
+        out.dedup();
+        out
+    }
+
+    /// Aligned table of every cell (γ₀ columns per method row).
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<28} {:>10} {:>12}   {}\n",
+            "method", "gamma0", "final loss", "best?"
+        ));
+        for c in &self.cells {
+            let best = self
+                .best(&c.method)
+                .map(|b| (b.gamma0 - c.gamma0).abs() < 1e-12)
+                .unwrap_or(false);
+            out.push_str(&format!(
+                "{:<28} {:>10} {:>12.6}   {}\n",
+                c.method,
+                c.gamma0,
+                c.final_loss,
+                if best { "<-- best" } else { "" }
+            ));
+        }
+        out
+    }
+}
+
+/// Grid-search `gamma0` for each method with the Bottou schedule.
+///
+/// `steps` is the per-candidate training budget (the paper tunes on a
+/// subset; callers pass a fraction of the full run).
+pub fn search(
+    data: &Dataset,
+    methods: &[String],
+    gamma0_grid: &[f64],
+    steps: usize,
+    seed: u64,
+) -> Result<GridResult> {
+    let lam = 1.0 / data.n() as f64;
+    let mut cells = Vec::new();
+    for method in methods {
+        for &gamma0 in gamma0_grid {
+            let cfg = TrainConfig {
+                method: method.clone(),
+                schedule: Schedule::bottou(gamma0, lam),
+                steps,
+                eval_points: 4,
+                average: true,
+                seed,
+                lam: Some(lam),
+            };
+            let record = train::run(data, &cfg)?;
+            let final_loss = record.final_loss();
+            cells.push(GridCell {
+                method: method.clone(),
+                gamma0,
+                final_loss,
+                record,
+            });
+        }
+    }
+    Ok(GridResult { cells })
+}
+
+/// The paper's default γ₀ grid (log-spaced decades around 1).
+pub fn default_gamma0_grid() -> Vec<f64> {
+    vec![0.01, 0.03, 0.1, 0.3, 1.0, 3.0, 10.0, 30.0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn finds_a_sane_gamma0() {
+        let data = synthetic::epsilon_like(300, 16, 4);
+        let methods = vec!["memsgd:top_k:1".to_string(), "sgd".to_string()];
+        let grid = vec![0.001, 1.0, 1000.0];
+        let res = search(&data, &methods, &grid, 1_500, 3).unwrap();
+        assert_eq!(res.cells.len(), 6);
+        for m in &methods {
+            let best = res.best(m).unwrap();
+            // The absurd extremes must not win: 0.001 barely moves,
+            // 1000 blows up.
+            assert_eq!(best.gamma0, 1.0, "method {m} picked {}", best.gamma0);
+        }
+        let t = res.table();
+        assert!(t.contains("<-- best"));
+        assert!(t.contains("memsgd(top_1)") || t.contains("memsgd:top_k:1"));
+    }
+
+    #[test]
+    fn methods_listing_dedups() {
+        let data = synthetic::epsilon_like(100, 8, 5);
+        let res = search(
+            &data,
+            &["sgd".to_string()],
+            &[0.1, 1.0],
+            200,
+            1,
+        )
+        .unwrap();
+        assert_eq!(res.methods(), vec!["sgd".to_string()]);
+        assert!(res.best("nonexistent").is_none());
+    }
+
+    #[test]
+    fn default_grid_is_log_spaced() {
+        let g = default_gamma0_grid();
+        assert!(g.len() >= 6);
+        assert!(g.windows(2).all(|w| w[1] > w[0]));
+    }
+}

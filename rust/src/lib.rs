@@ -1,0 +1,47 @@
+//! # memsgd — Sparsified SGD with Memory
+//!
+//! A production-quality reproduction of *"Sparsified SGD with Memory"*
+//! (Stich, Cordonnier, Jaggi — NIPS 2018) as a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the distributed-training coordinator:
+//!   gradient compression (top-k / rand-k / ultra-sparsification / QSGD),
+//!   error-feedback memory, worker orchestration, stepsize schedules,
+//!   weighted iterate averaging, and communication accounting.
+//! * **Layer 2 (python/compile/model.py)** — JAX forward/backward graphs
+//!   (logistic regression, small transformer) lowered once to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot spots, verified against pure-jnp oracles, lowered inside the same
+//!   HLO artifacts.
+//!
+//! Python never runs on the training hot path: the Rust binary loads the
+//! AOT artifacts through PJRT ([`runtime`]) and drives every experiment in
+//! the paper ([`coordinator`], [`sim`], [`grid`]).
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`compress`] | k-contraction operators + QSGD baseline + exact Elias wire encodings |
+//! | [`optim`] | Mem-SGD (Alg. 1), SGD baselines, stepsizes, averaging, Theorem-2.4 bounds |
+//! | [`models`] | logistic loss/gradient backends (native + PJRT) |
+//! | [`data`] | dense/CSR datasets, synthetic generators, LIBSVM parser |
+//! | [`coordinator`] | sequential driver, Algorithm 2 shared-memory parallel, sync/async parameter server, checkpoints |
+//! | [`runtime`] | PJRT artifact registry: load HLO text, compile, execute |
+//! | [`sim`] | discrete-event multicore model (Figure 4) + network cost model (Figure 6) |
+//! | [`grid`] | learning-rate grid search (Figure 5) |
+//! | [`experiments`] | one driver per paper table/figure + extensions |
+//! | [`metrics`] | run records, JSON/CSV emission |
+//! | [`util`] | in-tree PRNG / JSON / CLI / bench / property-check |
+
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod grid;
+pub mod metrics;
+pub mod models;
+pub mod optim;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,255 @@
+//! Run records: what every experiment driver emits.
+//!
+//! A [`RunRecord`] carries the loss curve (indexed by iteration *and*
+//! cumulative transmitted bits — the two x-axes of Figures 2 and 3),
+//! configuration provenance, and wall-clock. Records serialize to JSON
+//! (machine consumption / EXPERIMENTS.md tooling) and to aligned text
+//! tables (human consumption in the CLI).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One point of a loss curve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LossPoint {
+    /// Iteration index (stochastic-gradient count).
+    pub t: usize,
+    /// Cumulative transmitted bits up to this point.
+    pub bits: u64,
+    /// Full objective `f(x̄_t)` (or `f(x_t)` when averaging is off).
+    pub loss: f64,
+}
+
+/// A complete experiment run.
+#[derive(Clone, Debug, Default)]
+pub struct RunRecord {
+    /// Method name, e.g. `memsgd(top_1)` or `sgd_qsgd_4bit`.
+    pub method: String,
+    /// Dataset provenance, e.g. `epsilon-like(n=20000,d=2000)`.
+    pub dataset: String,
+    /// Stepsize schedule description.
+    pub schedule: String,
+    /// Loss curve.
+    pub curve: Vec<LossPoint>,
+    /// Total iterations executed.
+    pub steps: usize,
+    /// Total transmitted bits.
+    pub total_bits: u64,
+    /// Wall-clock milliseconds.
+    pub elapsed_ms: f64,
+    /// Free-form scalar extras (e.g. `workers`, `collisions`).
+    pub extra: BTreeMap<String, f64>,
+}
+
+impl RunRecord {
+    /// Last recorded loss (`f64::NAN` if the curve is empty).
+    pub fn final_loss(&self) -> f64 {
+        self.curve.last().map(|p| p.loss).unwrap_or(f64::NAN)
+    }
+
+    /// Smallest recorded loss.
+    pub fn best_loss(&self) -> f64 {
+        self.curve
+            .iter()
+            .map(|p| p.loss)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// First iteration at which the loss reaches `target`, if any.
+    pub fn iterations_to(&self, target: f64) -> Option<usize> {
+        self.curve.iter().find(|p| p.loss <= target).map(|p| p.t)
+    }
+
+    /// Bits transmitted before the loss reaches `target`, if ever.
+    pub fn bits_to(&self, target: f64) -> Option<u64> {
+        self.curve.iter().find(|p| p.loss <= target).map(|p| p.bits)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(&self.method)),
+            ("dataset", Json::str(&self.dataset)),
+            ("schedule", Json::str(&self.schedule)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("total_bits", Json::Num(self.total_bits as f64)),
+            ("elapsed_ms", Json::Num(self.elapsed_ms)),
+            (
+                "extra",
+                Json::Obj(
+                    self.extra
+                        .iter()
+                        .map(|(k, &v)| (k.clone(), Json::Num(v)))
+                        .collect(),
+                ),
+            ),
+            (
+                "curve",
+                Json::arr(self.curve.iter().map(|p| {
+                    Json::obj(vec![
+                        ("t", Json::Num(p.t as f64)),
+                        ("bits", Json::Num(p.bits as f64)),
+                        ("loss", Json::Num(p.loss)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<RunRecord> {
+        let mut rec = RunRecord {
+            method: v.req("method")?.as_str()?.to_string(),
+            dataset: v.req("dataset")?.as_str()?.to_string(),
+            schedule: v.req("schedule")?.as_str()?.to_string(),
+            steps: v.req("steps")?.as_usize()?,
+            total_bits: v.req("total_bits")?.as_f64()? as u64,
+            elapsed_ms: v.req("elapsed_ms")?.as_f64()?,
+            ..Default::default()
+        };
+        if let Some(Json::Obj(extra)) = v.get("extra") {
+            for (k, x) in extra {
+                rec.extra.insert(k.clone(), x.as_f64()?);
+            }
+        }
+        for p in v.req("curve")?.as_arr()? {
+            rec.curve.push(LossPoint {
+                t: p.req("t")?.as_usize()?,
+                bits: p.req("bits")?.as_f64()? as u64,
+                loss: p.req("loss")?.as_f64()?,
+            });
+        }
+        Ok(rec)
+    }
+}
+
+/// Write a set of records as a pretty JSON document.
+pub fn write_records(path: impl AsRef<Path>, records: &[RunRecord]) -> Result<()> {
+    let doc = Json::obj(vec![
+        ("format", Json::Num(1.0)),
+        ("records", Json::arr(records.iter().map(|r| r.to_json()))),
+    ]);
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    std::fs::write(path.as_ref(), doc.to_string_pretty())
+        .with_context(|| format!("writing {}", path.as_ref().display()))
+}
+
+/// Read records back (used by the report tooling and tests).
+pub fn read_records(path: impl AsRef<Path>) -> Result<Vec<RunRecord>> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    let doc = Json::parse(&text)?;
+    doc.req("records")?
+        .as_arr()?
+        .iter()
+        .map(RunRecord::from_json)
+        .collect()
+}
+
+/// Render records as an aligned comparison table (one row per record):
+/// method, final loss, best loss, total MB transmitted.
+pub fn summary_table(records: &[RunRecord]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<36} {:>12} {:>12} {:>14} {:>10}\n",
+        "method", "final loss", "best loss", "bits sent", "steps"
+    ));
+    for r in records {
+        out.push_str(&format!(
+            "{:<36} {:>12.6} {:>12.6} {:>14} {:>10}\n",
+            r.method,
+            r.final_loss(),
+            r.best_loss(),
+            fmt_bits(r.total_bits),
+            r.steps
+        ));
+    }
+    out
+}
+
+/// Human-readable bit counts.
+pub fn fmt_bits(bits: u64) -> String {
+    let bytes = bits as f64 / 8.0;
+    if bytes < 1e3 {
+        format!("{bytes:.0}B")
+    } else if bytes < 1e6 {
+        format!("{:.1}KB", bytes / 1e3)
+    } else if bytes < 1e9 {
+        format!("{:.1}MB", bytes / 1e6)
+    } else {
+        format!("{:.2}GB", bytes / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunRecord {
+        RunRecord {
+            method: "memsgd(top_1)".into(),
+            dataset: "epsilon-like".into(),
+            schedule: "inv_t".into(),
+            curve: vec![
+                LossPoint { t: 0, bits: 0, loss: 0.693 },
+                LossPoint { t: 100, bits: 4300, loss: 0.5 },
+                LossPoint { t: 200, bits: 8600, loss: 0.42 },
+            ],
+            steps: 200,
+            total_bits: 8600,
+            elapsed_ms: 12.5,
+            extra: [("workers".to_string(), 4.0)].into_iter().collect(),
+        }
+    }
+
+    #[test]
+    fn accessors() {
+        let r = sample();
+        assert_eq!(r.final_loss(), 0.42);
+        assert_eq!(r.best_loss(), 0.42);
+        assert_eq!(r.iterations_to(0.5), Some(100));
+        assert_eq!(r.bits_to(0.5), Some(4300));
+        assert_eq!(r.iterations_to(0.1), None);
+        assert!(RunRecord::default().final_loss().is_nan());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let r = sample();
+        let j = r.to_json();
+        let r2 = RunRecord::from_json(&j).unwrap();
+        assert_eq!(r.method, r2.method);
+        assert_eq!(r.curve, r2.curve);
+        assert_eq!(r.total_bits, r2.total_bits);
+        assert_eq!(r.extra, r2.extra);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let path = std::env::temp_dir().join("memsgd_records_test.json");
+        write_records(&path, &[sample(), sample()]).unwrap();
+        let back = read_records(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].method, "memsgd(top_1)");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn table_contains_method_names() {
+        let t = summary_table(&[sample()]);
+        assert!(t.contains("memsgd(top_1)"));
+        assert!(t.contains("final loss"));
+    }
+
+    #[test]
+    fn fmt_bits_units() {
+        assert_eq!(fmt_bits(80), "10B");
+        assert_eq!(fmt_bits(8_000 * 10), "10.0KB");
+        assert_eq!(fmt_bits(80_000_000), "10.0MB");
+        assert_eq!(fmt_bits(80_000_000_000), "10.00GB");
+    }
+}

@@ -1,0 +1,177 @@
+//! Quadratically-weighted iterate averaging (Theorem 2.4).
+//!
+//! The convergence guarantee holds for the weighted average
+//! `x̄_T = (1/S_T) Σ w_t x_t` with `w_t = (a + t)²` and
+//! `S_T = Σ w_t`. Storing all iterates is impossible at d = 47k and
+//! T = 10⁶, so the average is maintained **streaming**:
+//!
+//! `x̄ ← x̄ · (S_{t}/S_{t+1}) + x_t · (w_t/S_{t+1})`.
+//!
+//! The accumulator is f64 to keep the long sum well-conditioned.
+
+/// Streaming weighted average with weights `w_t = (a + t)²`.
+#[derive(Clone, Debug)]
+pub struct WeightedAverage {
+    shift: f64,
+    acc: Vec<f64>,
+    sum_w: f64,
+    t: usize,
+}
+
+impl WeightedAverage {
+    /// New averager over dimension `dim` with shift `a` (Theorem 2.4 uses
+    /// the same `a` as the stepsize schedule).
+    pub fn new(dim: usize, shift: f64) -> Self {
+        assert!(shift >= 1.0, "averaging shift must be >= 1, got {shift}");
+        WeightedAverage {
+            shift,
+            acc: vec![0.0; dim],
+            sum_w: 0.0,
+            t: 0,
+        }
+    }
+
+    /// Weight applied to iterate `t`.
+    #[inline]
+    pub fn weight(&self, t: usize) -> f64 {
+        let w = self.shift + t as f64;
+        w * w
+    }
+
+    /// Fold in the iterate of step `t` (must be called with consecutive
+    /// t = 0, 1, 2, ... — asserted in debug builds).
+    pub fn update(&mut self, x: &[f32]) {
+        debug_assert_eq!(x.len(), self.acc.len());
+        let w = self.weight(self.t);
+        self.sum_w += w;
+        let scale_old = 1.0 - w / self.sum_w;
+        let scale_new = w / self.sum_w;
+        for (a, &xi) in self.acc.iter_mut().zip(x) {
+            *a = *a * scale_old + xi as f64 * scale_new;
+        }
+        self.t += 1;
+    }
+
+    /// Number of folded iterates.
+    pub fn count(&self) -> usize {
+        self.t
+    }
+
+    /// Total weight `S_T`.
+    pub fn total_weight(&self) -> f64 {
+        self.sum_w
+    }
+
+    /// Current average as f32 (empty-average returns zeros).
+    pub fn average(&self) -> Vec<f32> {
+        self.acc.iter().map(|&a| a as f32).collect()
+    }
+
+    /// Current average written into `out`.
+    pub fn write_average(&self, out: &mut [f32]) {
+        for (o, &a) in out.iter_mut().zip(&self.acc) {
+            *o = a as f32;
+        }
+    }
+
+    /// Raw state `(shift, acc, sum_w, t)`, for checkpointing.
+    pub fn state(&self) -> (f64, &[f64], f64, usize) {
+        (self.shift, &self.acc, self.sum_w, self.t)
+    }
+
+    /// Rebuild from a checkpointed state (inverse of [`Self::state`]).
+    pub fn from_state(shift: f64, acc: Vec<f64>, sum_w: f64, t: usize) -> Self {
+        assert!(shift >= 1.0 && sum_w >= 0.0);
+        WeightedAverage {
+            shift,
+            acc,
+            sum_w,
+            t,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    /// Brute-force reference: store everything, average at the end.
+    fn brute(iterates: &[Vec<f32>], shift: f64) -> Vec<f64> {
+        let d = iterates[0].len();
+        let mut acc = vec![0.0f64; d];
+        let mut sum_w = 0.0;
+        for (t, x) in iterates.iter().enumerate() {
+            let w = (shift + t as f64).powi(2);
+            sum_w += w;
+            for (a, &xi) in acc.iter_mut().zip(x) {
+                *a += w * xi as f64;
+            }
+        }
+        acc.iter().map(|a| a / sum_w).collect()
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        let mut rng = Prng::new(4);
+        for &shift in &[1.0, 10.0, 2000.0] {
+            let d = 17;
+            let iterates: Vec<Vec<f32>> = (0..57)
+                .map(|_| (0..d).map(|_| rng.normal_f32()).collect())
+                .collect();
+            let mut avg = WeightedAverage::new(d, shift);
+            for x in &iterates {
+                avg.update(x);
+            }
+            let got = avg.average();
+            let want = brute(&iterates, shift);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((*g as f64 - w).abs() < 1e-5, "shift={shift}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_iterate_is_identity() {
+        let mut avg = WeightedAverage::new(3, 5.0);
+        avg.update(&[1.0, -2.0, 3.0]);
+        assert_eq!(avg.average(), vec![1.0, -2.0, 3.0]);
+        assert_eq!(avg.count(), 1);
+    }
+
+    #[test]
+    fn recent_iterates_weigh_more() {
+        // With quadratic weights, later iterates dominate: average of
+        // 0,0,...,0,1 must exceed 1/T.
+        let t_total = 100;
+        let mut avg = WeightedAverage::new(1, 1.0);
+        for t in 0..t_total {
+            let v = if t == t_total - 1 { 1.0 } else { 0.0 };
+            avg.update(&[v]);
+        }
+        let a = avg.average()[0];
+        assert!(a > 1.0 / t_total as f32 * 2.0, "a={a}");
+    }
+
+    #[test]
+    fn total_weight_matches_lemma_3_3() {
+        // S_T = T/6 (2T² + 6aT − 3T + 6a² − 6a + 1) ≥ T³/3.
+        let a = 7.0;
+        let t_total = 50usize;
+        let mut avg = WeightedAverage::new(1, a);
+        for _ in 0..t_total {
+            avg.update(&[0.0]);
+        }
+        let t = t_total as f64;
+        let closed = t / 6.0 * (2.0 * t * t + 6.0 * a * t - 3.0 * t + 6.0 * a * a - 6.0 * a + 1.0);
+        assert!((avg.total_weight() - closed).abs() / closed < 1e-12);
+        assert!(avg.total_weight() >= t * t * t / 3.0);
+    }
+
+    #[test]
+    fn empty_average_is_zero() {
+        let avg = WeightedAverage::new(4, 1.0);
+        assert_eq!(avg.average(), vec![0.0; 4]);
+        assert_eq!(avg.total_weight(), 0.0);
+    }
+}

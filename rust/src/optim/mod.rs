@@ -1,0 +1,15 @@
+//! Optimizers: Mem-SGD (Algorithm 1), vanilla/unbiased-sparsified SGD
+//! (Section 2.2 baselines), stepsize schedules (Table 2), and the
+//! quadratically-weighted iterate averaging of Theorem 2.4.
+
+pub mod averaging;
+pub mod memsgd;
+pub mod schedule;
+pub mod sgd;
+pub mod theory;
+
+pub use averaging::WeightedAverage;
+pub use memsgd::MemSgd;
+pub use schedule::Schedule;
+pub use sgd::Sgd;
+pub use theory::TheoryParams;

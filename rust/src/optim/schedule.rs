@@ -1,0 +1,146 @@
+//! Stepsize schedules.
+//!
+//! * [`Schedule::InvT`] — the theoretical rate of Theorem 2.4 / Table 2:
+//!   `η_t = γ / (λ·(t + a))` with shift `a`. The paper sets `γ = 2` and
+//!   `a = d/k` (epsilon) or `a = 10·d/k` (RCV1); setting `a = 1` is the
+//!   "without delay" ablation of Figure 2.
+//! * [`Schedule::Bottou`] — `η_t = γ₀ / (1 + γ₀·λ·t)`, the practical rate
+//!   used for the QSGD comparison (Section 4.3, tuned via Figure 5).
+//! * [`Schedule::Const`] — constant rate, used by the multicore
+//!   experiment on epsilon (Section 4.4, `η ≡ 0.05`).
+
+/// A stepsize schedule `t ↦ η_t`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Schedule {
+    /// `η_t = gamma / (lambda * (t + shift))`.
+    InvT { gamma: f64, lambda: f64, shift: f64 },
+    /// `η_t = gamma0 / (1 + gamma0 * lambda * t)`.
+    Bottou { gamma0: f64, lambda: f64 },
+    /// `η_t = eta`.
+    Const { eta: f64 },
+}
+
+impl Schedule {
+    /// Theoretical schedule of Table 2.
+    pub fn inv_t(gamma: f64, lambda: f64, shift: f64) -> Schedule {
+        assert!(gamma > 0.0 && lambda > 0.0 && shift > 0.0);
+        Schedule::InvT {
+            gamma,
+            lambda,
+            shift,
+        }
+    }
+
+    /// Bottou's practical schedule (Section 4.3).
+    pub fn bottou(gamma0: f64, lambda: f64) -> Schedule {
+        assert!(gamma0 > 0.0 && lambda > 0.0);
+        Schedule::Bottou { gamma0, lambda }
+    }
+
+    /// Constant schedule (Section 4.4 multicore on epsilon).
+    pub fn constant(eta: f64) -> Schedule {
+        assert!(eta > 0.0);
+        Schedule::Const { eta }
+    }
+
+    /// The paper's recommended shift for a k-contraction on a
+    /// d-dimensional problem: `a = multiplier · d/k` (Remark 2.5 /
+    /// Table 2: multiplier 1 for epsilon, 10 for RCV1).
+    pub fn paper_shift(d: usize, k: f64, multiplier: f64) -> f64 {
+        (multiplier * d as f64 / k).max(1.0)
+    }
+
+    /// Stepsize at iteration `t` (0-based).
+    #[inline]
+    pub fn eta(&self, t: usize) -> f64 {
+        match *self {
+            Schedule::InvT {
+                gamma,
+                lambda,
+                shift,
+            } => gamma / (lambda * (t as f64 + shift)),
+            Schedule::Bottou { gamma0, lambda } => gamma0 / (1.0 + gamma0 * lambda * t as f64),
+            Schedule::Const { eta } => eta,
+        }
+    }
+
+    /// The averaging shift associated with this schedule (`a` for InvT,
+    /// 1.0 otherwise) — the weights of Theorem 2.4 are `w_t = (a + t)²`.
+    pub fn averaging_shift(&self) -> f64 {
+        match *self {
+            Schedule::InvT { shift, .. } => shift,
+            _ => 1.0,
+        }
+    }
+
+    /// Spec string for metric records.
+    pub fn describe(&self) -> String {
+        match *self {
+            Schedule::InvT {
+                gamma,
+                lambda,
+                shift,
+            } => format!("inv_t(gamma={gamma},lambda={lambda},a={shift})"),
+            Schedule::Bottou { gamma0, lambda } => {
+                format!("bottou(gamma0={gamma0},lambda={lambda})")
+            }
+            Schedule::Const { eta } => format!("const(eta={eta})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inv_t_values() {
+        // Table 2 for epsilon with k=1: gamma=2, lambda=1/n, a=d/k=2000.
+        let s = Schedule::inv_t(2.0, 1.0 / 400_000.0, 2000.0);
+        let eta0 = s.eta(0);
+        assert!((eta0 - 2.0 * 400_000.0 / 2000.0).abs() < 1e-9);
+        // decreasing
+        assert!(s.eta(1) < eta0);
+        assert!(s.eta(1000) < s.eta(100));
+    }
+
+    #[test]
+    fn bottou_starts_at_gamma0() {
+        let s = Schedule::bottou(0.1, 0.01);
+        assert_eq!(s.eta(0), 0.1);
+        assert!(s.eta(10) < 0.1);
+        // η_t = γ0/(1+γ0 λ t): at t = 1/(γ0 λ) it's halved.
+        let t_half = (1.0 / (0.1 * 0.01)) as usize;
+        assert!((s.eta(t_half) - 0.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn const_is_const() {
+        let s = Schedule::constant(0.05);
+        assert_eq!(s.eta(0), 0.05);
+        assert_eq!(s.eta(1_000_000), 0.05);
+        assert_eq!(s.averaging_shift(), 1.0);
+    }
+
+    #[test]
+    fn paper_shift_formula() {
+        assert_eq!(Schedule::paper_shift(2000, 1.0, 1.0), 2000.0);
+        assert_eq!(Schedule::paper_shift(47236, 10.0, 10.0), 47236.0);
+        // fractional k (ultra-sparsification) grows the shift:
+        assert_eq!(Schedule::paper_shift(100, 0.5, 1.0), 200.0);
+        // never below 1:
+        assert_eq!(Schedule::paper_shift(1, 10.0, 1.0), 1.0);
+    }
+
+    #[test]
+    fn averaging_shift_follows_inv_t() {
+        let s = Schedule::inv_t(2.0, 0.1, 123.0);
+        assert_eq!(s.averaging_shift(), 123.0);
+    }
+
+    #[test]
+    fn describe_round_trips_params() {
+        assert!(Schedule::inv_t(2.0, 0.5, 7.0).describe().contains("a=7"));
+        assert!(Schedule::bottou(1.0, 0.5).describe().contains("gamma0=1"));
+    }
+}

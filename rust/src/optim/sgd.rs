@@ -1,0 +1,150 @@
+//! SGD baselines (no error memory).
+//!
+//! * vanilla SGD — `x ← x − η ∇f_i` (the scikit-learn baseline role).
+//! * unbiased rand-k SGD — `x ← x − η (d/k)·rand_k(∇f_i)` (Section 2.2's
+//!   motivating example: unbiased but with a d/k variance blow-up).
+//! * QSGD — `x ← x − η Q_s(∇f_i)` (Alistarh et al. 2017; the Section 4.3
+//!   baseline: unbiased quantization, *no* memory).
+//!
+//! All variants share one struct: a compressor applied to the *gradient*
+//! (not to memory+gradient), an optional unbiasing scale, and the same
+//! bit accounting as Mem-SGD so communication plots are comparable.
+
+use crate::compress::{Compressor, Identity, Update};
+use crate::util::prng::Prng;
+
+/// SGD with optional (unbiased) gradient compression.
+pub struct Sgd {
+    /// Current iterate.
+    pub x: Vec<f32>,
+    compressor: Box<dyn Compressor>,
+    /// Multiply the compressed gradient by this factor (e.g. d/k to
+    /// unbias rand-k; 1.0 for QSGD which is already unbiased).
+    pub scale: f32,
+    update: Update,
+    scaled: Vec<f32>,
+    /// Cumulative transmitted bits.
+    pub bits_sent: u64,
+    /// Iterations taken.
+    pub t: usize,
+}
+
+impl Sgd {
+    /// Vanilla SGD (dense transmission).
+    pub fn vanilla(x0: Vec<f32>) -> Self {
+        Self::with_compressor(x0, Box::new(Identity), 1.0)
+    }
+
+    /// Unbiased rand-k SGD of Section 2.2: scale = d/k.
+    pub fn unbiased_rand_k(x0: Vec<f32>, k: usize) -> Self {
+        let d = x0.len();
+        let scale = d as f32 / k as f32;
+        Self::with_compressor(x0, Box::new(crate::compress::RandK::new(k)), scale)
+    }
+
+    /// QSGD baseline with `levels = s` quantization levels.
+    pub fn qsgd(x0: Vec<f32>, levels: u32, effective_dim: Option<usize>) -> Self {
+        Self::with_compressor(
+            x0,
+            Box::new(crate::compress::Qsgd::with_effective_dim(levels, effective_dim)),
+            1.0,
+        )
+    }
+
+    pub fn with_compressor(x0: Vec<f32>, compressor: Box<dyn Compressor>, scale: f32) -> Self {
+        let d = x0.len();
+        Sgd {
+            x: x0,
+            compressor,
+            scale,
+            update: Update::new_sparse(d),
+            scaled: vec![0.0; d],
+            bits_sent: 0,
+            t: 0,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        if self.scale != 1.0 {
+            format!("sgd_unbiased_{}", self.compressor.name())
+        } else {
+            format!("sgd_{}", self.compressor.name())
+        }
+    }
+
+    /// One step: `x ← x − η·scale·comp(∇f)`.
+    pub fn step(&mut self, grad: &[f32], eta: f64, rng: &mut Prng) {
+        debug_assert_eq!(grad.len(), self.x.len());
+        self.bits_sent += self.compressor.compress(grad, rng, &mut self.update);
+        let factor = (eta as f32) * self.scale;
+        match &self.update {
+            Update::Sparse(s) => {
+                for (&i, &v) in s.idx.iter().zip(&s.val) {
+                    self.x[i as usize] -= factor * v;
+                }
+            }
+            Update::Dense(g) => {
+                for (xi, &gi) in self.x.iter_mut().zip(g) {
+                    *xi -= factor * gi;
+                }
+            }
+        }
+        let _ = &self.scaled; // reserved for future fused paths
+        self.t += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::ensure_allclose;
+
+    #[test]
+    fn vanilla_step() {
+        let mut opt = Sgd::vanilla(vec![1.0; 4]);
+        let mut rng = Prng::new(0);
+        opt.step(&[2.0, 2.0, 2.0, 2.0], 0.25, &mut rng);
+        ensure_allclose(&opt.x, &[0.5; 4], 1e-6, 1e-7, "x").unwrap();
+        assert_eq!(opt.bits_sent, 4 * 32);
+    }
+
+    #[test]
+    fn unbiased_rand_k_is_unbiased_over_many_steps() {
+        // With a constant gradient, E[update] = η·∇f per step. Average
+        // displacement over many steps must approach the vanilla one.
+        let d = 10;
+        let steps = 20_000;
+        let eta = 1e-3;
+        let mut opt = Sgd::unbiased_rand_k(vec![0.0; d], 2);
+        let mut rng = Prng::new(5);
+        let g: Vec<f32> = (0..d).map(|i| (i as f32) - 4.5).collect();
+        for _ in 0..steps {
+            opt.step(&g, eta, &mut rng);
+        }
+        let expected: Vec<f32> = g.iter().map(|&gi| -gi * (eta as f32) * steps as f32).collect();
+        for (xi, ei) in opt.x.iter().zip(&expected) {
+            assert!(
+                (xi - ei).abs() <= 0.05 * ei.abs().max(1.0),
+                "{xi} vs {ei}"
+            );
+        }
+    }
+
+    #[test]
+    fn qsgd_bits_use_appendix_b_formula() {
+        let d = 2000;
+        let mut opt = Sgd::qsgd(vec![0.0; d], 16, None);
+        let mut rng = Prng::new(1);
+        let g = vec![1.0f32; d];
+        opt.step(&g, 0.1, &mut rng);
+        let per_iter = crate::compress::Qsgd::new(16).bits_for_dim(d);
+        assert_eq!(opt.bits_sent, per_iter);
+        assert_eq!(opt.name(), "sgd_qsgd_4bit");
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(Sgd::vanilla(vec![0.0; 2]).name(), "sgd_identity");
+        assert_eq!(Sgd::unbiased_rand_k(vec![0.0; 8], 2).name(), "sgd_unbiased_rand_2");
+    }
+}

@@ -1,0 +1,218 @@
+//! The artifact manifest: `artifacts/manifest.json`, written by
+//! `python/compile/aot.py`, parsed here with the in-tree JSON module.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of a tensor on the artifact boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input or output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub dims: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One AOT-lowered entry point.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub meta: Json,
+}
+
+impl Entry {
+    /// Typed meta accessor (`param_count`, `batch`, ...).
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta.req(key)?.as_usize()
+    }
+
+    pub fn meta_str(&self, key: &str) -> Result<String> {
+        Ok(self.meta.req(key)?.as_str()?.to_string())
+    }
+}
+
+/// The parsed artifact index.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (tests feed strings).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let doc = Json::parse(text)?;
+        let format = doc.req("format")?.as_usize()?;
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+        let mut entries = Vec::new();
+        for e in doc.req("entries")?.as_arr()? {
+            let parse_io = |key: &str| -> Result<Vec<IoSpec>> {
+                e.req(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|io| {
+                        Ok(IoSpec {
+                            dims: io
+                                .req("dims")?
+                                .as_arr()?
+                                .iter()
+                                .map(|d| d.as_usize())
+                                .collect::<Result<_>>()?,
+                            dtype: Dtype::parse(io.req("dtype")?.as_str()?)?,
+                        })
+                    })
+                    .collect()
+            };
+            entries.push(Entry {
+                name: e.req("name")?.as_str()?.to_string(),
+                file: dir.join(e.req("file")?.as_str()?),
+                inputs: parse_io("inputs")?,
+                outputs: parse_io("outputs")?,
+                meta: e.get("meta").cloned().unwrap_or(Json::Null),
+            });
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    /// Find an entry by exact name.
+    pub fn find(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "artifact '{name}' not in manifest (have: {})",
+                    self.entries
+                        .iter()
+                        .map(|e| e.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// All logreg gradient entries, as `(batch, dim)` pairs.
+    pub fn logreg_shapes(&self) -> Vec<(usize, usize)> {
+        self.entries
+            .iter()
+            .filter(|e| e.name.starts_with("logreg_grad_"))
+            .filter_map(|e| {
+                Some((
+                    e.meta.get("batch")?.as_usize().ok()?,
+                    e.meta.get("dim")?.as_usize().ok()?,
+                ))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "entries": [
+        {"name": "logreg_grad_b4_d8", "file": "g.hlo.txt",
+         "inputs": [{"dims": [8,1], "dtype": "f32"}, {"dims": [4,8], "dtype": "f32"}],
+         "outputs": [{"dims": [8,1], "dtype": "f32"}],
+         "meta": {"batch": 4, "dim": 8, "reg_applied": false}},
+        {"name": "transformer_step", "file": "t.hlo.txt",
+         "inputs": [{"dims": [100], "dtype": "f32"}, {"dims": [2,9], "dtype": "i32"}],
+         "outputs": [{"dims": [], "dtype": "f32"}, {"dims": [100], "dtype": "f32"}],
+         "meta": {"param_count": 100, "init_file": "init.bin"}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/a")).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.find("logreg_grad_b4_d8").unwrap();
+        assert_eq!(e.inputs[1].dims, vec![4, 8]);
+        assert_eq!(e.inputs[0].dtype, Dtype::F32);
+        assert_eq!(e.file, PathBuf::from("/a/g.hlo.txt"));
+        assert_eq!(e.meta_usize("batch").unwrap(), 4);
+        let t = m.find("transformer_step").unwrap();
+        assert_eq!(t.inputs[1].dtype, Dtype::I32);
+        assert_eq!(t.outputs[0].dims.len(), 0); // scalar loss
+        assert_eq!(t.meta_str("init_file").unwrap(), "init.bin");
+    }
+
+    #[test]
+    fn logreg_shape_listing() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/a")).unwrap();
+        assert_eq!(m.logreg_shapes(), vec![(4, 8)]);
+    }
+
+    #[test]
+    fn missing_entry_is_an_error_with_inventory() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/a")).unwrap();
+        let err = format!("{:#}", m.find("nope").unwrap_err());
+        assert!(err.contains("transformer_step"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrong_format_version() {
+        assert!(Manifest::parse(r#"{"format": 2, "entries": []}"#, PathBuf::new()).is_err());
+        assert!(Manifest::parse("not json", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn io_spec_elements() {
+        let io = IoSpec { dims: vec![4, 8], dtype: Dtype::F32 };
+        assert_eq!(io.elements(), 32);
+        let scalar = IoSpec { dims: vec![], dtype: Dtype::F32 };
+        assert_eq!(scalar.elements(), 1);
+    }
+
+    #[test]
+    fn real_manifest_parses_when_present() {
+        if let Ok(m) = Manifest::load(crate::runtime::default_artifacts_dir()) {
+            assert!(m.find("transformer_step").is_ok());
+            assert!(!m.logreg_shapes().is_empty());
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! PJRT runtime: load the AOT HLO artifacts and execute them from Rust.
+//!
+//! The bridge is **HLO text**: `python/compile/aot.py` lowers each
+//! Layer-2 entry point (whose matmul hot spots are the Layer-1 Pallas
+//! kernels, `interpret=True`) to `artifacts/*.hlo.txt`;
+//! [`pjrt::PjrtRuntime`] parses the text back
+//! (`HloModuleProto::from_text_file`), compiles each module once on the
+//! PJRT CPU client, and executes it with typed f32/i32 tensors. Python
+//! never runs at training time — the Rust binary is self-contained once
+//! `make artifacts` has produced the files.
+//!
+//! * [`manifest`] — machine-readable index of the artifact directory.
+//! * [`pjrt`] — client, executable cache, typed execute helpers.
+//! * [`logreg`] — mini-batch logistic gradients through the artifacts,
+//!   as a [`crate::models::GradBackend`] (cross-checked against the
+//!   native backend in the integration suite).
+//! * [`transformer`] — the e2e ~1M-parameter LM: step/loss executors and
+//!   a synthetic Markov-chain token corpus.
+
+pub mod logreg;
+pub mod manifest;
+pub mod pjrt;
+pub mod transformer;
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$MEMSGD_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("MEMSGD_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// True if the artifact directory looks complete (manifest present).
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}

@@ -1,0 +1,210 @@
+//! PJRT client + executable cache + typed execution.
+//!
+//! Mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Every artifact is compiled exactly once
+//! per process and cached; inputs are passed as literals and outputs
+//! unpacked from the `return_tuple=True` 1-level tuple the AOT step
+//! emits.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Dtype, Entry, Manifest};
+
+/// A typed host tensor crossing the artifact boundary.
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, dims: &[usize]) -> Tensor {
+        assert_eq!(data.len(), dims.iter().product::<usize>());
+        Tensor::F32(data, dims.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, dims: &[usize]) -> Tensor {
+        assert_eq!(data.len(), dims.iter().product::<usize>());
+        Tensor::I32(data, dims.to_vec())
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, d) | Tensor::I32(_, d) => d,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Tensor::F32(..) => Dtype::F32,
+            Tensor::I32(..) => Dtype::I32,
+        }
+    }
+
+    /// Unwrap f32 payload.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v, _) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    /// First element as f32 scalar.
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        v.first().copied().context("empty tensor")
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.dims().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32(v, _) => xla::Literal::vec1(v),
+            Tensor::I32(v, _) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// The runtime: one PJRT CPU client, one compiled executable per artifact.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative host→device→host execution count (metrics / perf logs).
+    pub executions: u64,
+}
+
+impl PjrtRuntime {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            executions: 0,
+        })
+    }
+
+    /// Open the default directory (`$MEMSGD_ARTIFACTS` / `./artifacts`).
+    pub fn open_default() -> Result<PjrtRuntime> {
+        Self::open(super::default_artifacts_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and return the executable for `name`.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let entry = self.manifest.find(name)?.clone();
+            let exe = self.compile_entry(&entry)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    fn compile_entry(&self, entry: &Entry) -> Result<xla::PjRtLoadedExecutable> {
+        let path: &PathBuf = &entry.file;
+        let path_str = path
+            .to_str()
+            .with_context(|| format!("non-utf8 path {}", path.display()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{}'", entry.name))
+    }
+
+    /// Force-compile an artifact (warmup; keeps first-step latency out of
+    /// measured loops).
+    pub fn warmup(&mut self, name: &str) -> Result<()> {
+        self.executable(name).map(|_| ())
+    }
+
+    /// Execute artifact `name` with typed inputs; returns the unpacked
+    /// output tuple. Input shapes/dtypes are validated against the
+    /// manifest before touching PJRT.
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let entry = self.manifest.find(name)?;
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "artifact '{name}': expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            if t.dims() != spec.dims.as_slice() || t.dtype() != spec.dtype {
+                bail!(
+                    "artifact '{name}' input {i}: expected {:?}{:?}, got {:?}{:?}",
+                    spec.dtype,
+                    spec.dims,
+                    t.dtype(),
+                    t.dims()
+                );
+            }
+        }
+        let out_specs = entry.outputs.clone();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        self.executions += 1;
+        // aot.py lowers with return_tuple=True → always a 1-level tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != out_specs.len() {
+            bail!(
+                "artifact '{name}': manifest promises {} outputs, got {}",
+                out_specs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&out_specs)
+            .map(|(lit, spec)| {
+                Ok(match spec.dtype {
+                    Dtype::F32 => Tensor::F32(lit.to_vec::<f32>()?, spec.dims.clone()),
+                    Dtype::I32 => Tensor::I32(lit.to_vec::<i32>()?, spec.dims.clone()),
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(t.dims(), &[2, 2]);
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        let s = Tensor::f32(vec![7.5], &[]);
+        assert_eq!(s.scalar_f32().unwrap(), 7.5);
+        assert!(Tensor::i32(vec![1], &[1]).as_f32().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_rejects_wrong_element_count() {
+        Tensor::f32(vec![1.0; 3], &[2, 2]);
+    }
+
+    // Full execute-path coverage lives in rust/tests/integration_runtime.rs
+    // (requires `make artifacts`).
+}

@@ -1,0 +1,33 @@
+//! Discrete-event multicore model — the Figure 4 substrate.
+//!
+//! The paper measures wall-clock speedup of Algorithm 2 on a 24-core
+//! Xeon. This machine exposes **one** physical core, so measured
+//! speedups are physically impossible here; instead we simulate the
+//! *mechanism* the paper identifies — sparse updates dirty few cache
+//! lines, so lock-free workers rarely stall on each other, while dense
+//! (Hogwild-style) writers thrash the coherence fabric (DESIGN.md §3).
+//!
+//! The model, per worker iteration:
+//!
+//! 1. **Compute phase** — gradient cost `compute_ns_per_coord · d` plus
+//!    a *coherence read penalty*: every cache line another worker wrote
+//!    since this worker's previous iteration is invalid here and must be
+//!    re-fetched (`miss_penalty_ns` per stale line, capped at the whole
+//!    vector's d/16 lines).
+//! 2. **Write phase** — the update's `u` coordinates are stored through
+//!    a serialized shared resource (store-buffer drain / bus): FIFO,
+//!    `write_ns` per coordinate.
+//! 3. **Collision** — when two workers write the same coordinate within
+//!    `collision_window_ns`, the later write is counted *lost* (plain
+//!    load-then-store semantics drop one update) and the writer stalls
+//!    `stall_ns` (cache-line ping-pong).
+//!
+//! Speedup is time-to-complete a fixed total budget of *effective*
+//! (non-lost) updates, normalized to one worker — the same protocol as
+//! the paper's "same total work, more cores" runs.
+
+pub mod multicore;
+pub mod network;
+
+pub use multicore::{speedup_series, SimConfig, SpeedupPoint, WritePattern};
+pub use network::{ComputeModel, NetworkModel, PricedRun};

@@ -1,0 +1,214 @@
+//! Network cost model — prices a distributed run in simulated wall-clock.
+//!
+//! The paper's abstract claims "communication can be reduced by a factor
+//! of the dimension of the problem … whilst still converging at the same
+//! rate", and §5 argues the distributed setting is where sparsification
+//! "might have the largest impact". This module turns the bit counts the
+//! optimizers already report into *time*, so the `figure6` experiment can
+//! answer the question the paper's Figures 2–3 imply but never plot:
+//! time-to-accuracy of Mem-SGD vs dense SGD vs QSGD on links of different
+//! speed.
+//!
+//! The model is a synchronous parameter-server round over `W` workers:
+//!
+//! ```text
+//! round = compute  +  2·latency  +  Σ_w upload_bits / server_bw
+//!                                +  broadcast_bits  / server_bw
+//! ```
+//!
+//! * the server's ingress link is the shared bottleneck (uploads
+//!   serialize into it; workers' own egress is assumed at least as fast),
+//! * the broadcast goes out once on the egress link (switch multicast /
+//!   tree broadcast; choosing `W·broadcast` instead only rescales the
+//!   dense baseline *harder*, so this is the conservative choice),
+//! * compute is `max_w` of the per-worker gradient time (stragglers via
+//!   [`ComputeModel::straggler_factor`]).
+//!
+//! All quantities are f64 seconds; nothing here does real I/O.
+
+/// A point-to-point link / NIC profile.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetworkModel {
+    pub name: String,
+    /// One-way message latency (seconds).
+    pub latency_s: f64,
+    /// Server NIC bandwidth (bits per second), shared by the uploads.
+    pub bandwidth_bps: f64,
+}
+
+impl NetworkModel {
+    pub fn new(name: &str, latency_s: f64, bandwidth_bps: f64) -> Self {
+        assert!(latency_s >= 0.0 && bandwidth_bps > 0.0);
+        NetworkModel {
+            name: name.to_string(),
+            latency_s,
+            bandwidth_bps,
+        }
+    }
+
+    /// Commodity gigabit Ethernet: 50 µs, 1 Gb/s.
+    pub fn eth_1g() -> Self {
+        NetworkModel::new("1GbE", 50e-6, 1e9)
+    }
+
+    /// Datacenter 10 GbE: 20 µs, 10 Gb/s.
+    pub fn eth_10g() -> Self {
+        NetworkModel::new("10GbE", 20e-6, 10e9)
+    }
+
+    /// HPC interconnect (EDR InfiniBand class): 2 µs, 100 Gb/s.
+    pub fn ib_100g() -> Self {
+        NetworkModel::new("100Gb-IB", 2e-6, 100e9)
+    }
+
+    /// The three presets, slowest first.
+    pub fn presets() -> Vec<NetworkModel> {
+        vec![Self::eth_1g(), Self::eth_10g(), Self::ib_100g()]
+    }
+
+    /// Time to move `bits` through the (server) link.
+    pub fn xfer_s(&self, bits: u64) -> f64 {
+        bits as f64 / self.bandwidth_bps
+    }
+
+    /// Wall-clock of one synchronous round.
+    ///
+    /// `upload_bits` is the *sum* over workers; `broadcast_bits` the
+    /// aggregated model delta sent back once.
+    pub fn round_s(&self, upload_bits: u64, broadcast_bits: u64, compute_s: f64) -> f64 {
+        compute_s + 2.0 * self.latency_s + self.xfer_s(upload_bits) + self.xfer_s(broadcast_bits)
+    }
+}
+
+/// How long a worker takes to produce one stochastic gradient.
+#[derive(Clone, Debug)]
+pub struct ComputeModel {
+    /// Seconds per gradient coordinate touched (fused multiply + sigmoid
+    /// amortized); ~1 ns/coord matches the measured native backend.
+    pub s_per_coord: f64,
+    /// Coordinates touched per gradient (d for dense data, row nnz for
+    /// sparse).
+    pub coords_per_grad: f64,
+    /// Slowest-worker multiplier ≥ 1 applied to the round's compute
+    /// phase (synchronous rounds wait for the straggler).
+    pub straggler_factor: f64,
+}
+
+impl ComputeModel {
+    pub fn new(s_per_coord: f64, coords_per_grad: f64) -> Self {
+        ComputeModel {
+            s_per_coord,
+            coords_per_grad,
+            straggler_factor: 1.0,
+        }
+    }
+
+    /// Per-round compute wall-clock (`grads_per_worker` local steps).
+    pub fn round_s(&self, grads_per_worker: usize) -> f64 {
+        self.s_per_coord * self.coords_per_grad * grads_per_worker as f64 * self.straggler_factor
+    }
+}
+
+/// Summary of pricing one finished run on one network.
+#[derive(Clone, Debug)]
+pub struct PricedRun {
+    pub network: String,
+    pub method: String,
+    /// Simulated seconds spent in compute across the run.
+    pub compute_s: f64,
+    /// Simulated seconds spent on the wire.
+    pub comm_s: f64,
+    /// compute + comm.
+    pub total_s: f64,
+    /// comm / total ∈ [0, 1].
+    pub comm_fraction: f64,
+}
+
+/// Price a sequence of per-round `(upload_bits, broadcast_bits)` message
+/// sizes on a network + compute model.
+pub fn price_rounds(
+    net: &NetworkModel,
+    compute: &ComputeModel,
+    method: &str,
+    rounds: &[(u64, u64)],
+    grads_per_round: usize,
+) -> PricedRun {
+    let mut compute_s = 0.0;
+    let mut comm_s = 0.0;
+    for &(up, down) in rounds {
+        let c = compute.round_s(grads_per_round);
+        compute_s += c;
+        comm_s += net.round_s(up, down, 0.0);
+    }
+    let total_s = compute_s + comm_s;
+    PricedRun {
+        network: net.name.clone(),
+        method: method.to_string(),
+        compute_s,
+        comm_s,
+        total_s,
+        comm_fraction: if total_s > 0.0 { comm_s / total_s } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_ordered_by_speed() {
+        let p = NetworkModel::presets();
+        assert_eq!(p.len(), 3);
+        assert!(p[0].bandwidth_bps < p[1].bandwidth_bps);
+        assert!(p[1].bandwidth_bps < p[2].bandwidth_bps);
+        assert!(p[0].latency_s > p[2].latency_s);
+    }
+
+    #[test]
+    fn xfer_time_scales_linearly() {
+        let net = NetworkModel::eth_1g();
+        assert!((net.xfer_s(1_000_000_000) - 1.0).abs() < 1e-12);
+        assert!((net.xfer_s(500_000_000) - 0.5).abs() < 1e-12);
+        assert_eq!(net.xfer_s(0), 0.0);
+    }
+
+    #[test]
+    fn round_time_decomposition() {
+        let net = NetworkModel::new("t", 1e-3, 1e6);
+        // 1000 bits up + 1000 down at 1e6 bps = 2 ms; latency 2 ms; compute 5 ms.
+        let r = net.round_s(1000, 1000, 5e-3);
+        assert!((r - (5e-3 + 2e-3 + 2e-3)).abs() < 1e-12, "r={r}");
+    }
+
+    #[test]
+    fn dense_gradient_dominates_slow_links() {
+        // d=2000 dense f32 upload from 8 workers vs top-1 sparse upload:
+        // on 1GbE the dense round must be >100× more expensive on the wire.
+        let net = NetworkModel::eth_1g();
+        let dense_up = 8 * 2000 * 32u64;
+        let sparse_up = 8 * (32 + 11) as u64;
+        let dense = net.round_s(dense_up, 2000 * 32, 0.0);
+        let sparse = net.round_s(sparse_up, 8 * (32 + 11), 0.0);
+        assert!(dense / sparse > 4.0, "dense={dense} sparse={sparse}");
+        // And pure transfer (without latency floor) >100×:
+        assert!(net.xfer_s(dense_up) / net.xfer_s(sparse_up) > 100.0);
+    }
+
+    #[test]
+    fn priced_run_fraction_bounds() {
+        let net = NetworkModel::eth_10g();
+        let cm = ComputeModel::new(1e-9, 2000.0);
+        let rounds: Vec<(u64, u64)> = (0..100).map(|_| (64_000, 64_000)).collect();
+        let p = price_rounds(&net, &cm, "sgd", &rounds, 1);
+        assert!(p.comm_fraction > 0.0 && p.comm_fraction < 1.0);
+        assert!((p.total_s - (p.compute_s + p.comm_s)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn straggler_inflates_compute_only() {
+        let mut cm = ComputeModel::new(1e-9, 1000.0);
+        let base = cm.round_s(10);
+        cm.straggler_factor = 3.0;
+        assert!((cm.round_s(10) - 3.0 * base).abs() < 1e-15);
+    }
+}

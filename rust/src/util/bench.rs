@@ -1,0 +1,209 @@
+//! Measurement harness for `rust/benches/` (criterion replacement).
+//!
+//! Usage pattern inside a `harness = false` bench binary:
+//!
+//! ```ignore
+//! let mut b = Bench::new("compressors");
+//! b.run("top_k d=2000 k=1", || top_k(&x, 1, &mut out));
+//! b.finish();
+//! ```
+//!
+//! Each case is warmed up, then timed over adaptive repetitions until a
+//! target measuring window is filled; mean / p50 / p95 and throughput are
+//! printed in a fixed-width table and optionally appended as JSON lines
+//! for the EXPERIMENTS.md tooling.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// One measured case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+/// Bench harness: collects measurements, prints a table, optionally dumps
+/// JSON (set `MEMSGD_BENCH_JSON=/path/file.json`).
+pub struct Bench {
+    pub title: String,
+    pub warmup: Duration,
+    pub window: Duration,
+    pub results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(title: &str) -> Bench {
+        println!("\n=== bench: {title} ===");
+        println!(
+            "{:<48} {:>12} {:>12} {:>12} {:>10}",
+            "case", "mean", "p50", "p95", "iters"
+        );
+        Bench {
+            title: title.to_string(),
+            warmup: Duration::from_millis(80),
+            window: Duration::from_millis(400),
+            results: Vec::new(),
+        }
+    }
+
+    /// Fast harness for long-running cases (convergence benches): one
+    /// warmup-free sample per repetition.
+    pub fn slow(title: &str) -> Bench {
+        let mut b = Bench::new(title);
+        b.warmup = Duration::ZERO;
+        b.window = Duration::ZERO;
+        b
+    }
+
+    /// Time `f` adaptively and record under `name`. Returns mean ns/iter.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> f64 {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Estimate a batch size so each sample is >= ~50us (amortizes timer
+        // overhead) and collect samples until the window is filled.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(30));
+        let batch = (Duration::from_micros(50).as_nanos() / once.as_nanos()).max(1) as usize;
+        let mut samples: Vec<f64> = Vec::new();
+        let mut total_iters = 0usize;
+        let started = Instant::now();
+        loop {
+            let s = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            samples.push(s.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+            if started.elapsed() >= self.window && samples.len() >= 5 {
+                break;
+            }
+            if samples.len() >= 2_000 {
+                break;
+            }
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: stats::mean(&samples),
+            p50_ns: stats::percentile(&samples, 50.0),
+            p95_ns: stats::percentile(&samples, 95.0),
+            min_ns: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        };
+        println!(
+            "{:<48} {:>12} {:>12} {:>12} {:>10}",
+            m.name,
+            fmt_ns(m.mean_ns),
+            fmt_ns(m.p50_ns),
+            fmt_ns(m.p95_ns),
+            m.iters
+        );
+        let mean = m.mean_ns;
+        self.results.push(m);
+        mean
+    }
+
+    /// Record an externally measured duration (for end-to-end drivers that
+    /// cannot be re-run in a closure cheaply).
+    pub fn record(&mut self, name: &str, elapsed: Duration, iters: usize) {
+        let per_iter = elapsed.as_nanos() as f64 / iters.max(1) as f64;
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            mean_ns: per_iter,
+            p50_ns: per_iter,
+            p95_ns: per_iter,
+            min_ns: per_iter,
+        };
+        println!(
+            "{:<48} {:>12} {:>12} {:>12} {:>10}",
+            m.name,
+            fmt_ns(m.mean_ns),
+            "-",
+            "-",
+            m.iters
+        );
+        self.results.push(m);
+    }
+
+    /// Print the footer and dump JSON if requested via env var.
+    pub fn finish(&self) {
+        if let Ok(path) = std::env::var("MEMSGD_BENCH_JSON") {
+            let rows: Vec<Json> = self
+                .results
+                .iter()
+                .map(|m| {
+                    Json::obj(vec![
+                        ("bench", Json::str(&self.title)),
+                        ("case", Json::str(&m.name)),
+                        ("mean_ns", Json::Num(m.mean_ns)),
+                        ("p50_ns", Json::Num(m.p50_ns)),
+                        ("p95_ns", Json::Num(m.p95_ns)),
+                        ("iters", Json::Num(m.iters as f64)),
+                    ])
+                })
+                .collect();
+            let mut text = String::new();
+            for r in rows {
+                text.push_str(&r.to_string());
+                text.push('\n');
+            }
+            use std::io::Write;
+            if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+                let _ = f.write_all(text.as_bytes());
+            }
+        }
+        println!("=== bench: {} done ({} cases) ===", self.title, self.results.len());
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench::new("self-test");
+        let mut acc = 0u64;
+        let mean = b.run("wrapping-add-loop", || {
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        assert!(mean > 0.0);
+        assert_eq!(b.results.len(), 1);
+        b.finish();
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50us");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.20s");
+    }
+}

@@ -1,0 +1,126 @@
+//! Miniature property-testing harness (proptest replacement).
+//!
+//! A property is a closure from a seeded [`Prng`] to `Result<(), String>`;
+//! [`check`] runs it across many derived seeds and reports the first
+//! failing seed so the case can be replayed deterministically:
+//!
+//! ```ignore
+//! check("top_k contraction", 500, |rng| {
+//!     let d = 1 + rng.below(100);
+//!     ...
+//!     ensure(holds, format!("violated at d={d}"))
+//! });
+//! ```
+
+use crate::util::prng::Prng;
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` random instances of `prop`; panic with the failing seed and
+/// message on the first violation. Seeds derive deterministically from the
+/// property name so failures are replayable.
+pub fn check<F: FnMut(&mut Prng) -> CaseResult>(name: &str, cases: usize, mut prop: F) {
+    let base = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Prng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay one specific seed of a property (for debugging).
+pub fn replay<F: FnMut(&mut Prng) -> CaseResult>(name: &str, seed: u64, mut prop: F) {
+    let mut rng = Prng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' failed on replay (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Helper: turn a boolean condition into a `CaseResult`.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Helper: approximate scalar equality with relative + absolute tolerance.
+pub fn ensure_close(a: f64, b: f64, rtol: f64, atol: f64, label: &str) -> CaseResult {
+    let tol = atol + rtol * b.abs().max(a.abs());
+    ensure(
+        (a - b).abs() <= tol,
+        format!("{label}: {a} vs {b} (tol {tol})"),
+    )
+}
+
+/// Helper: elementwise closeness of two f32 slices.
+pub fn ensure_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32, label: &str) -> CaseResult {
+    if a.len() != b.len() {
+        return Err(format!("{label}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol {
+            return Err(format!("{label}[{i}]: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always-true", 50, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-false", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn seeds_are_deterministic_per_name() {
+        let mut first: Vec<u64> = Vec::new();
+        check("det", 5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check("det", 5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn ensure_close_tolerances() {
+        assert!(ensure_close(1.0, 1.0 + 1e-9, 1e-6, 0.0, "x").is_ok());
+        assert!(ensure_close(1.0, 2.0, 1e-6, 0.0, "x").is_err());
+        assert!(ensure_allclose(&[1.0, 2.0], &[1.0, 2.0], 0.0, 0.0, "v").is_ok());
+        assert!(ensure_allclose(&[1.0], &[1.0, 2.0], 0.0, 0.0, "v").is_err());
+        assert!(ensure_allclose(&[1.0], &[1.1], 1e-3, 0.0, "v").is_err());
+    }
+}

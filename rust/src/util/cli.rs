@@ -1,0 +1,175 @@
+//! Tiny command-line parsing for the `memsgd` binary and the examples.
+//!
+//! Grammar: `memsgd <subcommand> [--key value]... [--flag]...`.
+//! Values are parsed on demand with typed getters; unknown keys are
+//! reported as errors so typos do not silently fall back to defaults.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed arguments: one optional subcommand plus `--key [value]` pairs.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            let key = tok
+                .strip_prefix("--")
+                .with_context(|| format!("expected --key, found '{tok}'"))?
+                .to_string();
+            if key.is_empty() {
+                bail!("empty flag '--'");
+            }
+            match it.peek() {
+                Some(next) if !next.starts_with("--") => {
+                    let val = it.next().unwrap();
+                    args.kv.insert(key, val);
+                }
+                _ => args.flags.push(key),
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.kv.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string (no default).
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.kv.get(key).cloned()
+    }
+
+    /// Typed numeric option with default.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.mark(key);
+        match self.kv.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    /// Boolean flag presence (`--verbose`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Comma-separated list option, e.g. `--k 1,2,3`.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Result<Vec<T>>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        self.mark(key);
+        match self.kv.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<T>()
+                        .map_err(|e| anyhow::anyhow!("--{key} '{s}': {e}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Error if any provided option was never consumed by a getter — this
+    /// catches typos like `--steeps 100`. Call after all getters.
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        for key in self.kv.keys().chain(self.flags.iter()) {
+            if !consumed.iter().any(|c| c == key) {
+                bail!("unknown option --{key}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_kv() {
+        let a = parse(&["figure2", "--dataset", "epsilon", "--steps", "100", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("figure2"));
+        assert_eq!(a.get_str("dataset", "rcv1"), "epsilon");
+        assert_eq!(a.get::<usize>("steps", 0).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get::<f64>("gamma", 2.0).unwrap(), 2.0);
+        assert_eq!(a.get_str("dataset", "epsilon"), "epsilon");
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["x", "--k", "1,2,3"]);
+        assert_eq!(a.get_list::<usize>("k", &[9]).unwrap(), vec![1, 2, 3]);
+        let b = parse(&["x"]);
+        assert_eq!(b.get_list::<usize>("k", &[9]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let a = parse(&["x", "--steps", "ten"]);
+        assert!(a.get::<usize>("steps", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected_by_finish() {
+        let a = parse(&["x", "--steeps", "10"]);
+        let _ = a.get::<usize>("steps", 0);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn missing_key_prefix_is_error() {
+        assert!(Args::parse(vec!["x".to_string(), "oops".to_string()]).is_err());
+    }
+}

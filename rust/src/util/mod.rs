@@ -1,0 +1,26 @@
+//! Crate-internal utility layer.
+//!
+//! This build is fully offline and only the `xla` crate's vendored closure
+//! is available, so the supporting machinery a crate would normally pull
+//! from crates.io is implemented here instead:
+//!
+//! * [`prng`] — deterministic, splittable PRNG (xoshiro256++) with normal /
+//!   bernoulli / choose-k sampling (replaces `rand`).
+//! * [`json`] — a small JSON value model with parser and writer (replaces
+//!   `serde_json`); used for the artifact manifest and experiment configs.
+//! * [`cli`] — `--flag value` argument parsing for the `memsgd` binary
+//!   (replaces `clap`).
+//! * [`bench`] — a measurement harness with warmup, repetitions and
+//!   percentile reporting (replaces `criterion`; all `benches/` use it).
+//! * [`select`] — in-place quickselect used by the top-k compressor.
+//! * [`check`] — a miniature property-testing loop (replaces `proptest`)
+//!   used by the invariant suites in `rust/tests/`.
+//! * [`stats`] — mean / variance / percentile helpers for metrics.
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod select;
+pub mod stats;

@@ -1,0 +1,236 @@
+//! Failure-injection suite: the coordinator must degrade loudly (errors)
+//! or safely (finite, bounded state) under hostile inputs — non-finite
+//! gradients, malformed data files, corrupted checkpoints, absurd
+//! configurations.
+
+use memsgd::compress::{self, Update};
+use memsgd::coordinator::checkpoint::Checkpoint;
+use memsgd::coordinator::train::{self, TrainConfig};
+use memsgd::data::{libsvm, synthetic, Dataset};
+use memsgd::models::{GradBackend, LogisticModel};
+use memsgd::optim::{MemSgd, Schedule};
+use memsgd::util::prng::Prng;
+
+// ---------------------------------------------------------------------------
+// Non-finite gradients
+// ---------------------------------------------------------------------------
+
+/// A NaN gradient must not corrupt coordinates the update does not touch:
+/// top-k propagates at most k poisoned coordinates per step, and the
+/// error memory quarantines the rest.
+#[test]
+fn nan_gradient_poisons_at_most_k_coordinates_per_step() {
+    let d = 32;
+    let mut opt = MemSgd::new(vec![1.0f32; d], compress::from_spec("top_k:2").unwrap());
+    let mut rng = Prng::new(1);
+    let mut grad = vec![0.5f32; d];
+    grad[3] = f32::NAN;
+    opt.step(&grad, 0.1, &mut rng);
+    let poisoned_x = opt.x.iter().filter(|v| !v.is_finite()).count();
+    // NaN sorts unpredictably through the selector, but the applied
+    // update has at most 2 entries.
+    assert!(poisoned_x <= 2, "{poisoned_x} poisoned coords in x");
+}
+
+/// Vanilla (identity) transmission spreads the NaN everywhere — the
+/// contrast that makes the sparse path auditable.
+#[test]
+fn infinite_gradient_detected_in_memory_norm() {
+    let d = 16;
+    let mut opt = MemSgd::new(vec![0.0f32; d], compress::from_spec("top_k:1").unwrap());
+    let mut rng = Prng::new(2);
+    let mut grad = vec![1.0f32; d];
+    grad[5] = f32::INFINITY;
+    opt.step(&grad, 0.1, &mut rng);
+    // The monitoring hook every driver exposes: ‖m‖² goes non-finite,
+    // which is the signal a production loop would alarm on.
+    assert!(
+        !opt.memory_norm_sq().is_finite() || !opt.x.iter().all(|v| v.is_finite()),
+        "an infinite gradient must be visible in x or m"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Malformed LIBSVM input
+// ---------------------------------------------------------------------------
+
+#[test]
+fn libsvm_rejects_garbage_lines() {
+    for text in [
+        "+1 3:abc\n",        // non-numeric value
+        "+1 0:1.0\n",        // LIBSVM indices are 1-based
+        "+1 5\n",            // missing colon
+        "maybe 1:2.0\n",     // unparsable label
+    ] {
+        assert!(
+            libsvm::parse(text.as_bytes(), None, "t".into()).is_err(),
+            "accepted garbage: {text:?}"
+        );
+    }
+}
+
+#[test]
+fn libsvm_accepts_blank_and_comment_lines() {
+    let text = "# comment\n\n+1 1:0.5 4:1.5\n-1 2:2.0\n";
+    let ds = libsvm::parse(text.as_bytes(), None, "t".into()).unwrap();
+    assert_eq!(ds.n(), 2);
+    assert_eq!(ds.d(), 4);
+}
+
+#[test]
+fn libsvm_missing_file_errors_cleanly() {
+    let err = libsvm::load("/nonexistent/path/data.svm", None).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("nonexistent"), "unhelpful error: {msg}");
+}
+
+// ---------------------------------------------------------------------------
+// Corrupted checkpoints
+// ---------------------------------------------------------------------------
+
+#[test]
+fn checkpoint_bitflips_never_panic() {
+    let mut opt = MemSgd::new(vec![0.3f32; 24], compress::from_spec("top_k:1").unwrap());
+    let mut rng = Prng::new(3);
+    let grad = vec![0.1f32; 24];
+    for _ in 0..10 {
+        opt.step(&grad, 0.1, &mut rng);
+    }
+    let bytes = Checkpoint::capture(&opt, "top_k:1", &rng, None).to_bytes();
+    // Flip every byte position in turn; parsing must either succeed (the
+    // flip hit payload data) or error — never panic or hang.
+    for pos in 0..bytes.len().min(256) {
+        let mut corrupted = bytes.clone();
+        corrupted[pos] ^= 0xA5;
+        let _ = Checkpoint::from_bytes(&corrupted);
+    }
+    // Truncations at every length too.
+    for len in 0..bytes.len().min(128) {
+        let _ = Checkpoint::from_bytes(&bytes[..len]);
+    }
+}
+
+#[test]
+fn checkpoint_with_hostile_spec_fails_on_restore_not_capture() {
+    let mut ck = {
+        let opt = MemSgd::new(vec![0.0f32; 4], compress::from_spec("top_k:1").unwrap());
+        let rng = Prng::new(4);
+        Checkpoint::capture(&opt, "top_k:1", &rng, None)
+    };
+    ck.compressor_spec = "definitely_not_a_compressor:9".into();
+    let bytes = ck.to_bytes();
+    let back = Checkpoint::from_bytes(&bytes).unwrap(); // parse is fine
+    assert!(back.restore().is_err(), "hostile spec must fail restore");
+}
+
+// ---------------------------------------------------------------------------
+// Hostile configurations
+// ---------------------------------------------------------------------------
+
+#[test]
+fn train_rejects_unknown_method() {
+    let data = synthetic::epsilon_like(64, 8, 1);
+    let cfg = TrainConfig {
+        method: "adamw:top_k:1".into(),
+        steps: 10,
+        ..TrainConfig::default()
+    };
+    assert!(train::run(&data, &cfg).is_err());
+}
+
+#[test]
+fn zero_steps_run_returns_initial_loss_only() {
+    let data = synthetic::epsilon_like(64, 8, 1);
+    let cfg = TrainConfig {
+        method: "memsgd:top_k:1".into(),
+        steps: 0,
+        ..TrainConfig::default()
+    };
+    let rec = train::run(&data, &cfg).unwrap();
+    assert_eq!(rec.steps, 0);
+    assert!((rec.final_loss() - (2.0f64).ln()).abs() < 1e-6); // f(0) = ln 2
+}
+
+#[test]
+fn k_larger_than_dimension_behaves_like_dense() {
+    let data = synthetic::epsilon_like(128, 8, 2);
+    let run_with = |method: &str| {
+        let cfg = TrainConfig {
+            method: method.into(),
+            steps: 400,
+            schedule: Schedule::constant(0.3),
+            seed: 9,
+            ..TrainConfig::default()
+        };
+        train::run(&data, &cfg).unwrap().final_loss()
+    };
+    let huge_k = run_with("memsgd:top_k:100"); // k > d = 8
+    let dense = run_with("sgd");
+    assert!(
+        (huge_k - dense).abs() < 0.05,
+        "top_k with k>d should track dense: {huge_k} vs {dense}"
+    );
+}
+
+#[test]
+fn schedule_rejects_bad_parameters() {
+    // Constructor contracts: invalid schedules must be unrepresentable.
+    assert!(std::panic::catch_unwind(|| Schedule::inv_t(2.0, 0.0, 10.0)).is_err());
+    assert!(std::panic::catch_unwind(|| Schedule::constant(-0.1)).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Dataset degeneracies
+// ---------------------------------------------------------------------------
+
+#[test]
+fn single_example_dataset_trains() {
+    let data = Dataset::dense("one", vec![1.0, -1.0], 2, vec![1.0]);
+    let cfg = TrainConfig {
+        method: "memsgd:top_k:1".into(),
+        steps: 200,
+        schedule: Schedule::constant(0.5),
+        ..TrainConfig::default()
+    };
+    let rec = train::run(&data, &cfg).unwrap();
+    assert!(rec.final_loss().is_finite());
+    assert!(rec.final_loss() < (2.0f64).ln()); // made progress
+}
+
+#[test]
+fn all_same_label_dataset_is_separable_and_converges() {
+    let mut model_data = Vec::new();
+    for i in 0..32 {
+        model_data.extend_from_slice(&[1.0 + (i % 3) as f32 * 0.1, 0.5]);
+    }
+    let data = Dataset::dense("same", model_data, 2, vec![1.0; 32]);
+    let mut model = LogisticModel::new(&data, 1e-4);
+    let mut opt = MemSgd::new(vec![0.0f32; 2], compress::from_spec("top_k:1").unwrap());
+    let mut rng = Prng::new(5);
+    let mut grad = vec![0.0f32; 2];
+    for _ in 0..2_000 {
+        let i = rng.below(data.n());
+        model.sample_grad(&opt.x, i, &mut grad);
+        opt.step(&grad, 0.5, &mut rng);
+    }
+    assert!(model.full_loss(&opt.x) < 0.3);
+}
+
+/// Sparse updates applied to the wrong-dimension vector are a programmer
+/// error; in release builds SparseVec::sub_from on a larger x must not
+/// write out of bounds of the declared dim (indices are validated at
+/// construction).
+#[test]
+fn sparse_update_indices_always_in_bounds() {
+    let mut rng = Prng::new(6);
+    for _ in 0..200 {
+        let d = 1 + rng.below(100);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let mut comp = compress::from_spec("top_k:3").unwrap();
+        let mut out = Update::new_sparse(d);
+        comp.compress(&x, &mut rng, &mut out);
+        if let Update::Sparse(s) = &out {
+            assert!(s.idx.iter().all(|&i| (i as usize) < d));
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Training integration: convergence across module boundaries (data →
+//! model → compressor → optimizer → averaging) plus direct validation
+//! of the paper's theory on live runs:
+//!
+//! * Lemma 3.2 — the memory norm stays under `η_t² · (4α/(α−4)) (d/k)² G²`.
+//! * Eq. (12) — the virtual iterate tracks uncompressed SGD exactly.
+//! * Theorem 2.4 — the weighted average converges at the SGD rate; the
+//!   suboptimality shrinks ~linearly in T once `T ≳ (d/k)√κ`.
+//! * Remark 2.3 — ultra-sparsification (k < 1) still converges.
+
+use memsgd::compress::from_spec;
+use memsgd::coordinator::train::{self, TrainConfig};
+use memsgd::data::synthetic;
+use memsgd::models::{GradBackend, LeastSquaresModel, LogisticModel};
+use memsgd::optim::{MemSgd, Schedule, WeightedAverage};
+use memsgd::util::prng::Prng;
+use memsgd::util::stats;
+
+#[test]
+fn memory_norm_obeys_lemma_3_2() {
+    // Run Mem-SGD top-k with the Theorem-2.4 stepsizes and check the
+    // Lemma 3.2 bound E||m_t||^2 <= eta_t^2 * (4a/(a-4)) * (d/k)^2 * G^2
+    // pointwise along the trajectory (with alpha = 5, the Remark 2.6
+    // choice; G^2 = 1 since rows are unit-norm and lam*|x| stays small).
+    let data = synthetic::epsilon_like(500, 64, 3);
+    let d = 64usize;
+    let k = 2usize;
+    let n = data.n();
+    let mu = 1.0 / n as f64; // lam = mu (strong convexity from L2 term)
+    let alpha = 5.0f64;
+    let a = (alpha + 2.0) * d as f64 / k as f64; // Remark 2.5 shift
+    let mut model = LogisticModel::with_paper_lambda(&data);
+    let mut opt = MemSgd::new(vec![0.0; d], from_spec(&format!("top_k:{k}")).unwrap());
+    let mut rng = Prng::new(5);
+    let mut grad = vec![0.0f32; d];
+    let g_sq = 1.1f64; // unit-norm rows + tiny reg: ||grad|| <= ~1.05
+    let factor = 4.0 * alpha / (alpha - 4.0) * (d as f64 / k as f64).powi(2) * g_sq;
+    for t in 0..3_000 {
+        let i = (t * 7919) % n;
+        model.sample_grad(&opt.x, i, &mut grad);
+        let eta = 8.0 / (mu * (a + t as f64));
+        opt.step(&grad, eta, &mut rng);
+        let bound = eta * eta * factor;
+        let m2 = opt.memory_norm_sq();
+        assert!(
+            m2 <= bound,
+            "t={t}: ||m||^2 = {m2} exceeds Lemma 3.2 bound {bound}"
+        );
+    }
+}
+
+#[test]
+fn virtual_iterate_equals_uncompressed_sgd_trajectory() {
+    // Eq. (12): x_t - m_t == x0 - sum eta_j grad_j, for gradients
+    // evaluated at the *compressed* trajectory. We replay the exact
+    // gradient sequence to verify bit-for-bit (f32 tolerance).
+    let data = synthetic::rcv1_like(300, 512, 0.02, 7);
+    let d = 512usize;
+    let mut model = LogisticModel::with_paper_lambda(&data);
+    let mut opt = MemSgd::new(vec![0.0; d], from_spec("top_k:5").unwrap());
+    let mut rng = Prng::new(11);
+    let mut grad = vec![0.0f32; d];
+    let mut virt = vec![0.0f32; d];
+    for t in 0..1_000 {
+        let i = (t * 104_729) % data.n();
+        model.sample_grad(&opt.x, i, &mut grad);
+        let eta = 0.5 / (1.0 + t as f64);
+        for (v, &g) in virt.iter_mut().zip(&grad) {
+            *v -= eta as f32 * g;
+        }
+        opt.step(&grad, eta, &mut rng);
+    }
+    let err = stats::rel_l2_err(&opt.virtual_iterate(), &virt);
+    assert!(err < 1e-4, "virtual iterate drifted: rel err {err}");
+}
+
+#[test]
+fn suboptimality_shrinks_with_t_at_sgd_rate() {
+    // Theorem 2.4: for T beyond the transient, doubling T should roughly
+    // halve f(x̄_T) − f* (the O(G²/μT) term dominates). Least-squares
+    // gives us f* in closed form.
+    let data = synthetic::epsilon_like(400, 24, 9);
+    let lam = 0.05;
+    let model = LeastSquaresModel::new(&data, lam);
+    let xstar = model.solve_exact();
+    let fstar = {
+        let mut m = LeastSquaresModel::new(&data, lam);
+        m.full_loss(&xstar)
+    };
+
+    let run = |steps: usize| -> f64 {
+        let d = data.d();
+        let k = 1.0f64;
+        let a = Schedule::paper_shift(d, k, 1.0);
+        let sched = Schedule::inv_t(2.0, lam, a);
+        let mut m = LeastSquaresModel::new(&data, lam);
+        let mut opt = MemSgd::new(vec![0.0; d], from_spec("top_k:1").unwrap());
+        let mut avg = WeightedAverage::new(d, a);
+        let mut rng = Prng::new(13);
+        let mut grad = vec![0.0f32; d];
+        for t in 0..steps {
+            let i = rng.below(data.n());
+            m.sample_grad(&opt.x, i, &mut grad);
+            opt.step(&grad, sched.eta(t), &mut rng);
+            avg.update(&opt.x);
+        }
+        m.full_loss(&avg.average()) - fstar
+    };
+
+    let e1 = run(2_000);
+    let e2 = run(8_000);
+    let e3 = run(32_000);
+    assert!(e1 > 0.0 && e2 > 0.0 && e3 > 0.0, "{e1} {e2} {e3}");
+    // 4x more steps must cut the gap by at least ~2x each time (rate ~1/T
+    // with stochastic noise; require a conservative factor).
+    assert!(e2 < e1 / 2.0, "e(8k)={e2} not << e(2k)={e1}");
+    assert!(e3 < e2 / 2.0, "e(32k)={e3} not << e(8k)={e2}");
+}
+
+#[test]
+fn ultra_sparsification_converges() {
+    // Remark 2.3: k = p = 0.5 < 1 — less than one coordinate per step on
+    // average — still converges with shift a ∝ d/p.
+    let data = synthetic::epsilon_like(300, 16, 2);
+    let cfg = TrainConfig {
+        method: "memsgd:random_p:0.5".into(),
+        steps: 20_000,
+        eval_points: 4,
+        seed: 3,
+        ..TrainConfig::default()
+    }
+    .with_paper_schedule(16, 300, 2.0, 1.0)
+    .unwrap();
+    // Shift must reflect the fractional k: a = d/p = 32.
+    match cfg.schedule {
+        Schedule::InvT { shift, .. } => assert_eq!(shift, 32.0),
+        _ => panic!(),
+    }
+    let rec = train::run(&data, &cfg).unwrap();
+    assert!(
+        rec.final_loss() < 0.67,
+        "ultra-sparsified run stuck at {}",
+        rec.final_loss()
+    );
+    // On average half a coordinate per iteration: nnz bits ≈ steps/2 · 36.
+    let expected_bits = (cfg.steps as u64 / 2) * (32 + 4);
+    let tol = expected_bits / 10;
+    assert!(
+        rec.total_bits.abs_diff(expected_bits) < tol,
+        "bits {} vs expected ~{expected_bits}",
+        rec.total_bits
+    );
+}
+
+#[test]
+fn sparse_dataset_end_to_end() {
+    // RCV1-like CSR data through the whole pipeline.
+    let data = synthetic::rcv1_like(2_000, 4_096, 0.005, 17);
+    let cfg = TrainConfig {
+        method: "memsgd:top_k:10".into(),
+        steps: 3 * data.n(),
+        eval_points: 6,
+        seed: 19,
+        ..TrainConfig::default()
+    }
+    .with_paper_schedule(data.d(), data.n(), 2.0, 10.0)
+    .unwrap();
+    let rec = train::run(&data, &cfg).unwrap();
+    let first = rec.curve[0].loss;
+    assert!(
+        rec.final_loss() < first - 0.02,
+        "no progress on sparse data: {first} → {}",
+        rec.final_loss()
+    );
+}
+
+#[test]
+fn all_methods_run_one_epoch_without_nans() {
+    let data = synthetic::epsilon_like(200, 32, 23);
+    for method in [
+        "sgd",
+        "memsgd:top_k:1",
+        "memsgd:rand_k:3",
+        "memsgd:random_p:0.25",
+        "memsgd:identity",
+        "sgd:qsgd:4",
+        "sgd:qsgd:16",
+        "sgd:unbiased_rand_k:4",
+    ] {
+        let cfg = TrainConfig {
+            method: method.into(),
+            steps: data.n(),
+            eval_points: 3,
+            seed: 29,
+            ..TrainConfig::default()
+        }
+        .with_paper_schedule(32, 200, 2.0, 1.0)
+        .unwrap();
+        let rec = train::run(&data, &cfg).unwrap();
+        assert!(
+            rec.curve.iter().all(|p| p.loss.is_finite()),
+            "{method} produced non-finite loss"
+        );
+    }
+}
+
+#[test]
+fn epochs_of_memsgd_beat_one_epoch() {
+    let data = synthetic::epsilon_like(500, 64, 31);
+    let run = |epochs: usize| {
+        let cfg = TrainConfig {
+            method: "memsgd:top_k:2".into(),
+            steps: epochs * data.n(),
+            eval_points: 3,
+            seed: 37,
+            ..TrainConfig::default()
+        }
+        .with_paper_schedule(64, 500, 2.0, 1.0)
+        .unwrap();
+        train::run(&data, &cfg).unwrap().final_loss()
+    };
+    assert!(run(4) < run(1), "more epochs should not hurt");
+}

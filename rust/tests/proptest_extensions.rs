@@ -1,0 +1,306 @@
+//! Property suite for the extension modules: exact wire encodings
+//! (Elias bitstreams), block top-k, checkpoint round-trips, and the
+//! network cost model's algebra.
+
+use memsgd::compress::elias::{
+    decode_qsgd, decode_sparse, encode_qsgd, encode_sparse, gamma_bits, BitReader, BitWriter,
+};
+use memsgd::compress::{self, Compressor, SparseVec, Update};
+use memsgd::coordinator::checkpoint::Checkpoint;
+use memsgd::optim::MemSgd;
+use memsgd::sim::network::{ComputeModel, NetworkModel};
+use memsgd::util::check::{check, ensure, ensure_close};
+use memsgd::util::prng::Prng;
+use memsgd::util::stats;
+
+/// γ/δ codes round-trip any u64 ≥ 1 and cost exactly 2⌊log₂v⌋+1 bits (γ).
+#[test]
+fn prop_elias_integer_roundtrip() {
+    check("elias integers", 400, |rng| {
+        let mut w = BitWriter::new();
+        let vals: Vec<u64> = (0..1 + rng.below(50))
+            .map(|_| 1 + (rng.next_u64() >> (rng.below(63) as u32)))
+            .collect();
+        for (i, &v) in vals.iter().enumerate() {
+            if i % 2 == 0 {
+                w.put_gamma(v);
+            } else {
+                w.put_delta(v);
+            }
+        }
+        let mut r = BitReader::new(w.as_bytes());
+        for (i, &v) in vals.iter().enumerate() {
+            let got = if i % 2 == 0 {
+                r.get_gamma().map_err(|e| e.to_string())?
+            } else {
+                r.get_delta().map_err(|e| e.to_string())?
+            };
+            ensure(got == v, format!("value {i}: {got} != {v}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// Sparse payloads round-trip exactly (values bit-identical, indices as a
+/// set), and the measured bit count matches the reader's consumption.
+#[test]
+fn prop_sparse_wire_roundtrip() {
+    check("sparse wire", 300, |rng| {
+        let dim = 1 + rng.below(60_000);
+        let nnz = rng.below(dim.min(128) + 1);
+        let mut idx = Vec::new();
+        rng.sample_distinct(dim, nnz, &mut idx);
+        let mut s = SparseVec::new(dim);
+        for &i in &idx {
+            s.push(i, rng.normal_f32() * 100.0);
+        }
+        let mut w = BitWriter::new();
+        let bits = encode_sparse(&s, &mut w);
+        let mut r = BitReader::new(w.as_bytes());
+        let back = decode_sparse(&mut r, dim).map_err(|e| e.to_string())?;
+        ensure(r.consumed() == bits, "bit accounting drift")?;
+        ensure(back.to_dense() == s.to_dense(), "payload mismatch")?;
+        // Envelope: footnote-5 accounting (k·(32 + log d) bits + header)
+        // should upper-bound the Elias payload for uniformly spread
+        // indices by a modest constant.
+        let naive = (nnz as u64) * (32 + (dim.max(2) as f64).log2().ceil() as u64) + 64;
+        ensure(
+            bits <= 2 * naive + 64,
+            format!("elias paid {bits} vs naive {naive}"),
+        )
+    });
+}
+
+/// QSGD payloads round-trip and tighter quantization costs fewer bits.
+#[test]
+fn prop_qsgd_wire_roundtrip_and_monotonicity() {
+    check("qsgd wire", 200, |rng| {
+        let dim = 1 + rng.below(4_096);
+        let density = 0.01 + rng.f64() * 0.2;
+        let levels: Vec<i32> = (0..dim)
+            .map(|_| {
+                if rng.bernoulli(density) {
+                    let m = 1 + rng.below(255) as i32;
+                    if rng.bernoulli(0.5) {
+                        -m
+                    } else {
+                        m
+                    }
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let norm = rng.f32().abs() + 0.1;
+        let mut w = BitWriter::new();
+        let bits = encode_qsgd(norm, &levels, &mut w);
+        let mut r = BitReader::new(w.as_bytes());
+        let (n2, l2) = decode_qsgd(&mut r, dim).map_err(|e| e.to_string())?;
+        ensure(r.consumed() == bits, "bit accounting drift")?;
+        ensure(n2.to_bits() == norm.to_bits(), "norm corrupted")?;
+        ensure(l2 == levels, "levels corrupted")?;
+        // Halving every magnitude cannot make the payload longer.
+        let halved: Vec<i32> = levels.iter().map(|&l| l / 2).collect();
+        let mut w2 = BitWriter::new();
+        let bits2 = encode_qsgd(norm, &halved, &mut w2);
+        ensure(
+            bits2 <= bits,
+            format!("halved levels cost more: {bits2} > {bits}"),
+        )
+    });
+}
+
+/// γ bit-cost formula agrees with the writer for random values.
+#[test]
+fn prop_gamma_bits_formula() {
+    check("gamma bits", 300, |rng| {
+        let v = 1 + (rng.next_u64() >> (1 + rng.below(62) as u32));
+        let mut w = BitWriter::new();
+        w.put_gamma(v);
+        ensure(
+            w.bits() == gamma_bits(v),
+            format!("v={v}: {} vs {}", w.bits(), gamma_bits(v)),
+        )
+    });
+}
+
+/// Block top-k is a contraction and never emits two picks per block.
+#[test]
+fn prop_block_top_k_contraction_and_structure() {
+    check("block top-k", 300, |rng| {
+        let d = 1 + rng.below(512);
+        let k = 1 + rng.below(d);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let mut comp = compress::from_spec(&format!("block_top_k:{k}")).unwrap();
+        let mut out = Update::new_sparse(d);
+        comp.compress(&x, rng, &mut out);
+        let dense = out.to_dense(d);
+        let resid: Vec<f32> = x.iter().zip(&dense).map(|(a, b)| a - b).collect();
+        let kk = comp.contraction_k(d).unwrap();
+        ensure(
+            stats::l2_norm_sq(&resid)
+                <= (1.0 - kk / d as f64) * stats::l2_norm_sq(&x) + 1e-6,
+            "contraction violated",
+        )?;
+        // Structure: at most one nonzero per block of size ⌈d/k⌉.
+        if let Update::Sparse(s) = &out {
+            let block = d.div_ceil(k.min(d));
+            let mut seen = std::collections::HashSet::new();
+            for &i in &s.idx {
+                ensure(
+                    seen.insert(i as usize / block),
+                    format!("two picks in block {}", i as usize / block),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Checkpoint bytes round-trip arbitrary trained states exactly.
+#[test]
+fn prop_checkpoint_roundtrip() {
+    check("checkpoint roundtrip", 60, |rng| {
+        let d = 1 + rng.below(300);
+        let k = 1 + rng.below(d);
+        let spec = format!("top_k:{k}");
+        let mut opt = MemSgd::new(
+            (0..d).map(|_| rng.normal_f32()).collect(),
+            compress::from_spec(&spec).unwrap(),
+        );
+        let steps = rng.below(40);
+        let grad: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        for _ in 0..steps {
+            opt.step(&grad, 0.1, rng);
+        }
+        let ck = Checkpoint::capture(&opt, &spec, rng, None);
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).map_err(|e| e.to_string())?;
+        ensure(back.x == opt.x, "x corrupted")?;
+        ensure(back.m == opt.m, "m corrupted")?;
+        ensure(back.t == opt.t, "t corrupted")?;
+        ensure(back.bits_sent == opt.bits_sent, "bits corrupted")?;
+        ensure(back.rng_state == rng.state(), "rng corrupted")
+    });
+}
+
+/// Resume-equivalence: split any run at a random point; the final state
+/// matches the uninterrupted run bit-for-bit.
+#[test]
+fn prop_checkpoint_resume_equivalence() {
+    check("checkpoint resume", 40, |rng| {
+        let d = 2 + rng.below(100);
+        let spec = match rng.below(3) {
+            0 => "top_k:1".to_string(),
+            1 => format!("rand_k:{}", 1 + rng.below(d / 2 + 1)),
+            _ => "sign".to_string(),
+        };
+        let total = 20 + rng.below(60);
+        let cut = 1 + rng.below(total - 1);
+        let seed = rng.next_u64();
+        let grad_at = |t: usize| -> Vec<f32> {
+            (0..d).map(|i| ((i * 31 + t * 7) as f32 * 0.013).sin()).collect()
+        };
+
+        let mut full = MemSgd::new(vec![0.0; d], compress::from_spec(&spec).unwrap());
+        let mut full_rng = Prng::new(seed);
+        for t in 0..total {
+            full.step(&grad_at(t), 0.07, &mut full_rng);
+        }
+
+        let mut part = MemSgd::new(vec![0.0; d], compress::from_spec(&spec).unwrap());
+        let mut part_rng = Prng::new(seed);
+        for t in 0..cut {
+            part.step(&grad_at(t), 0.07, &mut part_rng);
+        }
+        let ck = Checkpoint::capture(&part, &spec, &part_rng, None);
+        let (mut resumed, mut rng2, _) = ck.restore().map_err(|e| e.to_string())?;
+        for t in cut..total {
+            resumed.step(&grad_at(t), 0.07, &mut rng2);
+        }
+        ensure(resumed.x == full.x, format!("x diverged ({spec}, cut {cut})"))?;
+        ensure(resumed.m == full.m, "m diverged")?;
+        ensure(rng2.state() == full_rng.state(), "rng diverged")
+    });
+}
+
+/// Network model: round time decomposes additively and is monotone in
+/// bits, latency, and inverse bandwidth.
+#[test]
+fn prop_network_round_monotonicity() {
+    check("network monotone", 200, |rng| {
+        let lat = rng.f64() * 1e-3;
+        let bw = 1e6 + rng.f64() * 1e11;
+        let net = NetworkModel::new("t", lat, bw);
+        let up = rng.next_u64() % 1_000_000_000;
+        let down = rng.next_u64() % 1_000_000_000;
+        let comp = rng.f64() * 0.1;
+        let r = net.round_s(up, down, comp);
+        ensure_close(
+            r,
+            comp + 2.0 * lat + (up + down) as f64 / bw,
+            1e-12,
+            1e-15,
+            "decomposition",
+        )?;
+        ensure(net.round_s(up + 1024, down, comp) >= r, "not monotone in up")?;
+        let faster = NetworkModel::new("t2", lat, bw * 2.0);
+        ensure(
+            faster.round_s(up, down, comp) <= r,
+            "not monotone in bandwidth",
+        )
+    });
+}
+
+/// Compute model scales linearly in grads and straggler factor.
+#[test]
+fn prop_compute_model_linear() {
+    check("compute linear", 100, |rng| {
+        let per = 1e-10 + rng.f64() * 1e-8;
+        let coords = 1.0 + rng.f64() * 50_000.0;
+        let mut cm = ComputeModel::new(per, coords);
+        let one = cm.round_s(1);
+        ensure_close(cm.round_s(7), 7.0 * one, 1e-9, 0.0, "linear in grads")?;
+        cm.straggler_factor = 2.5;
+        ensure_close(cm.round_s(1), 2.5 * one, 1e-9, 0.0, "linear in straggler")
+    });
+}
+
+/// Every registered compressor survives adversarial inputs: zeros,
+/// constants, single spikes, NaN-free subnormals, d = 1.
+#[test]
+fn prop_compressors_survive_edge_inputs() {
+    let specs = [
+        "top_k:1",
+        "rand_k:1",
+        "random_p:0.5",
+        "block_top_k:2",
+        "qsgd:4",
+        "sign",
+        "threshold:0.5",
+        "identity",
+    ];
+    check("edge inputs", 150, |rng| {
+        let spec = specs[rng.below(specs.len())];
+        let d = 1 + rng.below(64);
+        let x: Vec<f32> = match rng.below(4) {
+            0 => vec![0.0; d],
+            1 => vec![1.0e-40; d], // subnormal
+            2 => {
+                let mut v = vec![0.0; d];
+                v[rng.below(d)] = 1.0e30;
+                v
+            }
+            _ => vec![-7.25; d],
+        };
+        let mut comp = compress::from_spec(spec).unwrap();
+        let mut out = Update::new_sparse(d);
+        let bits = comp.compress(&x, rng, &mut out);
+        let dense = out.to_dense(d);
+        ensure(dense.len() == d, "dimension corrupted")?;
+        ensure(
+            dense.iter().all(|v| v.is_finite()),
+            format!("{spec} emitted non-finite values"),
+        )?;
+        ensure(bits < (d as u64 + 8) * 64, format!("{spec} absurd bit count {bits}"))
+    });
+}

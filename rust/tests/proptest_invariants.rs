@@ -1,0 +1,242 @@
+//! Property-based invariant suite (util::check harness, proptest-style):
+//! randomized shapes, seeds and operators against the algebraic
+//! invariants the paper's analysis rests on.
+
+use memsgd::compress::{self, Compressor, SparseVec, Update};
+use memsgd::data::synthetic;
+use memsgd::models::{GradBackend, LogisticModel};
+use memsgd::optim::{MemSgd, WeightedAverage};
+use memsgd::util::check::{check, ensure, ensure_allclose, ensure_close};
+use memsgd::util::prng::Prng;
+use memsgd::util::stats;
+
+fn random_vec(rng: &mut Prng, d: usize) -> Vec<f32> {
+    (0..d).map(|_| rng.normal_f32() * 3.0).collect()
+}
+
+/// Definition 2.1 for every sparsifying operator, on random inputs.
+#[test]
+fn prop_contraction_property_all_sparsifiers() {
+    check("contraction", 300, |rng| {
+        let d = 1 + rng.below(256);
+        let k = 1 + rng.below(d);
+        let spec = match rng.below(3) {
+            0 => format!("top_k:{k}"),
+            1 => format!("rand_k:{k}"),
+            _ => "random_p:1.0".to_string(), // k = 1 contraction
+        };
+        let mut comp = compress::from_spec(&spec).unwrap();
+        let x = random_vec(rng, d);
+        let mut out = Update::new_sparse(d);
+        comp.compress(&x, rng, &mut out);
+        let dense = out.to_dense(d);
+        let resid: Vec<f32> = x.iter().zip(&dense).map(|(a, b)| a - b).collect();
+        let kk = comp.contraction_k(d).unwrap();
+        // top-k: pointwise; rand-k/random-p: the pointwise bound with
+        // k' = actual nnz >= bound with k in expectation — check the
+        // crude pointwise bound ||resid||^2 <= ||x||^2 plus the exact
+        // top-k bound when deterministic.
+        let x2 = stats::l2_norm_sq(&x);
+        ensure(stats::l2_norm_sq(&resid) <= x2 + 1e-6, "residual grew")?;
+        if spec.starts_with("top_k") {
+            let bound = (1.0 - kk / d as f64) * x2;
+            ensure(
+                stats::l2_norm_sq(&resid) <= bound + 1e-6,
+                format!("top-k contraction violated: d={d} k={k}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Compressed output values are always a subset of the input values
+/// (sparsifiers never invent values).
+#[test]
+fn prop_sparsifiers_copy_not_transform() {
+    check("copy-not-transform", 200, |rng| {
+        let d = 1 + rng.below(128);
+        let k = 1 + rng.below(d);
+        let spec = if rng.bernoulli(0.5) {
+            format!("top_k:{k}")
+        } else {
+            format!("rand_k:{k}")
+        };
+        let mut comp = compress::from_spec(&spec).unwrap();
+        let x = random_vec(rng, d);
+        let mut out = Update::new_sparse(d);
+        comp.compress(&x, rng, &mut out);
+        if let Update::Sparse(s) = &out {
+            for (&i, &v) in s.idx.iter().zip(&s.val) {
+                ensure(
+                    v == x[i as usize],
+                    format!("{spec}: value at {i} altered"),
+                )?;
+            }
+            // no duplicate indices
+            let mut idx = s.idx.clone();
+            idx.sort_unstable();
+            idx.dedup();
+            ensure(idx.len() == s.nnz(), "duplicate indices")?;
+        }
+        Ok(())
+    });
+}
+
+/// Mem-SGD conservation: x_t − m_t replays the uncompressed trajectory
+/// for arbitrary operators, stepsizes, and gradient sequences.
+#[test]
+fn prop_memsgd_conservation() {
+    check("memsgd-conservation", 60, |rng| {
+        let d = 2 + rng.below(64);
+        let k = 1 + rng.below(d);
+        let spec = match rng.below(3) {
+            0 => format!("top_k:{k}"),
+            1 => format!("rand_k:{k}"),
+            _ => "random_p:0.5".to_string(),
+        };
+        let mut opt = MemSgd::new(random_vec(rng, d), compress::from_spec(&spec).unwrap());
+        let mut virt = opt.x.clone();
+        for t in 0..100 {
+            let g = random_vec(rng, d);
+            let eta = 0.01 + rng.f64();
+            for (v, &gj) in virt.iter_mut().zip(&g) {
+                *v -= eta as f32 * gj;
+            }
+            opt.step(&g, eta, rng);
+            if t % 25 == 24 {
+                ensure_allclose(&opt.virtual_iterate(), &virt, 2e-3, 2e-3, &spec)?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// QSGD unbiasedness on random vectors (mean over repeats ≈ identity).
+#[test]
+fn prop_qsgd_unbiased() {
+    check("qsgd-unbiased", 20, |rng| {
+        let d = 2 + rng.below(32);
+        let levels = 1u32 << (1 + rng.below(6)); // 2..64
+        let x = random_vec(rng, d);
+        let mut comp = compress::Qsgd::new(levels);
+        let mut out = Update::new_dense(d);
+        let trials = 4_000;
+        let mut acc = vec![0.0f64; d];
+        for _ in 0..trials {
+            comp.compress(&x, rng, &mut out);
+            if let Update::Dense(g) = &out {
+                for (a, &v) in acc.iter_mut().zip(g) {
+                    *a += v as f64;
+                }
+            }
+        }
+        let norm = stats::l2_norm(&x);
+        for (j, (&xj, &aj)) in x.iter().zip(&acc).enumerate() {
+            let mean = aj / trials as f64;
+            // standard error of a bounded quantizer scales with ||x||
+            ensure_close(
+                mean,
+                xj as f64,
+                0.0,
+                0.12 * norm,
+                &format!("coord {j} of d={d}, s={levels}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Streaming weighted average == batch weighted average.
+#[test]
+fn prop_weighted_average_streaming() {
+    check("weighted-average", 100, |rng| {
+        let d = 1 + rng.below(32);
+        let t_total = 1 + rng.below(100);
+        let shift = 1.0 + rng.f64() * 500.0;
+        let iterates: Vec<Vec<f32>> = (0..t_total).map(|_| random_vec(rng, d)).collect();
+        let mut avg = WeightedAverage::new(d, shift);
+        for x in &iterates {
+            avg.update(x);
+        }
+        let mut acc = vec![0.0f64; d];
+        let mut sw = 0.0;
+        for (t, x) in iterates.iter().enumerate() {
+            let w = (shift + t as f64) * (shift + t as f64);
+            sw += w;
+            for (a, &xi) in acc.iter_mut().zip(x) {
+                *a += w * xi as f64;
+            }
+        }
+        let want: Vec<f32> = acc.iter().map(|a| (a / sw) as f32).collect();
+        ensure_allclose(&avg.average(), &want, 1e-4, 1e-4, "avg")
+    });
+}
+
+/// SparseVec apply/undo round-trips and norm bookkeeping.
+#[test]
+fn prop_sparsevec_algebra() {
+    check("sparsevec-algebra", 200, |rng| {
+        let d = 1 + rng.below(100);
+        let nnz = rng.below(d + 1);
+        let mut idxs: Vec<u32> = Vec::new();
+        rng.sample_distinct(d, nnz, &mut idxs);
+        let mut sv = SparseVec::new(d);
+        for &i in &idxs {
+            sv.push(i, rng.normal_f32());
+        }
+        let mut x = random_vec(rng, d);
+        let orig = x.clone();
+        sv.sub_from(&mut x);
+        sv.add_to(&mut x);
+        ensure_allclose(&x, &orig, 1e-5, 1e-5, "sub/add round trip")?;
+        let dense = sv.to_dense();
+        ensure_close(sv.norm_sq(), stats::l2_norm_sq(&dense), 1e-9, 1e-9, "norms")
+    });
+}
+
+/// Logistic gradients match central finite differences on random data
+/// (dense and sparse feature paths).
+#[test]
+fn prop_logistic_grad_finite_difference() {
+    check("logistic-fd", 30, |rng| {
+        let n = 20 + rng.below(60);
+        let d = 2 + rng.below(12);
+        let data = if rng.bernoulli(0.5) {
+            synthetic::epsilon_like(n, d, rng.next_u64())
+        } else {
+            synthetic::rcv1_like(n, d, 0.5, rng.next_u64())
+        };
+        let lam = rng.f64() * 0.3;
+        let mut model = LogisticModel::new(&data, lam);
+        let x: Vec<f32> = (0..d).map(|_| 0.3 * rng.normal_f32()).collect();
+        let mut grad = vec![0.0f32; d];
+        model.full_grad(&x, &mut grad);
+        let j = rng.below(d);
+        let eps = 1e-3f32;
+        let mut xp = x.clone();
+        xp[j] += eps;
+        let mut xm = x.clone();
+        xm[j] -= eps;
+        let fd = (model.full_loss(&xp) - model.full_loss(&xm)) / (2.0 * eps as f64);
+        ensure_close(fd, grad[j] as f64, 5e-2, 5e-3, &format!("coord {j}"))
+    });
+}
+
+/// Bit accounting: every sparsifier pays exactly nnz·(32 + ceil(log2 d)).
+#[test]
+fn prop_bit_accounting_exact() {
+    check("bit-accounting", 200, |rng| {
+        let d = 2 + rng.below(60_000);
+        let k = 1 + rng.below(20.min(d));
+        let mut comp = compress::from_spec(&format!("top_k:{k}")).unwrap();
+        let x = random_vec(rng, d.min(4_096)); // cap alloc; use real d for bits
+        let mut out = Update::new_sparse(x.len());
+        let bits = comp.compress(&x, rng, &mut out);
+        let nnz = out.nnz() as u64;
+        let idx_bits = memsgd::compress::sparse::index_bits(x.len());
+        ensure(
+            bits == nnz * (32 + idx_bits),
+            format!("bits {bits} != {nnz}*(32+{idx_bits})"),
+        )
+    });
+}
