@@ -7,12 +7,12 @@
 
 use anyhow::Result;
 
-use memsgd::coordinator::async_dist::{self, AsyncConfig};
+use memsgd::compress::{self, CompressorSpec};
 use memsgd::coordinator::checkpoint::Checkpoint;
-use memsgd::coordinator::distributed::{self, DistributedConfig};
-use memsgd::compress;
+use memsgd::coordinator::{Experiment, MethodSpec, Topology};
 use memsgd::experiments::{self, Which};
 use memsgd::metrics::{fmt_bits, summary_table};
+use memsgd::models::LogisticModel;
 use memsgd::optim::{MemSgd, Schedule};
 use memsgd::sim::network::{ComputeModel, NetworkModel};
 use memsgd::util::cli::Args;
@@ -36,20 +36,25 @@ fn main() -> Result<()> {
         workers
     );
 
-    // ---- 1. Synchronous parameter-server rounds, three wire formats.
+    // ---- 1. Synchronous parameter-server rounds, three wire formats,
+    //         all through the unified Experiment builder.
     println!("-- synchronous rounds ({rounds}) --");
+    let lam = 1.0 / data.n() as f64;
     let mut sync_records = Vec::new();
-    for spec in [format!("top_k:{k0}"), "qsgd:16".into(), "identity".to_string()] {
-        let cfg = DistributedConfig {
-            workers,
-            rounds,
-            compressor: spec.clone(),
-            schedule: Schedule::constant(0.5),
-            eval_points: 8,
-            lam: None,
-            seed,
-        };
-        let rec = distributed::run(&data, &cfg)?;
+    for comp in [
+        CompressorSpec::TopK { k: k0 },
+        CompressorSpec::Qsgd { levels: 16, eff: None },
+        CompressorSpec::Identity,
+    ] {
+        let rec = Experiment::new(LogisticModel::new(&data, lam))
+            .dataset(&data.name)
+            .method(MethodSpec::mem(comp))
+            .schedule(Schedule::constant(0.5))
+            .topology(Topology::ParamServerSync { nodes: workers })
+            .steps(rounds * workers)
+            .eval_points(8)
+            .seed(seed)
+            .run()?;
         println!(
             "  {:<28} final loss {:.4}   upload {:>10}  broadcast {:>10}",
             rec.method,
@@ -64,28 +69,29 @@ fn main() -> Result<()> {
     //         uploads keep the server NIC idle, dense ones queue.
     println!("\n-- asynchronous server, 1GbE, heterogeneous fleet --");
     let mean_coords = (data.nnz() as f64 / data.n() as f64).max(1.0);
-    for spec in [format!("top_k:{k0}"), "identity".to_string()] {
-        let cfg = AsyncConfig {
-            workers,
-            total_updates: rounds * workers,
-            compressor: spec.clone(),
-            schedule: Schedule::constant(0.5),
-            network: NetworkModel::eth_1g(),
-            compute: ComputeModel::new(1e-9, mean_coords),
-            hetero: 0.5,
-            eval_points: 8,
-            lam: None,
-            seed,
-        };
-        let (rec, stats) = async_dist::run(&data, &cfg)?;
+    for comp in [CompressorSpec::TopK { k: k0 }, CompressorSpec::Identity] {
+        let rec = Experiment::new(LogisticModel::new(&data, lam))
+            .dataset(&data.name)
+            .method(MethodSpec::mem(comp))
+            .schedule(Schedule::constant(0.5))
+            .topology(Topology::ParamServerAsync {
+                nodes: workers,
+                net: NetworkModel::eth_1g(),
+            })
+            .compute(ComputeModel::new(1e-9, mean_coords))
+            .hetero(0.5)
+            .steps(rounds * workers)
+            .eval_points(8)
+            .seed(seed)
+            .run()?;
         println!(
             "  {:<36} loss {:.4}  sim {:>8.3}s  staleness {:>5.1} (max {:>3})  link {:>5.1}%",
             rec.method,
             rec.final_loss(),
-            stats.sim_seconds,
-            stats.mean_staleness,
-            stats.max_staleness,
-            100.0 * stats.link_utilization,
+            rec.extra["sim_seconds"],
+            rec.extra["mean_staleness"],
+            rec.extra["max_staleness"],
+            100.0 * rec.extra["link_utilization"],
         );
     }
 

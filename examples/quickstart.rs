@@ -1,33 +1,54 @@
-//! Quickstart: Mem-SGD in ~30 lines.
+//! Quickstart: the unified `Experiment` API in ~40 lines.
 //!
-//! Trains L2-regularized logistic regression on a dense synthetic
-//! dataset three ways — vanilla SGD, Mem-SGD with top-1 sparsification,
-//! and the unbiased rand-1 baseline the paper's Section 2.2 warns about
-//! — and prints the loss curves plus the communication bill.
+//! One typed builder drives every training topology in the crate. This
+//! example trains L2-regularized logistic regression three ways —
+//! vanilla SGD, Mem-SGD with top-1 sparsification, and the unbiased
+//! rand-1 baseline the paper's Section 2.2 warns about — then reruns
+//! Mem-SGD on a 4-worker shared-memory topology, all through the same
+//! `Experiment::new(backend).method(..).topology(..).run()` chain.
+//!
+//! Migrating from the deprecated string-spec drivers:
+//!
+//! | old call | new builder chain |
+//! |---|---|
+//! | `train::run(&data, &TrainConfig { method: "memsgd:top_k:1".into(), .. })` | `Experiment::new(model).method(MethodSpec::mem_top_k(1)).run()?` |
+//! | `parallel::run(&data, &ParallelConfig { workers: 4, .. })` | `.topology(Topology::SharedMemory { workers: 4 }).run()?` |
+//! | `distributed::run(&data, &DistributedConfig { workers: 8, .. })` | `.topology(Topology::ParamServerSync { nodes: 8 }).run()?` |
+//! | `async_dist::run(&data, &AsyncConfig { .. })` | `.topology(Topology::ParamServerAsync { nodes: 8, net }).run()?` |
+//!
+//! The old entry points still work (they are shims over the same
+//! engines), and `MethodSpec::parse("memsgd:top_k:1")` covers the
+//! string edge for CLIs and config files.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use memsgd::coordinator::train::{self, TrainConfig};
+use memsgd::coordinator::{Experiment, MethodSpec, Topology};
 use memsgd::data::synthetic;
 use memsgd::metrics::summary_table;
+use memsgd::models::LogisticModel;
 
 fn main() -> anyhow::Result<()> {
     // A small epsilon-like problem: n = 4000 samples, d = 500 features.
     let data = synthetic::epsilon_like(4_000, 500, 42);
+    let lam = 1.0 / data.n() as f64;
     println!("dataset: {} ({} samples, {} features)\n", data.name, data.n(), data.d());
 
     let mut records = Vec::new();
-    for method in ["sgd", "memsgd:top_k:1", "sgd:unbiased_rand_k:1"] {
+    for method in [
+        MethodSpec::Sgd,
+        MethodSpec::mem_top_k(1),
+        MethodSpec::SgdUnbiasedRandK { k: 1 },
+    ] {
         // Theorem 2.4 stepsizes: η_t = γ/(λ(t+a)) with a = d/k.
-        let cfg = TrainConfig {
-            method: method.into(),
-            steps: 2 * data.n(), // two epochs
-            eval_points: 12,
-            seed: 7,
-            ..TrainConfig::default()
-        }
-        .with_paper_schedule(data.d(), data.n(), 2.0, 1.0)?;
-        let record = train::run(&data, &cfg)?;
+        let schedule = method.paper_schedule(data.d(), data.n(), 2.0, 1.0, None);
+        let record = Experiment::new(LogisticModel::new(&data, lam))
+            .dataset(&data.name)
+            .method(method)
+            .schedule(schedule)
+            .steps(2 * data.n()) // two epochs
+            .eval_points(12)
+            .seed(7)
+            .run()?;
         println!(
             "{:<24} final loss {:.4}   transmitted {}",
             record.method,
@@ -36,6 +57,24 @@ fn main() -> anyhow::Result<()> {
         );
         records.push(record);
     }
+
+    // Same method, different fabric: Algorithm 2's lock-free threads.
+    // Only the `.topology(..)` line changes.
+    let parallel = Experiment::new(LogisticModel::new(&data, lam))
+        .dataset(&data.name)
+        .method(MethodSpec::mem_top_k(1))
+        .schedule(memsgd::optim::Schedule::constant(0.05))
+        .topology(Topology::SharedMemory { workers: 4 })
+        .steps(2 * data.n())
+        .seed(7)
+        .run()?;
+    println!(
+        "{:<24} final loss {:.4}   transmitted {}",
+        parallel.method,
+        parallel.final_loss(),
+        memsgd::metrics::fmt_bits(parallel.total_bits)
+    );
+    records.push(parallel);
 
     println!("\n{}", summary_table(&records));
     println!(

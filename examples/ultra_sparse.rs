@@ -7,9 +7,11 @@
 
 use anyhow::Result;
 
-use memsgd::coordinator::train::{self, TrainConfig};
+use memsgd::compress::CompressorSpec;
+use memsgd::coordinator::{Experiment, MethodSpec};
 use memsgd::experiments::{self, Which};
 use memsgd::metrics::{fmt_bits, summary_table};
+use memsgd::models::LogisticModel;
 use memsgd::optim::Schedule;
 use memsgd::util::cli::Args;
 
@@ -34,16 +36,14 @@ fn main() -> Result<()> {
     for p in [1.0, 0.5, 0.25, 0.1] {
         let k = p; // contraction parameter
         let shift = Schedule::paper_shift(d, k, 1.0);
-        let cfg = TrainConfig {
-            method: format!("memsgd:random_p:{p}"),
-            schedule: Schedule::inv_t(2.0, lam, shift),
-            steps,
-            eval_points: 12,
-            average: true,
-            seed: seed ^ 0x07,
-            lam: Some(lam),
-        };
-        let rec = train::run(&data, &cfg)?;
+        let rec = Experiment::new(LogisticModel::new(&data, lam))
+            .dataset(&data.name)
+            .method(MethodSpec::mem(CompressorSpec::RandomP { p }))
+            .schedule(Schedule::inv_t(2.0, lam, shift))
+            .steps(steps)
+            .eval_points(12)
+            .seed(seed ^ 0x07)
+            .run()?;
         let bits_per_coord = 32.0 + (d as f64).log2().ceil(); // footnote-5 encoding
         let sent = rec
             .curve
@@ -60,16 +60,14 @@ fn main() -> Result<()> {
     }
 
     // Vanilla baseline for the same budget.
-    let cfg = TrainConfig {
-        method: "sgd".into(),
-        schedule: Schedule::inv_t(2.0, lam, 1.0),
-        steps,
-        eval_points: 12,
-        average: true,
-        seed: seed ^ 0x07,
-        lam: Some(lam),
-    };
-    let sgd = train::run(&data, &cfg)?;
+    let sgd = Experiment::new(LogisticModel::new(&data, lam))
+        .dataset(&data.name)
+        .method(MethodSpec::Sgd)
+        .schedule(Schedule::inv_t(2.0, lam, 1.0))
+        .steps(steps)
+        .eval_points(12)
+        .seed(seed ^ 0x07)
+        .run()?;
     println!(
         "  sgd       final loss {:.4}   {:>9} total   {d} coords/iteration",
         sgd.final_loss(),

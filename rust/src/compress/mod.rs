@@ -147,50 +147,211 @@ impl Compressor for Identity {
     }
 }
 
+/// A **typed** compression-operator specification: the parsed form of the
+/// spec strings (`top_k:1`, `qsgd:16:71`, ...) that the CLI and config
+/// files use. Operator parameters live here as numbers, so everything
+/// downstream of the parse edge ([`CompressorSpec::parse`]) is infallible
+/// — no `expect()` on user input deep inside a driver.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CompressorSpec {
+    /// `comp = id` — vanilla dense transmission.
+    Identity,
+    /// Keep the `k` largest-magnitude coordinates (Definition 2.2).
+    TopK { k: usize },
+    /// Keep `k` uniformly random coordinates (Definition 2.2).
+    RandK { k: usize },
+    /// Ultra-sparsification (Remark 2.3): one random coordinate with
+    /// probability `p`, nothing otherwise.
+    RandomP { p: f64 },
+    /// Contiguous-block top-k (cache-friendly variant).
+    BlockTopK { k: usize },
+    /// 1Bit-SGD sign + mean-magnitude operator.
+    Sign,
+    /// Relative-threshold sparsification with cutoff `tau`.
+    Threshold { tau: f32 },
+    /// QSGD random quantizer: `levels`, optional sparsity-aware effective
+    /// dimension for the Appendix-B bit accounting.
+    Qsgd { levels: u32, eff: Option<usize> },
+}
+
+impl CompressorSpec {
+    /// Parse a spec string. **Strict**: every `:`-separated component
+    /// must be consumed — `top_k:1:junk` is an error, not a silently
+    /// truncated `top_k:1`.
+    pub fn parse(spec: &str) -> Result<CompressorSpec> {
+        let mut parts = spec.split(':');
+        let kind = parts.next().unwrap_or_default();
+        let arg = parts.next();
+        let arg2 = parts.next();
+        if let Some(extra) = parts.next() {
+            bail!("trailing component '{extra}' in compressor spec '{spec}'");
+        }
+        let no_arg2 = |what: &str| -> Result<()> {
+            match arg2 {
+                Some(extra) => bail!("trailing component '{extra}' in {what} spec '{spec}'"),
+                None => Ok(()),
+            }
+        };
+        let parse_k = |s: Option<&str>, what: &str| -> Result<usize> {
+            let k = match s {
+                Some(v) => v
+                    .parse::<usize>()
+                    .map_err(|e| anyhow::anyhow!("{what} argument '{v}': {e}"))?,
+                None => bail!("{what} requires an argument, e.g. '{what}:1'"),
+            };
+            if k == 0 {
+                bail!("{what} requires k >= 1");
+            }
+            Ok(k)
+        };
+        Ok(match kind {
+            "identity" | "none" | "sgd" => {
+                if let Some(extra) = arg {
+                    bail!("trailing component '{extra}' in compressor spec '{spec}'");
+                }
+                CompressorSpec::Identity
+            }
+            "top_k" | "topk" | "top" => {
+                no_arg2("top_k")?;
+                CompressorSpec::TopK { k: parse_k(arg, "top_k")? }
+            }
+            "rand_k" | "randk" | "rand" => {
+                no_arg2("rand_k")?;
+                CompressorSpec::RandK { k: parse_k(arg, "rand_k")? }
+            }
+            "random_p" | "ultra" => {
+                no_arg2("random_p")?;
+                let p: f64 = match arg {
+                    Some(v) => v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("random_p argument '{v}': {e}"))?,
+                    None => bail!("random_p requires a probability, e.g. 'random_p:0.5'"),
+                };
+                if !(p > 0.0 && p <= 1.0) {
+                    bail!("random_p requires p in (0, 1], got {p}");
+                }
+                CompressorSpec::RandomP { p }
+            }
+            "qsgd" => {
+                let levels = parse_k(arg, "qsgd")? as u32;
+                let eff = match arg2 {
+                    Some(v) => Some(
+                        v.parse::<usize>()
+                            .map_err(|e| anyhow::anyhow!("qsgd effective dim '{v}': {e}"))?,
+                    ),
+                    None => None,
+                };
+                CompressorSpec::Qsgd { levels, eff }
+            }
+            "block_top_k" | "block" => {
+                no_arg2("block_top_k")?;
+                CompressorSpec::BlockTopK { k: parse_k(arg, "block_top_k")? }
+            }
+            "sign" | "1bit" => {
+                if let Some(extra) = arg {
+                    bail!("trailing component '{extra}' in sign spec '{spec}'");
+                }
+                CompressorSpec::Sign
+            }
+            "threshold" | "thresh" => {
+                no_arg2("threshold")?;
+                let tau: f32 = match arg {
+                    Some(v) => v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("threshold argument '{v}': {e}"))?,
+                    None => bail!("threshold requires tau, e.g. 'threshold:0.25'"),
+                };
+                if !(tau > 0.0 && tau <= 1.0) {
+                    bail!("threshold requires tau in (0, 1], got {tau}");
+                }
+                CompressorSpec::Threshold { tau }
+            }
+            other => bail!("unknown compressor spec '{other}' (full spec: '{spec}')"),
+        })
+    }
+
+    /// Instantiate the operator. Infallible: every variant holds
+    /// already-validated parameters.
+    pub fn build(&self) -> Box<dyn Compressor> {
+        match self {
+            CompressorSpec::Identity => Box::new(Identity),
+            CompressorSpec::TopK { k } => Box::new(TopK::new(*k)),
+            CompressorSpec::RandK { k } => Box::new(RandK::new(*k)),
+            CompressorSpec::RandomP { p } => Box::new(RandomP::new(*p)),
+            CompressorSpec::BlockTopK { k } => Box::new(BlockTopK::new(*k)),
+            CompressorSpec::Sign => Box::new(SignSgd::new()),
+            CompressorSpec::Threshold { tau } => Box::new(Threshold::new(*tau)),
+            CompressorSpec::Qsgd { levels, eff } => {
+                Box::new(Qsgd::with_effective_dim(*levels, *eff))
+            }
+        }
+    }
+
+    /// The operator's display name. Mirrors each [`Compressor::name`]
+    /// without building the operator (asserted against the built
+    /// operator in the tests below).
+    pub fn name(&self) -> String {
+        match self {
+            CompressorSpec::Identity => "identity".into(),
+            CompressorSpec::TopK { k } => format!("top_{k}"),
+            CompressorSpec::RandK { k } => format!("rand_{k}"),
+            CompressorSpec::RandomP { p } => format!("random_p_{p}"),
+            CompressorSpec::BlockTopK { k } => format!("block_top_{k}"),
+            CompressorSpec::Sign => "sign_1bit".into(),
+            CompressorSpec::Threshold { tau } => format!("threshold_{tau}"),
+            CompressorSpec::Qsgd { levels, .. } => {
+                format!("qsgd_{}bit", (*levels as f64).log2().round() as u32)
+            }
+        }
+    }
+
+    /// Contraction parameter `k` of Definition 2.1 (None for QSGD).
+    /// Mirrors each [`Compressor::contraction_k`] without building the
+    /// operator (asserted against the built operator in the tests below).
+    pub fn contraction_k(&self, d: usize) -> Option<f64> {
+        match self {
+            CompressorSpec::Identity => Some(d as f64),
+            CompressorSpec::TopK { k } | CompressorSpec::RandK { k } => Some((*k).min(d) as f64),
+            CompressorSpec::RandomP { p } => Some(*p),
+            CompressorSpec::BlockTopK { k } => {
+                if d == 0 {
+                    return Some(*k as f64);
+                }
+                let b = d.div_ceil((*k).min(d));
+                Some(d as f64 / b as f64)
+            }
+            CompressorSpec::Sign | CompressorSpec::Threshold { .. } => Some(1.0),
+            CompressorSpec::Qsgd { .. } => None,
+        }
+    }
+
+    /// Canonical spec string — parses back to `self`.
+    pub fn spec_string(&self) -> String {
+        match self {
+            CompressorSpec::Identity => "identity".into(),
+            CompressorSpec::TopK { k } => format!("top_k:{k}"),
+            CompressorSpec::RandK { k } => format!("rand_k:{k}"),
+            CompressorSpec::RandomP { p } => format!("random_p:{p}"),
+            CompressorSpec::BlockTopK { k } => format!("block_top_k:{k}"),
+            CompressorSpec::Sign => "sign".into(),
+            CompressorSpec::Threshold { tau } => format!("threshold:{tau}"),
+            CompressorSpec::Qsgd { levels, eff } => match eff {
+                Some(e) => format!("qsgd:{levels}:{e}"),
+                None => format!("qsgd:{levels}"),
+            },
+        }
+    }
+}
+
 /// Parse a compressor spec string: `top_k:1`, `rand_k:10`, `random_p:0.5`,
 /// `qsgd:16` (levels), `qsgd:16:71` (levels + effective sparsity-aware
 /// dimension, Appendix B), or `identity`.
+///
+/// Thin shim over [`CompressorSpec::parse`] + [`CompressorSpec::build`];
+/// kept for call sites that go straight from a string to an operator.
+/// Unconsumed spec components are rejected.
 pub fn from_spec(spec: &str) -> Result<Box<dyn Compressor>> {
-    let mut parts = spec.split(':');
-    let kind = parts.next().unwrap_or_default();
-    let arg = parts.next();
-    let arg2 = parts.next();
-    let parse_usize = |s: Option<&str>, what: &str| -> Result<usize> {
-        match s {
-            Some(v) => Ok(v.parse::<usize>()?),
-            None => bail!("{what} requires an argument, e.g. '{what}:1'"),
-        }
-    };
-    Ok(match kind {
-        "identity" | "none" | "sgd" => Box::new(Identity),
-        "top_k" | "topk" | "top" => Box::new(TopK::new(parse_usize(arg, "top_k")?)),
-        "rand_k" | "randk" | "rand" => Box::new(RandK::new(parse_usize(arg, "rand_k")?)),
-        "random_p" | "ultra" => {
-            let p: f64 = match arg {
-                Some(v) => v.parse()?,
-                None => bail!("random_p requires a probability, e.g. 'random_p:0.5'"),
-            };
-            Box::new(RandomP::new(p))
-        }
-        "qsgd" => {
-            let levels = parse_usize(arg, "qsgd")? as u32;
-            let eff = match arg2 {
-                Some(v) => Some(v.parse::<usize>()?),
-                None => None,
-            };
-            Box::new(Qsgd::with_effective_dim(levels, eff))
-        }
-        "block_top_k" | "block" => Box::new(BlockTopK::new(parse_usize(arg, "block_top_k")?)),
-        "sign" | "1bit" => Box::new(SignSgd::new()),
-        "threshold" | "thresh" => {
-            let tau: f32 = match arg {
-                Some(v) => v.parse()?,
-                None => bail!("threshold requires tau, e.g. 'threshold:0.25'"),
-            };
-            Box::new(Threshold::new(tau))
-        }
-        other => bail!("unknown compressor spec '{other}' (full spec: '{spec}')"),
-    })
+    Ok(CompressorSpec::parse(spec)?.build())
 }
 
 #[cfg(test)]
@@ -237,5 +398,93 @@ mod tests {
         assert!(from_spec("nope").is_err());
         assert!(from_spec("top_k").is_err());
         assert!(from_spec("top_k:x").is_err());
+    }
+
+    #[test]
+    fn spec_parsing_rejects_trailing_components() {
+        // Every unconsumed part is an error, not silently ignored.
+        assert!(from_spec("top_k:1:junk").is_err());
+        assert!(from_spec("rand_k:2:9").is_err());
+        assert!(from_spec("identity:1").is_err());
+        assert!(from_spec("sign:3").is_err());
+        assert!(from_spec("random_p:0.5:x").is_err());
+        assert!(from_spec("threshold:0.25:x").is_err());
+        assert!(from_spec("qsgd:16:71:zz").is_err());
+        // ...while fully-consumed specs still parse.
+        assert!(from_spec("qsgd:16:71").is_ok());
+    }
+
+    #[test]
+    fn spec_parsing_rejects_out_of_range_params() {
+        assert!(from_spec("top_k:0").is_err());
+        assert!(from_spec("rand_k:0").is_err());
+        assert!(from_spec("random_p:0").is_err());
+        assert!(from_spec("random_p:1.5").is_err());
+        assert!(from_spec("threshold:0").is_err());
+        assert!(from_spec("threshold:2").is_err());
+        assert!(from_spec("qsgd:0").is_err());
+    }
+
+    #[test]
+    fn typed_spec_round_trips() {
+        for spec in [
+            "identity",
+            "top_k:3",
+            "rand_k:10",
+            "random_p:0.25",
+            "block_top_k:4",
+            "sign",
+            "threshold:0.25",
+            "qsgd:16",
+            "qsgd:16:71",
+        ] {
+            let parsed = CompressorSpec::parse(spec).unwrap();
+            assert_eq!(
+                CompressorSpec::parse(&parsed.spec_string()).unwrap(),
+                parsed,
+                "{spec}"
+            );
+        }
+        // Typed parameters are held directly — no re-parse needed.
+        assert_eq!(
+            CompressorSpec::parse("top_k:3").unwrap(),
+            CompressorSpec::TopK { k: 3 }
+        );
+        assert_eq!(
+            CompressorSpec::parse("qsgd:16:71").unwrap(),
+            CompressorSpec::Qsgd { levels: 16, eff: Some(71) }
+        );
+        assert_eq!(CompressorSpec::TopK { k: 3 }.contraction_k(100), Some(3.0));
+        assert_eq!(CompressorSpec::Qsgd { levels: 16, eff: None }.contraction_k(100), None);
+    }
+
+    #[test]
+    fn typed_spec_mirrors_built_operator() {
+        // name()/contraction_k() are hand-mirrored (no boxing on the
+        // naming path); this pins them to the operators' own answers.
+        for spec in [
+            "identity",
+            "top_k:3",
+            "top_k:200", // k > d: operator caps at d
+            "rand_k:10",
+            "random_p:0.25",
+            "block_top_k:4",
+            "block_top_k:7", // d % k != 0: ceil-block contraction
+            "sign",
+            "threshold:0.25",
+            "qsgd:16",
+            "qsgd:16:71",
+        ] {
+            let typed = CompressorSpec::parse(spec).unwrap();
+            let built = typed.build();
+            assert_eq!(typed.name(), built.name(), "{spec}");
+            for d in [1usize, 5, 64, 100] {
+                assert_eq!(
+                    typed.contraction_k(d),
+                    built.contraction_k(d),
+                    "{spec} at d={d}"
+                );
+            }
+        }
     }
 }

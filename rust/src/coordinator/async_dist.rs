@@ -21,19 +21,16 @@
 //! uploads don't queue) and the optimization effect (staleness +
 //! error-feedback still converge).
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
-use std::time::Instant;
-
 use anyhow::Result;
 
-use crate::compress::{self, Compressor, Update};
+use super::config::MethodSpec;
+use super::experiment;
+use crate::compress::CompressorSpec;
 use crate::data::Dataset;
-use crate::metrics::{LossPoint, RunRecord};
-use crate::models::{GradBackend, LogisticModel};
+use crate::metrics::RunRecord;
+use crate::models::LogisticModel;
 use crate::optim::Schedule;
 use crate::sim::network::{ComputeModel, NetworkModel};
-use crate::util::prng::Prng;
 
 /// Configuration of an asynchronous distributed run.
 #[derive(Clone, Debug)]
@@ -77,27 +74,6 @@ impl Default for AsyncConfig {
     }
 }
 
-/// Per-worker async state.
-struct AsyncWorker {
-    memory: Vec<f32>,
-    v: Vec<f32>,
-    comp: Box<dyn Compressor>,
-    update: Update,
-    rng: Prng,
-    /// Server update-counter value at this worker's last fetch.
-    fetch_version: u64,
-    /// Compute-time multiplier ≥ 1.
-    slow: f64,
-    bits_uploaded: u64,
-}
-
-/// Pending event: a worker finishing its gradient at `t_ns`.
-#[derive(PartialEq, Eq, PartialOrd, Ord)]
-struct Finish {
-    t_ns: u64,
-    worker: usize,
-}
-
 /// Outcome extras beyond the shared [`RunRecord`].
 #[derive(Clone, Debug)]
 pub struct AsyncStats {
@@ -113,162 +89,38 @@ pub struct AsyncStats {
 
 /// Run asynchronous distributed Mem-SGD; returns the loss record (curve
 /// is indexed by server updates, `extra` carries the async stats).
+///
+/// Deprecated shim: parses the compressor spec once and delegates to the
+/// generic asynchronous parameter-server engine behind
+/// [`super::experiment::Experiment`] (topology `ParamServerAsync`); the
+/// event loop, staleness accounting, and link model live there.
 pub fn run(data: &Dataset, cfg: &AsyncConfig) -> Result<(RunRecord, AsyncStats)> {
-    let d = data.d();
-    let n = data.n();
-    let lam = cfg.lam.unwrap_or(1.0 / n as f64);
-    let mut model = LogisticModel::new(data, lam);
-    let mut root_rng = Prng::new(cfg.seed);
-
-    let mut workers: Vec<AsyncWorker> = (0..cfg.workers)
-        .map(|w| {
-            Ok(AsyncWorker {
-                memory: vec![0.0; d],
-                v: vec![0.0; d],
-                comp: compress::from_spec(&cfg.compressor)?,
-                update: Update::new_sparse(d),
-                rng: root_rng.split(w as u64 + 1),
-                fetch_version: 0,
-                slow: 1.0
-                    + if cfg.workers > 1 {
-                        cfg.hetero * w as f64 / (cfg.workers - 1) as f64
-                    } else {
-                        0.0
-                    },
-                bits_uploaded: 0,
-            })
-        })
-        .collect::<Result<_>>()?;
-
-    let mut x = vec![0.0f32; d];
-    let mut grad = vec![0.0f32; d];
-
-    // Event queue: min-heap over finish time.
-    let mut queue: BinaryHeap<Reverse<Finish>> = BinaryHeap::new();
-    let compute_ns = |w: &AsyncWorker, cm: &ComputeModel| -> u64 {
-        (cm.s_per_coord * cm.coords_per_grad * w.slow * 1e9).max(1.0) as u64
-    };
-    for (i, w) in workers.iter().enumerate() {
-        queue.push(Reverse(Finish {
-            t_ns: compute_ns(w, &cfg.compute),
-            worker: i,
-        }));
-    }
-
-    let mut version = 0u64; // server update counter
-    let mut link_free_ns = 0u64; // server ingress link busy-until
-    let mut link_busy_total = 0u64;
-    let mut staleness_sum = 0u64;
-    let mut staleness_max = 0u64;
-    let mut now_ns = 0u64;
-
-    let eval_every = (cfg.total_updates / cfg.eval_points.max(1)).max(1);
-    let mut record = RunRecord {
-        method: format!(
-            "async_memsgd({},W={},{})",
-            cfg.compressor, cfg.workers, cfg.network.name
-        ),
+    let comp = CompressorSpec::parse(&cfg.compressor)?;
+    let lam = cfg.lam.unwrap_or(1.0 / data.n() as f64);
+    let settings = experiment::Settings {
+        method: MethodSpec::MemSgd { comp },
+        schedule: cfg.schedule.clone(),
+        steps: cfg.total_updates,
+        eval_points: cfg.eval_points,
+        average: false,
+        seed: cfg.seed,
         dataset: data.name.clone(),
-        schedule: cfg.schedule.describe(),
-        ..Default::default()
     };
-    let started = Instant::now();
-    record.curve.push(LossPoint {
-        t: 0,
-        bits: 0,
-        loss: model.full_loss(&x),
-    });
-
-    while version < cfg.total_updates as u64 {
-        let Reverse(ev) = queue.pop().expect("queue never empties");
-        now_ns = now_ns.max(ev.t_ns);
-        let w = &mut workers[ev.worker];
-
-        // The worker finished its gradient (computed on the x it fetched;
-        // staleness-wise the fetch snapshot is what matters — we apply
-        // against the *current* x exactly like a real lock-free PS).
-        let i = w.rng.below(n);
-        model.sample_grad(&x, i, &mut grad);
-        let eta = cfg.schedule.eta(version as usize) as f32;
-        // Error feedback only for contraction operators (unbiased
-        // quantizers run memory-free, as in the paper's §4.3 baseline).
-        let use_memory = w.comp.contraction_k(d).is_some();
-        if use_memory {
-            for ((vj, &mj), &gj) in w.v.iter_mut().zip(&w.memory).zip(&grad) {
-                *vj = mj + eta * gj;
-            }
-        } else {
-            for (vj, &gj) in w.v.iter_mut().zip(&grad) {
-                *vj = eta * gj;
-            }
-        }
-        let bits = w.comp.compress(&w.v, &mut w.rng, &mut w.update);
-        w.bits_uploaded += bits;
-        if use_memory {
-            std::mem::swap(&mut w.memory, &mut w.v);
-            w.update.sub_from(&mut w.memory);
-        }
-
-        // Upload queues behind the shared server link. The link is busy
-        // for the serialization time only; propagation latency delays the
-        // arrival but does not occupy the link.
-        let xfer_ns = (cfg.network.xfer_s(bits) * 1e9).max(1.0) as u64;
-        let latency_ns = (cfg.network.latency_s * 1e9) as u64;
-        let start_ns = ev.t_ns.max(link_free_ns);
-        link_free_ns = start_ns + xfer_ns;
-        link_busy_total += xfer_ns;
-        let arrive_ns = link_free_ns + latency_ns;
-        now_ns = now_ns.max(arrive_ns);
-
-        // Server applies instantly on receipt.
-        w.update.sub_from(&mut x);
-        version += 1;
-        let stale = version - 1 - w.fetch_version;
-        staleness_sum += stale;
-        staleness_max = staleness_max.max(stale);
-
-        // Worker refetches and starts the next gradient.
-        w.fetch_version = version;
-        queue.push(Reverse(Finish {
-            t_ns: arrive_ns + compute_ns(w, &cfg.compute),
-            worker: ev.worker,
-        }));
-
-        if version % eval_every as u64 == 0 || version == cfg.total_updates as u64 {
-            let bits: u64 = workers.iter().map(|w| w.bits_uploaded).sum();
-            record.curve.push(LossPoint {
-                t: version as usize,
-                bits,
-                loss: model.full_loss(&x),
-            });
-        }
-    }
-
-    let total_bits: u64 = workers.iter().map(|w| w.bits_uploaded).sum();
-    record.steps = version as usize;
-    record.total_bits = total_bits;
-    record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+    let mut model = LogisticModel::new(data, lam);
+    let record = experiment::param_server_async(
+        &mut model,
+        cfg.workers,
+        &cfg.network,
+        &cfg.compute,
+        cfg.hetero,
+        &settings,
+    )?;
     let stats = AsyncStats {
-        mean_staleness: staleness_sum as f64 / version.max(1) as f64,
-        max_staleness: staleness_max,
-        sim_seconds: now_ns as f64 / 1e9,
-        link_utilization: if now_ns > 0 {
-            (link_busy_total as f64 / now_ns as f64).min(1.0)
-        } else {
-            0.0
-        },
+        mean_staleness: record.extra.get("mean_staleness").copied().unwrap_or(0.0),
+        max_staleness: record.extra.get("max_staleness").copied().unwrap_or(0.0) as u64,
+        sim_seconds: record.extra.get("sim_seconds").copied().unwrap_or(0.0),
+        link_utilization: record.extra.get("link_utilization").copied().unwrap_or(0.0),
     };
-    record
-        .extra
-        .insert("mean_staleness".into(), stats.mean_staleness);
-    record
-        .extra
-        .insert("max_staleness".into(), stats.max_staleness as f64);
-    record.extra.insert("sim_seconds".into(), stats.sim_seconds);
-    record
-        .extra
-        .insert("link_utilization".into(), stats.link_utilization);
-    record.extra.insert("workers".into(), cfg.workers as f64);
     Ok((record, stats))
 }
 

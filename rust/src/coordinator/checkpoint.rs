@@ -149,8 +149,8 @@ impl Checkpoint {
         for v in &mut x {
             *v = f32::from_le_bytes(read_arr(&mut cur)?);
         }
-        let mut m = vec![0.0f32; d];
-        for v in &mut m {
+        let mut memory = vec![0.0f32; d];
+        for v in &mut memory {
             *v = f32::from_le_bytes(read_arr(&mut cur)?);
         }
         let mut rng_state = [0u64; 4];
@@ -178,7 +178,7 @@ impl Checkpoint {
             t,
             bits_sent,
             x,
-            m,
+            m: memory,
             rng_state,
             avg,
         })

@@ -1,25 +1,36 @@
 //! Method specifications: which optimizer + compressor combination runs.
 //!
-//! Spec grammar (used by the CLI, config files and all drivers):
+//! [`MethodSpec`] is the **typed** form — operator parameters live here
+//! as numbers, parsed once at the CLI/JSON edge by [`MethodSpec::parse`].
+//! Everything downstream (naming, contraction parameters, optimizer
+//! construction) is infallible: no re-parsing, no `expect()` on user
+//! input inside a driver.
+//!
+//! Spec grammar (used by the CLI and config files):
 //!
 //! ```text
-//! memsgd:<compressor-spec>     Algorithm 1 with any compress::from_spec
-//!                              operator, e.g. memsgd:top_k:1
+//! memsgd:<compressor-spec>     Algorithm 1 with any compress operator,
+//!                              e.g. memsgd:top_k:1
 //! sgd                          vanilla SGD (dense transmission)
 //! sgd:qsgd:<levels>[:<eff_d>]  QSGD baseline (Section 4.3)
 //! sgd:unbiased_rand_k:<k>      the d/k-scaled unbiased baseline (§2.2)
 //! ```
+//!
+//! Parsing is strict: unconsumed spec components (`memsgd:top_k:1:junk`)
+//! are rejected with a clear error.
 
 use anyhow::{bail, Result};
 
-use crate::compress;
-use crate::optim::{MemSgd, Sgd};
+use crate::compress::CompressorSpec;
+use crate::optim::{ErrorFeedbackStep, MemSgd, Schedule, Sgd};
 
-/// A parsed method specification.
+/// A parsed, fully-typed method specification.
 #[derive(Clone, Debug, PartialEq)]
-pub enum Method {
-    /// Algorithm 1 with the given compressor spec.
-    MemSgd { comp: String },
+pub enum MethodSpec {
+    /// Algorithm 1 with the given compression operator. Contraction
+    /// operators carry an error memory; non-contractions (QSGD) run
+    /// memory-free, as in the paper's §4.3 baseline.
+    MemSgd { comp: CompressorSpec },
     /// Vanilla SGD.
     Sgd,
     /// QSGD (levels, optional effective dimension for bit accounting).
@@ -28,39 +39,79 @@ pub enum Method {
     SgdUnbiasedRandK { k: usize },
 }
 
-impl Method {
-    pub fn parse(spec: &str) -> Result<Method> {
+/// Deprecated name of [`MethodSpec`], kept for source compatibility.
+#[deprecated(note = "use MethodSpec; Method's stringly `comp` field is gone")]
+pub type Method = MethodSpec;
+
+impl MethodSpec {
+    /// Mem-SGD with a typed operator — the programmatic constructor.
+    pub fn mem(comp: CompressorSpec) -> MethodSpec {
+        MethodSpec::MemSgd { comp }
+    }
+
+    /// Mem-SGD with top-k sparsification (the paper's best performer).
+    pub fn mem_top_k(k: usize) -> MethodSpec {
+        MethodSpec::MemSgd { comp: CompressorSpec::TopK { k } }
+    }
+
+    /// Mem-SGD with rand-k sparsification.
+    pub fn mem_rand_k(k: usize) -> MethodSpec {
+        MethodSpec::MemSgd { comp: CompressorSpec::RandK { k } }
+    }
+
+    /// Parse a spec string (the CLI/JSON edge). Strict: every
+    /// `:`-separated component must be consumed.
+    pub fn parse(spec: &str) -> Result<MethodSpec> {
         let (head, rest) = match spec.split_once(':') {
             Some((h, r)) => (h, Some(r)),
             None => (spec, None),
         };
         Ok(match (head, rest) {
-            ("memsgd", Some(comp)) => {
-                compress::from_spec(comp)?; // validate eagerly
-                Method::MemSgd { comp: comp.to_string() }
-            }
+            ("memsgd", Some(comp)) => MethodSpec::MemSgd { comp: CompressorSpec::parse(comp)? },
             ("memsgd", None) => bail!("memsgd requires a compressor, e.g. 'memsgd:top_k:1'"),
-            ("sgd", None) => Method::Sgd,
+            ("sgd", None) => MethodSpec::Sgd,
             ("sgd", Some(r)) => {
                 let mut parts = r.split(':');
-                match parts.next() {
+                let variant = parts.next();
+                let no_trailing = |parts: &mut std::str::Split<'_, char>| -> Result<()> {
+                    match parts.next() {
+                        Some(extra) => bail!("trailing component '{extra}' in '{spec}'"),
+                        None => Ok(()),
+                    }
+                };
+                match variant {
                     Some("qsgd") => {
                         let levels: u32 = match parts.next() {
-                            Some(v) => v.parse()?,
+                            Some(v) => v
+                                .parse()
+                                .map_err(|e| anyhow::anyhow!("qsgd levels '{v}': {e}"))?,
                             None => bail!("sgd:qsgd requires levels, e.g. 'sgd:qsgd:16'"),
                         };
+                        if levels == 0 {
+                            bail!("sgd:qsgd requires levels >= 1");
+                        }
                         let eff = match parts.next() {
-                            Some(v) => Some(v.parse::<usize>()?),
+                            Some(v) => Some(
+                                v.parse::<usize>()
+                                    .map_err(|e| anyhow::anyhow!("qsgd effective dim '{v}': {e}"))?,
+                            ),
                             None => None,
                         };
-                        Method::SgdQsgd { levels, eff }
+                        no_trailing(&mut parts)?;
+                        MethodSpec::SgdQsgd { levels, eff }
                     }
                     Some("unbiased_rand_k") => {
                         let k: usize = match parts.next() {
-                            Some(v) => v.parse()?,
+                            Some(v) => v
+                                .parse()
+                                .map_err(|e| anyhow::anyhow!("unbiased_rand_k '{v}': {e}"))?,
                             None => bail!("sgd:unbiased_rand_k requires k"),
                         };
-                        Method::SgdUnbiasedRandK { k }
+                        if k == 0 {
+                            bail!("sgd:unbiased_rand_k requires k >= 1");
+                        }
+                        no_trailing(&mut parts)?;
+                        MethodSpec::SgdUnbiasedRandK { k }
                     }
                     other => bail!("unknown sgd variant {other:?} in '{spec}'"),
                 }
@@ -69,43 +120,105 @@ impl Method {
         })
     }
 
-    /// Display name used in records and plots.
+    /// Display name used in records and plots. Infallible — the typed
+    /// spec holds its parameters, nothing is re-parsed.
     pub fn name(&self) -> String {
         match self {
-            Method::MemSgd { comp } => {
-                let c = compress::from_spec(comp).expect("validated at parse");
-                format!("memsgd({})", c.name())
-            }
-            Method::Sgd => "sgd".into(),
-            Method::SgdQsgd { levels, .. } => {
+            MethodSpec::MemSgd { comp } => format!("memsgd({})", comp.name()),
+            MethodSpec::Sgd => "sgd".into(),
+            MethodSpec::SgdQsgd { levels, .. } => {
                 format!("sgd_qsgd_{}bit", (*levels as f64).log2().round() as u32)
             }
-            Method::SgdUnbiasedRandK { k } => format!("sgd_unbiased_rand_{k}"),
+            MethodSpec::SgdUnbiasedRandK { k } => format!("sgd_unbiased_rand_{k}"),
+        }
+    }
+
+    /// Canonical spec string — parses back to `self`.
+    pub fn spec_string(&self) -> String {
+        match self {
+            MethodSpec::MemSgd { comp } => format!("memsgd:{}", comp.spec_string()),
+            MethodSpec::Sgd => "sgd".into(),
+            MethodSpec::SgdQsgd { levels, eff } => match eff {
+                Some(e) => format!("sgd:qsgd:{levels}:{e}"),
+                None => format!("sgd:qsgd:{levels}"),
+            },
+            MethodSpec::SgdUnbiasedRandK { k } => format!("sgd:unbiased_rand_k:{k}"),
         }
     }
 
     /// Contraction parameter of the underlying operator (drives the
     /// paper's stepsize shift `a ∝ d/k`); `d` for vanilla, `None` for
-    /// non-contractive QSGD.
+    /// non-contractive QSGD. Infallible.
     pub fn contraction_k(&self, d: usize) -> Option<f64> {
         match self {
-            Method::MemSgd { comp } => compress::from_spec(comp)
-                .expect("validated at parse")
-                .contraction_k(d),
-            Method::Sgd => Some(d as f64),
-            Method::SgdQsgd { .. } => None,
-            Method::SgdUnbiasedRandK { k } => Some(*k as f64),
+            MethodSpec::MemSgd { comp } => comp.contraction_k(d),
+            MethodSpec::Sgd => Some(d as f64),
+            MethodSpec::SgdQsgd { .. } => None,
+            MethodSpec::SgdUnbiasedRandK { k } => Some(*k as f64),
         }
     }
 
-    /// Instantiate the optimizer at `x0`.
-    pub fn build(&self, x0: Vec<f32>) -> Result<Optimizer> {
-        Ok(match self {
-            Method::MemSgd { comp } => Optimizer::Mem(MemSgd::new(x0, compress::from_spec(comp)?)),
-            Method::Sgd => Optimizer::Plain(Sgd::vanilla(x0)),
-            Method::SgdQsgd { levels, eff } => Optimizer::Plain(Sgd::qsgd(x0, *levels, *eff)),
-            Method::SgdUnbiasedRandK { k } => Optimizer::Plain(Sgd::unbiased_rand_k(x0, *k)),
-        })
+    /// The paper's theoretical schedule (Table 2) for this method on a
+    /// `d`-dimensional, `n`-sample problem: `η_t = γ/(λ(t+a))` with
+    /// `a = multiplier·d/k` and `λ` defaulting to `1/n`.
+    pub fn paper_schedule(
+        &self,
+        d: usize,
+        n: usize,
+        gamma: f64,
+        shift_multiplier: f64,
+        lam: Option<f64>,
+    ) -> Schedule {
+        let k = self.contraction_k(d).unwrap_or(d as f64);
+        let lam = lam.unwrap_or(1.0 / n as f64);
+        Schedule::inv_t(gamma, lam, Schedule::paper_shift(d, k, shift_multiplier))
+    }
+
+    /// Per-worker error-feedback state for the topology engines: the
+    /// compressor, memory policy, and unbiasing scale this method implies.
+    ///
+    /// Memory policy (uniform across all four topologies and
+    /// [`MethodSpec::build`]): `MemSgd` carries an error memory only for
+    /// contraction operators; non-contractions (QSGD) run memory-free as
+    /// in the paper's §4.3 baseline — accumulating unbiased quantization
+    /// noise would amplify it instead of correcting it.
+    pub fn error_feedback(&self, d: usize) -> ErrorFeedbackStep {
+        match self {
+            MethodSpec::MemSgd { comp } => ErrorFeedbackStep::new(d, comp.build()),
+            MethodSpec::Sgd => {
+                ErrorFeedbackStep::memory_free(d, Box::new(crate::compress::Identity), 1.0)
+            }
+            MethodSpec::SgdQsgd { levels, eff } => ErrorFeedbackStep::memory_free(
+                d,
+                Box::new(crate::compress::Qsgd::with_effective_dim(*levels, *eff)),
+                1.0,
+            ),
+            MethodSpec::SgdUnbiasedRandK { k } => ErrorFeedbackStep::memory_free(
+                d,
+                Box::new(crate::compress::RandK::new(*k)),
+                d as f32 / *k as f32,
+            ),
+        }
+    }
+
+    /// Instantiate the legacy stepping interface at `x0`. Infallible.
+    ///
+    /// Matches [`MethodSpec::error_feedback`]'s memory policy exactly:
+    /// `MemSgd` with a non-contraction operator (QSGD) steps memory-free,
+    /// so the same spec runs the same algorithm through every entry point.
+    pub fn build(&self, x0: Vec<f32>) -> Optimizer {
+        match self {
+            MethodSpec::MemSgd { comp } => {
+                if comp.contraction_k(x0.len()).is_some() {
+                    Optimizer::Mem(MemSgd::new(x0, comp.build()))
+                } else {
+                    Optimizer::Plain(Sgd::with_compressor(x0, comp.build(), 1.0))
+                }
+            }
+            MethodSpec::Sgd => Optimizer::Plain(Sgd::vanilla(x0)),
+            MethodSpec::SgdQsgd { levels, eff } => Optimizer::Plain(Sgd::qsgd(x0, *levels, *eff)),
+            MethodSpec::SgdUnbiasedRandK { k } => Optimizer::Plain(Sgd::unbiased_rand_k(x0, *k)),
+        }
     }
 }
 
@@ -149,56 +262,119 @@ mod tests {
     #[test]
     fn parses_all_method_kinds() {
         assert_eq!(
-            Method::parse("memsgd:top_k:1").unwrap(),
-            Method::MemSgd { comp: "top_k:1".into() }
+            MethodSpec::parse("memsgd:top_k:1").unwrap(),
+            MethodSpec::MemSgd { comp: CompressorSpec::TopK { k: 1 } }
         );
-        assert_eq!(Method::parse("sgd").unwrap(), Method::Sgd);
+        assert_eq!(MethodSpec::parse("sgd").unwrap(), MethodSpec::Sgd);
         assert_eq!(
-            Method::parse("sgd:qsgd:16").unwrap(),
-            Method::SgdQsgd { levels: 16, eff: None }
-        );
-        assert_eq!(
-            Method::parse("sgd:qsgd:16:71").unwrap(),
-            Method::SgdQsgd { levels: 16, eff: Some(71) }
+            MethodSpec::parse("sgd:qsgd:16").unwrap(),
+            MethodSpec::SgdQsgd { levels: 16, eff: None }
         );
         assert_eq!(
-            Method::parse("sgd:unbiased_rand_k:10").unwrap(),
-            Method::SgdUnbiasedRandK { k: 10 }
+            MethodSpec::parse("sgd:qsgd:16:71").unwrap(),
+            MethodSpec::SgdQsgd { levels: 16, eff: Some(71) }
+        );
+        assert_eq!(
+            MethodSpec::parse("sgd:unbiased_rand_k:10").unwrap(),
+            MethodSpec::SgdUnbiasedRandK { k: 10 }
         );
     }
 
     #[test]
     fn rejects_bad_specs() {
-        assert!(Method::parse("memsgd").is_err());
-        assert!(Method::parse("memsgd:bogus:1").is_err());
-        assert!(Method::parse("sgd:bogus").is_err());
-        assert!(Method::parse("adam").is_err());
-        assert!(Method::parse("sgd:qsgd").is_err());
+        assert!(MethodSpec::parse("memsgd").is_err());
+        assert!(MethodSpec::parse("memsgd:bogus:1").is_err());
+        assert!(MethodSpec::parse("sgd:bogus").is_err());
+        assert!(MethodSpec::parse("adam").is_err());
+        assert!(MethodSpec::parse("sgd:qsgd").is_err());
     }
 
     #[test]
-    fn names() {
-        assert_eq!(Method::parse("memsgd:top_k:1").unwrap().name(), "memsgd(top_1)");
-        assert_eq!(Method::parse("sgd:qsgd:256").unwrap().name(), "sgd_qsgd_8bit");
-        assert_eq!(Method::parse("sgd").unwrap().name(), "sgd");
+    fn rejects_trailing_components() {
+        assert!(MethodSpec::parse("memsgd:top_k:1:junk").is_err());
+        assert!(MethodSpec::parse("sgd:qsgd:16:71:junk").is_err());
+        assert!(MethodSpec::parse("sgd:unbiased_rand_k:10:junk").is_err());
+        assert!(MethodSpec::parse("memsgd:identity:junk").is_err());
+    }
+
+    #[test]
+    fn names_are_infallible() {
+        assert_eq!(MethodSpec::parse("memsgd:top_k:1").unwrap().name(), "memsgd(top_1)");
+        assert_eq!(MethodSpec::parse("sgd:qsgd:256").unwrap().name(), "sgd_qsgd_8bit");
+        assert_eq!(MethodSpec::parse("sgd").unwrap().name(), "sgd");
+        assert_eq!(MethodSpec::mem_top_k(3).name(), "memsgd(top_3)");
+    }
+
+    #[test]
+    fn spec_string_round_trips() {
+        for spec in [
+            "memsgd:top_k:1",
+            "memsgd:random_p:0.5",
+            "sgd",
+            "sgd:qsgd:16",
+            "sgd:qsgd:16:71",
+            "sgd:unbiased_rand_k:10",
+        ] {
+            let m = MethodSpec::parse(spec).unwrap();
+            assert_eq!(MethodSpec::parse(&m.spec_string()).unwrap(), m, "{spec}");
+        }
     }
 
     #[test]
     fn contraction_parameters() {
-        assert_eq!(Method::parse("memsgd:top_k:3").unwrap().contraction_k(100), Some(3.0));
-        assert_eq!(Method::parse("memsgd:random_p:0.5").unwrap().contraction_k(100), Some(0.5));
-        assert_eq!(Method::parse("sgd").unwrap().contraction_k(100), Some(100.0));
-        assert_eq!(Method::parse("sgd:qsgd:16").unwrap().contraction_k(100), None);
+        assert_eq!(MethodSpec::parse("memsgd:top_k:3").unwrap().contraction_k(100), Some(3.0));
+        assert_eq!(
+            MethodSpec::parse("memsgd:random_p:0.5").unwrap().contraction_k(100),
+            Some(0.5)
+        );
+        assert_eq!(MethodSpec::parse("sgd").unwrap().contraction_k(100), Some(100.0));
+        assert_eq!(MethodSpec::parse("sgd:qsgd:16").unwrap().contraction_k(100), None);
+    }
+
+    #[test]
+    fn paper_schedule_uses_contraction_shift() {
+        let m = MethodSpec::mem_top_k(2);
+        match m.paper_schedule(64, 1000, 2.0, 1.0, None) {
+            Schedule::InvT { shift, lambda, .. } => {
+                assert_eq!(shift, 32.0); // d/k = 64/2
+                assert!((lambda - 1e-3).abs() < 1e-12);
+            }
+            _ => panic!("expected InvT"),
+        }
     }
 
     #[test]
     fn build_and_step() {
         let mut rng = crate::util::prng::Prng::new(0);
         for spec in ["memsgd:top_k:1", "sgd", "sgd:qsgd:16", "sgd:unbiased_rand_k:2"] {
-            let mut opt = Method::parse(spec).unwrap().build(vec![0.0; 8]).unwrap();
+            let mut opt = MethodSpec::parse(spec).unwrap().build(vec![0.0; 8]);
             opt.step(&[1.0; 8], 0.1, &mut rng);
             assert!(opt.bits_sent() > 0, "{spec}");
             assert_eq!(opt.x().len(), 8);
+        }
+    }
+
+    #[test]
+    fn error_feedback_policy_per_method() {
+        assert!(MethodSpec::mem_top_k(1).error_feedback(8).uses_memory());
+        assert!(!MethodSpec::Sgd.error_feedback(8).uses_memory()); // identity needs no memory
+        assert!(!MethodSpec::SgdQsgd { levels: 16, eff: None }.error_feedback(8).uses_memory());
+        assert!(!MethodSpec::SgdUnbiasedRandK { k: 2 }.error_feedback(8).uses_memory());
+        // memsgd with a non-contraction runs memory-free too (§4.3).
+        assert!(!MethodSpec::parse("memsgd:qsgd:16").unwrap().error_feedback(8).uses_memory());
+    }
+
+    #[test]
+    fn build_memory_policy_matches_error_feedback() {
+        // The legacy Optimizer interface and the engines must agree on
+        // when an error memory exists — same spec, same algorithm.
+        match MethodSpec::mem_top_k(1).build(vec![0.0; 8]) {
+            Optimizer::Mem(_) => {}
+            Optimizer::Plain(_) => panic!("top_k must carry memory"),
+        }
+        match MethodSpec::parse("memsgd:qsgd:16").unwrap().build(vec![0.0; 8]) {
+            Optimizer::Plain(_) => {}
+            Optimizer::Mem(_) => panic!("memsgd:qsgd must run memory-free"),
         }
     }
 }

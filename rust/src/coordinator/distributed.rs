@@ -22,18 +22,22 @@
 //! The simulation runs in-process but preserves the exact dataflow of a
 //! real deployment: workers only ever observe `x_t` and their private
 //! memory, and the server only ever observes the compressed uploads.
-
-use std::collections::BTreeMap;
-use std::time::Instant;
+//!
+//! The round loop lives in the generic parameter-server engine of
+//! [`super::experiment`] (topology `ParamServerSync { nodes }`), which
+//! runs the crate-wide [`crate::optim::ErrorFeedbackStep`] against any
+//! [`crate::models::GradBackend`]; this module keeps the deprecated
+//! string-spec [`run`] shim.
 
 use anyhow::Result;
 
-use crate::compress::{self, Compressor, Update};
+use super::config::MethodSpec;
+use super::experiment;
+use crate::compress::CompressorSpec;
 use crate::data::Dataset;
-use crate::metrics::{LossPoint, RunRecord};
-use crate::models::{GradBackend, LogisticModel};
+use crate::metrics::RunRecord;
+use crate::models::LogisticModel;
 use crate::optim::Schedule;
-use crate::util::prng::Prng;
 
 /// Configuration of a synchronous distributed run.
 #[derive(Clone, Debug)]
@@ -67,139 +71,26 @@ impl Default for DistributedConfig {
     }
 }
 
-/// One worker's state: private error memory + compressor + RNG stream.
-struct Worker {
-    memory: Vec<f32>,
-    v: Vec<f32>,
-    comp: Box<dyn Compressor>,
-    update: Update,
-    rng: Prng,
-    bits_uploaded: u64,
-}
-
 /// Run synchronous distributed Mem-SGD; evaluates the final server
 /// iterate plus a loss curve, and accounts upload + broadcast bits.
+///
+/// Deprecated shim: parses the compressor spec once and delegates to the
+/// generic parameter-server engine behind
+/// [`super::experiment::Experiment`] (topology `ParamServerSync`).
 pub fn run(data: &Dataset, cfg: &DistributedConfig) -> Result<RunRecord> {
-    let d = data.d();
-    let n = data.n();
-    let lam = cfg.lam.unwrap_or(1.0 / n as f64);
-    let mut model = LogisticModel::new(data, lam);
-    let mut root_rng = Prng::new(cfg.seed);
-
-    let mut workers: Vec<Worker> = (0..cfg.workers)
-        .map(|w| {
-            Ok(Worker {
-                memory: vec![0.0; d],
-                v: vec![0.0; d],
-                comp: compress::from_spec(&cfg.compressor)?,
-                update: Update::new_sparse(d),
-                rng: root_rng.split(w as u64 + 1),
-                bits_uploaded: 0,
-            })
-        })
-        .collect::<Result<_>>()?;
-
-    let mut x = vec![0.0f32; d];
-    let mut grad = vec![0.0f32; d];
-    // Server-side aggregation buffer: coordinate → summed update.
-    let mut agg: BTreeMap<u32, f32> = BTreeMap::new();
-    let mut agg_dense = vec![0.0f32; d];
-    let mut broadcast_bits = 0u64;
-    let idx_bits = crate::compress::sparse::index_bits(d);
-
-    let eval_every = (cfg.rounds / cfg.eval_points.max(1)).max(1);
-    let mut record = RunRecord {
-        method: format!("dist_memsgd({},W={})", cfg.compressor, cfg.workers),
+    let comp = CompressorSpec::parse(&cfg.compressor)?;
+    let lam = cfg.lam.unwrap_or(1.0 / data.n() as f64);
+    let settings = experiment::Settings {
+        method: MethodSpec::MemSgd { comp },
+        schedule: cfg.schedule.clone(),
+        steps: cfg.rounds * cfg.workers.max(1),
+        eval_points: cfg.eval_points,
+        average: false,
+        seed: cfg.seed,
         dataset: data.name.clone(),
-        schedule: cfg.schedule.describe(),
-        ..Default::default()
     };
-    let started = Instant::now();
-    record.curve.push(LossPoint {
-        t: 0,
-        bits: 0,
-        loss: model.full_loss(&x),
-    });
-
-    for round in 0..cfg.rounds {
-        let eta = cfg.schedule.eta(round);
-        let etaf = eta as f32;
-        agg.clear();
-        let mut any_dense = false;
-        for worker in workers.iter_mut() {
-            // Local stochastic gradient at the *current broadcast* x.
-            let i = worker.rng.below(n);
-            model.sample_grad(&x, i, &mut grad);
-            // Error feedback only for contraction operators; unbiased
-            // quantizers (QSGD) run memory-free exactly as in the paper's
-            // §4.3 baseline — accumulating their unbiased noise would
-            // amplify it instead of correcting it.
-            let use_memory = worker.comp.contraction_k(d).is_some();
-            if use_memory {
-                for ((vj, &mj), &gj) in worker.v.iter_mut().zip(&worker.memory).zip(&grad) {
-                    *vj = mj + etaf * gj;
-                }
-            } else {
-                for (vj, &gj) in worker.v.iter_mut().zip(&grad) {
-                    *vj = etaf * gj;
-                }
-            }
-            worker.bits_uploaded += worker.comp.compress(&worker.v, &mut worker.rng, &mut worker.update);
-            // Server receives the upload and folds it into the aggregate.
-            match &worker.update {
-                Update::Sparse(s) => {
-                    for (&j, &vj) in s.idx.iter().zip(&s.val) {
-                        *agg.entry(j).or_insert(0.0) += vj;
-                    }
-                }
-                Update::Dense(g) => {
-                    any_dense = true;
-                    for (a, &gj) in agg_dense.iter_mut().zip(g) {
-                        *a += gj;
-                    }
-                }
-            }
-            // Local memory update m ← v − g (contraction operators only).
-            if use_memory {
-                std::mem::swap(&mut worker.memory, &mut worker.v);
-                worker.update.sub_from(&mut worker.memory);
-            }
-        }
-        // Server applies the mean update and broadcasts it.
-        let scale = 1.0 / cfg.workers as f32;
-        if any_dense {
-            for (xj, a) in x.iter_mut().zip(agg_dense.iter_mut()) {
-                *xj -= *a * scale;
-                *a = 0.0;
-            }
-            broadcast_bits += 32 * d as u64;
-        } else {
-            for (&j, &vj) in agg.iter() {
-                x[j as usize] -= vj * scale;
-            }
-            broadcast_bits += agg.len() as u64 * (32 + idx_bits);
-        }
-
-        if (round + 1) % eval_every == 0 || round + 1 == cfg.rounds {
-            let uploads: u64 = workers.iter().map(|w| w.bits_uploaded).sum();
-            record.curve.push(LossPoint {
-                t: round + 1,
-                bits: uploads + broadcast_bits,
-                loss: model.full_loss(&x),
-            });
-        }
-    }
-
-    let uploads: u64 = workers.iter().map(|w| w.bits_uploaded).sum();
-    record.steps = cfg.rounds * cfg.workers;
-    record.total_bits = uploads + broadcast_bits;
-    record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
-    record.extra.insert("workers".into(), cfg.workers as f64);
-    record.extra.insert("upload_bits".into(), uploads as f64);
-    record
-        .extra
-        .insert("broadcast_bits".into(), broadcast_bits as f64);
-    Ok(record)
+    let mut model = LogisticModel::new(data, lam);
+    experiment::param_server_sync(&mut model, cfg.workers, &settings)
 }
 
 #[cfg(test)]

@@ -1,0 +1,781 @@
+//! The unified experiment API: **one typed builder + one generic engine
+//! behind all four training topologies**.
+//!
+//! The paper's claim is that Mem-SGD keeps vanilla-SGD rates whether it
+//! runs sequentially (Algorithm 1), over lock-free shared memory
+//! (Algorithm 2), or against a parameter server (§1/§5). This module
+//! makes that claim an API fact: every topology executes the *same*
+//! per-worker [`ErrorFeedbackStep`] against the *same*
+//! [`GradBackend`] abstraction — only the coordination fabric differs.
+//!
+//! ```no_run
+//! use memsgd::coordinator::experiment::{Experiment, Topology};
+//! use memsgd::coordinator::config::MethodSpec;
+//! use memsgd::models::LogisticModel;
+//! use memsgd::optim::Schedule;
+//! # fn main() -> anyhow::Result<()> {
+//! # let data = memsgd::data::synthetic::epsilon_like(1000, 64, 1);
+//! let record = Experiment::new(LogisticModel::new(&data, 1e-3))
+//!     .dataset(&data.name)
+//!     .method(MethodSpec::mem_top_k(1))
+//!     .schedule(Schedule::constant(0.1))
+//!     .topology(Topology::ParamServerSync { nodes: 8 })
+//!     .steps(10_000)
+//!     .eval_points(20)
+//!     .seed(1)
+//!     .run()?;
+//! println!("{} -> {}", record.method, record.final_loss());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Worker randomness is derived uniformly across topologies: one root
+//! generator `Prng::new(seed)` hands out child streams in worker order
+//! (`root.split(1)` for worker 0, then `root.split(2)` for worker 1,
+//! ... — the root's state advances with each split, so the sequence of
+//! split calls is part of the contract), and the sequential engine is
+//! "worker 0 of 1". Consequently a 1-worker `SharedMemory` or
+//! `ParamServerSync` run reproduces the `Sequential` trajectory **bit
+//! for bit** for deterministic compressors — the cross-topology
+//! consistency test in `tests/experiment_api.rs` pins this down.
+//!
+//! The deprecated per-driver entry points
+//! ([`super::train::run`], [`super::parallel::run`],
+//! [`super::distributed::run`], [`super::async_dist::run`]) are thin
+//! shims over this module; new code should use the builder.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::config::MethodSpec;
+use super::parallel::SharedParams;
+use crate::compress::Update;
+use crate::metrics::{LossPoint, RunRecord};
+use crate::models::GradBackend;
+use crate::optim::{ErrorFeedbackStep, Schedule, WeightedAverage};
+use crate::sim::network::{ComputeModel, NetworkModel};
+use crate::util::prng::Prng;
+
+/// How workers coordinate: the four training fabrics of the paper.
+#[derive(Clone, Debug)]
+pub enum Topology {
+    /// Algorithm 1: one worker, exact reads, loss curve + optional
+    /// Theorem-2.4 weighted averaging.
+    Sequential,
+    /// Algorithm 2: `workers` lock-free threads over one shared
+    /// parameter vector (final-iterate evaluation, §4.4 protocol).
+    SharedMemory { workers: usize },
+    /// Synchronous parameter-server rounds over `nodes` workers with
+    /// per-node error memories and aggregated sparse broadcast.
+    ParamServerSync { nodes: usize },
+    /// Asynchronous parameter server under a network cost model:
+    /// stale gradients, serialized server ingress, simulated time.
+    ParamServerAsync { nodes: usize, net: NetworkModel },
+}
+
+impl Topology {
+    /// Number of concurrent workers this topology runs.
+    pub fn workers(&self) -> usize {
+        match self {
+            Topology::Sequential => 1,
+            Topology::SharedMemory { workers } => (*workers).max(1),
+            Topology::ParamServerSync { nodes } => (*nodes).max(1),
+            Topology::ParamServerAsync { nodes, .. } => (*nodes).max(1),
+        }
+    }
+}
+
+/// Resolved run settings shared by every engine.
+pub(crate) struct Settings {
+    pub method: MethodSpec,
+    pub schedule: Schedule,
+    pub steps: usize,
+    pub eval_points: usize,
+    pub average: bool,
+    pub seed: u64,
+    pub dataset: String,
+}
+
+/// Builder for one training run: backend × method × schedule × topology.
+///
+/// `steps` is always the **total stochastic-gradient budget**. The
+/// multi-worker engines split it evenly by integer division —
+/// `SharedMemory` runs `max(1, steps / workers)` steps per worker,
+/// `ParamServerSync` runs `max(1, steps / nodes)` rounds of `nodes`
+/// gradients — so when `steps` is not a multiple of the worker count
+/// the *executed* total differs from the request (remainder dropped,
+/// or rounded up to one step/round per worker). The executed count is
+/// what [`RunRecord::steps`] reports; pass a multiple of the worker
+/// count for exact budgets.
+pub struct Experiment<B: GradBackend> {
+    backend: B,
+    method: MethodSpec,
+    schedule: Schedule,
+    topology: Topology,
+    steps: usize,
+    eval_points: usize,
+    average: bool,
+    seed: u64,
+    dataset: String,
+    compute: ComputeModel,
+    hetero: f64,
+}
+
+impl<B: GradBackend> Experiment<B> {
+    /// Start from a gradient backend with the defaults of the sequential
+    /// figure drivers: Mem-SGD top-1, constant η = 0.05, 10 000 steps.
+    pub fn new(backend: B) -> Self {
+        Experiment {
+            backend,
+            method: MethodSpec::mem_top_k(1),
+            schedule: Schedule::constant(0.05),
+            topology: Topology::Sequential,
+            steps: 10_000,
+            eval_points: 20,
+            average: true,
+            seed: 1,
+            dataset: "unnamed".into(),
+            compute: ComputeModel::new(1e-9, 2000.0),
+            hetero: 0.5,
+        }
+    }
+
+    /// The (typed) optimizer + compressor combination to run.
+    pub fn method(mut self, method: MethodSpec) -> Self {
+        self.method = method;
+        self
+    }
+
+    /// Parse a `memsgd:top_k:1`-style spec — the CLI/JSON edge.
+    pub fn parse_method(mut self, spec: &str) -> Result<Self> {
+        self.method = MethodSpec::parse(spec)?;
+        Ok(self)
+    }
+
+    /// Stepsize schedule (indexed by worker-local step / server round).
+    pub fn schedule(mut self, schedule: Schedule) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    /// Coordination fabric.
+    pub fn topology(mut self, topology: Topology) -> Self {
+        self.topology = topology;
+        self
+    }
+
+    /// Total stochastic-gradient budget across all workers (split by
+    /// integer division for multi-worker topologies — see the type-level
+    /// docs; `RunRecord::steps` reports the executed count).
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    /// Number of loss evaluations along the run (plus the start point).
+    pub fn eval_points(mut self, eval_points: usize) -> Self {
+        self.eval_points = eval_points;
+        self
+    }
+
+    /// Evaluate the Theorem-2.4 weighted average instead of the last
+    /// iterate (`Sequential` only; the multi-worker topologies follow
+    /// the paper's final-iterate protocol).
+    pub fn average(mut self, average: bool) -> Self {
+        self.average = average;
+        self
+    }
+
+    /// Base PRNG seed; one root `Prng::new(seed)` hands each worker an
+    /// independent child stream in worker order (see the module docs).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Dataset provenance recorded in the run record.
+    pub fn dataset(mut self, name: &str) -> Self {
+        self.dataset = name.to_string();
+        self
+    }
+
+    /// Per-gradient compute cost (`ParamServerAsync` only).
+    pub fn compute(mut self, compute: ComputeModel) -> Self {
+        self.compute = compute;
+        self
+    }
+
+    /// Worker speed spread (`ParamServerAsync` only): worker `w` computes
+    /// at `1 + hetero·w/(W−1)` × the base time.
+    pub fn hetero(mut self, hetero: f64) -> Self {
+        self.hetero = hetero;
+        self
+    }
+
+    fn settings(&self) -> Settings {
+        Settings {
+            method: self.method.clone(),
+            schedule: self.schedule.clone(),
+            steps: self.steps,
+            eval_points: self.eval_points,
+            average: self.average,
+            seed: self.seed,
+            dataset: self.dataset.clone(),
+        }
+    }
+
+    /// Run on the calling thread without requiring `B: Clone + Send` —
+    /// for backends that cannot be replicated across threads (e.g. a
+    /// PJRT runtime). Available for every topology except
+    /// [`Topology::SharedMemory`], whose engine clones one backend per
+    /// worker thread; the parameter-server engines simulate their nodes
+    /// in-process against the single backend.
+    pub fn run_single_threaded(mut self) -> Result<RunRecord> {
+        let s = self.settings();
+        match self.topology.clone() {
+            Topology::Sequential => sequential(&mut self.backend, &s),
+            Topology::ParamServerSync { nodes } => param_server_sync(&mut self.backend, nodes, &s),
+            Topology::ParamServerAsync { nodes, net } => {
+                let compute = self.compute.clone();
+                let hetero = self.hetero;
+                param_server_async(&mut self.backend, nodes, &net, &compute, hetero, &s)
+            }
+            Topology::SharedMemory { .. } => bail!(
+                "SharedMemory replicates the backend across threads; \
+                 use run() (backend must be Clone + Send)"
+            ),
+        }
+    }
+
+    /// [`Experiment::run_single_threaded`] restricted to
+    /// [`Topology::Sequential`] (errors on anything else) — the
+    /// strictest entry point for backends where even the simulated
+    /// multi-node schedules make no sense.
+    pub fn run_sequential(self) -> Result<RunRecord> {
+        match self.topology {
+            Topology::Sequential => self.run_single_threaded(),
+            _ => bail!(
+                "run_sequential requires Topology::Sequential; \
+                 use run_single_threaded() (parameter-server topologies) \
+                 or run() (backend must be Clone + Send)"
+            ),
+        }
+    }
+}
+
+impl<B: GradBackend + Clone + Send> Experiment<B> {
+    /// Execute the run and return the unified [`RunRecord`].
+    pub fn run(mut self) -> Result<RunRecord> {
+        match self.topology.clone() {
+            Topology::SharedMemory { workers } => {
+                let s = self.settings();
+                shared_memory(&mut self.backend, workers, &s)
+            }
+            _ => self.run_single_threaded(),
+        }
+    }
+}
+
+/// Legacy-compatible record naming per topology.
+fn record_method_name(method: &MethodSpec, topology: &Topology) -> String {
+    let w = topology.workers();
+    match topology {
+        Topology::Sequential => method.name(),
+        Topology::SharedMemory { .. } => match method {
+            MethodSpec::MemSgd { comp } => {
+                format!("parallel_memsgd({},W={w})", comp.spec_string())
+            }
+            other => format!("parallel_{}(W={w})", other.name()),
+        },
+        Topology::ParamServerSync { .. } => match method {
+            MethodSpec::MemSgd { comp } => format!("dist_memsgd({},W={w})", comp.spec_string()),
+            other => format!("dist_{}(W={w})", other.name()),
+        },
+        Topology::ParamServerAsync { net, .. } => match method {
+            MethodSpec::MemSgd { comp } => {
+                format!("async_memsgd({},W={w},{})", comp.spec_string(), net.name)
+            }
+            other => format!("async_{}(W={w},{})", other.name(), net.name),
+        },
+    }
+}
+
+/// Record one loss evaluation (weighted average when enabled, last
+/// iterate otherwise).
+fn push_eval<B: GradBackend>(
+    record: &mut RunRecord,
+    backend: &mut B,
+    x: &[f32],
+    avg: &Option<WeightedAverage>,
+    eval_x: &mut [f32],
+    t: usize,
+    bits: u64,
+) {
+    match avg {
+        Some(a) if a.count() > 0 => a.write_average(eval_x),
+        _ => eval_x.copy_from_slice(x),
+    }
+    let loss = backend.full_loss(eval_x);
+    record.curve.push(LossPoint { t, bits, loss });
+}
+
+// ---------------------------------------------------------------------------
+// Sequential engine (Algorithm 1 + the Section 4 baselines)
+// ---------------------------------------------------------------------------
+
+pub(crate) fn sequential<B: GradBackend>(backend: &mut B, s: &Settings) -> Result<RunRecord> {
+    let d = backend.dim();
+    let n = backend.n();
+    let mut root = Prng::new(s.seed);
+    let mut rng = root.split(1); // "worker 0 of 1" — see module docs
+    let mut ef = s.method.error_feedback(d);
+    let mut x = vec![0.0f32; d];
+    let mut avg = s
+        .average
+        .then(|| WeightedAverage::new(d, s.schedule.averaging_shift().max(1.0)));
+
+    let eval_every = (s.steps / s.eval_points.max(1)).max(1);
+    let mut grad = vec![0.0f32; d];
+    let mut eval_x = vec![0.0f32; d];
+    let mut record = RunRecord {
+        method: record_method_name(&s.method, &Topology::Sequential),
+        dataset: s.dataset.clone(),
+        schedule: s.schedule.describe(),
+        ..Default::default()
+    };
+
+    let started = Instant::now();
+    push_eval(&mut record, backend, &x, &avg, &mut eval_x, 0, 0);
+    for t in 0..s.steps {
+        let i = rng.below(n);
+        backend.sample_grad(&x, i, &mut grad);
+        ef.step(&grad, s.schedule.eta(t) as f32, &mut rng);
+        ef.update().sub_from(&mut x);
+        if let Some(a) = avg.as_mut() {
+            a.update(&x);
+        }
+        if (t + 1) % eval_every == 0 || t + 1 == s.steps {
+            push_eval(&mut record, backend, &x, &avg, &mut eval_x, t + 1, ef.bits_sent);
+        }
+    }
+    record.steps = s.steps;
+    record.total_bits = ef.bits_sent;
+    record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+    Ok(record)
+}
+
+// ---------------------------------------------------------------------------
+// Shared-memory engine (Algorithm 2: lock-free threads)
+// ---------------------------------------------------------------------------
+
+pub(crate) fn shared_memory<B: GradBackend + Clone + Send>(
+    backend: &mut B,
+    workers: usize,
+    s: &Settings,
+) -> Result<RunRecord> {
+    let workers = workers.max(1);
+    let d = backend.dim();
+    let n = backend.n();
+    let per_worker = (s.steps / workers).max(1);
+    let shared = SharedParams::zeros(d);
+    let total_bits = Arc::new(AtomicU64::new(0));
+    let mut root = Prng::new(s.seed);
+    let started = Instant::now();
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let mut rng = root.split(w as u64 + 1);
+            let mut ef = s.method.error_feedback(d);
+            let mut wb = (*backend).clone();
+            let shared = Arc::clone(&shared);
+            let total_bits = Arc::clone(&total_bits);
+            let schedule = s.schedule.clone();
+            handles.push(scope.spawn(move || {
+                let mut xbuf = vec![0.0f32; d];
+                let mut grad = vec![0.0f32; d];
+                for t in 0..per_worker {
+                    let i = rng.below(n);
+                    // Inconsistent read of the shared iterate (line 5's
+                    // ∇f(x)), then one shared error-feedback step.
+                    shared.snapshot_into(&mut xbuf);
+                    wb.sample_grad(&xbuf, i, &mut grad);
+                    ef.step(&grad, schedule.eta(t) as f32, &mut rng);
+                    // shared x ← x − u (lossy, lock-free).
+                    match ef.update() {
+                        Update::Sparse(sv) => {
+                            for (&j, &gj) in sv.idx.iter().zip(&sv.val) {
+                                shared.sub(j as usize, gj);
+                            }
+                        }
+                        Update::Dense(g) => {
+                            for (j, &gj) in g.iter().enumerate() {
+                                if gj != 0.0 {
+                                    shared.sub(j, gj);
+                                }
+                            }
+                        }
+                    }
+                }
+                total_bits.fetch_add(ef.bits_sent, Ordering::Relaxed);
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+    });
+
+    let elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+    let x = shared.snapshot();
+    let loss = backend.full_loss(&x);
+    let total_steps = per_worker * workers;
+    let bits = total_bits.load(Ordering::Relaxed);
+
+    let mut record = RunRecord {
+        method: record_method_name(&s.method, &Topology::SharedMemory { workers }),
+        dataset: s.dataset.clone(),
+        schedule: s.schedule.describe(),
+        curve: vec![LossPoint { t: total_steps, bits, loss }],
+        steps: total_steps,
+        total_bits: bits,
+        elapsed_ms,
+        ..Default::default()
+    };
+    record.extra.insert("workers".into(), workers as f64);
+    record.extra.insert("steps_per_worker".into(), per_worker as f64);
+    Ok(record)
+}
+
+// ---------------------------------------------------------------------------
+// Synchronous parameter-server engine (the §1/§5 motivating setting)
+// ---------------------------------------------------------------------------
+
+pub(crate) fn param_server_sync<B: GradBackend>(
+    backend: &mut B,
+    nodes: usize,
+    s: &Settings,
+) -> Result<RunRecord> {
+    let nodes = nodes.max(1);
+    let d = backend.dim();
+    let n = backend.n();
+    let rounds = (s.steps / nodes).max(1);
+    let mut root_rng = Prng::new(s.seed);
+
+    struct Node {
+        ef: ErrorFeedbackStep,
+        rng: Prng,
+    }
+    let mut workers: Vec<Node> = (0..nodes)
+        .map(|w| Node {
+            ef: s.method.error_feedback(d),
+            rng: root_rng.split(w as u64 + 1),
+        })
+        .collect();
+
+    let mut x = vec![0.0f32; d];
+    let mut grad = vec![0.0f32; d];
+    // Server-side aggregation buffer: coordinate → summed update.
+    let mut agg: BTreeMap<u32, f32> = BTreeMap::new();
+    let mut agg_dense = vec![0.0f32; d];
+    let mut broadcast_bits = 0u64;
+    let idx_bits = crate::compress::sparse::index_bits(d);
+
+    let eval_every = (rounds / s.eval_points.max(1)).max(1);
+    let mut record = RunRecord {
+        method: record_method_name(&s.method, &Topology::ParamServerSync { nodes }),
+        dataset: s.dataset.clone(),
+        schedule: s.schedule.describe(),
+        ..Default::default()
+    };
+    let started = Instant::now();
+    record.curve.push(LossPoint { t: 0, bits: 0, loss: backend.full_loss(&x) });
+
+    for round in 0..rounds {
+        let etaf = s.schedule.eta(round) as f32;
+        agg.clear();
+        let mut any_dense = false;
+        for worker in workers.iter_mut() {
+            // Local stochastic gradient at the *current broadcast* x,
+            // then the shared per-node error-feedback step (upload).
+            let i = worker.rng.below(n);
+            backend.sample_grad(&x, i, &mut grad);
+            worker.ef.step(&grad, etaf, &mut worker.rng);
+            // Server receives the upload and folds it into the aggregate.
+            match worker.ef.update() {
+                Update::Sparse(sv) => {
+                    for (&j, &vj) in sv.idx.iter().zip(&sv.val) {
+                        *agg.entry(j).or_insert(0.0) += vj;
+                    }
+                }
+                Update::Dense(g) => {
+                    any_dense = true;
+                    for (a, &gj) in agg_dense.iter_mut().zip(g) {
+                        *a += gj;
+                    }
+                }
+            }
+        }
+        // Server applies the mean update and broadcasts it.
+        let scale = 1.0 / nodes as f32;
+        if any_dense {
+            for (xj, a) in x.iter_mut().zip(agg_dense.iter_mut()) {
+                *xj -= *a * scale;
+                *a = 0.0;
+            }
+            broadcast_bits += 32 * d as u64;
+        } else {
+            for (&j, &vj) in agg.iter() {
+                x[j as usize] -= vj * scale;
+            }
+            broadcast_bits += agg.len() as u64 * (32 + idx_bits);
+        }
+
+        if (round + 1) % eval_every == 0 || round + 1 == rounds {
+            let uploads: u64 = workers.iter().map(|w| w.ef.bits_sent).sum();
+            record.curve.push(LossPoint {
+                t: round + 1,
+                bits: uploads + broadcast_bits,
+                loss: backend.full_loss(&x),
+            });
+        }
+    }
+
+    let uploads: u64 = workers.iter().map(|w| w.ef.bits_sent).sum();
+    record.steps = rounds * nodes;
+    record.total_bits = uploads + broadcast_bits;
+    record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+    record.extra.insert("workers".into(), nodes as f64);
+    record.extra.insert("upload_bits".into(), uploads as f64);
+    record.extra.insert("broadcast_bits".into(), broadcast_bits as f64);
+    Ok(record)
+}
+
+// ---------------------------------------------------------------------------
+// Asynchronous parameter-server engine (§1.1 sparsification + asynchrony)
+// ---------------------------------------------------------------------------
+
+/// Pending event: a worker finishing its gradient at `t_ns`.
+#[derive(PartialEq, Eq, PartialOrd, Ord)]
+struct Finish {
+    t_ns: u64,
+    worker: usize,
+}
+
+pub(crate) fn param_server_async<B: GradBackend>(
+    backend: &mut B,
+    nodes: usize,
+    net: &NetworkModel,
+    compute: &ComputeModel,
+    hetero: f64,
+    s: &Settings,
+) -> Result<RunRecord> {
+    let nodes = nodes.max(1);
+    let d = backend.dim();
+    let n = backend.n();
+    let total_updates = s.steps;
+    let mut root_rng = Prng::new(s.seed);
+
+    struct AsyncNode {
+        ef: ErrorFeedbackStep,
+        rng: Prng,
+        /// Server update-counter value at this worker's last fetch.
+        fetch_version: u64,
+        /// Compute-time multiplier ≥ 1.
+        slow: f64,
+    }
+    let mut workers: Vec<AsyncNode> = (0..nodes)
+        .map(|w| AsyncNode {
+            ef: s.method.error_feedback(d),
+            rng: root_rng.split(w as u64 + 1),
+            fetch_version: 0,
+            slow: 1.0
+                + if nodes > 1 {
+                    hetero * w as f64 / (nodes - 1) as f64
+                } else {
+                    0.0
+                },
+        })
+        .collect();
+
+    let mut x = vec![0.0f32; d];
+    let mut grad = vec![0.0f32; d];
+
+    // Event queue: min-heap over finish time.
+    let mut queue: BinaryHeap<Reverse<Finish>> = BinaryHeap::new();
+    let compute_ns = |slow: f64, cm: &ComputeModel| -> u64 {
+        (cm.s_per_coord * cm.coords_per_grad * slow * 1e9).max(1.0) as u64
+    };
+    for (i, w) in workers.iter().enumerate() {
+        queue.push(Reverse(Finish {
+            t_ns: compute_ns(w.slow, compute),
+            worker: i,
+        }));
+    }
+
+    let mut version = 0u64; // server update counter
+    let mut link_free_ns = 0u64; // server ingress link busy-until
+    let mut link_busy_total = 0u64;
+    let mut staleness_sum = 0u64;
+    let mut staleness_max = 0u64;
+    let mut now_ns = 0u64;
+
+    let eval_every = (total_updates / s.eval_points.max(1)).max(1);
+    let mut record = RunRecord {
+        method: record_method_name(
+            &s.method,
+            &Topology::ParamServerAsync { nodes, net: net.clone() },
+        ),
+        dataset: s.dataset.clone(),
+        schedule: s.schedule.describe(),
+        ..Default::default()
+    };
+    let started = Instant::now();
+    record.curve.push(LossPoint { t: 0, bits: 0, loss: backend.full_loss(&x) });
+
+    while version < total_updates as u64 {
+        let Reverse(ev) = queue.pop().expect("queue never empties");
+        now_ns = now_ns.max(ev.t_ns);
+        let w = &mut workers[ev.worker];
+
+        // The worker finished its gradient (computed on the x it fetched;
+        // staleness-wise the fetch snapshot is what matters — we apply
+        // against the *current* x exactly like a real lock-free PS).
+        let i = w.rng.below(n);
+        backend.sample_grad(&x, i, &mut grad);
+        let eta = s.schedule.eta(version as usize) as f32;
+        let bits = w.ef.step(&grad, eta, &mut w.rng);
+
+        // Upload queues behind the shared server link. The link is busy
+        // for the serialization time only; propagation latency delays the
+        // arrival but does not occupy the link.
+        let xfer_ns = (net.xfer_s(bits) * 1e9).max(1.0) as u64;
+        let latency_ns = (net.latency_s * 1e9) as u64;
+        let start_ns = ev.t_ns.max(link_free_ns);
+        link_free_ns = start_ns + xfer_ns;
+        link_busy_total += xfer_ns;
+        let arrive_ns = link_free_ns + latency_ns;
+        now_ns = now_ns.max(arrive_ns);
+
+        // Server applies instantly on receipt.
+        w.ef.update().sub_from(&mut x);
+        version += 1;
+        let stale = version - 1 - w.fetch_version;
+        staleness_sum += stale;
+        staleness_max = staleness_max.max(stale);
+
+        // Worker refetches and starts the next gradient.
+        w.fetch_version = version;
+        queue.push(Reverse(Finish {
+            t_ns: arrive_ns + compute_ns(w.slow, compute),
+            worker: ev.worker,
+        }));
+
+        if version % eval_every as u64 == 0 || version == total_updates as u64 {
+            let bits: u64 = workers.iter().map(|w| w.ef.bits_sent).sum();
+            record.curve.push(LossPoint {
+                t: version as usize,
+                bits,
+                loss: backend.full_loss(&x),
+            });
+        }
+    }
+
+    let total_bits: u64 = workers.iter().map(|w| w.ef.bits_sent).sum();
+    record.steps = version as usize;
+    record.total_bits = total_bits;
+    record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+    let mean_staleness = staleness_sum as f64 / version.max(1) as f64;
+    let sim_seconds = now_ns as f64 / 1e9;
+    let link_utilization = if now_ns > 0 {
+        (link_busy_total as f64 / now_ns as f64).min(1.0)
+    } else {
+        0.0
+    };
+    record.extra.insert("mean_staleness".into(), mean_staleness);
+    record.extra.insert("max_staleness".into(), staleness_max as f64);
+    record.extra.insert("sim_seconds".into(), sim_seconds);
+    record.extra.insert("link_utilization".into(), link_utilization);
+    record.extra.insert("workers".into(), nodes as f64);
+    Ok(record)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::models::LogisticModel;
+
+    fn data() -> crate::data::Dataset {
+        synthetic::epsilon_like(300, 16, 5)
+    }
+
+    #[test]
+    fn builder_runs_sequential_by_default() {
+        let data = data();
+        let rec = Experiment::new(LogisticModel::new(&data, 1.0 / 300.0))
+            .dataset(&data.name)
+            .method(MethodSpec::mem_top_k(2))
+            .schedule(Schedule::constant(0.5))
+            .steps(2_000)
+            .eval_points(4)
+            .seed(7)
+            .average(false)
+            .run()
+            .unwrap();
+        assert_eq!(rec.method, "memsgd(top_2)");
+        assert_eq!(rec.steps, 2_000);
+        assert!(rec.final_loss() < 0.69, "loss {}", rec.final_loss());
+        assert!(rec.total_bits > 0);
+    }
+
+    #[test]
+    fn run_sequential_rejects_multi_worker_topologies() {
+        let data = data();
+        let err = Experiment::new(LogisticModel::new(&data, 1.0 / 300.0))
+            .topology(Topology::SharedMemory { workers: 2 })
+            .run_sequential()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("Sequential"), "{err:#}");
+    }
+
+    #[test]
+    fn topology_worker_counts() {
+        assert_eq!(Topology::Sequential.workers(), 1);
+        assert_eq!(Topology::SharedMemory { workers: 4 }.workers(), 4);
+        assert_eq!(Topology::ParamServerSync { nodes: 0 }.workers(), 1);
+        assert_eq!(
+            Topology::ParamServerAsync { nodes: 8, net: NetworkModel::eth_1g() }.workers(),
+            8
+        );
+    }
+
+    #[test]
+    fn record_names_follow_legacy_format() {
+        let m = MethodSpec::mem_top_k(1);
+        assert_eq!(record_method_name(&m, &Topology::Sequential), "memsgd(top_1)");
+        assert_eq!(
+            record_method_name(&m, &Topology::SharedMemory { workers: 4 }),
+            "parallel_memsgd(top_k:1,W=4)"
+        );
+        assert_eq!(
+            record_method_name(&m, &Topology::ParamServerSync { nodes: 8 }),
+            "dist_memsgd(top_k:1,W=8)"
+        );
+        assert_eq!(
+            record_method_name(
+                &m,
+                &Topology::ParamServerAsync { nodes: 2, net: NetworkModel::eth_1g() }
+            ),
+            "async_memsgd(top_k:1,W=2,1GbE)"
+        );
+        assert_eq!(
+            record_method_name(&MethodSpec::Sgd, &Topology::ParamServerSync { nodes: 2 }),
+            "dist_sgd(W=2)"
+        );
+    }
+}

@@ -1,30 +1,78 @@
-//! Layer-3 coordinator: the paper's system contribution.
+//! Layer-3 coordinator: the paper's system contribution, behind **one
+//! unified experiment API**.
 //!
-//! * [`config`] — method specs (`memsgd:top_k:1`, `sgd:qsgd:16`, ...) and
-//!   experiment configuration.
-//! * [`train`] — the sequential Mem-SGD / SGD driver (Algorithm 1 plus
-//!   all Section 4.2–4.3 baselines): loss-evaluation schedule,
-//!   communication accounting, weighted-average evaluation.
-//! * [`parallel`] — PARALLEL-MEM-SGD (Algorithm 2): lock-free
-//!   shared-memory workers over `std::thread`, unsynchronized reads and
-//!   non-read-modify-write stores exactly as in the paper's Section 4.4
-//!   implementation.
-
-//! * [`distributed`] — synchronous data-parallel Mem-SGD over a
-//!   parameter-server topology (the paper's §1/§5 motivating setting):
-//!   per-node error memories, compressed uploads, aggregated sparse
-//!   broadcast, both directions accounted.
-
-//! * [`async_dist`] — asynchronous parameter-server Mem-SGD under a
-//!   network cost model: stale gradients, heterogeneous workers,
-//!   serialized server ingress (the §1.1 "sparsification + asynchrony"
-//!   combination, simulated in deterministic event time).
-//! * [`checkpoint`] — binary save/restore of full training state
-//!   (iterate, error memory, averaging, RNG position).
+//! ## The builder (start here)
+//!
+//! [`experiment::Experiment`] is the single entry point for training:
+//! pick a gradient backend, a typed [`config::MethodSpec`], a stepsize
+//! [`crate::optim::Schedule`], and an [`experiment::Topology`] — the
+//! same per-worker error-feedback step
+//! ([`crate::optim::ErrorFeedbackStep`]) then runs on whichever
+//! coordination fabric was chosen, returning one unified
+//! [`crate::metrics::RunRecord`]:
+//!
+//! ```text
+//! Experiment::new(LogisticModel::new(&data, lam))
+//!     .method(MethodSpec::mem_top_k(1))
+//!     .schedule(Schedule::constant(0.05))
+//!     .topology(Topology::SharedMemory { workers: 8 })
+//!     .steps(100_000)
+//!     .seed(1)
+//!     .run()?
+//! ```
+//!
+//! | topology | paper setting |
+//! |---|---|
+//! | `Sequential` | Algorithm 1 + §4.2/4.3 baselines, loss curve + Theorem-2.4 averaging |
+//! | `SharedMemory { workers }` | Algorithm 2: lock-free threads, unsynchronized reads/writes (§4.4) |
+//! | `ParamServerSync { nodes }` | synchronous data-parallel rounds, per-node memories, both directions accounted (§1/§5) |
+//! | `ParamServerAsync { nodes, net }` | stale gradients + serialized server ingress under a network cost model (§1.1) |
+//!
+//! ## Migration from the deprecated per-driver entry points
+//!
+//! The pre-builder drivers each re-implemented the error-feedback step
+//! and took incompatible stringly configs. They remain as thin shims —
+//! every existing spec string still works — but new code should use the
+//! builder:
+//!
+//! | old call | new builder chain |
+//! |---|---|
+//! | `train::run(&data, &TrainConfig { method: "memsgd:top_k:1".into(), .. })` | `Experiment::new(LogisticModel::new(&data, lam)).method(MethodSpec::mem_top_k(1)).topology(Topology::Sequential).run()?` |
+//! | `train::run_with_backend(&mut b, name, &cfg)` | `Experiment::new(b).dataset(name).parse_method(&cfg.method)?.run_sequential()?` |
+//! | `parallel::run(&data, &ParallelConfig { workers: 8, compressor: "top_k:1".into(), .. })` | `.method(MethodSpec::mem_top_k(1)).topology(Topology::SharedMemory { workers: 8 }).run()?` |
+//! | `distributed::run(&data, &DistributedConfig { workers: 8, .. })` | `.topology(Topology::ParamServerSync { nodes: 8 }).run()?` |
+//! | `async_dist::run(&data, &AsyncConfig { workers: 8, network, .. })` | `.topology(Topology::ParamServerAsync { nodes: 8, net: network }).compute(cm).hetero(0.5).run()?` |
+//!
+//! `steps` on the builder is always the **total** stochastic-gradient
+//! budget (the engines derive per-worker steps / server rounds from it);
+//! spec strings are parsed exactly once, at the CLI/JSON edge
+//! ([`config::MethodSpec::parse`]), and rejected loudly on trailing
+//! junk.
+//!
+//! ## Modules
+//!
+//! * [`experiment`] — the typed builder, the [`experiment::Topology`]
+//!   enum, and the four generic engines (all `GradBackend`-generic; no
+//!   engine names a concrete model).
+//! * [`config`] — typed [`config::MethodSpec`] (`memsgd:<comp>`, `sgd`,
+//!   `sgd:qsgd:<levels>`, `sgd:unbiased_rand_k:<k>`) and the legacy
+//!   [`config::Optimizer`] stepping interface.
+//! * [`train`] — deprecated sequential shim + checkpointed
+//!   [`train::run_resumable`] (bit-identical resume).
+//! * [`parallel`] — lock-free [`parallel::SharedParams`] + deprecated
+//!   shim for Algorithm 2.
+//! * [`distributed`] / [`async_dist`] — deprecated parameter-server
+//!   shims (sync / async).
+//! * [`checkpoint`] — binary save/restore of full sequential training
+//!   state (iterate, error memory, averaging, RNG position).
 
 pub mod async_dist;
 pub mod checkpoint;
 pub mod config;
 pub mod distributed;
+pub mod experiment;
 pub mod parallel;
 pub mod train;
+
+pub use config::MethodSpec;
+pub use experiment::{Experiment, Topology};

@@ -16,19 +16,25 @@
 //! The enforced sparsity of the updates is what makes this scheme scale
 //! (Figure 4): a top-k worker dirties k cache lines per iteration where
 //! Hogwild-style dense SGD dirties d/16 of them.
+//!
+//! The worker loop itself lives in the generic shared-memory engine of
+//! [`super::experiment`] (topology `SharedMemory { workers }`), which
+//! runs the crate-wide [`crate::optim::ErrorFeedbackStep`] against any
+//! [`crate::models::GradBackend`]; this module keeps the lock-free
+//! [`SharedParams`] vector and the deprecated [`run`] shim.
 
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::compress::{self, Update};
+use super::config::MethodSpec;
+use super::experiment;
+use crate::compress::CompressorSpec;
 use crate::data::Dataset;
-use crate::metrics::{LossPoint, RunRecord};
-use crate::models::{sigmoid, GradBackend, LogisticModel};
+use crate::metrics::RunRecord;
+use crate::models::LogisticModel;
 use crate::optim::Schedule;
-use crate::util::prng::Prng;
 
 /// Shared parameter vector: relaxed atomic f32 cells.
 pub struct SharedParams {
@@ -118,146 +124,32 @@ impl Default for ParallelConfig {
 
 /// Run Algorithm 2 and evaluate the **final iterate** (the paper's
 /// Section 4.4 protocol). The record's `extra` carries `workers` and
-/// `total_steps`.
+/// `steps_per_worker`.
+///
+/// Deprecated shim: parses the compressor spec once and delegates to the
+/// generic shared-memory engine behind [`super::experiment::Experiment`]
+/// (topology `SharedMemory { workers }`).
 pub fn run(data: &Dataset, cfg: &ParallelConfig) -> Result<RunRecord> {
-    compress::from_spec(&cfg.compressor)?; // validate before spawning
-    let d = data.d();
+    // Validate the spec before spawning anything.
+    let comp = CompressorSpec::parse(&cfg.compressor)?;
     let n = data.n();
     let lam = cfg.lam.unwrap_or(1.0 / n as f64);
-    let steps_per_worker = if cfg.fixed_total_steps {
-        (cfg.steps_per_worker / cfg.workers.max(1)).max(1)
-    } else {
+    let total_steps = if cfg.fixed_total_steps {
         cfg.steps_per_worker
+    } else {
+        cfg.steps_per_worker * cfg.workers.max(1)
     };
-
-    let shared = SharedParams::zeros(d);
-    let total_bits = Arc::new(AtomicU64::new(0));
-    let started = Instant::now();
-
-    std::thread::scope(|scope| -> Result<()> {
-        let mut handles = Vec::new();
-        for w in 0..cfg.workers {
-            let shared = Arc::clone(&shared);
-            let total_bits = Arc::clone(&total_bits);
-            let comp_spec = cfg.compressor.clone();
-            let schedule = cfg.schedule.clone();
-            let seed = cfg.seed;
-            handles.push(scope.spawn(move || {
-                worker_loop(
-                    data,
-                    &shared,
-                    &total_bits,
-                    &comp_spec,
-                    &schedule,
-                    lam,
-                    steps_per_worker,
-                    seed ^ (w as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15),
-                )
-            }));
-        }
-        for h in handles {
-            h.join().expect("worker panicked")?;
-        }
-        Ok(())
-    })?;
-
-    let elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
-    let x = shared.snapshot();
-    let mut model = LogisticModel::new(data, lam);
-    let loss = model.full_loss(&x);
-    let total_steps = steps_per_worker * cfg.workers;
-    let bits = total_bits.load(Ordering::Relaxed);
-
-    let mut record = RunRecord {
-        method: format!("parallel_memsgd({},W={})", cfg.compressor, cfg.workers),
-        dataset: data.name.clone(),
-        schedule: cfg.schedule.describe(),
-        curve: vec![LossPoint {
-            t: total_steps,
-            bits,
-            loss,
-        }],
+    let settings = experiment::Settings {
+        method: MethodSpec::MemSgd { comp },
+        schedule: cfg.schedule.clone(),
         steps: total_steps,
-        total_bits: bits,
-        elapsed_ms,
-        ..Default::default()
+        eval_points: 1,
+        average: false,
+        seed: cfg.seed,
+        dataset: data.name.clone(),
     };
-    record.extra.insert("workers".into(), cfg.workers as f64);
-    record
-        .extra
-        .insert("steps_per_worker".into(), steps_per_worker as f64);
-    Ok(record)
-}
-
-/// One worker's Algorithm-2 loop (lines 3–8).
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
-    data: &Dataset,
-    shared: &SharedParams,
-    total_bits: &AtomicU64,
-    comp_spec: &str,
-    schedule: &Schedule,
-    lam: f64,
-    steps: usize,
-    seed: u64,
-) -> Result<()> {
-    let d = data.d();
-    let n = data.n();
-    let mut rng = Prng::new(seed);
-    let mut comp = compress::from_spec(comp_spec)?;
-    let mut m = vec![0.0f32; d]; // private memory m^w
-    let mut v = vec![0.0f32; d];
-    let mut xbuf = vec![0.0f32; d];
-    let mut update = Update::new_sparse(d);
-    let lamf = lam as f32;
-    let mut bits = 0u64;
-
-    for t in 0..steps {
-        let i = rng.below(n);
-        // Inconsistent read of the shared iterate (line 5's ∇f(x)).
-        shared.snapshot_into(&mut xbuf);
-        // coef = −y σ(−y ⟨a_i, x⟩); ∇f_i = coef·a_i + λx.
-        let y = data.label(i);
-        let z = data.dot_row(i, &xbuf);
-        let coef = -y * sigmoid(-y * z);
-        let eta = schedule.eta(t) as f32;
-        // v = m + η ∇f_i(x), built without materializing the gradient.
-        for ((vj, &mj), &xj) in v.iter_mut().zip(&*m).zip(&*xbuf) {
-            *vj = mj + eta * lamf * xj;
-        }
-        match data.row(i) {
-            crate::data::RowView::Dense(row) => {
-                for (vj, &aj) in v.iter_mut().zip(row) {
-                    *vj += eta * coef * aj;
-                }
-            }
-            crate::data::RowView::Sparse { idx, val } => {
-                for (&j, &aj) in idx.iter().zip(val) {
-                    v[j as usize] += eta * coef * aj;
-                }
-            }
-        }
-        // g = comp(v); shared x ← x − g (lossy, lock-free); m ← v − g.
-        bits += comp.compress(&v, &mut rng, &mut update);
-        match &update {
-            Update::Sparse(s) => {
-                for (&j, &gj) in s.idx.iter().zip(&s.val) {
-                    shared.sub(j as usize, gj);
-                }
-            }
-            Update::Dense(g) => {
-                for (j, &gj) in g.iter().enumerate() {
-                    if gj != 0.0 {
-                        shared.sub(j, gj);
-                    }
-                }
-            }
-        }
-        m.copy_from_slice(&v);
-        update.sub_from(&mut m);
-    }
-    total_bits.fetch_add(bits, Ordering::Relaxed);
-    Ok(())
+    let mut model = LogisticModel::new(data, lam);
+    experiment::shared_memory(&mut model, cfg.workers, &settings)
 }
 
 #[cfg(test)]

@@ -1,16 +1,27 @@
-//! Sequential training driver: Algorithm 1 and the Section 4 baselines.
+//! Sequential training (Algorithm 1 and the Section 4 baselines) —
+//! **deprecated string-spec shim** over the unified experiment API.
 //!
-//! One entry point, [`run`], reproduces any single curve of Figures 2/3:
-//! pick a method spec, a stepsize schedule, and an averaging mode; the
-//! driver samples `i_t` uniformly, steps the optimizer, maintains the
-//! Theorem-2.4 weighted average, evaluates the full objective on a fixed
-//! schedule, and accounts every transmitted bit.
+//! [`run`] / [`run_with_backend`] are kept so existing `TrainConfig`
+//! call sites and `"memsgd:top_k:1"`-style spec strings continue to
+//! work; they parse the spec once and delegate to the same sequential
+//! engine the [`super::experiment::Experiment`] builder uses. New code
+//! should prefer the builder:
+//!
+//! ```text
+//! Experiment::new(backend).method(MethodSpec::mem_top_k(1))
+//!     .schedule(s).steps(n).run()?
+//! ```
+//!
+//! [`run_resumable`] (checkpointed Mem-SGD with bit-identical resume)
+//! still lives here: checkpointing is specific to the sequential
+//! Mem-SGD state (iterate + error memory + RNG + averager).
 
 use std::time::Instant;
 
 use anyhow::Result;
 
-use super::config::Method;
+use super::config::MethodSpec;
+use super::experiment;
 use crate::compress;
 use crate::data::Dataset;
 use crate::metrics::{LossPoint, RunRecord};
@@ -21,7 +32,7 @@ use crate::util::prng::Prng;
 /// Configuration of one sequential run.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
-    /// Method spec (see [`Method::parse`]), e.g. `memsgd:top_k:1`.
+    /// Method spec (see [`MethodSpec::parse`]), e.g. `memsgd:top_k:1`.
     pub method: String,
     /// Stepsize schedule.
     pub schedule: Schedule,
@@ -68,16 +79,16 @@ impl TrainConfig {
         gamma: f64,
         shift_multiplier: f64,
     ) -> Result<Self> {
-        let method = Method::parse(&self.method)?;
-        let k = method.contraction_k(d).unwrap_or(d as f64);
-        let lam = self.lam.unwrap_or(1.0 / n as f64);
-        let a = Schedule::paper_shift(d, k, shift_multiplier);
-        self.schedule = Schedule::inv_t(gamma, lam, a);
+        let method = MethodSpec::parse(&self.method)?;
+        self.schedule = method.paper_schedule(d, n, gamma, shift_multiplier, self.lam);
         Ok(self)
     }
 }
 
 /// Train logistic regression on `data` (λ = 1/n unless overridden).
+///
+/// Deprecated shim: parses `cfg.method` once and delegates to the
+/// unified sequential engine behind [`super::experiment::Experiment`].
 pub fn run(data: &Dataset, cfg: &TrainConfig) -> Result<RunRecord> {
     let lam = cfg.lam.unwrap_or(1.0 / data.n() as f64);
     let mut model = LogisticModel::new(data, lam);
@@ -85,66 +96,22 @@ pub fn run(data: &Dataset, cfg: &TrainConfig) -> Result<RunRecord> {
 }
 
 /// Train against any gradient backend (the PJRT transformer path uses
-/// this directly).
+/// this directly). Deprecated shim over the unified sequential engine.
 pub fn run_with_backend<B: GradBackend>(
     backend: &mut B,
     dataset_name: &str,
     cfg: &TrainConfig,
 ) -> Result<RunRecord> {
-    let d = backend.dim();
-    let n = backend.n();
-    let method = Method::parse(&cfg.method)?;
-    let mut opt = method.build(vec![0.0f32; d])?;
-    let mut rng = Prng::new(cfg.seed);
-    let mut avg = cfg
-        .average
-        .then(|| WeightedAverage::new(d, cfg.schedule.averaging_shift().max(1.0)));
-
-    let eval_every = (cfg.steps / cfg.eval_points.max(1)).max(1);
-    let mut grad = vec![0.0f32; d];
-    let mut eval_x = vec![0.0f32; d];
-    let mut record = RunRecord {
-        method: method.name(),
+    let settings = experiment::Settings {
+        method: MethodSpec::parse(&cfg.method)?,
+        schedule: cfg.schedule.clone(),
+        steps: cfg.steps,
+        eval_points: cfg.eval_points,
+        average: cfg.average,
+        seed: cfg.seed,
         dataset: dataset_name.to_string(),
-        schedule: cfg.schedule.describe(),
-        ..Default::default()
     };
-
-    let started = Instant::now();
-    let eval = |t: usize,
-                    opt: &super::config::Optimizer,
-                    avg: &Option<WeightedAverage>,
-                    backend: &mut B,
-                    eval_x: &mut Vec<f32>,
-                    record: &mut RunRecord| {
-        match avg {
-            Some(a) if a.count() > 0 => a.write_average(eval_x),
-            _ => eval_x.copy_from_slice(opt.x()),
-        }
-        let loss = backend.full_loss(eval_x);
-        record.curve.push(LossPoint {
-            t,
-            bits: opt.bits_sent(),
-            loss,
-        });
-    };
-
-    eval(0, &opt, &avg, backend, &mut eval_x, &mut record);
-    for t in 0..cfg.steps {
-        let i = rng.below(n);
-        backend.sample_grad(opt.x(), i, &mut grad);
-        opt.step(&grad, cfg.schedule.eta(t), &mut rng);
-        if let Some(a) = avg.as_mut() {
-            a.update(opt.x());
-        }
-        if (t + 1) % eval_every == 0 || t + 1 == cfg.steps {
-            eval(t + 1, &opt, &avg, backend, &mut eval_x, &mut record);
-        }
-    }
-    record.steps = cfg.steps;
-    record.total_bits = opt.bits_sent();
-    record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
-    Ok(record)
+    experiment::sequential(backend, &settings)
 }
 
 // ---------------------------------------------------------------------------
@@ -185,6 +152,14 @@ pub fn run_resumable(
     let mut model = LogisticModel::new(data, lam);
     let d = data.d();
     let n = data.n();
+    // Non-contractions (QSGD) run memory-free everywhere else
+    // (MethodSpec::error_feedback / build); there is no error memory to
+    // checkpoint, so refuse here instead of silently running a
+    // different algorithm than the other entry points.
+    anyhow::ensure!(
+        crate::compress::CompressorSpec::parse(comp_spec)?.contraction_k(d).is_some(),
+        "run_resumable requires a contraction operator (memsgd with error memory), got '{comp_spec}'"
+    );
 
     let (mut opt, mut rng, mut avg) = if policy.resume && policy.path.exists() {
         let ck = Checkpoint::load(&policy.path)?;

@@ -13,10 +13,10 @@
 
 use anyhow::Result;
 
-use super::{dataset, Which};
-use crate::coordinator::async_dist::{self, AsyncConfig};
-use crate::coordinator::distributed::{self, DistributedConfig};
-use crate::coordinator::train::{self, TrainConfig};
+use super::{dataset, experiment_on, Which};
+use crate::compress::CompressorSpec;
+use crate::coordinator::config::MethodSpec;
+use crate::coordinator::experiment::Topology;
 use crate::metrics::RunRecord;
 use crate::models::{GradBackend, LogisticModel};
 use crate::optim::theory::TheoryParams;
@@ -101,28 +101,23 @@ pub fn section22(
     // --- (2) Convergence under one shared schedule: the paper's §4.4
     // constant stepsize. SGD settles at its (small) noise floor; the
     // unbiased scheme's floor is d/k times higher — the §2.2 story.
-    let schedule = Schedule::constant(0.05);
-    let base = TrainConfig {
-        steps,
-        eval_points: 20,
-        average: false,
-        schedule: schedule.clone(),
-        seed: seed ^ 0x22,
-        lam: Some(lam),
-        ..TrainConfig::default()
-    };
     let mut records = Vec::new();
     for method in [
-        "sgd".to_string(),
-        format!("sgd:unbiased_rand_k:{k}"), // (d/k)-scaled, no memory — eq. (6)
-        format!("memsgd:rand_k:{k}"),       // same operator, with memory
-        format!("memsgd:top_k:{k}"),
+        MethodSpec::Sgd,
+        MethodSpec::SgdUnbiasedRandK { k }, // (d/k)-scaled, no memory — eq. (6)
+        MethodSpec::mem_rand_k(k),          // same operator, with memory
+        MethodSpec::mem_top_k(k),
     ] {
-        let cfg = TrainConfig {
-            method,
-            ..base.clone()
-        };
-        records.push(train::run(&data, &cfg)?);
+        records.push(
+            experiment_on(&data, Some(lam))
+                .method(method)
+                .schedule(Schedule::constant(0.05))
+                .steps(steps)
+                .eval_points(20)
+                .average(false)
+                .seed(seed ^ 0x22)
+                .run()?,
+        );
     }
 
     Ok(Section22Result {
@@ -286,25 +281,26 @@ pub fn figure6_network(
     let _ = data.d();
     let k0 = which.ks()[0];
     let eta = Schedule::constant(0.5);
-    let methods = vec![
-        format!("top_k:{k0}"),
-        "qsgd:16".to_string(),
-        "identity".to_string(),
+    let comps = vec![
+        CompressorSpec::TopK { k: k0 },
+        CompressorSpec::Qsgd { levels: 16, eff: None },
+        CompressorSpec::Identity,
     ];
+    let methods: Vec<String> = comps.iter().map(|c| c.spec_string()).collect();
 
     // Real convergence runs (one per method, network-independent).
     let mut runs = Vec::new();
-    for m in &methods {
-        let cfg = DistributedConfig {
-            workers,
-            rounds,
-            compressor: m.clone(),
-            schedule: eta.clone(),
-            eval_points: 40,
-            lam: None,
-            seed: seed ^ 0xF6,
-        };
-        runs.push(distributed::run(&data, &cfg)?);
+    for comp in &comps {
+        runs.push(
+            experiment_on(&data, None)
+                .method(MethodSpec::mem(comp.clone()))
+                .schedule(eta.clone())
+                .topology(Topology::ParamServerSync { nodes: workers })
+                .steps(rounds * workers.max(1))
+                .eval_points(40)
+                .seed(seed ^ 0xF6)
+                .run()?,
+        );
     }
     let target = runs
         .last()
@@ -365,34 +361,29 @@ pub fn async_compare(
     let mean_coords = (data.nnz() as f64 / n as f64).max(1.0);
     let compute = ComputeModel::new(1e-9, mean_coords);
     let mut records = Vec::new();
-    for spec in [format!("top_k:{k0}"), "identity".to_string()] {
-        let cfg = AsyncConfig {
-            workers,
-            total_updates: updates,
-            compressor: spec.clone(),
-            schedule: Schedule::constant(0.5),
-            network: net.clone(),
-            compute: compute.clone(),
-            hetero: 0.5,
-            eval_points: 20,
-            lam: None,
-            seed: seed ^ 0xA5,
-        };
-        let (rec, _) = async_dist::run(&data, &cfg)?;
+    for comp in [CompressorSpec::TopK { k: k0 }, CompressorSpec::Identity] {
+        let rec = experiment_on(&data, None)
+            .method(MethodSpec::mem(comp.clone()))
+            .schedule(Schedule::constant(0.5))
+            .topology(Topology::ParamServerAsync { nodes: workers, net: net.clone() })
+            .compute(compute.clone())
+            .hetero(0.5)
+            .steps(updates)
+            .eval_points(20)
+            .seed(seed ^ 0xA5)
+            .run()?;
         records.push(rec);
 
         // Synchronous twin with the same budget, priced on the same link.
         let rounds = updates / workers.max(1);
-        let dcfg = DistributedConfig {
-            workers,
-            rounds,
-            compressor: spec.clone(),
-            schedule: Schedule::constant(0.5),
-            eval_points: 20,
-            lam: None,
-            seed: seed ^ 0xA5,
-        };
-        let mut sync = distributed::run(&data, &dcfg)?;
+        let mut sync = experiment_on(&data, None)
+            .method(MethodSpec::mem(comp))
+            .schedule(Schedule::constant(0.5))
+            .topology(Topology::ParamServerSync { nodes: workers })
+            .steps(rounds * workers.max(1))
+            .eval_points(20)
+            .seed(seed ^ 0xA5)
+            .run()?;
         let up = sync.extra["upload_bits"] / rounds.max(1) as f64;
         let down = sync.extra["broadcast_bits"] / rounds.max(1) as f64;
         // Straggler: synchronous rounds wait for the slowest worker

@@ -8,9 +8,11 @@
 
 use anyhow::Result;
 
-use crate::coordinator::train::{self, TrainConfig};
+use crate::coordinator::config::MethodSpec;
+use crate::coordinator::experiment::Experiment;
 use crate::data::Dataset;
 use crate::metrics::RunRecord;
+use crate::models::LogisticModel;
 use crate::optim::Schedule;
 
 /// One grid-search cell.
@@ -68,13 +70,14 @@ impl GridResult {
     }
 }
 
-/// Grid-search `gamma0` for each method with the Bottou schedule.
+/// Grid-search `gamma0` for each (typed) method with the Bottou
+/// schedule. Cells are keyed by [`MethodSpec::name`].
 ///
 /// `steps` is the per-candidate training budget (the paper tunes on a
 /// subset; callers pass a fraction of the full run).
 pub fn search(
     data: &Dataset,
-    methods: &[String],
+    methods: &[MethodSpec],
     gamma0_grid: &[f64],
     steps: usize,
     seed: u64,
@@ -83,19 +86,17 @@ pub fn search(
     let mut cells = Vec::new();
     for method in methods {
         for &gamma0 in gamma0_grid {
-            let cfg = TrainConfig {
-                method: method.clone(),
-                schedule: Schedule::bottou(gamma0, lam),
-                steps,
-                eval_points: 4,
-                average: true,
-                seed,
-                lam: Some(lam),
-            };
-            let record = train::run(data, &cfg)?;
+            let record = Experiment::new(LogisticModel::new(data, lam))
+                .dataset(&data.name)
+                .method(method.clone())
+                .schedule(Schedule::bottou(gamma0, lam))
+                .steps(steps)
+                .eval_points(4)
+                .seed(seed)
+                .run()?;
             let final_loss = record.final_loss();
             cells.push(GridCell {
-                method: method.clone(),
+                method: method.name(),
                 gamma0,
                 final_loss,
                 record,
@@ -118,32 +119,25 @@ mod tests {
     #[test]
     fn finds_a_sane_gamma0() {
         let data = synthetic::epsilon_like(300, 16, 4);
-        let methods = vec!["memsgd:top_k:1".to_string(), "sgd".to_string()];
+        let methods = vec![MethodSpec::mem_top_k(1), MethodSpec::Sgd];
         let grid = vec![0.001, 1.0, 1000.0];
         let res = search(&data, &methods, &grid, 1_500, 3).unwrap();
         assert_eq!(res.cells.len(), 6);
         for m in &methods {
-            let best = res.best(m).unwrap();
+            let best = res.best(&m.name()).unwrap();
             // The absurd extremes must not win: 0.001 barely moves,
             // 1000 blows up.
-            assert_eq!(best.gamma0, 1.0, "method {m} picked {}", best.gamma0);
+            assert_eq!(best.gamma0, 1.0, "method {} picked {}", m.name(), best.gamma0);
         }
         let t = res.table();
         assert!(t.contains("<-- best"));
-        assert!(t.contains("memsgd(top_1)") || t.contains("memsgd:top_k:1"));
+        assert!(t.contains("memsgd(top_1)"));
     }
 
     #[test]
     fn methods_listing_dedups() {
         let data = synthetic::epsilon_like(100, 8, 5);
-        let res = search(
-            &data,
-            &["sgd".to_string()],
-            &[0.1, 1.0],
-            200,
-            1,
-        )
-        .unwrap();
+        let res = search(&data, &[MethodSpec::Sgd], &[0.1, 1.0], 200, 1).unwrap();
         assert_eq!(res.methods(), vec!["sgd".to_string()]);
         assert!(res.best("nonexistent").is_none());
     }

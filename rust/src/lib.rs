@@ -18,6 +18,37 @@
 //! AOT artifacts through PJRT ([`runtime`]) and drives every experiment in
 //! the paper ([`coordinator`], [`sim`], [`grid`]).
 //!
+//! ## The experiment API
+//!
+//! Training runs are built with one typed builder, generic over the
+//! gradient backend and the coordination fabric:
+//!
+//! ```no_run
+//! use memsgd::coordinator::{Experiment, MethodSpec, Topology};
+//! use memsgd::models::LogisticModel;
+//! use memsgd::optim::Schedule;
+//! # fn main() -> anyhow::Result<()> {
+//! let data = memsgd::data::synthetic::epsilon_like(20_000, 2_000, 1);
+//! let record = Experiment::new(LogisticModel::new(&data, 1.0 / 20_000.0))
+//!     .dataset(&data.name)
+//!     .method(MethodSpec::mem_top_k(1))
+//!     .schedule(Schedule::constant(0.05))
+//!     .topology(Topology::SharedMemory { workers: 8 })
+//!     .steps(100_000)
+//!     .eval_points(20)
+//!     .seed(1)
+//!     .run()?;
+//! println!("{}: {:.4} after {}", record.method, record.final_loss(), record.steps);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! All four topologies (sequential, lock-free shared memory, sync and
+//! async parameter server) execute the same
+//! [`optim::ErrorFeedbackStep`]; see [`coordinator`] for the topology
+//! table and the migration guide from the deprecated string-spec
+//! drivers.
+//!
 //! ## Module map
 //!
 //! | module | role |
@@ -26,7 +57,7 @@
 //! | [`optim`] | Mem-SGD (Alg. 1), SGD baselines, stepsizes, averaging, Theorem-2.4 bounds |
 //! | [`models`] | logistic loss/gradient backends (native + PJRT) |
 //! | [`data`] | dense/CSR datasets, synthetic generators, LIBSVM parser |
-//! | [`coordinator`] | sequential driver, Algorithm 2 shared-memory parallel, sync/async parameter server, checkpoints |
+//! | [`coordinator`] | `Experiment` builder + generic engines for all four topologies (sequential, shared-memory, sync/async parameter server), checkpoints |
 //! | [`runtime`] | PJRT artifact registry: load HLO text, compile, execute |
 //! | [`sim`] | discrete-event multicore model (Figure 4) + network cost model (Figure 6) |
 //! | [`grid`] | learning-rate grid search (Figure 5) |

@@ -8,7 +8,7 @@
 //! memsgd figure4 --dataset epsilon [--workers 1,2,4,8,12,16,20,24] [--threads]
 //! memsgd figure5 --dataset rcv1   [--scale 40]
 //! memsgd e2e     [--steps 200] [--k 100]      # transformer through PJRT
-//! memsgd train   --method memsgd:top_k:1 ...  # one ad-hoc run
+//! memsgd train   --method memsgd:top_k:1 [--topology shared] ...  # ad-hoc run
 //! memsgd info                                  # runtime / artifact status
 //! ```
 //!
@@ -18,9 +18,11 @@
 use anyhow::{bail, Result};
 
 use memsgd::coordinator::train::{self, TrainConfig};
+use memsgd::coordinator::{MethodSpec, Topology};
 use memsgd::experiments::{self, Which};
 use memsgd::metrics::{self, summary_table, RunRecord};
 use memsgd::optim::Schedule;
+use memsgd::sim::network::NetworkModel;
 use memsgd::util::cli::Args;
 
 fn main() {
@@ -75,7 +77,8 @@ subcommands:
   theory    Lemma 3.2 memory envelope on a live run
   async     async vs sync parameter server under a network model
   e2e       transformer LM through the PJRT artifacts (full stack)
-  train     one ad-hoc run (--method, --steps, --dataset, ...)
+  train     one ad-hoc run (--method, --epochs, --dataset, --topology
+            sequential|shared|ps-sync|ps-async, --workers-count N, ...)
   info      artifact / runtime status
 
 common options: --dataset epsilon|rcv1  --scale N  --seed N  --out DIR";
@@ -400,37 +403,68 @@ fn cmd_train(args: &Args) -> Result<()> {
     let which = Which::parse(&args.get_str("dataset", "epsilon"))?;
     let scale = args.get("scale", 20usize)?;
     let seed = args.get("seed", 1u64)?;
-    let method = args.get_str("method", "memsgd:top_k:1");
+    // The CLI is the parse edge: one typed MethodSpec from here on.
+    let method = MethodSpec::parse(&args.get_str("method", "memsgd:top_k:1"))?;
     let epochs = args.get("epochs", 1usize)?;
     let gamma = args.get("gamma", 2.0f64)?;
+    let evals = args.get("evals", 10usize)?;
+    let workers = args.get("workers-count", 4usize)?;
     let data = experiments::dataset(which, scale, seed);
-    let cfg = TrainConfig {
-        method,
-        steps: epochs * data.n(),
-        eval_points: args.get("evals", 10usize)?,
-        seed,
-        ..TrainConfig::default()
-    }
-    .with_paper_schedule(data.d(), data.n(), gamma, which.shift_multiplier())?;
+    let steps = epochs * data.n();
+    let schedule =
+        method.paper_schedule(data.d(), data.n(), gamma, which.shift_multiplier(), None);
+
     // --checkpoint PATH [--checkpoint-every N] [--resume]: periodic state
-    // persistence + bit-identical resume (memsgd:* methods only).
-    let rec = match args.opt_str("checkpoint") {
-        Some(path) => {
-            let policy = train::CheckpointPolicy {
-                path: path.into(),
-                every: args.get("checkpoint-every", 1_000usize)?,
-                resume: args.flag("resume"),
+    // persistence + bit-identical resume (memsgd:* methods, sequential).
+    if let Some(path) = args.opt_str("checkpoint") {
+        let cfg = TrainConfig {
+            method: method.spec_string(),
+            schedule,
+            steps,
+            eval_points: evals,
+            seed,
+            ..TrainConfig::default()
+        };
+        let policy = train::CheckpointPolicy {
+            path: path.into(),
+            every: args.get("checkpoint-every", 1_000usize)?,
+            resume: args.flag("resume"),
+        };
+        let rec = train::run_resumable(&data, &cfg, &policy)?;
+        println!(
+            "checkpoint -> {} (resumed from step {})",
+            policy.path.display(),
+            rec.extra.get("resumed_from").copied().unwrap_or(0.0) as usize
+        );
+        print_curves(std::slice::from_ref(&rec));
+        return finish(args, "train", std::slice::from_ref(&rec));
+    }
+
+    // --topology sequential|shared|ps-sync|ps-async [--workers-count N]:
+    // the same method/schedule on any coordination fabric.
+    let topology = match args.get_str("topology", "sequential").as_str() {
+        "sequential" | "seq" => Topology::Sequential,
+        "shared" | "shared-memory" => Topology::SharedMemory { workers },
+        "ps-sync" | "ps" | "sync" => Topology::ParamServerSync { nodes: workers },
+        "ps-async" | "async" => {
+            let net = match args.get_str("network", "1g").as_str() {
+                "1g" => NetworkModel::eth_1g(),
+                "10g" => NetworkModel::eth_10g(),
+                "100g" => NetworkModel::ib_100g(),
+                other => bail!("unknown network '{other}' (1g|10g|100g)"),
             };
-            let rec = train::run_resumable(&data, &cfg, &policy)?;
-            println!(
-                "checkpoint -> {} (resumed from step {})",
-                policy.path.display(),
-                rec.extra.get("resumed_from").copied().unwrap_or(0.0) as usize
-            );
-            rec
+            Topology::ParamServerAsync { nodes: workers, net }
         }
-        None => train::run(&data, &cfg)?,
+        other => bail!("unknown topology '{other}' (sequential|shared|ps-sync|ps-async)"),
     };
+    let rec = experiments::experiment_on(&data, None)
+        .method(method)
+        .schedule(schedule)
+        .topology(topology)
+        .steps(steps)
+        .eval_points(evals)
+        .seed(seed)
+        .run()?;
     print_curves(std::slice::from_ref(&rec));
     finish(args, "train", std::slice::from_ref(&rec))
 }

@@ -13,6 +13,10 @@ use super::{log1p_exp, sigmoid, GradBackend};
 use crate::data::Dataset;
 
 /// Logistic regression over a dataset with L2 strength `lam`.
+///
+/// `Clone` is cheap (a borrow + a scalar) — the shared-memory topology
+/// engine clones one model per worker thread.
+#[derive(Clone)]
 pub struct LogisticModel<'a> {
     pub data: &'a Dataset,
     pub lam: f64,

@@ -1,0 +1,226 @@
+//! The error-feedback update — the one place in the crate that
+//! implements the Mem-SGD recursion core (Algorithm 1 lines 4/6,
+//! Algorithm 2 lines 5/7, and the per-node step of the parameter-server
+//! drivers):
+//!
+//! ```text
+//! v ← m + η·∇f        (the memory-augmented transmission candidate)
+//! u ← comp(v)          (compressed update, what goes on the wire)
+//! m ← v − u            (suppressed residual, carried to the next step)
+//! ```
+//!
+//! Two entry points:
+//!
+//! * [`apply`] — the raw recursion over caller-owned buffers. Used by
+//!   [`crate::optim::MemSgd`] (which owns `x`/`m` publicly for
+//!   checkpointing) and by the per-worker [`ErrorFeedbackStep`].
+//! * [`ErrorFeedbackStep`] — a self-contained per-worker state bundle
+//!   (memory + scratch + compressor + reusable update + bit counter)
+//!   that every topology engine instantiates once per worker. It also
+//!   covers the **memory-free** baselines (vanilla SGD, QSGD, the §2.2
+//!   unbiased rand-k) so the four training topologies can run *any*
+//!   [`crate::coordinator::config::MethodSpec`] through one code path.
+//!
+//! The stepsize multiplies the gradient **when it enters the memory**,
+//! not at retrieval — load-bearing for the Section 2.3 analysis and
+//! asserted by the Mem-SGD unit tests.
+
+use crate::compress::{Compressor, Update};
+use crate::util::prng::Prng;
+
+/// One error-feedback step over caller-owned buffers.
+///
+/// `v` is scratch (rebuilt from scratch here); on return `memory` holds
+/// `v − u` and `out` holds the compressed update `u` the caller applies
+/// to its iterate (`x ← x − u`). Returns the wire cost of `u` in bits.
+///
+/// Implementation note (kept from the Mem-SGD hot-path tuning): the
+/// `v = m + η·g` pass is its own loop so it auto-vectorizes, and the
+/// memory update swaps the `m`/`v` buffers instead of copying, then
+/// subtracts the (usually sparse) update in `O(nnz)`.
+#[inline]
+pub fn apply(
+    comp: &mut dyn Compressor,
+    memory: &mut Vec<f32>,
+    v: &mut Vec<f32>,
+    grad: &[f32],
+    eta: f32,
+    rng: &mut Prng,
+    out: &mut Update,
+) -> u64 {
+    debug_assert_eq!(memory.len(), grad.len());
+    debug_assert_eq!(v.len(), grad.len());
+    for ((vi, &mi), &gi) in v.iter_mut().zip(memory.iter()).zip(grad) {
+        *vi = mi + eta * gi;
+    }
+    let bits = comp.compress(v, rng, out);
+    std::mem::swap(memory, v);
+    out.sub_from(memory);
+    bits
+}
+
+/// Per-worker error-feedback state: everything one sequential stream,
+/// shared-memory worker, or parameter-server node needs to turn a
+/// stochastic gradient into a compressed update.
+pub struct ErrorFeedbackStep {
+    /// Error memory `m` (all zeros for memory-free methods).
+    memory: Vec<f32>,
+    /// Scratch `v = m + η·g`.
+    v: Vec<f32>,
+    comp: Box<dyn Compressor>,
+    update: Update,
+    /// Post-compression scaling of the transmitted values (`d/k` for the
+    /// §2.2 unbiased rand-k baseline; 1 otherwise). Only valid without
+    /// memory — scaling a remembered residual would double-count it.
+    scale: f32,
+    use_memory: bool,
+    /// Cumulative wire cost of every update produced so far.
+    pub bits_sent: u64,
+}
+
+impl ErrorFeedbackStep {
+    /// Error feedback gated on the operator: contraction operators
+    /// (top-k, rand-k, ...) keep a memory; non-contractions (QSGD) run
+    /// memory-free exactly as in the paper's §4.3 baseline —
+    /// accumulating unbiased quantization noise would amplify it
+    /// instead of correcting it.
+    pub fn new(d: usize, comp: Box<dyn Compressor>) -> Self {
+        let use_memory = comp.contraction_k(d).is_some();
+        Self::build(d, comp, 1.0, use_memory)
+    }
+
+    /// Memory-free step (vanilla/unbiased baselines): `u = scale·comp(η·g)`.
+    pub fn memory_free(d: usize, comp: Box<dyn Compressor>, scale: f32) -> Self {
+        Self::build(d, comp, scale, false)
+    }
+
+    fn build(d: usize, comp: Box<dyn Compressor>, scale: f32, use_memory: bool) -> Self {
+        debug_assert!(scale == 1.0 || !use_memory, "scaling requires memory-free mode");
+        ErrorFeedbackStep {
+            memory: vec![0.0; d],
+            v: vec![0.0; d],
+            comp,
+            update: Update::new_sparse(d),
+            scale,
+            use_memory,
+            bits_sent: 0,
+        }
+    }
+
+    /// Produce the next compressed update from `grad` at stepsize `eta`;
+    /// afterwards [`ErrorFeedbackStep::update`] holds the update to apply
+    /// to the iterate. Returns this step's wire cost in bits.
+    pub fn step(&mut self, grad: &[f32], eta: f32, rng: &mut Prng) -> u64 {
+        let bits = if self.use_memory {
+            apply(
+                self.comp.as_mut(),
+                &mut self.memory,
+                &mut self.v,
+                grad,
+                eta,
+                rng,
+                &mut self.update,
+            )
+        } else {
+            debug_assert_eq!(self.v.len(), grad.len());
+            for (vi, &gi) in self.v.iter_mut().zip(grad) {
+                *vi = eta * gi;
+            }
+            let bits = self.comp.compress(&self.v, rng, &mut self.update);
+            if self.scale != 1.0 {
+                match &mut self.update {
+                    Update::Sparse(s) => {
+                        for val in s.val.iter_mut() {
+                            *val *= self.scale;
+                        }
+                    }
+                    Update::Dense(g) => {
+                        for val in g.iter_mut() {
+                            *val *= self.scale;
+                        }
+                    }
+                }
+            }
+            bits
+        };
+        self.bits_sent += bits;
+        bits
+    }
+
+    /// The update produced by the last [`ErrorFeedbackStep::step`].
+    pub fn update(&self) -> &Update {
+        &self.update
+    }
+
+    /// Current error memory.
+    pub fn memory(&self) -> &[f32] {
+        &self.memory
+    }
+
+    /// Whether this method carries an error memory.
+    pub fn uses_memory(&self) -> bool {
+        self.use_memory
+    }
+
+    /// `‖m‖²` — the quantity Lemma 3.2 bounds.
+    pub fn memory_norm_sq(&self) -> f64 {
+        crate::util::stats::l2_norm_sq(&self.memory)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{from_spec, TopK};
+
+    #[test]
+    fn step_matches_manual_recursion() {
+        let d = 4;
+        let mut ef = ErrorFeedbackStep::new(d, Box::new(TopK::new(1)));
+        let mut rng = Prng::new(0);
+        // grad [10, 1, 0, 0] at eta 1: v = [10,1,0,0], u = [10,0,0,0],
+        // m = [0,1,0,0].
+        ef.step(&[10.0, 1.0, 0.0, 0.0], 1.0, &mut rng);
+        assert_eq!(ef.update().to_dense(d), vec![10.0, 0.0, 0.0, 0.0]);
+        assert_eq!(ef.memory(), &[0.0, 1.0, 0.0, 0.0]);
+        assert!(ef.uses_memory());
+        // Zero gradient: the memory flushes.
+        ef.step(&[0.0; 4], 1.0, &mut rng);
+        assert_eq!(ef.update().to_dense(d), vec![0.0, 1.0, 0.0, 0.0]);
+        assert_eq!(ef.memory(), &[0.0; 4]);
+        assert!(ef.memory_norm_sq() < 1e-12);
+    }
+
+    #[test]
+    fn memory_free_scales_the_update() {
+        let d = 4;
+        // Unbiased rand-k style: scale d/k = 4 applied post-compression.
+        let mut ef =
+            ErrorFeedbackStep::memory_free(d, Box::new(crate::compress::Identity), 4.0);
+        let mut rng = Prng::new(1);
+        ef.step(&[1.0, 2.0, 3.0, 4.0], 0.5, &mut rng);
+        assert_eq!(ef.update().to_dense(d), vec![2.0, 4.0, 6.0, 8.0]);
+        assert!(!ef.uses_memory());
+        assert_eq!(ef.memory(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn qsgd_runs_memory_free_by_default() {
+        let ef = ErrorFeedbackStep::new(8, from_spec("qsgd:16").unwrap());
+        assert!(!ef.uses_memory());
+        let ef = ErrorFeedbackStep::new(8, from_spec("top_k:2").unwrap());
+        assert!(ef.uses_memory());
+    }
+
+    #[test]
+    fn bits_accumulate_across_steps() {
+        let d = 100;
+        let mut ef = ErrorFeedbackStep::new(d, from_spec("top_k:2").unwrap());
+        let mut rng = Prng::new(1);
+        for _ in 0..10 {
+            ef.step(&vec![1.0; d], 0.1, &mut rng);
+        }
+        // top-2 on d=100: 2·(32+7) = 78 bits per step.
+        assert_eq!(ef.bits_sent, 10 * 78);
+    }
+}

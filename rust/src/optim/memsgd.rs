@@ -70,26 +70,24 @@ impl MemSgd {
     /// One Algorithm-1 iteration given the stochastic gradient
     /// `grad = ∇f_{i_t}(x_t)` and stepsize `eta`. Returns the transmitted
     /// update (for communication tracing / the parallel driver).
+    ///
+    /// The recursion core (lines 4 and 6) is the crate-wide shared
+    /// [`error_feedback::apply`]; this wrapper only applies the update to
+    /// the iterate (line 5) and keeps the counters.
     pub fn step(&mut self, grad: &[f32], eta: f64, rng: &mut Prng) -> &Update {
         debug_assert_eq!(grad.len(), self.x.len());
-        let etaf = eta as f32;
-        // v = m + η ∇f  (line 4's argument). Kept as its own loop: the
-        // plain fma pass auto-vectorizes, and fusing it with the top-k
-        // admission scan measured 35% *slower* (the heap branch forces
-        // the combined loop scalar — §Perf iteration 7, reverted).
-        for ((vi, &mi), &gi) in self.v.iter_mut().zip(&self.m).zip(grad) {
-            *vi = mi + etaf * gi;
-        }
-        // g = comp_k(v)  (line 4)
-        self.bits_sent += self.compressor.compress(&self.v, rng, &mut self.update);
-        // x ← x − g  (line 5)
+        // v = m + η ∇f; g = comp_k(v); m ← v − g  (lines 4 and 6).
+        self.bits_sent += super::error_feedback::apply(
+            self.compressor.as_mut(),
+            &mut self.m,
+            &mut self.v,
+            grad,
+            eta as f32,
+            rng,
+            &mut self.update,
+        );
+        // x ← x − g  (line 5).
         self.update.sub_from(&mut self.x);
-        // m ← v − g  (line 6). Instead of copying v into m (an O(d) pass
-        // that showed up in the hot-path profile), swap the buffers —
-        // `v` is rebuilt from scratch next iteration anyway — and apply
-        // the sparse subtraction in O(nnz).
-        std::mem::swap(&mut self.m, &mut self.v);
-        self.update.sub_from(&mut self.m);
         self.t += 1;
         &self.update
     }

@@ -1,14 +1,17 @@
 //! Optimizers: Mem-SGD (Algorithm 1), vanilla/unbiased-sparsified SGD
-//! (Section 2.2 baselines), stepsize schedules (Table 2), and the
+//! (Section 2.2 baselines), the shared [`error_feedback`] step every
+//! training topology runs, stepsize schedules (Table 2), and the
 //! quadratically-weighted iterate averaging of Theorem 2.4.
 
 pub mod averaging;
+pub mod error_feedback;
 pub mod memsgd;
 pub mod schedule;
 pub mod sgd;
 pub mod theory;
 
 pub use averaging::WeightedAverage;
+pub use error_feedback::ErrorFeedbackStep;
 pub use memsgd::MemSgd;
 pub use schedule::Schedule;
 pub use sgd::Sgd;

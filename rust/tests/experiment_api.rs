@@ -1,0 +1,244 @@
+//! Unified experiment API integration tests:
+//!
+//! * every `Topology` × `MethodSpec` combination smoke-runs on a tiny
+//!   synthetic dataset with monotone communicated-bits accounting,
+//! * 1-worker `SharedMemory` and `ParamServerSync` reproduce the
+//!   `Sequential` trajectory exactly (the engines share one
+//!   error-feedback step and one worker-seeding scheme),
+//! * the strict spec parsing contract (no silently ignored components).
+
+use memsgd::compress::{from_spec, CompressorSpec};
+use memsgd::coordinator::{Experiment, MethodSpec, Topology};
+use memsgd::data::synthetic;
+use memsgd::models::LogisticModel;
+use memsgd::optim::Schedule;
+use memsgd::sim::network::NetworkModel;
+
+fn data() -> memsgd::data::Dataset {
+    synthetic::epsilon_like(200, 16, 9)
+}
+
+fn all_methods() -> Vec<MethodSpec> {
+    vec![
+        MethodSpec::mem_top_k(2),
+        MethodSpec::mem_rand_k(2),
+        MethodSpec::mem(CompressorSpec::RandomP { p: 0.5 }),
+        MethodSpec::mem(CompressorSpec::Identity),
+        MethodSpec::Sgd,
+        MethodSpec::SgdQsgd { levels: 16, eff: None },
+        MethodSpec::SgdUnbiasedRandK { k: 2 },
+    ]
+}
+
+fn all_topologies() -> Vec<Topology> {
+    vec![
+        Topology::Sequential,
+        Topology::SharedMemory { workers: 2 },
+        Topology::ParamServerSync { nodes: 2 },
+        Topology::ParamServerAsync { nodes: 2, net: NetworkModel::eth_10g() },
+    ]
+}
+
+#[test]
+fn every_topology_method_combination_smoke_runs() {
+    let data = data();
+    let lam = 1.0 / data.n() as f64;
+    for topology in all_topologies() {
+        for method in all_methods() {
+            let label = format!("{:?} x {}", topology, method.name());
+            let rec = Experiment::new(LogisticModel::new(&data, lam))
+                .dataset(&data.name)
+                .method(method)
+                .schedule(Schedule::constant(0.1))
+                .topology(topology.clone())
+                .steps(400)
+                .eval_points(4)
+                .average(false)
+                .seed(3)
+                .run()
+                .unwrap_or_else(|e| panic!("{label}: {e:#}"));
+            assert!(rec.final_loss().is_finite(), "{label}: non-finite loss");
+            assert!(rec.total_bits > 0, "{label}: no bits accounted");
+            assert!(rec.steps > 0, "{label}: no steps recorded");
+            assert!(!rec.curve.is_empty(), "{label}: empty curve");
+            // Communicated bits are cumulative: monotone along the curve,
+            // ending at the recorded total.
+            assert!(
+                rec.curve.windows(2).all(|w| w[0].bits <= w[1].bits),
+                "{label}: bits not monotone"
+            );
+            assert!(
+                rec.curve.last().unwrap().bits <= rec.total_bits,
+                "{label}: curve bits exceed total"
+            );
+        }
+    }
+}
+
+#[test]
+fn one_worker_shared_memory_matches_sequential_exactly() {
+    // The cross-topology consistency contract: with one worker there is
+    // no concurrency and no averaging, so SharedMemory { workers: 1 }
+    // and ParamServerSync { nodes: 1 } replay the Sequential trajectory
+    // bit for bit for the deterministic memsgd:top_k:1.
+    let data = data();
+    let lam = 1.0 / data.n() as f64;
+    let run = |topology: Topology| {
+        Experiment::new(LogisticModel::new(&data, lam))
+            .dataset(&data.name)
+            .method(MethodSpec::mem_top_k(1))
+            .schedule(Schedule::constant(0.5))
+            .topology(topology)
+            .steps(600)
+            .eval_points(3)
+            .average(false)
+            .seed(11)
+            .run()
+            .unwrap()
+    };
+    let seq = run(Topology::Sequential);
+    let shm = run(Topology::SharedMemory { workers: 1 });
+    let ps = run(Topology::ParamServerSync { nodes: 1 });
+
+    assert_eq!(
+        seq.final_loss(),
+        shm.final_loss(),
+        "1-worker shared memory diverged from sequential"
+    );
+    assert_eq!(
+        seq.final_loss(),
+        ps.final_loss(),
+        "1-node parameter server diverged from sequential"
+    );
+    // Upload accounting matches exactly; the parameter server additionally
+    // bills the broadcast direction.
+    assert_eq!(seq.total_bits, shm.total_bits);
+    assert_eq!(seq.total_bits, ps.extra["upload_bits"] as u64);
+    assert!(ps.total_bits > seq.total_bits, "broadcast not accounted");
+
+    // And the asynchronous server with one worker (zero staleness) lands
+    // on the same trajectory too.
+    let ps_async = run(Topology::ParamServerAsync { nodes: 1, net: NetworkModel::eth_10g() });
+    assert_eq!(seq.final_loss(), ps_async.final_loss());
+    assert_eq!(ps_async.extra["max_staleness"], 0.0);
+}
+
+#[test]
+fn multi_worker_topologies_still_converge() {
+    let data = data();
+    let lam = 1.0 / data.n() as f64;
+    for topology in all_topologies() {
+        let rec = Experiment::new(LogisticModel::new(&data, lam))
+            .dataset(&data.name)
+            .method(MethodSpec::mem_top_k(2))
+            .schedule(Schedule::constant(0.5))
+            .topology(topology.clone())
+            .steps(4_000)
+            .eval_points(4)
+            .average(false)
+            .seed(5)
+            .run()
+            .unwrap();
+        assert!(
+            rec.final_loss() < 0.66,
+            "{topology:?}: stuck at {}",
+            rec.final_loss()
+        );
+    }
+}
+
+#[test]
+fn deterministic_given_seed_across_topologies() {
+    let data = data();
+    let lam = 1.0 / data.n() as f64;
+    // Threads race, so exact determinism is only promised for the
+    // single-threaded engines.
+    for topology in [
+        Topology::Sequential,
+        Topology::ParamServerSync { nodes: 3 },
+        Topology::ParamServerAsync { nodes: 3, net: NetworkModel::eth_1g() },
+    ] {
+        let run = || {
+            Experiment::new(LogisticModel::new(&data, lam))
+                .dataset(&data.name)
+                .method(MethodSpec::mem_rand_k(2))
+                .schedule(Schedule::constant(0.2))
+                .topology(topology.clone())
+                .steps(600)
+                .eval_points(3)
+                .seed(13)
+                .run()
+                .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.final_loss(), b.final_loss(), "{topology:?}");
+        assert_eq!(a.total_bits, b.total_bits, "{topology:?}");
+    }
+}
+
+#[test]
+fn strict_spec_parsing_end_to_end() {
+    // Trailing junk is rejected at every parse edge.
+    assert!(from_spec("top_k:1:junk").is_err());
+    assert!(MethodSpec::parse("memsgd:top_k:1:junk").is_err());
+    assert!(MethodSpec::parse("sgd:qsgd:16:71:junk").is_err());
+    // The typed spec is what the infallible paths hold.
+    let m = MethodSpec::parse("memsgd:top_k:3").unwrap();
+    assert_eq!(m, MethodSpec::mem_top_k(3));
+    assert_eq!(m.name(), "memsgd(top_3)");
+    assert_eq!(m.contraction_k(30), Some(3.0));
+    assert_eq!(m.spec_string(), "memsgd:top_k:3");
+}
+
+#[test]
+fn run_single_threaded_covers_non_replicating_backends() {
+    // Backends that cannot be cloned across threads (the PJRT case) can
+    // still run every topology except SharedMemory.
+    let data = data();
+    let lam = 1.0 / data.n() as f64;
+    let build = |topology: Topology| {
+        Experiment::new(LogisticModel::new(&data, lam))
+            .dataset(&data.name)
+            .method(MethodSpec::mem_top_k(1))
+            .schedule(Schedule::constant(0.3))
+            .topology(topology)
+            .steps(300)
+            .eval_points(3)
+            .seed(4)
+    };
+    for topology in [
+        Topology::Sequential,
+        Topology::ParamServerSync { nodes: 2 },
+        Topology::ParamServerAsync { nodes: 2, net: NetworkModel::eth_10g() },
+    ] {
+        let rec = build(topology.clone()).run_single_threaded().unwrap();
+        assert!(rec.final_loss().is_finite(), "{topology:?}");
+    }
+    let err = build(Topology::SharedMemory { workers: 2 })
+        .run_single_threaded()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("SharedMemory"), "{err:#}");
+}
+
+#[test]
+fn parse_method_builder_edge() {
+    let data = data();
+    let lam = 1.0 / data.n() as f64;
+    let rec = Experiment::new(LogisticModel::new(&data, lam))
+        .dataset(&data.name)
+        .parse_method("memsgd:top_k:1")
+        .unwrap()
+        .schedule(Schedule::constant(0.3))
+        .steps(300)
+        .eval_points(3)
+        .seed(2)
+        .run()
+        .unwrap();
+    assert_eq!(rec.method, "memsgd(top_1)");
+    assert!(
+        Experiment::new(LogisticModel::new(&data, lam))
+            .parse_method("memsgd:top_k:1:junk")
+            .is_err()
+    );
+}

@@ -1,0 +1,192 @@
+//! Minimal, dependency-free drop-in for the subset of the `anyhow` API
+//! this workspace uses: [`Error`], [`Result`], the [`anyhow!`],
+//! [`bail!`] and [`ensure!`] macros, and the [`Context`] extension
+//! trait for `Result`/`Option`.
+//!
+//! Vendored so the workspace builds **offline** (the build container
+//! has no crates.io access). Semantics follow the real crate where it
+//! matters here:
+//!
+//! * `Error` carries a context chain; `{}` prints the outermost
+//!   message, `{:#}` prints the whole chain separated by `": "`.
+//! * `Error` deliberately does **not** implement `std::error::Error`,
+//!   so the blanket `From<E: std::error::Error>` impl (what makes `?`
+//!   work on `io::Error`, `ParseIntError`, ...) cannot conflict with
+//!   the reflexive `From<Error> for Error`.
+
+use std::fmt;
+
+/// An error with a chain of context messages (outermost first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend a context message (what [`Context::context`] does).
+    pub fn push_context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if f.alternate() {
+            for cause in &self.chain[1..] {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (and turn `None` into an error).
+pub trait Context<T> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().push_context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_number(s: &str) -> Result<i32> {
+        let n: i32 = s.parse().context("not a number")?;
+        ensure!(n >= 0, "negative: {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_number("42").unwrap(), 42);
+        let err = parse_number("x").unwrap_err();
+        assert_eq!(format!("{err}"), "not a number");
+        assert!(format!("{err:#}").starts_with("not a number: "));
+    }
+
+    #[test]
+    fn ensure_and_bail_and_anyhow() {
+        assert!(format!("{:#}", parse_number("-3").unwrap_err()).contains("negative: -3"));
+        fn fails() -> Result<()> {
+            bail!("boom {}", 7);
+        }
+        assert_eq!(fails().unwrap_err().to_string(), "boom 7");
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let err = v.context("missing").unwrap_err();
+        assert_eq!(err.to_string(), "missing");
+    }
+
+    #[test]
+    fn with_context_chains() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::other("disk on fire"));
+        let err = r.with_context(|| format!("writing {}", "f.json")).unwrap_err();
+        assert_eq!(format!("{err:#}"), "writing f.json: disk on fire");
+        assert_eq!(err.chain().count(), 2);
+    }
+}
