@@ -5,6 +5,7 @@
 //!
 //! Run: `cargo bench --bench figure6_network`
 
+use memsgd::coordinator::LocalUpdate;
 use memsgd::experiments::extensions;
 use memsgd::experiments::Which;
 use memsgd::util::bench::Bench;
@@ -21,8 +22,9 @@ fn main() {
         let rounds = 1_200;
         let workers = 8;
         let started = Instant::now();
-        let res = extensions::figure6_network(which, scale, rounds, workers, 1)
-            .expect("figure6 driver failed");
+        let res =
+            extensions::figure6_network(which, scale, rounds, workers, LocalUpdate::default(), 1)
+                .expect("figure6 driver failed");
         b.record(
             &format!("figure6 {} ({} cells)", which.name(), res.cells.len()),
             started.elapsed(),

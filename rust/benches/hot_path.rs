@@ -79,6 +79,46 @@ fn main() {
         });
     }
 
+    // --- batched gradients (local-update schedule hot path) -------------------
+    // One minibatch gradient per call; the per-sample cost should stay
+    // ~flat in B (single accumulation pass, no scratch allocation).
+    {
+        let data = synthetic::epsilon_like(2_000, 2_000, 5);
+        let mut model = LogisticModel::with_paper_lambda(&data);
+        let d = data.d();
+        let mut grad = vec![0.0f32; d];
+        let x = vec![0.01f32; d];
+        let mut t = 0usize;
+        for bsz in [1usize, 8, 64] {
+            let mut idx = vec![0usize; bsz];
+            b.run(&format!("grad batch B={bsz:<2}     dense d=2000"), || {
+                for slot in idx.iter_mut() {
+                    *slot = t % 2_000;
+                    t += 1;
+                }
+                model.sample_grad_batch(&x, &idx, &mut grad);
+            });
+        }
+    }
+    {
+        let data = synthetic::rcv1_like(2_000, 47_236, 0.0015, 6);
+        let mut model = LogisticModel::with_paper_lambda(&data);
+        let d = data.d();
+        let mut grad = vec![0.0f32; d];
+        let x = vec![0.01f32; d];
+        let mut t = 0usize;
+        for bsz in [1usize, 8, 64] {
+            let mut idx = vec![0usize; bsz];
+            b.run(&format!("grad batch B={bsz:<2}     sparse d=47236"), || {
+                for slot in idx.iter_mut() {
+                    *slot = t % 2_000;
+                    t += 1;
+                }
+                model.sample_grad_batch(&x, &idx, &mut grad);
+            });
+        }
+    }
+
     // --- weighted averaging overhead ------------------------------------------
     {
         let d = 2_000;
@@ -90,6 +130,15 @@ fn main() {
     }
 
     b.finish();
+    // Accumulate the perf trajectory: every run appends its rows. Skip
+    // when the MEMSGD_BENCH_JSON hook is active — finish() already wrote
+    // there, and appending twice would duplicate the rows.
+    if std::env::var_os("MEMSGD_BENCH_JSON").is_none() {
+        match b.write_json("BENCH_hot_path.json") {
+            Ok(()) => println!("perf rows appended -> BENCH_hot_path.json"),
+            Err(e) => eprintln!("could not write BENCH_hot_path.json: {e}"),
+        }
+    }
 
     // The §7 acceptance check, printed for EXPERIMENTS.md:
     let ratio_cases: Vec<(&str, f64)> = b

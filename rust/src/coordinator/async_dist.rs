@@ -105,6 +105,7 @@ pub fn run(data: &Dataset, cfg: &AsyncConfig) -> Result<(RunRecord, AsyncStats)>
         average: false,
         seed: cfg.seed,
         dataset: data.name.clone(),
+        local: super::config::LocalUpdate::default(),
     };
     let mut model = LogisticModel::new(data, lam);
     let record = experiment::param_server_async(

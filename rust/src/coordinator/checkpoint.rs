@@ -10,11 +10,16 @@
 //!
 //! ```text
 //! magic "MEMSGDCK" | version u32 | compressor-spec (len u32 + utf8)
-//! | t u64 | bits_sent u64 | d u64
+//! | t u64 | bits_sent u64 | batch u64 (version >= 2) | d u64
 //! | x  [f32; d] | m [f32; d]
 //! | rng [u64; 4]
 //! | has_avg u8 | (shift f64 | sum_w f64 | avg_t u64 | acc [f64; d])?
 //! ```
+//!
+//! Version 2 added the minibatch size `batch`: the RNG stream draws
+//! `batch` sample indices per step, so resuming under a different
+//! `--batch` would silently diverge — the reader treats version-1
+//! checkpoints as `batch = 1` and `run_resumable` refuses mismatches.
 //!
 //! No compression, no external deps; `d = 47'236` checkpoints are ~0.9 MB.
 
@@ -29,13 +34,16 @@ use crate::optim::{MemSgd, WeightedAverage};
 use crate::util::prng::Prng;
 
 const MAGIC: &[u8; 8] = b"MEMSGDCK";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// Everything needed to resume a sequential Mem-SGD run.
 pub struct Checkpoint {
     pub compressor_spec: String,
     pub t: usize,
     pub bits_sent: u64,
+    /// Minibatch size the run was drawing (`batch` indices per step —
+    /// part of the RNG-stream contract). Version-1 files load as 1.
+    pub batch: usize,
     pub x: Vec<f32>,
     pub m: Vec<f32>,
     pub rng_state: [u64; 4],
@@ -44,7 +52,9 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
-    /// Capture the state of a live optimizer + RNG (+ averager).
+    /// Capture the state of a live optimizer + RNG (+ averager) at the
+    /// default per-sample schedule (`batch = 1`); minibatch runs chain
+    /// [`Checkpoint::with_batch`].
     pub fn capture(
         opt: &MemSgd,
         spec: &str,
@@ -55,6 +65,7 @@ impl Checkpoint {
             compressor_spec: spec.to_string(),
             t: opt.t,
             bits_sent: opt.bits_sent,
+            batch: 1,
             x: opt.x.clone(),
             m: opt.m.clone(),
             rng_state: rng.state(),
@@ -63,6 +74,13 @@ impl Checkpoint {
                 (shift, acc.to_vec(), sum_w, t)
             }),
         }
+    }
+
+    /// Record the minibatch size the run draws per step (resume refuses
+    /// a mismatch — the sample-index stream depends on it).
+    pub fn with_batch(mut self, batch: usize) -> Checkpoint {
+        self.batch = batch.max(1);
+        self
     }
 
     /// Rebuild the optimizer, RNG and averager. The compressor is
@@ -93,6 +111,7 @@ impl Checkpoint {
         out.extend_from_slice(spec);
         out.extend_from_slice(&(self.t as u64).to_le_bytes());
         out.extend_from_slice(&self.bits_sent.to_le_bytes());
+        out.extend_from_slice(&(self.batch as u64).to_le_bytes());
         out.extend_from_slice(&(d as u64).to_le_bytes());
         for &v in &self.x {
             out.extend_from_slice(&v.to_le_bytes());
@@ -128,8 +147,8 @@ impl Checkpoint {
             bail!("not a memsgd checkpoint (bad magic)");
         }
         let version = read_u32(&mut cur)?;
-        if version != VERSION {
-            bail!("unsupported checkpoint version {version} (expected {VERSION})");
+        if version == 0 || version > VERSION {
+            bail!("unsupported checkpoint version {version} (expected <= {VERSION})");
         }
         let spec_len = read_u32(&mut cur)? as usize;
         if spec_len > 4096 {
@@ -140,9 +159,18 @@ impl Checkpoint {
         let compressor_spec = String::from_utf8(spec).context("spec is not utf-8")?;
         let t = read_u64(&mut cur)? as usize;
         let bits_sent = read_u64(&mut cur)?;
+        // Version 1 predates minibatch schedules: those runs drew one
+        // sample index per step.
+        let batch = if version >= 2 { read_u64(&mut cur)? as usize } else { 1 };
         let d = read_u64(&mut cur)? as usize;
         let remaining = bytes.len() as u64 - cur.position();
-        if (remaining as usize) < d * 8 + 32 + 1 {
+        // Checked arithmetic: a corrupted d must not overflow the size
+        // estimate (and then blow up the x/m allocations below).
+        let need = (d as u64)
+            .checked_mul(8)
+            .and_then(|v| v.checked_add(33))
+            .ok_or_else(|| anyhow::anyhow!("implausible checkpoint dimension {d}"))?;
+        if remaining < need {
             bail!("checkpoint truncated: d={d} but only {remaining} bytes left");
         }
         let mut x = vec![0.0f32; d];
@@ -177,6 +205,7 @@ impl Checkpoint {
             compressor_spec,
             t,
             bits_sent,
+            batch,
             x,
             m: memory,
             rng_state,
@@ -299,6 +328,28 @@ mod tests {
         assert_eq!(back.x, ck.x);
         assert_eq!(back.m, ck.m);
         fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn batch_round_trips_and_version1_loads_as_batch_one() {
+        let (opt, rng) = trained_state(5);
+        let ck = Checkpoint::capture(&opt, "top_k:2", &rng, None).with_batch(6);
+        let bytes = ck.to_bytes();
+        let back = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(back.batch, 6);
+        assert_eq!(back.x, ck.x);
+
+        // Splice a version-1 container out of the version-2 bytes: drop
+        // the 8 batch bytes (after magic 8 + version 4 + spec-len 4 +
+        // spec + t 8 + bits 8) and rewrite the version field.
+        let batch_off = 8 + 4 + 4 + "top_k:2".len() + 8 + 8;
+        let mut v1 = bytes.clone();
+        v1.drain(batch_off..batch_off + 8);
+        v1[8..12].copy_from_slice(&1u32.to_le_bytes());
+        let old = Checkpoint::from_bytes(&v1).unwrap();
+        assert_eq!(old.batch, 1, "version-1 checkpoints predate minibatches");
+        assert_eq!(old.x, ck.x);
+        assert_eq!(old.rng_state, ck.rng_state);
     }
 
     #[test]

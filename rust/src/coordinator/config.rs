@@ -24,6 +24,76 @@ use anyhow::{bail, Result};
 use crate::compress::CompressorSpec;
 use crate::optim::{ErrorFeedbackStep, MemSgd, Schedule, Sgd};
 
+/// Local-update schedule: how much local computation happens between
+/// communication events (the Qsparse-local-SGD axis; Basu et al. 2019).
+///
+/// * `batch` — minibatch size `B`: each stochastic gradient averages
+///   `B` samples, `∇ = (1/B)·Σ_{i∈batch} ∇f_i(x)`.
+/// * `sync_every` — sync interval `H`: a worker takes `H`
+///   error-compensated local steps, accumulating the raw updates
+///   `Σ_h η_h·∇_h` on a worker-local iterate, and only then compresses
+///   the aggregate (against its worker-local error memory) and
+///   communicates — dividing the number of transmissions, and hence the
+///   communicated bits, by a factor of `H`.
+///
+/// `B = 1, H = 1` (the default) is the paper's per-sample schedule; the
+/// golden-trajectory suite (`tests/local_update_equivalence.rs`) pins
+/// that this case reproduces the classic engines bit for bit.
+///
+/// Construct through [`LocalUpdate::new`], the strict parse edge: zero
+/// and overflowing values are rejected there, and re-checked via
+/// [`LocalUpdate::validate`] by every schedule-accepting API
+/// (`Experiment::run*`, the train shims, `run_resumable`,
+/// `grid::search_local`, `figure6_network`) — never `panic!`ed on deep
+/// inside a driver.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LocalUpdate {
+    /// Minibatch size `B ≥ 1` (samples averaged per gradient).
+    pub batch: usize,
+    /// Sync interval `H ≥ 1` (local steps per communication).
+    pub sync_every: usize,
+}
+
+impl Default for LocalUpdate {
+    fn default() -> Self {
+        LocalUpdate { batch: 1, sync_every: 1 }
+    }
+}
+
+impl LocalUpdate {
+    /// Validated constructor — the `--batch`/`--local-steps` parse edge.
+    pub fn new(batch: usize, sync_every: usize) -> Result<LocalUpdate> {
+        let lu = LocalUpdate { batch, sync_every };
+        lu.validate()?;
+        Ok(lu)
+    }
+
+    /// Re-check a (possibly literally constructed) schedule: `batch` and
+    /// `sync_every` must be ≥ 1 and their product — the samples consumed
+    /// per sync — must not overflow.
+    pub fn validate(&self) -> Result<()> {
+        if self.batch == 0 {
+            bail!("--batch must be >= 1 (a zero-sample minibatch has no gradient)");
+        }
+        if self.sync_every == 0 {
+            bail!("--local-steps must be >= 1 (a sync interval of zero never communicates)");
+        }
+        if self.batch.checked_mul(self.sync_every).is_none() {
+            bail!(
+                "--batch {} x --local-steps {} overflows the per-sync sample count",
+                self.batch,
+                self.sync_every
+            );
+        }
+        Ok(())
+    }
+
+    /// Whether this is the paper's per-sample schedule (`B = 1, H = 1`).
+    pub fn is_default(&self) -> bool {
+        self.batch == 1 && self.sync_every == 1
+    }
+}
+
 /// A parsed, fully-typed method specification.
 #[derive(Clone, Debug, PartialEq)]
 pub enum MethodSpec {
@@ -362,6 +432,22 @@ mod tests {
         assert!(!MethodSpec::SgdUnbiasedRandK { k: 2 }.error_feedback(8).uses_memory());
         // memsgd with a non-contraction runs memory-free too (§4.3).
         assert!(!MethodSpec::parse("memsgd:qsgd:16").unwrap().error_feedback(8).uses_memory());
+    }
+
+    #[test]
+    fn local_update_parse_edge_is_strict() {
+        assert!(LocalUpdate::new(0, 1).is_err());
+        assert!(LocalUpdate::new(1, 0).is_err());
+        assert!(LocalUpdate::new(0, 0).is_err());
+        assert!(LocalUpdate::new(usize::MAX, 2).is_err()); // B·H overflows
+        let lu = LocalUpdate::new(1, 1).unwrap();
+        assert!(lu.is_default());
+        assert_eq!(lu, LocalUpdate::default());
+        let lu = LocalUpdate::new(8, 4).unwrap();
+        assert!(!lu.is_default());
+        // Literal construction bypasses new(); validate() re-rejects.
+        assert!(LocalUpdate { batch: 0, sync_every: 3 }.validate().is_err());
+        assert!(LocalUpdate { batch: 3, sync_every: 0 }.validate().is_err());
     }
 
     #[test]

@@ -88,6 +88,7 @@ pub fn run(data: &Dataset, cfg: &DistributedConfig) -> Result<RunRecord> {
         average: false,
         seed: cfg.seed,
         dataset: data.name.clone(),
+        local: super::config::LocalUpdate::default(),
     };
     let mut model = LogisticModel::new(data, lam);
     experiment::param_server_sync(&mut model, cfg.workers, &settings)

@@ -10,7 +10,7 @@
 //!
 //! ```no_run
 //! use memsgd::coordinator::experiment::{Experiment, Topology};
-//! use memsgd::coordinator::config::MethodSpec;
+//! use memsgd::coordinator::config::{LocalUpdate, MethodSpec};
 //! use memsgd::models::LogisticModel;
 //! use memsgd::optim::Schedule;
 //! # fn main() -> anyhow::Result<()> {
@@ -20,6 +20,7 @@
 //!     .method(MethodSpec::mem_top_k(1))
 //!     .schedule(Schedule::constant(0.1))
 //!     .topology(Topology::ParamServerSync { nodes: 8 })
+//!     .local_update(LocalUpdate::new(8, 4)?) // B = 8 samples, sync every H = 4
 //!     .steps(10_000)
 //!     .eval_points(20)
 //!     .seed(1)
@@ -28,6 +29,29 @@
 //! # Ok(())
 //! # }
 //! ```
+//!
+//! ## Local-update scheduling (`B`, `H`)
+//!
+//! Every engine runs the same generalized **local-update schedule**
+//! [`LocalUpdate`]: a worker draws `B`-sample minibatch gradients
+//! ([`GradBackend::sample_grad_batch`]) and takes `H` raw local steps on
+//! a worker-local iterate before compressing the accumulated update
+//! (against its worker-local error memory) and communicating — the
+//! Qsparse-local-SGD axis on top of the paper's sparsification. `steps`
+//! stays the total **local-step** budget, and each engine divides it
+//! exactly as it always divided gradients: `Sequential` and
+//! `ParamServerAsync` take `steps / H` syncs / server updates,
+//! `SharedMemory` takes `(steps / workers) / H` syncs per worker, and
+//! `ParamServerSync` takes `steps / (nodes·H)` rounds (remainders
+//! dropped; the multi-worker engines keep their historical floor of
+//! one sync per worker) — so communicated bits drop by ≈`H` at a
+//! fixed budget. Stepsize indexing:
+//! the sequential and shared-memory engines index `η` by the worker's
+//! local step count, the parameter-server engines hold `η` constant
+//! within a sync (indexed by round / server update) — each matches its
+//! pre-local-update behavior exactly at `H = 1`. With the default
+//! `B = 1, H = 1` all four engines reproduce the classic per-sample
+//! trajectories **bit for bit** (`tests/local_update_equivalence.rs`).
 //!
 //! Worker randomness is derived uniformly across topologies: one root
 //! generator `Prng::new(seed)` hands out child streams in worker order
@@ -52,7 +76,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use super::config::MethodSpec;
+use super::config::{LocalUpdate, MethodSpec};
 use super::parallel::SharedParams;
 use crate::compress::Update;
 use crate::metrics::{LossPoint, RunRecord};
@@ -99,6 +123,7 @@ pub(crate) struct Settings {
     pub average: bool,
     pub seed: u64,
     pub dataset: String,
+    pub local: LocalUpdate,
 }
 
 /// Builder for one training run: backend × method × schedule × topology.
@@ -112,6 +137,15 @@ pub(crate) struct Settings {
 /// or rounded up to one step/round per worker). The executed count is
 /// what [`RunRecord::steps`] reports; pass a multiple of the worker
 /// count for exact budgets.
+///
+/// Under a non-default [`LocalUpdate`] schedule, `steps` counts **local
+/// steps** (each a `B`-sample minibatch gradient): every engine takes
+/// one communication per `H` local steps on top of its usual split —
+/// `steps / H` syncs for `Sequential`/`ParamServerAsync`,
+/// `(steps / workers) / H` per `SharedMemory` worker,
+/// `steps / (nodes·H)` rounds for `ParamServerSync`. Pass a multiple of
+/// `workers·H` for exact budgets; the consumed sample count `steps·B`
+/// is reported in the record's `grad_samples` extra.
 pub struct Experiment<B: GradBackend> {
     backend: B,
     method: MethodSpec,
@@ -124,6 +158,7 @@ pub struct Experiment<B: GradBackend> {
     dataset: String,
     compute: ComputeModel,
     hetero: f64,
+    local: LocalUpdate,
 }
 
 impl<B: GradBackend> Experiment<B> {
@@ -142,6 +177,7 @@ impl<B: GradBackend> Experiment<B> {
             dataset: "unnamed".into(),
             compute: ComputeModel::new(1e-9, 2000.0),
             hetero: 0.5,
+            local: LocalUpdate::default(),
         }
     }
 
@@ -204,6 +240,15 @@ impl<B: GradBackend> Experiment<B> {
         self
     }
 
+    /// Local-update schedule: minibatch size `B` and sync interval `H`
+    /// (default `B = 1, H = 1`, the paper's per-sample schedule).
+    /// Construct through [`LocalUpdate::new`], the strict parse edge
+    /// that rejects zero/overflowing values.
+    pub fn local_update(mut self, local: LocalUpdate) -> Self {
+        self.local = local;
+        self
+    }
+
     /// Per-gradient compute cost (`ParamServerAsync` only).
     pub fn compute(mut self, compute: ComputeModel) -> Self {
         self.compute = compute;
@@ -226,6 +271,7 @@ impl<B: GradBackend> Experiment<B> {
             average: self.average,
             seed: self.seed,
             dataset: self.dataset.clone(),
+            local: self.local,
         }
     }
 
@@ -236,6 +282,10 @@ impl<B: GradBackend> Experiment<B> {
     /// worker thread; the parameter-server engines simulate their nodes
     /// in-process against the single backend.
     pub fn run_single_threaded(mut self) -> Result<RunRecord> {
+        // Same strict edge as every other schedule-accepting API: a
+        // literally constructed zero/overflowing LocalUpdate is refused,
+        // not silently clamped.
+        self.local.validate()?;
         let s = self.settings();
         match self.topology.clone() {
             Topology::Sequential => sequential(&mut self.backend, &s),
@@ -271,6 +321,7 @@ impl<B: GradBackend> Experiment<B> {
 impl<B: GradBackend + Clone + Send> Experiment<B> {
     /// Execute the run and return the unified [`RunRecord`].
     pub fn run(mut self) -> Result<RunRecord> {
+        self.local.validate()?;
         match self.topology.clone() {
             Topology::SharedMemory { workers } => {
                 let s = self.settings();
@@ -325,12 +376,118 @@ fn push_eval<B: GradBackend>(
 }
 
 // ---------------------------------------------------------------------------
+// Local-update phase (shared by all four engines)
+// ---------------------------------------------------------------------------
+
+/// Reusable per-worker scratch for the local-update phases: the local
+/// iterate, the minibatch gradient, the stepsize-scaled accumulator the
+/// sync compresses, and the minibatch index buffer.
+/// [`WorkerScratch::phase`] re-initializes it on entry, so one instance
+/// serves every phase (and, on the single-threaded engines, every
+/// worker) allocation-free.
+struct WorkerScratch {
+    local: LocalUpdate,
+    n: usize,
+    x_loc: Vec<f32>,
+    grad: Vec<f32>,
+    acc: Vec<f32>,
+    idx: Vec<usize>,
+}
+
+impl WorkerScratch {
+    fn new(d: usize, n: usize, local: LocalUpdate) -> WorkerScratch {
+        // The H = 1 fast path never touches the local iterate or the
+        // accumulator — don't allocate them for the default schedule.
+        let phase_d = if local.sync_every.max(1) > 1 { d } else { 0 };
+        WorkerScratch {
+            local,
+            n,
+            x_loc: vec![0.0; phase_d],
+            grad: vec![0.0; d],
+            acc: vec![0.0; phase_d],
+            idx: Vec::with_capacity(local.batch.max(1)),
+        }
+    }
+
+    /// One worker's local phase: `H = local.sync_every` error-compensated
+    /// minibatch steps starting from `x_start`, then one compressed sync
+    /// through `ef`.
+    ///
+    /// Each local step applies the *raw* update `η·g` to the worker-local
+    /// iterate and adds it to the accumulator; only the sync's compressed
+    /// aggregate ever travels, and the error memory inside `ef` stays
+    /// worker-local between syncs. `eta(h)` maps the local step index to
+    /// its stepsize. With `B = H = 1` this is bit-for-bit the classic
+    /// per-sample `ef.step(g, η)` (golden-trajectory suite). Returns the
+    /// sync's wire bits; the caller applies `ef.update()` to its global
+    /// iterate.
+    fn phase<B: GradBackend>(
+        &mut self,
+        backend: &mut B,
+        ef: &mut ErrorFeedbackStep,
+        rng: &mut Prng,
+        x_start: &[f32],
+        eta: impl Fn(usize) -> f32,
+    ) -> u64 {
+        let h_steps = self.local.sync_every.max(1);
+        let batch = self.local.batch.max(1);
+        // Fast path — H = 1 is the classic (minibatch) step: gradient at
+        // the fetched iterate, one error-feedback step. No local iterate,
+        // no accumulator, none of the extra O(d) passes; `v = m + η·g`
+        // and `v = m + 1.0·(η·g)` round identically, so this is the
+        // general path bit for bit (and literally the pre-local-update
+        // engine loop, which the golden suite pins).
+        if h_steps == 1 {
+            self.idx.clear();
+            for _ in 0..batch {
+                self.idx.push(rng.below(self.n));
+            }
+            backend.sample_grad_batch(x_start, &self.idx, &mut self.grad);
+            return ef.step(&self.grad, eta(0), rng);
+        }
+        self.x_loc.copy_from_slice(x_start);
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        for h in 0..h_steps {
+            self.idx.clear();
+            for _ in 0..batch {
+                self.idx.push(rng.below(self.n));
+            }
+            backend.sample_grad_batch(&self.x_loc, &self.idx, &mut self.grad);
+            let e = eta(h);
+            for ((a, xl), &g) in self.acc.iter_mut().zip(self.x_loc.iter_mut()).zip(&self.grad) {
+                let step = e * g;
+                *a += step;
+                *xl -= step;
+            }
+        }
+        ef.sync(&self.acc, rng)
+    }
+}
+
+/// Stamp a non-default local-update schedule into the record's `extra`
+/// map (`batch`, `sync_every`, and the total samples consumed). Default
+/// schedules leave the record untouched so legacy records stay
+/// byte-identical.
+fn annotate_local(record: &mut RunRecord, local: LocalUpdate, local_steps: usize) {
+    if !local.is_default() {
+        let batch = local.batch.max(1);
+        record.extra.insert("batch".into(), batch as f64);
+        record.extra.insert("sync_every".into(), local.sync_every.max(1) as f64);
+        record
+            .extra
+            .insert("grad_samples".into(), local_steps as f64 * batch as f64);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Sequential engine (Algorithm 1 + the Section 4 baselines)
 // ---------------------------------------------------------------------------
 
 pub(crate) fn sequential<B: GradBackend>(backend: &mut B, s: &Settings) -> Result<RunRecord> {
     let d = backend.dim();
     let n = backend.n();
+    let local = s.local;
+    let h = local.sync_every.max(1);
     let mut root = Prng::new(s.seed);
     let mut rng = root.split(1); // "worker 0 of 1" — see module docs
     let mut ef = s.method.error_feedback(d);
@@ -339,8 +496,12 @@ pub(crate) fn sequential<B: GradBackend>(backend: &mut B, s: &Settings) -> Resul
         .average
         .then(|| WeightedAverage::new(d, s.schedule.averaging_shift().max(1.0)));
 
-    let eval_every = (s.steps / s.eval_points.max(1)).max(1);
-    let mut grad = vec![0.0f32; d];
+    // One sync per H local steps (remainder dropped; steps = 0 keeps
+    // running nothing, as before); the averager and the loss curve
+    // track the global iterate, which only moves at syncs.
+    let syncs = s.steps / h;
+    let eval_every = (syncs / s.eval_points.max(1)).max(1);
+    let mut ws = WorkerScratch::new(d, n, local);
     let mut eval_x = vec![0.0f32; d];
     let mut record = RunRecord {
         method: record_method_name(&s.method, &Topology::Sequential),
@@ -351,21 +512,20 @@ pub(crate) fn sequential<B: GradBackend>(backend: &mut B, s: &Settings) -> Resul
 
     let started = Instant::now();
     push_eval(&mut record, backend, &x, &avg, &mut eval_x, 0, 0);
-    for t in 0..s.steps {
-        let i = rng.below(n);
-        backend.sample_grad(&x, i, &mut grad);
-        ef.step(&grad, s.schedule.eta(t) as f32, &mut rng);
+    for si in 0..syncs {
+        ws.phase(backend, &mut ef, &mut rng, &x, |hh| s.schedule.eta(si * h + hh) as f32);
         ef.update().sub_from(&mut x);
         if let Some(a) = avg.as_mut() {
             a.update(&x);
         }
-        if (t + 1) % eval_every == 0 || t + 1 == s.steps {
-            push_eval(&mut record, backend, &x, &avg, &mut eval_x, t + 1, ef.bits_sent);
+        if (si + 1) % eval_every == 0 || si + 1 == syncs {
+            push_eval(&mut record, backend, &x, &avg, &mut eval_x, (si + 1) * h, ef.bits_sent);
         }
     }
-    record.steps = s.steps;
+    record.steps = syncs * h;
     record.total_bits = ef.bits_sent;
     record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+    annotate_local(&mut record, local, syncs * h);
     Ok(record)
 }
 
@@ -381,7 +541,10 @@ pub(crate) fn shared_memory<B: GradBackend + Clone + Send>(
     let workers = workers.max(1);
     let d = backend.dim();
     let n = backend.n();
+    let local = s.local;
+    let h_int = local.sync_every.max(1);
     let per_worker = (s.steps / workers).max(1);
+    let syncs = (per_worker / h_int).max(1);
     let shared = SharedParams::zeros(d);
     let total_bits = Arc::new(AtomicU64::new(0));
     let mut root = Prng::new(s.seed);
@@ -398,14 +561,14 @@ pub(crate) fn shared_memory<B: GradBackend + Clone + Send>(
             let schedule = s.schedule.clone();
             handles.push(scope.spawn(move || {
                 let mut xbuf = vec![0.0f32; d];
-                let mut grad = vec![0.0f32; d];
-                for t in 0..per_worker {
-                    let i = rng.below(n);
+                let mut ws = WorkerScratch::new(d, n, local);
+                for si in 0..syncs {
                     // Inconsistent read of the shared iterate (line 5's
-                    // ∇f(x)), then one shared error-feedback step.
+                    // ∇f(x)), then H local error-compensated steps on it.
                     shared.snapshot_into(&mut xbuf);
-                    wb.sample_grad(&xbuf, i, &mut grad);
-                    ef.step(&grad, schedule.eta(t) as f32, &mut rng);
+                    ws.phase(&mut wb, &mut ef, &mut rng, &xbuf, |hh| {
+                        schedule.eta(si * h_int + hh) as f32
+                    });
                     // shared x ← x − u (lossy, lock-free).
                     match ef.update() {
                         Update::Sparse(sv) => {
@@ -433,7 +596,7 @@ pub(crate) fn shared_memory<B: GradBackend + Clone + Send>(
     let elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
     let x = shared.snapshot();
     let loss = backend.full_loss(&x);
-    let total_steps = per_worker * workers;
+    let total_steps = syncs * h_int * workers;
     let bits = total_bits.load(Ordering::Relaxed);
 
     let mut record = RunRecord {
@@ -447,7 +610,8 @@ pub(crate) fn shared_memory<B: GradBackend + Clone + Send>(
         ..Default::default()
     };
     record.extra.insert("workers".into(), workers as f64);
-    record.extra.insert("steps_per_worker".into(), per_worker as f64);
+    record.extra.insert("steps_per_worker".into(), (syncs * h_int) as f64);
+    annotate_local(&mut record, local, total_steps);
     Ok(record)
 }
 
@@ -463,7 +627,9 @@ pub(crate) fn param_server_sync<B: GradBackend>(
     let nodes = nodes.max(1);
     let d = backend.dim();
     let n = backend.n();
-    let rounds = (s.steps / nodes).max(1);
+    let local = s.local;
+    let h = local.sync_every.max(1);
+    let rounds = (s.steps / (nodes * h)).max(1);
     let mut root_rng = Prng::new(s.seed);
 
     struct Node {
@@ -478,7 +644,7 @@ pub(crate) fn param_server_sync<B: GradBackend>(
         .collect();
 
     let mut x = vec![0.0f32; d];
-    let mut grad = vec![0.0f32; d];
+    let mut ws = WorkerScratch::new(d, n, local);
     // Server-side aggregation buffer: coordinate → summed update.
     let mut agg: BTreeMap<u32, f32> = BTreeMap::new();
     let mut agg_dense = vec![0.0f32; d];
@@ -496,15 +662,15 @@ pub(crate) fn param_server_sync<B: GradBackend>(
     record.curve.push(LossPoint { t: 0, bits: 0, loss: backend.full_loss(&x) });
 
     for round in 0..rounds {
+        // η is held constant within a round (its H local steps included),
+        // matching the pre-local-update round indexing at H = 1.
         let etaf = s.schedule.eta(round) as f32;
         agg.clear();
         let mut any_dense = false;
         for worker in workers.iter_mut() {
-            // Local stochastic gradient at the *current broadcast* x,
-            // then the shared per-node error-feedback step (upload).
-            let i = worker.rng.below(n);
-            backend.sample_grad(&x, i, &mut grad);
-            worker.ef.step(&grad, etaf, &mut worker.rng);
+            // H local error-compensated steps from the *current
+            // broadcast* x, then one compressed upload per node.
+            ws.phase(backend, &mut worker.ef, &mut worker.rng, &x, |_| etaf);
             // Server receives the upload and folds it into the aggregate.
             match worker.ef.update() {
                 Update::Sparse(sv) => {
@@ -546,12 +712,13 @@ pub(crate) fn param_server_sync<B: GradBackend>(
     }
 
     let uploads: u64 = workers.iter().map(|w| w.ef.bits_sent).sum();
-    record.steps = rounds * nodes;
+    record.steps = rounds * nodes * h;
     record.total_bits = uploads + broadcast_bits;
     record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
     record.extra.insert("workers".into(), nodes as f64);
     record.extra.insert("upload_bits".into(), uploads as f64);
     record.extra.insert("broadcast_bits".into(), broadcast_bits as f64);
+    annotate_local(&mut record, local, rounds * nodes * h);
     Ok(record)
 }
 
@@ -577,7 +744,13 @@ pub(crate) fn param_server_async<B: GradBackend>(
     let nodes = nodes.max(1);
     let d = backend.dim();
     let n = backend.n();
-    let total_updates = s.steps;
+    let local = s.local;
+    let h = local.sync_every.max(1);
+    // Each server update now absorbs one local phase of H·B gradients;
+    // the remainder of the budget is dropped (steps = 0 runs nothing,
+    // as before).
+    let grads_per_sync = (local.batch.max(1) * h) as f64;
+    let total_syncs = s.steps / h;
     let mut root_rng = Prng::new(s.seed);
 
     struct AsyncNode {
@@ -603,12 +776,12 @@ pub(crate) fn param_server_async<B: GradBackend>(
         .collect();
 
     let mut x = vec![0.0f32; d];
-    let mut grad = vec![0.0f32; d];
+    let mut ws = WorkerScratch::new(d, n, local);
 
     // Event queue: min-heap over finish time.
     let mut queue: BinaryHeap<Reverse<Finish>> = BinaryHeap::new();
     let compute_ns = |slow: f64, cm: &ComputeModel| -> u64 {
-        (cm.s_per_coord * cm.coords_per_grad * slow * 1e9).max(1.0) as u64
+        (cm.s_per_coord * cm.coords_per_grad * grads_per_sync * slow * 1e9).max(1.0) as u64
     };
     for (i, w) in workers.iter().enumerate() {
         queue.push(Reverse(Finish {
@@ -624,7 +797,7 @@ pub(crate) fn param_server_async<B: GradBackend>(
     let mut staleness_max = 0u64;
     let mut now_ns = 0u64;
 
-    let eval_every = (total_updates / s.eval_points.max(1)).max(1);
+    let eval_every = (total_syncs / s.eval_points.max(1)).max(1);
     let mut record = RunRecord {
         method: record_method_name(
             &s.method,
@@ -637,18 +810,18 @@ pub(crate) fn param_server_async<B: GradBackend>(
     let started = Instant::now();
     record.curve.push(LossPoint { t: 0, bits: 0, loss: backend.full_loss(&x) });
 
-    while version < total_updates as u64 {
+    while version < total_syncs as u64 {
         let Reverse(ev) = queue.pop().expect("queue never empties");
         now_ns = now_ns.max(ev.t_ns);
         let w = &mut workers[ev.worker];
 
-        // The worker finished its gradient (computed on the x it fetched;
-        // staleness-wise the fetch snapshot is what matters — we apply
-        // against the *current* x exactly like a real lock-free PS).
-        let i = w.rng.below(n);
-        backend.sample_grad(&x, i, &mut grad);
+        // The worker finished its local phase (computed on the x it
+        // fetched; staleness-wise the fetch snapshot is what matters —
+        // we apply against the *current* x exactly like a real lock-free
+        // PS). η is held constant within the phase, indexed by the
+        // server update counter as before.
         let eta = s.schedule.eta(version as usize) as f32;
-        let bits = w.ef.step(&grad, eta, &mut w.rng);
+        let bits = ws.phase(backend, &mut w.ef, &mut w.rng, &x, |_| eta);
 
         // Upload queues behind the shared server link. The link is busy
         // for the serialization time only; propagation latency delays the
@@ -675,7 +848,7 @@ pub(crate) fn param_server_async<B: GradBackend>(
             worker: ev.worker,
         }));
 
-        if version % eval_every as u64 == 0 || version == total_updates as u64 {
+        if version % eval_every as u64 == 0 || version == total_syncs as u64 {
             let bits: u64 = workers.iter().map(|w| w.ef.bits_sent).sum();
             record.curve.push(LossPoint {
                 t: version as usize,
@@ -686,7 +859,7 @@ pub(crate) fn param_server_async<B: GradBackend>(
     }
 
     let total_bits: u64 = workers.iter().map(|w| w.ef.bits_sent).sum();
-    record.steps = version as usize;
+    record.steps = version as usize * h;
     record.total_bits = total_bits;
     record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
     let mean_staleness = staleness_sum as f64 / version.max(1) as f64;
@@ -701,6 +874,7 @@ pub(crate) fn param_server_async<B: GradBackend>(
     record.extra.insert("sim_seconds".into(), sim_seconds);
     record.extra.insert("link_utilization".into(), link_utilization);
     record.extra.insert("workers".into(), nodes as f64);
+    annotate_local(&mut record, local, version as usize * h);
     Ok(record)
 }
 
@@ -731,6 +905,38 @@ mod tests {
         assert_eq!(rec.steps, 2_000);
         assert!(rec.final_loss() < 0.69, "loss {}", rec.final_loss());
         assert!(rec.total_bits > 0);
+    }
+
+    #[test]
+    fn local_update_schedule_divides_syncs() {
+        let data = data();
+        let run = |local: LocalUpdate| {
+            Experiment::new(LogisticModel::new(&data, 1.0 / 300.0))
+                .method(MethodSpec::mem_top_k(1))
+                .schedule(Schedule::constant(0.5))
+                .steps(1_200)
+                .eval_points(3)
+                .average(false)
+                .seed(3)
+                .local_update(local)
+                .run()
+                .unwrap()
+        };
+        let base = run(LocalUpdate::default());
+        let h4 = run(LocalUpdate::new(1, 4).unwrap());
+        assert_eq!(base.steps, 1_200);
+        assert_eq!(h4.steps, 1_200);
+        // top-1 sends exactly one coordinate per sync, so H = 4 means
+        // exactly 4x fewer syncs and 4x fewer bits at the same budget.
+        assert_eq!(base.total_bits, 4 * h4.total_bits);
+        assert_eq!(h4.extra["sync_every"], 4.0);
+        assert!(!base.extra.contains_key("sync_every"), "default schedule stays unannotated");
+        // Minibatching alone keeps the sync count (and hence the bits).
+        let b8 = run(LocalUpdate::new(8, 1).unwrap());
+        assert_eq!(base.total_bits, b8.total_bits);
+        assert_eq!(b8.extra["batch"], 8.0);
+        assert_eq!(b8.extra["grad_samples"], 9_600.0);
+        assert!(b8.final_loss().is_finite());
     }
 
     #[test]

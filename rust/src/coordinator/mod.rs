@@ -47,7 +47,12 @@
 //! budget (the engines derive per-worker steps / server rounds from it);
 //! spec strings are parsed exactly once, at the CLI/JSON edge
 //! ([`config::MethodSpec::parse`]), and rejected loudly on trailing
-//! junk.
+//! junk. The orthogonal [`config::LocalUpdate`] schedule (minibatch
+//! size `B`, sync interval `H`) applies to every topology through
+//! `Experiment::local_update`: `H` error-compensated local steps
+//! between communications cut the transmitted bits by another factor
+//! of `H`, and `B = 1, H = 1` reproduces the classic per-sample
+//! engines bit for bit.
 //!
 //! ## Modules
 //!
@@ -74,5 +79,5 @@ pub mod experiment;
 pub mod parallel;
 pub mod train;
 
-pub use config::MethodSpec;
+pub use config::{LocalUpdate, MethodSpec};
 pub use experiment::{Experiment, Topology};

@@ -147,6 +147,7 @@ pub fn run(data: &Dataset, cfg: &ParallelConfig) -> Result<RunRecord> {
         average: false,
         seed: cfg.seed,
         dataset: data.name.clone(),
+        local: super::config::LocalUpdate::default(),
     };
     let mut model = LogisticModel::new(data, lam);
     experiment::shared_memory(&mut model, cfg.workers, &settings)

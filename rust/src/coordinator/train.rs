@@ -20,7 +20,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::config::MethodSpec;
+use super::config::{LocalUpdate, MethodSpec};
 use super::experiment;
 use crate::compress;
 use crate::data::Dataset;
@@ -47,6 +47,13 @@ pub struct TrainConfig {
     pub seed: u64,
     /// L2 strength; `None` = the paper's `λ = 1/n`.
     pub lam: Option<f64>,
+    /// Local-update schedule (minibatch size `B`, sync interval `H`).
+    /// Validated strictly at run time via [`LocalUpdate::validate`];
+    /// [`run_resumable`] additionally requires `sync_every == 1` (the
+    /// checkpoint format captures `(x, m, rng, averager)` but not a
+    /// mid-phase local accumulator, so resuming inside a phase could not
+    /// be bit-identical).
+    pub local: LocalUpdate,
 }
 
 impl Default for TrainConfig {
@@ -59,6 +66,7 @@ impl Default for TrainConfig {
             average: true,
             seed: 1,
             lam: None,
+            local: LocalUpdate::default(),
         }
     }
 }
@@ -102,6 +110,7 @@ pub fn run_with_backend<B: GradBackend>(
     dataset_name: &str,
     cfg: &TrainConfig,
 ) -> Result<RunRecord> {
+    cfg.local.validate()?;
     let settings = experiment::Settings {
         method: MethodSpec::parse(&cfg.method)?,
         schedule: cfg.schedule.clone(),
@@ -110,6 +119,7 @@ pub fn run_with_backend<B: GradBackend>(
         average: cfg.average,
         seed: cfg.seed,
         dataset: dataset_name.to_string(),
+        local: cfg.local,
     };
     experiment::sequential(backend, &settings)
 }
@@ -148,6 +158,19 @@ pub fn run_resumable(
         .method
         .strip_prefix("memsgd:")
         .ok_or_else(|| anyhow::anyhow!("run_resumable requires a memsgd:* method"))?;
+    // Strict local-schedule validation — no panic on user input. Any
+    // minibatch size works (the per-step checkpoint state is unchanged);
+    // sync_every > 1 is refused because the checkpoint cannot capture a
+    // mid-phase accumulator, which would break bit-identical resume.
+    cfg.local.validate()?;
+    anyhow::ensure!(
+        cfg.local.sync_every == 1,
+        "run_resumable supports --local-steps 1 only: the checkpoint captures \
+         (x, m, rng, averager) but not a mid-phase local accumulator, so resuming \
+         inside a local phase could not be bit-identical (got --local-steps {})",
+        cfg.local.sync_every
+    );
+    let batch = cfg.local.batch;
     let lam = cfg.lam.unwrap_or(1.0 / data.n() as f64);
     let mut model = LogisticModel::new(data, lam);
     let d = data.d();
@@ -174,6 +197,13 @@ pub fn run_resumable(
             "checkpoint dimension {} != dataset dimension {d}",
             ck.x.len()
         );
+        // The RNG stream draws `batch` indices per step, so a mismatch
+        // would resume a silently different trajectory.
+        anyhow::ensure!(
+            ck.batch == batch,
+            "checkpoint was written with --batch {}, config asks for --batch {batch}",
+            ck.batch
+        );
         ck.restore()?
     } else {
         let opt = MemSgd::new(vec![0.0f32; d], compress::from_spec(comp_spec)?);
@@ -191,6 +221,7 @@ pub fn run_resumable(
 
     let eval_every = (cfg.steps / cfg.eval_points.max(1)).max(1);
     let mut grad = vec![0.0f32; d];
+    let mut idx: Vec<usize> = Vec::with_capacity(batch);
     let mut eval_x = vec![0.0f32; d];
     let mut record = RunRecord {
         method: format!("memsgd({comp_spec}) resumable"),
@@ -211,8 +242,11 @@ pub fn run_resumable(
 
     eval(start_t, &opt, &avg, &mut model, &mut record);
     for t in start_t..cfg.steps {
-        let i = rng.below(n);
-        model.sample_grad(&opt.x, i, &mut grad);
+        idx.clear();
+        for _ in 0..batch {
+            idx.push(rng.below(n));
+        }
+        model.sample_grad_batch(&opt.x, &idx, &mut grad);
         opt.step(&grad, cfg.schedule.eta(t), &mut rng);
         if let Some(a) = avg.as_mut() {
             a.update(&opt.x);
@@ -221,7 +255,9 @@ pub fn run_resumable(
             eval(t + 1, &opt, &avg, &mut model, &mut record);
         }
         if (t + 1) % policy.every.max(1) == 0 || t + 1 == cfg.steps {
-            Checkpoint::capture(&opt, comp_spec, &rng, avg.as_ref()).save(&policy.path)?;
+            Checkpoint::capture(&opt, comp_spec, &rng, avg.as_ref())
+                .with_batch(batch)
+                .save(&policy.path)?;
         }
     }
     record.steps = cfg.steps - start_t;
@@ -446,6 +482,83 @@ mod tests {
         )
         .is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn resumable_rejects_invalid_local_schedules_without_panicking() {
+        let data = small_data();
+        let policy = CheckpointPolicy {
+            path: std::env::temp_dir().join("never_written_local.ck"),
+            every: 100,
+            resume: false,
+        };
+        // Zero batch / zero sync interval: strict error, not a panic.
+        let mut cfg = base_cfg("memsgd:top_k:2", 100);
+        cfg.local = LocalUpdate { batch: 0, sync_every: 1 };
+        assert!(run_resumable(&data, &cfg, &policy).is_err());
+        cfg.local = LocalUpdate { batch: 1, sync_every: 0 };
+        assert!(run_resumable(&data, &cfg, &policy).is_err());
+        // H > 1 cannot be checkpointed mid-phase: descriptive refusal.
+        cfg.local = LocalUpdate::new(1, 2).unwrap();
+        let err = run_resumable(&data, &cfg, &policy).unwrap_err();
+        assert!(format!("{err:#}").contains("local-steps"), "{err:#}");
+        // The string-spec sequential shim also validates strictly.
+        let mut cfg = base_cfg("memsgd:top_k:2", 100);
+        cfg.local = LocalUpdate { batch: 0, sync_every: 1 };
+        assert!(run(&data, &cfg).is_err());
+    }
+
+    #[test]
+    fn resumable_minibatch_resume_is_bit_identical() {
+        let data = small_data();
+        let dir = std::env::temp_dir().join("memsgd_resumable_batch_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let straight_path = dir.join("straight.ck");
+        let split_path = dir.join("split.ck");
+        std::fs::remove_file(&straight_path).ok();
+        std::fs::remove_file(&split_path).ok();
+
+        let cfg = |steps: usize| {
+            let mut c = base_cfg("memsgd:top_k:2", steps);
+            c.local = LocalUpdate::new(3, 1).unwrap();
+            c
+        };
+        let straight = run_resumable(
+            &data,
+            &cfg(1_000),
+            &CheckpointPolicy { path: straight_path.clone(), every: 10_000, resume: false },
+        )
+        .unwrap();
+        run_resumable(
+            &data,
+            &cfg(400),
+            &CheckpointPolicy { path: split_path.clone(), every: 200, resume: false },
+        )
+        .unwrap();
+        let resumed = run_resumable(
+            &data,
+            &cfg(1_000),
+            &CheckpointPolicy { path: split_path.clone(), every: 10_000, resume: true },
+        )
+        .unwrap();
+        assert_eq!(resumed.extra["resumed_from"], 400.0);
+        assert_eq!(resumed.final_loss(), straight.final_loss());
+        assert_eq!(resumed.total_bits, straight.total_bits);
+
+        // Resuming a B=3 checkpoint with a different --batch must refuse
+        // (the sample-index stream depends on it) instead of silently
+        // continuing a different trajectory.
+        let mut other = cfg(1_000);
+        other.local = LocalUpdate::new(2, 1).unwrap();
+        let err = run_resumable(
+            &data,
+            &other,
+            &CheckpointPolicy { path: split_path.clone(), every: 10_000, resume: true },
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("--batch"), "{err:#}");
+        std::fs::remove_file(&straight_path).ok();
+        std::fs::remove_file(&split_path).ok();
     }
 
     #[test]

@@ -15,7 +15,7 @@ use anyhow::Result;
 
 use super::{dataset, experiment_on, Which};
 use crate::compress::CompressorSpec;
-use crate::coordinator::config::MethodSpec;
+use crate::coordinator::config::{LocalUpdate, MethodSpec};
 use crate::coordinator::experiment::Topology;
 use crate::metrics::RunRecord;
 use crate::models::{GradBackend, LogisticModel};
@@ -269,17 +269,26 @@ impl NetworkResult {
 /// Price synchronous distributed runs (top-k / QSGD / dense) on the three
 /// link presets. Convergence is *measured* (real runs); only time is
 /// modeled. The target is the dense baseline's final loss + 2%.
+///
+/// `local` is the local-update schedule: each round now performs
+/// `sync_every` local steps of `batch`-sample minibatches per worker
+/// before the compressed exchange, so the same gradient work takes
+/// `H`-fold fewer (compute-heavier) rounds — the time-to-accuracy lever
+/// the `figure6` CLI exposes as `--batch` / `--local-steps`.
 pub fn figure6_network(
     which: Which,
     scale: usize,
     rounds: usize,
     workers: usize,
+    local: LocalUpdate,
     seed: u64,
 ) -> Result<NetworkResult> {
+    local.validate()?;
     let data = dataset(which, scale, seed);
     let n = data.n();
     let _ = data.d();
     let k0 = which.ks()[0];
+    let h = local.sync_every;
     let eta = Schedule::constant(0.5);
     let comps = vec![
         CompressorSpec::TopK { k: k0 },
@@ -288,7 +297,15 @@ pub fn figure6_network(
     ];
     let methods: Vec<String> = comps.iter().map(|c| c.spec_string()).collect();
 
-    // Real convergence runs (one per method, network-independent).
+    // Real convergence runs (one per method, network-independent). The
+    // step budget is checked: a validate-passing but huge H must error,
+    // not wrap around to an arbitrary budget.
+    let steps = rounds
+        .checked_mul(workers.max(1))
+        .and_then(|v| v.checked_mul(h))
+        .ok_or_else(|| {
+            anyhow::anyhow!("rounds x workers x sync_every overflows the step budget")
+        })?;
     let mut runs = Vec::new();
     for comp in &comps {
         runs.push(
@@ -296,9 +313,10 @@ pub fn figure6_network(
                 .method(MethodSpec::mem(comp.clone()))
                 .schedule(eta.clone())
                 .topology(Topology::ParamServerSync { nodes: workers })
-                .steps(rounds * workers.max(1))
+                .steps(steps)
                 .eval_points(40)
                 .seed(seed ^ 0xF6)
+                .local_update(local)
                 .run()?,
         );
     }
@@ -307,9 +325,11 @@ pub fn figure6_network(
         .map(|r| r.final_loss() * 1.02)
         .unwrap_or(f64::NAN);
 
-    // Mean coordinates touched per gradient — prices compute.
+    // Mean coordinates touched per gradient — prices compute; one round
+    // of compute is a full local phase (H steps × B samples).
     let mean_coords = data.nnz() as f64 / n as f64;
     let compute = ComputeModel::new(1e-9, mean_coords.max(1.0));
+    let compute_s = compute.phase_s(local.batch, local.sync_every);
 
     let mut cells = Vec::new();
     for (m, rec) in methods.iter().zip(&runs) {
@@ -317,13 +337,11 @@ pub fn figure6_network(
         let up_per_round = rec.extra["upload_bits"] / rounds as f64;
         let down_per_round = rec.extra["broadcast_bits"] / rounds as f64;
         for net in NetworkModel::presets() {
-            let round_s = net.round_s(
-                up_per_round as u64,
-                down_per_round as u64,
-                compute.round_s(1),
-            );
-            let comm_s = round_s - compute.round_s(1);
-            let rounds_to = rec.iterations_to(target).map(|t| t / workers.max(1));
+            let round_s = net.round_s(up_per_round as u64, down_per_round as u64, compute_s);
+            let comm_s = round_s - compute_s;
+            // The ParamServerSync curve's `t` is the server-round index
+            // already — no per-worker rescaling.
+            let rounds_to = rec.iterations_to(target);
             cells.push(NetworkCell {
                 method: format!("dist({m})"),
                 network: net.name.clone(),
@@ -445,7 +463,8 @@ mod tests {
 
     #[test]
     fn network_ablation_orders_methods_on_slow_links() {
-        let res = figure6_network(Which::Epsilon, 4_000, 600, 4, 7).unwrap();
+        let res =
+            figure6_network(Which::Epsilon, 4_000, 600, 4, LocalUpdate::default(), 7).unwrap();
         // On 1GbE, dense must spend a larger comm fraction than top-k.
         let frac = |m: &str, net: &str| {
             res.cells
@@ -457,6 +476,37 @@ mod tests {
         assert!(frac("identity", "1GbE") > frac("top_k", "1GbE"));
         // QSGD sits between.
         assert!(frac("qsgd", "1GbE") > frac("top_k", "1GbE"));
+    }
+
+    #[test]
+    fn network_ablation_local_steps_shift_time_to_compute() {
+        // H = 4 local steps per round: the same per-round message now
+        // amortizes 4x the compute, so the dense method's comm fraction
+        // on 1GbE must drop relative to H = 1.
+        let h1 = figure6_network(Which::Epsilon, 4_000, 300, 4, LocalUpdate::default(), 7)
+            .unwrap();
+        let h4 =
+            figure6_network(Which::Epsilon, 4_000, 300, 4, LocalUpdate::new(1, 4).unwrap(), 7)
+                .unwrap();
+        let frac = |res: &NetworkResult, m: &str| {
+            res.cells
+                .iter()
+                .find(|c| c.method.contains(m) && c.network == "1GbE")
+                .map(|c| c.comm_fraction)
+                .unwrap()
+        };
+        assert!(frac(&h4, "identity") < frac(&h1, "identity"));
+        assert!(frac(&h4, "top_k") < frac(&h1, "top_k"));
+        // And the schedule is rejected strictly at the driver edge too.
+        assert!(figure6_network(
+            Which::Epsilon,
+            4_000,
+            50,
+            2,
+            LocalUpdate { batch: 0, sync_every: 1 },
+            7
+        )
+        .is_err());
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use crate::coordinator::config::MethodSpec;
+use crate::coordinator::config::{LocalUpdate, MethodSpec};
 use crate::coordinator::experiment::Experiment;
 use crate::data::Dataset;
 use crate::metrics::RunRecord;
@@ -82,6 +82,22 @@ pub fn search(
     steps: usize,
     seed: u64,
 ) -> Result<GridResult> {
+    search_local(data, methods, gamma0_grid, steps, LocalUpdate::default(), seed)
+}
+
+/// [`search`] under a [`LocalUpdate`] schedule: every candidate run
+/// takes `sync_every` local steps of `batch`-sample minibatches per
+/// communication, so a γ₀ can be tuned for the exact schedule the full
+/// run will use (the winning γ₀ genuinely depends on `B` and `H`).
+pub fn search_local(
+    data: &Dataset,
+    methods: &[MethodSpec],
+    gamma0_grid: &[f64],
+    steps: usize,
+    local: LocalUpdate,
+    seed: u64,
+) -> Result<GridResult> {
+    local.validate()?;
     let lam = 1.0 / data.n() as f64;
     let mut cells = Vec::new();
     for method in methods {
@@ -93,6 +109,7 @@ pub fn search(
                 .steps(steps)
                 .eval_points(4)
                 .seed(seed)
+                .local_update(local)
                 .run()?;
             let final_loss = record.final_loss();
             cells.push(GridCell {
@@ -132,6 +149,36 @@ mod tests {
         let t = res.table();
         assert!(t.contains("<-- best"));
         assert!(t.contains("memsgd(top_1)"));
+    }
+
+    #[test]
+    fn local_schedule_search_cuts_bits_and_validates() {
+        let data = synthetic::epsilon_like(200, 16, 2);
+        let methods = vec![MethodSpec::mem_top_k(1)];
+        let grid = vec![1.0];
+        let base = search(&data, &methods, &grid, 1_200, 5).unwrap();
+        let h3 = search_local(
+            &data,
+            &methods,
+            &grid,
+            1_200,
+            LocalUpdate::new(1, 3).unwrap(),
+            5,
+        )
+        .unwrap();
+        // Same budget, a third of the syncs: top-1 bits drop exactly 3x.
+        assert_eq!(base.cells[0].record.total_bits, 3 * h3.cells[0].record.total_bits);
+        assert!(h3.cells[0].final_loss.is_finite());
+        // Zero schedules are rejected at the search edge too.
+        assert!(search_local(
+            &data,
+            &methods,
+            &grid,
+            100,
+            LocalUpdate { batch: 1, sync_every: 0 },
+            5
+        )
+        .is_err());
     }
 
     #[test]

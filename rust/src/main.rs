@@ -18,7 +18,7 @@
 use anyhow::{bail, Result};
 
 use memsgd::coordinator::train::{self, TrainConfig};
-use memsgd::coordinator::{MethodSpec, Topology};
+use memsgd::coordinator::{LocalUpdate, MethodSpec, Topology};
 use memsgd::experiments::{self, Which};
 use memsgd::metrics::{self, summary_table, RunRecord};
 use memsgd::optim::Schedule;
@@ -78,10 +78,13 @@ subcommands:
   async     async vs sync parameter server under a network model
   e2e       transformer LM through the PJRT artifacts (full stack)
   train     one ad-hoc run (--method, --epochs, --dataset, --topology
-            sequential|shared|ps-sync|ps-async, --workers-count N, ...)
+            sequential|shared|ps-sync|ps-async, --workers-count N,
+            --batch B, --local-steps H, ...)
   info      artifact / runtime status
 
-common options: --dataset epsilon|rcv1  --scale N  --seed N  --out DIR";
+common options: --dataset epsilon|rcv1  --scale N  --seed N  --out DIR
+local-update schedule (train, figure6): --batch B (minibatch size),
+  --local-steps H (local steps between syncs; ~H-fold fewer bits)";
 
 fn out_dir(args: &Args) -> String {
     args.get_str("out", "results")
@@ -204,11 +207,15 @@ fn cmd_figure6(args: &Args) -> Result<()> {
     let rounds = args.get("rounds", 2_000usize)?;
     let workers = args.get("workers-count", 8usize)?;
     let seed = args.get("seed", 1u64)?;
+    let local = LocalUpdate::new(args.get("batch", 1usize)?, args.get("local-steps", 1usize)?)?;
     println!(
-        "Figure 6 (extension) — time-to-accuracy on real link profiles, {} (scale {scale})\n",
-        which.name()
+        "Figure 6 (extension) — time-to-accuracy on real link profiles, {} (scale {scale}, \
+         B={} H={})\n",
+        which.name(),
+        local.batch,
+        local.sync_every
     );
-    let res = extensions::figure6_network(which, scale, rounds, workers, seed)?;
+    let res = extensions::figure6_network(which, scale, rounds, workers, local, seed)?;
     println!("{}", res.table());
     let mut obj = Vec::new();
     for c in &res.cells {
@@ -334,6 +341,7 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         average: false, // LM: evaluate the live iterate
         seed,
         lam: Some(0.0),
+        local: LocalUpdate::default(),
     };
     // Mem-SGD starts from x0 = 0; shift to the artifact's init by
     // training the *delta* is wrong — instead run the loop manually from
@@ -409,6 +417,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     let gamma = args.get("gamma", 2.0f64)?;
     let evals = args.get("evals", 10usize)?;
     let workers = args.get("workers-count", 4usize)?;
+    // The strict parse edge for the local-update schedule: zero and
+    // overflowing --batch/--local-steps are rejected here, not deep
+    // inside a driver.
+    let local = LocalUpdate::new(args.get("batch", 1usize)?, args.get("local-steps", 1usize)?)?;
     let data = experiments::dataset(which, scale, seed);
     let steps = epochs * data.n();
     let schedule =
@@ -423,6 +435,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             steps,
             eval_points: evals,
             seed,
+            local,
             ..TrainConfig::default()
         };
         let policy = train::CheckpointPolicy {
@@ -464,6 +477,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         .steps(steps)
         .eval_points(evals)
         .seed(seed)
+        .local_update(local)
         .run()?;
     print_curves(std::slice::from_ref(&rec));
     finish(args, "train", std::slice::from_ref(&rec))

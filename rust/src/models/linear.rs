@@ -121,6 +121,22 @@ impl GradBackend for LeastSquaresModel<'_> {
         self.data.add_scaled_row(i, r, out);
     }
 
+    fn sample_grad_batch(&mut self, x: &[f32], idx: &[usize], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), x.len());
+        debug_assert!(!idx.is_empty(), "empty minibatch");
+        let lam = self.lam as f32;
+        let inv_b = 1.0 / idx.len() as f32;
+        // out = λ·x once, then += (r_i/B)·a_i per sample (dense or CSR
+        // rows) — allocation-free; B = 1 matches sample_grad bit for bit.
+        for (o, &xi) in out.iter_mut().zip(x) {
+            *o = lam * xi;
+        }
+        for &i in idx {
+            let r = self.residual(x, i);
+            self.data.add_scaled_row(i, r * inv_b, out);
+        }
+    }
+
     fn full_loss(&mut self, x: &[f32]) -> f64 {
         let n = self.n();
         let mut acc = 0.0f64;
@@ -178,6 +194,30 @@ mod tests {
             let fd = (m.full_loss(&xp) - m.full_loss(&xm)) / (2.0 * eps as f64);
             assert!((fd - grad[j] as f64).abs() < 2e-3, "j={j}");
         }
+    }
+
+    #[test]
+    fn batch_gradient_matches_sample_mean_and_b1_exactly() {
+        let ds = synthetic::epsilon_like(40, 6, 8);
+        let mut m = LeastSquaresModel::new(&ds, 0.15);
+        let x = vec![0.2f32, -0.3, 0.1, 0.4, -0.2, 0.05];
+        let mut single = vec![0.0f32; 6];
+        let mut batched = vec![0.0f32; 6];
+        m.sample_grad(&x, 5, &mut single);
+        m.sample_grad_batch(&x, &[5], &mut batched);
+        assert_eq!(single, batched, "B=1 must be bit-for-bit");
+
+        let idx = [1usize, 5, 9, 13];
+        m.sample_grad_batch(&x, &idx, &mut batched);
+        let mut mean = vec![0.0f32; 6];
+        let mut tmp = vec![0.0f32; 6];
+        for &i in &idx {
+            m.sample_grad(&x, i, &mut tmp);
+            for (a, &t) in mean.iter_mut().zip(&tmp) {
+                *a += t / idx.len() as f32;
+            }
+        }
+        crate::util::check::ensure_allclose(&batched, &mean, 1e-5, 1e-6, "batch mean").unwrap();
     }
 
     #[test]

@@ -90,6 +90,24 @@ impl GradBackend for LogisticModel<'_> {
         self.data.add_scaled_row(i, coef, out);
     }
 
+    fn sample_grad_batch(&mut self, x: &[f32], idx: &[usize], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), x.len());
+        debug_assert!(!idx.is_empty(), "empty minibatch");
+        let lam = self.lam as f32;
+        let inv_b = 1.0 / idx.len() as f32;
+        // The regularizer appears once in the mean, so out = λ·x, then
+        // += (coef_i/B)·a_i per sample: one pass, no scratch, O(Σ nnz)
+        // whether the rows are dense or CSR. With B = 1, `coef·1.0`
+        // is exact, so this is sample_grad bit for bit.
+        for (o, &xi) in out.iter_mut().zip(x) {
+            *o = lam * xi;
+        }
+        for &i in idx {
+            let coef = self.grad_coef(x, i);
+            self.data.add_scaled_row(i, coef * inv_b, out);
+        }
+    }
+
     fn full_loss(&mut self, x: &[f32]) -> f64 {
         let n = self.n();
         let mut acc = 0.0f64;
@@ -206,6 +224,44 @@ mod tests {
             md.sample_grad(&x, i, &mut gd);
             ms.sample_grad(&x, i, &mut gs);
             ensure_allclose(&gd, &gs, 1e-6, 1e-7, "grad").unwrap();
+        }
+    }
+
+    #[test]
+    fn batch_of_one_is_sample_grad_bit_for_bit() {
+        for ds in [synthetic::epsilon_like(60, 12, 4), synthetic::rcv1_like(60, 24, 0.2, 4)] {
+            let mut m = LogisticModel::with_paper_lambda(&ds);
+            let d = ds.d();
+            let mut rng = Prng::new(2);
+            let x: Vec<f32> = (0..d).map(|_| 0.4 * rng.normal_f32()).collect();
+            let mut single = vec![0.0f32; d];
+            let mut batched = vec![0.0f32; d];
+            for i in [0usize, 7, 59] {
+                m.sample_grad(&x, i, &mut single);
+                m.sample_grad_batch(&x, &[i], &mut batched);
+                assert_eq!(single, batched, "{} sample {i}", ds.name);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_gradient_is_the_sample_mean() {
+        for ds in [synthetic::epsilon_like(50, 10, 6), synthetic::rcv1_like(50, 20, 0.3, 6)] {
+            let mut m = LogisticModel::new(&ds, 0.07);
+            let d = ds.d();
+            let x: Vec<f32> = (0..d).map(|j| 0.1 * (j as f32 + 1.0).sin()).collect();
+            let idx = [3usize, 11, 11, 42, 7]; // repeats allowed
+            let mut batched = vec![0.0f32; d];
+            m.sample_grad_batch(&x, &idx, &mut batched);
+            let mut mean = vec![0.0f32; d];
+            let mut tmp = vec![0.0f32; d];
+            for &i in &idx {
+                m.sample_grad(&x, i, &mut tmp);
+                for (a, &t) in mean.iter_mut().zip(&tmp) {
+                    *a += t / idx.len() as f32;
+                }
+            }
+            ensure_allclose(&batched, &mean, 1e-5, 1e-6, &ds.name).unwrap();
         }
     }
 

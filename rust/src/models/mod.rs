@@ -36,6 +36,35 @@ pub trait GradBackend {
     /// Write `∇f_i(x)` (including the regularizer) densely into `out`.
     fn sample_grad(&mut self, x: &[f32], i: usize, out: &mut [f32]);
 
+    /// Write the minibatch gradient `(1/B)·Σ_{i∈idx} ∇f_i(x)` densely
+    /// into `out` (`B = idx.len()`, must be ≥ 1) — the batched hot path
+    /// of the local-update schedule.
+    ///
+    /// Contract pinned by `tests/local_update_equivalence.rs`: with
+    /// `idx.len() == 1` the result is **bit-for-bit** identical to
+    /// [`GradBackend::sample_grad`]. The default implementation averages
+    /// `sample_grad` through a temporary (fine for remote backends like
+    /// PJRT where dispatch dominates); the native models override it with
+    /// a single-pass, allocation-free accumulation over their dense or
+    /// CSR rows.
+    fn sample_grad_batch(&mut self, x: &[f32], idx: &[usize], out: &mut [f32]) {
+        debug_assert!(!idx.is_empty(), "empty minibatch");
+        if idx.len() == 1 {
+            self.sample_grad(x, idx[0], out);
+            return;
+        }
+        let d = self.dim();
+        let inv_b = 1.0 / idx.len() as f32;
+        let mut tmp = vec![0.0f32; d];
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for &i in idx {
+            self.sample_grad(x, i, &mut tmp);
+            for (o, &t) in out.iter_mut().zip(&tmp) {
+                *o += inv_b * t;
+            }
+        }
+    }
+
     /// Full objective `f(x)`.
     fn full_loss(&mut self, x: &[f32]) -> f64;
 

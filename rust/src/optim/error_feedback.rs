@@ -24,6 +24,17 @@
 //! The stepsize multiplies the gradient **when it enters the memory**,
 //! not at retrieval — load-bearing for the Section 2.3 analysis and
 //! asserted by the Mem-SGD unit tests.
+//!
+//! ## Local-update scheduling
+//!
+//! Under a `LocalUpdate { batch, sync_every }` schedule
+//! ([`crate::coordinator::config::LocalUpdate`]) a worker takes `H`
+//! raw minibatch steps on a local iterate, accumulating `Σ_h η_h·g_h`,
+//! and only then calls [`ErrorFeedbackStep::sync`] — one compression
+//! and one transmission per `H` local steps, with the error memory `m`
+//! staying worker-local throughout. `sync(accum)` is `step(accum, 1.0)`;
+//! since multiplying by 1.0 is exact, `H = 1` reproduces the per-sample
+//! recursion bit for bit (pinned by `tests/local_update_equivalence.rs`).
 
 use crate::compress::{Compressor, Update};
 use crate::util::prng::Prng;
@@ -147,6 +158,21 @@ impl ErrorFeedbackStep {
         bits
     }
 
+    /// Local-update sync: compress an **already stepsize-scaled**
+    /// accumulator `Σ_h η_h·g_h` of `H` local steps against the
+    /// worker-local memory — the communication event of the
+    /// `LocalUpdate { batch, sync_every }` schedule.
+    ///
+    /// The memory `m` never travels and is untouched between syncs; only
+    /// this call's compressed aggregate goes on the wire, so a worker
+    /// syncing every `H` steps sends `H`-fold fewer updates. Exactly
+    /// `step(accum, 1.0, rng)`: multiplying by 1.0 is exact in IEEE-754,
+    /// so with `H = 1` (accum = `η·g`) this reproduces `step(g, η, rng)`
+    /// bit for bit — pinned by `tests/local_update_equivalence.rs`.
+    pub fn sync(&mut self, accum: &[f32], rng: &mut Prng) -> u64 {
+        self.step(accum, 1.0, rng)
+    }
+
     /// The update produced by the last [`ErrorFeedbackStep::step`].
     pub fn update(&self) -> &Update {
         &self.update
@@ -210,6 +236,46 @@ mod tests {
         assert!(!ef.uses_memory());
         let ef = ErrorFeedbackStep::new(8, from_spec("top_k:2").unwrap());
         assert!(ef.uses_memory());
+    }
+
+    #[test]
+    fn sync_of_scaled_accum_is_step_bit_for_bit() {
+        // ef.sync(η·g) must equal ef.step(g, η) exactly — the H = 1
+        // reduction of the local-update schedule.
+        let d = 6;
+        let grads = [
+            [0.3f32, -2.0, 0.7, 0.0, 1.1, -0.4],
+            [1.5f32, 0.2, -0.9, 3.0, -0.1, 0.6],
+        ];
+        let eta = 0.37f32;
+        let mut a = ErrorFeedbackStep::new(d, from_spec("top_k:2").unwrap());
+        let mut b = ErrorFeedbackStep::new(d, from_spec("top_k:2").unwrap());
+        let mut rng_a = Prng::new(9);
+        let mut rng_b = Prng::new(9);
+        for g in &grads {
+            let bits_a = a.step(g, eta, &mut rng_a);
+            let accum: Vec<f32> = g.iter().map(|&gi| eta * gi).collect();
+            let bits_b = b.sync(&accum, &mut rng_b);
+            assert_eq!(bits_a, bits_b);
+            assert_eq!(a.update().to_dense(d), b.update().to_dense(d));
+            assert_eq!(a.memory(), b.memory());
+        }
+    }
+
+    #[test]
+    fn memory_stays_local_across_syncs() {
+        // Two local phases worth of accumulation: the residual carried
+        // between syncs is exactly what the compressor suppressed.
+        let d = 4;
+        let mut ef = ErrorFeedbackStep::new(d, Box::new(TopK::new(1)));
+        let mut rng = Prng::new(0);
+        // Phase 1 aggregate [10, 1, 0, 0]: sends the 10, keeps the 1.
+        ef.sync(&[10.0, 1.0, 0.0, 0.0], &mut rng);
+        assert_eq!(ef.memory(), &[0.0, 1.0, 0.0, 0.0]);
+        // Phase 2 aggregate flushes the suppressed coordinate.
+        ef.sync(&[0.0; 4], &mut rng);
+        assert_eq!(ef.update().to_dense(d), vec![0.0, 1.0, 0.0, 0.0]);
+        assert_eq!(ef.memory(), &[0.0; 4]);
     }
 
     #[test]

@@ -107,6 +107,15 @@ impl ComputeModel {
     pub fn round_s(&self, grads_per_worker: usize) -> f64 {
         self.s_per_coord * self.coords_per_grad * grads_per_worker as f64 * self.straggler_factor
     }
+
+    /// Compute wall-clock of one local-update phase: `sync_every` local
+    /// steps of `batch`-sample minibatches (each sample touching
+    /// `coords_per_grad` coordinates) — what a round costs under a
+    /// `LocalUpdate { batch, sync_every }` schedule, where the same
+    /// gradient work takes `sync_every`-fold fewer communication rounds.
+    pub fn phase_s(&self, batch: usize, sync_every: usize) -> f64 {
+        self.round_s(batch.max(1).saturating_mul(sync_every.max(1)))
+    }
 }
 
 /// Summary of pricing one finished run on one network.
@@ -202,6 +211,19 @@ mod tests {
         let p = price_rounds(&net, &cm, "sgd", &rounds, 1);
         assert!(p.comm_fraction > 0.0 && p.comm_fraction < 1.0);
         assert!((p.total_s - (p.compute_s + p.comm_s)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn local_phase_compute_scales_with_batch_and_sync_interval() {
+        let cm = ComputeModel::new(1e-9, 500.0);
+        assert_eq!(cm.phase_s(1, 1), cm.round_s(1));
+        assert_eq!(cm.phase_s(2, 3), cm.round_s(6));
+        // Degenerate zeros are clamped, not propagated into a free round.
+        assert_eq!(cm.phase_s(0, 4), cm.round_s(4));
+        // A local-update round costs H·B gradients but is paid H-fold
+        // less often: per-gradient compute is unchanged.
+        let per_grad = cm.phase_s(4, 8) / 32.0;
+        assert!((per_grad - cm.round_s(1)).abs() < 1e-18);
     }
 
     #[test]

@@ -140,31 +140,33 @@ impl Bench {
     /// Print the footer and dump JSON if requested via env var.
     pub fn finish(&self) {
         if let Ok(path) = std::env::var("MEMSGD_BENCH_JSON") {
-            let rows: Vec<Json> = self
-                .results
-                .iter()
-                .map(|m| {
-                    Json::obj(vec![
-                        ("bench", Json::str(&self.title)),
-                        ("case", Json::str(&m.name)),
-                        ("mean_ns", Json::Num(m.mean_ns)),
-                        ("p50_ns", Json::Num(m.p50_ns)),
-                        ("p95_ns", Json::Num(m.p95_ns)),
-                        ("iters", Json::Num(m.iters as f64)),
-                    ])
-                })
-                .collect();
-            let mut text = String::new();
-            for r in rows {
-                text.push_str(&r.to_string());
-                text.push('\n');
-            }
-            use std::io::Write;
-            if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
-                let _ = f.write_all(text.as_bytes());
-            }
+            let _ = self.write_json(&path);
         }
         println!("=== bench: {} done ({} cases) ===", self.title, self.results.len());
+    }
+
+    /// Append this bench's rows as JSON lines to `path` — the same
+    /// format the `MEMSGD_BENCH_JSON` env hook writes. Benches that
+    /// track a perf trajectory (e.g. `hot_path` →
+    /// `BENCH_hot_path.json`) call this unconditionally so every run
+    /// accumulates a record.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut text = String::new();
+        for m in &self.results {
+            let row = Json::obj(vec![
+                ("bench", Json::str(&self.title)),
+                ("case", Json::str(&m.name)),
+                ("mean_ns", Json::Num(m.mean_ns)),
+                ("p50_ns", Json::Num(m.p50_ns)),
+                ("p95_ns", Json::Num(m.p95_ns)),
+                ("iters", Json::Num(m.iters as f64)),
+            ]);
+            text.push_str(&row.to_string());
+            text.push('\n');
+        }
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        f.write_all(text.as_bytes())
     }
 }
 
@@ -197,6 +199,22 @@ mod tests {
         assert!(mean > 0.0);
         assert_eq!(b.results.len(), 1);
         b.finish();
+    }
+
+    #[test]
+    fn write_json_appends_one_line_per_case() {
+        let mut b = Bench::new("json-test");
+        b.record("case-a", Duration::from_millis(1), 10);
+        b.record("case-b", Duration::from_millis(2), 10);
+        let path = std::env::temp_dir().join("memsgd_bench_json_test.json");
+        std::fs::remove_file(&path).ok();
+        b.write_json(path.to_str().unwrap()).unwrap();
+        b.write_json(path.to_str().unwrap()).unwrap(); // appends
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 4);
+        assert!(text.contains("\"case-a\""));
+        assert!(text.contains("json-test"));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

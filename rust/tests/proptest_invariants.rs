@@ -49,6 +49,85 @@ fn prop_contraction_property_all_sparsifiers() {
     });
 }
 
+/// Definition 2.1 against `contraction_k()`'s **claimed** value, for
+/// every compressor in the crate. The deterministic operators (top-k,
+/// block-top-k, sign, threshold, identity) must satisfy the inequality
+/// pointwise on every input; QSGD claims `None` and is asserted to.
+#[test]
+fn prop_contraction_matches_claimed_k_pointwise_for_deterministic_ops() {
+    check("contraction-claimed-pointwise", 200, |rng| {
+        let d = 1 + rng.below(200);
+        let k = 1 + rng.below(d);
+        let tau = 0.05 + 0.9 * rng.f64();
+        let specs = [
+            format!("top_k:{k}"),
+            format!("block_top_k:{k}"),
+            "sign".to_string(),
+            format!("threshold:{tau}"),
+            "identity".to_string(),
+        ];
+        let x = random_vec(rng, d);
+        let x2 = stats::l2_norm_sq(&x);
+        for spec in &specs {
+            let mut comp = compress::from_spec(spec).unwrap();
+            let mut out = Update::new_sparse(d);
+            comp.compress(&x, rng, &mut out);
+            let dense = out.to_dense(d);
+            let resid: Vec<f32> = x.iter().zip(&dense).map(|(a, b)| a - b).collect();
+            let kk = comp
+                .contraction_k(d)
+                .ok_or_else(|| format!("{spec} claims no contraction"))?;
+            let bound = (1.0 - kk / d as f64) * x2;
+            ensure(
+                stats::l2_norm_sq(&resid) <= bound + 1e-5 + 1e-5 * x2,
+                format!("{spec}: claimed k={kk} violated at d={d}"),
+            )?;
+        }
+        ensure(
+            compress::from_spec("qsgd:16").unwrap().contraction_k(d).is_none(),
+            "qsgd must claim no contraction parameter",
+        )
+    });
+}
+
+/// The randomized sparsifiers (rand-k, random-p) satisfy Definition 2.1
+/// **in expectation** — with equality (Lemma A.1) — so the residual
+/// norm averaged over many operator draws must match
+/// `(1 − k/d)·‖x‖²` for `contraction_k()`'s claimed `k`.
+#[test]
+fn prop_contraction_matches_claimed_k_in_expectation_for_randomized_ops() {
+    check("contraction-claimed-expectation", 12, |rng| {
+        let d = 4 + rng.below(40);
+        let k = 1 + rng.below(d);
+        let p = 0.1 + 0.9 * rng.f64();
+        let x = random_vec(rng, d);
+        let x2 = stats::l2_norm_sq(&x);
+        let trials = 3_000;
+        for spec in [format!("rand_k:{k}"), format!("random_p:{p}")] {
+            let mut comp = compress::from_spec(&spec).unwrap();
+            let kk = comp.contraction_k(d).unwrap();
+            let mut out = Update::new_sparse(d);
+            let mut acc = 0.0f64;
+            for _ in 0..trials {
+                comp.compress(&x, rng, &mut out);
+                let dense = out.to_dense(d);
+                let resid: Vec<f32> = x.iter().zip(&dense).map(|(a, b)| a - b).collect();
+                acc += stats::l2_norm_sq(&resid);
+            }
+            let mean = acc / trials as f64;
+            let expected = (1.0 - kk / d as f64) * x2;
+            ensure_close(
+                mean,
+                expected,
+                0.12,
+                0.03 * x2 + 1e-9,
+                &format!("{spec} at d={d} (claimed k={kk})"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
 /// Compressed output values are always a subset of the input values
 /// (sparsifiers never invent values).
 #[test]
