@@ -42,7 +42,7 @@ pub use qsgd::Qsgd;
 pub use rand_k::RandK;
 pub use random_p::RandomP;
 pub use sign::SignSgd;
-pub use sparse::SparseVec;
+pub use sparse::{SparseMerge, SparseVec};
 pub use threshold::Threshold;
 pub use top_k::TopK;
 

@@ -1,8 +1,19 @@
-//! Sparse update vectors: the wire format of sparsified SGD.
+//! Sparse update vectors: the wire format of sparsified SGD — and the
+//! kernels of the sparse gradient pipeline.
 //!
 //! A [`SparseVec`] is a `(index, value)` pair list over a fixed dimension,
-//! with all hot-path operations (apply, residual, norms) allocation-free.
-//! Buffers are reused across iterations via [`SparseVec::clear`].
+//! with all hot-path operations (apply, residual, norms, axpy, the fused
+//! local step) allocation-free. Buffers are reused across iterations via
+//! [`SparseVec::clear`].
+//!
+//! [`SparseMerge`] is the coordinate-merge accumulator behind
+//! `GradBackend::sample_grad_batch_sparse`: it folds scattered
+//! `(coordinate, contribution)` pairs into a [`SparseVec`] with unique
+//! indices in `O(contributions)` — first touch appends, later touches
+//! add **in arrival order**, which is exactly the floating-point
+//! operation order of the dense minibatch accumulation. That invariant
+//! is what lets the sparse pipeline reproduce the dense trajectories bit
+//! for bit (`tests/sparse_pipeline.rs`).
 
 /// A sparse vector: parallel `idx`/`val` arrays over dimension `dim`.
 /// Indices are unique but not necessarily sorted (top-k emits them in
@@ -71,6 +82,34 @@ impl SparseVec {
         }
     }
 
+    /// Sparse axpy: `x += alpha·self`, touching only stored coordinates.
+    #[inline]
+    pub fn axpy_to(&self, alpha: f32, x: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.dim);
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            x[i as usize] += alpha * v;
+        }
+    }
+
+    /// Fused local-update step: for every stored entry `(j, g)` compute
+    /// `step = eta·g`, then `acc[j] += step` and `x[j] -= step` — the
+    /// `O(nnz)` inner loop of the sparse local phase. Per touched
+    /// coordinate this is the *same floating-point operation order* as
+    /// the dense phase loop (`step = η·g; acc += step; x_loc -= step`),
+    /// so a sparse gradient with the dense gradient's nonzero values
+    /// produces bit-identical `acc`/`x` (`tests/sparse_pipeline.rs`).
+    #[inline]
+    pub fn local_step(&self, eta: f32, acc: &mut [f32], x: &mut [f32]) {
+        debug_assert_eq!(acc.len(), self.dim);
+        debug_assert_eq!(x.len(), self.dim);
+        for (&i, &g) in self.idx.iter().zip(&self.val) {
+            let step = eta * g;
+            let j = i as usize;
+            acc[j] += step;
+            x[j] -= step;
+        }
+    }
+
     /// Squared L2 norm.
     pub fn norm_sq(&self) -> f64 {
         self.val.iter().map(|&v| (v as f64) * (v as f64)).sum()
@@ -88,6 +127,75 @@ impl SparseVec {
     pub fn encoded_bits(&self) -> u64 {
         let index_bits = index_bits(self.dim);
         self.nnz() as u64 * (32 + index_bits)
+    }
+}
+
+/// Reusable coordinate-merge accumulator: builds a [`SparseVec`] with
+/// unique indices from scattered, possibly repeated `(coordinate,
+/// contribution)` pairs in `O(contributions)` time.
+///
+/// The position table is `O(d)` **memory** but is written only at
+/// touched slots, reset via the output's index list in
+/// [`SparseMerge::finish`], and grown only on first use (or a dimension
+/// increase) — after warm-up a merge allocates nothing.
+///
+/// Usage (the minibatch-gradient pattern):
+///
+/// ```
+/// use memsgd::compress::sparse::{SparseMerge, SparseVec};
+/// let mut merge = SparseMerge::new();
+/// let mut out = SparseVec::new(8);
+/// merge.begin(8, &mut out);
+/// merge.add(&mut out, 3, 1.0);
+/// merge.add(&mut out, 5, -2.0);
+/// merge.add(&mut out, 3, 0.5); // merged: 1.0 + 0.5, in arrival order
+/// merge.finish(&out);
+/// assert_eq!(out.idx, vec![3, 5]);
+/// assert_eq!(out.val, vec![1.5, -2.0]);
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct SparseMerge {
+    /// `pos[j]` = index of coordinate `j` in the output being built, or
+    /// `u32::MAX` when untouched by the current merge.
+    pos: Vec<u32>,
+}
+
+impl SparseMerge {
+    pub fn new() -> SparseMerge {
+        SparseMerge { pos: Vec::new() }
+    }
+
+    /// Start a merge over dimension `d`: clears `out` (keeping its
+    /// capacity) and grows the position table if `d` exceeds any
+    /// previously seen dimension.
+    pub fn begin(&mut self, d: usize, out: &mut SparseVec) {
+        if self.pos.len() < d {
+            self.pos.resize(d, u32::MAX);
+        }
+        out.clear(d);
+    }
+
+    /// Merge contribution `c` into coordinate `j`: the first touch
+    /// appends a new entry, later touches add onto it — additions happen
+    /// in arrival order, matching the dense accumulation's FP order.
+    #[inline]
+    pub fn add(&mut self, out: &mut SparseVec, j: u32, c: f32) {
+        let slot = &mut self.pos[j as usize];
+        if *slot == u32::MAX {
+            *slot = out.idx.len() as u32;
+            out.push(j, c);
+        } else {
+            out.val[*slot as usize] += c;
+        }
+    }
+
+    /// End the merge: resets the touched position slots (via `out`'s
+    /// index list, `O(nnz)`) so the table is clean for the next merge.
+    /// Must be called with the same `out` the merge built.
+    pub fn finish(&mut self, out: &SparseVec) {
+        for &j in &out.idx {
+            self.pos[j as usize] = u32::MAX;
+        }
     }
 }
 
@@ -140,6 +248,92 @@ mod tests {
         assert_eq!(index_bits(4), 2);
         assert_eq!(index_bits(2000), 11);
         assert_eq!(index_bits(47236), 16);
+    }
+
+    #[test]
+    fn axpy_touches_only_stored_coordinates() {
+        let g = SparseVec::from_parts(5, vec![1, 3], vec![2.0, -1.0]);
+        let mut x = vec![1.0f32; 5];
+        g.axpy_to(0.5, &mut x);
+        assert_eq!(x, vec![1.0, 2.0, 1.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn local_step_matches_dense_loop_bitwise() {
+        // The fused kernel must reproduce the dense phase loop exactly
+        // on the touched coordinates and leave the rest alone.
+        let d = 6;
+        let g_dense = vec![0.0f32, 0.3, 0.0, -1.7, 0.0, 2.2];
+        let g = SparseVec::from_parts(d, vec![1, 3, 5], vec![0.3, -1.7, 2.2]);
+        let eta = 0.37f32;
+
+        let mut acc_d = vec![0.5f32; d];
+        let mut x_d = vec![1.0f32; d];
+        for ((a, xl), &gv) in acc_d.iter_mut().zip(x_d.iter_mut()).zip(&g_dense) {
+            let step = eta * gv;
+            *a += step;
+            *xl -= step;
+        }
+
+        let mut acc_s = vec![0.5f32; d];
+        let mut x_s = vec![1.0f32; d];
+        g.local_step(eta, &mut acc_s, &mut x_s);
+        assert_eq!(acc_d, acc_s);
+        assert_eq!(x_d, x_s);
+    }
+
+    #[test]
+    fn merge_accumulates_in_arrival_order() {
+        let mut merge = SparseMerge::new();
+        let mut out = SparseVec::new(10);
+        merge.begin(10, &mut out);
+        for &(j, c) in &[(7u32, 1.0f32), (2, 2.0), (7, 3.0), (9, -1.0), (2, 0.25)] {
+            merge.add(&mut out, j, c);
+        }
+        merge.finish(&out);
+        assert_eq!(out.idx, vec![7, 2, 9]); // first-touch order
+        assert_eq!(out.val, vec![4.0, 2.25, -1.0]);
+        // The table is clean: a second merge starts fresh.
+        merge.begin(10, &mut out);
+        merge.add(&mut out, 7, 5.0);
+        merge.finish(&out);
+        assert_eq!(out.idx, vec![7]);
+        assert_eq!(out.val, vec![5.0]);
+    }
+
+    #[test]
+    fn merge_reuses_buffers_without_allocation_growth() {
+        let mut merge = SparseMerge::new();
+        let mut out = SparseVec::new(64);
+        // Warm-up pass touching the widest pattern.
+        merge.begin(64, &mut out);
+        for j in 0..32u32 {
+            merge.add(&mut out, j * 2, 1.0);
+        }
+        merge.finish(&out);
+        let cap = (out.idx.capacity(), out.val.capacity());
+        for round in 0..50u32 {
+            merge.begin(64, &mut out);
+            for j in 0..32u32 {
+                merge.add(&mut out, (j * 2 + round) % 64, 1.0);
+            }
+            merge.finish(&out);
+            assert_eq!((out.idx.capacity(), out.val.capacity()), cap, "round {round}");
+        }
+    }
+
+    #[test]
+    fn merge_handles_dimension_growth() {
+        let mut merge = SparseMerge::new();
+        let mut out = SparseVec::new(4);
+        merge.begin(4, &mut out);
+        merge.add(&mut out, 3, 1.0);
+        merge.finish(&out);
+        merge.begin(16, &mut out);
+        merge.add(&mut out, 15, 2.0);
+        merge.finish(&out);
+        assert_eq!(out.dim, 16);
+        assert_eq!(out.idx, vec![15]);
     }
 
     #[test]

@@ -53,6 +53,17 @@
 //! `B = 1, H = 1` all four engines reproduce the classic per-sample
 //! trajectories **bit for bit** (`tests/local_update_equivalence.rs`).
 //!
+//! ## Sparse gradient pipeline
+//!
+//! All four engines share one worker phase (`WorkerScratch::phase`),
+//! which runs sparsity-aware whenever the backend advertises
+//! [`GradBackend::supports_sparse_grad`] (CSR models without L2 — the
+//! RCV1 regime where each gradient is a scaled sparse row): local steps
+//! cost `O(nnz)` instead of `O(d)`, with the dense error-feedback pass
+//! and compressor scan paid only at the per-`H`-steps sync, and the
+//! resulting trajectories are **bit-identical** to the dense path
+//! (`tests/sparse_pipeline.rs`).
+//!
 //! Worker randomness is derived uniformly across topologies: one root
 //! generator `Prng::new(seed)` hands out child streams in worker order
 //! (`root.split(1)` for worker 0, then `root.split(2)` for worker 1,
@@ -78,7 +89,7 @@ use anyhow::{bail, Result};
 
 use super::config::{LocalUpdate, MethodSpec};
 use super::parallel::SharedParams;
-use crate::compress::Update;
+use crate::compress::{SparseVec, Update};
 use crate::metrics::{LossPoint, RunRecord};
 use crate::models::GradBackend;
 use crate::optim::{ErrorFeedbackStep, Schedule, WeightedAverage};
@@ -380,8 +391,9 @@ fn push_eval<B: GradBackend>(
 // ---------------------------------------------------------------------------
 
 /// Reusable per-worker scratch for the local-update phases: the local
-/// iterate, the minibatch gradient, the stepsize-scaled accumulator the
-/// sync compresses, and the minibatch index buffer.
+/// iterate, the minibatch gradient (dense buffer and sparse emission),
+/// the stepsize-scaled accumulator the sync compresses, and the
+/// minibatch index buffer.
 /// [`WorkerScratch::phase`] re-initializes it on entry, so one instance
 /// serves every phase (and, on the single-threaded engines, every
 /// worker) allocation-free.
@@ -390,6 +402,8 @@ struct WorkerScratch {
     n: usize,
     x_loc: Vec<f32>,
     grad: Vec<f32>,
+    /// Sparse-pipeline emission buffer (stays empty on dense backends).
+    sgrad: SparseVec,
     acc: Vec<f32>,
     idx: Vec<usize>,
 }
@@ -404,6 +418,7 @@ impl WorkerScratch {
             n,
             x_loc: vec![0.0; phase_d],
             grad: vec![0.0; d],
+            sgrad: SparseVec::new(d),
             acc: vec![0.0; phase_d],
             idx: Vec::with_capacity(local.batch.max(1)),
         }
@@ -421,6 +436,22 @@ impl WorkerScratch {
     /// per-sample `ef.step(g, η)` (golden-trajectory suite). Returns the
     /// sync's wire bits; the caller applies `ef.update()` to its global
     /// iterate.
+    ///
+    /// ## Sparse pipeline
+    ///
+    /// When the backend advertises
+    /// [`GradBackend::supports_sparse_grad`] (CSR models without L2, the
+    /// RCV1 regime), the phase runs sparsity-aware: each local step emits
+    /// the minibatch gradient as a [`SparseVec`] and coordinate-merges
+    /// `η·g` into the reusable accumulator via the fused
+    /// [`SparseVec::local_step`] kernel — `O(nnz)` per local step, with
+    /// the dense `v = m + accum` pass and the compressor scan deferred to
+    /// the one [`ErrorFeedbackStep::sync`] per phase. Under `sync_every:
+    /// H` the per-step `O(d)` work therefore drops `H`-fold, matching the
+    /// bit accounting. Both branches evaluate the same floating-point
+    /// expressions in the same order on every touched coordinate, so
+    /// dense and sparse trajectories are **bit-identical** on every
+    /// topology (`tests/sparse_pipeline.rs` pins all combinations).
     fn phase<B: GradBackend>(
         &mut self,
         backend: &mut B,
@@ -431,6 +462,7 @@ impl WorkerScratch {
     ) -> u64 {
         let h_steps = self.local.sync_every.max(1);
         let batch = self.local.batch.max(1);
+        let sparse = backend.supports_sparse_grad();
         // Fast path — H = 1 is the classic (minibatch) step: gradient at
         // the fetched iterate, one error-feedback step. No local iterate,
         // no accumulator, none of the extra O(d) passes; `v = m + η·g`
@@ -442,6 +474,10 @@ impl WorkerScratch {
             for _ in 0..batch {
                 self.idx.push(rng.below(self.n));
             }
+            if sparse {
+                backend.sample_grad_batch_sparse(x_start, &self.idx, &mut self.sgrad);
+                return ef.step_sparse(&self.sgrad, eta(0), rng);
+            }
             backend.sample_grad_batch(x_start, &self.idx, &mut self.grad);
             return ef.step(&self.grad, eta(0), rng);
         }
@@ -452,8 +488,13 @@ impl WorkerScratch {
             for _ in 0..batch {
                 self.idx.push(rng.below(self.n));
             }
-            backend.sample_grad_batch(&self.x_loc, &self.idx, &mut self.grad);
             let e = eta(h);
+            if sparse {
+                backend.sample_grad_batch_sparse(&self.x_loc, &self.idx, &mut self.sgrad);
+                self.sgrad.local_step(e, &mut self.acc, &mut self.x_loc);
+                continue;
+            }
+            backend.sample_grad_batch(&self.x_loc, &self.idx, &mut self.grad);
             for ((a, xl), &g) in self.acc.iter_mut().zip(self.x_loc.iter_mut()).zip(&self.grad) {
                 let step = e * g;
                 *a += step;

@@ -53,6 +53,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("async") => cmd_async(args),
         Some("e2e") => cmd_e2e(args),
         Some("train") => cmd_train(args),
+        Some("bench-gate") => cmd_bench_gate(args),
         Some("info") => cmd_info(args),
         Some(other) => bail!("unknown subcommand '{other}' (see --help in README)"),
         None => {
@@ -80,6 +81,10 @@ subcommands:
   train     one ad-hoc run (--method, --epochs, --dataset, --topology
             sequential|shared|ps-sync|ps-async, --workers-count N,
             --batch B, --local-steps H, ...)
+  bench-gate  CI perf gate: compare a fresh hot-path bench JSON against
+            the committed baseline (--baseline BENCH_hot_path.json,
+            --fresh run.json); exits nonzero on >25% normalized median
+            regression or a broken sparse-speedup invariant
   info      artifact / runtime status
 
 common options: --dataset epsilon|rcv1  --scale N  --seed N  --out DIR
@@ -481,6 +486,58 @@ fn cmd_train(args: &Args) -> Result<()> {
         .run()?;
     print_curves(std::slice::from_ref(&rec));
     finish(args, "train", std::slice::from_ref(&rec))
+}
+
+/// The CI performance gate (`.github/workflows/ci.yml`, `bench-gate`
+/// job): compare a fresh hot-path bench JSON against the committed
+/// baseline. Policy and comparison live in `util::gate` (unit-tested,
+/// including the injected-2×-slowdown canary); this wrapper only does
+/// I/O and turns failures into a nonzero exit.
+fn cmd_bench_gate(args: &Args) -> Result<()> {
+    let baseline_path = args.get_str("baseline", "BENCH_hot_path.json");
+    let fresh_path = args.get_str("fresh", "fresh.json");
+    args.finish()?;
+    // Canonicalize so aliases (./x vs x, symlinks) cannot sneak a file
+    // past the self-comparison guard.
+    let same_file = match (
+        std::fs::canonicalize(&baseline_path),
+        std::fs::canonicalize(&fresh_path),
+    ) {
+        (Ok(a), Ok(b)) => a == b,
+        _ => baseline_path == fresh_path,
+    };
+    if same_file {
+        bail!(
+            "--baseline '{baseline_path}' and --fresh '{fresh_path}' are the same file: \
+             comparing a file to itself always passes; point --fresh at a fresh-rows-only \
+             file (e.g. one written via MEMSGD_BENCH_JSON=fresh.json cargo bench --bench \
+             hot_path)"
+        );
+    }
+    let read = |path: &str| -> Result<Vec<memsgd::util::gate::GateRow>> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        memsgd::util::gate::parse_rows(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e:#}"))
+    };
+    let baseline = read(&baseline_path)?;
+    let fresh = read(&fresh_path)?;
+    let cfg = memsgd::util::gate::hot_path_config();
+    let report = memsgd::util::gate::compare(&baseline, &fresh, &cfg);
+    println!("bench-gate: {} (baseline) vs {} (fresh)\n", baseline_path, fresh_path);
+    for line in &report.lines {
+        println!("{line}");
+    }
+    for warning in &report.warnings {
+        println!("warn: {warning}");
+    }
+    if !report.passed() {
+        for failure in &report.failures {
+            eprintln!("FAIL: {failure}");
+        }
+        bail!("{} perf regression(s) beyond tolerance", report.failures.len());
+    }
+    println!("\nbench-gate passed ({} case(s) compared)", report.lines.len());
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

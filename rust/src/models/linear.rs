@@ -9,14 +9,25 @@
 //! where `x*` is known to machine precision.
 
 use super::GradBackend;
-use crate::data::Dataset;
+use crate::compress::{SparseMerge, SparseVec};
+use crate::data::{Dataset, Features};
 
 /// Least-squares model over a dataset (labels used as real targets).
+///
+/// As with [`super::LogisticModel`], the per-sample gradient `r_i·a_i +
+/// λ·x` is a scaled feature row exactly when `λ = 0` — that case opts
+/// into the sparse gradient pipeline; nonzero `λ` falls back to the
+/// dense path.
+#[derive(Clone)]
 pub struct LeastSquaresModel<'a> {
     pub data: &'a Dataset,
     pub lam: f64,
     /// Real-valued targets; defaults to the dataset's ±1 labels.
     pub targets: Vec<f32>,
+    /// Coordinate-merge scratch for the batched sparse emission.
+    merge: SparseMerge,
+    /// Dense scratch for the `λ ≠ 0` sparse-emission fallback.
+    scratch: Vec<f32>,
 }
 
 impl<'a> LeastSquaresModel<'a> {
@@ -25,6 +36,8 @@ impl<'a> LeastSquaresModel<'a> {
             targets: data.labels.clone(),
             data,
             lam,
+            merge: SparseMerge::new(),
+            scratch: Vec::new(),
         }
     }
 
@@ -137,6 +150,56 @@ impl GradBackend for LeastSquaresModel<'_> {
         }
     }
 
+    /// The gradient is truly sparse only without the dense `λ·x` term
+    /// (and, as for [`super::LogisticModel`], only CSR storage benefits).
+    fn supports_sparse_grad(&self) -> bool {
+        self.lam == 0.0 && matches!(self.data.features, Features::Csr { .. })
+    }
+
+    /// Exact sparse emission (`λ = 0`: `∇f_i = r_i·a_i`, one row pass
+    /// through the shared core `models::push_scaled_row`); `λ ≠ 0`
+    /// densifies through the reusable scratch, staying exact.
+    fn sample_grad_sparse(&mut self, x: &[f32], i: usize, out: &mut SparseVec) {
+        if self.lam != 0.0 {
+            let mut tmp = std::mem::take(&mut self.scratch);
+            tmp.resize(x.len(), 0.0);
+            self.sample_grad(x, i, &mut tmp);
+            super::gather_nonzeros(&tmp, out);
+            self.scratch = tmp;
+            return;
+        }
+        super::push_scaled_row(self.data, i, self.residual(x, i), out);
+    }
+
+    /// Batched exact sparse emission through the reusable
+    /// [`SparseMerge`] (shared core `models::merge_scaled_row`) —
+    /// mirrors [`GradBackend::sample_grad_batch`]'s per-sample
+    /// `(r_i/B)·a_i` accumulation in dense FP order.
+    fn sample_grad_batch_sparse(&mut self, x: &[f32], idx: &[usize], out: &mut SparseVec) {
+        debug_assert!(!idx.is_empty(), "empty minibatch");
+        if idx.len() == 1 {
+            self.sample_grad_sparse(x, idx[0], out);
+            return;
+        }
+        if self.lam != 0.0 {
+            let mut tmp = std::mem::take(&mut self.scratch);
+            tmp.resize(x.len(), 0.0);
+            self.sample_grad_batch(x, idx, &mut tmp);
+            super::gather_nonzeros(&tmp, out);
+            self.scratch = tmp;
+            return;
+        }
+        let inv_b = 1.0 / idx.len() as f32;
+        let mut merge = std::mem::take(&mut self.merge);
+        merge.begin(self.data.d(), out);
+        for &i in idx {
+            let scaled = self.residual(x, i) * inv_b;
+            super::merge_scaled_row(&mut merge, self.data, i, scaled, out);
+        }
+        merge.finish(out);
+        self.merge = merge;
+    }
+
     fn full_loss(&mut self, x: &[f32]) -> f64 {
         let n = self.n();
         let mut acc = 0.0f64;
@@ -218,6 +281,29 @@ mod tests {
             }
         }
         crate::util::check::ensure_allclose(&batched, &mean, 1e-5, 1e-6, "batch mean").unwrap();
+    }
+
+    #[test]
+    fn sparse_grad_matches_dense_for_both_lambda_regimes() {
+        let ds = synthetic::rcv1_like(50, 24, 0.25, 6);
+        let d = ds.d();
+        let x: Vec<f32> = (0..d).map(|j| 0.1 * (j as f32).sin()).collect();
+        let mut dense = vec![0.0f32; d];
+        let mut sparse = crate::compress::SparseVec::new(d);
+        for lam in [0.0f64, 0.2] {
+            let mut m = LeastSquaresModel::new(&ds, lam);
+            // rcv1_like data is CSR, so support hinges on λ alone here.
+            assert_eq!(m.supports_sparse_grad(), lam == 0.0);
+            for i in [0usize, 13, 49] {
+                m.sample_grad(&x, i, &mut dense);
+                m.sample_grad_sparse(&x, i, &mut sparse);
+                assert_eq!(sparse.to_dense(), dense, "lam={lam} sample {i}");
+            }
+            let idx = [5usize, 20, 5, 31];
+            m.sample_grad_batch(&x, &idx, &mut dense);
+            m.sample_grad_batch_sparse(&x, &idx, &mut sparse);
+            assert_eq!(sparse.to_dense(), dense, "lam={lam} batch");
+        }
     }
 
     #[test]

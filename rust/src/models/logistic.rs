@@ -10,27 +10,44 @@
 //! cross-checked in the integration suite).
 
 use super::{log1p_exp, sigmoid, GradBackend};
-use crate::data::Dataset;
+use crate::compress::{SparseMerge, SparseVec};
+use crate::data::{Dataset, Features};
 
 /// Logistic regression over a dataset with L2 strength `lam`.
 ///
-/// `Clone` is cheap (a borrow + a scalar) — the shared-memory topology
-/// engine clones one model per worker thread.
+/// `Clone` is cheap (a borrow, a scalar, and empty/small scratch) — the
+/// shared-memory topology engine clones one model per worker thread.
+///
+/// With `lam == 0` the per-sample gradient is exactly `coef·a_i`, a
+/// scaled copy of one feature row, so the model opts into the sparse
+/// gradient pipeline ([`GradBackend::supports_sparse_grad`]); any
+/// nonzero `λ` adds the dense `λ·x` term and the engines fall back to
+/// the dense path (the sparse emissions below stay exact either way via
+/// an internal densifying fallback).
 #[derive(Clone)]
 pub struct LogisticModel<'a> {
     pub data: &'a Dataset,
     pub lam: f64,
+    /// Coordinate-merge scratch for the batched sparse emission.
+    merge: SparseMerge,
+    /// Dense scratch for the `λ ≠ 0` sparse-emission fallback.
+    scratch: Vec<f32>,
 }
 
 impl<'a> LogisticModel<'a> {
     /// Paper convention: `λ = 1/n` (Section 4.1, following [31]).
     pub fn with_paper_lambda(data: &'a Dataset) -> Self {
         let lam = 1.0 / data.n() as f64;
-        LogisticModel { data, lam }
+        Self::new(data, lam)
     }
 
     pub fn new(data: &'a Dataset, lam: f64) -> Self {
-        LogisticModel { data, lam }
+        LogisticModel {
+            data,
+            lam,
+            merge: SparseMerge::new(),
+            scratch: Vec::new(),
+        }
     }
 
     /// Margin `⟨a_i, x⟩`.
@@ -106,6 +123,63 @@ impl GradBackend for LogisticModel<'_> {
             let coef = self.grad_coef(x, i);
             self.data.add_scaled_row(i, coef * inv_b, out);
         }
+    }
+
+    /// The gradient is truly sparse only without the dense `λ·x` term,
+    /// and the pipeline only pays off when the feature rows themselves
+    /// are sparse — dense-storage datasets would emit `nnz = d` entries
+    /// plus merge bookkeeping, strictly worse than the dense path.
+    fn supports_sparse_grad(&self) -> bool {
+        self.lam == 0.0 && matches!(self.data.features, Features::Csr { .. })
+    }
+
+    /// Exact sparse emission: with `λ = 0`, `∇f_i = coef·a_i` — one pass
+    /// over the feature row, `O(nnz)`, allocation-free (shared core
+    /// `models::push_scaled_row`). With `λ ≠ 0` (dense gradient) this
+    /// falls back to densify-and-gather through the reusable scratch,
+    /// staying exact.
+    fn sample_grad_sparse(&mut self, x: &[f32], i: usize, out: &mut SparseVec) {
+        if self.lam != 0.0 {
+            let mut tmp = std::mem::take(&mut self.scratch);
+            tmp.resize(x.len(), 0.0);
+            self.sample_grad(x, i, &mut tmp);
+            super::gather_nonzeros(&tmp, out);
+            self.scratch = tmp;
+            return;
+        }
+        super::push_scaled_row(self.data, i, self.grad_coef(x, i), out);
+    }
+
+    /// Batched exact sparse emission: per sample the scaled coefficient
+    /// `coef_i/B` multiplies the row entries in dense-path order, and
+    /// repeated coordinates merge in arrival order through the reusable
+    /// [`SparseMerge`] (shared core `models::merge_scaled_row`) —
+    /// bit-identical values to [`GradBackend::sample_grad_batch`] at
+    /// every stored coordinate.
+    fn sample_grad_batch_sparse(&mut self, x: &[f32], idx: &[usize], out: &mut SparseVec) {
+        debug_assert!(!idx.is_empty(), "empty minibatch");
+        if idx.len() == 1 {
+            // `coef·(1/1)` is exact, but skip the merge entirely.
+            self.sample_grad_sparse(x, idx[0], out);
+            return;
+        }
+        if self.lam != 0.0 {
+            let mut tmp = std::mem::take(&mut self.scratch);
+            tmp.resize(x.len(), 0.0);
+            self.sample_grad_batch(x, idx, &mut tmp);
+            super::gather_nonzeros(&tmp, out);
+            self.scratch = tmp;
+            return;
+        }
+        let inv_b = 1.0 / idx.len() as f32;
+        let mut merge = std::mem::take(&mut self.merge);
+        merge.begin(self.data.d(), out);
+        for &i in idx {
+            let scaled = self.grad_coef(x, i) * inv_b;
+            super::merge_scaled_row(&mut merge, self.data, i, scaled, out);
+        }
+        merge.finish(out);
+        self.merge = merge;
     }
 
     fn full_loss(&mut self, x: &[f32]) -> f64 {
@@ -262,6 +336,69 @@ mod tests {
                 }
             }
             ensure_allclose(&batched, &mean, 1e-5, 1e-6, &ds.name).unwrap();
+        }
+    }
+
+    #[test]
+    fn sparse_grad_matches_dense_bit_for_bit_at_lam_zero() {
+        for ds in [synthetic::rcv1_like(60, 48, 0.15, 3), synthetic::epsilon_like(40, 12, 3)] {
+            let mut m = LogisticModel::new(&ds, 0.0);
+            // Only CSR storage opts into the engine's sparse path, but
+            // the emissions themselves are exact for dense rows too.
+            let is_csr = matches!(ds.features, crate::data::Features::Csr { .. });
+            assert_eq!(m.supports_sparse_grad(), is_csr, "{}", ds.name);
+            let d = ds.d();
+            let mut rng = Prng::new(5);
+            let x: Vec<f32> = (0..d).map(|_| 0.3 * rng.normal_f32()).collect();
+            let mut dense = vec![0.0f32; d];
+            let mut sparse = crate::compress::SparseVec::new(d);
+            for i in [0usize, 17, 39] {
+                m.sample_grad(&x, i, &mut dense);
+                m.sample_grad_sparse(&x, i, &mut sparse);
+                assert_eq!(sparse.to_dense(), dense, "{} sample {i}", ds.name);
+            }
+            // Batched, with repeated samples (exercises the merge).
+            let idx = [3usize, 11, 3, 28, 11];
+            m.sample_grad_batch(&x, &idx, &mut dense);
+            m.sample_grad_batch_sparse(&x, &idx, &mut sparse);
+            assert_eq!(sparse.to_dense(), dense, "{} batch", ds.name);
+        }
+    }
+
+    #[test]
+    fn sparse_grad_falls_back_exactly_at_nonzero_lam() {
+        let ds = synthetic::rcv1_like(50, 32, 0.2, 4);
+        let mut m = LogisticModel::with_paper_lambda(&ds);
+        assert!(!m.supports_sparse_grad(), "λ ≠ 0 gradients are dense");
+        let d = ds.d();
+        let x: Vec<f32> = (0..d).map(|j| 0.05 * (j as f32 + 1.0).cos()).collect();
+        let mut dense = vec![0.0f32; d];
+        let mut sparse = crate::compress::SparseVec::new(d);
+        m.sample_grad(&x, 7, &mut dense);
+        m.sample_grad_sparse(&x, 7, &mut sparse);
+        assert_eq!(sparse.to_dense(), dense);
+        m.sample_grad_batch(&x, &[1, 9, 9, 30], &mut dense);
+        m.sample_grad_batch_sparse(&x, &[1, 9, 9, 30], &mut sparse);
+        assert_eq!(sparse.to_dense(), dense);
+    }
+
+    #[test]
+    fn sparse_batch_buffers_stop_growing_after_warmup() {
+        // Same protocol as top_k.rs::reuses_buffers_without_allocation_growth:
+        // one warm-up call, then capacities must stay put.
+        let ds = synthetic::rcv1_like(80, 64, 0.2, 7);
+        let mut m = LogisticModel::new(&ds, 0.0);
+        let d = ds.d();
+        let x = vec![0.02f32; d];
+        let mut out = crate::compress::SparseVec::new(d);
+        let mut rng = Prng::new(9);
+        let idx: Vec<usize> = (0..16).map(|_| rng.below(80)).collect();
+        m.sample_grad_batch_sparse(&x, &idx, &mut out);
+        let cap = (out.idx.capacity(), out.val.capacity());
+        for round in 0..100 {
+            let idx: Vec<usize> = (0..16).map(|_| rng.below(80)).collect();
+            m.sample_grad_batch_sparse(&x, &idx, &mut out);
+            assert_eq!((out.idx.capacity(), out.val.capacity()), cap, "round {round}");
         }
     }
 

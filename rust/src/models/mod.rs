@@ -22,10 +22,30 @@ pub mod logistic;
 pub use linear::LeastSquaresModel;
 pub use logistic::LogisticModel;
 
+use crate::compress::SparseVec;
+
 /// A source of per-sample gradients and objective values.
 ///
 /// `&mut self` lets implementations keep reusable scratch (the PJRT
-/// backend owns device buffers; native backends need nothing).
+/// backend owns device buffers; native backends keep the sparse-merge
+/// accumulator of the sparse gradient pipeline).
+///
+/// ## The sparse gradient pipeline
+///
+/// On the paper's sparse workloads (RCV1: d = 47 236, ~73 nonzeros per
+/// row) a stochastic gradient without L2 regularization is a scaled copy
+/// of one sparse row — materializing it densely wastes a factor of
+/// `d/nnz`. Backends that can emit such gradients exactly advertise it
+/// through [`GradBackend::supports_sparse_grad`] and the topology
+/// engines then run the whole local phase in `O(nnz)` per local step
+/// (see `coordinator::experiment`). The contract is strict: the sparse
+/// emission must hold the **same floating-point values** the dense
+/// [`GradBackend::sample_grad`] would produce at its nonzero
+/// coordinates, with exact zeros everywhere else, so dense and sparse
+/// trajectories are bit-identical (`tests/sparse_pipeline.rs`). The
+/// default implementations are densifying shims — correct for every
+/// backend, allocating and `O(d)`, there so remote backends (PJRT) and
+/// downstream implementors keep compiling without opting in.
 pub trait GradBackend {
     /// Feature dimension.
     fn dim(&self) -> usize;
@@ -65,6 +85,55 @@ pub trait GradBackend {
         }
     }
 
+    /// Whether this backend's stochastic gradients are genuinely sparse
+    /// **and** [`GradBackend::sample_grad_sparse`] /
+    /// [`GradBackend::sample_grad_batch_sparse`] emit them in `O(nnz)`
+    /// without densifying. The topology engines consult this once per
+    /// local phase to pick the sparse path; the default is `false`
+    /// (remote backends, dense-storage datasets — where `nnz = d` makes
+    /// the pipeline pure overhead — and L2-regularized models, whose
+    /// `λ·x` term makes every gradient dense).
+    fn supports_sparse_grad(&self) -> bool {
+        false
+    }
+
+    /// Write `∇f_i(x)` into `out` as a sparse vector.
+    ///
+    /// Exactness contract: for every coordinate `j` stored in `out`,
+    /// `out[j]` is **bit-identical** to what [`GradBackend::sample_grad`]
+    /// writes at `j`, and every omitted coordinate's dense value is an
+    /// exact zero. Indices are unique; duplicate contributions must be
+    /// merged by the implementation (in dense accumulation order).
+    ///
+    /// The default is a densifying shim — it calls `sample_grad` through
+    /// a temporary and gathers the nonzeros, so it is exact but `O(d)`
+    /// and allocating; native models override it allocation-free.
+    fn sample_grad_sparse(&mut self, x: &[f32], i: usize, out: &mut SparseVec) {
+        let d = self.dim();
+        let mut tmp = vec![0.0f32; d];
+        self.sample_grad(x, i, &mut tmp);
+        gather_nonzeros(&tmp, out);
+    }
+
+    /// Sparse counterpart of [`GradBackend::sample_grad_batch`]: the
+    /// minibatch mean `(1/B)·Σ_{i∈idx} ∇f_i(x)` as a merged sparse
+    /// vector, same exactness contract as
+    /// [`GradBackend::sample_grad_sparse`] (values bit-identical to the
+    /// dense batch path at stored coordinates, exact zeros elsewhere,
+    /// unique indices). Default: densifying shim over
+    /// [`GradBackend::sample_grad_batch`].
+    fn sample_grad_batch_sparse(&mut self, x: &[f32], idx: &[usize], out: &mut SparseVec) {
+        debug_assert!(!idx.is_empty(), "empty minibatch");
+        if idx.len() == 1 {
+            self.sample_grad_sparse(x, idx[0], out);
+            return;
+        }
+        let d = self.dim();
+        let mut tmp = vec![0.0f32; d];
+        self.sample_grad_batch(x, idx, &mut tmp);
+        gather_nonzeros(&tmp, out);
+    }
+
     /// Full objective `f(x)`.
     fn full_loss(&mut self, x: &[f32]) -> f64;
 
@@ -79,6 +148,65 @@ pub trait GradBackend {
             self.sample_grad(x, i, &mut tmp);
             for (o, &t) in out.iter_mut().zip(&tmp) {
                 *o += t / n as f32;
+            }
+        }
+    }
+}
+
+/// Gather the nonzeros of a dense vector into a reusable [`SparseVec`]
+/// (the densifying-shim tail shared by the default trait methods).
+fn gather_nonzeros(dense: &[f32], out: &mut SparseVec) {
+    out.clear(dense.len());
+    for (j, &g) in dense.iter().enumerate() {
+        if g != 0.0 {
+            out.push(j as u32, g);
+        }
+    }
+}
+
+/// Exact single-sample sparse emission shared by the native models:
+/// `out = coef·a_i` — each stored value is the literal product
+/// `coef * v`, matching the dense path's
+/// [`Dataset::add_scaled_row`](crate::data::Dataset::add_scaled_row)
+/// contribution bit for bit (the `λ = 0` dense gradient is `±0 +
+/// coef·v`, numerically equal). Assumes rows carry unique column
+/// indices (standard CSR).
+fn push_scaled_row(data: &crate::data::Dataset, i: usize, coef: f32, out: &mut SparseVec) {
+    out.clear(data.d());
+    match data.row(i) {
+        crate::data::RowView::Dense(row) => {
+            for (j, &v) in row.iter().enumerate() {
+                out.push(j as u32, coef * v);
+            }
+        }
+        crate::data::RowView::Sparse { idx, val } => {
+            for (&j, &v) in idx.iter().zip(val) {
+                out.push(j, coef * v);
+            }
+        }
+    }
+}
+
+/// Exact batched-emission core shared by the native models: merge
+/// `scaled·a_i` into an in-progress coordinate merge, adding per-entry
+/// contributions `scaled * v` in row order — the same FP sequence the
+/// dense minibatch accumulation applies at each coordinate.
+fn merge_scaled_row(
+    merge: &mut crate::compress::SparseMerge,
+    data: &crate::data::Dataset,
+    i: usize,
+    scaled: f32,
+    out: &mut SparseVec,
+) {
+    match data.row(i) {
+        crate::data::RowView::Dense(row) => {
+            for (j, &v) in row.iter().enumerate() {
+                merge.add(out, j as u32, scaled * v);
+            }
+        }
+        crate::data::RowView::Sparse { idx, val } => {
+            for (&j, &v) in idx.iter().zip(val) {
+                merge.add(out, j, scaled * v);
             }
         }
     }
@@ -108,6 +236,49 @@ pub fn log1p_exp(z: f32) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// A minimal dense backend relying on every default trait method.
+    struct Quadratic {
+        d: usize,
+    }
+
+    impl GradBackend for Quadratic {
+        fn dim(&self) -> usize {
+            self.d
+        }
+        fn n(&self) -> usize {
+            3
+        }
+        fn sample_grad(&mut self, x: &[f32], i: usize, out: &mut [f32]) {
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = if j % 2 == 0 { (i as f32 + 1.0) * x[j] } else { 0.0 };
+            }
+        }
+        fn full_loss(&mut self, _x: &[f32]) -> f64 {
+            0.0
+        }
+    }
+
+    #[test]
+    fn default_sparse_shim_gathers_exact_nonzeros() {
+        let mut b = Quadratic { d: 6 };
+        let x = vec![1.0f32, 2.0, -3.0, 4.0, 5.0, -6.0];
+        let mut dense = vec![0.0f32; 6];
+        let mut sparse = crate::compress::SparseVec::new(6);
+        b.sample_grad(&x, 1, &mut dense);
+        b.sample_grad_sparse(&x, 1, &mut sparse);
+        assert!(!b.supports_sparse_grad(), "shim backends stay opted out");
+        assert_eq!(sparse.to_dense(), dense);
+        assert_eq!(sparse.nnz(), 3); // only the even coordinates
+
+        b.sample_grad_batch(&x, &[0, 2], &mut dense);
+        b.sample_grad_batch_sparse(&x, &[0, 2], &mut sparse);
+        assert_eq!(sparse.to_dense(), dense);
+        // B = 1 routes through the per-sample emission.
+        b.sample_grad(&x, 2, &mut dense);
+        b.sample_grad_batch_sparse(&x, &[2], &mut sparse);
+        assert_eq!(sparse.to_dense(), dense);
+    }
 
     #[test]
     fn sigmoid_stable_and_symmetric() {

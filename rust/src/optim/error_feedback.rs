@@ -36,7 +36,7 @@
 //! since multiplying by 1.0 is exact, `H = 1` reproduces the per-sample
 //! recursion bit for bit (pinned by `tests/local_update_equivalence.rs`).
 
-use crate::compress::{Compressor, Update};
+use crate::compress::{Compressor, SparseVec, Update};
 use crate::util::prng::Prng;
 
 /// One error-feedback step over caller-owned buffers.
@@ -63,6 +63,38 @@ pub fn apply(
     debug_assert_eq!(v.len(), grad.len());
     for ((vi, &mi), &gi) in v.iter_mut().zip(memory.iter()).zip(grad) {
         *vi = mi + eta * gi;
+    }
+    let bits = comp.compress(v, rng, out);
+    std::mem::swap(memory, v);
+    out.sub_from(memory);
+    bits
+}
+
+/// [`apply`] for a **sparse** gradient: `v` starts as a copy of the
+/// memory and only the gradient's stored coordinates are recombined as
+/// `v[j] = m[j] + η·g[j]` — the same floating-point expression the dense
+/// pass evaluates there, while untouched coordinates carry `m[j]`
+/// verbatim (the dense pass computes `m[j] + η·0`, the same value). The
+/// gradient's `O(d)` cost disappears; the memory copy and the compressor
+/// scan remain `O(d)`, which is why the engines reserve this for the
+/// sync step / `H = 1` and keep the intra-phase local steps fully
+/// `O(nnz)` (`coordinator::experiment`).
+#[inline]
+pub fn apply_sparse(
+    comp: &mut dyn Compressor,
+    memory: &mut Vec<f32>,
+    v: &mut Vec<f32>,
+    grad: &SparseVec,
+    eta: f32,
+    rng: &mut Prng,
+    out: &mut Update,
+) -> u64 {
+    debug_assert_eq!(memory.len(), grad.dim);
+    debug_assert_eq!(v.len(), grad.dim);
+    v.copy_from_slice(memory);
+    for (&j, &g) in grad.idx.iter().zip(&grad.val) {
+        let j = j as usize;
+        v[j] = memory[j] + eta * g;
     }
     let bits = comp.compress(v, rng, out);
     std::mem::swap(memory, v);
@@ -138,20 +170,37 @@ impl ErrorFeedbackStep {
                 *vi = eta * gi;
             }
             let bits = self.comp.compress(&self.v, rng, &mut self.update);
-            if self.scale != 1.0 {
-                match &mut self.update {
-                    Update::Sparse(s) => {
-                        for val in s.val.iter_mut() {
-                            *val *= self.scale;
-                        }
-                    }
-                    Update::Dense(g) => {
-                        for val in g.iter_mut() {
-                            *val *= self.scale;
-                        }
-                    }
-                }
+            scale_update(&mut self.update, self.scale);
+            bits
+        };
+        self.bits_sent += bits;
+        bits
+    }
+
+    /// [`ErrorFeedbackStep::step`] for a sparse gradient — identical
+    /// trajectory (same FP expression `m + η·g` on the gradient's stored
+    /// coordinates, memory copied verbatim elsewhere), but the gradient
+    /// never materializes densely. Used by the topology engines whenever
+    /// the backend advertises [`crate::models::GradBackend::supports_sparse_grad`].
+    pub fn step_sparse(&mut self, grad: &SparseVec, eta: f32, rng: &mut Prng) -> u64 {
+        let bits = if self.use_memory {
+            apply_sparse(
+                self.comp.as_mut(),
+                &mut self.memory,
+                &mut self.v,
+                grad,
+                eta,
+                rng,
+                &mut self.update,
+            )
+        } else {
+            debug_assert_eq!(self.v.len(), grad.dim);
+            self.v.iter_mut().for_each(|vi| *vi = 0.0);
+            for (&j, &g) in grad.idx.iter().zip(&grad.val) {
+                self.v[j as usize] = eta * g;
             }
+            let bits = self.comp.compress(&self.v, rng, &mut self.update);
+            scale_update(&mut self.update, self.scale);
             bits
         };
         self.bits_sent += bits;
@@ -191,6 +240,26 @@ impl ErrorFeedbackStep {
     /// `‖m‖²` — the quantity Lemma 3.2 bounds.
     pub fn memory_norm_sq(&self) -> f64 {
         crate::util::stats::l2_norm_sq(&self.memory)
+    }
+}
+
+/// Post-compression unbiasing scale of the memory-free baselines
+/// (`d/k` for §2.2 rand-k; a no-op at 1.0).
+fn scale_update(update: &mut Update, scale: f32) {
+    if scale == 1.0 {
+        return;
+    }
+    match update {
+        Update::Sparse(s) => {
+            for val in s.val.iter_mut() {
+                *val *= scale;
+            }
+        }
+        Update::Dense(g) => {
+            for val in g.iter_mut() {
+                *val *= scale;
+            }
+        }
     }
 }
 
@@ -276,6 +345,66 @@ mod tests {
         ef.sync(&[0.0; 4], &mut rng);
         assert_eq!(ef.update().to_dense(d), vec![0.0, 1.0, 0.0, 0.0]);
         assert_eq!(ef.memory(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn sparse_step_replays_dense_step_bit_for_bit() {
+        // Every method kind (memory-carrying, memory-free, memory-free
+        // scaled) must produce identical trajectories when the same
+        // gradient arrives sparse instead of dense.
+        let d = 8;
+        let builders: Vec<(&str, fn() -> ErrorFeedbackStep)> = vec![
+            ("mem top_k", || ErrorFeedbackStep::new(8, from_spec("top_k:2").unwrap())),
+            ("mem rand_k", || ErrorFeedbackStep::new(8, from_spec("rand_k:2").unwrap())),
+            ("free qsgd", || ErrorFeedbackStep::new(8, from_spec("qsgd:16").unwrap())),
+            ("free scaled", || {
+                ErrorFeedbackStep::memory_free(8, Box::new(crate::compress::RandK::new(2)), 4.0)
+            }),
+        ];
+        for (name, build) in builders {
+            let mut dense_ef = build();
+            let mut sparse_ef = build();
+            let mut rng_a = Prng::new(21);
+            let mut rng_b = Prng::new(21);
+            for t in 0..25usize {
+                let mut g = vec![0.0f32; d];
+                let mut sg = SparseVec::new(d);
+                for j in [1usize, 4, 6] {
+                    let val = ((t * 7 + j * 3) % 11) as f32 / 11.0 - 0.4;
+                    g[j] = val;
+                    sg.push(j as u32, val);
+                }
+                let bits_a = dense_ef.step(&g, 0.3, &mut rng_a);
+                let bits_b = sparse_ef.step_sparse(&sg, 0.3, &mut rng_b);
+                assert_eq!(bits_a, bits_b, "{name} t={t}");
+                assert_eq!(
+                    dense_ef.update().to_dense(d),
+                    sparse_ef.update().to_dense(d),
+                    "{name} t={t}"
+                );
+                assert_eq!(dense_ef.memory(), sparse_ef.memory(), "{name} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn raw_apply_sparse_matches_apply() {
+        let d = 5;
+        let mut comp_a = TopK::new(1);
+        let mut comp_b = TopK::new(1);
+        let (mut m_a, mut v_a) = (vec![0.0f32; d], vec![0.0f32; d]);
+        let (mut m_b, mut v_b) = (vec![0.0f32; d], vec![0.0f32; d]);
+        let mut out_a = Update::new_sparse(d);
+        let mut out_b = Update::new_sparse(d);
+        let mut rng = Prng::new(0);
+        for t in 0..10 {
+            let g = vec![0.0, 1.0 + t as f32, 0.0, -0.5, 0.0];
+            let sg = SparseVec::from_parts(d, vec![1, 3], vec![1.0 + t as f32, -0.5]);
+            apply(&mut comp_a, &mut m_a, &mut v_a, &g, 0.7, &mut rng, &mut out_a);
+            apply_sparse(&mut comp_b, &mut m_b, &mut v_b, &sg, 0.7, &mut rng, &mut out_b);
+            assert_eq!(m_a, m_b, "t={t}");
+            assert_eq!(out_a.to_dense(d), out_b.to_dense(d), "t={t}");
+        }
     }
 
     #[test]

@@ -92,6 +92,34 @@ impl MemSgd {
         &self.update
     }
 
+    /// [`MemSgd::step`] for a **sparse** stochastic gradient — the same
+    /// recursion through the shared
+    /// [`error_feedback::apply_sparse`](super::error_feedback::apply_sparse),
+    /// producing a bit-identical trajectory while skipping the dense
+    /// gradient materialization (the sparse-pipeline entry point for
+    /// callers that drive `MemSgd` directly rather than through the
+    /// topology engines).
+    pub fn step_sparse(
+        &mut self,
+        grad: &crate::compress::SparseVec,
+        eta: f64,
+        rng: &mut Prng,
+    ) -> &Update {
+        debug_assert_eq!(grad.dim, self.x.len());
+        self.bits_sent += super::error_feedback::apply_sparse(
+            self.compressor.as_mut(),
+            &mut self.m,
+            &mut self.v,
+            grad,
+            eta as f32,
+            rng,
+            &mut self.update,
+        );
+        self.update.sub_from(&mut self.x);
+        self.t += 1;
+        &self.update
+    }
+
     /// `‖m_t‖²` — the quantity Lemma 3.2 bounds.
     pub fn memory_norm_sq(&self) -> f64 {
         stats::l2_norm_sq(&self.m)
@@ -180,6 +208,29 @@ mod tests {
             }
             opt.step(&g, eta, &mut rng);
             ensure_allclose(&opt.virtual_iterate(), &virt, 1e-4, 1e-5, "virtual").unwrap();
+        }
+    }
+
+    #[test]
+    fn step_sparse_tracks_step_bit_for_bit() {
+        let d = 10;
+        let mut dense_opt = MemSgd::new(vec![0.2; d], from_spec("top_k:2").unwrap());
+        let mut sparse_opt = MemSgd::new(vec![0.2; d], from_spec("top_k:2").unwrap());
+        let mut rng_a = Prng::new(2);
+        let mut rng_b = Prng::new(2);
+        for t in 0..40usize {
+            let mut g = vec![0.0f32; d];
+            let mut sg = crate::compress::SparseVec::new(d);
+            for j in [0usize, 3, 7, 9] {
+                let val = ((t * 13 + j * 5) % 17) as f32 / 17.0 - 0.3;
+                g[j] = val;
+                sg.push(j as u32, val);
+            }
+            dense_opt.step(&g, 0.05, &mut rng_a);
+            sparse_opt.step_sparse(&sg, 0.05, &mut rng_b);
+            assert_eq!(dense_opt.x, sparse_opt.x, "t={t}");
+            assert_eq!(dense_opt.m, sparse_opt.m, "t={t}");
+            assert_eq!(dense_opt.bits_sent, sparse_opt.bits_sent, "t={t}");
         }
     }
 

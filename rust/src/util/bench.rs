@@ -12,6 +12,30 @@
 //! target measuring window is filled; mean / p50 / p95 and throughput are
 //! printed in a fixed-width table and optionally appended as JSON lines
 //! for the EXPERIMENTS.md tooling.
+//!
+//! ## Perf-trajectory JSON (`BENCH_hot_path.json` row schema)
+//!
+//! [`Bench::write_json`] maintains a JSON-lines file of one object per
+//! measured case. Keys are emitted in a stable (alphabetical) order and
+//! rows are sorted by `(bench, case)`, so repeated runs produce readable
+//! diffs. Fields:
+//!
+//! | field      | type   | meaning                                        |
+//! |------------|--------|------------------------------------------------|
+//! | `bench`    | string | bench binary title (e.g. `"hot_path"`)         |
+//! | `case`     | string | case name — the `(bench, case)` pair is the row key |
+//! | `mean_ns`  | number | mean ns/iteration over all samples             |
+//! | `p50_ns`   | number | median ns/iteration (what the CI gate compares) |
+//! | `p95_ns`   | number | 95th-percentile ns/iteration                   |
+//! | `iters`    | number | total timed iterations                         |
+//! | `estimated`| bool   | *optional*; `true` marks hand-seeded baseline rows that were never measured — the CI gate widens its tolerance on them (see `util::gate`) |
+//!
+//! The file is **deduplicated by `(bench, case)`**: writing a case that
+//! already has a row replaces it (latest wins), so repeated local runs
+//! don't bloat the file; rows from other benches are preserved. The
+//! committed `BENCH_hot_path.json` doubles as the CI performance
+//! baseline (`.github/workflows/ci.yml`, `bench-gate` job — compared via
+//! the `memsgd bench-gate` subcommand).
 
 use std::hint::black_box;
 use std::time::{Duration, Instant};
@@ -145,14 +169,33 @@ impl Bench {
         println!("=== bench: {} done ({} cases) ===", self.title, self.results.len());
     }
 
-    /// Append this bench's rows as JSON lines to `path` — the same
-    /// format the `MEMSGD_BENCH_JSON` env hook writes. Benches that
-    /// track a perf trajectory (e.g. `hot_path` →
-    /// `BENCH_hot_path.json`) call this unconditionally so every run
-    /// accumulates a record.
+    /// Merge this bench's rows into the JSON-lines file at `path` (the
+    /// same format the `MEMSGD_BENCH_JSON` env hook writes; full schema
+    /// in the module docs). Rows are **deduplicated by `(bench, case)`
+    /// keeping the latest measurement**, sorted by that key, and emitted
+    /// with a stable field order — so perf-trajectory files like
+    /// `BENCH_hot_path.json` stay small and diff cleanly no matter how
+    /// often the bench reruns. Unparseable lines in an existing file are
+    /// dropped with a warning rather than aborting the run.
     pub fn write_json(&self, path: &str) -> std::io::Result<()> {
-        use std::io::Write;
-        let mut text = String::new();
+        // (bench, case) → row; the BTreeMap both dedupes (later entries,
+        // including this run's, overwrite earlier ones) and sorts the
+        // final write by key.
+        let mut rows = std::collections::BTreeMap::new();
+        let field = |row: &Json, key: &str| -> String {
+            row.get(key).and_then(|v| v.as_str().ok()).unwrap_or("").to_string()
+        };
+        if let Ok(existing) = std::fs::read_to_string(path) {
+            for line in existing.lines().filter(|l| !l.trim().is_empty()) {
+                match Json::parse(line) {
+                    Ok(row) => {
+                        let key = (field(&row, "bench"), field(&row, "case"));
+                        rows.insert(key, row);
+                    }
+                    Err(e) => eprintln!("{path}: dropping unparseable row ({e:#}): {line}"),
+                }
+            }
+        }
         for m in &self.results {
             let row = Json::obj(vec![
                 ("bench", Json::str(&self.title)),
@@ -162,11 +205,14 @@ impl Bench {
                 ("p95_ns", Json::Num(m.p95_ns)),
                 ("iters", Json::Num(m.iters as f64)),
             ]);
+            rows.insert((self.title.clone(), m.name.clone()), row);
+        }
+        let mut text = String::new();
+        for row in rows.values() {
             text.push_str(&row.to_string());
             text.push('\n');
         }
-        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
-        f.write_all(text.as_bytes())
+        std::fs::write(path, text)
     }
 }
 
@@ -202,18 +248,48 @@ mod tests {
     }
 
     #[test]
-    fn write_json_appends_one_line_per_case() {
+    fn write_json_dedupes_by_bench_and_case_keeping_latest() {
+        let path = std::env::temp_dir().join("memsgd_bench_json_test.json");
+        std::fs::remove_file(&path).ok();
+
         let mut b = Bench::new("json-test");
         b.record("case-a", Duration::from_millis(1), 10);
         b.record("case-b", Duration::from_millis(2), 10);
-        let path = std::env::temp_dir().join("memsgd_bench_json_test.json");
-        std::fs::remove_file(&path).ok();
         b.write_json(path.to_str().unwrap()).unwrap();
-        b.write_json(path.to_str().unwrap()).unwrap(); // appends
+        // Rerunning must replace, not append.
+        let mut b2 = Bench::new("json-test");
+        b2.record("case-a", Duration::from_millis(5), 10);
+        b2.write_json(path.to_str().unwrap()).unwrap();
+
         let text = std::fs::read_to_string(&path).unwrap();
-        assert_eq!(text.lines().count(), 4);
-        assert!(text.contains("\"case-a\""));
-        assert!(text.contains("json-test"));
+        assert_eq!(text.lines().count(), 2, "one row per (bench, case):\n{text}");
+        let row_a = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(row_a.req("case").unwrap().as_str().unwrap(), "case-a");
+        // Latest measurement won: 5ms/10 iters = 500_000 ns.
+        assert_eq!(row_a.req("p50_ns").unwrap().as_f64().unwrap(), 500_000.0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn write_json_preserves_other_benches_and_sorts_rows() {
+        let path = std::env::temp_dir().join("memsgd_bench_json_sort_test.json");
+        std::fs::remove_file(&path).ok();
+        let mut zz = Bench::new("zz-later");
+        zz.record("z-case", Duration::from_millis(1), 1);
+        zz.write_json(path.to_str().unwrap()).unwrap();
+        let mut aa = Bench::new("aa-early");
+        aa.record("a-case", Duration::from_millis(1), 1);
+        aa.write_json(path.to_str().unwrap()).unwrap();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let benches: Vec<String> = text
+            .lines()
+            .map(|l| Json::parse(l).unwrap().req("bench").unwrap().as_str().unwrap().to_string())
+            .collect();
+        // Other benches' rows survive, and output is sorted by (bench, case).
+        assert_eq!(benches, vec!["aa-early", "zz-later"]);
+        // Stable field order within a row (alphabetical via BTreeMap).
+        assert!(text.lines().next().unwrap().starts_with("{\"bench\":"));
         std::fs::remove_file(&path).ok();
     }
 

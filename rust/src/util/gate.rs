@@ -1,0 +1,423 @@
+//! The CI performance gate: compares a fresh `BENCH_hot_path.json` run
+//! against the committed baseline and fails on regressions.
+//!
+//! Driven by the `memsgd bench-gate` subcommand from the `bench-gate`
+//! job in `.github/workflows/ci.yml`; the comparison itself is a pure
+//! function over parsed rows so the regression policy is unit-tested
+//! (including the canary: an injected 2× slowdown must fail).
+//!
+//! ## Policy
+//!
+//! * Comparisons are **calibration-normalized**: each file's `p50_ns` is
+//!   divided by that same file's calibration-case `p50_ns` before the
+//!   ratio is taken. CI machines differ run to run; dividing by a fixed
+//!   reference case measured in the same process cancels the machine
+//!   factor, so the gate tracks *relative* regressions (a case getting
+//!   slower than the rest of the suite) rather than runner lottery.
+//! * A case regresses when `fresh_norm / base_norm >` the tolerance:
+//!   **1.25** (the ">25% median regression" budget) for measured
+//!   baseline rows, widened to **4.0** for rows marked `"estimated":
+//!   true` (hand-seeded baselines that have never been measured on real
+//!   hardware — see `BENCH_hot_path.json` provenance in the README).
+//! * **Speedup invariants** are machine-independent claims checked on
+//!   the fresh run alone — e.g. the sparse local step must be ≥ 5×
+//!   faster than the dense one at the RCV1 shape (`d/nnz ≈ 470`), the
+//!   tentpole acceptance criterion. A missing invariant case is a
+//!   failure: silently skipping it would un-gate the claim.
+//! * Cases present on only one side produce warnings, not failures, so
+//!   adding or retiring bench cases doesn't wedge CI — the next baseline
+//!   refresh picks them up.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// One parsed row of a perf-trajectory JSON-lines file (the
+/// `BENCH_hot_path.json` schema documented in [`crate::util::bench`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GateRow {
+    pub bench: String,
+    pub case: String,
+    pub p50_ns: f64,
+    /// Hand-seeded baseline row, never measured — widens the tolerance.
+    pub estimated: bool,
+}
+
+/// Parse a JSON-lines perf file into gate rows. Strict: a malformed row
+/// in a gating file is an error, not a skip.
+pub fn parse_rows(text: &str) -> Result<Vec<GateRow>> {
+    let mut rows = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let row = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("line {}: {e:#}", lineno + 1))?;
+        let p50 = row.req("p50_ns")?.as_f64()?;
+        if p50.is_nan() || p50 <= 0.0 {
+            bail!("line {}: p50_ns must be positive, got {p50}", lineno + 1);
+        }
+        rows.push(GateRow {
+            bench: row.req("bench")?.as_str()?.to_string(),
+            case: row.req("case")?.as_str()?.to_string(),
+            p50_ns: p50,
+            estimated: row
+                .get("estimated")
+                .map(|e| e.as_bool())
+                .transpose()?
+                .unwrap_or(false),
+        });
+    }
+    Ok(rows)
+}
+
+/// The hot-path bench title (`benches/hot_path.rs` passes this to
+/// [`crate::util::bench::Bench::new`]).
+pub const HOT_PATH_BENCH: &str = "hot_path";
+
+/// The calibration case: the plain dense-gradient kernel every other
+/// case is normalized by. The bench runs it under exactly this name.
+pub const CAL_CASE: &str = "grad only           dense d=2000";
+
+/// Canonical name of the dense local-step case at minibatch size `bsz`
+/// (RCV1 shape). Shared by the bench and the gate config so a rename
+/// cannot silently desynchronize them.
+pub fn local_step_dense_case(bsz: usize) -> String {
+    format!("local step dense  B={bsz:<2} d=47236 nnz~100")
+}
+
+/// Canonical name of the sparse local-step case at minibatch size `bsz`.
+pub fn local_step_sparse_case(bsz: usize) -> String {
+    format!("local step sparse B={bsz:<2} d=47236 nnz~100")
+}
+
+/// A fresh-run-only invariant: `slow_case` must be at least `min_ratio`
+/// × slower than `fast_case` (both in the same bench).
+#[derive(Clone, Debug)]
+pub struct SpeedupCheck {
+    pub slow_case: String,
+    pub fast_case: String,
+    pub min_ratio: f64,
+}
+
+/// Gate policy knobs.
+#[derive(Clone, Debug)]
+pub struct GateConfig {
+    /// `(bench, case)` used to normalize out the machine factor.
+    pub calibration: (&'static str, &'static str),
+    /// Regression tolerance against measured baseline rows (1.25 =
+    /// "fail on >25% median regression").
+    pub tolerance: f64,
+    /// Widened tolerance against `estimated` baseline rows.
+    pub tolerance_estimated: f64,
+    /// Raw (un-normalized) band for the calibration case itself, which
+    /// the normalized comparison is inherently blind to (its own ratio
+    /// is identically 1.0). Wide enough to absorb runner variance, but
+    /// a catastrophic regression of the calibration kernel still fails
+    /// — unless the baseline row is `estimated` (then it only warns).
+    pub calibration_band: f64,
+    /// Machine-independent speedup invariants on the fresh run.
+    pub speedups: Vec<SpeedupCheck>,
+}
+
+/// The hot-path policy: normalize by the plain dense gradient case,
+/// 25% regression budget, and the tentpole's sparse-pipeline payoff —
+/// the sparse local step at the RCV1 shape (d = 47 236, nnz ≈ 100,
+/// d/nnz ≈ 470) must be ≥ 5× faster than the dense local step.
+pub fn hot_path_config() -> GateConfig {
+    GateConfig {
+        calibration: (HOT_PATH_BENCH, CAL_CASE),
+        tolerance: 1.25,
+        tolerance_estimated: 4.0,
+        calibration_band: 8.0,
+        speedups: vec![SpeedupCheck {
+            slow_case: local_step_dense_case(1),
+            fast_case: local_step_sparse_case(1),
+            min_ratio: 5.0,
+        }],
+    }
+}
+
+/// Outcome of one gate evaluation.
+#[derive(Debug, Default)]
+pub struct GateReport {
+    /// Human-readable per-case verdict lines (always populated).
+    pub lines: Vec<String>,
+    /// Hard failures — non-empty means the gate (and CI job) fails.
+    pub failures: Vec<String>,
+    /// Soft notices (cases missing on one side, no calibration, ...).
+    pub warnings: Vec<String>,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+fn find<'a>(rows: &'a [GateRow], bench: &str, case: &str) -> Option<&'a GateRow> {
+    // Last occurrence wins, mirroring the writer's latest-wins dedupe.
+    rows.iter().rev().find(|r| r.bench == bench && r.case == case)
+}
+
+/// Compare a fresh run against the committed baseline under `cfg`.
+/// Pure — all I/O (and the process exit code) lives in the CLI wrapper.
+pub fn compare(baseline: &[GateRow], fresh: &[GateRow], cfg: &GateConfig) -> GateReport {
+    let mut report = GateReport::default();
+    let (cal_bench, cal_case) = cfg.calibration;
+    let cal = match (find(baseline, cal_bench, cal_case), find(fresh, cal_bench, cal_case)) {
+        (Some(b), Some(f)) => {
+            // Normalization is blind to the calibration case itself, so
+            // hold its raw time to a loose machine-variance band.
+            let raw = f.p50_ns / b.p50_ns;
+            if raw > cfg.calibration_band || raw < 1.0 / cfg.calibration_band {
+                let msg = format!(
+                    "calibration case '{cal_bench}/{cal_case}' raw p50 moved {raw:.2}x \
+                     (band {:.0}x)",
+                    cfg.calibration_band
+                );
+                if b.estimated {
+                    report.warnings.push(format!("{msg}; estimated baseline — not failing"));
+                } else {
+                    report.failures.push(msg);
+                }
+            }
+            Some((b.p50_ns, f.p50_ns))
+        }
+        _ => {
+            report.warnings.push(format!(
+                "calibration case '{cal_bench}/{cal_case}' missing on one side; \
+                 comparing raw (machine-dependent) p50s"
+            ));
+            None
+        }
+    };
+    let normalize = |p50: f64, cal_p50: f64| p50 / cal_p50;
+
+    for base_row in baseline {
+        let Some(fresh_row) = find(fresh, &base_row.bench, &base_row.case) else {
+            report.warnings.push(format!(
+                "baseline case '{}/{}' not produced by the fresh run",
+                base_row.bench, base_row.case
+            ));
+            continue;
+        };
+        let (base_val, fresh_val) = match cal {
+            Some((bc, fc)) => (normalize(base_row.p50_ns, bc), normalize(fresh_row.p50_ns, fc)),
+            None => (base_row.p50_ns, fresh_row.p50_ns),
+        };
+        let ratio = fresh_val / base_val;
+        let tol = if base_row.estimated { cfg.tolerance_estimated } else { cfg.tolerance };
+        let verdict = if ratio > tol { "FAIL" } else { "ok" };
+        let case_id = format!("{}/{}", base_row.bench, base_row.case);
+        report.lines.push(format!(
+            "{verdict:>4}  {case_id:<48} ratio {ratio:>7.3} (tolerance {tol:.2}{})",
+            if base_row.estimated { ", estimated baseline" } else { "" },
+        ));
+        if ratio > tol {
+            report.failures.push(format!(
+                "'{}/{}' regressed {ratio:.2}x vs baseline (tolerance {tol:.2}x)",
+                base_row.bench, base_row.case
+            ));
+        }
+    }
+
+    for fresh_row in fresh {
+        if find(baseline, &fresh_row.bench, &fresh_row.case).is_none() {
+            report.warnings.push(format!(
+                "new case '{}/{}' has no baseline row yet (commit a refreshed \
+                 BENCH_hot_path.json to start gating it)",
+                fresh_row.bench, fresh_row.case
+            ));
+        }
+    }
+
+    for check in &cfg.speedups {
+        let slow = find(fresh, cal_bench, &check.slow_case);
+        let fast = find(fresh, cal_bench, &check.fast_case);
+        match (slow, fast) {
+            (Some(s), Some(f)) if s.estimated || f.estimated => {
+                report.failures.push(format!(
+                    "speedup invariant cases '{}' / '{}' are estimated rows — the fresh \
+                     side must be freshly measured (pass a fresh-rows-only file)",
+                    check.slow_case, check.fast_case
+                ));
+            }
+            (Some(s), Some(f)) => {
+                let ratio = s.p50_ns / f.p50_ns;
+                let ok = ratio >= check.min_ratio;
+                report.lines.push(format!(
+                    "{:>4}  speedup '{}' vs '{}': {ratio:.1}x (required >= {:.1}x)",
+                    if ok { "ok" } else { "FAIL" },
+                    check.fast_case,
+                    check.slow_case,
+                    check.min_ratio
+                ));
+                if !ok {
+                    report.failures.push(format!(
+                        "speedup invariant broken: '{}' only {ratio:.2}x faster than '{}' \
+                         (required {:.1}x)",
+                        check.fast_case, check.slow_case, check.min_ratio
+                    ));
+                }
+            }
+            _ => report.failures.push(format!(
+                "speedup invariant cases missing from fresh run: '{}' / '{}'",
+                check.slow_case, check.fast_case
+            )),
+        }
+    }
+
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(case: &str, p50: f64) -> GateRow {
+        GateRow {
+            bench: "hot_path".into(),
+            case: case.into(),
+            p50_ns: p50,
+            estimated: false,
+        }
+    }
+
+    fn cfg_no_speedups() -> GateConfig {
+        GateConfig { speedups: Vec::new(), ..hot_path_config() }
+    }
+
+    const CAL: &str = CAL_CASE;
+
+    #[test]
+    fn identical_runs_pass() {
+        let rows = vec![row(CAL, 1000.0), row("memsgd step", 4000.0)];
+        let rep = compare(&rows, &rows, &cfg_no_speedups());
+        assert!(rep.passed(), "{:?}", rep.failures);
+        assert!(rep.warnings.is_empty(), "{:?}", rep.warnings);
+    }
+
+    #[test]
+    fn injected_2x_slowdown_fails() {
+        // The acceptance canary: halving a baseline row's time makes the
+        // (unchanged) fresh run look 2x slower — the gate must fail.
+        let fresh = vec![row(CAL, 1000.0), row("memsgd step", 4000.0)];
+        let mut base = fresh.clone();
+        base[1].p50_ns /= 2.0;
+        let rep = compare(&base, &fresh, &cfg_no_speedups());
+        assert!(!rep.passed());
+        assert!(rep.failures[0].contains("memsgd step"), "{:?}", rep.failures);
+        assert!(rep.failures[0].contains("2.00x"), "{:?}", rep.failures);
+    }
+
+    #[test]
+    fn within_tolerance_drift_passes_and_beyond_fails() {
+        let base = vec![row(CAL, 1000.0), row("c", 1000.0)];
+        let ok = vec![row(CAL, 1000.0), row("c", 1240.0)]; // +24%
+        assert!(compare(&base, &ok, &cfg_no_speedups()).passed());
+        let bad = vec![row(CAL, 1000.0), row("c", 1260.0)]; // +26%
+        assert!(!compare(&base, &bad, &cfg_no_speedups()).passed());
+    }
+
+    #[test]
+    fn calibration_cancels_uniform_machine_factor() {
+        // A 3x slower machine slows every case 3x: normalized ratios are
+        // 1.0 and the gate passes.
+        let base = vec![row(CAL, 1000.0), row("c", 8000.0)];
+        let fresh = vec![row(CAL, 3000.0), row("c", 24000.0)];
+        assert!(compare(&base, &fresh, &cfg_no_speedups()).passed());
+        // ...but a case-specific 2x slowdown on that machine still fails.
+        let fresh_bad = vec![row(CAL, 3000.0), row("c", 48000.0)];
+        assert!(!compare(&base, &fresh_bad, &cfg_no_speedups()).passed());
+    }
+
+    #[test]
+    fn estimated_baseline_rows_get_the_wide_tolerance() {
+        let mut base = vec![row(CAL, 1000.0), row("c", 1000.0)];
+        base[1].estimated = true;
+        let fresh3 = vec![row(CAL, 1000.0), row("c", 3900.0)]; // 3.9x < 4.0
+        assert!(compare(&base, &fresh3, &cfg_no_speedups()).passed());
+        let fresh5 = vec![row(CAL, 1000.0), row("c", 5000.0)]; // 5x > 4.0
+        assert!(!compare(&base, &fresh5, &cfg_no_speedups()).passed());
+    }
+
+    #[test]
+    fn missing_cases_warn_but_do_not_fail() {
+        let base = vec![row(CAL, 1000.0), row("retired", 10.0)];
+        let fresh = vec![row(CAL, 1000.0), row("brand-new", 10.0)];
+        let rep = compare(&base, &fresh, &cfg_no_speedups());
+        assert!(rep.passed(), "{:?}", rep.failures);
+        assert_eq!(rep.warnings.len(), 2, "{:?}", rep.warnings);
+    }
+
+    #[test]
+    fn speedup_invariant_gates_the_sparse_payoff() {
+        let cfg = hot_path_config();
+        let slow = cfg.speedups[0].slow_case.clone();
+        let fast = cfg.speedups[0].fast_case.clone();
+        let base = vec![row(CAL, 1000.0)];
+        // 10x speedup: passes.
+        let good = vec![row(CAL, 1000.0), row(&slow, 40_000.0), row(&fast, 4_000.0)];
+        assert!(compare(&base, &good, &cfg).passed());
+        // 3x speedup: the >= 5x invariant fails.
+        let weak = vec![row(CAL, 1000.0), row(&slow, 12_000.0), row(&fast, 4_000.0)];
+        assert!(!compare(&base, &weak, &cfg).passed());
+        // Missing invariant cases fail rather than silently skipping.
+        let missing = vec![row(CAL, 1000.0)];
+        assert!(!compare(&base, &missing, &cfg).passed());
+    }
+
+    #[test]
+    fn calibration_case_itself_is_held_to_the_raw_band() {
+        // Uniform 3x machine drift is inside the 8x band: passes (see
+        // calibration_cancels_uniform_machine_factor). A 10x blowup of
+        // the calibration kernel cannot hide behind normalization.
+        let base = vec![row(CAL, 1000.0), row("c", 2000.0)];
+        let fresh = vec![row(CAL, 10_000.0), row("c", 20_000.0)];
+        let rep = compare(&base, &fresh, &cfg_no_speedups());
+        assert!(!rep.passed());
+        assert!(rep.failures[0].contains("calibration"), "{:?}", rep.failures);
+        // ...but an estimated calibration baseline only warns.
+        let mut base_est = base.clone();
+        base_est[0].estimated = true;
+        base_est[1].estimated = true;
+        let rep = compare(&base_est, &fresh, &cfg_no_speedups());
+        assert!(rep.passed(), "{:?}", rep.failures);
+        assert!(rep.warnings.iter().any(|w| w.contains("not failing")), "{:?}", rep.warnings);
+    }
+
+    #[test]
+    fn speedup_invariant_rejects_estimated_fresh_rows() {
+        // Passing a merged baseline as the fresh file must not let the
+        // invariant "pass" on never-measured estimated rows.
+        let cfg = hot_path_config();
+        let mut fresh = vec![
+            row(CAL, 1000.0),
+            row(&cfg.speedups[0].slow_case, 40_000.0),
+            row(&cfg.speedups[0].fast_case, 4_000.0),
+        ];
+        fresh[2].estimated = true;
+        let rep = compare(&[row(CAL, 1000.0)], &fresh, &cfg);
+        assert!(!rep.passed());
+        assert!(rep.failures[0].contains("estimated"), "{:?}", rep.failures);
+    }
+
+    #[test]
+    fn parse_rows_reads_the_writer_schema() {
+        let text = "\
+{\"bench\":\"hot_path\",\"case\":\"a\",\"iters\":10,\"mean_ns\":5,\"p50_ns\":4,\"p95_ns\":9}\n\
+{\"bench\":\"hot_path\",\"case\":\"b\",\"estimated\":true,\"iters\":1,\"mean_ns\":2,\"p50_ns\":2,\"p95_ns\":2}\n";
+        let rows = parse_rows(text).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].p50_ns, 4.0);
+        assert!(!rows[0].estimated);
+        assert!(rows[1].estimated);
+        assert!(parse_rows("{\"bench\":\"x\"}").is_err(), "missing fields rejected");
+        assert!(parse_rows("not json").is_err());
+        assert!(
+            parse_rows("{\"bench\":\"x\",\"case\":\"c\",\"p50_ns\":0}").is_err(),
+            "non-positive p50 rejected"
+        );
+    }
+}

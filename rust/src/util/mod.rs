@@ -12,6 +12,8 @@
 //!   (replaces `clap`).
 //! * [`bench`] — a measurement harness with warmup, repetitions and
 //!   percentile reporting (replaces `criterion`; all `benches/` use it).
+//! * [`gate`] — the CI performance gate comparing fresh `bench` JSON
+//!   against the committed `BENCH_hot_path.json` baseline.
 //! * [`select`] — in-place quickselect used by the top-k compressor.
 //! * [`check`] — a miniature property-testing loop (replaces `proptest`)
 //!   used by the invariant suites in `rust/tests/`.
@@ -20,6 +22,7 @@
 pub mod bench;
 pub mod check;
 pub mod cli;
+pub mod gate;
 pub mod json;
 pub mod prng;
 pub mod select;

@@ -1,0 +1,247 @@
+//! Golden-trajectory suite for the **sparse gradient pipeline**:
+//!
+//! * dense ↔ sparse trajectory equality — the engines must produce
+//!   **bit-identical** runs whether the backend emits gradients densely
+//!   or sparsely, on every `Topology × MethodSpec × LocalUpdate`
+//!   combination (run under both `cargo test` and `cargo test
+//!   --release`; CI exercises both profiles),
+//! * exactness of the capability gate (`λ = 0` opts in, `λ ≠ 0` falls
+//!   back dense),
+//! * allocation discipline: the sparse phase buffers stop growing after
+//!   warm-up (same protocol as
+//!   `top_k.rs::reuses_buffers_without_allocation_growth`).
+//!
+//! The dense run uses [`DenseShadow`], a wrapper that hides the
+//! backend's sparse capability so the engines take the historical dense
+//! path over the *same* data, seed, and schedule.
+
+use memsgd::compress::{CompressorSpec, SparseVec};
+use memsgd::coordinator::{Experiment, LocalUpdate, MethodSpec, Topology};
+use memsgd::data::synthetic;
+use memsgd::metrics::RunRecord;
+use memsgd::models::{GradBackend, LeastSquaresModel, LogisticModel};
+use memsgd::optim::{ErrorFeedbackStep, Schedule};
+use memsgd::sim::network::NetworkModel;
+use memsgd::util::prng::Prng;
+
+const STEPS: usize = 240;
+const ETA: f64 = 0.1;
+const SEED: u64 = 17;
+
+/// RCV1-like CSR data; `λ = 0` keeps per-sample gradients truly sparse.
+fn data() -> memsgd::data::Dataset {
+    synthetic::rcv1_like(160, 48, 0.15, 13)
+}
+
+/// Forwards a sparse-capable backend but reports itself dense, forcing
+/// the engines onto the dense path for the equality comparison.
+#[derive(Clone)]
+struct DenseShadow<B: GradBackend>(B);
+
+impl<B: GradBackend> GradBackend for DenseShadow<B> {
+    fn dim(&self) -> usize {
+        self.0.dim()
+    }
+    fn n(&self) -> usize {
+        self.0.n()
+    }
+    fn sample_grad(&mut self, x: &[f32], i: usize, out: &mut [f32]) {
+        self.0.sample_grad(x, i, out);
+    }
+    fn sample_grad_batch(&mut self, x: &[f32], idx: &[usize], out: &mut [f32]) {
+        self.0.sample_grad_batch(x, idx, out);
+    }
+    fn full_loss(&mut self, x: &[f32]) -> f64 {
+        self.0.full_loss(x)
+    }
+    // supports_sparse_grad intentionally NOT forwarded: default false.
+}
+
+fn all_methods() -> Vec<MethodSpec> {
+    vec![
+        MethodSpec::mem_top_k(2),
+        MethodSpec::mem_rand_k(2),
+        MethodSpec::mem(CompressorSpec::RandomP { p: 0.5 }),
+        MethodSpec::mem(CompressorSpec::Sign),
+        MethodSpec::mem(CompressorSpec::Threshold { tau: 0.25 }),
+        MethodSpec::mem(CompressorSpec::Identity),
+        MethodSpec::Sgd,
+        MethodSpec::SgdQsgd { levels: 16, eff: None },
+        MethodSpec::SgdUnbiasedRandK { k: 2 },
+    ]
+}
+
+fn all_topologies() -> Vec<Topology> {
+    vec![
+        // One shared-memory worker: >1 lock-free threads are racy by
+        // design and not reproducible run-to-run; the parameter-server
+        // engines are simulated in-process, so multi-node stays exact.
+        Topology::Sequential,
+        Topology::SharedMemory { workers: 1 },
+        Topology::ParamServerSync { nodes: 3 },
+        Topology::ParamServerAsync { nodes: 3, net: NetworkModel::eth_10g() },
+    ]
+}
+
+fn all_locals() -> Vec<LocalUpdate> {
+    vec![
+        LocalUpdate::default(),          // B = 1, H = 1 (fast path)
+        LocalUpdate::new(1, 4).unwrap(), // pure local steps
+        LocalUpdate::new(4, 1).unwrap(), // pure minibatching
+        LocalUpdate::new(4, 3).unwrap(), // both
+    ]
+}
+
+fn run<B: GradBackend + Clone + Send>(
+    backend: B,
+    method: &MethodSpec,
+    topology: &Topology,
+    local: LocalUpdate,
+) -> RunRecord {
+    Experiment::new(backend)
+        .method(method.clone())
+        .schedule(Schedule::constant(ETA))
+        .topology(topology.clone())
+        .steps(STEPS)
+        .eval_points(4)
+        .average(false)
+        .seed(SEED)
+        .local_update(local)
+        .run()
+        .unwrap()
+}
+
+fn assert_identical(dense: &RunRecord, sparse: &RunRecord, what: &str) {
+    assert_eq!(dense.steps, sparse.steps, "{what}: steps");
+    assert_eq!(dense.total_bits, sparse.total_bits, "{what}: bits");
+    // LossPoint is PartialEq over (t, bits, loss): whole-curve equality
+    // pins every evaluated iterate bit for bit (identical x ⇒ identical
+    // f64 loss; a single diverging f32 anywhere shows up here).
+    assert_eq!(dense.curve, sparse.curve, "{what}: loss curve");
+}
+
+#[test]
+fn dense_and_sparse_trajectories_are_bit_identical_everywhere() {
+    let ds = data();
+    for method in all_methods() {
+        for topology in all_topologies() {
+            for local in all_locals() {
+                let what = format!("{} x {topology:?} x {local:?}", method.name());
+                let sparse_backend = LogisticModel::new(&ds, 0.0);
+                assert!(sparse_backend.supports_sparse_grad(), "{what}");
+                let rec_sparse = run(sparse_backend, &method, &topology, local);
+                let rec_dense =
+                    run(DenseShadow(LogisticModel::new(&ds, 0.0)), &method, &topology, local);
+                assert_identical(&rec_dense, &rec_sparse, &what);
+            }
+        }
+    }
+}
+
+#[test]
+fn least_squares_backend_matches_too() {
+    // The second native model goes through the same pipeline: one
+    // representative schedule per topology keeps the runtime modest.
+    let ds = data();
+    let method = MethodSpec::mem_top_k(2);
+    let local = LocalUpdate::new(2, 3).unwrap();
+    for topology in all_topologies() {
+        let what = format!("least-squares x {topology:?}");
+        let sparse_backend = LeastSquaresModel::new(&ds, 0.0);
+        assert!(sparse_backend.supports_sparse_grad(), "{what}");
+        let rec_sparse = run(sparse_backend, &method, &topology, local);
+        let rec_dense =
+            run(DenseShadow(LeastSquaresModel::new(&ds, 0.0)), &method, &topology, local);
+        assert_identical(&rec_dense, &rec_sparse, &what);
+    }
+}
+
+#[test]
+fn regularized_models_fall_back_to_the_dense_path() {
+    let ds = data();
+    assert!(!LogisticModel::with_paper_lambda(&ds).supports_sparse_grad());
+    assert!(!LeastSquaresModel::new(&ds, 0.05).supports_sparse_grad());
+    // And the λ ≠ 0 trajectory is untouched by the pipeline's existence:
+    // wrapping in DenseShadow (pure delegation) changes nothing.
+    let method = MethodSpec::mem_top_k(2);
+    let local = LocalUpdate::new(2, 2).unwrap();
+    let a = run(LogisticModel::with_paper_lambda(&ds), &method, &Topology::Sequential, local);
+    let b = run(
+        DenseShadow(LogisticModel::with_paper_lambda(&ds)),
+        &method,
+        &Topology::Sequential,
+        local,
+    );
+    assert_identical(&a, &b, "lam != 0");
+}
+
+#[test]
+fn sparse_emission_values_match_dense_gradients_exactly() {
+    // Unit-level spot check at the integration boundary: the emitted
+    // sparse values are the dense gradient's nonzeros, bit for bit,
+    // including merged duplicate samples.
+    let ds = data();
+    let mut m = LogisticModel::new(&ds, 0.0);
+    let d = ds.d();
+    let mut rng = Prng::new(3);
+    let x: Vec<f32> = (0..d).map(|_| 0.2 * rng.normal_f32()).collect();
+    let mut dense = vec![0.0f32; d];
+    let mut sparse = SparseVec::new(d);
+    for i in 0..ds.n() {
+        m.sample_grad(&x, i, &mut dense);
+        m.sample_grad_sparse(&x, i, &mut sparse);
+        assert_eq!(sparse.to_dense(), dense, "sample {i}");
+    }
+    let idx = [7usize, 99, 7, 42, 99, 0];
+    m.sample_grad_batch(&x, &idx, &mut dense);
+    m.sample_grad_batch_sparse(&x, &idx, &mut sparse);
+    assert_eq!(sparse.to_dense(), dense, "merged batch");
+}
+
+#[test]
+fn sparse_phase_buffers_stop_growing_after_warmup() {
+    // Same protocol as top_k.rs::reuses_buffers_without_allocation_growth,
+    // across the full sparse step: emission buffer and the compressed
+    // update inside ErrorFeedbackStep must reuse their allocations.
+    let ds = data();
+    let mut m = LogisticModel::new(&ds, 0.0);
+    let d = ds.d();
+    let mut ef = ErrorFeedbackStep::new(d, CompressorSpec::TopK { k: 2 }.build());
+    let mut rng = Prng::new(4);
+    let x = vec![0.05f32; d];
+    let mut sgrad = SparseVec::new(d);
+
+    let mut one_step = |m: &mut LogisticModel, ef: &mut ErrorFeedbackStep, rng: &mut Prng| {
+        let idx: Vec<usize> = (0..8).map(|_| rng.below(ds.n())).collect();
+        m.sample_grad_batch_sparse(&x, &idx, &mut sgrad);
+        ef.step_sparse(&sgrad, 0.1, rng);
+        let update_cap = match ef.update() {
+            memsgd::compress::Update::Sparse(s) => (s.idx.capacity(), s.val.capacity()),
+            memsgd::compress::Update::Dense(g) => (g.capacity(), 0),
+        };
+        (sgrad.idx.capacity(), sgrad.val.capacity(), update_cap)
+    };
+
+    let warm = one_step(&mut m, &mut ef, &mut rng);
+    for round in 0..200 {
+        let caps = one_step(&mut m, &mut ef, &mut rng);
+        assert_eq!(caps, warm, "round {round}: phase buffers grew after warm-up");
+    }
+}
+
+#[test]
+fn sparse_runs_report_the_same_schedule_metadata() {
+    // The pipeline must not disturb the record surface: extras like
+    // batch/sync_every/grad_samples stay identical.
+    let ds = data();
+    let local = LocalUpdate::new(4, 3).unwrap();
+    let rec = run(
+        LogisticModel::new(&ds, 0.0),
+        &MethodSpec::mem_top_k(1),
+        &Topology::Sequential,
+        local,
+    );
+    assert_eq!(rec.extra["batch"], 4.0);
+    assert_eq!(rec.extra["sync_every"], 3.0);
+    assert_eq!(rec.extra["grad_samples"], rec.steps as f64 * 4.0);
+}
