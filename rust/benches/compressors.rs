@@ -44,11 +44,11 @@ fn main() {
         });
     }
 
-    // The dominant cost inside top-k: quickselect vs full sort.
+    // The dominant cost inside top-k: the heap-select engine vs full sort.
     for &d in &[2_000usize, 47_236] {
         let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
         let mut scratch: Vec<u32> = Vec::new();
-        b.run(&format!("quickselect k=10 d={d}"), || {
+        b.run(&format!("heap-select k=10 d={d}"), || {
             memsgd::util::select::top_k_indices(&x, 10, &mut scratch);
         });
         let mut idx: Vec<u32> = (0..d as u32).collect();
@@ -67,7 +67,7 @@ fn main() {
         // revert in optim/memsgd.rs.
         let m: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
         let mut v = vec![0.0f32; d];
-        let mut heap: Vec<(u32, u32)> = Vec::new();
+        let mut heap: Vec<u64> = Vec::new();
         b.run(&format!("2-pass build+select  k=10 d={d}"), || {
             for ((vi, &mi), &gi) in v.iter_mut().zip(&m).zip(&x) {
                 *vi = mi + 0.01 * gi;

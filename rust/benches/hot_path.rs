@@ -12,11 +12,12 @@
 //! `util::bench`), the committed CI performance baseline: the
 //! `bench-gate` CI job reruns this bench and fails on a >25% normalized
 //! median regression for any case, or if the sparse local step loses
-//! its ≥5× edge over the dense one (`util::gate`).
+//! its ≥5× edge over the dense one, or if the active-set phase sync
+//! loses its ≥5× edge over the dense `O(d)` sync (`util::gate`).
 //!
 //! Run: `cargo bench --bench hot_path`
 
-use memsgd::compress::{self, SparseVec, Update};
+use memsgd::compress::{self, ActiveView, SparseVec, Update};
 use memsgd::data::synthetic;
 use memsgd::models::{GradBackend, LogisticModel};
 use memsgd::optim::{ErrorFeedbackStep, MemSgd, Sgd};
@@ -94,6 +95,10 @@ fn main() {
     // --- batched gradients (local-update schedule hot path) -------------------
     // One minibatch gradient per call; the per-sample cost should stay
     // ~flat in B (single accumulation pass, no scratch allocation).
+    // B = 1 is skipped here: `sample_grad_batch` with one index is the
+    // exact `sample_grad` call already measured as the calibration case
+    // ("grad only dense d=2000") — a second baseline row for the same
+    // measurement just doubled the gate surface.
     {
         let data = synthetic::epsilon_like(2_000, 2_000, 5);
         let mut model = LogisticModel::with_paper_lambda(&data);
@@ -101,7 +106,7 @@ fn main() {
         let mut grad = vec![0.0f32; d];
         let x = vec![0.01f32; d];
         let mut t = 0usize;
-        for bsz in [1usize, 8, 64] {
+        for bsz in [8usize, 64] {
             let mut idx = vec![0usize; bsz];
             b.run(&format!("grad batch B={bsz:<2}     dense d=2000"), || {
                 for slot in idx.iter_mut() {
@@ -175,13 +180,43 @@ fn main() {
                 sgrad.local_step(eta, &mut acc, &mut x_loc);
             });
         }
-        // The O(d) work the schedule amortizes H-fold: one compressed
-        // sync of the accumulated phase update.
-        let mut ef = ErrorFeedbackStep::new(d, compress::from_spec("top_k:10").unwrap());
+    }
+
+    // --- phase-sync cost: dense O(d) route vs active-set O(touched) ----------
+    // The communication event the schedule amortizes H-fold. The dense
+    // route pays the full-dimension `v = m + accum` pass plus the
+    // compressor scan every sync; the active route visits only
+    // `support(m) ∪ touched(accum)` — its cost must track the active-set
+    // size `a`, not d (the a ∈ {100, 1000, 10000} cases pin the scaling,
+    // and the a=100-vs-dense pair is the gate's second ≥5× invariant).
+    {
+        let d = 47_236usize;
+        let mk_acc = |a: usize| -> (Vec<f32>, Vec<u32>) {
+            let mut vals = vec![0.0f32; d];
+            let mut touched = Vec::with_capacity(a);
+            let stride = d / a;
+            for i in 0..a {
+                let j = i * stride;
+                vals[j] = ((i % 13) as f32 - 6.0) * 0.01 + 0.001; // never exactly zero
+                touched.push(j as u32);
+            }
+            (vals, touched)
+        };
         let mut rng = Prng::new(9);
-        b.run("phase sync top_10   d=47236", || {
-            ef.sync(&acc, &mut rng);
+        let (acc_dense, _) = mk_acc(100);
+        // `sync` takes the dense entry point, so this state stays on the
+        // historical O(d) route even though top-k could scan actively.
+        let mut ef = ErrorFeedbackStep::new(d, compress::from_spec("top_k:10").unwrap());
+        b.run(&gate::phase_sync_dense_case(), || {
+            ef.sync(&acc_dense, &mut rng);
         });
+        for a in [100usize, 1_000, 10_000] {
+            let (vals, touched) = mk_acc(a);
+            let mut ef = ErrorFeedbackStep::new(d, compress::from_spec("top_k:10").unwrap());
+            b.run(&gate::phase_sync_active_case(a), || {
+                ef.sync_active(ActiveView { vals: &vals, touched: &touched }, &mut rng);
+            });
+        }
     }
 
     // --- weighted averaging overhead ------------------------------------------
@@ -206,13 +241,21 @@ fn main() {
     }
 
     // Sparse-pipeline payoff, printed for EXPERIMENTS.md (the CI gate
-    // enforces the B=1 ratio via `memsgd bench-gate`):
+    // enforces the B=1 local-step and a=100 sync ratios via
+    // `memsgd bench-gate`):
     let p50 = |name: &str| b.results.iter().find(|m| m.name == name).map(|m| m.p50_ns);
     for bsz in [1usize, 8, 64] {
         let dense = p50(&gate::local_step_dense_case(bsz));
         let sparse = p50(&gate::local_step_sparse_case(bsz));
         if let (Some(dense), Some(sparse)) = (dense, sparse) {
             println!("sparse local-step speedup B={bsz} at d/nnz~470: {:.1}x", dense / sparse);
+        }
+    }
+    for a in [100usize, 1_000, 10_000] {
+        let dense = p50(&gate::phase_sync_dense_case());
+        let active = p50(&gate::phase_sync_active_case(a));
+        if let (Some(dense), Some(active)) = (dense, active) {
+            println!("active-set sync speedup a={a} at d=47236: {:.1}x", dense / active);
         }
     }
 

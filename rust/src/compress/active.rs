@@ -1,0 +1,289 @@
+//! Generation-stamped active-set bookkeeping — the backbone of the
+//! dimension-free sync path.
+//!
+//! On sparse workloads the error memory `m` of the Mem-SGD recursion
+//! stays concentrated on the coordinates the gradients actually touch
+//! (Alistarh et al., Wangni et al.), so the per-sync `v = m + η·g` build
+//! and compressor scan only need to visit `support(m) ∪ support(g)` —
+//! every other coordinate of `v` is an exact zero. The structures here
+//! make that visit list explicit while keeping **dense value storage**,
+//! so the floating-point expressions evaluated at touched coordinates
+//! are literally the dense path's expressions (bit-for-bit trajectories,
+//! pinned by `tests/sparse_pipeline.rs`):
+//!
+//! * [`ActiveIndex`] — a membership set over `0..d` with `O(1)` clears
+//!   (generation stamps) and an insertion-ordered index list. `O(d)`
+//!   memory, written only at touched slots — the same trade
+//!   [`super::sparse::SparseMerge`] makes.
+//! * [`ActiveView`] — a borrowed (dense values, touched indices) pair:
+//!   the read-side contract of [`super::Compressor::compress_active`].
+//!   Values are only valid at the listed indices; every unlisted index
+//!   represents an exact zero.
+
+/// Membership index over `0..d`: generation-stamped marks plus an
+/// insertion-ordered list of the indices inserted since the last clear.
+///
+/// [`ActiveIndex::clear`] is `O(1)` (a generation bump), so per-phase /
+/// per-step resets never pay `O(d)`. The stamp table is `O(d)` memory,
+/// grown only on first use or a dimension increase ([`ActiveIndex::grow`]).
+#[derive(Clone, Debug)]
+pub struct ActiveIndex {
+    /// `stamp[j] == gen` ⇔ `j` is currently a member.
+    stamp: Vec<u32>,
+    /// Current generation; always ≥ 1 once the table exists, so stale
+    /// zero-initialized stamps can never read as members.
+    gen: u32,
+    /// Members in insertion order (unique).
+    touched: Vec<u32>,
+}
+
+impl ActiveIndex {
+    pub fn new() -> ActiveIndex {
+        ActiveIndex { stamp: Vec::new(), gen: 1, touched: Vec::new() }
+    }
+
+    /// Ensure the stamp table covers dimension `d` (no-op when already
+    /// large enough). Must be called before inserting indices `< d`.
+    pub fn grow(&mut self, d: usize) {
+        if self.stamp.len() < d {
+            self.stamp.resize(d, 0);
+        }
+        if self.gen == 0 {
+            self.gen = 1;
+        }
+    }
+
+    /// Drop all members in `O(1)` (generation bump; the rare wrap-around
+    /// pays one `O(d)` stamp reset every `u32::MAX` clears).
+    pub fn clear(&mut self) {
+        self.touched.clear();
+        self.gen = self.gen.wrapping_add(1);
+        if self.gen == 0 {
+            self.stamp.fill(0);
+            self.gen = 1;
+        }
+    }
+
+    /// Insert `j`; returns `true` on first insertion since the last
+    /// clear, `false` if `j` was already a member.
+    #[inline]
+    pub fn insert(&mut self, j: u32) -> bool {
+        let slot = &mut self.stamp[j as usize];
+        if *slot == self.gen {
+            false
+        } else {
+            *slot = self.gen;
+            self.touched.push(j);
+            true
+        }
+    }
+
+    /// Whether `j` is currently a member.
+    #[inline]
+    pub fn contains(&self, j: u32) -> bool {
+        self.stamp[j as usize] == self.gen
+    }
+
+    /// Members in insertion order (unique indices).
+    #[inline]
+    pub fn touched(&self) -> &[u32] {
+        &self.touched
+    }
+
+    /// Number of members.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.touched.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.touched.is_empty()
+    }
+
+    /// Test-only: force the generation counter (exercises wrap-around).
+    #[cfg(test)]
+    fn force_gen(&mut self, gen: u32) {
+        self.gen = gen;
+    }
+}
+
+impl Default for ActiveIndex {
+    fn default() -> ActiveIndex {
+        ActiveIndex::new()
+    }
+}
+
+/// A borrowed active-set vector: dense value backing plus the list of
+/// live indices.
+///
+/// Contract: `vals` has the full dimension (`vals.len() == d`); entries
+/// are **only meaningful at the indices listed in `touched`** (anything
+/// else may be stale scratch), `touched` holds unique indices, and every
+/// index *not* listed represents an exact zero of the vector the view
+/// describes. [`super::Compressor::compress_active`] consumes this shape.
+#[derive(Clone, Copy)]
+pub struct ActiveView<'a> {
+    pub vals: &'a [f32],
+    pub touched: &'a [u32],
+}
+
+impl ActiveView<'_> {
+    /// Dimension of the viewed vector.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Densify (test helper; allocates). Unlisted indices are zeros.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.vals.len()];
+        for &j in self.touched {
+            out[j as usize] = self.vals[j as usize];
+        }
+        out
+    }
+
+    /// Walk every coordinate `0..dim` **in ascending index order** —
+    /// the dense scan's visit order — calling `visit(j, value)` with the
+    /// stored value at touched coordinates and an exact `0.0` elsewhere;
+    /// the visitor returns `false` to stop early. `sorted` is reusable
+    /// scratch for the sorted touched list (`O(touched·log touched)` +
+    /// `O(visited)`).
+    ///
+    /// This is the one shared implementation of the "replicate the dense
+    /// scan over conceptual zeros" fallback that the `compress_active`
+    /// impls need when they must emit (or tie-break through)
+    /// zero-magnitude coordinates exactly as the dense pass would.
+    pub fn for_each_dense<F: FnMut(u32, f32) -> bool>(&self, sorted: &mut Vec<u32>, mut visit: F) {
+        sorted.clear();
+        sorted.extend_from_slice(self.touched);
+        sorted.sort_unstable();
+        let mut p = 0usize;
+        for j in 0..self.vals.len() as u32 {
+            let val = if p < sorted.len() && sorted[p] == j {
+                p += 1;
+                self.vals[j as usize]
+            } else {
+                0.0
+            };
+            if !visit(j, val) {
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn membership_and_first_touch_order() {
+        let mut idx = ActiveIndex::new();
+        idx.grow(10);
+        assert!(idx.is_empty());
+        assert!(idx.insert(7));
+        assert!(idx.insert(2));
+        assert!(!idx.insert(7), "second insert reports existing membership");
+        assert!(idx.insert(9));
+        assert!(idx.contains(7) && idx.contains(2) && idx.contains(9));
+        assert!(!idx.contains(0));
+        assert_eq!(idx.touched(), &[7, 2, 9]);
+        assert_eq!(idx.len(), 3);
+    }
+
+    #[test]
+    fn clear_resets_membership_without_touching_all_slots() {
+        let mut idx = ActiveIndex::new();
+        idx.grow(8);
+        idx.insert(3);
+        idx.insert(5);
+        idx.clear();
+        assert!(idx.is_empty());
+        assert!(!idx.contains(3));
+        assert!(!idx.contains(5));
+        assert!(idx.insert(3));
+        assert_eq!(idx.touched(), &[3]);
+    }
+
+    #[test]
+    fn reuse_does_not_grow_allocations() {
+        let mut idx = ActiveIndex::new();
+        idx.grow(64);
+        for j in 0..32u32 {
+            idx.insert(j * 2);
+        }
+        idx.clear();
+        let cap = (idx.stamp.capacity(), idx.touched.capacity());
+        for round in 0..100u32 {
+            for j in 0..32u32 {
+                idx.insert((j * 2 + round) % 64);
+            }
+            idx.clear();
+            assert_eq!((idx.stamp.capacity(), idx.touched.capacity()), cap, "round {round}");
+        }
+    }
+
+    #[test]
+    fn grow_extends_dimension() {
+        let mut idx = ActiveIndex::new();
+        idx.grow(4);
+        idx.insert(3);
+        idx.grow(16);
+        idx.insert(15);
+        assert!(idx.contains(3) && idx.contains(15));
+        assert_eq!(idx.touched(), &[3, 15]);
+    }
+
+    #[test]
+    fn generation_wraparound_stays_correct() {
+        // A stale stamp from a pre-wrap generation must never read as a
+        // member after the wrap resets the table.
+        let mut idx = ActiveIndex::new();
+        idx.grow(4);
+        idx.insert(1); // stamp[1] = 1
+        idx.force_gen(u32::MAX);
+        idx.insert(2); // stamp[2] = u32::MAX
+        idx.clear(); // wraps: stamps reset, gen = 1 again
+        assert!(idx.is_empty());
+        assert!(!idx.contains(1), "pre-wrap stamp must not alias the new generation");
+        assert!(!idx.contains(2));
+        assert!(idx.insert(1));
+        assert_eq!(idx.touched(), &[1]);
+    }
+
+    #[test]
+    fn view_densifies_with_exact_zeros_elsewhere() {
+        let vals = vec![9.0f32, 1.5, 9.0, -2.5, 9.0]; // 9.0s are stale scratch
+        let touched = vec![3u32, 1];
+        let view = ActiveView { vals: &vals, touched: &touched };
+        assert_eq!(view.dim(), 5);
+        assert_eq!(view.to_dense(), vec![0.0, 1.5, 0.0, -2.5, 0.0]);
+    }
+
+    #[test]
+    fn dense_walk_visits_every_coordinate_in_order() {
+        let vals = vec![9.0f32, 1.5, 9.0, -2.5, 9.0];
+        let touched = vec![3u32, 1]; // deliberately unsorted
+        let view = ActiveView { vals: &vals, touched: &touched };
+        let mut sorted = Vec::new();
+        let mut seen = Vec::new();
+        view.for_each_dense(&mut sorted, |j, val| {
+            seen.push((j, val));
+            true
+        });
+        assert_eq!(
+            seen,
+            vec![(0, 0.0), (1, 1.5), (2, 0.0), (3, -2.5), (4, 0.0)],
+            "stale entries read as exact zeros, touched ones as stored"
+        );
+        // Early stop.
+        let mut count = 0;
+        view.for_each_dense(&mut sorted, |_, _| {
+            count += 1;
+            count < 2
+        });
+        assert_eq!(count, 2);
+    }
+}

@@ -47,17 +47,7 @@ impl Compressor for BlockTopK {
     fn compress(&mut self, x: &[f32], _rng: &mut Prng, out: &mut Update) -> u64 {
         let d = x.len();
         let k = self.k.min(d.max(1));
-        let s = match out {
-            Update::Sparse(s) => s,
-            other => {
-                *other = Update::new_sparse(d);
-                match other {
-                    Update::Sparse(s) => s,
-                    _ => unreachable!(),
-                }
-            }
-        };
-        s.clear(d);
+        let s = out.sparse_mut(d);
         if d == 0 {
             return 0;
         }

@@ -25,6 +25,7 @@
 //! [`Update`] and reporting the exact number of bits the update costs on
 //! the wire (the currency of Figures 3 and the communication claims).
 
+pub mod active;
 pub mod block_top_k;
 pub mod elias;
 pub mod qsgd;
@@ -37,6 +38,7 @@ pub mod top_k;
 
 use anyhow::{bail, Result};
 
+pub use active::{ActiveIndex, ActiveView};
 pub use block_top_k::BlockTopK;
 pub use qsgd::Qsgd;
 pub use rand_k::RandK;
@@ -101,6 +103,23 @@ impl Update {
             Update::Dense(g) => g.iter().filter(|&&v| v != 0.0).count(),
         }
     }
+
+    /// Coerce into the sparse representation (replacing a dense payload
+    /// if needed) and reset it for dimension `dim` — the shared entry of
+    /// every sparse compressor's emit path. When already sparse, the
+    /// existing allocation is reused (hot loops stay allocation-free).
+    pub fn sparse_mut(&mut self, dim: usize) -> &mut SparseVec {
+        if !matches!(self, Update::Sparse(_)) {
+            *self = Update::new_sparse(dim);
+        }
+        match self {
+            Update::Sparse(s) => {
+                s.clear(dim);
+                s
+            }
+            _ => unreachable!(),
+        }
+    }
 }
 
 /// A gradient compression operator.
@@ -120,6 +139,38 @@ pub trait Compressor: Send {
 
     /// Compress `x` into `out`, returning the wire cost in bits.
     fn compress(&mut self, x: &[f32], rng: &mut Prng, out: &mut Update) -> u64;
+
+    /// Whether [`Compressor::compress_active`] is implemented — i.e. the
+    /// operator's scan can run over an active-set vector in `O(touched)`
+    /// instead of `O(d)`. Consulted by the sparse entry points of
+    /// [`crate::optim::ErrorFeedbackStep`] and [`crate::optim::MemSgd`]
+    /// on each step to pick the dimension-free route; it should be an
+    /// inherent property of the operator (constant over its lifetime),
+    /// not a function of mutable state.
+    fn supports_active_scan(&self) -> bool {
+        false
+    }
+
+    /// `O(touched)` compression of an active-set vector.
+    ///
+    /// Contract: must produce **exactly** the update (same coordinate
+    /// set, same values, same wire bits) that [`Compressor::compress`]
+    /// would produce on the dense vector `v` represents — `vals[j]` at
+    /// every `j` in `touched`, an exact zero everywhere else. Selection
+    /// ties are resolved toward the lowest index on both paths
+    /// (`util::select`), which is what makes the two scans agree.
+    ///
+    /// Returns `None` iff the operator has no active scan
+    /// ([`Compressor::supports_active_scan`] is `false`); callers that
+    /// checked the capability first may `expect` the `Some`.
+    fn compress_active(
+        &mut self,
+        _v: ActiveView<'_>,
+        _rng: &mut Prng,
+        _out: &mut Update,
+    ) -> Option<u64> {
+        None
+    }
 }
 
 /// The identity "compressor" — vanilla SGD's dense transmission.

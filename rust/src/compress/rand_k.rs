@@ -35,17 +35,7 @@ impl Compressor for RandK {
     fn compress(&mut self, x: &[f32], rng: &mut Prng, out: &mut Update) -> u64 {
         let d = x.len();
         let k = self.k.min(d);
-        let sp = match out {
-            Update::Sparse(s) => s,
-            other => {
-                *other = Update::new_sparse(d);
-                match other {
-                    Update::Sparse(s) => s,
-                    _ => unreachable!(),
-                }
-            }
-        };
-        sp.clear(d);
+        let sp = out.sparse_mut(d);
         rng.sample_distinct(d, k, &mut self.scratch);
         for &i in &self.scratch {
             sp.push(i, x[i as usize]);

@@ -35,17 +35,7 @@ impl Compressor for RandomP {
 
     fn compress(&mut self, x: &[f32], rng: &mut Prng, out: &mut Update) -> u64 {
         let d = x.len();
-        let sp = match out {
-            Update::Sparse(s) => s,
-            other => {
-                *other = Update::new_sparse(d);
-                match other {
-                    Update::Sparse(s) => s,
-                    _ => unreachable!(),
-                }
-            }
-        };
-        sp.clear(d);
+        let sp = out.sparse_mut(d);
         if rng.bernoulli(self.p) {
             let i = rng.below(d) as u32;
             sp.push(i, x[i as usize]);

@@ -14,6 +14,13 @@
 //! operation order of the dense minibatch accumulation. That invariant
 //! is what lets the sparse pipeline reproduce the dense trajectories bit
 //! for bit (`tests/sparse_pipeline.rs`).
+//!
+//! The generation-stamped membership structures of the dimension-free
+//! sync path ([`super::active::ActiveIndex`] /
+//! [`super::active::ActiveView`]) live in the sibling
+//! [`super::active`] module; they play the same role for the error
+//! memory and the phase accumulator that [`SparseMerge`] plays for
+//! minibatch gradients.
 
 /// A sparse vector: parallel `idx`/`val` arrays over dimension `dim`.
 /// Indices are unique but not necessarily sorted (top-k emits them in

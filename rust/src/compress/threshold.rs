@@ -7,19 +7,21 @@
 //! below the max removes at most `(1 − 1/d)` of the energy — Lemma A.1's
 //! top-1 argument), and typically much more.
 
-use super::{Compressor, Update};
+use super::{ActiveView, Compressor, Update};
 use crate::util::prng::Prng;
 
 /// Keep coordinates with `|x_i| ≥ tau·max|x|`, `tau ∈ (0, 1]`.
 #[derive(Clone, Debug)]
 pub struct Threshold {
     pub tau: f32,
+    /// Active-scan scratch (the pathological cut-underflow branch only).
+    sorted: Vec<u32>,
 }
 
 impl Threshold {
     pub fn new(tau: f32) -> Self {
         assert!(tau > 0.0 && tau <= 1.0, "tau must be in (0,1], got {tau}");
-        Threshold { tau }
+        Threshold { tau, sorted: Vec::new() }
     }
 }
 
@@ -36,17 +38,7 @@ impl Compressor for Threshold {
 
     fn compress(&mut self, x: &[f32], _rng: &mut Prng, out: &mut Update) -> u64 {
         let d = x.len();
-        let sp = match out {
-            Update::Sparse(s) => s,
-            other => {
-                *other = Update::new_sparse(d);
-                match other {
-                    Update::Sparse(s) => s,
-                    _ => unreachable!(),
-                }
-            }
-        };
-        sp.clear(d);
+        let sp = out.sparse_mut(d);
         let max = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
         if max == 0.0 {
             return sp.encoded_bits();
@@ -58,6 +50,51 @@ impl Compressor for Threshold {
             }
         }
         sp.encoded_bits()
+    }
+
+    fn supports_active_scan(&self) -> bool {
+        true
+    }
+
+    /// `O(touched)` threshold scan: the max (hence the cut) lives on the
+    /// touched set (untouched coordinates are exact zeros and never set
+    /// the max beyond the fold's 0.0 floor), and with `cut > 0` every
+    /// kept coordinate is nonzero, i.e. touched — so scanning the
+    /// touched set alone reproduces the dense emission exactly.
+    fn compress_active(
+        &mut self,
+        v: ActiveView<'_>,
+        _rng: &mut Prng,
+        out: &mut Update,
+    ) -> Option<u64> {
+        let d = v.dim();
+        let sp = out.sparse_mut(d);
+        let mut max = 0.0f32;
+        for &j in v.touched {
+            max = max.max(v.vals[j as usize].abs());
+        }
+        if max == 0.0 {
+            return Some(sp.encoded_bits());
+        }
+        let cut = self.tau * max;
+        if cut > 0.0 {
+            for &j in v.touched {
+                let val = v.vals[j as usize];
+                if val.abs() >= cut {
+                    sp.push(j, val);
+                }
+            }
+            return Some(sp.encoded_bits());
+        }
+        // τ·max underflowed to zero (subnormal max): `|v_j| ≥ 0` holds at
+        // every coordinate, so the dense scan keeps all d of them.
+        // Replicate exactly — O(d), unreachable outside adversarial
+        // subnormal inputs.
+        v.for_each_dense(&mut self.sorted, |j, val| {
+            sp.push(j, val);
+            true
+        });
+        Some(sp.encoded_bits())
     }
 }
 
@@ -130,5 +167,55 @@ mod tests {
     #[should_panic(expected = "tau must be in (0,1]")]
     fn rejects_bad_tau() {
         Threshold::new(0.0);
+    }
+
+    fn assert_active_matches_dense(x: &[f32], touched: &[u32], tau: f32, what: &str) {
+        use crate::compress::ActiveView;
+        let d = x.len();
+        let mut rng = crate::util::prng::Prng::new(0);
+        let mut dense_c = Threshold::new(tau);
+        let mut active_c = Threshold::new(tau);
+        let mut dense_out = Update::new_sparse(d);
+        let mut active_out = Update::new_sparse(d);
+        let bits_dense = dense_c.compress(x, &mut rng, &mut dense_out);
+        let bits_active = active_c
+            .compress_active(ActiveView { vals: x, touched }, &mut rng, &mut active_out)
+            .expect("threshold supports the active scan");
+        assert_eq!(bits_dense, bits_active, "{what}: bits");
+        assert_eq!(dense_out.nnz(), active_out.nnz(), "{what}: nnz");
+        assert_eq!(dense_out.to_dense(d), active_out.to_dense(d), "{what}: values");
+    }
+
+    #[test]
+    fn active_scan_matches_dense_scan() {
+        let mut rng = crate::util::prng::Prng::new(8);
+        for trial in 0..200 {
+            let d = 4 + rng.below(120);
+            let nnz = rng.below(d.min(24));
+            let mut x = vec![0.0f32; d];
+            let mut touched: Vec<u32> = Vec::new();
+            for _ in 0..nnz {
+                let j = rng.below(d);
+                if x[j] == 0.0 {
+                    x[j] = rng.normal_f32();
+                    touched.push(j as u32);
+                }
+            }
+            // A touched-but-zero coordinate must not disturb the cut.
+            if let Some(j) = (0..d).find(|&j| x[j] == 0.0) {
+                touched.push(j as u32);
+            }
+            rng.shuffle(&mut touched);
+            for tau in [0.1f32, 0.5, 0.9, 1.0] {
+                assert_active_matches_dense(&x, &touched, tau, &format!("trial={trial} tau={tau}"));
+            }
+        }
+    }
+
+    #[test]
+    fn active_scan_handles_all_zero_views() {
+        let z = vec![0.0f32; 9];
+        assert_active_matches_dense(&z, &[], 0.5, "empty view");
+        assert_active_matches_dense(&z, &[3, 7], 0.5, "touched-but-zero view");
     }
 }

@@ -2,8 +2,13 @@
 //! largest magnitude. Deterministic, and the strongest k-contraction of
 //! the family: `‖x − top_k(x)‖² ≤ (1 − k/d)‖x‖²` holds *pointwise*, not
 //! just in expectation (Lemma A.1 via `‖x − top_k(x)‖ ≤ ‖x − rand_k(x)‖`).
+//!
+//! Selection ties break toward the lowest index (the `util::select`
+//! contract), which makes the dense scan and the active-set scan
+//! ([`Compressor::compress_active`]) select the **same** coordinate set
+//! — the bit-identity hinge of the dimension-free sync path.
 
-use super::{Compressor, Update};
+use super::{ActiveView, Compressor, Update};
 use crate::util::prng::Prng;
 use crate::util::select;
 
@@ -14,7 +19,11 @@ pub struct TopK {
     /// Reusable index scratch — the hot loop never allocates.
     scratch: Vec<u32>,
     /// Reusable selection heap (§Perf iteration 6).
-    heap: Vec<(u32, u32)>,
+    heap: Vec<u64>,
+    /// Active-scan scratch: the nonzero subset of the touched set.
+    nz: Vec<u32>,
+    /// Active-scan scratch: sorted touched indices for zero-padding.
+    sorted: Vec<u32>,
 }
 
 impl TopK {
@@ -24,6 +33,8 @@ impl TopK {
             k,
             scratch: Vec::new(),
             heap: Vec::new(),
+            nz: Vec::new(),
+            sorted: Vec::new(),
         }
     }
 }
@@ -40,22 +51,66 @@ impl Compressor for TopK {
     fn compress(&mut self, x: &[f32], _rng: &mut Prng, out: &mut Update) -> u64 {
         let d = x.len();
         let k = self.k.min(d);
-        let sp = match out {
-            Update::Sparse(s) => s,
-            other => {
-                *other = Update::new_sparse(d);
-                match other {
-                    Update::Sparse(s) => s,
-                    _ => unreachable!(),
-                }
-            }
-        };
-        sp.clear(d);
+        let sp = out.sparse_mut(d);
         select::top_k_indices_with_heap(x, k, &mut self.heap, &mut self.scratch);
         for &i in &self.scratch {
             sp.push(i, x[i as usize]);
         }
         sp.encoded_bits()
+    }
+
+    fn supports_active_scan(&self) -> bool {
+        true
+    }
+
+    /// `O(touched)` top-k: since every untouched coordinate is an exact
+    /// zero, the selection runs over the touched set only. When the
+    /// touched set holds fewer than `k` nonzero coordinates, the dense
+    /// scan would fill the remaining slots with zero-magnitude
+    /// coordinates — lowest indices first, per the tie rule — so this
+    /// path pads with exactly those coordinates (same index set, same
+    /// `k·(32 + ⌈log₂ d⌉)` wire bits).
+    fn compress_active(
+        &mut self,
+        v: ActiveView<'_>,
+        _rng: &mut Prng,
+        out: &mut Update,
+    ) -> Option<u64> {
+        let d = v.dim();
+        let k = self.k.min(d);
+        let sp = out.sparse_mut(d);
+        self.nz.clear();
+        for &j in v.touched {
+            if v.vals[j as usize] != 0.0 {
+                self.nz.push(j);
+            }
+        }
+        if self.nz.len() >= k {
+            // Every nonzero of the represented dense vector is in `nz`,
+            // so top-k over `nz` equals the dense top-k (zeros can never
+            // enter a selection that k nonzeros already fill).
+            select::top_k_in_subset(v.vals, &self.nz, k, &mut self.heap, &mut self.scratch);
+            for &i in &self.scratch {
+                sp.push(i, v.vals[i as usize]);
+            }
+        } else {
+            // All nonzeros are selected; pad with the lowest-index
+            // zero-magnitude coordinates — touched-with-zero entries keep
+            // their stored (±0.0) value, untouched entries are exact
+            // zeros — replicating the dense tie-broken fill bit for bit.
+            for &i in &self.nz {
+                sp.push(i, v.vals[i as usize]);
+            }
+            let mut need = k - self.nz.len();
+            v.for_each_dense(&mut self.sorted, |j, val| {
+                if val == 0.0 {
+                    sp.push(j, val);
+                    need -= 1;
+                }
+                need > 0
+            });
+        }
+        Some(sp.encoded_bits())
     }
 }
 
@@ -85,6 +140,13 @@ mod tests {
         let x = vec![1.0f32, -2.0, 3.0];
         assert_eq!(compress_dense(&x, 3), x);
         assert_eq!(compress_dense(&x, 10), x);
+    }
+
+    #[test]
+    fn ties_break_to_lowest_indices() {
+        // The documented selection rule, pinned at the operator level.
+        let x = vec![2.0f32, -2.0, 2.0, 2.0];
+        assert_eq!(compress_dense(&x, 2), vec![2.0, -2.0, 0.0, 0.0]);
     }
 
     #[test]
@@ -134,5 +196,98 @@ mod tests {
             }
             _ => unreachable!(),
         }
+    }
+
+    /// Build an [`ActiveView`] over `x`'s nonzeros plus the listed
+    /// touched-but-zero coordinates, shuffled (the active path must not
+    /// depend on visit order).
+    fn view_support(x: &[f32], extra_zero: &[u32], rng: &mut Prng) -> Vec<u32> {
+        let mut touched: Vec<u32> = (0..x.len() as u32)
+            .filter(|&j| x[j as usize] != 0.0)
+            .collect();
+        touched.extend_from_slice(extra_zero);
+        rng.shuffle(&mut touched);
+        touched
+    }
+
+    fn assert_active_matches_dense(x: &[f32], touched: &[u32], k: usize, what: &str) {
+        let d = x.len();
+        let mut rng = Prng::new(0);
+        let mut dense_c = TopK::new(k);
+        let mut active_c = TopK::new(k);
+        let mut dense_out = Update::new_sparse(d);
+        let mut active_out = Update::new_sparse(d);
+        let bits_dense = dense_c.compress(x, &mut rng, &mut dense_out);
+        let bits_active = active_c
+            .compress_active(ActiveView { vals: x, touched }, &mut rng, &mut active_out)
+            .expect("top-k supports the active scan");
+        assert_eq!(bits_dense, bits_active, "{what}: bits");
+        assert_eq!(dense_out.nnz(), active_out.nnz(), "{what}: nnz");
+        assert_eq!(dense_out.to_dense(d), active_out.to_dense(d), "{what}: values");
+        // The padded index *set* must also match (zero-valued entries are
+        // invisible in to_dense but still cost wire bits / server slots).
+        let idx_set = |u: &Update| -> Vec<u32> {
+            match u {
+                Update::Sparse(s) => {
+                    let mut i = s.idx.clone();
+                    i.sort_unstable();
+                    i
+                }
+                _ => unreachable!(),
+            }
+        };
+        assert_eq!(idx_set(&dense_out), idx_set(&active_out), "{what}: index set");
+    }
+
+    #[test]
+    fn active_scan_matches_dense_scan() {
+        let mut rng = Prng::new(7);
+        for trial in 0..200 {
+            let d = 4 + rng.below(120);
+            let nnz = rng.below(d.min(20));
+            let mut x = vec![0.0f32; d];
+            for _ in 0..nnz {
+                let j = rng.below(d);
+                // Quantized values force magnitude ties.
+                x[j] = (1 + rng.below(3)) as f32 * if rng.below(2) == 0 { 0.5 } else { -0.5 };
+            }
+            let extra: Vec<u32> = (0..rng.below(3))
+                .map(|_| rng.below(d) as u32)
+                .filter(|&j| x[j as usize] == 0.0)
+                .collect();
+            let mut dedup = extra.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            let touched = view_support(&x, &dedup, &mut rng);
+            for k in [1usize, 2, 1 + rng.below(d)] {
+                assert_active_matches_dense(&x, &touched, k, &format!("trial={trial} k={k}"));
+            }
+        }
+    }
+
+    #[test]
+    fn active_scan_pads_like_the_dense_scan_when_nonzeros_run_out() {
+        // 2 nonzeros, k = 5: the dense scan fills with the lowest-index
+        // zeros; the active scan must produce the same index set and the
+        // same bit cost.
+        let mut x = vec![0.0f32; 12];
+        x[7] = 3.0;
+        x[4] = -1.0;
+        let mut rng = Prng::new(9);
+        let touched = view_support(&x, &[9], &mut rng); // 9 touched-but-zero
+        assert_active_matches_dense(&x, &touched, 5, "padded");
+        // All-zero vector: k pads alone.
+        let z = vec![0.0f32; 6];
+        assert_active_matches_dense(&z, &[2, 5], 3, "all-zero");
+        assert_active_matches_dense(&z, &[], 3, "empty view");
+    }
+
+    #[test]
+    fn active_scan_handles_k_saturation() {
+        let x = vec![1.0f32, 0.0, -2.0, 0.5];
+        let mut rng = Prng::new(11);
+        let touched = view_support(&x, &[], &mut rng);
+        assert_active_matches_dense(&x, &touched, 4, "k = d");
+        assert_active_matches_dense(&x, &touched, 9, "k > d");
     }
 }

@@ -67,7 +67,7 @@ impl Checkpoint {
             bits_sent: opt.bits_sent,
             batch: 1,
             x: opt.x.clone(),
-            m: opt.m.clone(),
+            m: opt.memory().to_vec(),
             rng_state: rng.state(),
             avg: avg.map(|a| {
                 let (shift, acc, sum_w, t) = a.state();
@@ -89,7 +89,7 @@ impl Checkpoint {
     pub fn restore(&self) -> Result<(MemSgd, Prng, Option<WeightedAverage>)> {
         let comp = compress::from_spec(&self.compressor_spec)?;
         let mut opt = MemSgd::new(self.x.clone(), comp);
-        opt.m.copy_from_slice(&self.m);
+        opt.set_memory(&self.m);
         opt.t = self.t;
         opt.bits_sent = self.bits_sent;
         let rng = Prng::from_state(self.rng_state);
@@ -310,7 +310,7 @@ mod tests {
         }
 
         assert_eq!(resumed.x, full.x);
-        assert_eq!(resumed.m, full.m);
+        assert_eq!(resumed.memory(), full.memory());
         assert_eq!(resumed.t, full.t);
         assert_eq!(resumed.bits_sent, full.bits_sent);
         assert_eq!(resumed_rng.state(), full_rng.state());
@@ -373,7 +373,7 @@ mod tests {
         let (mut restored, mut r, _) = ck.restore().unwrap();
         // A step after restore behaves like a step on the original.
         let mut orig = MemSgd::new(ck.x.clone(), compress::from_spec("top_k:2").unwrap());
-        orig.m.copy_from_slice(&ck.m);
+        orig.set_memory(&ck.m);
         orig.t = ck.t;
         orig.bits_sent = ck.bits_sent;
         let mut orig_rng = Prng::from_state(ck.rng_state);

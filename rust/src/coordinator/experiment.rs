@@ -89,7 +89,7 @@ use anyhow::{bail, Result};
 
 use super::config::{LocalUpdate, MethodSpec};
 use super::parallel::SharedParams;
-use crate::compress::{SparseVec, Update};
+use crate::compress::{ActiveIndex, ActiveView, SparseVec, Update};
 use crate::metrics::{LossPoint, RunRecord};
 use crate::models::GradBackend;
 use crate::optim::{ErrorFeedbackStep, Schedule, WeightedAverage};
@@ -406,27 +406,61 @@ struct WorkerScratch {
     sgrad: SparseVec,
     acc: Vec<f32>,
     idx: Vec<usize>,
+    /// Active-route scratch (allocated on the first active phase): the
+    /// stepsize-scaled accumulator's dense value backing, the saved
+    /// pre-phase values of the in-place-modified iterate coordinates,
+    /// and the generation-stamped membership set shared by both.
+    acc_vals: Vec<f32>,
+    x_orig: Vec<f32>,
+    phase_idx: ActiveIndex,
 }
 
 impl WorkerScratch {
     fn new(d: usize, n: usize, local: LocalUpdate) -> WorkerScratch {
-        // The H = 1 fast path never touches the local iterate or the
-        // accumulator — don't allocate them for the default schedule.
-        let phase_d = if local.sync_every.max(1) > 1 { d } else { 0 };
+        // Per-route buffers are sized lazily on each route's first phase
+        // (`ensure_dense_phase` / `ensure_active`): the H = 1 fast path
+        // touches neither, and an active-route run never pays for the
+        // dense-sync route's local iterate and accumulator (2×O(d)).
         WorkerScratch {
             local,
             n,
-            x_loc: vec![0.0; phase_d],
+            x_loc: Vec::new(),
             grad: vec![0.0; d],
             sgrad: SparseVec::new(d),
-            acc: vec![0.0; phase_d],
+            acc: Vec::new(),
             idx: Vec::with_capacity(local.batch.max(1)),
+            acc_vals: Vec::new(),
+            x_orig: Vec::new(),
+            phase_idx: ActiveIndex::new(),
         }
     }
 
+    /// One-time sizing of the dense-sync-route buffers (no-op afterwards).
+    fn ensure_dense_phase(&mut self, d: usize) {
+        if self.x_loc.len() < d {
+            self.x_loc.resize(d, 0.0);
+            self.acc.resize(d, 0.0);
+        }
+    }
+
+    /// One-time sizing of the active-route buffers (no-op afterwards).
+    fn ensure_active(&mut self, d: usize) {
+        if self.acc_vals.len() < d {
+            self.acc_vals.resize(d, 0.0);
+            self.x_orig.resize(d, 0.0);
+        }
+        self.phase_idx.grow(d);
+    }
+
     /// One worker's local phase: `H = local.sync_every` error-compensated
-    /// minibatch steps starting from `x_start`, then one compressed sync
-    /// through `ef`.
+    /// minibatch steps starting from the global iterate `x`, then one
+    /// compressed sync through `ef`.
+    ///
+    /// `x` is borrowed mutably but is **bit-for-bit unchanged on
+    /// return**: the dense routes work on an internal copy, and the
+    /// active route applies its local steps to `x` in place and restores
+    /// every touched coordinate before syncing back — the caller then
+    /// applies `ef.update()` exactly as before.
     ///
     /// Each local step applies the *raw* update `η·g` to the worker-local
     /// iterate and adds it to the accumulator; only the sync's compressed
@@ -434,30 +468,41 @@ impl WorkerScratch {
     /// worker-local between syncs. `eta(h)` maps the local step index to
     /// its stepsize. With `B = H = 1` this is bit-for-bit the classic
     /// per-sample `ef.step(g, η)` (golden-trajectory suite). Returns the
-    /// sync's wire bits; the caller applies `ef.update()` to its global
-    /// iterate.
+    /// sync's wire bits.
     ///
     /// ## Sparse pipeline
     ///
     /// When the backend advertises
     /// [`GradBackend::supports_sparse_grad`] (CSR models without L2, the
-    /// RCV1 regime), the phase runs sparsity-aware: each local step emits
-    /// the minibatch gradient as a [`SparseVec`] and coordinate-merges
-    /// `η·g` into the reusable accumulator via the fused
-    /// [`SparseVec::local_step`] kernel — `O(nnz)` per local step, with
-    /// the dense `v = m + accum` pass and the compressor scan deferred to
-    /// the one [`ErrorFeedbackStep::sync`] per phase. Under `sync_every:
-    /// H` the per-step `O(d)` work therefore drops `H`-fold, matching the
-    /// bit accounting. Both branches evaluate the same floating-point
-    /// expressions in the same order on every touched coordinate, so
-    /// dense and sparse trajectories are **bit-identical** on every
-    /// topology (`tests/sparse_pipeline.rs` pins all combinations).
+    /// RCV1 regime), the phase runs sparsity-aware — O(nnz) local steps —
+    /// in one of two flavors:
+    ///
+    /// * **Active route** (`ef.wants_active()`: memory-carrying method ×
+    ///   active-scan compressor, i.e. top-k / threshold): the entire
+    ///   phase is `O(touched)`. Local steps mutate `x` in place at
+    ///   gradient coordinates only (first touches save the original
+    ///   value), the stepsize-scaled accumulator lives in a
+    ///   generation-stamped active set (`O(1)` reset), and the sync runs
+    ///   [`ErrorFeedbackStep::sync_active`] — the `v = m + accum` build,
+    ///   the compressor scan, and the residual update all visit
+    ///   `support(m) ∪ touched` instead of `d` coordinates. No per-phase
+    ///   `O(d)` pass remains.
+    /// * **Dense-sync route** (other compressors): each local step emits
+    ///   the minibatch gradient as a [`SparseVec`] and coordinate-merges
+    ///   `η·g` via the fused [`SparseVec::local_step`] kernel, with the
+    ///   dense `v = m + accum` pass and compressor scan paid once per
+    ///   sync — unchanged from before the active path existed.
+    ///
+    /// All routes evaluate the same floating-point expressions in the
+    /// same order on every touched coordinate, so trajectories are
+    /// **bit-identical** on every topology (`tests/sparse_pipeline.rs`
+    /// pins all combinations).
     fn phase<B: GradBackend>(
         &mut self,
         backend: &mut B,
         ef: &mut ErrorFeedbackStep,
         rng: &mut Prng,
-        x_start: &[f32],
+        x: &mut [f32],
         eta: impl Fn(usize) -> f32,
     ) -> u64 {
         let h_steps = self.local.sync_every.max(1);
@@ -475,13 +520,53 @@ impl WorkerScratch {
                 self.idx.push(rng.below(self.n));
             }
             if sparse {
-                backend.sample_grad_batch_sparse(x_start, &self.idx, &mut self.sgrad);
+                backend.sample_grad_batch_sparse(x, &self.idx, &mut self.sgrad);
                 return ef.step_sparse(&self.sgrad, eta(0), rng);
             }
-            backend.sample_grad_batch(x_start, &self.idx, &mut self.grad);
+            backend.sample_grad_batch(x, &self.idx, &mut self.grad);
             return ef.step(&self.grad, eta(0), rng);
         }
-        self.x_loc.copy_from_slice(x_start);
+        if sparse && ef.wants_active() {
+            // Active route: H local steps in place on `x`, O(touched)
+            // total. Per touched coordinate the FP op sequence is the
+            // dense loop's (`step = η·g; acc += step; x -= step`, with
+            // the first accumulation evaluating `0.0 + step` exactly as
+            // the zero-initialized dense accumulator does), and the
+            // restore puts back the saved original bits.
+            let d = x.len();
+            self.ensure_active(d);
+            self.phase_idx.clear();
+            for h in 0..h_steps {
+                self.idx.clear();
+                for _ in 0..batch {
+                    self.idx.push(rng.below(self.n));
+                }
+                let e = eta(h);
+                backend.sample_grad_batch_sparse(x, &self.idx, &mut self.sgrad);
+                for (&j, &g) in self.sgrad.idx.iter().zip(&self.sgrad.val) {
+                    let jj = j as usize;
+                    let step = e * g;
+                    if self.phase_idx.insert(j) {
+                        self.x_orig[jj] = x[jj];
+                        self.acc_vals[jj] = 0.0 + step;
+                    } else {
+                        self.acc_vals[jj] += step;
+                    }
+                    x[jj] -= step;
+                }
+            }
+            let bits = ef.sync_active(
+                ActiveView { vals: &self.acc_vals, touched: self.phase_idx.touched() },
+                rng,
+            );
+            for &j in self.phase_idx.touched() {
+                let jj = j as usize;
+                x[jj] = self.x_orig[jj];
+            }
+            return bits;
+        }
+        self.ensure_dense_phase(x.len());
+        self.x_loc.copy_from_slice(x);
         self.acc.iter_mut().for_each(|a| *a = 0.0);
         for h in 0..h_steps {
             self.idx.clear();
@@ -554,7 +639,7 @@ pub(crate) fn sequential<B: GradBackend>(backend: &mut B, s: &Settings) -> Resul
     let started = Instant::now();
     push_eval(&mut record, backend, &x, &avg, &mut eval_x, 0, 0);
     for si in 0..syncs {
-        ws.phase(backend, &mut ef, &mut rng, &x, |hh| s.schedule.eta(si * h + hh) as f32);
+        ws.phase(backend, &mut ef, &mut rng, &mut x, |hh| s.schedule.eta(si * h + hh) as f32);
         ef.update().sub_from(&mut x);
         if let Some(a) = avg.as_mut() {
             a.update(&x);
@@ -607,7 +692,7 @@ pub(crate) fn shared_memory<B: GradBackend + Clone + Send>(
                     // Inconsistent read of the shared iterate (line 5's
                     // ∇f(x)), then H local error-compensated steps on it.
                     shared.snapshot_into(&mut xbuf);
-                    ws.phase(&mut wb, &mut ef, &mut rng, &xbuf, |hh| {
+                    ws.phase(&mut wb, &mut ef, &mut rng, &mut xbuf, |hh| {
                         schedule.eta(si * h_int + hh) as f32
                     });
                     // shared x ← x − u (lossy, lock-free).
@@ -711,7 +796,7 @@ pub(crate) fn param_server_sync<B: GradBackend>(
         for worker in workers.iter_mut() {
             // H local error-compensated steps from the *current
             // broadcast* x, then one compressed upload per node.
-            ws.phase(backend, &mut worker.ef, &mut worker.rng, &x, |_| etaf);
+            ws.phase(backend, &mut worker.ef, &mut worker.rng, &mut x, |_| etaf);
             // Server receives the upload and folds it into the aggregate.
             match worker.ef.update() {
                 Update::Sparse(sv) => {
@@ -862,7 +947,7 @@ pub(crate) fn param_server_async<B: GradBackend>(
         // PS). η is held constant within the phase, indexed by the
         // server update counter as before.
         let eta = s.schedule.eta(version as usize) as f32;
-        let bits = ws.phase(backend, &mut w.ef, &mut w.rng, &x, |_| eta);
+        let bits = ws.phase(backend, &mut w.ef, &mut w.rng, &mut x, |_| eta);
 
         // Upload queues behind the shared server link. The link is busy
         // for the serialization time only; propagation latency delays the

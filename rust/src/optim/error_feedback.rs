@@ -12,7 +12,7 @@
 //! Two entry points:
 //!
 //! * [`apply`] — the raw recursion over caller-owned buffers. Used by
-//!   [`crate::optim::MemSgd`] (which owns `x`/`m` publicly for
+//!   [`crate::optim::MemSgd`] (which owns `x` publicly for
 //!   checkpointing) and by the per-worker [`ErrorFeedbackStep`].
 //! * [`ErrorFeedbackStep`] — a self-contained per-worker state bundle
 //!   (memory + scratch + compressor + reusable update + bit counter)
@@ -35,8 +35,26 @@
 //! staying worker-local throughout. `sync(accum)` is `step(accum, 1.0)`;
 //! since multiplying by 1.0 is exact, `H = 1` reproduces the per-sample
 //! recursion bit for bit (pinned by `tests/local_update_equivalence.rs`).
+//!
+//! ## The active-set (dimension-free) path
+//!
+//! On sparse workloads the residual `m` stays concentrated on the
+//! coordinates the gradients touch, so the whole recursion only ever
+//! needs to visit `support(m) ∪ support(g)`. When the compressor
+//! advertises [`crate::compress::Compressor::supports_active_scan`]
+//! (top-k, threshold), the sparse entry points
+//! ([`ErrorFeedbackStep::step_sparse`], [`ErrorFeedbackStep::sync_active`],
+//! [`crate::optim::MemSgd::step_sparse`]) run over exactly that set:
+//! the memory keeps **dense value storage** (zero outside its tracked
+//! support) plus a generation-stamped [`ActiveIndex`], `v = m + η·g` is
+//! built only at union coordinates with the dense path's literal FP
+//! expressions, the compressor scans the union, and the support is
+//! re-derived as the exact nonzero set of the new residual — `O(touched)`
+//! per sync, **bit-identical** to the dense route
+//! (`tests/sparse_pipeline.rs`). Non-active compressors and dense
+//! gradients keep the historical dense route untouched.
 
-use crate::compress::{Compressor, SparseVec, Update};
+use crate::compress::{ActiveIndex, ActiveView, Compressor, SparseVec, Update};
 use crate::util::prng::Prng;
 
 /// One error-feedback step over caller-owned buffers.
@@ -76,9 +94,9 @@ pub fn apply(
 /// pass evaluates there, while untouched coordinates carry `m[j]`
 /// verbatim (the dense pass computes `m[j] + η·0`, the same value). The
 /// gradient's `O(d)` cost disappears; the memory copy and the compressor
-/// scan remain `O(d)`, which is why the engines reserve this for the
-/// sync step / `H = 1` and keep the intra-phase local steps fully
-/// `O(nnz)` (`coordinator::experiment`).
+/// scan remain `O(d)` — this is the fallback for compressors without an
+/// active scan, while the crate-internal `active_apply_grad` is the
+/// `O(touched)` route.
 #[inline]
 pub fn apply_sparse(
     comp: &mut dyn Compressor,
@@ -102,13 +120,158 @@ pub fn apply_sparse(
     bits
 }
 
+/// Rebuild `support` as the exact nonzero set of `memory` (`O(d)`; the
+/// re-sync after a dense step invalidated the incremental tracking).
+fn rebuild_support(memory: &[f32], support: &mut ActiveIndex) {
+    support.grow(memory.len());
+    support.clear();
+    for (j, &mj) in memory.iter().enumerate() {
+        if mj != 0.0 {
+            support.insert(j as u32);
+        }
+    }
+}
+
+/// Bring the active-set bookkeeping up to date before an active step:
+/// size both stamp tables and, when a dense-entry step (or an external
+/// memory load) invalidated the incremental tracking, rebuild
+/// `m_support` as `support(memory)` exactly. The one shared
+/// implementation of this invariant — [`ErrorFeedbackStep`] and
+/// [`crate::optim::MemSgd`] both route through it.
+pub(crate) fn ensure_support_tracking(
+    memory: &[f32],
+    m_support: &mut ActiveIndex,
+    v_support: &mut ActiveIndex,
+    support_valid: &mut bool,
+) {
+    v_support.grow(memory.len());
+    if *support_valid {
+        m_support.grow(memory.len());
+    } else {
+        rebuild_support(memory, m_support);
+        *support_valid = true;
+    }
+}
+
+/// The `O(touched)` error-feedback step for a sparse gradient against an
+/// actively-tracked memory.
+///
+/// Invariants required (and preserved): `memory` is exactly zero outside
+/// `m_support`, and `m_support` holds exactly its nonzero coordinates.
+/// `v` is dense scratch whose entries are only meaningful at the
+/// coordinates built this call (`v_support`). Every touched coordinate
+/// evaluates the dense path's literal FP expression (`m[j] + η·g[j]` at
+/// gradient coordinates, `m[j]` verbatim elsewhere on the support), and
+/// every *untouched* coordinate of the conceptual dense `v` is an exact
+/// zero — which is why the compressor's active scan selects exactly what
+/// its dense scan would (`Compressor::compress_active` contract).
+#[allow(clippy::too_many_arguments)] // mirrors the recursion's full state bundle
+pub(crate) fn active_apply_grad(
+    comp: &mut dyn Compressor,
+    memory: &mut [f32],
+    v: &mut [f32],
+    m_support: &mut ActiveIndex,
+    v_support: &mut ActiveIndex,
+    grad: &SparseVec,
+    eta: f32,
+    rng: &mut Prng,
+    out: &mut Update,
+) -> u64 {
+    debug_assert_eq!(memory.len(), grad.dim);
+    debug_assert_eq!(v.len(), grad.dim);
+    v_support.clear();
+    for (&j, &g) in grad.idx.iter().zip(&grad.val) {
+        let jj = j as usize;
+        v[jj] = memory[jj] + eta * g;
+        v_support.insert(j);
+    }
+    for &j in m_support.touched() {
+        if v_support.insert(j) {
+            // Dense computes m[j] + η·0 here — the same value.
+            v[j as usize] = memory[j as usize];
+        }
+    }
+    finish_active(comp, memory, v, m_support, v_support, rng, out)
+}
+
+/// [`active_apply_grad`] for an **already stepsize-scaled** active-set
+/// accumulator (the `sync` of the local-update schedule): `v = m + a`
+/// over `support(m) ∪ touched(a)`. The dense sync computes
+/// `m[j] + 1.0·a[j]`; `×1.0` is exact, and on support-only coordinates
+/// `m[j] + 0.0 == m[j]` bitwise because the support holds only nonzero
+/// entries — so this is the dense sync bit for bit.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn active_apply_accum(
+    comp: &mut dyn Compressor,
+    memory: &mut [f32],
+    v: &mut [f32],
+    m_support: &mut ActiveIndex,
+    v_support: &mut ActiveIndex,
+    acc: ActiveView<'_>,
+    rng: &mut Prng,
+    out: &mut Update,
+) -> u64 {
+    debug_assert_eq!(memory.len(), acc.vals.len());
+    debug_assert_eq!(v.len(), acc.vals.len());
+    v_support.clear();
+    for &j in acc.touched {
+        let jj = j as usize;
+        v[jj] = memory[jj] + acc.vals[jj];
+        v_support.insert(j);
+    }
+    for &j in m_support.touched() {
+        if v_support.insert(j) {
+            v[j as usize] = memory[j as usize];
+        }
+    }
+    finish_active(comp, memory, v, m_support, v_support, rng, out)
+}
+
+/// Shared tail of the active recursion: compress the built `v`, write
+/// the new residual `m = v − u` back over the built coordinates, and
+/// re-derive the support as its exact nonzero set (this is what keeps
+/// the active set tracking the *residual*, not the ever-growing union
+/// of everything ever touched).
+fn finish_active(
+    comp: &mut dyn Compressor,
+    memory: &mut [f32],
+    v: &mut [f32],
+    m_support: &mut ActiveIndex,
+    v_support: &mut ActiveIndex,
+    rng: &mut Prng,
+    out: &mut Update,
+) -> u64 {
+    let view = ActiveView { vals: &*v, touched: v_support.touched() };
+    let bits = comp
+        .compress_active(view, rng, out)
+        .expect("compressor advertised supports_active_scan");
+    // m ← v − u. Outside the built set the dense recursion yields
+    // v[j] − u[j] = 0 − 0 = 0, which is what the untouched dense memory
+    // already holds (u may carry zero-valued padding coordinates there;
+    // subtracting an exact zero from an exact zero is a no-op).
+    for &j in v_support.touched() {
+        memory[j as usize] = v[j as usize];
+    }
+    out.sub_from(memory);
+    m_support.clear();
+    for &j in v_support.touched() {
+        if memory[j as usize] != 0.0 {
+            m_support.insert(j);
+        }
+    }
+    bits
+}
+
 /// Per-worker error-feedback state: everything one sequential stream,
 /// shared-memory worker, or parameter-server node needs to turn a
 /// stochastic gradient into a compressed update.
 pub struct ErrorFeedbackStep {
-    /// Error memory `m` (all zeros for memory-free methods).
+    /// Error memory `m` (all zeros for memory-free methods). Dense
+    /// storage always; on the active path it is additionally tracked by
+    /// `m_support` (exactly its nonzero coordinates).
     memory: Vec<f32>,
-    /// Scratch `v = m + η·g`.
+    /// Scratch `v = m + η·g`. On the active path only the coordinates in
+    /// `v_support` are meaningful after a step.
     v: Vec<f32>,
     comp: Box<dyn Compressor>,
     update: Update,
@@ -117,6 +280,13 @@ pub struct ErrorFeedbackStep {
     /// memory — scaling a remembered residual would double-count it.
     scale: f32,
     use_memory: bool,
+    /// Active-set bookkeeping, engaged by the sparse entry points when
+    /// the compressor supports `O(touched)` scans.
+    m_support: ActiveIndex,
+    v_support: ActiveIndex,
+    /// Whether `m_support` currently equals `support(memory)` exactly
+    /// (a dense step invalidates it; the next active step rebuilds).
+    support_valid: bool,
     /// Cumulative wire cost of every update produced so far.
     pub bits_sent: u64,
 }
@@ -146,8 +316,30 @@ impl ErrorFeedbackStep {
             update: Update::new_sparse(d),
             scale,
             use_memory,
+            m_support: ActiveIndex::new(),
+            v_support: ActiveIndex::new(),
+            support_valid: true, // m = 0: the empty support is exact
             bits_sent: 0,
         }
+    }
+
+    /// Whether the sparse entry points of this state run the
+    /// `O(touched)` active path (memory-carrying method × compressor
+    /// with an active scan). The topology engines consult this to pick
+    /// the dimension-free phase route.
+    pub fn wants_active(&self) -> bool {
+        self.use_memory && self.comp.supports_active_scan()
+    }
+
+    /// Make `m_support` exact (rebuilding after a dense step if needed)
+    /// and size both stamp tables.
+    fn ensure_support(&mut self) {
+        ensure_support_tracking(
+            &self.memory,
+            &mut self.m_support,
+            &mut self.v_support,
+            &mut self.support_valid,
+        );
     }
 
     /// Produce the next compressed update from `grad` at stepsize `eta`;
@@ -155,6 +347,9 @@ impl ErrorFeedbackStep {
     /// to the iterate. Returns this step's wire cost in bits.
     pub fn step(&mut self, grad: &[f32], eta: f32, rng: &mut Prng) -> u64 {
         let bits = if self.use_memory {
+            // The dense route mutates the memory without maintaining the
+            // support; a later active step rebuilds it.
+            self.support_valid = false;
             apply(
                 self.comp.as_mut(),
                 &mut self.memory,
@@ -179,20 +374,38 @@ impl ErrorFeedbackStep {
 
     /// [`ErrorFeedbackStep::step`] for a sparse gradient — identical
     /// trajectory (same FP expression `m + η·g` on the gradient's stored
-    /// coordinates, memory copied verbatim elsewhere), but the gradient
+    /// coordinates, memory carried verbatim elsewhere), but the gradient
     /// never materializes densely. Used by the topology engines whenever
     /// the backend advertises [`crate::models::GradBackend::supports_sparse_grad`].
+    /// With an active-scan compressor the whole step (v-build, scan,
+    /// residual update) costs `O(touched)` instead of `O(d)`.
     pub fn step_sparse(&mut self, grad: &SparseVec, eta: f32, rng: &mut Prng) -> u64 {
         let bits = if self.use_memory {
-            apply_sparse(
-                self.comp.as_mut(),
-                &mut self.memory,
-                &mut self.v,
-                grad,
-                eta,
-                rng,
-                &mut self.update,
-            )
+            if self.comp.supports_active_scan() {
+                self.ensure_support();
+                active_apply_grad(
+                    self.comp.as_mut(),
+                    &mut self.memory,
+                    &mut self.v,
+                    &mut self.m_support,
+                    &mut self.v_support,
+                    grad,
+                    eta,
+                    rng,
+                    &mut self.update,
+                )
+            } else {
+                self.support_valid = false;
+                apply_sparse(
+                    self.comp.as_mut(),
+                    &mut self.memory,
+                    &mut self.v,
+                    grad,
+                    eta,
+                    rng,
+                    &mut self.update,
+                )
+            }
         } else {
             debug_assert_eq!(self.v.len(), grad.dim);
             self.v.iter_mut().for_each(|vi| *vi = 0.0);
@@ -222,12 +435,39 @@ impl ErrorFeedbackStep {
         self.step(accum, 1.0, rng)
     }
 
+    /// [`ErrorFeedbackStep::sync`] for an **active-set** accumulator —
+    /// the `O(touched)` communication event of the dimension-free phase.
+    /// Bit-identical to `sync(acc.to_dense())` (pinned by the unit tests
+    /// below and `tests/sparse_pipeline.rs` end to end). Panics if this
+    /// state is not on the active path ([`ErrorFeedbackStep::wants_active`]);
+    /// the engines route accordingly.
+    pub fn sync_active(&mut self, acc: ActiveView<'_>, rng: &mut Prng) -> u64 {
+        assert!(
+            self.wants_active(),
+            "sync_active requires a memory-carrying method whose compressor supports active scans"
+        );
+        debug_assert_eq!(acc.vals.len(), self.memory.len());
+        self.ensure_support();
+        let bits = active_apply_accum(
+            self.comp.as_mut(),
+            &mut self.memory,
+            &mut self.v,
+            &mut self.m_support,
+            &mut self.v_support,
+            acc,
+            rng,
+            &mut self.update,
+        );
+        self.bits_sent += bits;
+        bits
+    }
+
     /// The update produced by the last [`ErrorFeedbackStep::step`].
     pub fn update(&self) -> &Update {
         &self.update
     }
 
-    /// Current error memory.
+    /// Current error memory (dense view; exact on every path).
     pub fn memory(&self) -> &[f32] {
         &self.memory
     }
@@ -308,6 +548,17 @@ mod tests {
     }
 
     #[test]
+    fn active_path_engages_exactly_for_active_scan_contractions() {
+        assert!(ErrorFeedbackStep::new(8, from_spec("top_k:2").unwrap()).wants_active());
+        assert!(ErrorFeedbackStep::new(8, from_spec("threshold:0.5").unwrap()).wants_active());
+        assert!(!ErrorFeedbackStep::new(8, from_spec("rand_k:2").unwrap()).wants_active());
+        assert!(!ErrorFeedbackStep::new(8, from_spec("qsgd:16").unwrap()).wants_active());
+        // Memory-free states never run the active path, whatever the
+        // operator could do.
+        assert!(!ErrorFeedbackStep::memory_free(8, Box::new(TopK::new(2)), 1.0).wants_active());
+    }
+
+    #[test]
     fn sync_of_scaled_accum_is_step_bit_for_bit() {
         // ef.sync(η·g) must equal ef.step(g, η) exactly — the H = 1
         // reduction of the local-update schedule.
@@ -349,12 +600,14 @@ mod tests {
 
     #[test]
     fn sparse_step_replays_dense_step_bit_for_bit() {
-        // Every method kind (memory-carrying, memory-free, memory-free
-        // scaled) must produce identical trajectories when the same
-        // gradient arrives sparse instead of dense.
+        // Every method kind (memory-carrying active, memory-carrying
+        // dense-route, memory-free, memory-free scaled) must produce
+        // identical trajectories when the same gradient arrives sparse
+        // instead of dense.
         let d = 8;
         let builders: Vec<(&str, fn() -> ErrorFeedbackStep)> = vec![
             ("mem top_k", || ErrorFeedbackStep::new(8, from_spec("top_k:2").unwrap())),
+            ("mem threshold", || ErrorFeedbackStep::new(8, from_spec("threshold:0.25").unwrap())),
             ("mem rand_k", || ErrorFeedbackStep::new(8, from_spec("rand_k:2").unwrap())),
             ("free qsgd", || ErrorFeedbackStep::new(8, from_spec("qsgd:16").unwrap())),
             ("free scaled", || {
@@ -388,6 +641,73 @@ mod tests {
     }
 
     #[test]
+    fn sync_active_replays_dense_sync_bit_for_bit() {
+        // The dimension-free communication event against its dense
+        // reference, over a trajectory long enough for the residual
+        // support to grow, move, and flush.
+        for spec in ["top_k:2", "threshold:0.3"] {
+            let d = 10;
+            let mut dense_ef = ErrorFeedbackStep::new(d, from_spec(spec).unwrap());
+            let mut active_ef = ErrorFeedbackStep::new(d, from_spec(spec).unwrap());
+            let mut rng_a = Prng::new(33);
+            let mut rng_b = Prng::new(33);
+            let mut vals = vec![0.0f32; d];
+            for t in 0..40usize {
+                let mut touched: Vec<u32> = Vec::new();
+                for j in [(t * 3) % d, (t * 5 + 1) % d, (t * 7 + 4) % d] {
+                    if !touched.contains(&(j as u32)) {
+                        vals[j] = ((t * 11 + j * 3) % 13) as f32 / 13.0 - 0.4;
+                        touched.push(j as u32);
+                    }
+                }
+                let mut acc = vec![0.0f32; d];
+                for &j in &touched {
+                    acc[j as usize] = vals[j as usize];
+                }
+                let bits_a = dense_ef.sync(&acc, &mut rng_a);
+                let view = ActiveView { vals: &vals, touched: &touched };
+                let bits_b = active_ef.sync_active(view, &mut rng_b);
+                assert_eq!(bits_a, bits_b, "{spec} t={t}");
+                assert_eq!(
+                    dense_ef.update().to_dense(d),
+                    active_ef.update().to_dense(d),
+                    "{spec} t={t}"
+                );
+                assert_eq!(dense_ef.memory(), active_ef.memory(), "{spec} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_dense_and_sparse_calls_stay_consistent() {
+        // Interleaving dense steps (which invalidate the support) with
+        // sparse steps (which rebuild it) must track an all-dense twin
+        // exactly — the transition logic is the risky part.
+        let d = 8;
+        let mut mixed = ErrorFeedbackStep::new(d, from_spec("top_k:2").unwrap());
+        let mut dense = ErrorFeedbackStep::new(d, from_spec("top_k:2").unwrap());
+        let mut rng_a = Prng::new(5);
+        let mut rng_b = Prng::new(5);
+        for t in 0..30usize {
+            let mut g = vec![0.0f32; d];
+            let mut sg = SparseVec::new(d);
+            for j in [0usize, 2, 5, 7] {
+                let val = ((t * 5 + j * 9) % 17) as f32 / 17.0 - 0.45;
+                g[j] = val;
+                sg.push(j as u32, val);
+            }
+            dense.step(&g, 0.2, &mut rng_b);
+            if t % 3 == 0 {
+                mixed.step(&g, 0.2, &mut rng_a); // dense entry, invalidates
+            } else {
+                mixed.step_sparse(&sg, 0.2, &mut rng_a); // active entry, rebuilds
+            }
+            assert_eq!(mixed.memory(), dense.memory(), "t={t}");
+            assert_eq!(mixed.update().to_dense(d), dense.update().to_dense(d), "t={t}");
+        }
+    }
+
+    #[test]
     fn raw_apply_sparse_matches_apply() {
         let d = 5;
         let mut comp_a = TopK::new(1);
@@ -404,6 +724,50 @@ mod tests {
             apply_sparse(&mut comp_b, &mut m_b, &mut v_b, &sg, 0.7, &mut rng, &mut out_b);
             assert_eq!(m_a, m_b, "t={t}");
             assert_eq!(out_a.to_dense(d), out_b.to_dense(d), "t={t}");
+        }
+    }
+
+    #[test]
+    fn raw_active_apply_matches_apply() {
+        let d = 6;
+        let mut comp_a = TopK::new(2);
+        let mut comp_b = TopK::new(2);
+        let (mut m_a, mut v_a) = (vec![0.0f32; d], vec![0.0f32; d]);
+        let (mut m_b, mut v_b) = (vec![0.0f32; d], vec![0.0f32; d]);
+        let mut m_sup = ActiveIndex::new();
+        let mut v_sup = ActiveIndex::new();
+        m_sup.grow(d);
+        v_sup.grow(d);
+        let mut out_a = Update::new_sparse(d);
+        let mut out_b = Update::new_sparse(d);
+        let mut rng = Prng::new(0);
+        for t in 0..12 {
+            let mut g = vec![0.0f32; d];
+            let mut sg = SparseVec::new(d);
+            for j in [1usize, 3, 4] {
+                let val = ((t * 7 + j) % 9) as f32 - 4.0;
+                g[j] = val;
+                sg.push(j as u32, val);
+            }
+            apply(&mut comp_a, &mut m_a, &mut v_a, &g, 0.6, &mut rng, &mut out_a);
+            active_apply_grad(
+                &mut comp_b,
+                &mut m_b,
+                &mut v_b,
+                &mut m_sup,
+                &mut v_sup,
+                &sg,
+                0.6,
+                &mut rng,
+                &mut out_b,
+            );
+            assert_eq!(m_a, m_b, "t={t}");
+            assert_eq!(out_a.to_dense(d), out_b.to_dense(d), "t={t}");
+            // The tracked support is exactly the residual's nonzero set.
+            let mut sup: Vec<u32> = m_sup.touched().to_vec();
+            sup.sort_unstable();
+            let want: Vec<u32> = (0..d as u32).filter(|&j| m_b[j as usize] != 0.0).collect();
+            assert_eq!(sup, want, "t={t}");
         }
     }
 

@@ -16,8 +16,14 @@
 //! The implementation is allocation-free per step: the combined vector
 //! `v = m + ηg` is built in a scratch buffer, the compressor writes into
 //! a reusable [`Update`], and the memory update reuses `v` (`m = v − g`).
+//!
+//! The memory `m` is private (read it through [`MemSgd::memory`], load a
+//! checkpoint through [`MemSgd::set_memory`]): the sparse step tracks
+//! `support(m)` incrementally for the `O(touched)` active path
+//! (`optim::error_feedback`), and an untracked external write would
+//! silently corrupt that bookkeeping.
 
-use crate::compress::{Compressor, Update};
+use crate::compress::{ActiveIndex, Compressor, Update};
 use crate::util::prng::Prng;
 use crate::util::stats;
 
@@ -25,13 +31,21 @@ use crate::util::stats;
 pub struct MemSgd {
     /// Current iterate `x_t`.
     pub x: Vec<f32>,
-    /// Error memory `m_t`.
-    pub m: Vec<f32>,
-    /// Scratch: `v = m + η ∇f`.
+    /// Error memory `m_t` (dense storage; support tracked for the
+    /// active sparse path).
+    m: Vec<f32>,
+    /// Scratch: `v = m + η ∇f`. On the active path only the coordinates
+    /// built in the last step are meaningful.
     v: Vec<f32>,
     /// Reusable compressed update.
     update: Update,
     compressor: Box<dyn Compressor>,
+    /// Active-set bookkeeping for [`MemSgd::step_sparse`].
+    m_support: ActiveIndex,
+    v_support: ActiveIndex,
+    /// Whether `m_support` equals `support(m)` exactly (dense steps and
+    /// [`MemSgd::set_memory`] invalidate; the next sparse step rebuilds).
+    support_valid: bool,
     /// Cumulative communication cost (bits of every transmitted g_t).
     pub bits_sent: u64,
     /// Iterations taken.
@@ -48,6 +62,9 @@ impl MemSgd {
             v: vec![0.0; d],
             update: Update::new_sparse(d),
             compressor,
+            m_support: ActiveIndex::new(),
+            v_support: ActiveIndex::new(),
+            support_valid: true, // m = 0: the empty support is exact
             bits_sent: 0,
             t: 0,
         }
@@ -67,16 +84,31 @@ impl MemSgd {
         self.compressor.contraction_k(self.x.len())
     }
 
+    /// Current error memory `m_t` (read-only dense view).
+    pub fn memory(&self) -> &[f32] {
+        &self.m
+    }
+
+    /// Overwrite the error memory (checkpoint restore). Panics when the
+    /// length differs from the iterate's dimension; invalidates the
+    /// incremental support tracking (rebuilt on the next sparse step).
+    pub fn set_memory(&mut self, m: &[f32]) {
+        self.m.copy_from_slice(m);
+        self.support_valid = false;
+    }
+
     /// One Algorithm-1 iteration given the stochastic gradient
     /// `grad = ∇f_{i_t}(x_t)` and stepsize `eta`. Returns the transmitted
     /// update (for communication tracing / the parallel driver).
     ///
     /// The recursion core (lines 4 and 6) is the crate-wide shared
-    /// [`error_feedback::apply`]; this wrapper only applies the update to
-    /// the iterate (line 5) and keeps the counters.
+    /// [`error_feedback::apply`](super::error_feedback::apply); this
+    /// wrapper only applies the update to the iterate (line 5) and keeps
+    /// the counters.
     pub fn step(&mut self, grad: &[f32], eta: f64, rng: &mut Prng) -> &Update {
         debug_assert_eq!(grad.len(), self.x.len());
         // v = m + η ∇f; g = comp_k(v); m ← v − g  (lines 4 and 6).
+        self.support_valid = false;
         self.bits_sent += super::error_feedback::apply(
             self.compressor.as_mut(),
             &mut self.m,
@@ -93,12 +125,14 @@ impl MemSgd {
     }
 
     /// [`MemSgd::step`] for a **sparse** stochastic gradient — the same
-    /// recursion through the shared
-    /// [`error_feedback::apply_sparse`](super::error_feedback::apply_sparse),
-    /// producing a bit-identical trajectory while skipping the dense
-    /// gradient materialization (the sparse-pipeline entry point for
-    /// callers that drive `MemSgd` directly rather than through the
-    /// topology engines).
+    /// recursion, bit-identical trajectory, without materializing the
+    /// gradient densely. With an active-scan compressor (top-k,
+    /// threshold) the whole iteration runs in `O(touched)` over
+    /// `support(m) ∪ support(g)` via the shared
+    /// [`error_feedback::active_apply_grad`](super::error_feedback) core;
+    /// other operators take the `O(d)`
+    /// [`error_feedback::apply_sparse`](super::error_feedback::apply_sparse)
+    /// fallback.
     pub fn step_sparse(
         &mut self,
         grad: &crate::compress::SparseVec,
@@ -106,15 +140,37 @@ impl MemSgd {
         rng: &mut Prng,
     ) -> &Update {
         debug_assert_eq!(grad.dim, self.x.len());
-        self.bits_sent += super::error_feedback::apply_sparse(
-            self.compressor.as_mut(),
-            &mut self.m,
-            &mut self.v,
-            grad,
-            eta as f32,
-            rng,
-            &mut self.update,
-        );
+        let bits = if self.compressor.supports_active_scan() {
+            super::error_feedback::ensure_support_tracking(
+                &self.m,
+                &mut self.m_support,
+                &mut self.v_support,
+                &mut self.support_valid,
+            );
+            super::error_feedback::active_apply_grad(
+                self.compressor.as_mut(),
+                &mut self.m,
+                &mut self.v,
+                &mut self.m_support,
+                &mut self.v_support,
+                grad,
+                eta as f32,
+                rng,
+                &mut self.update,
+            )
+        } else {
+            self.support_valid = false;
+            super::error_feedback::apply_sparse(
+                self.compressor.as_mut(),
+                &mut self.m,
+                &mut self.v,
+                grad,
+                eta as f32,
+                rng,
+                &mut self.update,
+            )
+        };
+        self.bits_sent += bits;
         self.update.sub_from(&mut self.x);
         self.t += 1;
         &self.update
@@ -167,12 +223,12 @@ mod tests {
         opt.step(&g, 1.0, &mut rng);
         // v = [10, 1] → g = [10, 0]; x = [-10, 0]; m = [0, 1].
         assert_eq!(opt.x, vec![-10.0, 0.0]);
-        assert_eq!(opt.m, vec![0.0, 1.0]);
+        assert_eq!(opt.memory(), &[0.0, 1.0]);
         // Now feed zero gradients: memory [0,1] dominates → coordinate 1
         // is flushed on the next step.
         opt.step(&[0.0, 0.0], 1.0, &mut rng);
         assert_eq!(opt.x, vec![-10.0, -1.0]);
-        assert_eq!(opt.m, vec![0.0, 0.0]);
+        assert_eq!(opt.memory(), &[0.0, 0.0]);
     }
 
     #[test]
@@ -182,7 +238,7 @@ mod tests {
         let mut opt = MemSgd::new(vec![0.0, 0.0], Box::new(TopK::new(1)));
         let mut rng = Prng::new(0);
         opt.step(&[10.0, 1.0], 0.5, &mut rng); // m = [0, 0.5]
-        assert_eq!(opt.m, vec![0.0, 0.5]);
+        assert_eq!(opt.memory(), &[0.0, 0.5]);
         // Retrieval step with a very different η: transmitted coordinate
         // must be exactly 0.5 (the stored value), not 0.5·η'.
         opt.step(&[0.0, 0.0], 100.0, &mut rng);
@@ -213,25 +269,51 @@ mod tests {
 
     #[test]
     fn step_sparse_tracks_step_bit_for_bit() {
-        let d = 10;
-        let mut dense_opt = MemSgd::new(vec![0.2; d], from_spec("top_k:2").unwrap());
-        let mut sparse_opt = MemSgd::new(vec![0.2; d], from_spec("top_k:2").unwrap());
-        let mut rng_a = Prng::new(2);
-        let mut rng_b = Prng::new(2);
-        for t in 0..40usize {
-            let mut g = vec![0.0f32; d];
-            let mut sg = crate::compress::SparseVec::new(d);
-            for j in [0usize, 3, 7, 9] {
-                let val = ((t * 13 + j * 5) % 17) as f32 / 17.0 - 0.3;
-                g[j] = val;
-                sg.push(j as u32, val);
+        // top_k runs the active path, rand_k the dense fallback — both
+        // must replay the dense step exactly.
+        for spec in ["top_k:2", "threshold:0.25", "rand_k:2"] {
+            let d = 10;
+            let mut dense_opt = MemSgd::new(vec![0.2; d], from_spec(spec).unwrap());
+            let mut sparse_opt = MemSgd::new(vec![0.2; d], from_spec(spec).unwrap());
+            let mut rng_a = Prng::new(2);
+            let mut rng_b = Prng::new(2);
+            for t in 0..40usize {
+                let mut g = vec![0.0f32; d];
+                let mut sg = crate::compress::SparseVec::new(d);
+                for j in [0usize, 3, 7, 9] {
+                    let val = ((t * 13 + j * 5) % 17) as f32 / 17.0 - 0.3;
+                    g[j] = val;
+                    sg.push(j as u32, val);
+                }
+                dense_opt.step(&g, 0.05, &mut rng_a);
+                sparse_opt.step_sparse(&sg, 0.05, &mut rng_b);
+                assert_eq!(dense_opt.x, sparse_opt.x, "{spec} t={t}");
+                assert_eq!(dense_opt.memory(), sparse_opt.memory(), "{spec} t={t}");
+                assert_eq!(dense_opt.bits_sent, sparse_opt.bits_sent, "{spec} t={t}");
             }
-            dense_opt.step(&g, 0.05, &mut rng_a);
-            sparse_opt.step_sparse(&sg, 0.05, &mut rng_b);
-            assert_eq!(dense_opt.x, sparse_opt.x, "t={t}");
-            assert_eq!(dense_opt.m, sparse_opt.m, "t={t}");
-            assert_eq!(dense_opt.bits_sent, sparse_opt.bits_sent, "t={t}");
         }
+    }
+
+    #[test]
+    fn set_memory_reaches_the_sparse_path() {
+        // A checkpoint-style memory load must be visible to the next
+        // sparse step (the support is rebuilt, not trusted stale).
+        let d = 6;
+        let mut a = MemSgd::new(vec![0.0; d], from_spec("top_k:1").unwrap());
+        let mut b = MemSgd::new(vec![0.0; d], from_spec("top_k:1").unwrap());
+        let loaded = vec![0.0f32, 3.0, 0.0, -1.5, 0.0, 0.25];
+        a.set_memory(&loaded);
+        b.set_memory(&loaded);
+        let mut rng_a = Prng::new(4);
+        let mut rng_b = Prng::new(4);
+        let g = vec![0.0f32, 0.0, 0.5, 0.0, 0.0, 0.0];
+        let sg = crate::compress::SparseVec::from_parts(d, vec![2], vec![0.5]);
+        a.step(&g, 1.0, &mut rng_a);
+        b.step_sparse(&sg, 1.0, &mut rng_b);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.memory(), b.memory());
+        // The loaded residual (coordinate 1) was the top-1 and flushed.
+        assert_eq!(b.x[1], -3.0);
     }
 
     #[test]

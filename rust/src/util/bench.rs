@@ -36,6 +36,17 @@
 //! committed `BENCH_hot_path.json` doubles as the CI performance
 //! baseline (`.github/workflows/ci.yml`, `bench-gate` job — compared via
 //! the `memsgd bench-gate` subcommand).
+//!
+//! Gate-relevant case names are exported from [`crate::util::gate`] so
+//! the bench and the policy cannot drift apart: the calibration case
+//! (`gate::CAL_CASE`, `"grad only           dense d=2000"`), the
+//! local-step invariant pair (`gate::local_step_dense_case` /
+//! `gate::local_step_sparse_case`), and the phase-sync cases of the
+//! active-set path (`gate::phase_sync_dense_case`,
+//! `"phase sync dense    top_10 d=47236"`, vs
+//! `gate::phase_sync_active_case(a)` for `a ∈ {100, 1000, 10000}`,
+//! `"phase sync active   top_10 d=47236 a=..."` — the rows whose p50s
+//! pin sync cost to the active-set size rather than d).
 
 use std::hint::black_box;
 use std::time::{Duration, Instant};

@@ -20,10 +20,12 @@
 //!   true` (hand-seeded baselines that have never been measured on real
 //!   hardware — see `BENCH_hot_path.json` provenance in the README).
 //! * **Speedup invariants** are machine-independent claims checked on
-//!   the fresh run alone — e.g. the sparse local step must be ≥ 5×
-//!   faster than the dense one at the RCV1 shape (`d/nnz ≈ 470`), the
-//!   tentpole acceptance criterion. A missing invariant case is a
-//!   failure: silently skipping it would un-gate the claim.
+//!   the fresh run alone — the sparse local step must be ≥ 5× faster
+//!   than the dense one at the RCV1 shape (`d/nnz ≈ 470`), and the
+//!   active-set phase sync (`O(touched)`, ~100 touched coordinates)
+//!   must be ≥ 5× faster than the dense `O(d)` sync at d = 47 236. A
+//!   missing invariant case is a failure: silently skipping it would
+//!   un-gate the claim.
 //! * Cases present on only one side produce warnings, not failures, so
 //!   adding or retiring bench cases doesn't wedge CI — the next baseline
 //!   refresh picks them up.
@@ -91,6 +93,19 @@ pub fn local_step_sparse_case(bsz: usize) -> String {
     format!("local step sparse B={bsz:<2} d=47236 nnz~100")
 }
 
+/// Canonical name of the dense-route phase sync (the `O(d)` memory pass
+/// + compressor scan) at the RCV1 dimension.
+pub fn phase_sync_dense_case() -> String {
+    "phase sync dense    top_10 d=47236".to_string()
+}
+
+/// Canonical name of the active-set phase sync at `active` touched
+/// coordinates — the cases whose p50s demonstrate sync cost scaling
+/// with the active set rather than d.
+pub fn phase_sync_active_case(active: usize) -> String {
+    format!("phase sync active   top_10 d=47236 a={active:<5}")
+}
+
 /// A fresh-run-only invariant: `slow_case` must be at least `min_ratio`
 /// × slower than `fast_case` (both in the same bench).
 #[derive(Clone, Debug)]
@@ -120,21 +135,30 @@ pub struct GateConfig {
     pub speedups: Vec<SpeedupCheck>,
 }
 
-/// The hot-path policy: normalize by the plain dense gradient case,
-/// 25% regression budget, and the tentpole's sparse-pipeline payoff —
-/// the sparse local step at the RCV1 shape (d = 47 236, nnz ≈ 100,
-/// d/nnz ≈ 470) must be ≥ 5× faster than the dense local step.
+/// The hot-path policy: normalize by the plain dense gradient case, 25%
+/// regression budget, and the two sparse-pipeline payoffs — the sparse
+/// local step at the RCV1 shape (d = 47 236, nnz ≈ 100, d/nnz ≈ 470)
+/// must be ≥ 5× faster than the dense local step, and the active-set
+/// phase sync at ~100 touched coordinates must be ≥ 5× faster than the
+/// dense `O(d)` sync.
 pub fn hot_path_config() -> GateConfig {
     GateConfig {
         calibration: (HOT_PATH_BENCH, CAL_CASE),
         tolerance: 1.25,
         tolerance_estimated: 4.0,
         calibration_band: 8.0,
-        speedups: vec![SpeedupCheck {
-            slow_case: local_step_dense_case(1),
-            fast_case: local_step_sparse_case(1),
-            min_ratio: 5.0,
-        }],
+        speedups: vec![
+            SpeedupCheck {
+                slow_case: local_step_dense_case(1),
+                fast_case: local_step_sparse_case(1),
+                min_ratio: 5.0,
+            },
+            SpeedupCheck {
+                slow_case: phase_sync_dense_case(),
+                fast_case: phase_sync_active_case(100),
+                min_ratio: 5.0,
+            },
+        ],
     }
 }
 
@@ -351,21 +375,36 @@ mod tests {
         assert_eq!(rep.warnings.len(), 2, "{:?}", rep.warnings);
     }
 
+    /// Fresh rows satisfying both invariants at the given ratios.
+    fn invariant_rows(local_ratio: f64, sync_ratio: f64) -> Vec<GateRow> {
+        vec![
+            row(CAL, 1000.0),
+            row(&local_step_dense_case(1), 4_000.0 * local_ratio),
+            row(&local_step_sparse_case(1), 4_000.0),
+            row(&phase_sync_dense_case(), 2_000.0 * sync_ratio),
+            row(&phase_sync_active_case(100), 2_000.0),
+        ]
+    }
+
     #[test]
-    fn speedup_invariant_gates_the_sparse_payoff() {
+    fn speedup_invariants_gate_the_sparse_payoffs() {
         let cfg = hot_path_config();
-        let slow = cfg.speedups[0].slow_case.clone();
-        let fast = cfg.speedups[0].fast_case.clone();
+        assert_eq!(cfg.speedups.len(), 2, "local-step and phase-sync invariants");
         let base = vec![row(CAL, 1000.0)];
-        // 10x speedup: passes.
-        let good = vec![row(CAL, 1000.0), row(&slow, 40_000.0), row(&fast, 4_000.0)];
-        assert!(compare(&base, &good, &cfg).passed());
-        // 3x speedup: the >= 5x invariant fails.
-        let weak = vec![row(CAL, 1000.0), row(&slow, 12_000.0), row(&fast, 4_000.0)];
-        assert!(!compare(&base, &weak, &cfg).passed());
-        // Missing invariant cases fail rather than silently skipping.
+        // 10x on both: passes.
+        assert!(compare(&base, &invariant_rows(10.0, 10.0), &cfg).passed());
+        // Either invariant degrading below 5x fails on its own.
+        let rep = compare(&base, &invariant_rows(3.0, 10.0), &cfg);
+        assert!(!rep.passed());
+        assert!(rep.failures[0].contains("local step"), "{:?}", rep.failures);
+        let rep = compare(&base, &invariant_rows(10.0, 3.0), &cfg);
+        assert!(!rep.passed());
+        assert!(rep.failures[0].contains("phase sync"), "{:?}", rep.failures);
+        // Missing invariant cases fail rather than silently skipping —
+        // one failure per un-checkable invariant.
         let missing = vec![row(CAL, 1000.0)];
-        assert!(!compare(&base, &missing, &cfg).passed());
+        let rep = compare(&base, &missing, &cfg);
+        assert_eq!(rep.failures.len(), 2, "{:?}", rep.failures);
     }
 
     #[test]
@@ -389,15 +428,11 @@ mod tests {
 
     #[test]
     fn speedup_invariant_rejects_estimated_fresh_rows() {
-        // Passing a merged baseline as the fresh file must not let the
+        // Passing a merged baseline as the fresh file must not let an
         // invariant "pass" on never-measured estimated rows.
         let cfg = hot_path_config();
-        let mut fresh = vec![
-            row(CAL, 1000.0),
-            row(&cfg.speedups[0].slow_case, 40_000.0),
-            row(&cfg.speedups[0].fast_case, 4_000.0),
-        ];
-        fresh[2].estimated = true;
+        let mut fresh = invariant_rows(10.0, 10.0);
+        fresh[2].estimated = true; // the sparse local-step row
         let rep = compare(&[row(CAL, 1000.0)], &fresh, &cfg);
         assert!(!rep.passed());
         assert!(rep.failures[0].contains("estimated"), "{:?}", rep.failures);

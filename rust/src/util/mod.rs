@@ -14,7 +14,8 @@
 //!   percentile reporting (replaces `criterion`; all `benches/` use it).
 //! * [`gate`] — the CI performance gate comparing fresh `bench` JSON
 //!   against the committed `BENCH_hot_path.json` baseline.
-//! * [`select`] — in-place quickselect used by the top-k compressor.
+//! * [`select`] — the heap-based top-k selection engine (dense and
+//!   active-set scans, lowest-index tie-breaking).
 //! * [`check`] — a miniature property-testing loop (replaces `proptest`)
 //!   used by the invariant suites in `rust/tests/`.
 //! * [`stats`] — mean / variance / percentile helpers for metrics.

@@ -1,74 +1,52 @@
-//! In-place selection: the O(d) average-case engine behind `top_k`.
+//! Top-k index selection: **one engine, one tie rule**.
 //!
 //! The top-k compressor needs the k coordinates of largest magnitude.
-//! Sorting is O(d log d); Hoare-style quickselect with median-of-three
-//! pivots is O(d) average, and the compressor calls it every iteration,
-//! so this is genuinely hot-path code (see benches/hot_path.rs).
+//! Sorting is O(d log d); the bounded min-heap here is O(d + m·log k)
+//! where m is the number of heap displacements — ≈ O(d) on the
+//! compression hot path — and, unlike quickselect, has no pathological
+//! tie behaviour: Mem-SGD's `m + ηg` vectors are full of exactly-equal
+//! entries (zeros early on), which degrade Lomuto/Hoare partitions to
+//! O(d²). (A quickselect variant used to live here as a second engine;
+//! it was removed when the active-set scan landed — two engines with
+//! different tie orders would be a latent bit-identity bug.)
+//!
+//! ## Tie-breaking contract
+//!
+//! Equal magnitudes are resolved toward the **lowest index**: the
+//! selected set is exactly "sort by (|x| descending, index ascending),
+//! take the first k" — a deterministic function of the values alone,
+//! independent of scan order. That order-independence is load-bearing:
+//! [`top_k_in_subset`] visits coordinates in arbitrary (active-set)
+//! order and must select exactly what the dense ascending scan selects
+//! (`compress::Compressor::compress_active`'s bit-identity contract).
+//! Implemented by packing `(magnitude, !index)` into one `u64` key, so
+//! a plain integer comparison prefers larger magnitude first and lower
+//! index second.
 
-/// Partition `items` (an index array) so the first `k` entries are the
-/// indices with the largest `magnitude` values (unordered within the
-/// prefix). `magnitude(i)` must be deterministic for the duration of the
-/// call. O(len) average time, in place.
-pub fn select_top_k_by<F: Fn(u32) -> f32>(items: &mut [u32], k: usize, magnitude: F) {
-    if k == 0 || k >= items.len() {
-        return;
-    }
-    let mut lo = 0usize;
-    let mut hi = items.len();
-    // Invariant: items[..lo] are all >= items[lo..hi] >= items[hi..] (by
-    // magnitude), and the k-boundary lies in [lo, hi].
-    while hi - lo > 1 {
-        let p = partition(items, lo, hi, &magnitude);
-        if p + 1 == k {
-            return; // pivot is the k-th largest; prefix settled
-        } else if p + 1 < k {
-            lo = p + 1; // top-k boundary is to the right of the pivot
-        } else {
-            hi = p; // boundary is strictly left of the pivot
-        }
-    }
+/// Integer key whose order matches |x| for all non-NaN floats.
+#[inline(always)]
+fn mag_bits(x: f32) -> u32 {
+    x.to_bits() & 0x7fff_ffff
 }
 
-/// Hoare-ish partition around a median-of-three pivot, descending by
-/// magnitude. Returns the final index of the pivot.
-fn partition<F: Fn(u32) -> f32>(items: &mut [u32], lo: usize, hi: usize, magnitude: &F) -> usize {
-    let len = hi - lo;
-    debug_assert!(len >= 1);
-    // Median of three (first, middle, last) as pivot, moved to `lo`.
-    let mid = lo + len / 2;
-    let (a, b, c) = (magnitude(items[lo]), magnitude(items[mid]), magnitude(items[hi - 1]));
-    let pivot_idx = if (a >= b) == (a <= c) {
-        lo
-    } else if (b >= a) == (b <= c) {
-        mid
-    } else {
-        hi - 1
-    };
-    items.swap(lo, pivot_idx);
-    let pivot = magnitude(items[lo]);
-    // Lomuto partition, descending: entries > pivot go left.
-    let mut store = lo + 1;
-    for i in (lo + 1)..hi {
-        if magnitude(items[i]) > pivot {
-            items.swap(i, store);
-            store += 1;
-        }
-    }
-    items.swap(lo, store - 1);
-    store - 1
+/// Packed comparison key: magnitude in the high bits, bitwise-NOT index
+/// in the low bits — larger key ⇔ (larger |x|, then lower index).
+#[inline(always)]
+fn pack(mag: u32, idx: u32) -> u64 {
+    ((mag as u64) << 32) | (!idx) as u64
+}
+
+#[inline(always)]
+fn unpack_idx(key: u64) -> u32 {
+    !(key as u32)
 }
 
 /// Return the indices of the `k` largest-|x| coordinates of a dense
-/// vector, using `scratch` as the reusable output buffer.
+/// vector, using `scratch` as the reusable output buffer. Ties go to
+/// the lowest index (see the module docs).
 ///
-/// Implementation: a bounded min-heap over (|value|, index). This is
-/// O(d + m·log k) where m is the number of heap displacements — in
-/// practice ≈ O(d) for the compression hot path — and, unlike
-/// quickselect, has **no pathological tie behaviour**: Mem-SGD's
-/// `m + ηg` vectors are full of exactly-equal entries (zeros early on),
-/// which degrade Lomuto/Hoare partitions to O(d²). The quickselect in
-/// [`select_top_k_by`] is kept for callers with k ≈ d (and is raced
-/// against this heap in benches/compressors.rs).
+/// Convenience wrapper that allocates its own heap; hot paths use
+/// [`top_k_indices_with_heap`].
 pub fn top_k_indices(x: &[f32], k: usize, scratch: &mut Vec<u32>) {
     let mut heap = Vec::new();
     top_k_indices_with_heap(x, k, &mut heap, scratch);
@@ -78,12 +56,17 @@ pub fn top_k_indices(x: &[f32], k: usize, scratch: &mut Vec<u32>) {
 /// allocation disappears from the hot loop (§Perf iteration 6: the
 /// `Vec::with_capacity(k)` inside the old scan cost ~8% of the top-k
 /// step at d = 2000).
-pub fn top_k_indices_with_heap(
-    x: &[f32],
-    k: usize,
-    heap: &mut Vec<(u32, u32)>,
-    scratch: &mut Vec<u32>,
-) {
+///
+/// Implementation: a bounded min-heap of packed `(magnitude, !index)`
+/// keys; heap\[0\] is the admission threshold. Most elements fail that
+/// single well-predicted compare and never touch the heap, so the loop
+/// runs at ~memory speed, helped by a chunked SIMD prefilter (§Perf
+/// iteration 8): the per-chunk max of the integer magnitudes
+/// vectorizes, and only chunks whose max beats the current admission
+/// magnitude take the scalar branchy path. Equal-magnitude candidates
+/// never displace an incumbent in this ascending scan (the incumbent
+/// has the lower index), so the magnitude-only prefilter is exact.
+pub fn top_k_indices_with_heap(x: &[f32], k: usize, heap: &mut Vec<u64>, scratch: &mut Vec<u32>) {
     let d = x.len();
     let k = k.min(d);
     scratch.clear();
@@ -91,43 +74,27 @@ pub fn top_k_indices_with_heap(
     if k == 0 {
         return;
     }
-    // Min-heap of the k best seen so far, keyed by integer magnitude
-    // (for non-NaN f32, |a| <= |b| ⇔ (a.bits & 0x7fffffff) <= (b.bits &
-    // 0x7fffffff), so the scan stays in the integer pipeline). heap[0]
-    // is the admission threshold; most elements fail that single
-    // well-predicted compare and never touch the heap, so the loop runs
-    // at ~memory speed. (A dedicated k=1 max-scan measured *slower* than
-    // this loop — see benches/compressors.rs.)
     heap.reserve(k);
     // Warm-up: fill + heapify on the first k elements (scalar).
-    let warm = k.min(d);
-    for (i, &v) in x[..warm].iter().enumerate() {
-        heap.push((mag_bits(v), i as u32));
+    for (i, &v) in x[..k].iter().enumerate() {
+        heap.push(pack(mag_bits(v), i as u32));
     }
-    if heap.len() == k {
-        for j in (0..k / 2).rev() {
-            sift_down(heap, j);
-        }
+    for j in (0..k / 2).rev() {
+        sift_down(heap, j);
     }
-    // Main scan with a chunked SIMD prefilter (§Perf iteration 8): the
-    // per-chunk max of the integer magnitudes vectorizes; only chunks
-    // whose max beats the current admission threshold heap[0] take the
-    // scalar branchy path. For the top-k of a long random vector almost
-    // every chunk fails the single vector compare, so the scan runs at
-    // SIMD reduction speed instead of scalar-compare speed.
     const CHUNK: usize = 16;
-    let mut i = warm;
+    let mut i = k;
     while i + CHUNK <= d {
         let chunk = &x[i..i + CHUNK];
         let mut cmax = 0u32;
         for &v in chunk {
             cmax = cmax.max(mag_bits(v));
         }
-        if cmax > heap[0].0 {
+        if cmax > (heap[0] >> 32) as u32 {
             for (j, &v) in chunk.iter().enumerate() {
-                let m = mag_bits(v);
-                if m > heap[0].0 {
-                    heap[0] = (m, (i + j) as u32);
+                let key = pack(mag_bits(v), (i + j) as u32);
+                if key > heap[0] {
+                    heap[0] = key;
                     sift_down(heap, 0);
                 }
             }
@@ -135,14 +102,53 @@ pub fn top_k_indices_with_heap(
         i += CHUNK;
     }
     for (j, &v) in x[i..].iter().enumerate() {
-        let m = mag_bits(v);
-        if m > heap[0].0 {
-            heap[0] = (m, (i + j) as u32);
+        let key = pack(mag_bits(v), (i + j) as u32);
+        if key > heap[0] {
+            heap[0] = key;
             sift_down(heap, 0);
         }
     }
-    // d < k never reaches heapify; order is irrelevant either way.
-    scratch.extend(heap.iter().map(|&(_, i)| i));
+    scratch.extend(heap.iter().map(|&key| unpack_idx(key)));
+}
+
+/// Top-k over an **index subset**: select the `k` indices of `subset`
+/// with the largest `|vals[j]|`, ties to the lowest index, into `out`
+/// (unordered). `subset` must hold unique in-bounds indices; its order
+/// is irrelevant — the full-key admission test makes the result a
+/// deterministic function of the (value, index) pairs alone, so it
+/// matches the dense scan on any vector that is zero outside `subset`
+/// (as long as the dense selection never needs those zeros, i.e. the
+/// subset contains at least `k` coordinates of the top-k's magnitude
+/// class — `compress::TopK::compress_active` handles the remainder by
+/// explicit zero-padding).
+pub fn top_k_in_subset(
+    vals: &[f32],
+    subset: &[u32],
+    k: usize,
+    heap: &mut Vec<u64>,
+    out: &mut Vec<u32>,
+) {
+    let k = k.min(subset.len());
+    out.clear();
+    heap.clear();
+    if k == 0 {
+        return;
+    }
+    heap.reserve(k);
+    for &j in &subset[..k] {
+        heap.push(pack(mag_bits(vals[j as usize]), j));
+    }
+    for i in (0..k / 2).rev() {
+        sift_down(heap, i);
+    }
+    for &j in &subset[k..] {
+        let key = pack(mag_bits(vals[j as usize]), j);
+        if key > heap[0] {
+            heap[0] = key;
+            sift_down(heap, 0);
+        }
+    }
+    out.extend(heap.iter().map(|&key| unpack_idx(key)));
 }
 
 /// Fused `v = m + η·g` build + top-k selection in one pass. **Measured
@@ -151,48 +157,48 @@ pub fn top_k_indices_with_heap(
 /// whole combined loop scalar, losing the v-build's SIMD fma. Kept (and
 /// raced in `benches/compressors.rs`) as the recorded evidence for that
 /// decision. Output contract matches [`top_k_indices_with_heap`] over
-/// the computed `v`.
+/// the computed `v`, including the lowest-index tie rule.
 pub fn top_k_fused(
     m: &[f32],
     grad: &[f32],
     eta: f32,
     v_out: &mut [f32],
     k: usize,
-    heap: &mut Vec<(u32, u32)>,
+    heap: &mut Vec<u64>,
     scratch: &mut Vec<u32>,
 ) {
     let d = v_out.len();
     let k = k.min(d);
     scratch.clear();
     heap.clear();
+    if k == 0 {
+        for i in 0..d {
+            v_out[i] = m[i] + eta * grad[i];
+        }
+        return;
+    }
     heap.reserve(k);
     for i in 0..d {
         let v = m[i] + eta * grad[i];
         v_out[i] = v;
-        let mb = mag_bits(v);
+        let key = pack(mag_bits(v), i as u32);
         if heap.len() < k {
-            heap.push((mb, i as u32));
+            heap.push(key);
             if heap.len() == k {
                 for j in (0..k / 2).rev() {
                     sift_down(heap, j);
                 }
             }
-        } else if mb > heap[0].0 {
-            heap[0] = (mb, i as u32);
+        } else if key > heap[0] {
+            heap[0] = key;
             sift_down(heap, 0);
         }
     }
-    scratch.extend(heap.iter().map(|&(_, i)| i));
-}
-
-/// Integer key whose order matches |x| for all non-NaN floats.
-#[inline(always)]
-fn mag_bits(x: f32) -> u32 {
-    x.to_bits() & 0x7fff_ffff
+    scratch.extend(heap.iter().map(|&key| unpack_idx(key)));
 }
 
 #[inline]
-fn sift_down(heap: &mut [(u32, u32)], mut j: usize) {
+fn sift_down(heap: &mut [u64], mut j: usize) {
     let n = heap.len();
     loop {
         let l = 2 * j + 1;
@@ -200,8 +206,8 @@ fn sift_down(heap: &mut [(u32, u32)], mut j: usize) {
             return;
         }
         let r = l + 1;
-        let smallest = if r < n && heap[r].0 < heap[l].0 { r } else { l };
-        if heap[smallest].0 < heap[j].0 {
+        let smallest = if r < n && heap[r] < heap[l] { r } else { l };
+        if heap[smallest] < heap[j] {
             heap.swap(j, smallest);
             j = smallest;
         } else {
@@ -215,39 +221,108 @@ mod tests {
     use super::*;
     use crate::util::prng::Prng;
 
-    fn brute_top_k(x: &[f32], k: usize) -> Vec<u32> {
-        let mut idx: Vec<u32> = (0..x.len() as u32).collect();
+    /// Sort-based oracle for the documented contract: (|x| descending,
+    /// index ascending), first k, returned sorted by index.
+    fn oracle_top_k(x: &[f32], candidates: &[u32], k: usize) -> Vec<u32> {
+        let mut idx: Vec<u32> = candidates.to_vec();
         idx.sort_by(|&a, &b| {
-            x[b as usize]
-                .abs()
-                .partial_cmp(&x[a as usize].abs())
-                .unwrap()
+            let (ma, mb) = (x[a as usize].abs(), x[b as usize].abs());
+            mb.partial_cmp(&ma).unwrap().then(a.cmp(&b))
         });
-        idx.truncate(k);
+        idx.truncate(k.min(idx.len()));
         idx.sort_unstable();
         idx
     }
 
+    fn sorted(v: &[u32]) -> Vec<u32> {
+        let mut s = v.to_vec();
+        s.sort_unstable();
+        s
+    }
+
+    /// Quantized random value: draws from a small set so exact-magnitude
+    /// ties are common — the regime where the tie rule matters.
+    fn tied_value(rng: &mut Prng) -> f32 {
+        let mag = rng.below(5) as f32 * 0.5; // {0, 0.5, 1, 1.5, 2}
+        if rng.below(2) == 0 {
+            mag
+        } else {
+            -mag
+        }
+    }
+
     #[test]
-    fn matches_brute_force_on_random_vectors() {
+    fn prop_matches_oracle_exactly_with_duplicates() {
+        // Exact set equality against the sort oracle — not just the
+        // magnitude multiset — on tie-heavy vectors, over the edge
+        // cardinalities k ∈ {0, 1, len−1, len} plus random k.
         let mut rng = Prng::new(1);
+        let mut scratch = Vec::new();
+        let mut heap = Vec::new();
+        for trial in 0..300 {
+            let d = 1 + rng.below(200);
+            let x: Vec<f32> = (0..d).map(|_| tied_value(&mut rng)).collect();
+            let all: Vec<u32> = (0..d as u32).collect();
+            for k in [0usize, 1, d.saturating_sub(1), d, 1 + rng.below(d)] {
+                top_k_indices_with_heap(&x, k, &mut heap, &mut scratch);
+                assert_eq!(
+                    sorted(&scratch),
+                    oracle_top_k(&x, &all, k),
+                    "trial={trial} d={d} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_matches_oracle_on_smooth_random_vectors() {
+        let mut rng = Prng::new(2);
         let mut scratch = Vec::new();
         for trial in 0..200 {
             let d = 1 + rng.below(300);
             let k = 1 + rng.below(d);
             let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let all: Vec<u32> = (0..d as u32).collect();
             top_k_indices(&x, k, &mut scratch);
-            let mut got = scratch.clone();
-            got.sort_unstable();
-            // With possible magnitude ties, compare the magnitude multiset.
-            let want = brute_top_k(&x, k);
-            let mag = |v: &[u32]| {
-                let mut m: Vec<f32> = v.iter().map(|&i| x[i as usize].abs()).collect();
-                m.sort_by(|a, b| a.partial_cmp(b).unwrap());
-                m
-            };
-            assert_eq!(mag(&got), mag(&want), "trial={trial} d={d} k={k}");
+            assert_eq!(sorted(&scratch), oracle_top_k(&x, &all, k), "trial={trial} d={d} k={k}");
         }
+    }
+
+    #[test]
+    fn adversarial_patterns_match_oracle() {
+        // The shapes that degrade partition-based selection: sorted
+        // ascending/descending, all-equal plateaus, and block plateaus.
+        let mut scratch = Vec::new();
+        let mut heap = Vec::new();
+        let d = 128usize;
+        let patterns: Vec<Vec<f32>> = vec![
+            (0..d).map(|i| i as f32).collect(),
+            (0..d).map(|i| (d - i) as f32).collect(),
+            vec![1.0; d],
+            (0..d).map(|i| if i / 16 % 2 == 0 { 2.0 } else { -2.0 }).collect(),
+            (0..d).map(|i| ((i % 3) as f32 - 1.0) * 4.0).collect(),
+        ];
+        let all: Vec<u32> = (0..d as u32).collect();
+        for (p, x) in patterns.iter().enumerate() {
+            for k in [1usize, 2, 16, d / 2, d - 1, d] {
+                top_k_indices_with_heap(x, k, &mut heap, &mut scratch);
+                assert_eq!(sorted(&scratch), oracle_top_k(x, &all, k), "pattern={p} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn ties_resolve_to_lowest_indices() {
+        // The documented rule, pinned: all-equal magnitudes select the
+        // lowest k indices exactly.
+        let x = [1.0f32; 64];
+        let mut scratch = Vec::new();
+        top_k_indices(&x, 7, &mut scratch);
+        assert_eq!(sorted(&scratch), vec![0, 1, 2, 3, 4, 5, 6]);
+        // Mixed signs tie too (magnitude comparison).
+        let y = [-2.0f32, 2.0, 2.0, -2.0, 0.5];
+        top_k_indices(&y, 2, &mut scratch);
+        assert_eq!(sorted(&scratch), vec![0, 1]);
     }
 
     #[test]
@@ -257,44 +332,9 @@ mod tests {
         top_k_indices(&x, 0, &mut scratch);
         assert!(scratch.is_empty());
         top_k_indices(&x, 3, &mut scratch);
-        let mut got = scratch.clone();
-        got.sort_unstable();
-        assert_eq!(got, vec![0, 1, 2]);
+        assert_eq!(sorted(&scratch), vec![0, 1, 2]);
         top_k_indices(&x, 10, &mut scratch);
         assert_eq!(scratch.len(), 3);
-    }
-
-    #[test]
-    fn ties_still_return_k_items() {
-        let x = [1.0f32; 64];
-        let mut scratch = Vec::new();
-        top_k_indices(&x, 7, &mut scratch);
-        assert_eq!(scratch.len(), 7);
-        let mut s = scratch.clone();
-        s.sort_unstable();
-        s.dedup();
-        assert_eq!(s.len(), 7);
-    }
-
-    #[test]
-    fn prefix_dominates_suffix() {
-        let mut rng = Prng::new(2);
-        for _ in 0..50 {
-            let d = 2 + rng.below(500);
-            let k = 1 + rng.below(d - 1);
-            let x: Vec<f32> = (0..d).map(|_| rng.normal_f32() * 10.0).collect();
-            let mut idx: Vec<u32> = (0..d as u32).collect();
-            select_top_k_by(&mut idx, k, |i| x[i as usize].abs());
-            let min_in = idx[..k]
-                .iter()
-                .map(|&i| x[i as usize].abs())
-                .fold(f32::INFINITY, f32::min);
-            let max_out = idx[k..]
-                .iter()
-                .map(|&i| x[i as usize].abs())
-                .fold(f32::NEG_INFINITY, f32::max);
-            assert!(min_in >= max_out, "d={d} k={k} min_in={min_in} max_out={max_out}");
-        }
     }
 
     #[test]
@@ -302,8 +342,104 @@ mod tests {
         let x = [-10.0f32, 1.0, -5.0, 0.5];
         let mut scratch = Vec::new();
         top_k_indices(&x, 2, &mut scratch);
-        let mut got = scratch.clone();
-        got.sort_unstable();
-        assert_eq!(got, vec![0, 2]);
+        assert_eq!(sorted(&scratch), vec![0, 2]);
+    }
+
+    #[test]
+    fn subset_scan_matches_dense_scan_on_sparse_vectors() {
+        // When the subset covers every nonzero and k ≤ #nonzeros, the
+        // subset scan must equal the dense scan exactly — the active-set
+        // compressor equivalence in miniature.
+        let mut rng = Prng::new(3);
+        let mut heap = Vec::new();
+        let (mut dense_out, mut subset_out) = (Vec::new(), Vec::new());
+        for trial in 0..200 {
+            let d = 8 + rng.below(300);
+            let nnz = 1 + rng.below(d.min(40));
+            let mut x = vec![0.0f32; d];
+            let mut support: Vec<u32> = Vec::new();
+            while support.len() < nnz {
+                let j = rng.below(d) as u32;
+                if x[j as usize] == 0.0 {
+                    let mut v = tied_value(&mut rng);
+                    if v == 0.0 {
+                        v = 1.0;
+                    }
+                    x[j as usize] = v;
+                    support.push(j);
+                }
+            }
+            // Extra touched-but-zero coordinates must not disturb the
+            // selection while k ≤ #nonzeros (zero loses every compare).
+            let extra = rng.below(4);
+            for _ in 0..extra {
+                let j = rng.below(d) as u32;
+                if x[j as usize] == 0.0 && !support.contains(&j) {
+                    support.push(j);
+                }
+            }
+            rng.shuffle(&mut support);
+            let k = 1 + rng.below(nnz);
+            top_k_indices_with_heap(&x, k, &mut heap, &mut dense_out);
+            top_k_in_subset(&x, &support, k, &mut heap, &mut subset_out);
+            assert_eq!(sorted(&subset_out), sorted(&dense_out), "trial={trial} d={d} k={k}");
+        }
+    }
+
+    #[test]
+    fn subset_scan_is_order_independent() {
+        let x = [0.0f32, 3.0, 3.0, -3.0, 1.0, 0.0, 3.0, 2.0];
+        let mut heap = Vec::new();
+        let mut out = Vec::new();
+        let mut reference = Vec::new();
+        let base = vec![1u32, 2, 3, 4, 6, 7];
+        top_k_in_subset(&x, &base, 3, &mut heap, &mut reference);
+        // Ties at |3.0|: indices 1, 2, 3, 6 — lowest three win.
+        assert_eq!(sorted(&reference), vec![1, 2, 3]);
+        let mut rng = Prng::new(4);
+        for _ in 0..50 {
+            let mut shuffled = base.clone();
+            rng.shuffle(&mut shuffled);
+            top_k_in_subset(&x, &shuffled, 3, &mut heap, &mut out);
+            assert_eq!(sorted(&out), sorted(&reference), "order {shuffled:?}");
+        }
+    }
+
+    #[test]
+    fn subset_k_edges() {
+        let x = [5.0f32, 0.0, 1.0, 2.0];
+        let mut heap = Vec::new();
+        let mut out = Vec::new();
+        let subset = vec![0u32, 2, 3];
+        top_k_in_subset(&x, &subset, 0, &mut heap, &mut out);
+        assert!(out.is_empty());
+        top_k_in_subset(&x, &subset, 3, &mut heap, &mut out);
+        assert_eq!(sorted(&out), vec![0, 2, 3]);
+        top_k_in_subset(&x, &subset, 10, &mut heap, &mut out);
+        assert_eq!(out.len(), 3, "k caps at the subset size");
+        top_k_in_subset(&x, &[], 2, &mut heap, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn fused_matches_two_pass_including_ties() {
+        let mut rng = Prng::new(5);
+        let (mut heap_a, mut heap_b) = (Vec::new(), Vec::new());
+        let (mut out_a, mut out_b) = (Vec::new(), Vec::new());
+        for _ in 0..100 {
+            let d = 1 + rng.below(200);
+            let k = 1 + rng.below(d);
+            let m: Vec<f32> = (0..d).map(|_| tied_value(&mut rng)).collect();
+            let g: Vec<f32> = (0..d).map(|_| tied_value(&mut rng)).collect();
+            let mut v_two = vec![0.0f32; d];
+            for i in 0..d {
+                v_two[i] = m[i] + 0.5 * g[i];
+            }
+            top_k_indices_with_heap(&v_two, k, &mut heap_a, &mut out_a);
+            let mut v_fused = vec![0.0f32; d];
+            top_k_fused(&m, &g, 0.5, &mut v_fused, k, &mut heap_b, &mut out_b);
+            assert_eq!(v_two, v_fused);
+            assert_eq!(sorted(&out_a), sorted(&out_b));
+        }
     }
 }

@@ -266,7 +266,7 @@ fn memsgd_step_artifact_matches_native_trajectory() {
                 "x[{j}] diverged at step {t}: {a} vs {b}"
             );
         }
-        for (j, (&a, &b)) in am.iter().zip(&native.m).enumerate() {
+        for (j, (&a, &b)) in am.iter().zip(native.memory()).enumerate() {
             assert!(
                 (a - b).abs() <= 1e-5 * (1.0 + b.abs()),
                 "m[{j}] diverged at step {t}: {a} vs {b}"

@@ -176,7 +176,7 @@ fn prop_checkpoint_roundtrip() {
         let ck = Checkpoint::capture(&opt, &spec, rng, None);
         let back = Checkpoint::from_bytes(&ck.to_bytes()).map_err(|e| e.to_string())?;
         ensure(back.x == opt.x, "x corrupted")?;
-        ensure(back.m == opt.m, "m corrupted")?;
+        ensure(back.m == opt.memory(), "m corrupted")?;
         ensure(back.t == opt.t, "t corrupted")?;
         ensure(back.bits_sent == opt.bits_sent, "bits corrupted")?;
         ensure(back.rng_state == rng.state(), "rng corrupted")
@@ -218,7 +218,7 @@ fn prop_checkpoint_resume_equivalence() {
             resumed.step(&grad_at(t), 0.07, &mut rng2);
         }
         ensure(resumed.x == full.x, format!("x diverged ({spec}, cut {cut})"))?;
-        ensure(resumed.m == full.m, "m diverged")?;
+        ensure(resumed.memory() == full.memory(), "m diverged")?;
         ensure(rng2.state() == full_rng.state(), "rng diverged")
     });
 }

@@ -4,7 +4,12 @@
 //!   **bit-identical** runs whether the backend emits gradients densely
 //!   or sparsely, on every `Topology × MethodSpec × LocalUpdate`
 //!   combination (run under both `cargo test` and `cargo test
-//!   --release`; CI exercises both profiles),
+//!   --release`; CI exercises both profiles). For the active-scan
+//!   compressors (top-k, threshold) the sparse side runs the
+//!   **dimension-free active-set route** — gen-stamped accumulator,
+//!   in-place local steps, `ErrorFeedbackStep::sync_active` — so this
+//!   suite pins that whole path against the dense reference, including
+//!   long runs where the active set saturates toward d,
 //! * exactness of the capability gate (`λ = 0` opts in, `λ ≠ 0` falls
 //!   back dense),
 //! * allocation discipline: the sparse phase buffers stop growing after
@@ -92,23 +97,33 @@ fn all_locals() -> Vec<LocalUpdate> {
     ]
 }
 
-fn run<B: GradBackend + Clone + Send>(
+fn run_steps<B: GradBackend + Clone + Send>(
     backend: B,
     method: &MethodSpec,
     topology: &Topology,
     local: LocalUpdate,
+    steps: usize,
 ) -> RunRecord {
     Experiment::new(backend)
         .method(method.clone())
         .schedule(Schedule::constant(ETA))
         .topology(topology.clone())
-        .steps(STEPS)
+        .steps(steps)
         .eval_points(4)
         .average(false)
         .seed(SEED)
         .local_update(local)
         .run()
         .unwrap()
+}
+
+fn run<B: GradBackend + Clone + Send>(
+    backend: B,
+    method: &MethodSpec,
+    topology: &Topology,
+    local: LocalUpdate,
+) -> RunRecord {
+    run_steps(backend, method, topology, local, STEPS)
 }
 
 fn assert_identical(dense: &RunRecord, sparse: &RunRecord, what: &str) {
@@ -135,6 +150,34 @@ fn dense_and_sparse_trajectories_are_bit_identical_everywhere() {
                 assert_identical(&rec_dense, &rec_sparse, &what);
             }
         }
+    }
+}
+
+#[test]
+fn active_set_saturation_stays_bit_identical() {
+    // Long top-1 runs on dense-ish rows: the residual's support (the
+    // active set the O(touched) sync path tracks) grows toward d and the
+    // per-phase touched set covers most coordinates — the regime where
+    // the active path degenerates to ~O(d) work and any bookkeeping slip
+    // (stale support, wrong zero-padding, tie drift) would surface.
+    // Trajectories must still match the forced-dense route bit for bit.
+    let ds = synthetic::rcv1_like(160, 48, 0.35, 29);
+    let method = MethodSpec::mem_top_k(1);
+    let local = LocalUpdate::new(2, 4).unwrap();
+    let steps = 1_600;
+    for topology in [Topology::Sequential, Topology::ParamServerSync { nodes: 3 }] {
+        let what = format!("saturation x {topology:?}");
+        let sparse_backend = LogisticModel::new(&ds, 0.0);
+        assert!(sparse_backend.supports_sparse_grad(), "{what}");
+        let rec_sparse = run_steps(sparse_backend, &method, &topology, local, steps);
+        let rec_dense = run_steps(
+            DenseShadow(LogisticModel::new(&ds, 0.0)),
+            &method,
+            &topology,
+            local,
+            steps,
+        );
+        assert_identical(&rec_dense, &rec_sparse, &what);
     }
 }
 
