@@ -219,6 +219,49 @@ fn main() {
         }
     }
 
+    // --- wire codec throughput (the threaded engines' per-message cost) ------
+    // Framed encode + decode of the two payload families the wire
+    // engines ship every sync: a top-10 sparse update at the RCV1
+    // dimension and a QSGD level stream at the epsilon dimension.
+    // Regression-gated via the committed baseline rows.
+    {
+        use memsgd::compress::elias::{decode_payload, BitReader, BitWriter};
+        use memsgd::compress::Compressor;
+
+        let d = 47_236usize;
+        let mut comp = compress::from_spec("top_k:10").unwrap();
+        let mut rng = Prng::new(11);
+        let mut out = Update::new_sparse(d);
+        let x: Vec<f32> = (0..d).map(|i| ((i % 97) as f32 - 48.0) * 0.01).collect();
+        comp.compress(&x, &mut rng, &mut out);
+        let mut w = BitWriter::new();
+        b.run(&gate::wire_encode_sparse_case(), || {
+            w.clear();
+            comp.encode_payload(&out, &mut w);
+        });
+        let bytes = w.as_bytes().to_vec();
+        b.run(&gate::wire_decode_sparse_case(), || {
+            let mut r = BitReader::new(&bytes);
+            decode_payload(&mut r, d).unwrap();
+        });
+
+        let d = 2_000usize;
+        let mut comp = compress::from_spec("qsgd:16").unwrap();
+        let mut out = Update::new_dense(d);
+        let x: Vec<f32> = (0..d).map(|i| ((i % 31) as f32 - 15.0) * 0.05).collect();
+        comp.compress(&x, &mut rng, &mut out);
+        let mut w = BitWriter::new();
+        b.run(&gate::wire_encode_qsgd_case(), || {
+            w.clear();
+            comp.encode_payload(&out, &mut w);
+        });
+        let bytes = w.as_bytes().to_vec();
+        b.run(&gate::wire_decode_qsgd_case(), || {
+            let mut r = BitReader::new(&bytes);
+            decode_payload(&mut r, d).unwrap();
+        });
+    }
+
     // --- weighted averaging overhead ------------------------------------------
     {
         let d = 2_000;

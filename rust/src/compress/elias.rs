@@ -1,12 +1,14 @@
 //! Exact wire encodings: a real bitstream with Elias-γ / Elias-δ integer
-//! codes, plus encoders for the two payload families the paper transmits.
+//! codes, plus encoders for the two payload families the paper transmits
+//! — and the **typed payload framing** the threaded parameter-server
+//! engines put on an actual channel.
 //!
 //! The paper accounts bits with closed-form *estimates* (Appendix B:
 //! `3s(s+√d)+32` for QSGD-with-Elias; `k(32 + log d)` for sparse
 //! updates, footnote 5). This module makes the accounting exact: it
 //! serializes updates into a byte buffer and reports the measured bit
 //! count, so `benches/figure3_qsgd.rs` can cross-check the formulas the
-//! figures rely on and the distributed simulator can charge the network
+//! figures rely on and the distributed engines can charge the network
 //! model with real message sizes.
 //!
 //! Wire formats:
@@ -15,10 +17,41 @@
 //! * **QSGD payload** ([`encode_qsgd`]): 32-bit norm, then for each
 //!   nonzero level: `γ(index-delta+1)`, sign bit, `γ(level)` — the
 //!   encoding of Alistarh et al. §3.2.
+//!
+//! ## Payload framing
+//!
+//! [`decode_payload`] / the `encode_payload_*` family frame one
+//! compressed [`Update`] as a self-describing bitstream: a γ-coded tag
+//! selecting the body codec, then the body. Every
+//! [`super::Compressor`] has a frame (the trait's
+//! [`super::Compressor::encode_payload`] picks it), and decoding
+//! reconstructs the update **bit for bit** — every f32 value including
+//! zero-valued padding coordinates and signed zeros — which is what
+//! lets the threaded engines stay on the simulated engines' exact
+//! trajectories while shipping real bytes
+//! (`tests/wire_protocol.rs`).
+//!
+//! | tag | body | producers |
+//! |---|---|---|
+//! | [`TAG_SPARSE`] | [`encode_sparse`] | top-k, rand-k, random-p, block-top-k, threshold, unbiased rand-k |
+//! | [`TAG_DENSE_RAW`] | `γ(d+1)`, `d` raw f32 | identity; dense fallback |
+//! | [`TAG_DENSE_NZ`] | `γ(d+1)`, [`encode_sparse`] of the bitwise-nonzero entries | dense vectors that are mostly `+0.0` |
+//! | [`TAG_SIGN`] | `γ(d+1)`, f32 scale, `d` sign bits (omitted at scale 0) | 1Bit-SGD sign compression |
+//! | [`TAG_QSGD`] | `γ(d+1)`, `γ(s)`, [`encode_qsgd`] | QSGD quantization |
+//!
+//! The generic dense encoder chooses `TAG_DENSE_NZ` vs `TAG_DENSE_RAW`
+//! by exact bit cost, so the choice is a deterministic function of the
+//! payload content.
+//!
+//! All decoders are **total**: truncated, corrupted, or adversarial
+//! byte streams return descriptive errors — no panics, no unbounded
+//! allocation from a hostile `nnz`/index/level field (property-tested
+//! in `tests/proptest_invariants.rs`).
 
 use anyhow::{bail, Result};
 
 use super::sparse::SparseVec;
+use super::Update;
 
 /// Append-only bit buffer (MSB-first within each byte).
 #[derive(Clone, Debug, Default)]
@@ -188,15 +221,31 @@ pub fn encode_sparse(s: &SparseVec, w: &mut BitWriter) -> u64 {
 }
 
 /// Decode a sparse update produced by [`encode_sparse`].
+///
+/// Total on arbitrary input: a hostile `nnz` field is rejected before
+/// any allocation (valid payloads have strictly increasing indices
+/// below `dim`, so `nnz ≤ dim` always), and index arithmetic is
+/// checked — truncation and corruption produce descriptive errors,
+/// never panics.
 pub fn decode_sparse(r: &mut BitReader<'_>, dim: usize) -> Result<SparseVec> {
     let nnz = r.get_gamma()? - 1;
+    if nnz > dim as u64 {
+        bail!("decoded nnz {nnz} exceeds dimension {dim}");
+    }
     let mut out = SparseVec::new(dim);
     let mut prev = 0u64;
     for rank in 0..nnz {
         let delta = r.get_gamma()? - 1;
-        let i = if rank == 0 { delta } else { prev + 1 + delta };
+        let i = if rank == 0 {
+            delta
+        } else {
+            match prev.checked_add(1).and_then(|p| p.checked_add(delta)) {
+                Some(i) => i,
+                None => bail!("decoded index overflows (Δ {delta} after {prev})"),
+            }
+        };
         prev = i;
-        if i as usize >= dim {
+        if i >= dim as u64 {
             bail!("decoded index {i} out of dimension {dim}");
         }
         let v = r.get_f32()?;
@@ -231,20 +280,39 @@ pub fn encode_qsgd(norm: f32, levels: &[i32], w: &mut BitWriter) -> u64 {
 }
 
 /// Decode a QSGD payload back into `(norm, levels)`.
+///
+/// Total on arbitrary input, like [`decode_sparse`]: hostile `nnz` is
+/// rejected before work proportional to it, index arithmetic is
+/// checked, and a level magnitude beyond `i32::MAX` is a descriptive
+/// error rather than a silent truncation.
 pub fn decode_qsgd(r: &mut BitReader<'_>, dim: usize) -> Result<(f32, Vec<i32>)> {
     let norm = r.get_f32()?;
     let nnz = r.get_gamma()? - 1;
+    if nnz > dim as u64 {
+        bail!("decoded nnz {nnz} exceeds dimension {dim}");
+    }
     let mut levels = vec![0i32; dim];
     let mut prev = 0u64;
     for rank in 0..nnz {
         let delta = r.get_gamma()? - 1;
-        let i = if rank == 0 { delta } else { prev + 1 + delta };
+        let i = if rank == 0 {
+            delta
+        } else {
+            match prev.checked_add(1).and_then(|p| p.checked_add(delta)) {
+                Some(i) => i,
+                None => bail!("decoded index overflows (Δ {delta} after {prev})"),
+            }
+        };
         prev = i;
-        if i as usize >= dim {
+        if i >= dim as u64 {
             bail!("decoded index {i} out of dimension {dim}");
         }
         let neg = r.get_bit()?;
-        let mag = r.get_gamma()? as i32;
+        let mag = r.get_gamma()?;
+        if mag > i32::MAX as u64 {
+            bail!("decoded level magnitude {mag} out of i32 range");
+        }
+        let mag = mag as i32;
         levels[i as usize] = if neg { -mag } else { mag };
     }
     Ok((norm, levels))
@@ -254,6 +322,193 @@ pub fn decode_qsgd(r: &mut BitReader<'_>, dim: usize) -> Result<(f32, Vec<i32>)>
 pub fn gamma_bits(v: u64) -> u64 {
     debug_assert!(v >= 1);
     2 * (63 - v.leading_zeros() as u64) + 1
+}
+
+// ---------------------------------------------------------------------------
+// Payload framing (see the module docs for the tag table)
+// ---------------------------------------------------------------------------
+
+/// Frame tag: sparse coordinate list ([`encode_sparse`] body).
+pub const TAG_SPARSE: u64 = 1;
+/// Frame tag: dense vector as `d` raw f32s.
+pub const TAG_DENSE_RAW: u64 = 2;
+/// Frame tag: dense vector as the sparse list of its bitwise-nonzero
+/// entries (entries whose IEEE bits are not `+0.0`; `-0.0` is stored
+/// explicitly, so the round-trip is exact for every dense vector).
+pub const TAG_DENSE_NZ: u64 = 3;
+/// Frame tag: sign compression — one f32 scale plus `d` sign bits.
+pub const TAG_SIGN: u64 = 4;
+/// Frame tag: QSGD quantization — `γ(s)` then an [`encode_qsgd`] body.
+pub const TAG_QSGD: u64 = 5;
+
+/// Frame a sparse update: `γ(TAG_SPARSE)` + [`encode_sparse`].
+/// Returns the payload bit count (tag included).
+pub fn encode_payload_sparse(s: &SparseVec, w: &mut BitWriter) -> u64 {
+    let before = w.bits();
+    w.put_gamma(TAG_SPARSE);
+    encode_sparse(s, w);
+    w.bits() - before
+}
+
+/// Frame a dense vector, choosing `TAG_DENSE_NZ` vs `TAG_DENSE_RAW` by
+/// exact bit cost (a deterministic function of the content). The
+/// nonzero-coded form stores every entry whose IEEE bits differ from
+/// `+0.0` — including `-0.0` — so either form decodes back bit for bit.
+pub fn encode_payload_dense(g: &[f32], w: &mut BitWriter) -> u64 {
+    let before = w.bits();
+    let d = g.len() as u64;
+    // Exact cost of the nonzero-coded body (indices ascend, so the
+    // deltas here are exactly what the encoder below writes).
+    let mut nnz = 0u64;
+    let mut nz_body = 0u64;
+    let mut prev = 0u64;
+    let mut first = true;
+    for (i, &v) in g.iter().enumerate() {
+        if v.to_bits() == 0 {
+            continue;
+        }
+        let i = i as u64;
+        let delta = if first { i } else { i - prev - 1 };
+        first = false;
+        prev = i;
+        nz_body += gamma_bits(delta + 1) + 32;
+        nnz += 1;
+    }
+    nz_body += gamma_bits(nnz + 1);
+    if nz_body < 32 * d {
+        w.put_gamma(TAG_DENSE_NZ);
+        w.put_gamma(d + 1);
+        w.put_gamma(nnz + 1);
+        let mut prev = 0u64;
+        let mut first = true;
+        for (i, &v) in g.iter().enumerate() {
+            if v.to_bits() == 0 {
+                continue;
+            }
+            let i = i as u64;
+            let delta = if first { i } else { i - prev - 1 };
+            first = false;
+            prev = i;
+            w.put_gamma(delta + 1);
+            w.put_f32(v);
+        }
+    } else {
+        w.put_gamma(TAG_DENSE_RAW);
+        w.put_gamma(d + 1);
+        for &v in g {
+            w.put_f32(v);
+        }
+    }
+    w.bits() - before
+}
+
+/// Frame a sign-compressed dense vector: `γ(TAG_SIGN)`, `γ(d+1)`, the
+/// f32 scale, then (when the scale is positive) one sign bit per
+/// coordinate. Precondition (checked by the [`super::SignSgd`] caller):
+/// every entry is bitwise `±scale`, or every entry is bitwise `+0.0`.
+pub fn encode_payload_sign(g: &[f32], scale: f32, w: &mut BitWriter) -> u64 {
+    let before = w.bits();
+    w.put_gamma(TAG_SIGN);
+    w.put_gamma(g.len() as u64 + 1);
+    w.put_f32(scale);
+    if scale > 0.0 {
+        for &v in g {
+            w.put_bit(v < 0.0);
+        }
+    }
+    w.bits() - before
+}
+
+/// Frame a QSGD quantization: `γ(TAG_QSGD)`, `γ(d+1)`, `γ(s)`, then an
+/// [`encode_qsgd`] body. The decoder dequantizes with the compressor's
+/// literal expression `norm · sign · (level / s)`, so the payload
+/// reconstructs the transmitted dense update bit for bit.
+pub fn encode_payload_qsgd(s: u32, norm: f32, levels: &[i32], w: &mut BitWriter) -> u64 {
+    debug_assert!(s >= 1);
+    let before = w.bits();
+    w.put_gamma(TAG_QSGD);
+    w.put_gamma(levels.len() as u64 + 1);
+    w.put_gamma(s as u64);
+    encode_qsgd(norm, levels, w);
+    w.bits() - before
+}
+
+/// Frame any [`Update`] through the generic codecs — the default of
+/// [`super::Compressor::encode_payload`].
+pub fn encode_payload_update(update: &Update, w: &mut BitWriter) -> u64 {
+    match update {
+        Update::Sparse(s) => encode_payload_sparse(s, w),
+        Update::Dense(g) => encode_payload_dense(g, w),
+    }
+}
+
+/// Read and validate the framed dimension field against the dimension
+/// the caller expects.
+fn expect_dim(r: &mut BitReader<'_>, dim: usize) -> Result<()> {
+    let d = r.get_gamma()? - 1;
+    if d != dim as u64 {
+        bail!("payload dimension {d} does not match expected {dim}");
+    }
+    Ok(())
+}
+
+/// Decode one framed payload back into the exact [`Update`] it encoded.
+///
+/// Total on arbitrary input: unknown tags, dimension mismatches,
+/// truncation, and hostile counts all return descriptive errors (the
+/// robustness suite in `tests/proptest_invariants.rs` fuzzes this
+/// entry point alongside the raw body decoders).
+pub fn decode_payload(r: &mut BitReader<'_>, dim: usize) -> Result<Update> {
+    match r.get_gamma()? {
+        TAG_SPARSE => Ok(Update::Sparse(decode_sparse(r, dim)?)),
+        TAG_DENSE_RAW => {
+            expect_dim(r, dim)?;
+            let mut g = vec![0.0f32; dim];
+            for gi in g.iter_mut() {
+                *gi = r.get_f32()?;
+            }
+            Ok(Update::Dense(g))
+        }
+        TAG_DENSE_NZ => {
+            expect_dim(r, dim)?;
+            let s = decode_sparse(r, dim)?;
+            let mut g = vec![0.0f32; dim];
+            for (&i, &v) in s.idx.iter().zip(&s.val) {
+                g[i as usize] = v;
+            }
+            Ok(Update::Dense(g))
+        }
+        TAG_SIGN => {
+            expect_dim(r, dim)?;
+            let scale = r.get_f32()?;
+            let mut g = vec![0.0f32; dim];
+            if scale > 0.0 {
+                for gi in g.iter_mut() {
+                    *gi = if r.get_bit()? { -scale } else { scale };
+                }
+            }
+            Ok(Update::Dense(g))
+        }
+        TAG_QSGD => {
+            expect_dim(r, dim)?;
+            let s = r.get_gamma()?;
+            if s > i32::MAX as u64 {
+                bail!("decoded QSGD level count {s} out of range");
+            }
+            let sf = s as f32;
+            let (norm, levels) = decode_qsgd(r, dim)?;
+            let mut g = vec![0.0f32; dim];
+            for (gi, &l) in g.iter_mut().zip(&levels) {
+                if l != 0 {
+                    let sgn = if l < 0 { -1.0f32 } else { 1.0 };
+                    // The compressor's literal dequantization expression.
+                    *gi = norm * sgn * (l.unsigned_abs() as f32 / sf);
+                }
+            }
+            Ok(Update::Dense(g))
+        }
+        other => bail!("unknown payload tag {other}"),
+    }
 }
 
 #[cfg(test)]
@@ -421,5 +676,160 @@ mod tests {
         w.put_gamma(5);
         let mut r = BitReader::new(w.as_bytes());
         assert_eq!(r.get_gamma().unwrap(), 5);
+    }
+
+    #[test]
+    fn hostile_nnz_is_rejected_before_allocation() {
+        // γ(2^40) as the nnz field: must bail on the count check, not
+        // loop/allocate its way to stream exhaustion.
+        let mut w = BitWriter::new();
+        w.put_gamma(1u64 << 40);
+        let mut r = BitReader::new(w.as_bytes());
+        let err = decode_sparse(&mut r, 100).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds dimension"), "{err:#}");
+        let mut w = BitWriter::new();
+        w.put_f32(1.0);
+        w.put_gamma(1u64 << 40);
+        let mut r = BitReader::new(w.as_bytes());
+        let err = decode_qsgd(&mut r, 100).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds dimension"), "{err:#}");
+    }
+
+    #[test]
+    fn hostile_level_magnitude_is_rejected() {
+        // norm, nnz=1, index delta, sign, then a γ level beyond i32.
+        let mut w = BitWriter::new();
+        w.put_f32(1.0);
+        w.put_gamma(2); // nnz = 1
+        w.put_gamma(1); // index 0
+        w.put_bit(false);
+        w.put_gamma(1u64 << 40);
+        let mut r = BitReader::new(w.as_bytes());
+        let err = decode_qsgd(&mut r, 4).unwrap_err();
+        assert!(format!("{err:#}").contains("out of i32 range"), "{err:#}");
+    }
+
+    fn roundtrip_payload(update: &Update, dim: usize) -> (Update, u64) {
+        let mut w = BitWriter::new();
+        let bits = encode_payload_update(update, &mut w);
+        let mut r = BitReader::new(w.as_bytes());
+        let back = decode_payload(&mut r, dim).unwrap();
+        assert_eq!(r.consumed(), bits, "consumed == produced");
+        (back, bits)
+    }
+
+    fn bits_of(update: &Update, dim: usize) -> Vec<u32> {
+        update.to_dense(dim).iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn payload_sparse_roundtrips_including_zero_valued_entries() {
+        // Zero-valued padding coordinates (top-k tie padding) must
+        // survive: they cost wire bits and occupy server slots.
+        let mut s = SparseVec::new(50);
+        s.push(3, -1.5);
+        s.push(17, 0.0);
+        s.push(40, f32::MIN_POSITIVE);
+        let u = Update::Sparse(s);
+        let (back, _) = roundtrip_payload(&u, 50);
+        match (&u, &back) {
+            (Update::Sparse(a), Update::Sparse(b)) => {
+                // Encoder sorts; index/value multisets must agree exactly.
+                let mut want: Vec<(u32, u32)> =
+                    a.idx.iter().zip(&a.val).map(|(&i, &v)| (i, v.to_bits())).collect();
+                want.sort_unstable();
+                let got: Vec<(u32, u32)> =
+                    b.idx.iter().zip(&b.val).map(|(&i, &v)| (i, v.to_bits())).collect();
+                assert_eq!(got, want);
+            }
+            _ => panic!("kind changed through the codec"),
+        }
+    }
+
+    #[test]
+    fn payload_dense_roundtrips_signed_zeros_bitwise() {
+        let g = vec![0.0f32, -0.0, 1.25, 0.0, -3.5e-20, 0.0, 0.0, 0.0];
+        let u = Update::Dense(g);
+        let (back, _) = roundtrip_payload(&u, 8);
+        assert_eq!(bits_of(&back, 8), bits_of(&u, 8));
+        assert!(matches!(back, Update::Dense(_)));
+    }
+
+    #[test]
+    fn payload_dense_picks_the_cheaper_form() {
+        // Mostly-zero: nonzero-coded beats raw.
+        let mut g = vec![0.0f32; 1000];
+        g[7] = 1.0;
+        let mut w = BitWriter::new();
+        let bits = encode_payload_dense(&g, &mut w);
+        assert!(bits < 32 * 1000, "nz-coded: {bits}");
+        let mut r = BitReader::new(w.as_bytes());
+        assert_eq!(r.get_gamma().unwrap(), TAG_DENSE_NZ);
+        // Fully dense: raw wins (nz coding would add index overhead).
+        let g: Vec<f32> = (0..100).map(|i| i as f32 + 0.5).collect();
+        let mut w = BitWriter::new();
+        let bits = encode_payload_dense(&g, &mut w);
+        let mut r = BitReader::new(w.as_bytes());
+        assert_eq!(r.get_gamma().unwrap(), TAG_DENSE_RAW);
+        assert_eq!(bits, gamma_bits(TAG_DENSE_RAW) + gamma_bits(101) + 32 * 100);
+    }
+
+    #[test]
+    fn payload_sign_roundtrips_bitwise() {
+        let scale = 0.375f32;
+        let g = vec![scale, -scale, scale, scale, -scale];
+        let mut w = BitWriter::new();
+        let bits = encode_payload_sign(&g, scale, &mut w);
+        // Exactly the accounted d + 32 plus the frame header.
+        assert_eq!(bits, gamma_bits(TAG_SIGN) + gamma_bits(6) + 32 + 5);
+        let mut r = BitReader::new(w.as_bytes());
+        let back = decode_payload(&mut r, 5).unwrap();
+        assert_eq!(bits_of(&back, 5), bits_of(&Update::Dense(g), 5));
+        // Zero scale: no sign bits on the wire, all-+0.0 back.
+        let mut w = BitWriter::new();
+        let bits = encode_payload_sign(&[0.0; 4], 0.0, &mut w);
+        assert_eq!(bits, gamma_bits(TAG_SIGN) + gamma_bits(5) + 32);
+        let mut r = BitReader::new(w.as_bytes());
+        let back = decode_payload(&mut r, 4).unwrap();
+        assert_eq!(bits_of(&back, 4), vec![0u32; 4]);
+    }
+
+    #[test]
+    fn payload_qsgd_roundtrips_the_dequantized_update_bitwise() {
+        let s = 16u32;
+        let norm = 2.7182817f32;
+        let levels = vec![0i32, 3, -1, 0, 16, -7, 0, 0];
+        let sf = s as f32;
+        let g: Vec<f32> = levels
+            .iter()
+            .map(|&l| {
+                if l == 0 {
+                    0.0
+                } else {
+                    let sgn = if l < 0 { -1.0f32 } else { 1.0 };
+                    norm * sgn * (l.unsigned_abs() as f32 / sf)
+                }
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        let bits = encode_payload_qsgd(s, norm, &levels, &mut w);
+        let mut r = BitReader::new(w.as_bytes());
+        let back = decode_payload(&mut r, 8).unwrap();
+        assert_eq!(r.consumed(), bits);
+        assert_eq!(bits_of(&back, 8), bits_of(&Update::Dense(g), 8));
+    }
+
+    #[test]
+    fn payload_decode_rejects_dimension_mismatch_and_unknown_tag() {
+        let mut w = BitWriter::new();
+        encode_payload_dense(&[1.0f32; 8], &mut w);
+        let mut r = BitReader::new(w.as_bytes());
+        let err = decode_payload(&mut r, 9).unwrap_err();
+        assert!(format!("{err:#}").contains("does not match"), "{err:#}");
+        let mut w = BitWriter::new();
+        w.put_gamma(99);
+        let mut r = BitReader::new(w.as_bytes());
+        let err = decode_payload(&mut r, 4).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown payload tag"), "{err:#}");
     }
 }

@@ -82,6 +82,26 @@ impl Update {
         }
     }
 
+    /// `x -= scale·update` — how a parameter-server replica applies an
+    /// aggregated broadcast (`scale = 1/nodes`). Sparse payloads apply
+    /// in stored order; the wire path stores them index-sorted, which
+    /// mirrors the server's own sorted fold.
+    pub fn sub_scaled_from(&self, scale: f32, x: &mut [f32]) {
+        match self {
+            Update::Sparse(s) => {
+                for (&i, &v) in s.idx.iter().zip(&s.val) {
+                    x[i as usize] -= v * scale;
+                }
+            }
+            Update::Dense(g) => {
+                debug_assert_eq!(g.len(), x.len());
+                for (xi, &gi) in x.iter_mut().zip(g) {
+                    *xi -= gi * scale;
+                }
+            }
+        }
+    }
+
     /// Densify (test / metrics helper; allocates).
     pub fn to_dense(&self, dim: usize) -> Vec<f32> {
         match self {
@@ -170,6 +190,24 @@ pub trait Compressor: Send {
         _out: &mut Update,
     ) -> Option<u64> {
         None
+    }
+
+    /// Serialize an update this operator produced into its typed wire
+    /// payload (framing tag + Elias-coded body) — the bits the threaded
+    /// parameter-server engines actually put on a channel. Returns the
+    /// payload bit count.
+    ///
+    /// Contract: [`elias::decode_payload`] on the written bits must
+    /// reconstruct `update` **bit for bit** — every f32 value,
+    /// including zero-valued padding coordinates and signed zeros —
+    /// regardless of which update is passed (operators that frame from
+    /// internal scratch, like QSGD's level stream, verify the scratch
+    /// against `update` and fall back to the generic codec on any
+    /// mismatch). The default frames generically: sparse list →
+    /// [`elias::encode_payload_sparse`], dense →
+    /// [`elias::encode_payload_dense`].
+    fn encode_payload(&self, update: &Update, w: &mut elias::BitWriter) -> u64 {
+        elias::encode_payload_update(update, w)
     }
 }
 
@@ -428,6 +466,15 @@ mod tests {
         assert_eq!(x, vec![4.0, 5.0, 5.0, 3.0]);
         Update::Sparse(SparseVec::from_parts(4, vec![1], vec![1.0])).sub_from(&mut x);
         assert_eq!(x, vec![4.0, 4.0, 5.0, 3.0]);
+    }
+
+    #[test]
+    fn update_sub_scaled_from_dense_and_sparse() {
+        let mut x = vec![4.0f32; 4];
+        Update::Dense(vec![2.0, 0.0, 4.0, 8.0]).sub_scaled_from(0.5, &mut x);
+        assert_eq!(x, vec![3.0, 4.0, 2.0, 0.0]);
+        Update::Sparse(SparseVec::from_parts(4, vec![3], vec![2.0])).sub_scaled_from(0.5, &mut x);
+        assert_eq!(x, vec![3.0, 4.0, 2.0, -1.0]);
     }
 
     #[test]

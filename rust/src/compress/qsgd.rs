@@ -13,7 +13,7 @@
 //! estimate of [3, Theorem 3.2]. For sparse datasets the effective
 //! dimension can be overridden (`d ≈ 71` for RCV1), again as in Appendix B.
 
-use super::{Compressor, Update};
+use super::{elias, Compressor, Update};
 use crate::util::prng::Prng;
 use crate::util::stats;
 
@@ -23,6 +23,13 @@ use crate::util::stats;
 pub struct Qsgd {
     pub levels: u32,
     pub effective_dim: Option<usize>,
+    /// Wire scratch: the signed levels and norm of the last
+    /// quantization, kept so [`Compressor::encode_payload`] can frame
+    /// the native `(norm, levels)` stream instead of a dense f32 dump.
+    /// Empty until the first `compress` (or when `levels` exceeds the
+    /// payload's i32 range — then the generic dense codec is used).
+    wire_levels: Vec<i32>,
+    wire_norm: f32,
 }
 
 impl Qsgd {
@@ -35,7 +42,30 @@ impl Qsgd {
         Qsgd {
             levels,
             effective_dim,
+            wire_levels: Vec::new(),
+            wire_norm: 0.0,
         }
+    }
+
+    /// Whether `update` is exactly the dequantization of the stored
+    /// wire scratch — the mirror of `elias::decode_payload`'s QSGD arm,
+    /// so a `true` here guarantees the framed payload decodes back to
+    /// `update` bit for bit.
+    fn scratch_matches(&self, update: &Update) -> bool {
+        let Update::Dense(g) = update else { return false };
+        if g.len() != self.wire_levels.len() {
+            return false;
+        }
+        let sf = self.levels as f32;
+        g.iter().zip(&self.wire_levels).all(|(&v, &l)| {
+            let want = if l == 0 {
+                0.0f32
+            } else {
+                let sgn = if l < 0 { -1.0f32 } else { 1.0 };
+                self.wire_norm * sgn * (l.unsigned_abs() as f32 / sf)
+            };
+            want.to_bits() == v.to_bits()
+        })
     }
 
     /// Number of bits QSGD pays to transmit one `d`-dimensional gradient
@@ -75,19 +105,49 @@ impl Compressor for Qsgd {
         };
         g.clear();
         g.resize(d, 0.0);
+        // Maintain the wire scratch alongside the quantization (skipped
+        // when `s` exceeds the payload's i32 level range — the generic
+        // dense codec takes over in encode_payload).
+        let track_wire = self.levels <= i32::MAX as u32;
+        self.wire_levels.clear();
+        if track_wire {
+            self.wire_levels.resize(d, 0);
+        }
         let norm = stats::l2_norm(x) as f32;
+        self.wire_norm = norm;
         if norm == 0.0 {
             return self.bits_for_dim(d);
         }
         let s = self.levels as f32;
-        for (gi, &xi) in g.iter_mut().zip(x) {
+        for (i, (gi, &xi)) in g.iter_mut().zip(x).enumerate() {
             let u = xi.abs() / norm * s; // in [0, s]
             let l = u.floor();
             let p = u - l;
             let level = l + if rng.bernoulli(p as f64) { 1.0 } else { 0.0 };
+            // A zero level is an exact +0.0 on the wire (and here), not
+            // a signed zero — what makes the payload round-trip exact.
+            if level == 0.0 {
+                continue;
+            }
             *gi = norm * xi.signum() * (level / s);
+            if track_wire {
+                let mag = level as i32;
+                self.wire_levels[i] = if xi < 0.0 { -mag } else { mag };
+            }
         }
         self.bits_for_dim(d)
+    }
+
+    /// Frame the native `(norm, signed levels)` stream of Alistarh et
+    /// al. §3.2 when `update` is verifiably the last quantization this
+    /// operator produced; otherwise fall back to the generic dense
+    /// codec (which is always exact).
+    fn encode_payload(&self, update: &Update, w: &mut elias::BitWriter) -> u64 {
+        if self.scratch_matches(update) {
+            elias::encode_payload_qsgd(self.levels, self.wire_norm, &self.wire_levels, w)
+        } else {
+            elias::encode_payload_update(update, w)
+        }
     }
 }
 
@@ -199,5 +259,50 @@ mod tests {
         assert_eq!(Qsgd::new(4).name(), "qsgd_2bit");
         assert_eq!(Qsgd::new(16).name(), "qsgd_4bit");
         assert_eq!(Qsgd::new(256).name(), "qsgd_8bit");
+    }
+
+    #[test]
+    fn zero_levels_are_unsigned_zeros() {
+        // Negative coordinates quantized to level 0 must come out as
+        // exact +0.0 (not -0.0): the wire payload skips zero levels, so
+        // a signed zero could never round-trip.
+        let mut c = Qsgd::new(2); // coarse: most small coords hit level 0
+        let mut rng = Prng::new(13);
+        let mut out = Update::new_dense(64);
+        let x: Vec<f32> = (0..64).map(|i| if i == 0 { 100.0 } else { -1e-6 }).collect();
+        c.compress(&x, &mut rng, &mut out);
+        if let Update::Dense(g) = &out {
+            assert!(g.iter().filter(|v| v.to_bits() == 0).count() > 32, "zeros expected");
+            assert!(g.iter().all(|v| v.to_bits() != (-0.0f32).to_bits()), "-0.0 leaked");
+        }
+    }
+
+    #[test]
+    fn native_payload_roundtrips_the_quantization_bitwise() {
+        use crate::compress::elias::{decode_payload, BitReader, BitWriter};
+        let mut c = Qsgd::new(16);
+        let mut rng = Prng::new(21);
+        let mut out = Update::new_dense(200);
+        let x: Vec<f32> = (0..200).map(|i| ((i * 7 % 23) as f32 - 11.0) * 0.1).collect();
+        c.compress(&x, &mut rng, &mut out);
+        let mut w = BitWriter::new();
+        let bits = c.encode_payload(&out, &mut w);
+        // The native frame beats a raw dense dump by a wide margin.
+        assert!(bits < 32 * 200, "native frame not engaged: {bits} bits");
+        let mut r = BitReader::new(w.as_bytes());
+        let back = decode_payload(&mut r, 200).unwrap();
+        assert_eq!(r.consumed(), bits);
+        let want: Vec<u32> = out.to_dense(200).iter().map(|v| v.to_bits()).collect();
+        let got: Vec<u32> = back.to_dense(200).iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want);
+        // A foreign update (not this operator's last quantization) must
+        // still round-trip — via the generic fallback.
+        let foreign = Update::Dense(vec![0.123f32; 200]);
+        let mut w = BitWriter::new();
+        let bits = c.encode_payload(&foreign, &mut w);
+        let mut r = BitReader::new(w.as_bytes());
+        let back = decode_payload(&mut r, 200).unwrap();
+        assert_eq!(r.consumed(), bits);
+        assert_eq!(back.to_dense(200), foreign.to_dense(200));
     }
 }

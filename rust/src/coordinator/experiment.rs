@@ -74,6 +74,27 @@
 //! for bit** for deterministic compressors — the cross-topology
 //! consistency test in `tests/experiment_api.rs` pins this down.
 //!
+//! ## Wire mode (real threads, real bytes)
+//!
+//! [`Experiment::wire`] moves the two parameter-server topologies from
+//! the single-threaded simulation onto a real message-passing runtime
+//! ([`super::transport`]): one server thread plus `nodes` worker
+//! threads, every update **serialized through the Elias payload codec**
+//! ([`crate::compress::elias::decode_payload`]) and shipped over a
+//! [`super::transport::Transport`] channel. `ParamServerSync` runs
+//! barriered rounds with node-id-ordered aggregation; the server
+//! receives each node's upload in id order, so the floating-point fold
+//! — and with it the whole trajectory — is **bit-identical** to the
+//! simulated engine. `ParamServerAsync` keeps the simulated engine's
+//! seeded discrete-event heap on the server as the delivery-order
+//! arbiter: workers compute on live threads, but the heap decides whose
+//! upload the server takes next, so simulated-time results stay
+//! reproducible (and, again, bit-identical — `tests/wire_protocol.rs`
+//! pins both engines on every MethodSpec × LocalUpdate combination).
+//! The run record keeps the paper's closed-form bit accounting (so
+//! curves stay comparable across modes) and reports the measured bytes
+//! that actually crossed the channel in the `wire_*` extras.
+//!
 //! The deprecated per-driver entry points
 //! ([`super::train::run`], [`super::parallel::run`],
 //! [`super::distributed::run`], [`super::async_dist::run`]) are thin
@@ -89,6 +110,11 @@ use anyhow::{bail, Result};
 
 use super::config::{LocalUpdate, MethodSpec};
 use super::parallel::SharedParams;
+use super::transport::{
+    decode_msg, encode_apply, encode_broadcast, encode_go, encode_shutdown, encode_upload,
+    Channel, Loopback, Transport, WireMsg,
+};
+use crate::compress::elias::BitWriter;
 use crate::compress::{ActiveIndex, ActiveView, SparseVec, Update};
 use crate::metrics::{LossPoint, RunRecord};
 use crate::models::GradBackend;
@@ -170,6 +196,8 @@ pub struct Experiment<B: GradBackend> {
     compute: ComputeModel,
     hetero: f64,
     local: LocalUpdate,
+    wire: bool,
+    transport: Option<Box<dyn Transport>>,
 }
 
 impl<B: GradBackend> Experiment<B> {
@@ -189,6 +217,8 @@ impl<B: GradBackend> Experiment<B> {
             compute: ComputeModel::new(1e-9, 2000.0),
             hetero: 0.5,
             local: LocalUpdate::default(),
+            wire: false,
+            transport: None,
         }
     }
 
@@ -273,6 +303,28 @@ impl<B: GradBackend> Experiment<B> {
         self
     }
 
+    /// Run the parameter-server topologies on the threaded
+    /// message-passing runtime instead of the single-threaded
+    /// simulation: one server thread, `nodes` worker threads, every
+    /// update serialized through the Elias payload codec and carried by
+    /// an in-process loopback [`super::transport::Transport`].
+    /// Trajectories are bit-identical to the simulated engines (see the
+    /// module docs); requires [`Experiment::run`] (the backend is
+    /// replicated across worker threads) and a `ParamServerSync` /
+    /// `ParamServerAsync` topology.
+    pub fn wire(mut self, wire: bool) -> Self {
+        self.wire = wire;
+        self
+    }
+
+    /// [`Experiment::wire`] over a custom transport fabric (e.g. a
+    /// byte-counting wrapper — [`super::transport::CountingTransport`]).
+    pub fn wire_transport(mut self, transport: Box<dyn Transport>) -> Self {
+        self.wire = true;
+        self.transport = Some(transport);
+        self
+    }
+
     fn settings(&self) -> Settings {
         Settings {
             method: self.method.clone(),
@@ -297,6 +349,12 @@ impl<B: GradBackend> Experiment<B> {
         // literally constructed zero/overflowing LocalUpdate is refused,
         // not silently clamped.
         self.local.validate()?;
+        if self.wire {
+            bail!(
+                "the wire engines spawn worker threads and replicate the backend; \
+                 use run() (backend must be Clone + Send)"
+            );
+        }
         let s = self.settings();
         match self.topology.clone() {
             Topology::Sequential => sequential(&mut self.backend, &s),
@@ -333,6 +391,33 @@ impl<B: GradBackend + Clone + Send> Experiment<B> {
     /// Execute the run and return the unified [`RunRecord`].
     pub fn run(mut self) -> Result<RunRecord> {
         self.local.validate()?;
+        if self.wire {
+            let s = self.settings();
+            let mut transport = self.transport.take().unwrap_or_else(|| Box::new(Loopback));
+            return match self.topology.clone() {
+                Topology::ParamServerSync { nodes } => {
+                    param_server_sync_wire(&mut self.backend, nodes, &mut *transport, &s)
+                }
+                Topology::ParamServerAsync { nodes, net } => {
+                    let compute = self.compute.clone();
+                    let hetero = self.hetero;
+                    param_server_async_wire(
+                        &mut self.backend,
+                        nodes,
+                        &net,
+                        &compute,
+                        hetero,
+                        &mut *transport,
+                        &s,
+                    )
+                }
+                other => bail!(
+                    "wire transport applies to the parameter-server topologies \
+                     (ParamServerSync / ParamServerAsync); got {other:?} — drop \
+                     .wire(true) or change the topology"
+                ),
+            };
+        }
         match self.topology.clone() {
             Topology::SharedMemory { workers } => {
                 let s = self.settings();
@@ -1004,6 +1089,513 @@ pub(crate) fn param_server_async<B: GradBackend>(
     Ok(record)
 }
 
+// ---------------------------------------------------------------------------
+// Wire engines: the parameter-server topologies on real threads, with
+// every update serialized through the Elias payload codec and carried
+// by a `Transport` channel (see `super::transport` for the format).
+// ---------------------------------------------------------------------------
+
+/// Join the wire worker threads, collecting each node's accounted
+/// upload bits. `served` (the server protocol's outcome) keeps error
+/// priority: a server-side failure is reported even when it also took
+/// the workers down with it; worker errors and panics surface next.
+fn join_wire_workers(
+    handles: Vec<std::thread::ScopedJoinHandle<'_, Result<u64>>>,
+    served: Result<()>,
+) -> Result<Vec<u64>> {
+    let mut bits = Vec::with_capacity(handles.len());
+    let mut worker_err: Option<anyhow::Error> = None;
+    for (node, hd) in handles.into_iter().enumerate() {
+        match hd.join() {
+            Ok(Ok(b)) => bits.push(b),
+            Ok(Err(e)) => {
+                if worker_err.is_none() {
+                    worker_err = Some(anyhow::anyhow!("worker {node}: {e:#}"));
+                }
+            }
+            Err(_) => {
+                if worker_err.is_none() {
+                    worker_err = Some(anyhow::anyhow!("worker {node} panicked"));
+                }
+            }
+        }
+    }
+    served?;
+    if let Some(e) = worker_err {
+        return Err(e);
+    }
+    Ok(bits)
+}
+
+/// Cross-check the accounted bits the workers carried in their upload
+/// headers (`upload_acc`, the server tally) against what their
+/// error-feedback states counted (`worker_bits`, returned at join).
+/// Returns the total — the record's upload accounting.
+fn check_wire_accounting(upload_acc: &[u64], worker_bits: &[u64]) -> Result<u64> {
+    let tallied: u64 = upload_acc.iter().sum();
+    let reported: u64 = worker_bits.iter().sum();
+    if tallied != reported {
+        bail!(
+            "wire protocol desync: workers counted {reported} upload bits, \
+             server tallied {tallied}"
+        );
+    }
+    Ok(tallied)
+}
+
+/// Per-node state of a wire-engine worker thread: the channel endpoint,
+/// a backend replica, the error-feedback state, the node's RNG stream,
+/// and the run configuration. Built on the server thread in node-id
+/// order (so the RNG split sequence matches the simulated engine) and
+/// moved into the worker thread whole.
+struct WireWorker<B> {
+    ch: Box<dyn Channel>,
+    backend: B,
+    ef: ErrorFeedbackStep,
+    rng: Prng,
+    schedule: Schedule,
+    local: LocalUpdate,
+    node: u32,
+    d: usize,
+    n: usize,
+}
+
+impl<B: GradBackend> WireWorker<B> {
+    /// Synchronous protocol: `rounds` barriered iterations of phase →
+    /// encoded upload → decoded broadcast, against a private model
+    /// replica that stays bit-identical to the server's iterate.
+    /// Returns the accounted upload bits (cross-checked by the server).
+    fn run_sync(mut self, rounds: usize, scale: f32) -> Result<u64> {
+        let mut x = vec![0.0f32; self.d];
+        let mut ws = WorkerScratch::new(self.d, self.n, self.local);
+        let mut w = BitWriter::new();
+        for round in 0..rounds {
+            // η is held constant within a round, exactly as in the
+            // simulated engine.
+            let etaf = self.schedule.eta(round) as f32;
+            let bits = ws.phase(&mut self.backend, &mut self.ef, &mut self.rng, &mut x, |_| etaf);
+            let node = self.node;
+            encode_upload(&mut w, round as u64, node, bits, self.ef.compressor(), self.ef.update());
+            self.ch.send(w.as_bytes())?;
+            let frame = self.ch.recv()?;
+            match decode_msg(&frame, self.d)?.msg {
+                WireMsg::Broadcast { round: r, update } if r == round as u64 => {
+                    // The simulated server's literal expression
+                    // (`x[j] -= v[j]·scale`), in ascending coordinate
+                    // order — the decoded aggregate arrives sorted.
+                    update.sub_scaled_from(scale, &mut x);
+                }
+                other => bail!("node {node}: unexpected {other:?} in round {round}"),
+            }
+        }
+        Ok(self.ef.bits_sent)
+    }
+
+    /// Asynchronous protocol: an event loop over `Apply` (keep the
+    /// replica current), `Go` (compute one phase at the server-named
+    /// version and upload it), and `Shutdown`. Per-channel FIFO
+    /// ordering guarantees every update the server applied before a
+    /// `Go` has reached the replica when the phase runs — the phase
+    /// sees exactly the simulated engine's iterate.
+    fn run_async(mut self) -> Result<u64> {
+        let mut x = vec![0.0f32; self.d];
+        let mut ws = WorkerScratch::new(self.d, self.n, self.local);
+        let mut w = BitWriter::new();
+        loop {
+            let frame = self.ch.recv()?;
+            match decode_msg(&frame, self.d)?.msg {
+                WireMsg::Apply { update, .. } => update.sub_from(&mut x),
+                WireMsg::Go { version } => {
+                    let etaf = self.schedule.eta(version as usize) as f32;
+                    let bits =
+                        ws.phase(&mut self.backend, &mut self.ef, &mut self.rng, &mut x, |_| etaf);
+                    encode_upload(
+                        &mut w,
+                        version,
+                        self.node,
+                        bits,
+                        self.ef.compressor(),
+                        self.ef.update(),
+                    );
+                    self.ch.send(w.as_bytes())?;
+                }
+                WireMsg::Shutdown => return Ok(self.ef.bits_sent),
+                other => bail!("node {}: unexpected {other:?}", self.node),
+            }
+        }
+    }
+}
+
+/// Threaded synchronous parameter server: one server (this thread) and
+/// `nodes` worker threads exchanging Elias-coded wire messages over
+/// `transport`. Barriered rounds with node-id-ordered aggregation keep
+/// the floating-point fold — and the whole trajectory, loss curve and
+/// accounted bits included — **bit-identical** to [`param_server_sync`]
+/// (`tests/wire_protocol.rs`). The measured bytes that actually crossed
+/// the channel land in the `wire_*` record extras.
+pub(crate) fn param_server_sync_wire<B: GradBackend + Clone + Send>(
+    backend: &mut B,
+    nodes: usize,
+    transport: &mut dyn Transport,
+    s: &Settings,
+) -> Result<RunRecord> {
+    let nodes = nodes.max(1);
+    let d = backend.dim();
+    let n = backend.n();
+    let local = s.local;
+    let h = local.sync_every.max(1);
+    let rounds = (s.steps / (nodes * h)).max(1);
+    let scale = 1.0 / nodes as f32;
+    let idx_bits = crate::compress::sparse::index_bits(d);
+    let mut root_rng = Prng::new(s.seed);
+
+    // Channels and per-node state, created in node-id order so the RNG
+    // split sequence matches the simulated engine exactly.
+    let mut server_ends: Vec<Box<dyn Channel>> = Vec::with_capacity(nodes);
+    let mut workers: Vec<WireWorker<B>> = Vec::with_capacity(nodes);
+    for w in 0..nodes {
+        let (se, we) = transport.duplex();
+        server_ends.push(se);
+        workers.push(WireWorker {
+            ch: we,
+            backend: backend.clone(),
+            ef: s.method.error_feedback(d),
+            rng: root_rng.split(w as u64 + 1),
+            schedule: s.schedule.clone(),
+            local,
+            node: w as u32,
+            d,
+            n,
+        });
+    }
+
+    let mut record = RunRecord {
+        method: record_method_name(&s.method, &Topology::ParamServerSync { nodes }),
+        dataset: s.dataset.clone(),
+        schedule: s.schedule.describe(),
+        ..Default::default()
+    };
+    let started = Instant::now();
+    let mut x = vec![0.0f32; d];
+    let eval_every = (rounds / s.eval_points.max(1)).max(1);
+    record.curve.push(LossPoint { t: 0, bits: 0, loss: backend.full_loss(&x) });
+
+    let mut upload_acc = vec![0u64; nodes];
+    let mut broadcast_bits = 0u64;
+    let (mut wire_up, mut wire_bc, mut wire_frames) = (0u64, 0u64, 0u64);
+
+    let worker_bits = std::thread::scope(|scope| -> Result<Vec<u64>> {
+        let mut handles = Vec::with_capacity(nodes);
+        for wk in workers {
+            handles.push(scope.spawn(move || wk.run_sync(rounds, scale)));
+        }
+
+        // The server protocol. Run as an immediately-invoked closure so
+        // an error releases the channel ends before the joins below —
+        // dropped ends turn every blocked worker `recv` into an error,
+        // so shutdown can never deadlock.
+        #[allow(clippy::redundant_closure_call)] // the call IS the scope of the borrows
+        let served = (|| -> Result<()> {
+            let mut agg: BTreeMap<u32, f32> = BTreeMap::new();
+            let mut agg_dense = vec![0.0f32; d];
+            let mut bc_update = Update::new_sparse(d);
+            let mut w = BitWriter::new();
+            for round in 0..rounds {
+                agg.clear();
+                let mut any_dense = false;
+                // Node-id-ordered aggregation: one blocking recv per
+                // node channel, in id order — the simulated engine's
+                // exact floating-point fold order.
+                for (node, ch) in server_ends.iter_mut().enumerate() {
+                    let frame = ch.recv()?;
+                    wire_frames += frame.len() as u64 * 8;
+                    let dec = decode_msg(&frame, d)?;
+                    match dec.msg {
+                        WireMsg::Upload { round: r, node: nid, accounted_bits, update }
+                            if r == round as u64 && nid == node as u32 =>
+                        {
+                            wire_up += dec.payload_bits;
+                            upload_acc[node] += accounted_bits;
+                            match update {
+                                Update::Sparse(sv) => {
+                                    for (&j, &vj) in sv.idx.iter().zip(&sv.val) {
+                                        *agg.entry(j).or_insert(0.0) += vj;
+                                    }
+                                }
+                                Update::Dense(g) => {
+                                    any_dense = true;
+                                    for (a, &gj) in agg_dense.iter_mut().zip(&g) {
+                                        *a += gj;
+                                    }
+                                }
+                            }
+                        }
+                        other => bail!(
+                            "server: unexpected {other:?} from node {node} in round {round}"
+                        ),
+                    }
+                }
+                // Frame the (unscaled) aggregate for the replicas.
+                if any_dense {
+                    match &mut bc_update {
+                        Update::Dense(g) => {
+                            g.clear();
+                            g.extend_from_slice(&agg_dense);
+                        }
+                        other => *other = Update::Dense(agg_dense.clone()),
+                    }
+                } else {
+                    let sv = bc_update.sparse_mut(d);
+                    for (&j, &vj) in agg.iter() {
+                        sv.push(j, vj);
+                    }
+                }
+                let payload = encode_broadcast(&mut w, round as u64, &bc_update);
+                for ch in server_ends.iter_mut() {
+                    ch.send(w.as_bytes())?;
+                    wire_bc += payload;
+                    wire_frames += w.as_bytes().len() as u64 * 8;
+                }
+                // Apply the mean update to the server iterate with the
+                // simulated engine's literal expressions + accounting.
+                if any_dense {
+                    for (xj, a) in x.iter_mut().zip(agg_dense.iter_mut()) {
+                        *xj -= *a * scale;
+                        *a = 0.0;
+                    }
+                    broadcast_bits += 32 * d as u64;
+                } else {
+                    for (&j, &vj) in agg.iter() {
+                        x[j as usize] -= vj * scale;
+                    }
+                    broadcast_bits += agg.len() as u64 * (32 + idx_bits);
+                }
+                if (round + 1) % eval_every == 0 || round + 1 == rounds {
+                    let uploads: u64 = upload_acc.iter().sum();
+                    record.curve.push(LossPoint {
+                        t: round + 1,
+                        bits: uploads + broadcast_bits,
+                        loss: backend.full_loss(&x),
+                    });
+                }
+            }
+            Ok(())
+        })();
+        drop(server_ends);
+        join_wire_workers(handles, served)
+    })?;
+    let uploads = check_wire_accounting(&upload_acc, &worker_bits)?;
+
+    record.steps = rounds * nodes * h;
+    record.total_bits = uploads + broadcast_bits;
+    record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+    record.extra.insert("workers".into(), nodes as f64);
+    record.extra.insert("upload_bits".into(), uploads as f64);
+    record.extra.insert("broadcast_bits".into(), broadcast_bits as f64);
+    record.extra.insert("wire".into(), 1.0);
+    record.extra.insert("wire_upload_payload_bits".into(), wire_up as f64);
+    record.extra.insert("wire_broadcast_payload_bits".into(), wire_bc as f64);
+    record.extra.insert("wire_frame_bits".into(), wire_frames as f64);
+    annotate_local(&mut record, local, rounds * nodes * h);
+    Ok(record)
+}
+
+/// Threaded asynchronous parameter server: the simulated engine's
+/// seeded discrete-event heap stays on the server as the
+/// delivery-order arbiter — it decides which worker computes next and
+/// in what order uploads reach the model — while the compute itself
+/// runs on worker threads against replicas kept current by `Apply`
+/// messages. Simulated-time results (staleness, link utilization,
+/// `sim_seconds`) and the trajectory are **bit-identical** to
+/// [`param_server_async`]; the bytes that actually crossed the channel
+/// land in the `wire_*` record extras.
+#[allow(clippy::too_many_arguments)] // mirrors the simulated engine's signature + transport
+pub(crate) fn param_server_async_wire<B: GradBackend + Clone + Send>(
+    backend: &mut B,
+    nodes: usize,
+    net: &NetworkModel,
+    compute: &ComputeModel,
+    hetero: f64,
+    transport: &mut dyn Transport,
+    s: &Settings,
+) -> Result<RunRecord> {
+    let nodes = nodes.max(1);
+    let d = backend.dim();
+    let n = backend.n();
+    let local = s.local;
+    let h = local.sync_every.max(1);
+    let grads_per_sync = (local.batch.max(1) * h) as f64;
+    let total_syncs = s.steps / h;
+    let mut root_rng = Prng::new(s.seed);
+
+    let mut server_ends: Vec<Box<dyn Channel>> = Vec::with_capacity(nodes);
+    let mut workers: Vec<WireWorker<B>> = Vec::with_capacity(nodes);
+    let mut slow = Vec::with_capacity(nodes);
+    for w in 0..nodes {
+        let (se, we) = transport.duplex();
+        server_ends.push(se);
+        workers.push(WireWorker {
+            ch: we,
+            backend: backend.clone(),
+            ef: s.method.error_feedback(d),
+            rng: root_rng.split(w as u64 + 1),
+            schedule: s.schedule.clone(),
+            local,
+            node: w as u32,
+            d,
+            n,
+        });
+        slow.push(
+            1.0 + if nodes > 1 {
+                hetero * w as f64 / (nodes - 1) as f64
+            } else {
+                0.0
+            },
+        );
+    }
+
+    let mut record = RunRecord {
+        method: record_method_name(
+            &s.method,
+            &Topology::ParamServerAsync { nodes, net: net.clone() },
+        ),
+        dataset: s.dataset.clone(),
+        schedule: s.schedule.describe(),
+        ..Default::default()
+    };
+    let started = Instant::now();
+    let mut x = vec![0.0f32; d];
+    let eval_every = (total_syncs / s.eval_points.max(1)).max(1);
+    record.curve.push(LossPoint { t: 0, bits: 0, loss: backend.full_loss(&x) });
+
+    let mut upload_acc = vec![0u64; nodes];
+    let (mut wire_up, mut wire_apply, mut wire_frames) = (0u64, 0u64, 0u64);
+    let mut version = 0u64;
+    let mut link_busy_total = 0u64;
+    let mut staleness_sum = 0u64;
+    let mut staleness_max = 0u64;
+    let mut now_ns = 0u64;
+
+    let worker_bits = std::thread::scope(|scope| -> Result<Vec<u64>> {
+        let mut handles = Vec::with_capacity(nodes);
+        for wk in workers {
+            handles.push(scope.spawn(move || wk.run_async()));
+        }
+
+        // Immediately-invoked for the same drop-the-ends-on-error
+        // discipline as the sync engine.
+        #[allow(clippy::redundant_closure_call)]
+        let served = (|| -> Result<()> {
+            let compute_ns = |slow: f64, cm: &ComputeModel| -> u64 {
+                (cm.s_per_coord * cm.coords_per_grad * grads_per_sync * slow * 1e9).max(1.0) as u64
+            };
+            let mut queue: BinaryHeap<Reverse<Finish>> = BinaryHeap::new();
+            for (i, &sl) in slow.iter().enumerate() {
+                queue.push(Reverse(Finish { t_ns: compute_ns(sl, compute), worker: i }));
+            }
+            let mut fetch_version = vec![0u64; nodes];
+            let mut link_free_ns = 0u64;
+            let mut w = BitWriter::new();
+
+            while version < total_syncs as u64 {
+                let Reverse(ev) = queue.pop().expect("queue never empties");
+                now_ns = now_ns.max(ev.t_ns);
+
+                // The heap names the worker; it computes one phase at
+                // η(version) against its (current) replica and uploads.
+                encode_go(&mut w, version);
+                server_ends[ev.worker].send(w.as_bytes())?;
+                wire_frames += w.as_bytes().len() as u64 * 8;
+                let frame = server_ends[ev.worker].recv()?;
+                wire_frames += frame.len() as u64 * 8;
+                let dec = decode_msg(&frame, d)?;
+                let (bits, update) = match dec.msg {
+                    WireMsg::Upload { round, node, accounted_bits, update }
+                        if round == version && node == ev.worker as u32 =>
+                    {
+                        wire_up += dec.payload_bits;
+                        (accounted_bits, update)
+                    }
+                    other => bail!(
+                        "server: unexpected {other:?} from node {} at version {version}",
+                        ev.worker
+                    ),
+                };
+                upload_acc[ev.worker] += bits;
+
+                // Identical simulated-time arithmetic: the accounted
+                // bits (not the wire frame) charge the network model,
+                // exactly as in the simulated engine.
+                let xfer_ns = (net.xfer_s(bits) * 1e9).max(1.0) as u64;
+                let latency_ns = (net.latency_s * 1e9) as u64;
+                let start_ns = ev.t_ns.max(link_free_ns);
+                link_free_ns = start_ns + xfer_ns;
+                link_busy_total += xfer_ns;
+                let arrive_ns = link_free_ns + latency_ns;
+                now_ns = now_ns.max(arrive_ns);
+
+                // Apply on the server, then replicate to every worker.
+                update.sub_from(&mut x);
+                let payload = encode_apply(&mut w, version, &update);
+                for ch in server_ends.iter_mut() {
+                    ch.send(w.as_bytes())?;
+                    wire_apply += payload;
+                    wire_frames += w.as_bytes().len() as u64 * 8;
+                }
+                version += 1;
+                let stale = version - 1 - fetch_version[ev.worker];
+                staleness_sum += stale;
+                staleness_max = staleness_max.max(stale);
+                fetch_version[ev.worker] = version;
+                queue.push(Reverse(Finish {
+                    t_ns: arrive_ns + compute_ns(slow[ev.worker], compute),
+                    worker: ev.worker,
+                }));
+
+                if version % eval_every as u64 == 0 || version == total_syncs as u64 {
+                    let bits: u64 = upload_acc.iter().sum();
+                    record.curve.push(LossPoint {
+                        t: version as usize,
+                        bits,
+                        loss: backend.full_loss(&x),
+                    });
+                }
+            }
+            encode_shutdown(&mut w);
+            for ch in server_ends.iter_mut() {
+                ch.send(w.as_bytes())?;
+                wire_frames += w.as_bytes().len() as u64 * 8;
+            }
+            Ok(())
+        })();
+        drop(server_ends);
+        join_wire_workers(handles, served)
+    })?;
+    let total_bits = check_wire_accounting(&upload_acc, &worker_bits)?;
+
+    record.steps = version as usize * h;
+    record.total_bits = total_bits;
+    record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+    let mean_staleness = staleness_sum as f64 / version.max(1) as f64;
+    let sim_seconds = now_ns as f64 / 1e9;
+    let link_utilization = if now_ns > 0 {
+        (link_busy_total as f64 / now_ns as f64).min(1.0)
+    } else {
+        0.0
+    };
+    record.extra.insert("mean_staleness".into(), mean_staleness);
+    record.extra.insert("max_staleness".into(), staleness_max as f64);
+    record.extra.insert("sim_seconds".into(), sim_seconds);
+    record.extra.insert("link_utilization".into(), link_utilization);
+    record.extra.insert("workers".into(), nodes as f64);
+    record.extra.insert("wire".into(), 1.0);
+    record.extra.insert("wire_upload_payload_bits".into(), wire_up as f64);
+    record.extra.insert("wire_broadcast_payload_bits".into(), wire_apply as f64);
+    record.extra.insert("wire_frame_bits".into(), wire_frames as f64);
+    annotate_local(&mut record, local, version as usize * h);
+    Ok(record)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1063,6 +1655,49 @@ mod tests {
         assert_eq!(b8.extra["batch"], 8.0);
         assert_eq!(b8.extra["grad_samples"], 9_600.0);
         assert!(b8.final_loss().is_finite());
+    }
+
+    #[test]
+    fn wire_requires_a_parameter_server_topology_and_run() {
+        let data = data();
+        let err = Experiment::new(LogisticModel::new(&data, 1.0 / 300.0))
+            .topology(Topology::SharedMemory { workers: 2 })
+            .wire(true)
+            .run()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("parameter-server"), "{err:#}");
+        let err = Experiment::new(LogisticModel::new(&data, 1.0 / 300.0))
+            .topology(Topology::ParamServerSync { nodes: 2 })
+            .wire(true)
+            .run_single_threaded()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("worker threads"), "{err:#}");
+    }
+
+    #[test]
+    fn wire_sync_smoke_matches_simulated_record() {
+        // The full MethodSpec × LocalUpdate matrix lives in
+        // tests/wire_protocol.rs; this is the in-crate canary.
+        let data = data();
+        let run = |wire: bool| {
+            Experiment::new(LogisticModel::new(&data, 1.0 / 300.0))
+                .method(MethodSpec::mem_top_k(2))
+                .schedule(Schedule::constant(0.5))
+                .topology(Topology::ParamServerSync { nodes: 3 })
+                .steps(600)
+                .eval_points(4)
+                .seed(11)
+                .wire(wire)
+                .run()
+                .unwrap()
+        };
+        let sim = run(false);
+        let wired = run(true);
+        assert_eq!(sim.curve, wired.curve, "trajectory diverged");
+        assert_eq!(sim.total_bits, wired.total_bits);
+        assert_eq!(sim.steps, wired.steps);
+        assert_eq!(wired.extra["wire"], 1.0);
+        assert!(wired.extra["wire_frame_bits"] > 0.0);
     }
 
     #[test]

@@ -58,7 +58,15 @@
 //!
 //! * [`experiment`] — the typed builder, the [`experiment::Topology`]
 //!   enum, and the four generic engines (all `GradBackend`-generic; no
-//!   engine names a concrete model).
+//!   engine names a concrete model) — plus the threaded **wire**
+//!   engines behind `Experiment::wire`, which run the two
+//!   parameter-server topologies as real server/worker threads
+//!   exchanging Elias-coded updates, bit-identical to the simulation
+//!   (`tests/wire_protocol.rs`).
+//! * [`transport`] — the message-passing fabric of the wire engines:
+//!   the socket-shaped [`transport::Transport`]/[`transport::Channel`]
+//!   abstraction, the in-process loopback, the byte-counting wrapper,
+//!   and the typed wire-message codec (frame format documented there).
 //! * [`config`] — typed [`config::MethodSpec`] (`memsgd:<comp>`, `sgd`,
 //!   `sgd:qsgd:<levels>`, `sgd:unbiased_rand_k:<k>`) and the legacy
 //!   [`config::Optimizer`] stepping interface.
@@ -78,6 +86,7 @@ pub mod distributed;
 pub mod experiment;
 pub mod parallel;
 pub mod train;
+pub mod transport;
 
 pub use config::{LocalUpdate, MethodSpec};
 pub use experiment::{Experiment, Topology};

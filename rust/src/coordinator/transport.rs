@@ -1,0 +1,420 @@
+//! The message-passing fabric of the threaded parameter-server engines:
+//! byte-frame channels, an in-process loopback implementation, and the
+//! typed wire-message codec.
+//!
+//! The simulated engines in [`super::experiment`] hand raw `f32` slices
+//! between "nodes" that live in one thread; this module is what turns
+//! that simulation into a real protocol — server and worker threads
+//! that exchange **actually serialized** compressed updates, encoded
+//! through the Elias codec in [`crate::compress::elias`]. The
+//! abstraction is deliberately socket-shaped: a [`Channel`] is one end
+//! of a reliable, ordered, message-framed duplex link carrying opaque
+//! byte frames, nothing more — a TCP backend (length-prefixed frames
+//! over a stream socket) can implement [`Transport`] without touching
+//! the engines. The in-process [`Loopback`] is the reference
+//! implementation; [`CountingTransport`] wraps any fabric and counts
+//! the raw bytes crossing it, which is how the wire-accounting
+//! invariant test verifies that reported bits equal transmitted bytes
+//! (`tests/wire_protocol.rs`).
+//!
+//! ## Frame format
+//!
+//! Every frame is a [`crate::compress::elias::BitWriter`] bitstream,
+//! zero-padded to a byte boundary (MSB-first within each byte). A
+//! γ-coded message kind leads, then kind-specific header fields (all
+//! γ-coded with a `+1` shift so zero is representable), then — for the
+//! data-plane messages — one framed update payload in the
+//! [`crate::compress::elias::decode_payload`] format:
+//!
+//! ```text
+//! UPLOAD    := γ(1) γ(round+1) γ(node+1) γ(accounted_bits+1) payload
+//! BROADCAST := γ(2) γ(round+1) payload
+//! GO        := γ(3) γ(version+1)
+//! APPLY     := γ(4) γ(version+1) payload
+//! SHUTDOWN  := γ(5)
+//! ```
+//!
+//! * `UPLOAD` — worker → server: one node's compressed sync for a
+//!   round (sync engine) or server version (async engine).
+//!   `accounted_bits` carries the *paper-accounting* cost of the
+//!   update ([`crate::optim::ErrorFeedbackStep`]'s per-sync bit
+//!   count), which the server needs for the run record and — in the
+//!   async engine — to charge the simulated network model, exactly as
+//!   the simulated engine does.
+//! * `BROADCAST` — server → workers (sync engine): the node-id-ordered
+//!   aggregate of a round's uploads; every worker applies it with
+//!   `x[j] -= v[j] / nodes` to keep its replica bit-identical to the
+//!   server's iterate.
+//! * `GO` — server → one worker (async engine): compute one local
+//!   phase at stepsize `η(version)` and upload it. The server's
+//!   seeded discrete-event heap decides whose turn it is, which is
+//!   what preserves the simulated engine's delivery-order arbitration
+//!   (and hence its exact trajectory) on real threads.
+//! * `APPLY` — server → workers (async engine): one applied update;
+//!   replicas subtract it verbatim. Per-channel FIFO ordering
+//!   guarantees a worker has applied every update the server applied
+//!   before its next `GO`.
+//! * `SHUTDOWN` — server → workers: the run is over.
+//!
+//! ## Accounted vs transmitted bits
+//!
+//! The run records keep the paper's closed-form accounting in
+//! `total_bits`/the loss curve (so wire runs stay comparable — and
+//! bit-identical — to simulated runs); the bytes that actually crossed
+//! the channel are reported separately in the record extras
+//! (`wire_upload_payload_bits`, `wire_broadcast_payload_bits`,
+//! `wire_frame_bits`). See the README's "Wire protocol" section for
+//! the reconciliation between the two.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::compress::elias::{decode_payload, BitReader, BitWriter};
+use crate::compress::{Compressor, Update};
+
+/// One end of a reliable, ordered, message-framed duplex link.
+///
+/// Implementations must be [`Send`]: endpoints are created on the
+/// engine thread and moved into worker threads. `send` must not block
+/// indefinitely on a connected peer (the loopback is unbounded; a
+/// socket backend would buffer); `recv` blocks until a frame arrives
+/// and errors descriptively when the peer is gone — engine shutdown
+/// relies on dropped endpoints turning blocked `recv`s into errors
+/// instead of deadlocks.
+pub trait Channel: Send {
+    /// Transmit one frame (a length-delimited opaque byte string).
+    fn send(&mut self, frame: &[u8]) -> Result<()>;
+    /// Block for the next frame.
+    fn recv(&mut self) -> Result<Vec<u8>>;
+}
+
+/// A transport fabric: hands out duplex channel pairs. The engines call
+/// [`Transport::duplex`] once per worker on the server thread and move
+/// one end into the worker.
+pub trait Transport {
+    /// Create one duplex link; returns `(server_end, worker_end)`.
+    fn duplex(&mut self) -> (Box<dyn Channel>, Box<dyn Channel>);
+}
+
+/// In-process loopback transport over unbounded [`mpsc`] channels — the
+/// reference [`Transport`]: frames are moved, never shared, so the
+/// endpoints behave exactly like a socket pair with serialization at
+/// the boundary.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Loopback;
+
+struct LoopbackEnd {
+    tx: mpsc::Sender<Vec<u8>>,
+    rx: mpsc::Receiver<Vec<u8>>,
+}
+
+impl Channel for LoopbackEnd {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        self.tx
+            .send(frame.to_vec())
+            .map_err(|_| anyhow!("channel closed: peer endpoint dropped"))
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("channel closed: peer endpoint dropped"))
+    }
+}
+
+impl Transport for Loopback {
+    fn duplex(&mut self) -> (Box<dyn Channel>, Box<dyn Channel>) {
+        let (tx_sw, rx_sw) = mpsc::channel(); // server -> worker
+        let (tx_ws, rx_ws) = mpsc::channel(); // worker -> server
+        (
+            Box::new(LoopbackEnd { tx: tx_sw, rx: rx_ws }),
+            Box::new(LoopbackEnd { tx: tx_ws, rx: rx_sw }),
+        )
+    }
+}
+
+/// Wraps any [`Transport`] and counts every byte crossing it (tallied
+/// once, at the sending endpoint). The wire-accounting tests compare
+/// this independent count against the engine-reported
+/// `wire_frame_bits`.
+pub struct CountingTransport {
+    inner: Box<dyn Transport>,
+    bytes: Arc<AtomicU64>,
+}
+
+impl CountingTransport {
+    pub fn new(inner: Box<dyn Transport>) -> CountingTransport {
+        CountingTransport { inner, bytes: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Handle on the byte counter (keep a clone before handing the
+    /// transport to the engine).
+    pub fn counter(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.bytes)
+    }
+}
+
+struct CountingChannel {
+    inner: Box<dyn Channel>,
+    bytes: Arc<AtomicU64>,
+}
+
+impl Channel for CountingChannel {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        self.bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        self.inner.send(frame)
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        self.inner.recv()
+    }
+}
+
+impl Transport for CountingTransport {
+    fn duplex(&mut self) -> (Box<dyn Channel>, Box<dyn Channel>) {
+        let (s, w) = self.inner.duplex();
+        (
+            Box::new(CountingChannel { inner: s, bytes: Arc::clone(&self.bytes) }),
+            Box::new(CountingChannel { inner: w, bytes: Arc::clone(&self.bytes) }),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed wire messages
+// ---------------------------------------------------------------------------
+
+const MSG_UPLOAD: u64 = 1;
+const MSG_BROADCAST: u64 = 2;
+const MSG_GO: u64 = 3;
+const MSG_APPLY: u64 = 4;
+const MSG_SHUTDOWN: u64 = 5;
+
+/// A decoded wire message (see the module docs for the frame format).
+#[derive(Debug)]
+pub enum WireMsg {
+    /// Worker → server: one node's compressed sync.
+    Upload { round: u64, node: u32, accounted_bits: u64, update: Update },
+    /// Server → workers (sync): the round's aggregated update.
+    Broadcast { round: u64, update: Update },
+    /// Server → one worker (async): compute a phase at `η(version)`.
+    Go { version: u64 },
+    /// Server → workers (async): one applied update for the replicas.
+    Apply { version: u64, update: Update },
+    /// Server → workers: the run is over.
+    Shutdown,
+}
+
+/// [`decode_msg`]'s result: the message plus the measured bit length of
+/// its update payload (0 for control messages) — what the engines
+/// aggregate into the `wire_*_payload_bits` record extras.
+#[derive(Debug)]
+pub struct DecodedMsg {
+    pub msg: WireMsg,
+    pub payload_bits: u64,
+}
+
+/// Encode an `UPLOAD` into `w` (cleared first); the update payload is
+/// framed by the producing compressor's typed codec
+/// ([`Compressor::encode_payload`]). Returns the payload bit count;
+/// the frame to transmit is `w.as_bytes()`.
+pub fn encode_upload(
+    w: &mut BitWriter,
+    round: u64,
+    node: u32,
+    accounted_bits: u64,
+    comp: &dyn Compressor,
+    update: &Update,
+) -> u64 {
+    w.clear();
+    w.put_gamma(MSG_UPLOAD);
+    w.put_gamma(round + 1);
+    w.put_gamma(node as u64 + 1);
+    w.put_gamma(accounted_bits + 1);
+    comp.encode_payload(update, w)
+}
+
+/// Encode a `BROADCAST` into `w` (cleared first) with the generic
+/// update codec. Returns the payload bit count.
+pub fn encode_broadcast(w: &mut BitWriter, round: u64, update: &Update) -> u64 {
+    w.clear();
+    w.put_gamma(MSG_BROADCAST);
+    w.put_gamma(round + 1);
+    crate::compress::elias::encode_payload_update(update, w)
+}
+
+/// Encode a `GO` into `w` (cleared first).
+pub fn encode_go(w: &mut BitWriter, version: u64) {
+    w.clear();
+    w.put_gamma(MSG_GO);
+    w.put_gamma(version + 1);
+}
+
+/// Encode an `APPLY` into `w` (cleared first) with the generic update
+/// codec. Returns the payload bit count.
+pub fn encode_apply(w: &mut BitWriter, version: u64, update: &Update) -> u64 {
+    w.clear();
+    w.put_gamma(MSG_APPLY);
+    w.put_gamma(version + 1);
+    crate::compress::elias::encode_payload_update(update, w)
+}
+
+/// Encode a `SHUTDOWN` into `w` (cleared first).
+pub fn encode_shutdown(w: &mut BitWriter) {
+    w.clear();
+    w.put_gamma(MSG_SHUTDOWN);
+}
+
+/// Decode one frame. Total on arbitrary input (truncation, corruption,
+/// unknown kinds, hostile counts — all descriptive errors, never
+/// panics); update payloads are validated against `dim`.
+pub fn decode_msg(frame: &[u8], dim: usize) -> Result<DecodedMsg> {
+    let mut r = BitReader::new(frame);
+    let kind = r.get_gamma()?;
+    let (msg, payload_bits) = match kind {
+        MSG_UPLOAD => {
+            let round = r.get_gamma()? - 1;
+            let node = r.get_gamma()? - 1;
+            if node > u32::MAX as u64 {
+                bail!("decoded node id {node} out of range");
+            }
+            let accounted_bits = r.get_gamma()? - 1;
+            let before = r.consumed();
+            let update = decode_payload(&mut r, dim)?;
+            let payload = r.consumed() - before;
+            (
+                WireMsg::Upload { round, node: node as u32, accounted_bits, update },
+                payload,
+            )
+        }
+        MSG_BROADCAST => {
+            let round = r.get_gamma()? - 1;
+            let before = r.consumed();
+            let update = decode_payload(&mut r, dim)?;
+            let payload = r.consumed() - before;
+            (WireMsg::Broadcast { round, update }, payload)
+        }
+        MSG_GO => (WireMsg::Go { version: r.get_gamma()? - 1 }, 0),
+        MSG_APPLY => {
+            let version = r.get_gamma()? - 1;
+            let before = r.consumed();
+            let update = decode_payload(&mut r, dim)?;
+            let payload = r.consumed() - before;
+            (WireMsg::Apply { version, update }, payload)
+        }
+        MSG_SHUTDOWN => (WireMsg::Shutdown, 0),
+        other => bail!("unknown wire message kind {other}"),
+    };
+    Ok(DecodedMsg { msg, payload_bits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{from_spec, SparseVec};
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn loopback_delivers_frames_in_order() {
+        let mut t = Loopback;
+        let (mut server, mut worker) = t.duplex();
+        server.send(&[1, 2, 3]).unwrap();
+        server.send(&[4]).unwrap();
+        assert_eq!(worker.recv().unwrap(), vec![1, 2, 3]);
+        assert_eq!(worker.recv().unwrap(), vec![4]);
+        worker.send(&[9, 9]).unwrap();
+        assert_eq!(server.recv().unwrap(), vec![9, 9]);
+    }
+
+    #[test]
+    fn dropped_peer_turns_recv_and_send_into_errors() {
+        let mut t = Loopback;
+        let (server, mut worker) = t.duplex();
+        drop(server);
+        assert!(worker.recv().is_err());
+        assert!(worker.send(&[1]).is_err());
+    }
+
+    #[test]
+    fn counting_transport_counts_bytes_once_at_send() {
+        let mut t = CountingTransport::new(Box::new(Loopback));
+        let counter = t.counter();
+        let (mut server, mut worker) = t.duplex();
+        server.send(&[0; 10]).unwrap();
+        worker.send(&[0; 3]).unwrap();
+        worker.recv().unwrap();
+        server.recv().unwrap();
+        assert_eq!(counter.load(Ordering::Relaxed), 13);
+    }
+
+    #[test]
+    fn upload_roundtrips_through_the_frame_codec() {
+        let comp = from_spec("top_k:2").unwrap();
+        let mut sv = SparseVec::new(100);
+        sv.push(42, -1.5);
+        sv.push(7, 0.25);
+        let update = Update::Sparse(sv);
+        let mut w = BitWriter::new();
+        let payload = encode_upload(&mut w, 12, 3, 4567, comp.as_ref(), &update);
+        let dec = decode_msg(w.as_bytes(), 100).unwrap();
+        assert_eq!(dec.payload_bits, payload);
+        match dec.msg {
+            WireMsg::Upload { round, node, accounted_bits, update: u } => {
+                assert_eq!((round, node, accounted_bits), (12, 3, 4567));
+                assert_eq!(u.to_dense(100), update.to_dense(100));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_messages_roundtrip() {
+        let mut w = BitWriter::new();
+        encode_go(&mut w, 7);
+        match decode_msg(w.as_bytes(), 10).unwrap().msg {
+            WireMsg::Go { version } => assert_eq!(version, 7),
+            other => panic!("wrong kind: {other:?}"),
+        }
+        encode_shutdown(&mut w);
+        assert!(matches!(decode_msg(w.as_bytes(), 10).unwrap().msg, WireMsg::Shutdown));
+        let bits = encode_apply(&mut w, 3, &Update::Dense(vec![1.0, -2.0]));
+        let dec = decode_msg(w.as_bytes(), 2).unwrap();
+        assert_eq!(dec.payload_bits, bits);
+        match dec.msg {
+            WireMsg::Apply { version, update } => {
+                assert_eq!(version, 3);
+                assert_eq!(update.to_dense(2), vec![1.0, -2.0]);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        let bits = encode_broadcast(&mut w, 9, &Update::Sparse(SparseVec::new(4)));
+        let dec = decode_msg(w.as_bytes(), 4).unwrap();
+        assert_eq!(dec.payload_bits, bits);
+        assert!(matches!(dec.msg, WireMsg::Broadcast { round: 9, .. }));
+    }
+
+    #[test]
+    fn decode_msg_is_total_on_garbage() {
+        // Empty, truncated, and random frames: errors, never panics.
+        assert!(decode_msg(&[], 10).is_err());
+        let mut w = BitWriter::new();
+        let comp = from_spec("top_k:1").unwrap();
+        let mut sv = SparseVec::new(50);
+        sv.push(10, 1.0);
+        encode_upload(&mut w, 1, 0, 50, comp.as_ref(), &Update::Sparse(sv));
+        let bytes = w.as_bytes();
+        for cut in 0..bytes.len() {
+            // Every strict prefix must fail cleanly (the full frame
+            // decodes, so any prefix is genuinely truncated).
+            let _ = decode_msg(&bytes[..cut], 50);
+        }
+        let mut rng = Prng::new(77);
+        for _ in 0..500 {
+            let len = rng.below(40);
+            let junk: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            let _ = decode_msg(&junk, 64); // must not panic
+        }
+    }
+}

@@ -80,7 +80,7 @@ subcommands:
   e2e       transformer LM through the PJRT artifacts (full stack)
   train     one ad-hoc run (--method, --epochs, --dataset, --topology
             sequential|shared|ps-sync|ps-async, --workers-count N,
-            --batch B, --local-steps H, ...)
+            --batch B, --local-steps H, --wire, ...)
   bench-gate  CI perf gate: compare a fresh hot-path bench JSON against
             the committed baseline (--baseline BENCH_hot_path.json,
             --fresh run.json); exits nonzero on >25% normalized median
@@ -89,7 +89,11 @@ subcommands:
 
 common options: --dataset epsilon|rcv1  --scale N  --seed N  --out DIR
 local-update schedule (train, figure6): --batch B (minibatch size),
-  --local-steps H (local steps between syncs; ~H-fold fewer bits)";
+  --local-steps H (local steps between syncs; ~H-fold fewer bits)
+wire mode (train, ps-sync/ps-async only): --wire runs real server/worker
+  threads exchanging Elias-coded updates over an in-process channel;
+  trajectories are bit-identical to the simulated engines, and the
+  record gains wire_* extras with the bytes that actually crossed";
 
 fn out_dir(args: &Args) -> String {
     args.get_str("out", "results")
@@ -475,6 +479,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         other => bail!("unknown topology '{other}' (sequential|shared|ps-sync|ps-async)"),
     };
+    // --wire: run the parameter-server topologies on the threaded
+    // message-passing runtime (real Elias-coded bytes over an
+    // in-process channel) instead of the single-threaded simulation.
+    let wire = args.flag("wire");
     let rec = experiments::experiment_on(&data, None)
         .method(method)
         .schedule(schedule)
@@ -483,7 +491,19 @@ fn cmd_train(args: &Args) -> Result<()> {
         .eval_points(evals)
         .seed(seed)
         .local_update(local)
+        .wire(wire)
         .run()?;
+    if wire {
+        let wex = |key: &str| rec.extra.get(key).copied().unwrap_or(0.0) as u64;
+        println!(
+            "wire: {} payload bits up, {} down, {} frame bits on the channel \
+             (accounted: {} total)",
+            metrics::fmt_bits(wex("wire_upload_payload_bits")),
+            metrics::fmt_bits(wex("wire_broadcast_payload_bits")),
+            metrics::fmt_bits(wex("wire_frame_bits")),
+            metrics::fmt_bits(rec.total_bits),
+        );
+    }
     print_curves(std::slice::from_ref(&rec));
     finish(args, "train", std::slice::from_ref(&rec))
 }

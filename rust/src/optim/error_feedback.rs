@@ -467,6 +467,13 @@ impl ErrorFeedbackStep {
         &self.update
     }
 
+    /// The method's compression operator — what the wire engines use to
+    /// frame [`ErrorFeedbackStep::update`] into its typed payload
+    /// ([`Compressor::encode_payload`]).
+    pub fn compressor(&self) -> &dyn Compressor {
+        self.comp.as_ref()
+    }
+
     /// Current error memory (dense view; exact on every path).
     pub fn memory(&self) -> &[f32] {
         &self.memory

@@ -46,7 +46,11 @@
 //! `"phase sync dense    top_10 d=47236"`, vs
 //! `gate::phase_sync_active_case(a)` for `a ∈ {100, 1000, 10000}`,
 //! `"phase sync active   top_10 d=47236 a=..."` — the rows whose p50s
-//! pin sync cost to the active-set size rather than d).
+//! pin sync cost to the active-set size rather than d), and the
+//! wire-codec throughput cases (`gate::wire_encode_sparse_case` /
+//! `gate::wire_decode_sparse_case` / `gate::wire_encode_qsgd_case` /
+//! `gate::wire_decode_qsgd_case` — the threaded engines' per-message
+//! serialization cost, regression-gated like every other row).
 
 use std::hint::black_box;
 use std::time::{Duration, Instant};

@@ -106,6 +106,30 @@ pub fn phase_sync_active_case(active: usize) -> String {
     format!("phase sync active   top_10 d=47236 a={active:<5}")
 }
 
+/// Canonical name of the wire-codec encode case for a top-10 sparse
+/// payload at the RCV1 dimension (the threaded engines' per-upload
+/// serialization cost). Regression-gated against the committed
+/// baseline like every other case.
+pub fn wire_encode_sparse_case() -> String {
+    "wire encode sparse  top_10 d=47236".to_string()
+}
+
+/// Canonical name of the matching wire-codec decode case.
+pub fn wire_decode_sparse_case() -> String {
+    "wire decode sparse  top_10 d=47236".to_string()
+}
+
+/// Canonical name of the wire-codec encode case for a QSGD level
+/// stream at the epsilon dimension.
+pub fn wire_encode_qsgd_case() -> String {
+    "wire encode qsgd    s=16 d=2000".to_string()
+}
+
+/// Canonical name of the matching QSGD decode case.
+pub fn wire_decode_qsgd_case() -> String {
+    "wire decode qsgd    s=16 d=2000".to_string()
+}
+
 /// A fresh-run-only invariant: `slow_case` must be at least `min_ratio`
 /// × slower than `fast_case` (both in the same bench).
 #[derive(Clone, Debug)]

@@ -319,3 +319,112 @@ fn prop_bit_accounting_exact() {
         )
     });
 }
+
+/// Wire-decoder totality: `decode_sparse` / `decode_qsgd` /
+/// `decode_payload` / `decode_msg` on arbitrary byte soup must return
+/// descriptive errors — never panic, never do work proportional to a
+/// hostile `nnz`/index/level field (the count guards reject anything
+/// beyond the dimension before allocating).
+#[test]
+fn prop_wire_decoders_are_total_on_arbitrary_bytes() {
+    use memsgd::compress::elias::{decode_payload, decode_qsgd, decode_sparse, BitReader};
+    use memsgd::coordinator::transport::decode_msg;
+    check("wire-decoder-totality", 1500, |rng| {
+        let dim = 1 + rng.below(3_000);
+        let len = rng.below(160);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        // Any of these may Ok or Err; none may panic. On Ok, the
+        // decoded structure must satisfy its own invariants.
+        if let Ok(s) = decode_sparse(&mut BitReader::new(&bytes), dim) {
+            ensure(s.nnz() <= dim, "nnz beyond dim")?;
+            ensure(
+                s.idx.windows(2).all(|w| w[0] < w[1]),
+                "decoded indices not strictly increasing",
+            )?;
+            ensure(s.idx.iter().all(|&i| (i as usize) < dim), "index out of range")?;
+        }
+        if let Ok((_, levels)) = decode_qsgd(&mut BitReader::new(&bytes), dim) {
+            ensure(levels.len() == dim, "levels length")?;
+        }
+        if let Ok(u) = decode_payload(&mut BitReader::new(&bytes), dim) {
+            ensure(u.to_dense(dim).len() == dim, "payload dimension")?;
+        }
+        let _ = decode_msg(&bytes, dim);
+        Ok(())
+    });
+}
+
+/// Truncating a valid payload below its content length must error (and
+/// flipping any single bit must at worst error — never panic).
+#[test]
+fn prop_wire_decoders_survive_truncation_and_corruption() {
+    use memsgd::compress::elias::{decode_sparse, encode_sparse, BitReader, BitWriter};
+    check("wire-decoder-truncation", 250, |rng| {
+        let dim = 2 + rng.below(500);
+        let nnz = 1 + rng.below(dim.min(24));
+        let mut idx = Vec::new();
+        rng.sample_distinct(dim, nnz, &mut idx);
+        let mut s = SparseVec::new(dim);
+        for &i in &idx {
+            s.push(i, rng.normal_f32());
+        }
+        let mut w = BitWriter::new();
+        let content_bits = encode_sparse(&s, &mut w);
+        let bytes = w.as_bytes();
+        // A prefix strictly shorter than the content must fail cleanly.
+        let cut_bytes = ((content_bits - 1) / 8) as usize;
+        ensure(
+            decode_sparse(&mut BitReader::new(&bytes[..cut_bytes]), dim).is_err(),
+            "truncated stream decoded",
+        )?;
+        // A random single-bit flip: Ok or Err, never panic; Ok results
+        // keep the structural invariants.
+        let mut corrupt = bytes.to_vec();
+        let flip = rng.below(corrupt.len() * 8);
+        corrupt[flip / 8] ^= 1 << (7 - (flip % 8));
+        if let Ok(back) = decode_sparse(&mut BitReader::new(&corrupt), dim) {
+            ensure(back.nnz() <= dim, "corrupt decode broke the nnz bound")?;
+            ensure(
+                back.idx.iter().all(|&i| (i as usize) < dim),
+                "corrupt decode broke the index bound",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Every compressor's framed payload round-trips bit-exactly at random
+/// shapes — the codec-level half of the wire-equivalence guarantee
+/// (`tests/wire_protocol.rs` pins the engine-level half).
+#[test]
+fn prop_payload_roundtrip_every_compressor() {
+    use memsgd::compress::elias::{decode_payload, BitReader, BitWriter};
+    check("payload-roundtrip", 200, |rng| {
+        let d = 1 + rng.below(300);
+        let k = 1 + rng.below(d);
+        let specs = [
+            "identity".to_string(),
+            format!("top_k:{k}"),
+            format!("rand_k:{k}"),
+            "random_p:0.7".to_string(),
+            format!("block_top_k:{k}"),
+            "sign".to_string(),
+            "threshold:0.3".to_string(),
+            "qsgd:8".to_string(),
+        ];
+        let spec = &specs[rng.below(specs.len())];
+        let mut comp = compress::from_spec(spec).unwrap();
+        let x = random_vec(rng, d);
+        let mut out = Update::new_sparse(d);
+        comp.compress(&x, rng, &mut out);
+        let mut w = BitWriter::new();
+        let bits = comp.encode_payload(&out, &mut w);
+        let mut r = BitReader::new(w.as_bytes());
+        let back = decode_payload(&mut r, d)
+            .map_err(|e| format!("{spec} d={d}: decode failed: {e:#}"))?;
+        ensure(r.consumed() == bits, format!("{spec}: consumed != produced"))?;
+        let want: Vec<u32> = out.to_dense(d).iter().map(|v| v.to_bits()).collect();
+        let got: Vec<u32> = back.to_dense(d).iter().map(|v| v.to_bits()).collect();
+        ensure(got == want, format!("{spec} d={d}: payload not bit-exact"))
+    });
+}

@@ -1,0 +1,371 @@
+//! Wire-equivalence suite: the threaded parameter-server engines
+//! against their single-threaded simulations, and the payload codec
+//! against the paper's bit accounting.
+//!
+//! * **Golden trajectories** — `ParamServerSync` and `ParamServerAsync`
+//!   in wire mode must reproduce the simulated engines **bit for bit**
+//!   (loss curve, accounted bits, every extra the simulation reports)
+//!   on every `MethodSpec` × `LocalUpdate` combination, with every
+//!   update round-tripping through the Elias payload codec and a real
+//!   channel between threads.
+//! * **Wire accounting** — the `wire_frame_bits` a run reports must
+//!   equal the bytes independently counted at the channel boundary
+//!   (`CountingTransport`), i.e. reported bits are transmitted bytes.
+//! * **Codec reconciliation** — for every `CompressorSpec`, the framed
+//!   payload decodes back to the exact update and its measured length
+//!   matches an independent closed-form recomputation; where the
+//!   paper's accounting is an Appendix-B *estimate* (QSGD) rather than
+//!   a wire-exact count, the reconciliation is explicit (both
+//!   quantities asserted, the measured one reported by the wire path).
+
+use std::sync::atomic::Ordering;
+
+use memsgd::compress::elias::{
+    decode_payload, gamma_bits, BitReader, BitWriter, TAG_DENSE_RAW, TAG_SIGN, TAG_SPARSE,
+};
+use memsgd::compress::{sparse::index_bits, Compressor, CompressorSpec, Update};
+use memsgd::coordinator::transport::{CountingTransport, Loopback};
+use memsgd::coordinator::{Experiment, LocalUpdate, MethodSpec, Topology};
+use memsgd::data::Dataset;
+use memsgd::metrics::RunRecord;
+use memsgd::models::LogisticModel;
+use memsgd::optim::Schedule;
+use memsgd::sim::network::NetworkModel;
+use memsgd::util::prng::Prng;
+
+fn data() -> Dataset {
+    memsgd::data::synthetic::epsilon_like(240, 12, 5)
+}
+
+/// Every method kind the engines accept: memory-carrying sparsifiers
+/// (active-scan and dense-route), the data-dependent operators, the
+/// memory-free baselines, and the scaled unbiased estimator.
+fn all_methods() -> Vec<MethodSpec> {
+    [
+        "memsgd:top_k:2",
+        "memsgd:rand_k:2",
+        "memsgd:random_p:0.5",
+        "memsgd:block_top_k:3",
+        "memsgd:sign",
+        "memsgd:threshold:0.25",
+        "memsgd:qsgd:8",
+        "sgd",
+        "sgd:qsgd:8",
+        "sgd:unbiased_rand_k:2",
+    ]
+    .iter()
+    .map(|s| MethodSpec::parse(s).unwrap())
+    .collect()
+}
+
+fn all_locals() -> Vec<LocalUpdate> {
+    vec![LocalUpdate::default(), LocalUpdate::new(2, 3).unwrap()]
+}
+
+/// Bit-for-bit record equality: curve (t, accounted bits, f64 loss),
+/// step/bit totals, and every extra the simulated engine reports. The
+/// wire record may add `wire_*` keys on top; nothing the simulation
+/// wrote may differ.
+fn assert_records_match(sim: &RunRecord, wired: &RunRecord, label: &str) {
+    assert_eq!(sim.method, wired.method, "{label}: method");
+    assert_eq!(sim.dataset, wired.dataset, "{label}: dataset");
+    assert_eq!(sim.schedule, wired.schedule, "{label}: schedule");
+    assert_eq!(sim.steps, wired.steps, "{label}: steps");
+    assert_eq!(sim.total_bits, wired.total_bits, "{label}: total_bits");
+    assert_eq!(sim.curve, wired.curve, "{label}: loss curve (t/bits/loss, bit-for-bit)");
+    for (key, val) in &sim.extra {
+        assert_eq!(
+            wired.extra.get(key),
+            Some(val),
+            "{label}: extra[{key}] diverged"
+        );
+    }
+    assert_eq!(wired.extra.get("wire"), Some(&1.0), "{label}: wire marker");
+    assert!(wired.extra["wire_frame_bits"] > 0.0, "{label}: no frames counted");
+    assert!(
+        wired.extra["wire_upload_payload_bits"] > 0.0,
+        "{label}: no upload payloads counted"
+    );
+}
+
+#[test]
+fn threaded_sync_engine_is_bit_identical_on_every_method_and_schedule() {
+    let data = data();
+    for method in all_methods() {
+        for local in all_locals() {
+            let label = format!("{} B={} H={}", method.name(), local.batch, local.sync_every);
+            let run = |wire: bool| {
+                Experiment::new(LogisticModel::new(&data, 1.0 / 240.0))
+                    .dataset(&data.name)
+                    .method(method.clone())
+                    .schedule(Schedule::constant(0.4))
+                    .topology(Topology::ParamServerSync { nodes: 3 })
+                    .steps(540)
+                    .eval_points(4)
+                    .seed(7)
+                    .local_update(local)
+                    .wire(wire)
+                    .run()
+                    .unwrap()
+            };
+            let sim = run(false);
+            let wired = run(true);
+            assert_records_match(&sim, &wired, &label);
+        }
+    }
+}
+
+#[test]
+fn threaded_async_engine_is_bit_identical_on_every_method_and_schedule() {
+    let data = data();
+    for method in all_methods() {
+        for local in all_locals() {
+            let label = format!(
+                "async {} B={} H={}",
+                method.name(),
+                local.batch,
+                local.sync_every
+            );
+            let run = |wire: bool| {
+                Experiment::new(LogisticModel::new(&data, 1.0 / 240.0))
+                    .dataset(&data.name)
+                    .method(method.clone())
+                    .schedule(Schedule::constant(0.4))
+                    .topology(Topology::ParamServerAsync {
+                        nodes: 3,
+                        net: NetworkModel::eth_1g(),
+                    })
+                    .steps(240)
+                    .eval_points(4)
+                    .seed(7)
+                    .local_update(local)
+                    .wire(wire)
+                    .run()
+                    .unwrap()
+            };
+            let sim = run(false);
+            let wired = run(true);
+            assert_records_match(&sim, &wired, &label);
+            // The async-specific simulated-time results must reproduce
+            // exactly too (already covered by the extras sweep, but
+            // these are the reproducibility headline — pin them by
+            // name).
+            for key in ["mean_staleness", "max_staleness", "sim_seconds", "link_utilization"] {
+                assert_eq!(sim.extra[key], wired.extra[key], "{label}: {key}");
+            }
+        }
+    }
+}
+
+#[test]
+fn reported_wire_bits_equal_bytes_counted_on_the_channel() {
+    let data = data();
+    for (topology, steps) in [
+        (Topology::ParamServerSync { nodes: 3 }, 540usize),
+        (Topology::ParamServerAsync { nodes: 3, net: NetworkModel::eth_1g() }, 240),
+    ] {
+        let transport = CountingTransport::new(Box::new(Loopback));
+        let counter = transport.counter();
+        let rec = Experiment::new(LogisticModel::new(&data, 1.0 / 240.0))
+            .dataset(&data.name)
+            .method(MethodSpec::mem_top_k(2))
+            .schedule(Schedule::constant(0.4))
+            .topology(topology.clone())
+            .steps(steps)
+            .eval_points(4)
+            .seed(3)
+            .wire_transport(Box::new(transport))
+            .run()
+            .unwrap();
+        let counted_bits = counter.load(Ordering::Relaxed) * 8;
+        assert_eq!(
+            rec.extra["wire_frame_bits"], counted_bits as f64,
+            "{topology:?}: reported frame bits != bytes on the channel"
+        );
+        // Payloads are a subset of the frames (headers + padding).
+        let payload =
+            rec.extra["wire_upload_payload_bits"] + rec.extra["wire_broadcast_payload_bits"];
+        assert!(payload > 0.0, "{topology:?}: no payload bits");
+        assert!(
+            payload <= counted_bits as f64,
+            "{topology:?}: payload exceeds transmitted frames"
+        );
+    }
+}
+
+fn update_bits(u: &Update, d: usize) -> Vec<u32> {
+    u.to_dense(d).iter().map(|v| v.to_bits()).collect()
+}
+
+/// Sorted `(index, value-bits)` entries of a sparse update — includes
+/// zero-valued padding coordinates, which `to_dense` is blind to but
+/// which cost wire bits and occupy server aggregation slots.
+fn sparse_entries(u: &Update) -> Option<Vec<(u32, u32)>> {
+    match u {
+        Update::Sparse(s) => {
+            let mut e: Vec<(u32, u32)> =
+                s.idx.iter().zip(&s.val).map(|(&i, &v)| (i, v.to_bits())).collect();
+            e.sort_unstable();
+            Some(e)
+        }
+        Update::Dense(_) => None,
+    }
+}
+
+/// Independent recomputation of the framed sparse-payload size from the
+/// update alone (via `gamma_bits`, not the encoder).
+fn expected_sparse_payload_bits(u: &Update) -> u64 {
+    let Update::Sparse(s) = u else { panic!("sparse update expected") };
+    let mut idx: Vec<u32> = s.idx.clone();
+    idx.sort_unstable();
+    let mut bits = gamma_bits(TAG_SPARSE) + gamma_bits(s.nnz() as u64 + 1);
+    let mut prev = 0u64;
+    for (rank, &i) in idx.iter().enumerate() {
+        let i = i as u64;
+        let delta = if rank == 0 { i } else { i - prev - 1 };
+        prev = i;
+        bits += gamma_bits(delta + 1) + 32;
+    }
+    bits
+}
+
+#[test]
+fn payload_codec_reconciles_accounted_bits_for_every_compressor_spec() {
+    let d = 64usize;
+    let specs = [
+        "identity",
+        "top_k:3",
+        "rand_k:4",
+        "random_p:0.9",
+        "block_top_k:5",
+        "sign",
+        "threshold:0.25",
+        "qsgd:8",
+        "qsgd:8:32",
+    ];
+    for spec in specs {
+        let cspec = CompressorSpec::parse(spec).unwrap();
+        let mut comp = cspec.build();
+        let mut rng = Prng::new(99);
+        let mut out = Update::new_sparse(d);
+        let mut w = BitWriter::new();
+        for t in 0..25usize {
+            let x: Vec<f32> = (0..d)
+                .map(|i| ((t * 13 + i * 7) % 29) as f32 / 29.0 - 0.48)
+                .collect();
+            let accounted = comp.compress(&x, &mut rng, &mut out);
+            w.clear();
+            let wire = comp.encode_payload(&out, &mut w);
+            assert_eq!(w.bits(), wire, "{spec} t={t}: returned bits != written bits");
+
+            // 1) The payload decodes back to the exact update.
+            let mut r = BitReader::new(w.as_bytes());
+            let back = decode_payload(&mut r, d).unwrap();
+            assert_eq!(r.consumed(), wire, "{spec} t={t}: consumed != produced");
+            assert_eq!(update_bits(&back, d), update_bits(&out, d), "{spec} t={t}: values");
+            if let (Some(a), Some(b)) = (sparse_entries(&out), sparse_entries(&back)) {
+                assert_eq!(a, b, "{spec} t={t}: sparse entry sets (incl. zero-valued padding)");
+            }
+
+            // 2) Accounted-vs-wire reconciliation, per operator family.
+            match &cspec {
+                // Sparse family: accounting is footnote 5's fixed-width
+                // form, the wire is γ-delta-coded — both recomputed here
+                // independently of the implementations.
+                CompressorSpec::TopK { .. }
+                | CompressorSpec::RandK { .. }
+                | CompressorSpec::RandomP { .. }
+                | CompressorSpec::BlockTopK { .. }
+                | CompressorSpec::Threshold { .. } => {
+                    let nnz = match &out {
+                        Update::Sparse(s) => s.nnz() as u64,
+                        Update::Dense(_) => panic!("{spec}: sparse update expected"),
+                    };
+                    assert_eq!(
+                        accounted,
+                        nnz * (32 + index_bits(d)),
+                        "{spec} t={t}: accounted != footnote-5 form"
+                    );
+                    assert_eq!(
+                        wire,
+                        expected_sparse_payload_bits(&out),
+                        "{spec} t={t}: wire != independent γ-sum"
+                    );
+                }
+                // Identity: dense raw — wire is exactly the accounted
+                // 32·d plus the frame header.
+                CompressorSpec::Identity => {
+                    assert_eq!(accounted, 32 * d as u64, "{spec} t={t}");
+                    assert_eq!(
+                        wire,
+                        accounted + gamma_bits(TAG_DENSE_RAW) + gamma_bits(d as u64 + 1),
+                        "{spec} t={t}: wire != accounted + header"
+                    );
+                }
+                // Sign: wire is exactly the accounted d + 32 plus the
+                // frame header.
+                CompressorSpec::Sign => {
+                    assert_eq!(accounted, d as u64 + 32, "{spec} t={t}");
+                    assert_eq!(
+                        wire,
+                        accounted + gamma_bits(TAG_SIGN) + gamma_bits(d as u64 + 1),
+                        "{spec} t={t}: wire != accounted + header"
+                    );
+                }
+                // QSGD: the accounting is Appendix B's closed-form
+                // *estimate* — by design not a per-payload count. The
+                // reconciliation is explicit: assert the estimate's
+                // formula, and that the measured payload (validated
+                // exact above) is what the wire path reports.
+                CompressorSpec::Qsgd { levels, eff } => {
+                    let deff = eff.unwrap_or(d) as f64;
+                    let s = *levels as f64;
+                    let naive = (s.log2() + 1.0) * deff;
+                    let elias = 3.0 * s * (s + deff.sqrt()) + 32.0;
+                    assert_eq!(accounted, naive.min(elias).ceil() as u64, "{spec} t={t}");
+                    assert!(wire > 0, "{spec} t={t}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn wire_mode_composes_with_counting_and_local_update() {
+    // One combined run: non-default LocalUpdate through a counted
+    // channel — the schedule annotations, the simulated equality, and
+    // the byte count must all hold at once.
+    let data = data();
+    let local = LocalUpdate::new(2, 3).unwrap();
+    let run_sim = Experiment::new(LogisticModel::new(&data, 1.0 / 240.0))
+        .dataset(&data.name)
+        .method(MethodSpec::parse("memsgd:threshold:0.25").unwrap())
+        .schedule(Schedule::constant(0.4))
+        .topology(Topology::ParamServerSync { nodes: 4 })
+        .steps(720)
+        .eval_points(3)
+        .seed(5)
+        .local_update(local)
+        .run()
+        .unwrap();
+    let transport = CountingTransport::new(Box::new(Loopback));
+    let counter = transport.counter();
+    let run_wire = Experiment::new(LogisticModel::new(&data, 1.0 / 240.0))
+        .dataset(&data.name)
+        .method(MethodSpec::parse("memsgd:threshold:0.25").unwrap())
+        .schedule(Schedule::constant(0.4))
+        .topology(Topology::ParamServerSync { nodes: 4 })
+        .steps(720)
+        .eval_points(3)
+        .seed(5)
+        .local_update(local)
+        .wire_transport(Box::new(transport))
+        .run()
+        .unwrap();
+    assert_records_match(&run_sim, &run_wire, "threshold B=2 H=3 counted");
+    assert_eq!(run_wire.extra["sync_every"], 3.0);
+    assert_eq!(
+        run_wire.extra["wire_frame_bits"],
+        (counter.load(Ordering::Relaxed) * 8) as f64
+    );
+}
