@@ -262,6 +262,52 @@ fn main() {
         });
     }
 
+    // --- TCP round trip: encode → localhost socket → decode -------------------
+    // The cluster runtime's per-message data-plane cost: payload encode,
+    // 4-byte length framing, one kernel-socket hop, frame read, payload
+    // decode. Same two payload families as the codec cases above, so the
+    // delta against those rows isolates the framing + syscall overhead.
+    // Frames are a few KB — far below the socket buffers, so the
+    // single-threaded write-then-read never blocks.
+    {
+        use memsgd::compress::elias::{decode_payload, BitReader, BitWriter};
+        use memsgd::compress::Compressor;
+        use memsgd::coordinator::net::{read_frame, socket_pair, write_frame};
+        use memsgd::coordinator::transport::MAX_FRAME_BYTES;
+
+        let (mut tx, mut rx) = socket_pair().expect("localhost socket pair");
+        let mut rng = Prng::new(13);
+        let mut w = BitWriter::new();
+
+        let d = 47_236usize;
+        let mut comp = compress::from_spec("top_k:10").unwrap();
+        let mut out = Update::new_sparse(d);
+        let x: Vec<f32> = (0..d).map(|i| ((i % 89) as f32 - 44.0) * 0.01).collect();
+        comp.compress(&x, &mut rng, &mut out);
+        b.run(&gate::tcp_roundtrip_sparse_case(), || {
+            w.clear();
+            comp.encode_payload(&out, &mut w);
+            write_frame(&mut tx, w.as_bytes()).unwrap();
+            let frame = read_frame(&mut rx, MAX_FRAME_BYTES).unwrap();
+            let mut r = BitReader::new(&frame);
+            decode_payload(&mut r, d).unwrap();
+        });
+
+        let d = 2_000usize;
+        let mut comp = compress::from_spec("qsgd:16").unwrap();
+        let mut out = Update::new_dense(d);
+        let x: Vec<f32> = (0..d).map(|i| ((i % 37) as f32 - 18.0) * 0.05).collect();
+        comp.compress(&x, &mut rng, &mut out);
+        b.run(&gate::tcp_roundtrip_qsgd_case(), || {
+            w.clear();
+            comp.encode_payload(&out, &mut w);
+            write_frame(&mut tx, w.as_bytes()).unwrap();
+            let frame = read_frame(&mut rx, MAX_FRAME_BYTES).unwrap();
+            let mut r = BitReader::new(&frame);
+            decode_payload(&mut r, d).unwrap();
+        });
+    }
+
     // --- weighted averaging overhead ------------------------------------------
     {
         let d = 2_000;

@@ -1,0 +1,776 @@
+//! Multi-process cluster runtime: `memsgd serve` / `memsgd worker`.
+//!
+//! PR 5 put the parameter server on a real message-passing wire; this
+//! module takes the wire **off-box**. The server
+//! ([`ClusterServer`]) and each worker ([`run_worker`]) are separate
+//! OS processes exchanging the exact wire protocol of
+//! [`super::transport`] over TCP ([`super::net`]) — same frames, same
+//! node-id-ordered aggregation, same seeded discrete-event arbiter, so
+//! a localhost 3-process run reproduces the simulated engines' loss
+//! curves and bit totals exactly (`tests/cluster_lifecycle.rs` pins
+//! this; the CI `cluster-smoke` job diffs the `final:` lines).
+//!
+//! ## Protocol
+//!
+//! 1. **Accept**: the server listens on `--listen`, accepting exactly
+//!    `nodes` connections (bounded by [`ACCEPT_TIMEOUT`]). Node ids are
+//!    assigned **in accept order** — worker randomness derives from the
+//!    node id, not the process, so the trajectory is independent of
+//!    which process lands which id.
+//! 2. **Handshake**: the worker sends a `HELLO`
+//!    ([`super::net::Hello`]); the server checks it against the run
+//!    ([`super::net::check_compat`]) and answers either a `WELCOME`
+//!    (`{"proto", "node", "config"}` with the full [`RunConfig`]) or an
+//!    `{"error": reason}` frame. A mismatch fails the whole run
+//!    descriptively — half-compatible clusters silently diverge, so
+//!    they are refused up front.
+//! 3. **Run**: the worker rebuilds the dataset from the config
+//!    (`dataset`/`scale`/`seed` — both sides run the same deterministic
+//!    generator), re-derives its RNG stream by replaying the root
+//!    generator's splits in node-id order, and enters the same
+//!    [`super::experiment::WireWorker`] loops the threaded engine uses.
+//!    The server runs the shared protocol halves
+//!    (`serve_sync_protocol` / `serve_async_protocol`) against
+//!    multiplexed sockets.
+//! 4. **Shutdown**: the server drains `SHUTDOWN` to every worker, the
+//!    workers consume it and close, and the server shuts every socket
+//!    down and joins its reader threads — on error paths too, so a
+//!    dropped worker fails the run cleanly instead of hanging the
+//!    barrier.
+//!
+//! ## Multiplexing
+//!
+//! The server spawns one reader thread per accepted socket; every
+//! thread feeds one `mpsc` channel with `(node, frame-or-error)`
+//! messages. The single-threaded protocol loop consumes them through
+//! per-node [`Channel`] facades that buffer out-of-turn frames — so
+//! worker counts scale past thread-per-core on the *protocol* side
+//! (readers spend their lives blocked in `read`).
+//!
+//! ## Determinism caveats
+//!
+//! The trajectory is bit-identical to the simulated and threaded
+//! engines because every float fold happens on the server in node-id
+//! order and workers replay the exact per-node RNG streams. This
+//! requires both sides to build the **same dataset** — same
+//! `dataset`/`scale`/`seed`, same build of the deterministic synthetic
+//! generator. The handshake pins the dimension; it cannot detect two
+//! builds whose generators disagree at equal `d`, so run matching
+//! binaries.
+
+use std::collections::VecDeque;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::config::{LocalUpdate, MethodSpec};
+use super::experiment::{
+    finish_async_wire_record, finish_sync_wire_record, record_method_name, serve_async_protocol,
+    serve_sync_protocol, AsyncServerTally, Settings, SyncServerTally, Topology, WireWorker,
+};
+use super::net::{
+    check_compat, configure_stream, connect_with_retry, read_frame, write_frame, Backoff, Hello,
+    TcpChannel, HANDSHAKE_TIMEOUT, PROTOCOL_VERSION, READ_TIMEOUT,
+};
+use super::transport::{Channel, MAX_FRAME_BYTES};
+use crate::experiments::{self, Which};
+use crate::metrics::{LossPoint, RunRecord};
+use crate::models::{GradBackend, LogisticModel};
+use crate::optim::Schedule;
+use crate::sim::network::{ComputeModel, NetworkModel};
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+
+/// How long the server waits for all `nodes` workers to connect.
+pub const ACCEPT_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Poll interval of the non-blocking accept loop.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// Worker compute-speed spread for the async topology — matches the
+/// `Experiment` builder's default so `memsgd serve --topology ps-async`
+/// reproduces `memsgd train --wire --topology ps-async` exactly.
+const HETERO: f64 = 0.5;
+
+/// The full run description a server carries and ships to every worker
+/// in the `WELCOME` frame. Both sides rebuild the dataset and schedule
+/// from these fields, so the only state that crosses the wire at
+/// run time is the protocol itself.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    /// Dataset name (`epsilon` | `rcv1`).
+    pub dataset: String,
+    /// Dataset scale divisor (see [`experiments::dataset`]).
+    pub scale: usize,
+    /// Root PRNG seed — dataset generation and worker streams.
+    pub seed: u64,
+    /// Canonical method spec string ([`MethodSpec::spec_string`]).
+    pub method: String,
+    /// Stepsize schedule (f64 params round-trip exactly through JSON).
+    pub schedule: Schedule,
+    /// Total local-step budget across all workers.
+    pub steps: usize,
+    /// Loss evaluations along the run.
+    pub eval_points: usize,
+    /// Worker count — the server accepts exactly this many.
+    pub nodes: usize,
+    /// Local-update schedule (`B`, `H`).
+    pub local: LocalUpdate,
+    /// `ps-sync` | `ps-async`.
+    pub topology: String,
+    /// Network model name for `ps-async` (`1g` | `10g` | `100g`).
+    pub network: String,
+    /// Model dimension — pinned in the handshake.
+    pub dim: usize,
+}
+
+impl RunConfig {
+    /// Reject configs that could not serve: unknown method/dataset/
+    /// topology/network strings, zero nodes/steps/dim, invalid
+    /// local-update schedule.
+    pub fn validate(&self) -> Result<()> {
+        MethodSpec::parse(&self.method).context("cluster config method")?;
+        Which::parse(&self.dataset).context("cluster config dataset")?;
+        self.local.validate()?;
+        match self.topology.as_str() {
+            "ps-sync" | "ps-async" => {}
+            other => bail!("unknown topology '{other}' in cluster config (ps-sync|ps-async)"),
+        }
+        if self.topology == "ps-async" {
+            self.network_model()?;
+        }
+        if self.nodes == 0 {
+            bail!("cluster config: nodes must be >= 1");
+        }
+        if self.steps == 0 {
+            bail!("cluster config: steps must be >= 1");
+        }
+        if self.dim == 0 {
+            bail!("cluster config: dim must be set");
+        }
+        Ok(())
+    }
+
+    /// The network cost model behind the async topology's simulated
+    /// clock.
+    pub fn network_model(&self) -> Result<NetworkModel> {
+        Ok(match self.network.as_str() {
+            "1g" => NetworkModel::eth_1g(),
+            "10g" => NetworkModel::eth_10g(),
+            "100g" => NetworkModel::ib_100g(),
+            other => bail!("unknown network '{other}' in cluster config (1g|10g|100g)"),
+        })
+    }
+
+    /// The server's handshake fingerprint — every field concrete.
+    pub fn hello(&self) -> Hello {
+        Hello {
+            proto: PROTOCOL_VERSION,
+            dim: self.dim,
+            method: self.method.clone(),
+            batch: self.local.batch,
+            sync_every: self.local.sync_every,
+        }
+    }
+
+    /// Serialize for the `WELCOME` frame. The seed travels as a string
+    /// (u64 does not fit an f64 JSON number losslessly).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::str(self.dataset.clone())),
+            ("scale", Json::Num(self.scale as f64)),
+            ("seed", Json::str(self.seed.to_string())),
+            ("method", Json::str(self.method.clone())),
+            ("schedule", schedule_to_json(&self.schedule)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("eval_points", Json::Num(self.eval_points as f64)),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("batch", Json::Num(self.local.batch as f64)),
+            ("sync_every", Json::Num(self.local.sync_every as f64)),
+            ("topology", Json::str(self.topology.clone())),
+            ("network", Json::str(self.network.clone())),
+            ("dim", Json::Num(self.dim as f64)),
+        ])
+    }
+
+    /// Parse and re-validate a config received from a peer.
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let cfg = RunConfig {
+            dataset: j.req("dataset")?.as_str()?.to_string(),
+            scale: j.req("scale")?.as_usize()?,
+            seed: j
+                .req("seed")?
+                .as_str()?
+                .parse::<u64>()
+                .map_err(|e| anyhow!("cluster config seed: {e}"))?,
+            method: j.req("method")?.as_str()?.to_string(),
+            schedule: schedule_from_json(j.req("schedule")?)?,
+            steps: j.req("steps")?.as_usize()?,
+            eval_points: j.req("eval_points")?.as_usize()?,
+            nodes: j.req("nodes")?.as_usize()?,
+            local: LocalUpdate::new(
+                j.req("batch")?.as_usize()?,
+                j.req("sync_every")?.as_usize()?,
+            )?,
+            topology: j.req("topology")?.as_str()?.to_string(),
+            network: j.req("network")?.as_str()?.to_string(),
+            dim: j.req("dim")?.as_usize()?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+fn schedule_to_json(s: &Schedule) -> Json {
+    match *s {
+        Schedule::InvT { gamma, lambda, shift } => Json::obj(vec![
+            ("kind", Json::str("inv_t")),
+            ("gamma", Json::Num(gamma)),
+            ("lambda", Json::Num(lambda)),
+            ("shift", Json::Num(shift)),
+        ]),
+        Schedule::Bottou { gamma0, lambda } => Json::obj(vec![
+            ("kind", Json::str("bottou")),
+            ("gamma0", Json::Num(gamma0)),
+            ("lambda", Json::Num(lambda)),
+        ]),
+        Schedule::Const { eta } => {
+            Json::obj(vec![("kind", Json::str("const")), ("eta", Json::Num(eta))])
+        }
+    }
+}
+
+/// Inverse of [`schedule_to_json`]. Constructs the enum literally after
+/// checking positivity — a malformed peer frame must bail, not trip the
+/// constructors' asserts.
+fn schedule_from_json(j: &Json) -> Result<Schedule> {
+    match j.req("kind")?.as_str()? {
+        "inv_t" => {
+            let gamma = j.req("gamma")?.as_f64()?;
+            let lambda = j.req("lambda")?.as_f64()?;
+            let shift = j.req("shift")?.as_f64()?;
+            if !(gamma > 0.0 && lambda > 0.0 && shift > 0.0) {
+                bail!("invalid inv_t schedule in cluster config (all params must be > 0)");
+            }
+            Ok(Schedule::InvT { gamma, lambda, shift })
+        }
+        "bottou" => {
+            let gamma0 = j.req("gamma0")?.as_f64()?;
+            let lambda = j.req("lambda")?.as_f64()?;
+            if !(gamma0 > 0.0 && lambda > 0.0) {
+                bail!("invalid bottou schedule in cluster config (all params must be > 0)");
+            }
+            Ok(Schedule::Bottou { gamma0, lambda })
+        }
+        "const" => {
+            let eta = j.req("eta")?.as_f64()?;
+            if !(eta > 0.0) {
+                bail!("invalid const schedule in cluster config (eta must be > 0)");
+            }
+            Ok(Schedule::Const { eta })
+        }
+        other => bail!("unknown schedule kind '{other}' in cluster config"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server-side socket multiplexing
+// ---------------------------------------------------------------------------
+
+/// What a reader thread delivers: a frame from its node, or the final
+/// error that ended the connection.
+type ReaderMsg = (usize, std::result::Result<Vec<u8>, String>);
+
+/// State shared by every per-node [`MuxChannel`]: the one mpsc all
+/// reader threads feed, per-node buffers for frames that arrived before
+/// the protocol asked for them, and the first terminal error per node.
+struct MuxShared {
+    rx: Receiver<ReaderMsg>,
+    pending: Vec<VecDeque<Vec<u8>>>,
+    dead: Vec<Option<String>>,
+}
+
+impl MuxShared {
+    fn recv_for(&mut self, node: usize) -> Result<Vec<u8>> {
+        loop {
+            if let Some(frame) = self.pending[node].pop_front() {
+                return Ok(frame);
+            }
+            if let Some(e) = &self.dead[node] {
+                bail!("node {node}: connection lost: {e}");
+            }
+            match self.rx.recv() {
+                Ok((n, Ok(frame))) => self.pending[n].push_back(frame),
+                Ok((n, Err(e))) => self.dead[n] = Some(e),
+                Err(_) => bail!("node {node}: every reader thread has exited"),
+            }
+        }
+    }
+}
+
+/// The server's per-node [`Channel`] facade: `send` writes straight to
+/// the node's socket; `recv` pulls that node's next frame out of the
+/// shared mux (buffering other nodes' frames in arrival order).
+struct MuxChannel {
+    node: usize,
+    writer: TcpStream,
+    shared: Arc<Mutex<MuxShared>>,
+}
+
+impl Channel for MuxChannel {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        write_frame(&mut self.writer, frame)
+            .with_context(|| format!("sending to node {}", self.node))
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        let mut shared = self.shared.lock().map_err(|_| anyhow!("cluster mux poisoned"))?;
+        shared.recv_for(self.node)
+    }
+}
+
+fn spawn_reader(
+    node: usize,
+    mut stream: TcpStream,
+    tx: Sender<ReaderMsg>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        match read_frame(&mut stream, MAX_FRAME_BYTES) {
+            Ok(frame) => {
+                if tx.send((node, Ok(frame))).is_err() {
+                    return; // server side gone; nothing to report to
+                }
+            }
+            Err(e) => {
+                let _ = tx.send((node, Err(format!("{e:#}"))));
+                return;
+            }
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// The cluster parameter server: binds, accepts exactly `cfg.nodes`
+/// workers, runs the shared server-protocol half against their sockets,
+/// and returns the same [`RunRecord`] the in-process engines produce
+/// (plus a `cluster = 1` extra).
+pub struct ClusterServer {
+    listener: TcpListener,
+    cfg: RunConfig,
+    data: crate::data::Dataset,
+}
+
+impl ClusterServer {
+    /// Validate the config, build the dataset, and bind `addr`
+    /// (`"127.0.0.1:0"` picks a free port — [`ClusterServer::local_addr`]
+    /// reports it; the lifecycle tests rely on this).
+    pub fn bind(addr: &str, cfg: RunConfig) -> Result<ClusterServer> {
+        cfg.validate()?;
+        let which = Which::parse(&cfg.dataset)?;
+        let data = experiments::dataset(which, cfg.scale, cfg.seed);
+        if data.d() != cfg.dim {
+            bail!(
+                "cluster config declares dim {} but the {} dataset generator produced d={}",
+                cfg.dim,
+                cfg.dataset,
+                data.d()
+            );
+        }
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding listener on {addr}"))?;
+        Ok(ClusterServer { listener, cfg, data })
+    }
+
+    /// The bound address (resolves a `:0` bind to the actual port).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("resolving listen addr")
+    }
+
+    /// Accept, handshake, serve, shut down. Teardown runs on success
+    /// and failure alike: every socket is shut down (turning blocked
+    /// reads into errors) and every reader thread joined, so no run —
+    /// clean, rejected, or mid-round-disconnected — leaks threads or
+    /// sockets.
+    pub fn run(self) -> Result<RunRecord> {
+        let nodes = self.cfg.nodes;
+        let (tx, rx) = std::sync::mpsc::channel::<ReaderMsg>();
+        let shared = Arc::new(Mutex::new(MuxShared {
+            rx,
+            pending: (0..nodes).map(|_| VecDeque::new()).collect(),
+            dead: vec![None; nodes],
+        }));
+        let mut channels: Vec<Box<dyn Channel>> = Vec::with_capacity(nodes);
+        let mut shutdowners: Vec<TcpStream> = Vec::with_capacity(nodes);
+        let mut readers: Vec<std::thread::JoinHandle<()>> = Vec::with_capacity(nodes);
+        let served = match self.accept_workers(
+            &tx,
+            &shared,
+            &mut channels,
+            &mut shutdowners,
+            &mut readers,
+        ) {
+            Ok(()) => self.serve(&mut channels),
+            Err(e) => Err(e),
+        };
+        drop(channels);
+        drop(tx);
+        for stream in &shutdowners {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        for handle in readers {
+            let _ = handle.join();
+        }
+        served
+    }
+
+    /// Accept exactly `nodes` connections, handshaking each in accept
+    /// order (node id = accept index). A handshake mismatch sends the
+    /// worker an `{"error": ...}` frame and fails the run — the caller's
+    /// teardown closes every already-accepted socket.
+    fn accept_workers(
+        &self,
+        tx: &Sender<ReaderMsg>,
+        shared: &Arc<Mutex<MuxShared>>,
+        channels: &mut Vec<Box<dyn Channel>>,
+        shutdowners: &mut Vec<TcpStream>,
+        readers: &mut Vec<std::thread::JoinHandle<()>>,
+    ) -> Result<()> {
+        let nodes = self.cfg.nodes;
+        let server_hello = self.cfg.hello();
+        self.listener
+            .set_nonblocking(true)
+            .context("setting the listener non-blocking")?;
+        let deadline = Instant::now() + ACCEPT_TIMEOUT;
+        let mut node = 0usize;
+        while node < nodes {
+            let mut stream = match self.listener.accept() {
+                Ok((stream, _)) => stream,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!(
+                            "only {node} of {nodes} workers connected within {}s",
+                            ACCEPT_TIMEOUT.as_secs()
+                        );
+                    }
+                    std::thread::sleep(ACCEPT_POLL);
+                    continue;
+                }
+                Err(e) => return Err(e).context("accepting worker connection"),
+            };
+            stream
+                .set_nonblocking(false)
+                .context("setting accepted socket blocking")?;
+            configure_stream(&stream)?;
+            stream
+                .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+                .context("setting handshake timeout")?;
+            let frame = read_frame(&mut stream, MAX_FRAME_BYTES)
+                .with_context(|| format!("reading HELLO from connection {node}"))?;
+            let worker_hello = Hello::decode(&frame)?;
+            if let Err(e) = check_compat(&worker_hello, &server_hello) {
+                let reject =
+                    Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string();
+                let _ = write_frame(&mut stream, reject.as_bytes());
+                let _ = stream.shutdown(Shutdown::Both);
+                return Err(e.push_context(format!("connection {node} failed the handshake")));
+            }
+            let welcome = Json::obj(vec![
+                ("proto", Json::Num(PROTOCOL_VERSION as f64)),
+                ("node", Json::Num(node as f64)),
+                ("config", self.cfg.to_json()),
+            ])
+            .to_string();
+            write_frame(&mut stream, welcome.as_bytes())
+                .with_context(|| format!("sending WELCOME to node {node}"))?;
+            stream
+                .set_read_timeout(Some(READ_TIMEOUT))
+                .context("restoring data-plane read timeout")?;
+            let reader = stream.try_clone().context("cloning socket for reader thread")?;
+            let shutdowner = stream.try_clone().context("cloning socket for shutdown")?;
+            readers.push(spawn_reader(node, reader, tx.clone()));
+            shutdowners.push(shutdowner);
+            channels.push(Box::new(MuxChannel {
+                node,
+                writer: stream,
+                shared: Arc::clone(shared),
+            }));
+            node += 1;
+        }
+        Ok(())
+    }
+
+    /// The server-protocol half against the accepted sockets — the
+    /// exact loops the threaded engines run, minus the in-process
+    /// worker threads (those live in other processes now). The
+    /// accounted upload bits come from the `UPLOAD` headers; the
+    /// threaded engines' second bookkeeping source (worker `ef`
+    /// counters) is out of reach across process boundaries, so the
+    /// cross-check lives in the golden tests instead.
+    fn serve(&self, ends: &mut [Box<dyn Channel>]) -> Result<RunRecord> {
+        let cfg = &self.cfg;
+        let method = MethodSpec::parse(&cfg.method)?;
+        let n = self.data.n();
+        let d = self.data.d();
+        let mut backend = LogisticModel::new(&self.data, 1.0 / n as f64);
+        let nodes = cfg.nodes.max(1);
+        let h = cfg.local.sync_every.max(1);
+        let s = Settings {
+            method: method.clone(),
+            schedule: cfg.schedule.clone(),
+            steps: cfg.steps,
+            eval_points: cfg.eval_points,
+            average: false,
+            seed: cfg.seed,
+            dataset: self.data.name.clone(),
+            local: cfg.local,
+        };
+        let started = Instant::now();
+        let mut x = vec![0.0f32; d];
+        match cfg.topology.as_str() {
+            "ps-sync" => {
+                let rounds = (cfg.steps / (nodes * h)).max(1);
+                let eval_every = (rounds / cfg.eval_points.max(1)).max(1);
+                let mut record = RunRecord {
+                    method: record_method_name(&method, &Topology::ParamServerSync { nodes }),
+                    dataset: s.dataset.clone(),
+                    schedule: s.schedule.describe(),
+                    ..Default::default()
+                };
+                record.curve.push(LossPoint { t: 0, bits: 0, loss: backend.full_loss(&x) });
+                let mut tally = SyncServerTally::new(nodes);
+                serve_sync_protocol(
+                    &mut backend,
+                    ends,
+                    &mut x,
+                    rounds,
+                    eval_every,
+                    &mut record,
+                    &mut tally,
+                )?;
+                let uploads: u64 = tally.upload_acc.iter().sum();
+                finish_sync_wire_record(&mut record, &s, nodes, rounds, uploads, &tally, started);
+                record.extra.insert("cluster".into(), 1.0);
+                Ok(record)
+            }
+            "ps-async" => {
+                let net = cfg.network_model()?;
+                let compute = ComputeModel::new(1e-9, 2000.0);
+                let total_syncs = cfg.steps / h;
+                let eval_every = (total_syncs / cfg.eval_points.max(1)).max(1);
+                let grads_per_sync = (cfg.local.batch.max(1) * h) as f64;
+                let slow: Vec<f64> = (0..nodes)
+                    .map(|w| {
+                        1.0 + if nodes > 1 {
+                            HETERO * w as f64 / (nodes - 1) as f64
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect();
+                let mut record = RunRecord {
+                    method: record_method_name(
+                        &method,
+                        &Topology::ParamServerAsync { nodes, net: net.clone() },
+                    ),
+                    dataset: s.dataset.clone(),
+                    schedule: s.schedule.describe(),
+                    ..Default::default()
+                };
+                record.curve.push(LossPoint { t: 0, bits: 0, loss: backend.full_loss(&x) });
+                let mut tally = AsyncServerTally::new(nodes);
+                serve_async_protocol(
+                    &mut backend,
+                    ends,
+                    &mut x,
+                    &net,
+                    &compute,
+                    &slow,
+                    grads_per_sync,
+                    total_syncs,
+                    eval_every,
+                    &mut record,
+                    &mut tally,
+                )?;
+                let total_bits: u64 = tally.upload_acc.iter().sum();
+                finish_async_wire_record(&mut record, &s, nodes, total_bits, &tally, started);
+                record.extra.insert("cluster".into(), 1.0);
+                Ok(record)
+            }
+            other => bail!("unknown topology '{other}' (validated config cannot reach this)"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker
+// ---------------------------------------------------------------------------
+
+/// A worker process: dial the server (with bounded-backoff retries),
+/// handshake, rebuild the dataset and RNG stream the config names, and
+/// run the wire-worker protocol to completion. Returns the assigned
+/// node id and the accounted upload bits.
+pub fn run_worker(addr: &str, expect: &Hello, backoff: &Backoff) -> Result<(usize, u64)> {
+    let mut stream = connect_with_retry(addr, backoff)?;
+    configure_stream(&stream)?;
+    write_frame(&mut stream, &expect.encode()).context("sending HELLO")?;
+    let frame = read_frame(&mut stream, MAX_FRAME_BYTES).context("reading WELCOME")?;
+    let text = std::str::from_utf8(&frame).context("WELCOME frame is not UTF-8")?;
+    let j = Json::parse(text).context("WELCOME frame is not JSON")?;
+    if let Some(err) = j.get("error") {
+        bail!("server rejected handshake: {}", err.as_str().unwrap_or("unknown reason"));
+    }
+    let proto = j.req("proto")?.as_usize()? as u64;
+    if proto != PROTOCOL_VERSION {
+        bail!(
+            "protocol version mismatch (server speaks v{proto}, \
+             worker speaks v{PROTOCOL_VERSION})"
+        );
+    }
+    let node = j.req("node")?.as_usize()?;
+    let cfg = RunConfig::from_json(j.req("config")?)?;
+    // Belt and braces: the server already checked, but a worker must
+    // never run a config it would not have accepted.
+    check_compat(expect, &cfg.hello())?;
+    if node >= cfg.nodes {
+        bail!("server assigned node id {node}, out of range for {} nodes", cfg.nodes);
+    }
+
+    let which = Which::parse(&cfg.dataset)?;
+    let data = experiments::dataset(which, cfg.scale, cfg.seed);
+    if data.d() != cfg.dim {
+        bail!(
+            "dataset generators disagree: server declares d={}, local build produced d={}",
+            cfg.dim,
+            data.d()
+        );
+    }
+    let method = MethodSpec::parse(&cfg.method)?;
+    let d = data.d();
+    let n = data.n();
+    let nodes = cfg.nodes.max(1);
+    let h = cfg.local.sync_every.max(1);
+
+    // Re-derive this node's RNG stream: `split` advances the root, so
+    // replay the splits in node-id order exactly as the single-process
+    // engines perform them (worker w gets the root's (w+1)-th split).
+    let mut root = Prng::new(cfg.seed);
+    let mut rng = root.split(1);
+    for w in 1..=node {
+        rng = root.split(w as u64 + 1);
+    }
+
+    let worker = WireWorker {
+        ch: Box::new(TcpChannel::new(stream)?) as Box<dyn Channel>,
+        backend: LogisticModel::new(&data, 1.0 / n as f64),
+        ef: method.error_feedback(d),
+        rng,
+        schedule: cfg.schedule.clone(),
+        local: cfg.local,
+        node: node as u32,
+        d,
+        n,
+    };
+    let bits = match cfg.topology.as_str() {
+        "ps-sync" => {
+            let rounds = (cfg.steps / (nodes * h)).max(1);
+            worker.run_sync(rounds, 1.0 / nodes as f32)?
+        }
+        "ps-async" => worker.run_async()?,
+        other => bail!("unknown topology '{other}' in server config"),
+    };
+    Ok((node, bits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> RunConfig {
+        RunConfig {
+            dataset: "epsilon".into(),
+            scale: 2000,
+            seed: u64::MAX - 7, // exercises the string-seed path
+            method: "memsgd:top_k:1".into(),
+            schedule: Schedule::InvT { gamma: 2.0, lambda: 1.0 / 200.0, shift: 2000.0 },
+            steps: 200,
+            eval_points: 4,
+            nodes: 2,
+            local: LocalUpdate { batch: 2, sync_every: 3 },
+            topology: "ps-sync".into(),
+            network: "1g".into(),
+            dim: 2000,
+        }
+    }
+
+    #[test]
+    fn run_config_json_round_trips_every_schedule_kind() {
+        for schedule in [
+            Schedule::InvT { gamma: 2.0, lambda: 0.001, shift: 47.0 },
+            Schedule::Bottou { gamma0: 0.25, lambda: 1.0 / 677.0 },
+            Schedule::Const { eta: 0.05 },
+        ] {
+            let c = RunConfig { schedule, ..cfg() };
+            let json = c.to_json().to_string();
+            let back = RunConfig::from_json(&Json::parse(&json).unwrap()).unwrap();
+            assert_eq!(back, c, "{json}");
+        }
+    }
+
+    #[test]
+    fn run_config_validation_is_strict() {
+        assert!(cfg().validate().is_ok());
+        let reject = |mutate: &dyn Fn(&mut RunConfig), needle: &str| {
+            let mut c = cfg();
+            mutate(&mut c);
+            let err = c.validate().unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "expected '{needle}' in '{msg}'");
+        };
+        reject(&|c| c.topology = "ring".into(), "unknown topology");
+        reject(&|c| c.method = "adam".into(), "method");
+        reject(&|c| c.dataset = "mnist".into(), "dataset");
+        reject(&|c| c.nodes = 0, "nodes");
+        reject(&|c| c.steps = 0, "steps");
+        reject(&|c| c.dim = 0, "dim");
+        reject(
+            &|c| {
+                c.topology = "ps-async".into();
+                c.network = "56k".into();
+            },
+            "unknown network",
+        );
+        reject(&|c| c.local = LocalUpdate { batch: 0, sync_every: 1 }, "batch");
+    }
+
+    #[test]
+    fn schedule_from_json_bails_on_nonpositive_params() {
+        // The Schedule constructors assert; a hostile frame must error
+        // descriptively instead of panicking the process.
+        for bad in [
+            r#"{"kind":"const","eta":0}"#,
+            r#"{"kind":"inv_t","gamma":-1,"lambda":0.1,"shift":10}"#,
+            r#"{"kind":"bottou","gamma0":1,"lambda":0}"#,
+            r#"{"kind":"warp","eta":1}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(schedule_from_json(&j).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn hello_mirrors_the_config() {
+        let c = cfg();
+        let h = c.hello();
+        assert_eq!(h.proto, PROTOCOL_VERSION);
+        assert_eq!(h.dim, 2000);
+        assert_eq!(h.method, "memsgd:top_k:1");
+        assert_eq!(h.batch, 2);
+        assert_eq!(h.sync_every, 3);
+    }
+}

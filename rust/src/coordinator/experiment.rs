@@ -429,7 +429,7 @@ impl<B: GradBackend + Clone + Send> Experiment<B> {
 }
 
 /// Legacy-compatible record naming per topology.
-fn record_method_name(method: &MethodSpec, topology: &Topology) -> String {
+pub(crate) fn record_method_name(method: &MethodSpec, topology: &Topology) -> String {
     let w = topology.workers();
     match topology {
         Topology::Sequential => method.name(),
@@ -1147,25 +1147,30 @@ fn check_wire_accounting(upload_acc: &[u64], worker_bits: &[u64]) -> Result<u64>
 /// a backend replica, the error-feedback state, the node's RNG stream,
 /// and the run configuration. Built on the server thread in node-id
 /// order (so the RNG split sequence matches the simulated engine) and
-/// moved into the worker thread whole.
-struct WireWorker<B> {
-    ch: Box<dyn Channel>,
-    backend: B,
-    ef: ErrorFeedbackStep,
-    rng: Prng,
-    schedule: Schedule,
-    local: LocalUpdate,
-    node: u32,
-    d: usize,
-    n: usize,
+/// moved into the worker thread whole. The multi-process cluster
+/// runtime ([`super::cluster`]) builds the same state in a worker
+/// process — channel backed by a TCP socket, RNG re-derived from the
+/// handshake's seed and node id — and runs the same protocol loops.
+pub(crate) struct WireWorker<B> {
+    pub(crate) ch: Box<dyn Channel>,
+    pub(crate) backend: B,
+    pub(crate) ef: ErrorFeedbackStep,
+    pub(crate) rng: Prng,
+    pub(crate) schedule: Schedule,
+    pub(crate) local: LocalUpdate,
+    pub(crate) node: u32,
+    pub(crate) d: usize,
+    pub(crate) n: usize,
 }
 
 impl<B: GradBackend> WireWorker<B> {
     /// Synchronous protocol: `rounds` barriered iterations of phase →
     /// encoded upload → decoded broadcast, against a private model
-    /// replica that stays bit-identical to the server's iterate.
-    /// Returns the accounted upload bits (cross-checked by the server).
-    fn run_sync(mut self, rounds: usize, scale: f32) -> Result<u64> {
+    /// replica that stays bit-identical to the server's iterate, then
+    /// one final `SHUTDOWN` from the server (the explicit end-of-run
+    /// drain). Returns the accounted upload bits (cross-checked by the
+    /// server).
+    pub(crate) fn run_sync(mut self, rounds: usize, scale: f32) -> Result<u64> {
         let mut x = vec![0.0f32; self.d];
         let mut ws = WorkerScratch::new(self.d, self.n, self.local);
         let mut w = BitWriter::new();
@@ -1188,7 +1193,18 @@ impl<B: GradBackend> WireWorker<B> {
                 other => bail!("node {node}: unexpected {other:?} in round {round}"),
             }
         }
-        Ok(self.ef.bits_sent)
+        // A premature SHUTDOWN mid-run lands in the round loop above and
+        // fails descriptively; the one the server drains after the final
+        // round is consumed here, so both sides agree the run is over
+        // before either closes its endpoint.
+        let frame = self.ch.recv()?;
+        match decode_msg(&frame, self.d)?.msg {
+            WireMsg::Shutdown => Ok(self.ef.bits_sent),
+            other => bail!(
+                "node {}: expected SHUTDOWN after the final round, got {other:?}",
+                self.node
+            ),
+        }
     }
 
     /// Asynchronous protocol: an event loop over `Apply` (keep the
@@ -1197,7 +1213,7 @@ impl<B: GradBackend> WireWorker<B> {
     /// ordering guarantees every update the server applied before a
     /// `Go` has reached the replica when the phase runs — the phase
     /// sees exactly the simulated engine's iterate.
-    fn run_async(mut self) -> Result<u64> {
+    pub(crate) fn run_async(mut self) -> Result<u64> {
         let mut x = vec![0.0f32; self.d];
         let mut ws = WorkerScratch::new(self.d, self.n, self.local);
         let mut w = BitWriter::new();
@@ -1226,6 +1242,185 @@ impl<B: GradBackend> WireWorker<B> {
     }
 }
 
+/// Per-run tallies of the synchronous server protocol: the paper
+/// accounting carried in upload headers plus the measured wire bits,
+/// split by direction. Shared by the in-process threaded engine and
+/// the multi-process cluster runtime ([`super::cluster`]).
+pub(crate) struct SyncServerTally {
+    /// Accounted upload bits per node, from the `UPLOAD` headers.
+    pub(crate) upload_acc: Vec<u64>,
+    /// Paper-accounted broadcast bits (closed form, as simulated).
+    pub(crate) broadcast_bits: u64,
+    /// Measured `UPLOAD` payload bits.
+    pub(crate) wire_up: u64,
+    /// Measured `BROADCAST` payload bits.
+    pub(crate) wire_bc: u64,
+    /// Measured frame bits, worker → server.
+    pub(crate) wire_frames_up: u64,
+    /// Measured frame bits, server → workers.
+    pub(crate) wire_frames_down: u64,
+}
+
+impl SyncServerTally {
+    pub(crate) fn new(nodes: usize) -> SyncServerTally {
+        SyncServerTally {
+            upload_acc: vec![0; nodes],
+            broadcast_bits: 0,
+            wire_up: 0,
+            wire_bc: 0,
+            wire_frames_up: 0,
+            wire_frames_down: 0,
+        }
+    }
+}
+
+/// The server half of the synchronous wire protocol: `rounds`
+/// node-id-ordered aggregation rounds against one channel per node,
+/// then a `SHUTDOWN` drained to every worker. Exactly the simulated
+/// engine's floating-point fold and accounting — the threaded engine
+/// runs it against loopback/TCP ends with in-process workers, the
+/// cluster runtime ([`super::cluster`]) against accepted sockets with
+/// worker processes, and both reproduce [`param_server_sync`]
+/// bit for bit.
+pub(crate) fn serve_sync_protocol<B: GradBackend>(
+    backend: &mut B,
+    ends: &mut [Box<dyn Channel>],
+    x: &mut [f32],
+    rounds: usize,
+    eval_every: usize,
+    record: &mut RunRecord,
+    tally: &mut SyncServerTally,
+) -> Result<()> {
+    let nodes = ends.len().max(1);
+    let d = x.len();
+    let scale = 1.0 / nodes as f32;
+    let idx_bits = crate::compress::sparse::index_bits(d);
+    let mut agg: BTreeMap<u32, f32> = BTreeMap::new();
+    let mut agg_dense = vec![0.0f32; d];
+    let mut bc_update = Update::new_sparse(d);
+    let mut w = BitWriter::new();
+    for round in 0..rounds {
+        agg.clear();
+        let mut any_dense = false;
+        // Node-id-ordered aggregation: one blocking recv per node
+        // channel, in id order — the simulated engine's exact
+        // floating-point fold order.
+        for (node, ch) in ends.iter_mut().enumerate() {
+            let frame = ch.recv()?;
+            tally.wire_frames_up += frame.len() as u64 * 8;
+            let dec = decode_msg(&frame, d)?;
+            match dec.msg {
+                WireMsg::Upload { round: r, node: nid, accounted_bits, update }
+                    if r == round as u64 && nid == node as u32 =>
+                {
+                    tally.wire_up += dec.payload_bits;
+                    tally.upload_acc[node] += accounted_bits;
+                    match update {
+                        Update::Sparse(sv) => {
+                            for (&j, &vj) in sv.idx.iter().zip(&sv.val) {
+                                *agg.entry(j).or_insert(0.0) += vj;
+                            }
+                        }
+                        Update::Dense(g) => {
+                            any_dense = true;
+                            for (a, &gj) in agg_dense.iter_mut().zip(&g) {
+                                *a += gj;
+                            }
+                        }
+                    }
+                }
+                other => {
+                    bail!("server: unexpected {other:?} from node {node} in round {round}")
+                }
+            }
+        }
+        // Frame the (unscaled) aggregate for the replicas.
+        if any_dense {
+            match &mut bc_update {
+                Update::Dense(g) => {
+                    g.clear();
+                    g.extend_from_slice(&agg_dense);
+                }
+                other => *other = Update::Dense(agg_dense.clone()),
+            }
+        } else {
+            let sv = bc_update.sparse_mut(d);
+            for (&j, &vj) in agg.iter() {
+                sv.push(j, vj);
+            }
+        }
+        let payload = encode_broadcast(&mut w, round as u64, &bc_update);
+        for ch in ends.iter_mut() {
+            ch.send(w.as_bytes())?;
+            tally.wire_bc += payload;
+            tally.wire_frames_down += w.as_bytes().len() as u64 * 8;
+        }
+        // Apply the mean update to the server iterate with the
+        // simulated engine's literal expressions + accounting.
+        if any_dense {
+            for (xj, a) in x.iter_mut().zip(agg_dense.iter_mut()) {
+                *xj -= *a * scale;
+                *a = 0.0;
+            }
+            tally.broadcast_bits += 32 * d as u64;
+        } else {
+            for (&j, &vj) in agg.iter() {
+                x[j as usize] -= vj * scale;
+            }
+            tally.broadcast_bits += agg.len() as u64 * (32 + idx_bits);
+        }
+        if (round + 1) % eval_every == 0 || round + 1 == rounds {
+            let uploads: u64 = tally.upload_acc.iter().sum();
+            record.curve.push(LossPoint {
+                t: round + 1,
+                bits: uploads + tally.broadcast_bits,
+                loss: backend.full_loss(x),
+            });
+        }
+    }
+    // Clean shutdown: drain a SHUTDOWN to every worker so both sides
+    // agree the run is over before any endpoint closes.
+    encode_shutdown(&mut w);
+    for ch in ends.iter_mut() {
+        ch.send(w.as_bytes())?;
+        tally.wire_frames_down += w.as_bytes().len() as u64 * 8;
+    }
+    Ok(())
+}
+
+/// Fill a sync wire-engine run record from the server tallies: steps,
+/// accounted totals, and the measured `wire_*` extras. Shared by the
+/// threaded engine and the cluster runtime so both report identically.
+pub(crate) fn finish_sync_wire_record(
+    record: &mut RunRecord,
+    s: &Settings,
+    nodes: usize,
+    rounds: usize,
+    uploads: u64,
+    tally: &SyncServerTally,
+    started: Instant,
+) {
+    let h = s.local.sync_every.max(1);
+    record.steps = rounds * nodes * h;
+    record.total_bits = uploads + tally.broadcast_bits;
+    record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+    record.extra.insert("workers".into(), nodes as f64);
+    record.extra.insert("upload_bits".into(), uploads as f64);
+    record.extra.insert("broadcast_bits".into(), tally.broadcast_bits as f64);
+    record.extra.insert("wire".into(), 1.0);
+    record.extra.insert("wire_upload_payload_bits".into(), tally.wire_up as f64);
+    record.extra.insert("wire_broadcast_payload_bits".into(), tally.wire_bc as f64);
+    record.extra.insert("wire_upload_frame_bits".into(), tally.wire_frames_up as f64);
+    record
+        .extra
+        .insert("wire_broadcast_frame_bits".into(), tally.wire_frames_down as f64);
+    record.extra.insert(
+        "wire_frame_bits".into(),
+        (tally.wire_frames_up + tally.wire_frames_down) as f64,
+    );
+    annotate_local(record, s.local, rounds * nodes * h);
+}
+
 /// Threaded synchronous parameter server: one server (this thread) and
 /// `nodes` worker threads exchanging Elias-coded wire messages over
 /// `transport`. Barriered rounds with node-id-ordered aggregation keep
@@ -1246,7 +1441,6 @@ pub(crate) fn param_server_sync_wire<B: GradBackend + Clone + Send>(
     let h = local.sync_every.max(1);
     let rounds = (s.steps / (nodes * h)).max(1);
     let scale = 1.0 / nodes as f32;
-    let idx_bits = crate::compress::sparse::index_bits(d);
     let mut root_rng = Prng::new(s.seed);
 
     // Channels and per-node state, created in node-id order so the RNG
@@ -1280,9 +1474,7 @@ pub(crate) fn param_server_sync_wire<B: GradBackend + Clone + Send>(
     let eval_every = (rounds / s.eval_points.max(1)).max(1);
     record.curve.push(LossPoint { t: 0, bits: 0, loss: backend.full_loss(&x) });
 
-    let mut upload_acc = vec![0u64; nodes];
-    let mut broadcast_bits = 0u64;
-    let (mut wire_up, mut wire_bc, mut wire_frames) = (0u64, 0u64, 0u64);
+    let mut tally = SyncServerTally::new(nodes);
 
     let worker_bits = std::thread::scope(|scope| -> Result<Vec<u64>> {
         let mut handles = Vec::with_capacity(nodes);
@@ -1290,114 +1482,208 @@ pub(crate) fn param_server_sync_wire<B: GradBackend + Clone + Send>(
             handles.push(scope.spawn(move || wk.run_sync(rounds, scale)));
         }
 
-        // The server protocol. Run as an immediately-invoked closure so
-        // an error releases the channel ends before the joins below —
+        // The server protocol. An error falls through to the drop
+        // below, which releases the channel ends before the joins —
         // dropped ends turn every blocked worker `recv` into an error,
         // so shutdown can never deadlock.
-        #[allow(clippy::redundant_closure_call)] // the call IS the scope of the borrows
-        let served = (|| -> Result<()> {
-            let mut agg: BTreeMap<u32, f32> = BTreeMap::new();
-            let mut agg_dense = vec![0.0f32; d];
-            let mut bc_update = Update::new_sparse(d);
-            let mut w = BitWriter::new();
-            for round in 0..rounds {
-                agg.clear();
-                let mut any_dense = false;
-                // Node-id-ordered aggregation: one blocking recv per
-                // node channel, in id order — the simulated engine's
-                // exact floating-point fold order.
-                for (node, ch) in server_ends.iter_mut().enumerate() {
-                    let frame = ch.recv()?;
-                    wire_frames += frame.len() as u64 * 8;
-                    let dec = decode_msg(&frame, d)?;
-                    match dec.msg {
-                        WireMsg::Upload { round: r, node: nid, accounted_bits, update }
-                            if r == round as u64 && nid == node as u32 =>
-                        {
-                            wire_up += dec.payload_bits;
-                            upload_acc[node] += accounted_bits;
-                            match update {
-                                Update::Sparse(sv) => {
-                                    for (&j, &vj) in sv.idx.iter().zip(&sv.val) {
-                                        *agg.entry(j).or_insert(0.0) += vj;
-                                    }
-                                }
-                                Update::Dense(g) => {
-                                    any_dense = true;
-                                    for (a, &gj) in agg_dense.iter_mut().zip(&g) {
-                                        *a += gj;
-                                    }
-                                }
-                            }
-                        }
-                        other => bail!(
-                            "server: unexpected {other:?} from node {node} in round {round}"
-                        ),
-                    }
-                }
-                // Frame the (unscaled) aggregate for the replicas.
-                if any_dense {
-                    match &mut bc_update {
-                        Update::Dense(g) => {
-                            g.clear();
-                            g.extend_from_slice(&agg_dense);
-                        }
-                        other => *other = Update::Dense(agg_dense.clone()),
-                    }
-                } else {
-                    let sv = bc_update.sparse_mut(d);
-                    for (&j, &vj) in agg.iter() {
-                        sv.push(j, vj);
-                    }
-                }
-                let payload = encode_broadcast(&mut w, round as u64, &bc_update);
-                for ch in server_ends.iter_mut() {
-                    ch.send(w.as_bytes())?;
-                    wire_bc += payload;
-                    wire_frames += w.as_bytes().len() as u64 * 8;
-                }
-                // Apply the mean update to the server iterate with the
-                // simulated engine's literal expressions + accounting.
-                if any_dense {
-                    for (xj, a) in x.iter_mut().zip(agg_dense.iter_mut()) {
-                        *xj -= *a * scale;
-                        *a = 0.0;
-                    }
-                    broadcast_bits += 32 * d as u64;
-                } else {
-                    for (&j, &vj) in agg.iter() {
-                        x[j as usize] -= vj * scale;
-                    }
-                    broadcast_bits += agg.len() as u64 * (32 + idx_bits);
-                }
-                if (round + 1) % eval_every == 0 || round + 1 == rounds {
-                    let uploads: u64 = upload_acc.iter().sum();
-                    record.curve.push(LossPoint {
-                        t: round + 1,
-                        bits: uploads + broadcast_bits,
-                        loss: backend.full_loss(&x),
-                    });
-                }
-            }
-            Ok(())
-        })();
+        let served = serve_sync_protocol(
+            backend,
+            &mut server_ends,
+            &mut x,
+            rounds,
+            eval_every,
+            &mut record,
+            &mut tally,
+        );
         drop(server_ends);
         join_wire_workers(handles, served)
     })?;
-    let uploads = check_wire_accounting(&upload_acc, &worker_bits)?;
+    let uploads = check_wire_accounting(&tally.upload_acc, &worker_bits)?;
 
-    record.steps = rounds * nodes * h;
-    record.total_bits = uploads + broadcast_bits;
-    record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
-    record.extra.insert("workers".into(), nodes as f64);
-    record.extra.insert("upload_bits".into(), uploads as f64);
-    record.extra.insert("broadcast_bits".into(), broadcast_bits as f64);
-    record.extra.insert("wire".into(), 1.0);
-    record.extra.insert("wire_upload_payload_bits".into(), wire_up as f64);
-    record.extra.insert("wire_broadcast_payload_bits".into(), wire_bc as f64);
-    record.extra.insert("wire_frame_bits".into(), wire_frames as f64);
-    annotate_local(&mut record, local, rounds * nodes * h);
+    finish_sync_wire_record(&mut record, s, nodes, rounds, uploads, &tally, started);
     Ok(record)
+}
+
+/// Per-run tallies of the asynchronous server protocol: accounted
+/// upload bits, measured wire bits split by direction, and the
+/// simulated-clock state (version counter, staleness, link busy time).
+/// Shared by the threaded engine and the cluster runtime.
+pub(crate) struct AsyncServerTally {
+    pub(crate) upload_acc: Vec<u64>,
+    pub(crate) wire_up: u64,
+    pub(crate) wire_apply: u64,
+    pub(crate) wire_frames_up: u64,
+    pub(crate) wire_frames_down: u64,
+    pub(crate) version: u64,
+    pub(crate) link_busy_total: u64,
+    pub(crate) staleness_sum: u64,
+    pub(crate) staleness_max: u64,
+    pub(crate) now_ns: u64,
+}
+
+impl AsyncServerTally {
+    pub(crate) fn new(nodes: usize) -> AsyncServerTally {
+        AsyncServerTally {
+            upload_acc: vec![0; nodes],
+            wire_up: 0,
+            wire_apply: 0,
+            wire_frames_up: 0,
+            wire_frames_down: 0,
+            version: 0,
+            link_busy_total: 0,
+            staleness_sum: 0,
+            staleness_max: 0,
+            now_ns: 0,
+        }
+    }
+}
+
+/// The server half of the asynchronous wire protocol: the seeded
+/// discrete-event heap arbitrates delivery order (`GO` → `UPLOAD` →
+/// `APPLY` to every replica), the accounted bits charge the network
+/// model exactly as simulated, and a `SHUTDOWN` drains to every worker
+/// at the end. Shared by the threaded engine and the cluster runtime;
+/// both reproduce [`param_server_async`] bit for bit.
+#[allow(clippy::too_many_arguments)] // the simulated engine's state, spelled out
+pub(crate) fn serve_async_protocol<B: GradBackend>(
+    backend: &mut B,
+    ends: &mut [Box<dyn Channel>],
+    x: &mut [f32],
+    net: &NetworkModel,
+    compute: &ComputeModel,
+    slow: &[f64],
+    grads_per_sync: f64,
+    total_syncs: usize,
+    eval_every: usize,
+    record: &mut RunRecord,
+    tally: &mut AsyncServerTally,
+) -> Result<()> {
+    let d = x.len();
+    let compute_ns = |slow: f64, cm: &ComputeModel| -> u64 {
+        (cm.s_per_coord * cm.coords_per_grad * grads_per_sync * slow * 1e9).max(1.0) as u64
+    };
+    let mut queue: BinaryHeap<Reverse<Finish>> = BinaryHeap::new();
+    for (i, &sl) in slow.iter().enumerate() {
+        queue.push(Reverse(Finish { t_ns: compute_ns(sl, compute), worker: i }));
+    }
+    let mut fetch_version = vec![0u64; ends.len()];
+    let mut link_free_ns = 0u64;
+    let mut w = BitWriter::new();
+
+    while tally.version < total_syncs as u64 {
+        let Reverse(ev) = queue.pop().expect("queue never empties");
+        tally.now_ns = tally.now_ns.max(ev.t_ns);
+
+        // The heap names the worker; it computes one phase at
+        // η(version) against its (current) replica and uploads.
+        encode_go(&mut w, tally.version);
+        ends[ev.worker].send(w.as_bytes())?;
+        tally.wire_frames_down += w.as_bytes().len() as u64 * 8;
+        let frame = ends[ev.worker].recv()?;
+        tally.wire_frames_up += frame.len() as u64 * 8;
+        let dec = decode_msg(&frame, d)?;
+        let (bits, update) = match dec.msg {
+            WireMsg::Upload { round, node, accounted_bits, update }
+                if round == tally.version && node == ev.worker as u32 =>
+            {
+                tally.wire_up += dec.payload_bits;
+                (accounted_bits, update)
+            }
+            other => bail!(
+                "server: unexpected {other:?} from node {} at version {}",
+                ev.worker,
+                tally.version
+            ),
+        };
+        tally.upload_acc[ev.worker] += bits;
+
+        // Identical simulated-time arithmetic: the accounted bits (not
+        // the wire frame) charge the network model, exactly as in the
+        // simulated engine.
+        let xfer_ns = (net.xfer_s(bits) * 1e9).max(1.0) as u64;
+        let latency_ns = (net.latency_s * 1e9) as u64;
+        let start_ns = ev.t_ns.max(link_free_ns);
+        link_free_ns = start_ns + xfer_ns;
+        tally.link_busy_total += xfer_ns;
+        let arrive_ns = link_free_ns + latency_ns;
+        tally.now_ns = tally.now_ns.max(arrive_ns);
+
+        // Apply on the server, then replicate to every worker.
+        update.sub_from(x);
+        let payload = encode_apply(&mut w, tally.version, &update);
+        for ch in ends.iter_mut() {
+            ch.send(w.as_bytes())?;
+            tally.wire_apply += payload;
+            tally.wire_frames_down += w.as_bytes().len() as u64 * 8;
+        }
+        tally.version += 1;
+        let stale = tally.version - 1 - fetch_version[ev.worker];
+        tally.staleness_sum += stale;
+        tally.staleness_max = tally.staleness_max.max(stale);
+        fetch_version[ev.worker] = tally.version;
+        queue.push(Reverse(Finish {
+            t_ns: arrive_ns + compute_ns(slow[ev.worker], compute),
+            worker: ev.worker,
+        }));
+
+        if tally.version % eval_every as u64 == 0 || tally.version == total_syncs as u64 {
+            let bits: u64 = tally.upload_acc.iter().sum();
+            record.curve.push(LossPoint {
+                t: tally.version as usize,
+                bits,
+                loss: backend.full_loss(x),
+            });
+        }
+    }
+    encode_shutdown(&mut w);
+    for ch in ends.iter_mut() {
+        ch.send(w.as_bytes())?;
+        tally.wire_frames_down += w.as_bytes().len() as u64 * 8;
+    }
+    Ok(())
+}
+
+/// Fill an async wire-engine run record from the server tallies —
+/// simulated-time metrics included. Shared by the threaded engine and
+/// the cluster runtime so both report identically.
+pub(crate) fn finish_async_wire_record(
+    record: &mut RunRecord,
+    s: &Settings,
+    nodes: usize,
+    total_bits: u64,
+    tally: &AsyncServerTally,
+    started: Instant,
+) {
+    let h = s.local.sync_every.max(1);
+    record.steps = tally.version as usize * h;
+    record.total_bits = total_bits;
+    record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+    let mean_staleness = tally.staleness_sum as f64 / tally.version.max(1) as f64;
+    let sim_seconds = tally.now_ns as f64 / 1e9;
+    let link_utilization = if tally.now_ns > 0 {
+        (tally.link_busy_total as f64 / tally.now_ns as f64).min(1.0)
+    } else {
+        0.0
+    };
+    record.extra.insert("mean_staleness".into(), mean_staleness);
+    record.extra.insert("max_staleness".into(), tally.staleness_max as f64);
+    record.extra.insert("sim_seconds".into(), sim_seconds);
+    record.extra.insert("link_utilization".into(), link_utilization);
+    record.extra.insert("workers".into(), nodes as f64);
+    record.extra.insert("wire".into(), 1.0);
+    record.extra.insert("wire_upload_payload_bits".into(), tally.wire_up as f64);
+    record
+        .extra
+        .insert("wire_broadcast_payload_bits".into(), tally.wire_apply as f64);
+    record.extra.insert("wire_upload_frame_bits".into(), tally.wire_frames_up as f64);
+    record
+        .extra
+        .insert("wire_broadcast_frame_bits".into(), tally.wire_frames_down as f64);
+    record.extra.insert(
+        "wire_frame_bits".into(),
+        (tally.wire_frames_up + tally.wire_frames_down) as f64,
+    );
+    annotate_local(record, s.local, tally.version as usize * h);
 }
 
 /// Threaded asynchronous parameter server: the simulated engine's
@@ -1468,131 +1754,32 @@ pub(crate) fn param_server_async_wire<B: GradBackend + Clone + Send>(
     let eval_every = (total_syncs / s.eval_points.max(1)).max(1);
     record.curve.push(LossPoint { t: 0, bits: 0, loss: backend.full_loss(&x) });
 
-    let mut upload_acc = vec![0u64; nodes];
-    let (mut wire_up, mut wire_apply, mut wire_frames) = (0u64, 0u64, 0u64);
-    let mut version = 0u64;
-    let mut link_busy_total = 0u64;
-    let mut staleness_sum = 0u64;
-    let mut staleness_max = 0u64;
-    let mut now_ns = 0u64;
-
+    let mut tally = AsyncServerTally::new(nodes);
     let worker_bits = std::thread::scope(|scope| -> Result<Vec<u64>> {
         let mut handles = Vec::with_capacity(nodes);
         for wk in workers {
             handles.push(scope.spawn(move || wk.run_async()));
         }
-
-        // Immediately-invoked for the same drop-the-ends-on-error
-        // discipline as the sync engine.
-        #[allow(clippy::redundant_closure_call)]
-        let served = (|| -> Result<()> {
-            let compute_ns = |slow: f64, cm: &ComputeModel| -> u64 {
-                (cm.s_per_coord * cm.coords_per_grad * grads_per_sync * slow * 1e9).max(1.0) as u64
-            };
-            let mut queue: BinaryHeap<Reverse<Finish>> = BinaryHeap::new();
-            for (i, &sl) in slow.iter().enumerate() {
-                queue.push(Reverse(Finish { t_ns: compute_ns(sl, compute), worker: i }));
-            }
-            let mut fetch_version = vec![0u64; nodes];
-            let mut link_free_ns = 0u64;
-            let mut w = BitWriter::new();
-
-            while version < total_syncs as u64 {
-                let Reverse(ev) = queue.pop().expect("queue never empties");
-                now_ns = now_ns.max(ev.t_ns);
-
-                // The heap names the worker; it computes one phase at
-                // η(version) against its (current) replica and uploads.
-                encode_go(&mut w, version);
-                server_ends[ev.worker].send(w.as_bytes())?;
-                wire_frames += w.as_bytes().len() as u64 * 8;
-                let frame = server_ends[ev.worker].recv()?;
-                wire_frames += frame.len() as u64 * 8;
-                let dec = decode_msg(&frame, d)?;
-                let (bits, update) = match dec.msg {
-                    WireMsg::Upload { round, node, accounted_bits, update }
-                        if round == version && node == ev.worker as u32 =>
-                    {
-                        wire_up += dec.payload_bits;
-                        (accounted_bits, update)
-                    }
-                    other => bail!(
-                        "server: unexpected {other:?} from node {} at version {version}",
-                        ev.worker
-                    ),
-                };
-                upload_acc[ev.worker] += bits;
-
-                // Identical simulated-time arithmetic: the accounted
-                // bits (not the wire frame) charge the network model,
-                // exactly as in the simulated engine.
-                let xfer_ns = (net.xfer_s(bits) * 1e9).max(1.0) as u64;
-                let latency_ns = (net.latency_s * 1e9) as u64;
-                let start_ns = ev.t_ns.max(link_free_ns);
-                link_free_ns = start_ns + xfer_ns;
-                link_busy_total += xfer_ns;
-                let arrive_ns = link_free_ns + latency_ns;
-                now_ns = now_ns.max(arrive_ns);
-
-                // Apply on the server, then replicate to every worker.
-                update.sub_from(&mut x);
-                let payload = encode_apply(&mut w, version, &update);
-                for ch in server_ends.iter_mut() {
-                    ch.send(w.as_bytes())?;
-                    wire_apply += payload;
-                    wire_frames += w.as_bytes().len() as u64 * 8;
-                }
-                version += 1;
-                let stale = version - 1 - fetch_version[ev.worker];
-                staleness_sum += stale;
-                staleness_max = staleness_max.max(stale);
-                fetch_version[ev.worker] = version;
-                queue.push(Reverse(Finish {
-                    t_ns: arrive_ns + compute_ns(slow[ev.worker], compute),
-                    worker: ev.worker,
-                }));
-
-                if version % eval_every as u64 == 0 || version == total_syncs as u64 {
-                    let bits: u64 = upload_acc.iter().sum();
-                    record.curve.push(LossPoint {
-                        t: version as usize,
-                        bits,
-                        loss: backend.full_loss(&x),
-                    });
-                }
-            }
-            encode_shutdown(&mut w);
-            for ch in server_ends.iter_mut() {
-                ch.send(w.as_bytes())?;
-                wire_frames += w.as_bytes().len() as u64 * 8;
-            }
-            Ok(())
-        })();
+        let served = serve_async_protocol(
+            backend,
+            &mut server_ends,
+            &mut x,
+            net,
+            compute,
+            &slow,
+            grads_per_sync,
+            total_syncs,
+            eval_every,
+            &mut record,
+            &mut tally,
+        );
+        // Drop the server ends either way so blocked workers error out
+        // instead of hanging the join.
         drop(server_ends);
         join_wire_workers(handles, served)
     })?;
-    let total_bits = check_wire_accounting(&upload_acc, &worker_bits)?;
-
-    record.steps = version as usize * h;
-    record.total_bits = total_bits;
-    record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
-    let mean_staleness = staleness_sum as f64 / version.max(1) as f64;
-    let sim_seconds = now_ns as f64 / 1e9;
-    let link_utilization = if now_ns > 0 {
-        (link_busy_total as f64 / now_ns as f64).min(1.0)
-    } else {
-        0.0
-    };
-    record.extra.insert("mean_staleness".into(), mean_staleness);
-    record.extra.insert("max_staleness".into(), staleness_max as f64);
-    record.extra.insert("sim_seconds".into(), sim_seconds);
-    record.extra.insert("link_utilization".into(), link_utilization);
-    record.extra.insert("workers".into(), nodes as f64);
-    record.extra.insert("wire".into(), 1.0);
-    record.extra.insert("wire_upload_payload_bits".into(), wire_up as f64);
-    record.extra.insert("wire_broadcast_payload_bits".into(), wire_apply as f64);
-    record.extra.insert("wire_frame_bits".into(), wire_frames as f64);
-    annotate_local(&mut record, local, version as usize * h);
+    let total_bits = check_wire_accounting(&tally.upload_acc, &worker_bits)?;
+    finish_async_wire_record(&mut record, s, nodes, total_bits, &tally, started);
     Ok(record)
 }
 

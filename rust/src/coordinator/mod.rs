@@ -67,6 +67,16 @@
 //!   the socket-shaped [`transport::Transport`]/[`transport::Channel`]
 //!   abstraction, the in-process loopback, the byte-counting wrapper,
 //!   and the typed wire-message codec (frame format documented there).
+//! * [`net`] — the TCP backend of the same abstraction:
+//!   length-delimited frames on real sockets ([`net::TcpChannel`] /
+//!   [`net::TcpTransport`]), the version/config handshake
+//!   ([`net::Hello`]), and bounded-backoff connect
+//!   ([`net::connect_with_retry`]).
+//! * [`cluster`] — the multi-process runtime behind `memsgd serve` /
+//!   `memsgd worker`: a JSON-carried [`cluster::RunConfig`], the
+//!   accept/handshake loop with deterministic node-id assignment, and
+//!   reader-thread multiplexing, reproducing the simulated engines
+//!   bit for bit across OS processes.
 //! * [`config`] — typed [`config::MethodSpec`] (`memsgd:<comp>`, `sgd`,
 //!   `sgd:qsgd:<levels>`, `sgd:unbiased_rand_k:<k>`) and the legacy
 //!   [`config::Optimizer`] stepping interface.
@@ -81,9 +91,11 @@
 
 pub mod async_dist;
 pub mod checkpoint;
+pub mod cluster;
 pub mod config;
 pub mod distributed;
 pub mod experiment;
+pub mod net;
 pub mod parallel;
 pub mod train;
 pub mod transport;

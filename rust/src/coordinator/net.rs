@@ -1,0 +1,474 @@
+//! TCP backend for the wire fabric: length-delimited frames on real
+//! sockets, plus the connection handshake of the multi-process cluster
+//! runtime ([`super::cluster`]).
+//!
+//! [`super::transport`] deliberately kept [`super::transport::Channel`]
+//! socket-shaped — one end of a reliable, ordered, message-framed
+//! duplex link. This module supplies the real thing:
+//!
+//! * [`read_frame`] / [`write_frame`] — the length-delimited framing
+//!   codec over any [`std::io::Read`] / [`std::io::Write`]: a 4-byte
+//!   big-endian length prefix followed by that many payload bytes. The
+//!   reader enforces a `max_frame_bytes` cap **against the prefix,
+//!   before allocating** — TCP bytes are untrusted in a way in-process
+//!   loopback frames never were, and a hostile peer must not be able to
+//!   make the server allocate gigabytes with five bytes of input.
+//! * [`TcpChannel`] — a [`super::transport::Channel`] over one
+//!   [`TcpStream`], with `TCP_NODELAY` and read/write timeouts so a
+//!   silent peer turns into a descriptive error instead of a hung
+//!   barrier.
+//! * [`TcpTransport`] — a [`super::transport::Transport`] that backs
+//!   every `duplex()` with a connected localhost socket pair, so the
+//!   in-process wire engines (and the golden suite in
+//!   `tests/wire_protocol.rs`) run their exact protocol across a kernel
+//!   socket.
+//! * [`connect_with_retry`] — bounded-exponential-backoff dialing for
+//!   workers that start before their server.
+//! * [`Hello`] / [`check_compat`] — the handshake fingerprint (protocol
+//!   version, model dim, `MethodSpec` string, `LocalUpdate` fields) and
+//!   the compatibility check that rejects mismatched peers with a
+//!   descriptive error.
+//!
+//! ## Handshake
+//!
+//! A connecting worker sends one `HELLO` frame (a JSON object, framed
+//! like any other frame): `{"proto": v, "dim": d, "method": m,
+//! "batch": b, "sync_every": h}`, where `0` / `""` mean "no
+//! expectation". The server checks it against the run it is about to
+//! serve ([`check_compat`]) and answers either a `WELCOME` frame
+//! carrying the node id (assigned in accept order) plus the full run
+//! configuration ([`super::cluster::RunConfig`]), or a
+//! `{"error": reason}` frame before closing the connection. Everything
+//! after the handshake is the binary wire protocol of
+//! [`super::transport`], one bitstream message per frame.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::transport::{Channel, Transport, MAX_FRAME_BYTES};
+use crate::util::json::Json;
+
+/// Version of the cluster wire protocol; bumped on any frame-format or
+/// handshake change. Checked exactly (no wildcard) on both sides.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Data-plane read timeout: how long a blocked `recv` waits for the
+/// peer before failing the run. Generous — a sync-round barrier
+/// legitimately waits for the slowest worker's compute — but bounded,
+/// so a hung peer cannot hang the barrier forever.
+pub const READ_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Write timeout for one frame (localhost writes buffer instantly;
+/// this only trips when the peer has stopped draining).
+pub const WRITE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Handshake read timeout: a freshly accepted connection must present
+/// its `HELLO` promptly or the server gives up on it.
+pub const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+// ---------------------------------------------------------------------------
+// Length-delimited framing
+// ---------------------------------------------------------------------------
+
+/// Write one length-delimited frame: 4-byte big-endian length prefix,
+/// then the payload. The prefix and payload go out as a single write so
+/// a frame is one segment on an idle `TCP_NODELAY` socket.
+pub fn write_frame<W: Write>(w: &mut W, frame: &[u8]) -> Result<()> {
+    if frame.len() > u32::MAX as usize {
+        bail!("frame of {} bytes exceeds the u32 length prefix", frame.len());
+    }
+    let mut buf = Vec::with_capacity(4 + frame.len());
+    buf.extend_from_slice(&(frame.len() as u32).to_be_bytes());
+    buf.extend_from_slice(frame);
+    w.write_all(&buf).context("writing frame")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one length-delimited frame, enforcing `max_frame_bytes`
+/// **against the length prefix before allocating** the payload buffer.
+///
+/// Errors are descriptive and total: a clean close at a frame boundary
+/// reports "connection closed by peer", an EOF inside the prefix or
+/// payload reports how far the frame got, an oversized prefix is
+/// rejected without touching the allocator, and a slow peer trickling
+/// one byte per read still assembles the frame (reads loop until the
+/// declared length arrives or the socket's read timeout trips).
+pub fn read_frame<R: Read>(r: &mut R, max_frame_bytes: usize) -> Result<Vec<u8>> {
+    let mut prefix = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        let n = r.read(&mut prefix[got..]).context("reading frame length")?;
+        if n == 0 {
+            if got == 0 {
+                bail!("connection closed by peer");
+            }
+            bail!("connection closed mid-frame ({got} of 4 length-prefix bytes)");
+        }
+        got += n;
+    }
+    let len = u32::from_be_bytes(prefix) as usize;
+    if len > max_frame_bytes {
+        bail!(
+            "incoming frame declares {len} bytes, over the max_frame_bytes \
+             cap of {max_frame_bytes} — refusing to allocate"
+        );
+    }
+    let mut frame = vec![0u8; len];
+    let mut filled = 0usize;
+    while filled < len {
+        let n = r.read(&mut frame[filled..]).context("reading frame payload")?;
+        if n == 0 {
+            bail!("connection closed mid-frame ({filled} of {len} payload bytes)");
+        }
+        filled += n;
+    }
+    Ok(frame)
+}
+
+// ---------------------------------------------------------------------------
+// TcpChannel / TcpTransport
+// ---------------------------------------------------------------------------
+
+/// A [`Channel`] over one connected [`TcpStream`]: every `send` is one
+/// length-delimited frame, every `recv` blocks for the next one (up to
+/// [`READ_TIMEOUT`]). Dropping the channel closes the socket, which
+/// turns the peer's blocked `recv` into an error — the same shutdown
+/// contract as the in-process loopback.
+pub struct TcpChannel {
+    stream: TcpStream,
+    max_frame_bytes: usize,
+}
+
+impl TcpChannel {
+    /// Wrap a connected stream: sets `TCP_NODELAY` (frames are
+    /// latency-sensitive barrier traffic) and the read/write timeouts.
+    pub fn new(stream: TcpStream) -> Result<TcpChannel> {
+        configure_stream(&stream)?;
+        Ok(TcpChannel { stream, max_frame_bytes: MAX_FRAME_BYTES })
+    }
+
+    /// [`TcpChannel::new`] with a custom incoming-frame cap (tests use
+    /// tiny caps to exercise the hostile-peer rejection path).
+    pub fn with_max_frame_bytes(stream: TcpStream, max_frame_bytes: usize) -> Result<TcpChannel> {
+        configure_stream(&stream)?;
+        Ok(TcpChannel { stream, max_frame_bytes })
+    }
+}
+
+/// Socket options shared by every cluster connection.
+pub(crate) fn configure_stream(stream: &TcpStream) -> Result<()> {
+    stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+    stream
+        .set_read_timeout(Some(READ_TIMEOUT))
+        .context("setting read timeout")?;
+    stream
+        .set_write_timeout(Some(WRITE_TIMEOUT))
+        .context("setting write timeout")?;
+    Ok(())
+}
+
+impl Channel for TcpChannel {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        write_frame(&mut self.stream, frame)
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        read_frame(&mut self.stream, self.max_frame_bytes)
+    }
+}
+
+/// A [`Transport`] whose every [`Transport::duplex`] is a freshly
+/// connected localhost TCP socket pair — the wire engines run their
+/// exact protocol, but every frame crosses a kernel socket instead of
+/// an in-process queue. `tests/wire_protocol.rs` uses this to pin
+/// TCP ≡ Loopback ≡ simulated on the full method matrix.
+///
+/// `duplex` panics if the loopback interface cannot hand out a socket
+/// pair (bind/connect/accept on `127.0.0.1:0` failing is environmental,
+/// not a protocol condition the engines could recover from).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TcpTransport;
+
+/// Create a connected localhost socket pair `(accepted, connecting)`.
+pub fn socket_pair() -> Result<(TcpStream, TcpStream)> {
+    let listener = TcpListener::bind(("127.0.0.1", 0)).context("binding localhost listener")?;
+    let addr = listener.local_addr().context("resolving listener addr")?;
+    let client = TcpStream::connect(addr).context("connecting socket pair")?;
+    let (server, _) = listener.accept().context("accepting socket pair")?;
+    Ok((server, client))
+}
+
+impl Transport for TcpTransport {
+    fn duplex(&mut self) -> (Box<dyn Channel>, Box<dyn Channel>) {
+        let (server, worker) = socket_pair().expect("localhost TCP socket pair");
+        let server = TcpChannel::new(server).expect("configuring server socket");
+        let worker = TcpChannel::new(worker).expect("configuring worker socket");
+        (Box::new(server), Box::new(worker))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connect retry
+// ---------------------------------------------------------------------------
+
+/// Bounded exponential backoff for [`connect_with_retry`]: at most
+/// `attempts` dials, sleeping `base`, `2·base`, `4·base`, ... (capped
+/// at `cap`) between consecutive tries.
+#[derive(Clone, Copy, Debug)]
+pub struct Backoff {
+    pub attempts: u32,
+    pub base: Duration,
+    pub cap: Duration,
+}
+
+impl Default for Backoff {
+    /// 8 attempts over ~12 s — enough for a worker launched seconds
+    /// before its server, but a missing server still fails promptly.
+    fn default() -> Backoff {
+        Backoff {
+            attempts: 8,
+            base: Duration::from_millis(100),
+            cap: Duration::from_secs(3),
+        }
+    }
+}
+
+/// Dial `addr`, retrying with bounded exponential backoff; gives up
+/// with a descriptive error (attempt count + last failure) after
+/// `policy.attempts` tries.
+pub fn connect_with_retry(addr: &str, policy: &Backoff) -> Result<TcpStream> {
+    let mut delay = policy.base;
+    let mut last: Option<std::io::Error> = None;
+    for attempt in 0..policy.attempts {
+        if attempt > 0 {
+            std::thread::sleep(delay);
+            delay = delay.checked_mul(2).unwrap_or(policy.cap).min(policy.cap);
+        }
+        match TcpStream::connect(addr) {
+            Ok(stream) => return Ok(stream),
+            Err(e) => last = Some(e),
+        }
+    }
+    match last {
+        Some(e) => Err(anyhow!(
+            "failed to connect to {addr} after {} attempts: {e}",
+            policy.attempts
+        )),
+        None => bail!("failed to connect to {addr}: zero attempts configured"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Handshake
+// ---------------------------------------------------------------------------
+
+/// The handshake fingerprint: what a worker expects (`0` / `""` = no
+/// expectation) or what a server is about to serve (every field
+/// concrete). Serialized as one JSON `HELLO` frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Hello {
+    pub proto: u64,
+    pub dim: usize,
+    pub method: String,
+    pub batch: usize,
+    pub sync_every: usize,
+}
+
+impl Hello {
+    /// A worker with no expectations: checks only the protocol version.
+    pub fn any() -> Hello {
+        Hello {
+            proto: PROTOCOL_VERSION,
+            dim: 0,
+            method: String::new(),
+            batch: 0,
+            sync_every: 0,
+        }
+    }
+
+    /// Serialize to the `HELLO` frame payload.
+    pub fn encode(&self) -> Vec<u8> {
+        Json::obj(vec![
+            ("proto", Json::Num(self.proto as f64)),
+            ("dim", Json::Num(self.dim as f64)),
+            ("method", Json::str(self.method.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("sync_every", Json::Num(self.sync_every as f64)),
+        ])
+        .to_string()
+        .into_bytes()
+    }
+
+    /// Parse a `HELLO` frame payload.
+    pub fn decode(frame: &[u8]) -> Result<Hello> {
+        let text = std::str::from_utf8(frame).context("HELLO frame is not UTF-8")?;
+        let j = Json::parse(text).context("HELLO frame is not JSON")?;
+        Ok(Hello {
+            proto: j.req("proto")?.as_usize()? as u64,
+            dim: j.req("dim")?.as_usize()?,
+            method: j.req("method")?.as_str()?.to_string(),
+            batch: j.req("batch")?.as_usize()?,
+            sync_every: j.req("sync_every")?.as_usize()?,
+        })
+    }
+}
+
+/// Check a worker's `HELLO` against the run the server is serving.
+/// Protocol versions must match exactly; the config fields are checked
+/// only where the worker stated an expectation. Every rejection names
+/// both sides.
+pub fn check_compat(worker: &Hello, server: &Hello) -> Result<()> {
+    if worker.proto != server.proto {
+        bail!(
+            "handshake rejected: protocol version mismatch \
+             (worker speaks v{}, server speaks v{})",
+            worker.proto,
+            server.proto
+        );
+    }
+    if worker.dim != 0 && worker.dim != server.dim {
+        bail!(
+            "handshake rejected: dim mismatch (worker expects d={}, server runs d={})",
+            worker.dim,
+            server.dim
+        );
+    }
+    if !worker.method.is_empty() && worker.method != server.method {
+        bail!(
+            "handshake rejected: method mismatch (worker expects '{}', server runs '{}')",
+            worker.method,
+            server.method
+        );
+    }
+    if worker.batch != 0 && worker.batch != server.batch {
+        bail!(
+            "handshake rejected: local-update batch mismatch \
+             (worker expects B={}, server runs B={})",
+            worker.batch,
+            server.batch
+        );
+    }
+    if worker.sync_every != 0 && worker.sync_every != server.sync_every {
+        bail!(
+            "handshake rejected: local-update sync-interval mismatch \
+             (worker expects H={}, server runs H={})",
+            worker.sync_every,
+            server.sync_every
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_roundtrip_over_in_memory_buffers() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, &[7u8; 300]).unwrap();
+        let mut r: &[u8] = &buf;
+        assert_eq!(read_frame(&mut r, 1024).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r, 1024).unwrap(), Vec::<u8>::new());
+        assert_eq!(read_frame(&mut r, 1024).unwrap(), vec![7u8; 300]);
+        let err = read_frame(&mut r, 1024).unwrap_err();
+        assert!(format!("{err:#}").contains("closed by peer"), "{err:#}");
+    }
+
+    #[test]
+    fn oversized_prefix_is_rejected_before_allocation() {
+        // A 5-byte hostile input claiming a 4 GiB frame: the cap check
+        // runs on the prefix, so no payload buffer is ever allocated.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_be_bytes());
+        buf.push(0);
+        let mut r: &[u8] = &buf;
+        let err = read_frame(&mut r, 64).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("max_frame_bytes"), "{msg}");
+        assert!(msg.contains("refusing to allocate"), "{msg}");
+    }
+
+    #[test]
+    fn mid_frame_eof_reports_progress() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &[1u8; 100]).unwrap();
+        let mut r: &[u8] = &buf[..40]; // prefix + 36 of 100 payload bytes
+        let err = read_frame(&mut r, 1024).unwrap_err();
+        assert!(format!("{err:#}").contains("mid-frame"), "{err:#}");
+        let mut r: &[u8] = &buf[..2]; // EOF inside the prefix itself
+        let err = read_frame(&mut r, 1024).unwrap_err();
+        assert!(format!("{err:#}").contains("length-prefix"), "{err:#}");
+    }
+
+    #[test]
+    fn tcp_channel_carries_frames_both_ways() {
+        let (s, w) = socket_pair().unwrap();
+        let mut server = TcpChannel::new(s).unwrap();
+        let mut worker = TcpChannel::new(w).unwrap();
+        server.send(&[1, 2, 3]).unwrap();
+        server.send(&[4]).unwrap();
+        assert_eq!(worker.recv().unwrap(), vec![1, 2, 3]);
+        assert_eq!(worker.recv().unwrap(), vec![4]);
+        worker.send(&[9; 2000]).unwrap();
+        assert_eq!(server.recv().unwrap(), vec![9; 2000]);
+        drop(server);
+        assert!(worker.recv().is_err(), "closed peer must error recv");
+    }
+
+    #[test]
+    fn tcp_channel_enforces_its_frame_cap() {
+        let (s, w) = socket_pair().unwrap();
+        let mut server = TcpChannel::with_max_frame_bytes(s, 16).unwrap();
+        let mut worker = TcpChannel::new(w).unwrap();
+        worker.send(&[0u8; 64]).unwrap();
+        let err = server.recv().unwrap_err();
+        assert!(format!("{err:#}").contains("max_frame_bytes"), "{err:#}");
+    }
+
+    #[test]
+    fn connect_with_retry_gives_up_after_the_bound() {
+        // Bind then drop a listener so the port exists but nothing
+        // accepts: connecting must fail fast with ECONNREFUSED.
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        let policy = Backoff { attempts: 3, base: Duration::from_millis(1), cap: Duration::from_millis(4) };
+        let err = connect_with_retry(&addr, &policy).unwrap_err();
+        assert!(format!("{err:#}").contains("after 3 attempts"), "{err:#}");
+    }
+
+    #[test]
+    fn hello_roundtrips_and_compat_checks_are_descriptive() {
+        let server = Hello {
+            proto: PROTOCOL_VERSION,
+            dim: 128,
+            method: "memsgd:top_k:1".into(),
+            batch: 2,
+            sync_every: 3,
+        };
+        let decoded = Hello::decode(&server.encode()).unwrap();
+        assert_eq!(decoded, server);
+        check_compat(&Hello::any(), &server).unwrap();
+        check_compat(&server.clone(), &server).unwrap();
+
+        let reject = |mutate: &dyn Fn(&mut Hello), needle: &str| {
+            let mut w = Hello::any();
+            mutate(&mut w);
+            let err = check_compat(&w, &server).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "expected '{needle}' in '{msg}'");
+        };
+        reject(&|w| w.proto = 2, "protocol version mismatch");
+        reject(&|w| w.dim = 64, "dim mismatch");
+        reject(&|w| w.method = "sgd".into(), "method mismatch");
+        reject(&|w| w.batch = 9, "batch mismatch");
+        reject(&|w| w.sync_every = 9, "sync-interval mismatch");
+    }
+}

@@ -63,8 +63,25 @@
 //! bit-identical — to simulated runs); the bytes that actually crossed
 //! the channel are reported separately in the record extras
 //! (`wire_upload_payload_bits`, `wire_broadcast_payload_bits`,
-//! `wire_frame_bits`). See the README's "Wire protocol" section for
-//! the reconciliation between the two.
+//! `wire_frame_bits`, split by direction into
+//! `wire_upload_frame_bits` + `wire_broadcast_frame_bits`). See the
+//! README's "Wire protocol" section for the reconciliation between the
+//! two.
+//!
+//! ## TCP backend: length framing + handshake
+//!
+//! [`super::net`] carries these frames across real sockets. On the
+//! wire every frame is length-delimited — a 4-byte big-endian length
+//! prefix, then exactly that many payload bytes (the bitstream above).
+//! The receiver checks the prefix against [`MAX_FRAME_BYTES`] *before*
+//! allocating, and [`decode_msg`] enforces the same cap, so a hostile
+//! peer cannot force a huge allocation with a few bytes of input. A
+//! cluster connection opens with a JSON handshake — the worker's
+//! `HELLO` (protocol version + optional dim / `MethodSpec` /
+//! `LocalUpdate` expectations), answered by the server's `WELCOME`
+//! (node id assigned in accept order + the full run config) or an
+//! `{"error": …}` rejection — and speaks the binary protocol from then
+//! on. See [`super::net`] and [`super::cluster`] for the details.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -73,6 +90,14 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::compress::elias::{decode_payload, BitReader, BitWriter};
 use crate::compress::{Compressor, Update};
+
+/// Hard cap on a single wire frame (16 MiB — a dense-raw payload for a
+/// ~4M-coordinate model; every frame this crate produces is orders of
+/// magnitude smaller). [`decode_msg`] and the TCP length-framing reader
+/// ([`super::net::read_frame`]) both refuse anything larger before
+/// allocating or decoding, so untrusted bytes cannot turn a length
+/// field into a giant allocation.
+pub const MAX_FRAME_BYTES: usize = 1 << 24;
 
 /// One end of a reliable, ordered, message-framed duplex link.
 ///
@@ -136,34 +161,57 @@ impl Transport for Loopback {
 }
 
 /// Wraps any [`Transport`] and counts every byte crossing it (tallied
-/// once, at the sending endpoint). The wire-accounting tests compare
-/// this independent count against the engine-reported
-/// `wire_frame_bits`.
+/// once, at the sending endpoint), both in total and split by
+/// direction: bytes sent from the worker end travel the **upload**
+/// direction (worker → server), bytes sent from the server end travel
+/// the **broadcast** direction (server → workers — `BROADCAST`, `GO`,
+/// `APPLY`, `SHUTDOWN`). The wire-accounting tests compare these
+/// independent counts against the engine-reported `wire_frame_bits` /
+/// `wire_upload_frame_bits` / `wire_broadcast_frame_bits`.
 pub struct CountingTransport {
     inner: Box<dyn Transport>,
     bytes: Arc<AtomicU64>,
+    upload: Arc<AtomicU64>,
+    broadcast: Arc<AtomicU64>,
 }
 
 impl CountingTransport {
     pub fn new(inner: Box<dyn Transport>) -> CountingTransport {
-        CountingTransport { inner, bytes: Arc::new(AtomicU64::new(0)) }
+        CountingTransport {
+            inner,
+            bytes: Arc::new(AtomicU64::new(0)),
+            upload: Arc::new(AtomicU64::new(0)),
+            broadcast: Arc::new(AtomicU64::new(0)),
+        }
     }
 
-    /// Handle on the byte counter (keep a clone before handing the
-    /// transport to the engine).
+    /// Handle on the total byte counter, both directions (keep a clone
+    /// before handing the transport to the engine).
     pub fn counter(&self) -> Arc<AtomicU64> {
         Arc::clone(&self.bytes)
+    }
+
+    /// Bytes sent worker → server (`UPLOAD` frames).
+    pub fn upload_counter(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.upload)
+    }
+
+    /// Bytes sent server → workers (`BROADCAST`/`GO`/`APPLY`/`SHUTDOWN`).
+    pub fn broadcast_counter(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.broadcast)
     }
 }
 
 struct CountingChannel {
     inner: Box<dyn Channel>,
     bytes: Arc<AtomicU64>,
+    direction: Arc<AtomicU64>,
 }
 
 impl Channel for CountingChannel {
     fn send(&mut self, frame: &[u8]) -> Result<()> {
         self.bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        self.direction.fetch_add(frame.len() as u64, Ordering::Relaxed);
         self.inner.send(frame)
     }
 
@@ -176,8 +224,16 @@ impl Transport for CountingTransport {
     fn duplex(&mut self) -> (Box<dyn Channel>, Box<dyn Channel>) {
         let (s, w) = self.inner.duplex();
         (
-            Box::new(CountingChannel { inner: s, bytes: Arc::clone(&self.bytes) }),
-            Box::new(CountingChannel { inner: w, bytes: Arc::clone(&self.bytes) }),
+            Box::new(CountingChannel {
+                inner: s,
+                bytes: Arc::clone(&self.bytes),
+                direction: Arc::clone(&self.broadcast),
+            }),
+            Box::new(CountingChannel {
+                inner: w,
+                bytes: Arc::clone(&self.bytes),
+                direction: Arc::clone(&self.upload),
+            }),
         )
     }
 }
@@ -271,6 +327,12 @@ pub fn encode_shutdown(w: &mut BitWriter) {
 /// unknown kinds, hostile counts — all descriptive errors, never
 /// panics); update payloads are validated against `dim`.
 pub fn decode_msg(frame: &[u8], dim: usize) -> Result<DecodedMsg> {
+    if frame.len() > MAX_FRAME_BYTES {
+        bail!(
+            "frame of {} bytes exceeds the max_frame_bytes cap of {MAX_FRAME_BYTES}",
+            frame.len()
+        );
+    }
     let mut r = BitReader::new(frame);
     let kind = r.get_gamma()?;
     let (msg, payload_bits) = match kind {
@@ -341,12 +403,25 @@ mod tests {
     fn counting_transport_counts_bytes_once_at_send() {
         let mut t = CountingTransport::new(Box::new(Loopback));
         let counter = t.counter();
+        let upload = t.upload_counter();
+        let broadcast = t.broadcast_counter();
         let (mut server, mut worker) = t.duplex();
         server.send(&[0; 10]).unwrap();
         worker.send(&[0; 3]).unwrap();
         worker.recv().unwrap();
         server.recv().unwrap();
         assert_eq!(counter.load(Ordering::Relaxed), 13);
+        // Per-direction split: the server end sends the broadcast
+        // direction, the worker end sends the upload direction.
+        assert_eq!(broadcast.load(Ordering::Relaxed), 10);
+        assert_eq!(upload.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn decode_msg_rejects_frames_over_the_cap() {
+        let junk = vec![0u8; MAX_FRAME_BYTES + 1];
+        let err = decode_msg(&junk, 10).unwrap_err();
+        assert!(format!("{err:#}").contains("max_frame_bytes"), "{err:#}");
     }
 
     #[test]

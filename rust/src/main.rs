@@ -53,6 +53,8 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("async") => cmd_async(args),
         Some("e2e") => cmd_e2e(args),
         Some("train") => cmd_train(args),
+        Some("serve") => cmd_serve(args),
+        Some("worker") => cmd_worker(args),
         Some("bench-gate") => cmd_bench_gate(args),
         Some("info") => cmd_info(args),
         Some(other) => bail!("unknown subcommand '{other}' (see --help in README)"),
@@ -80,7 +82,16 @@ subcommands:
   e2e       transformer LM through the PJRT artifacts (full stack)
   train     one ad-hoc run (--method, --epochs, --dataset, --topology
             sequential|shared|ps-sync|ps-async, --workers-count N,
-            --batch B, --local-steps H, --wire, ...)
+            --batch B, --local-steps H, --wire,
+            --wire-transport loopback|tcp, ...)
+  serve     cluster parameter server: bind --listen ADDR, accept exactly
+            --nodes N workers over TCP, run a ps-sync|ps-async job
+            across OS processes (same flags as train minus --topology
+            sequential/shared), print the record + a final: line
+  worker    cluster worker: dial --connect ADDR (bounded retries via
+            --retries), handshake, run the assigned wire protocol;
+            --expect-method/--expect-dim/--expect-batch/
+            --expect-local-steps pin what the server must be running
   bench-gate  CI perf gate: compare a fresh hot-path bench JSON against
             the committed baseline (--baseline BENCH_hot_path.json,
             --fresh run.json); exits nonzero on >25% normalized median
@@ -93,7 +104,13 @@ local-update schedule (train, figure6): --batch B (minibatch size),
 wire mode (train, ps-sync/ps-async only): --wire runs real server/worker
   threads exchanging Elias-coded updates over an in-process channel;
   trajectories are bit-identical to the simulated engines, and the
-  record gains wire_* extras with the bytes that actually crossed";
+  record gains wire_* extras with the bytes that actually crossed.
+  --wire-transport tcp moves the same threads onto localhost kernel
+  sockets (loopback = the in-process default)
+cluster mode: memsgd serve --listen 127.0.0.1:7070 --nodes 2 ... plus
+  one memsgd worker --connect 127.0.0.1:7070 per node runs the same
+  protocol across separate OS processes, bit-identical to --wire
+  (see README 'Cluster quickstart')";
 
 fn out_dir(args: &Args) -> String {
     args.get_str("out", "results")
@@ -482,8 +499,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     // --wire: run the parameter-server topologies on the threaded
     // message-passing runtime (real Elias-coded bytes over an
     // in-process channel) instead of the single-threaded simulation.
-    let wire = args.flag("wire");
-    let rec = experiments::experiment_on(&data, None)
+    // --wire-transport loopback|tcp picks the fabric (tcp = localhost
+    // kernel sockets; implies --wire).
+    let transport = args.opt_str("wire-transport");
+    let wire = args.flag("wire") || transport.is_some();
+    let mut exp = experiments::experiment_on(&data, None)
         .method(method)
         .schedule(schedule)
         .topology(topology)
@@ -491,8 +511,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         .eval_points(evals)
         .seed(seed)
         .local_update(local)
-        .wire(wire)
-        .run()?;
+        .wire(wire);
+    if let Some(t) = transport {
+        use memsgd::coordinator::net::TcpTransport;
+        use memsgd::coordinator::transport::Loopback;
+        exp = match t.as_str() {
+            "loopback" => exp.wire_transport(Box::new(Loopback)),
+            "tcp" => exp.wire_transport(Box::new(TcpTransport)),
+            other => bail!("unknown wire transport '{other}' (loopback|tcp)"),
+        };
+    }
+    let rec = exp.run()?;
     if wire {
         let wex = |key: &str| rec.extra.get(key).copied().unwrap_or(0.0) as u64;
         println!(
@@ -505,7 +534,103 @@ fn cmd_train(args: &Args) -> Result<()> {
         );
     }
     print_curves(std::slice::from_ref(&rec));
+    print_final_line(&rec);
     finish(args, "train", std::slice::from_ref(&rec))
+}
+
+/// The machine-diffable one-line summary. The CI `cluster-smoke` job
+/// compares this line between a multi-process `serve` run and the
+/// equivalent simulated `train` run — bit-identical trajectories make
+/// the lines equal, so keep the format stable.
+fn print_final_line(rec: &RunRecord) {
+    println!(
+        "final: method={} loss={:.6} total_bits={} steps={}",
+        rec.method,
+        rec.final_loss(),
+        rec.total_bits,
+        rec.steps
+    );
+}
+
+/// `memsgd serve` — the cluster parameter server. Mirrors `cmd_train`'s
+/// experiment flags, but instead of running worker threads it binds
+/// `--listen`, waits for `--nodes` TCP workers, and runs the shared
+/// server-protocol half against their sockets.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use memsgd::coordinator::cluster::{ClusterServer, RunConfig};
+    let which = Which::parse(&args.get_str("dataset", "epsilon"))?;
+    let scale = args.get("scale", 20usize)?;
+    let seed = args.get("seed", 1u64)?;
+    let method = MethodSpec::parse(&args.get_str("method", "memsgd:top_k:1"))?;
+    let epochs = args.get("epochs", 1usize)?;
+    let gamma = args.get("gamma", 2.0f64)?;
+    let evals = args.get("evals", 10usize)?;
+    let nodes = args.get("nodes", 2usize)?;
+    let local = LocalUpdate::new(args.get("batch", 1usize)?, args.get("local-steps", 1usize)?)?;
+    let listen = args.get_str("listen", "127.0.0.1:7070");
+    let topology = args.get_str("topology", "ps-sync");
+    let network = args.get_str("network", "1g");
+    let out = out_dir(args);
+    // Derive steps/schedule from the dataset *shape* — `bind` builds the
+    // actual data once, and every worker rebuilds it from the config.
+    let (n, dim) = experiments::dataset_shape(which, scale);
+    let steps = epochs * n;
+    let schedule = method.paper_schedule(dim, n, gamma, which.shift_multiplier(), None);
+    let cfg = RunConfig {
+        dataset: which.name().into(),
+        scale,
+        seed,
+        method: method.spec_string(),
+        schedule,
+        steps,
+        eval_points: evals,
+        nodes,
+        local,
+        topology,
+        network,
+        dim,
+    };
+    let server = ClusterServer::bind(&listen, cfg)?;
+    println!(
+        "serving on {} — waiting for {nodes} worker(s) (connect with \
+         `memsgd worker --connect <addr>`)",
+        server.local_addr()?
+    );
+    // Reject unknown flags before blocking on the accept loop.
+    args.finish()?;
+    let rec = server.run()?;
+    print_curves(std::slice::from_ref(&rec));
+    println!("\n{}", summary_table(std::slice::from_ref(&rec)));
+    print_final_line(&rec);
+    let path = format!("{out}/serve.json");
+    metrics::write_records(&path, std::slice::from_ref(&rec))?;
+    println!("records -> {path}");
+    Ok(())
+}
+
+/// `memsgd worker` — one cluster worker process. Dials the server with
+/// bounded-backoff retries, handshakes, and runs whatever job the
+/// server's config describes; the `--expect-*` flags let a deployment
+/// pin the method/dim/local-update it believes the server is running.
+fn cmd_worker(args: &Args) -> Result<()> {
+    use memsgd::coordinator::cluster::run_worker;
+    use memsgd::coordinator::net::{Backoff, Hello};
+    let addr = args.get_str("connect", "127.0.0.1:7070");
+    let attempts = args.get("retries", 8u32)?;
+    let mut expect = Hello::any();
+    if let Some(m) = args.opt_str("expect-method") {
+        // Canonicalize so `--expect-method memsgd:top_k:01` and the
+        // server's spec string compare equal.
+        expect.method = MethodSpec::parse(&m)?.spec_string();
+    }
+    expect.dim = args.get("expect-dim", 0usize)?;
+    expect.batch = args.get("expect-batch", 0usize)?;
+    expect.sync_every = args.get("expect-local-steps", 0usize)?;
+    args.finish()?;
+    let backoff = Backoff { attempts, ..Backoff::default() };
+    let (node, bits) = run_worker(&addr, &expect, &backoff)?;
+    println!("worker {node} done: {bits} accounted upload bits");
+    Ok(())
 }
 
 /// The CI performance gate (`.github/workflows/ci.yml`, `bench-gate`

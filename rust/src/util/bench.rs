@@ -50,7 +50,11 @@
 //! wire-codec throughput cases (`gate::wire_encode_sparse_case` /
 //! `gate::wire_decode_sparse_case` / `gate::wire_encode_qsgd_case` /
 //! `gate::wire_decode_qsgd_case` — the threaded engines' per-message
-//! serialization cost, regression-gated like every other row).
+//! serialization cost, regression-gated like every other row), and the
+//! TCP round-trip cases (`gate::tcp_roundtrip_sparse_case` /
+//! `gate::tcp_roundtrip_qsgd_case` — the cluster runtime's full
+//! encode → length-framed localhost socket hop → decode cost; the delta
+//! against the matching codec rows isolates framing + syscall overhead).
 
 use std::hint::black_box;
 use std::time::{Duration, Instant};

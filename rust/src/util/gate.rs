@@ -130,6 +130,20 @@ pub fn wire_decode_qsgd_case() -> String {
     "wire decode qsgd    s=16 d=2000".to_string()
 }
 
+/// Canonical name of the TCP encode→socket→decode round-trip case for a
+/// top-10 sparse payload at the RCV1 dimension — the full per-message
+/// cost of the cluster runtime's data plane (payload encode, length
+/// framing, a localhost kernel-socket hop, frame read, payload decode).
+pub fn tcp_roundtrip_sparse_case() -> String {
+    "tcp roundtrip sparse top_10 d=47236".to_string()
+}
+
+/// Canonical name of the matching TCP round-trip case for a QSGD level
+/// stream at the epsilon dimension.
+pub fn tcp_roundtrip_qsgd_case() -> String {
+    "tcp roundtrip qsgd   s=16 d=2000".to_string()
+}
+
 /// A fresh-run-only invariant: `slow_case` must be at least `min_ratio`
 /// × slower than `fast_case` (both in the same bench).
 #[derive(Clone, Debug)]

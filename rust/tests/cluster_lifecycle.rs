@@ -1,0 +1,270 @@
+//! Cluster-runtime lifecycle suite: the multi-process serve/worker
+//! protocol end to end on localhost sockets, and every way a cluster
+//! run is allowed to fail.
+//!
+//! * **Golden multi-process trajectories** — a `ClusterServer` plus
+//!   `run_worker` peers (real TCP connections, separate threads standing
+//!   in for separate processes — the byte streams are identical) must
+//!   reproduce the simulated engines bit for bit on both PS topologies.
+//! * **Lifecycle** — handshake version/config mismatches are rejected
+//!   descriptively on both sides, connect retry gives up after its
+//!   bound, a worker dropping mid-round fails the server cleanly, and a
+//!   premature/double `SHUTDOWN` fails the worker cleanly — in every
+//!   case the run *returns* (no hung barrier) and joins its threads.
+
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+use std::time::Duration;
+
+use memsgd::compress::elias::BitWriter;
+use memsgd::coordinator::cluster::{run_worker, ClusterServer, RunConfig};
+use memsgd::coordinator::net::{read_frame, write_frame, Backoff, Hello, PROTOCOL_VERSION};
+use memsgd::coordinator::transport::encode_shutdown;
+use memsgd::coordinator::{Experiment, LocalUpdate, MethodSpec, Topology};
+use memsgd::experiments::{self, Which};
+use memsgd::metrics::RunRecord;
+use memsgd::models::LogisticModel;
+use memsgd::optim::Schedule;
+use memsgd::sim::network::NetworkModel;
+use memsgd::util::json::Json;
+
+/// A deliberately tiny run: epsilon at a scale that floors n at 64
+/// samples (d stays the real 2000 — the handshake pins it).
+fn test_config(topology: &str, nodes: usize) -> RunConfig {
+    RunConfig {
+        dataset: "epsilon".into(),
+        scale: 100_000,
+        seed: 11,
+        method: "memsgd:top_k:1".into(),
+        schedule: Schedule::constant(0.1),
+        steps: 96,
+        eval_points: 3,
+        nodes,
+        local: LocalUpdate::default(),
+        topology: topology.into(),
+        network: "1g".into(),
+        dim: 2000,
+    }
+}
+
+/// Snappy retries for tests — the listener already exists when workers
+/// dial, so this only matters on the failure paths.
+fn fast_backoff() -> Backoff {
+    Backoff {
+        attempts: 2,
+        base: Duration::from_millis(1),
+        cap: Duration::from_millis(2),
+    }
+}
+
+/// Run a full serve + N-worker cluster round trip over localhost TCP
+/// and hand back the server record plus each worker's (node, bits).
+fn cluster_run(cfg: RunConfig) -> (RunRecord, Vec<(usize, u64)>) {
+    let nodes = cfg.nodes;
+    let server = ClusterServer::bind("127.0.0.1:0", cfg).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let server_handle = thread::spawn(move || server.run());
+    let workers: Vec<_> = (0..nodes)
+        .map(|_| {
+            let addr = addr.clone();
+            thread::spawn(move || run_worker(&addr, &Hello::any(), &fast_backoff()))
+        })
+        .collect();
+    let record = server_handle.join().unwrap().unwrap();
+    let stats: Vec<(usize, u64)> =
+        workers.into_iter().map(|w| w.join().unwrap().unwrap()).collect();
+    (record, stats)
+}
+
+/// The simulated twin of [`test_config`] through the Experiment builder.
+fn simulated_twin(cfg: &RunConfig, topology: Topology) -> RunRecord {
+    let which = Which::parse(&cfg.dataset).unwrap();
+    let data = experiments::dataset(which, cfg.scale, cfg.seed);
+    Experiment::new(LogisticModel::new(&data, 1.0 / data.n() as f64))
+        .dataset(&data.name)
+        .method(MethodSpec::parse(&cfg.method).unwrap())
+        .schedule(cfg.schedule.clone())
+        .topology(topology)
+        .steps(cfg.steps)
+        .eval_points(cfg.eval_points)
+        .seed(cfg.seed)
+        .local_update(cfg.local)
+        .run()
+        .unwrap()
+}
+
+/// Bit-for-bit equality of everything the simulation reports, with the
+/// cluster record allowed to add `wire_*`/`cluster` extras on top.
+fn assert_cluster_matches_sim(sim: &RunRecord, cluster: &RunRecord, label: &str) {
+    assert_eq!(sim.method, cluster.method, "{label}: method");
+    assert_eq!(sim.dataset, cluster.dataset, "{label}: dataset");
+    assert_eq!(sim.schedule, cluster.schedule, "{label}: schedule");
+    assert_eq!(sim.steps, cluster.steps, "{label}: steps");
+    assert_eq!(sim.total_bits, cluster.total_bits, "{label}: total_bits");
+    assert_eq!(sim.curve, cluster.curve, "{label}: loss curve (bit-for-bit)");
+    for (key, val) in &sim.extra {
+        assert_eq!(cluster.extra.get(key), Some(val), "{label}: extra[{key}] diverged");
+    }
+    assert_eq!(cluster.extra.get("cluster"), Some(&1.0), "{label}: cluster marker");
+}
+
+#[test]
+fn multiprocess_sync_run_reproduces_the_simulated_trajectory() {
+    let cfg = test_config("ps-sync", 2);
+    let (record, stats) = cluster_run(cfg.clone());
+    let sim = simulated_twin(&cfg, Topology::ParamServerSync { nodes: 2 });
+    assert_cluster_matches_sim(&sim, &record, "ps-sync cluster");
+
+    // Node ids are assigned in accept order: exactly 0..nodes, each
+    // worker reporting the accounted upload bits the server tallied.
+    let mut nodes: Vec<usize> = stats.iter().map(|&(n, _)| n).collect();
+    nodes.sort_unstable();
+    assert_eq!(nodes, vec![0, 1]);
+    let uploaded: u64 = stats.iter().map(|&(_, b)| b).sum();
+    assert!(uploaded > 0, "workers uploaded nothing");
+    assert!(uploaded <= record.total_bits, "worker bits exceed the accounted total");
+}
+
+#[test]
+fn multiprocess_async_run_reproduces_the_simulated_trajectory() {
+    let cfg = test_config("ps-async", 2);
+    let (record, stats) = cluster_run(cfg.clone());
+    let sim = simulated_twin(
+        &cfg,
+        Topology::ParamServerAsync { nodes: 2, net: NetworkModel::eth_1g() },
+    );
+    assert_cluster_matches_sim(&sim, &record, "ps-async cluster");
+    for key in ["mean_staleness", "max_staleness", "sim_seconds", "link_utilization"] {
+        assert_eq!(sim.extra[key], record.extra[key], "ps-async cluster: {key}");
+    }
+    assert_eq!(stats.len(), 2);
+}
+
+#[test]
+fn handshake_version_mismatch_is_rejected_descriptively() {
+    let server = ClusterServer::bind("127.0.0.1:0", test_config("ps-sync", 1)).unwrap();
+    let addr = server.local_addr().unwrap();
+    let server_handle = thread::spawn(move || server.run());
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let from_the_future = Hello { proto: 99, ..Hello::any() };
+    write_frame(&mut stream, &from_the_future.encode()).unwrap();
+    let reply = read_frame(&mut stream, 1 << 20).unwrap();
+    let j = Json::parse(std::str::from_utf8(&reply).unwrap()).unwrap();
+    let reason = j.req("error").unwrap().as_str().unwrap().to_string();
+    assert!(
+        reason.contains("protocol version mismatch"),
+        "reject reason not descriptive: {reason}"
+    );
+    assert!(reason.contains("99"), "reject reason omits the offered version: {reason}");
+
+    // The server fails the whole run (and returns — no hung accept
+    // loop, every thread joined inside run()).
+    let err = server_handle.join().unwrap().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("handshake"), "server error not about the handshake: {msg}");
+    assert!(msg.contains("protocol version mismatch"), "server error lost the cause: {msg}");
+}
+
+#[test]
+fn worker_expectation_mismatch_fails_both_sides() {
+    let server = ClusterServer::bind("127.0.0.1:0", test_config("ps-sync", 1)).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let server_handle = thread::spawn(move || server.run());
+
+    // This worker insists the cluster run plain SGD; the server is
+    // running memsgd:top_k:1 — a half-compatible cluster would silently
+    // diverge, so both ends must refuse.
+    let expect = Hello { method: "sgd".into(), ..Hello::any() };
+    let worker_err = run_worker(&addr, &expect, &fast_backoff()).unwrap_err();
+    let worker_msg = format!("{worker_err:#}");
+    assert!(
+        worker_msg.contains("server rejected handshake"),
+        "worker error misses the rejection: {worker_msg}"
+    );
+    assert!(
+        worker_msg.contains("method mismatch"),
+        "worker error misses the cause: {worker_msg}"
+    );
+
+    let server_err = server_handle.join().unwrap().unwrap_err();
+    let server_msg = format!("{server_err:#}");
+    assert!(
+        server_msg.contains("method mismatch"),
+        "server error misses the cause: {server_msg}"
+    );
+}
+
+#[test]
+fn connect_retry_gives_up_after_the_bound() {
+    // Bind a port, then free it: connecting must fail fast (refused),
+    // and run_worker must give up after exactly the configured bound.
+    let addr = {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.local_addr().unwrap().to_string()
+    };
+    let err = run_worker(&addr, &Hello::any(), &fast_backoff()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("after 2 attempts"),
+        "retry bound not reported: {msg}"
+    );
+}
+
+#[test]
+fn worker_dropping_mid_round_fails_the_server_cleanly() {
+    let server = ClusterServer::bind("127.0.0.1:0", test_config("ps-sync", 1)).unwrap();
+    let addr = server.local_addr().unwrap();
+    let server_handle = thread::spawn(move || server.run());
+
+    // Handshake correctly, then vanish before round 0's UPLOAD.
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write_frame(&mut stream, &Hello::any().encode()).unwrap();
+    let welcome = read_frame(&mut stream, 1 << 20).unwrap();
+    let j = Json::parse(std::str::from_utf8(&welcome).unwrap()).unwrap();
+    assert!(j.get("error").is_none(), "handshake unexpectedly rejected");
+    drop(stream);
+
+    // The server must notice the EOF and fail the run — not sit on the
+    // barrier for a worker that will never upload.
+    let err = server_handle.join().unwrap().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("node 0"), "server error names no node: {msg}");
+    assert!(
+        msg.contains("connection lost") || msg.contains("connection closed"),
+        "server error misses the disconnect: {msg}"
+    );
+}
+
+#[test]
+fn premature_double_shutdown_fails_the_worker_cleanly() {
+    // A hostile "server" that handshakes correctly, then fires SHUTDOWN
+    // twice instead of running round 0. The sync worker is owed a
+    // BROADCAST — it must bail descriptively, not hang or panic.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let cfg = test_config("ps-sync", 1);
+    let fake_server = thread::spawn(move || {
+        let (mut stream, _) = listener.accept().unwrap();
+        let hello = read_frame(&mut stream, 1 << 20).unwrap();
+        Hello::decode(&hello).unwrap();
+        let welcome = Json::obj(vec![
+            ("proto", Json::Num(PROTOCOL_VERSION as f64)),
+            ("node", Json::Num(0.0)),
+            ("config", cfg.to_json()),
+        ])
+        .to_string();
+        write_frame(&mut stream, welcome.as_bytes()).unwrap();
+        let mut w = BitWriter::new();
+        encode_shutdown(&mut w);
+        let frame = w.as_bytes().to_vec();
+        write_frame(&mut stream, &frame).unwrap();
+        write_frame(&mut stream, &frame).unwrap();
+        stream // keep the socket open until the worker has decided
+    });
+
+    let err = run_worker(&addr, &Hello::any(), &fast_backoff()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unexpected"), "worker error misses the bogus message: {msg}");
+    drop(fake_server.join().unwrap());
+}

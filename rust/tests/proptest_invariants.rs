@@ -428,3 +428,64 @@ fn prop_payload_roundtrip_every_compressor() {
         ensure(got == want, format!("{spec} d={d}: payload not bit-exact"))
     });
 }
+
+/// TCP length-framing totality: the frame reader must survive hostile
+/// byte streams the in-process loopback could never produce — an
+/// oversized declared length is refused **before allocation**, a
+/// mid-frame EOF errors descriptively at any cut point, and a slow peer
+/// trickling one byte per `read` still assembles the frame intact.
+#[test]
+fn prop_tcp_framing_survives_hostile_and_trickling_streams() {
+    use memsgd::coordinator::net::{read_frame, write_frame};
+    use std::io::Read;
+
+    /// Yields its buffer one byte per `read` call — the slowest
+    /// conforming peer.
+    struct Trickle<'a> {
+        data: &'a [u8],
+        pos: usize,
+    }
+    impl Read for Trickle<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.data.len() || buf.is_empty() {
+                return Ok(0);
+            }
+            buf[0] = self.data[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    check("tcp-framing", 400, |rng| {
+        let cap = 1 + rng.below(512);
+        // 1) A valid frame round-trips, even one byte at a time.
+        let len = rng.below(cap + 1);
+        let payload: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &payload).map_err(|e| format!("write: {e:#}"))?;
+        let back = read_frame(&mut Trickle { data: &wire, pos: 0 }, cap)
+            .map_err(|e| format!("trickle read: {e:#}"))?;
+        ensure(back == payload, "trickled frame corrupted")?;
+
+        // 2) A length prefix over the cap is refused before any
+        //    allocation, whatever bytes follow it.
+        let over = cap as u32 + 1 + rng.below(1 << 16) as u32;
+        let mut hostile = over.to_be_bytes().to_vec();
+        hostile.extend_from_slice(&payload);
+        let err = read_frame(&mut Trickle { data: &hostile, pos: 0 }, cap).unwrap_err();
+        ensure(
+            format!("{err:#}").contains("max_frame_bytes"),
+            format!("oversized prefix not refused by name: {err:#}"),
+        )?;
+
+        // 3) Mid-frame EOF: every strict prefix of a frame errors with
+        //    a connection-closed diagnosis, never a hang or panic.
+        let cut = rng.below(wire.len());
+        let err = read_frame(&mut Trickle { data: &wire[..cut], pos: 0 }, cap).unwrap_err();
+        ensure(
+            format!("{err:#}").contains("closed"),
+            format!("mid-frame EOF at byte {cut} not a close error: {err:#}"),
+        )?;
+        Ok(())
+    });
+}

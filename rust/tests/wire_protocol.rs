@@ -5,12 +5,15 @@
 //! * **Golden trajectories** — `ParamServerSync` and `ParamServerAsync`
 //!   in wire mode must reproduce the simulated engines **bit for bit**
 //!   (loss curve, accounted bits, every extra the simulation reports)
-//!   on every `MethodSpec` × `LocalUpdate` combination, with every
-//!   update round-tripping through the Elias payload codec and a real
-//!   channel between threads.
+//!   on every `MethodSpec` × `LocalUpdate` combination and on **every
+//!   transport backend** (in-process `Loopback` and kernel-socket
+//!   `TcpTransport`), with every update round-tripping through the
+//!   Elias payload codec and a real channel between threads.
 //! * **Wire accounting** — the `wire_frame_bits` a run reports must
 //!   equal the bytes independently counted at the channel boundary
-//!   (`CountingTransport`), i.e. reported bits are transmitted bytes.
+//!   (`CountingTransport`), i.e. reported bits are transmitted bytes —
+//!   split per direction: `wire_upload_frame_bits` is worker→server
+//!   bytes, `wire_broadcast_frame_bits` server→worker bytes.
 //! * **Codec reconciliation** — for every `CompressorSpec`, the framed
 //!   payload decodes back to the exact update and its measured length
 //!   matches an independent closed-form recomputation; where the
@@ -24,7 +27,8 @@ use memsgd::compress::elias::{
     decode_payload, gamma_bits, BitReader, BitWriter, TAG_DENSE_RAW, TAG_SIGN, TAG_SPARSE,
 };
 use memsgd::compress::{sparse::index_bits, Compressor, CompressorSpec, Update};
-use memsgd::coordinator::transport::{CountingTransport, Loopback};
+use memsgd::coordinator::net::TcpTransport;
+use memsgd::coordinator::transport::{CountingTransport, Loopback, Transport};
 use memsgd::coordinator::{Experiment, LocalUpdate, MethodSpec, Topology};
 use memsgd::data::Dataset;
 use memsgd::metrics::RunRecord;
@@ -62,6 +66,15 @@ fn all_locals() -> Vec<LocalUpdate> {
     vec![LocalUpdate::default(), LocalUpdate::new(2, 3).unwrap()]
 }
 
+/// Every socket fabric the wire engines must be indistinguishable over:
+/// the in-process loopback and real TCP sockets on localhost.
+fn backends() -> Vec<(&'static str, fn() -> Box<dyn Transport>)> {
+    vec![
+        ("loopback", || Box::new(Loopback) as Box<dyn Transport>),
+        ("tcp", || Box::new(TcpTransport) as Box<dyn Transport>),
+    ]
+}
+
 /// Bit-for-bit record equality: curve (t, accounted bits, f64 loss),
 /// step/bit totals, and every extra the simulated engine reports. The
 /// wire record may add `wire_*` keys on top; nothing the simulation
@@ -86,6 +99,12 @@ fn assert_records_match(sim: &RunRecord, wired: &RunRecord, label: &str) {
         wired.extra["wire_upload_payload_bits"] > 0.0,
         "{label}: no upload payloads counted"
     );
+    // The per-direction split must account for every frame bit.
+    assert_eq!(
+        wired.extra["wire_upload_frame_bits"] + wired.extra["wire_broadcast_frame_bits"],
+        wired.extra["wire_frame_bits"],
+        "{label}: per-direction frame bits don't sum to the total"
+    );
 }
 
 #[test]
@@ -94,8 +113,8 @@ fn threaded_sync_engine_is_bit_identical_on_every_method_and_schedule() {
     for method in all_methods() {
         for local in all_locals() {
             let label = format!("{} B={} H={}", method.name(), local.batch, local.sync_every);
-            let run = |wire: bool| {
-                Experiment::new(LogisticModel::new(&data, 1.0 / 240.0))
+            let run = |transport: Option<Box<dyn Transport>>| {
+                let exp = Experiment::new(LogisticModel::new(&data, 1.0 / 240.0))
                     .dataset(&data.name)
                     .method(method.clone())
                     .schedule(Schedule::constant(0.4))
@@ -103,14 +122,19 @@ fn threaded_sync_engine_is_bit_identical_on_every_method_and_schedule() {
                     .steps(540)
                     .eval_points(4)
                     .seed(7)
-                    .local_update(local)
-                    .wire(wire)
-                    .run()
-                    .unwrap()
+                    .local_update(local);
+                match transport {
+                    Some(t) => exp.wire_transport(t),
+                    None => exp,
+                }
+                .run()
+                .unwrap()
             };
-            let sim = run(false);
-            let wired = run(true);
-            assert_records_match(&sim, &wired, &label);
+            let sim = run(None);
+            for (backend, make) in backends() {
+                let wired = run(Some(make()));
+                assert_records_match(&sim, &wired, &format!("{label} [{backend}]"));
+            }
         }
     }
 }
@@ -126,8 +150,8 @@ fn threaded_async_engine_is_bit_identical_on_every_method_and_schedule() {
                 local.batch,
                 local.sync_every
             );
-            let run = |wire: bool| {
-                Experiment::new(LogisticModel::new(&data, 1.0 / 240.0))
+            let run = |transport: Option<Box<dyn Transport>>| {
+                let exp = Experiment::new(LogisticModel::new(&data, 1.0 / 240.0))
                     .dataset(&data.name)
                     .method(method.clone())
                     .schedule(Schedule::constant(0.4))
@@ -138,20 +162,28 @@ fn threaded_async_engine_is_bit_identical_on_every_method_and_schedule() {
                     .steps(240)
                     .eval_points(4)
                     .seed(7)
-                    .local_update(local)
-                    .wire(wire)
-                    .run()
-                    .unwrap()
+                    .local_update(local);
+                match transport {
+                    Some(t) => exp.wire_transport(t),
+                    None => exp,
+                }
+                .run()
+                .unwrap()
             };
-            let sim = run(false);
-            let wired = run(true);
-            assert_records_match(&sim, &wired, &label);
-            // The async-specific simulated-time results must reproduce
-            // exactly too (already covered by the extras sweep, but
-            // these are the reproducibility headline — pin them by
-            // name).
-            for key in ["mean_staleness", "max_staleness", "sim_seconds", "link_utilization"] {
-                assert_eq!(sim.extra[key], wired.extra[key], "{label}: {key}");
+            let sim = run(None);
+            for (backend, make) in backends() {
+                let wired = run(Some(make()));
+                let label = format!("{label} [{backend}]");
+                assert_records_match(&sim, &wired, &label);
+                // The async-specific simulated-time results must
+                // reproduce exactly too (already covered by the extras
+                // sweep, but these are the reproducibility headline —
+                // pin them by name).
+                for key in
+                    ["mean_staleness", "max_staleness", "sim_seconds", "link_utilization"]
+                {
+                    assert_eq!(sim.extra[key], wired.extra[key], "{label}: {key}");
+                }
             }
         }
     }
@@ -160,36 +192,66 @@ fn threaded_async_engine_is_bit_identical_on_every_method_and_schedule() {
 #[test]
 fn reported_wire_bits_equal_bytes_counted_on_the_channel() {
     let data = data();
-    for (topology, steps) in [
-        (Topology::ParamServerSync { nodes: 3 }, 540usize),
-        (Topology::ParamServerAsync { nodes: 3, net: NetworkModel::eth_1g() }, 240),
-    ] {
-        let transport = CountingTransport::new(Box::new(Loopback));
-        let counter = transport.counter();
-        let rec = Experiment::new(LogisticModel::new(&data, 1.0 / 240.0))
-            .dataset(&data.name)
-            .method(MethodSpec::mem_top_k(2))
-            .schedule(Schedule::constant(0.4))
-            .topology(topology.clone())
-            .steps(steps)
-            .eval_points(4)
-            .seed(3)
-            .wire_transport(Box::new(transport))
-            .run()
-            .unwrap();
-        let counted_bits = counter.load(Ordering::Relaxed) * 8;
-        assert_eq!(
-            rec.extra["wire_frame_bits"], counted_bits as f64,
-            "{topology:?}: reported frame bits != bytes on the channel"
-        );
-        // Payloads are a subset of the frames (headers + padding).
-        let payload =
-            rec.extra["wire_upload_payload_bits"] + rec.extra["wire_broadcast_payload_bits"];
-        assert!(payload > 0.0, "{topology:?}: no payload bits");
-        assert!(
-            payload <= counted_bits as f64,
-            "{topology:?}: payload exceeds transmitted frames"
-        );
+    for (backend, make) in backends() {
+        for (topology, steps) in [
+            (Topology::ParamServerSync { nodes: 3 }, 540usize),
+            (Topology::ParamServerAsync { nodes: 3, net: NetworkModel::eth_1g() }, 240),
+        ] {
+            let transport = CountingTransport::new(make());
+            let counter = transport.counter();
+            let up = transport.upload_counter();
+            let down = transport.broadcast_counter();
+            let rec = Experiment::new(LogisticModel::new(&data, 1.0 / 240.0))
+                .dataset(&data.name)
+                .method(MethodSpec::mem_top_k(2))
+                .schedule(Schedule::constant(0.4))
+                .topology(topology.clone())
+                .steps(steps)
+                .eval_points(4)
+                .seed(3)
+                .wire_transport(Box::new(transport))
+                .run()
+                .unwrap();
+            let label = format!("{topology:?} [{backend}]");
+            let counted_bits = counter.load(Ordering::Relaxed) * 8;
+            let up_bits = up.load(Ordering::Relaxed) * 8;
+            let down_bits = down.load(Ordering::Relaxed) * 8;
+            assert_eq!(
+                rec.extra["wire_frame_bits"], counted_bits as f64,
+                "{label}: reported frame bits != bytes on the channel"
+            );
+            // The per-direction reconciliation: reported upload frame
+            // bits are exactly the worker→server bytes, broadcast frame
+            // bits exactly the server→worker bytes, and together they
+            // are every byte the channel carried.
+            assert_eq!(
+                rec.extra["wire_upload_frame_bits"], up_bits as f64,
+                "{label}: reported upload frame bits != worker->server bytes"
+            );
+            assert_eq!(
+                rec.extra["wire_broadcast_frame_bits"], down_bits as f64,
+                "{label}: reported broadcast frame bits != server->worker bytes"
+            );
+            assert_eq!(
+                up_bits + down_bits,
+                counted_bits,
+                "{label}: direction split loses bytes"
+            );
+            // Payloads are a subset of the frames (headers + padding),
+            // per direction too.
+            assert!(
+                rec.extra["wire_upload_payload_bits"] > 0.0,
+                "{label}: no upload payload bits"
+            );
+            assert!(
+                rec.extra["wire_upload_payload_bits"] <= up_bits as f64,
+                "{label}: upload payload exceeds upload frames"
+            );
+            assert!(
+                rec.extra["wire_broadcast_payload_bits"] <= down_bits as f64,
+                "{label}: broadcast payload exceeds broadcast frames"
+            );
+        }
     }
 }
 
