@@ -308,6 +308,45 @@ fn main() {
         });
     }
 
+    // --- server dispatch: one poll wakeup's worth of uploads ------------------
+    // The event-driven cluster server's per-wakeup data-plane cost: a
+    // readiness chunk carrying 8 framed top-10 uploads (one per node of
+    // an 8-node round) pushed through the resumable `FrameAssembler`
+    // and the typed wire decoder. The delta against the codec rows
+    // isolates the reassembly + dispatch overhead the poll backend adds
+    // over raw decode.
+    {
+        use memsgd::compress::elias::BitWriter;
+        use memsgd::compress::Compressor;
+        use memsgd::coordinator::net::FrameAssembler;
+        use memsgd::coordinator::transport::{decode_msg, encode_upload, MAX_FRAME_BYTES};
+
+        let d = 47_236usize;
+        let mut comp = compress::from_spec("top_k:10").unwrap();
+        let mut rng = Prng::new(17);
+        let mut out = Update::new_sparse(d);
+        let x: Vec<f32> = (0..d).map(|i| ((i % 83) as f32 - 41.0) * 0.01).collect();
+        comp.compress(&x, &mut rng, &mut out);
+        let mut chunk = Vec::new();
+        for node in 0..8u32 {
+            let mut w = BitWriter::new();
+            encode_upload(&mut w, 0, node, 1_234, &*comp, &out);
+            let frame = w.as_bytes();
+            chunk.extend_from_slice(&(frame.len() as u32).to_be_bytes());
+            chunk.extend_from_slice(frame);
+        }
+        b.run(&gate::server_dispatch_case(), || {
+            let mut asm = FrameAssembler::new(MAX_FRAME_BYTES);
+            asm.feed(&chunk).unwrap();
+            let mut seen = 0usize;
+            while let Some(frame) = asm.next_frame() {
+                decode_msg(&frame, d).unwrap();
+                seen += 1;
+            }
+            assert_eq!(seen, 8);
+        });
+    }
+
     // --- weighted averaging overhead ------------------------------------------
     {
         let d = 2_000;

@@ -33,19 +33,31 @@
 //!    (`serve_sync_protocol` / `serve_async_protocol`) against
 //!    multiplexed sockets.
 //! 4. **Shutdown**: the server drains `SHUTDOWN` to every worker, the
-//!    workers consume it and close, and the server shuts every socket
-//!    down and joins its reader threads — on error paths too, so a
-//!    dropped worker fails the run cleanly instead of hanging the
-//!    barrier.
+//!    workers consume it and close, and the server flushes and shuts
+//!    every socket down (joining its reader threads on the threads
+//!    backend) — on error paths too, so a dropped worker fails the run
+//!    cleanly instead of hanging the barrier.
 //!
-//! ## Multiplexing
+//! ## Multiplexing: two I/O backends
 //!
-//! The server spawns one reader thread per accepted socket; every
-//! thread feeds one `mpsc` channel with `(node, frame-or-error)`
-//! messages. The single-threaded protocol loop consumes them through
-//! per-node [`Channel`] facades that buffer out-of-turn frames — so
-//! worker counts scale past thread-per-core on the *protocol* side
-//! (readers spend their lives blocked in `read`).
+//! The server multiplexes its accepted sockets behind per-node
+//! [`Channel`] facades consumed by the single-threaded protocol loop;
+//! *how* it multiplexes is the [`IoBackend`] chosen at bind time
+//! (`memsgd serve --io poll|threads`):
+//!
+//! * **`poll`** (default on unix) — a `poll(2)`-backed event loop over
+//!   nonblocking sockets (`super::mux`): zero reader threads, the
+//!   accept loop and handshakes folded into the poller, per-frame
+//!   deadlines, and write backpressure. See the `mux` module docs.
+//! * **`threads`** (portable fallback, and the only backend off-unix)
+//!   — one reader thread per accepted socket, each assembling frames
+//!   with the same [`super::net::FrameAssembler`] codec and feeding
+//!   the shared [`Channel`] buffers under a mutex + condvar (the
+//!   condvar wait releases the lock, so no mutex is ever held across
+//!   a blocking receive).
+//!
+//! Both backends run the identical protocol halves, so the golden
+//! suites pin them to the same bit-for-bit trajectories.
 //!
 //! ## Determinism caveats
 //!
@@ -60,8 +72,8 @@
 
 use std::collections::VecDeque;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -72,8 +84,8 @@ use super::experiment::{
     serve_sync_protocol, AsyncServerTally, Settings, SyncServerTally, Topology, WireWorker,
 };
 use super::net::{
-    check_compat, configure_stream, connect_with_retry, read_frame, write_frame, Backoff, Hello,
-    TcpChannel, HANDSHAKE_TIMEOUT, PROTOCOL_VERSION, READ_TIMEOUT,
+    check_compat, configure_stream, connect_with_retry, read_frame_deadline, write_frame, Backoff,
+    Hello, TcpChannel, FRAME_DEADLINE, HANDSHAKE_TIMEOUT, PROTOCOL_VERSION, READ_TIMEOUT,
 };
 use super::transport::{Channel, MAX_FRAME_BYTES};
 use crate::experiments::{self, Which};
@@ -94,6 +106,67 @@ const ACCEPT_POLL: Duration = Duration::from_millis(25);
 /// `Experiment` builder's default so `memsgd serve --topology ps-async`
 /// reproduces `memsgd train --wire --topology ps-async` exactly.
 const HETERO: f64 = 0.5;
+
+/// How the server multiplexes its accepted sockets (`serve --io ...`).
+/// Selected at bind time; both backends run the identical protocol and
+/// produce bit-identical trajectories.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoBackend {
+    /// `poll(2)` event loop over nonblocking sockets (`super::mux`):
+    /// no per-connection reader threads, concurrent handshakes,
+    /// per-frame deadlines, write backpressure. Unix only.
+    Poll,
+    /// One blocking reader thread per accepted socket — the portable
+    /// fallback, and the only backend on non-unix platforms.
+    Threads,
+}
+
+impl IoBackend {
+    /// Parse a `--io` flag value (`poll` | `threads`).
+    pub fn parse(s: &str) -> Result<IoBackend> {
+        match s {
+            "poll" => {
+                if cfg!(unix) {
+                    Ok(IoBackend::Poll)
+                } else {
+                    bail!("--io poll requires a unix platform (poll(2)); use --io threads")
+                }
+            }
+            "threads" => Ok(IoBackend::Threads),
+            other => bail!("unknown I/O backend '{other}' (poll | threads)"),
+        }
+    }
+
+    /// The default backend: `poll` where the syscall exists, `threads`
+    /// elsewhere.
+    pub fn platform_default() -> IoBackend {
+        if cfg!(unix) {
+            IoBackend::Poll
+        } else {
+            IoBackend::Threads
+        }
+    }
+
+    /// The `--io` flag spelling of this backend.
+    pub fn name(&self) -> &'static str {
+        match self {
+            IoBackend::Poll => "poll",
+            IoBackend::Threads => "threads",
+        }
+    }
+}
+
+/// The `WELCOME` frame payload for an accepted node — shared by both
+/// I/O backends so the handshake is byte-identical under either.
+/// `proto` travels as a string, like [`Hello`] and the config seed.
+pub(crate) fn welcome_json(cfg: &RunConfig, node: usize) -> String {
+    Json::obj(vec![
+        ("proto", Json::str(PROTOCOL_VERSION.to_string())),
+        ("node", Json::Num(node as f64)),
+        ("config", cfg.to_json()),
+    ])
+    .to_string()
+}
 
 /// The full run description a server carries and ships to every worker
 /// in the `WELCOME` frame. Both sides rebuild the dataset and schedule
@@ -280,44 +353,107 @@ fn schedule_from_json(j: &Json) -> Result<Schedule> {
 // Server-side socket multiplexing
 // ---------------------------------------------------------------------------
 
-/// What a reader thread delivers: a frame from its node, or the final
-/// error that ended the connection.
-type ReaderMsg = (usize, std::result::Result<Vec<u8>, String>);
+/// Lifetime count of per-connection reader threads this process has
+/// spawned (threads backend only). The 32-worker stress test asserts
+/// the poll backend leaves this untouched.
+static READER_THREADS: AtomicUsize = AtomicUsize::new(0);
 
-/// State shared by every per-node [`MuxChannel`]: the one mpsc all
-/// reader threads feed, per-node buffers for frames that arrived before
-/// the protocol asked for them, and the first terminal error per node.
+/// Total reader threads spawned by this process so far — a test probe
+/// for the no-reader-threads property of the poll backend.
+#[doc(hidden)]
+pub fn reader_threads_spawned() -> usize {
+    READER_THREADS.load(Ordering::SeqCst)
+}
+
+/// State shared by every per-node [`MuxChannel`] on the threads
+/// backend: per-node buffers for frames that arrived before the
+/// protocol asked for them, the first terminal error per node, and a
+/// condvar the reader threads signal. The protocol loop waits on the
+/// condvar — the wait *releases* the mutex, so no lock is ever held
+/// across a blocking receive and readers never contend with a parked
+/// consumer.
 struct MuxShared {
-    rx: Receiver<ReaderMsg>,
+    inner: Mutex<MuxInner>,
+    cv: Condvar,
+}
+
+struct MuxInner {
     pending: Vec<VecDeque<Vec<u8>>>,
     dead: Vec<Option<String>>,
+    readers_alive: usize,
 }
 
 impl MuxShared {
-    fn recv_for(&mut self, node: usize) -> Result<Vec<u8>> {
+    fn new(nodes: usize) -> MuxShared {
+        MuxShared {
+            inner: Mutex::new(MuxInner {
+                pending: (0..nodes).map(|_| VecDeque::new()).collect(),
+                dead: vec![None; nodes],
+                readers_alive: nodes,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> Result<MutexGuard<'_, MuxInner>> {
+        self.inner.lock().map_err(|_| anyhow!("cluster mux poisoned"))
+    }
+
+    fn recv_for(&self, node: usize) -> Result<Vec<u8>> {
+        let mut inner = self.lock()?;
         loop {
-            if let Some(frame) = self.pending[node].pop_front() {
+            if let Some(frame) = inner.pending[node].pop_front() {
                 return Ok(frame);
             }
-            if let Some(e) = &self.dead[node] {
+            if let Some(e) = &inner.dead[node] {
                 bail!("node {node}: connection lost: {e}");
             }
-            match self.rx.recv() {
-                Ok((n, Ok(frame))) => self.pending[n].push_back(frame),
-                Ok((n, Err(e))) => self.dead[n] = Some(e),
-                Err(_) => bail!("node {node}: every reader thread has exited"),
+            if inner.readers_alive == 0 {
+                bail!("node {node}: every reader thread has exited");
+            }
+            // Bounded wait is belt-and-braces only: a silent peer trips
+            // the reader's socket timeout within READ_TIMEOUT, which
+            // marks the node dead and signals this condvar.
+            let (guard, _) = self
+                .cv
+                .wait_timeout(inner, READ_TIMEOUT)
+                .map_err(|_| anyhow!("cluster mux poisoned"))?;
+            inner = guard;
+        }
+    }
+
+    fn push_frame(&self, node: usize, frame: Vec<u8>) {
+        if let Ok(mut inner) = self.inner.lock() {
+            inner.pending[node].push_back(frame);
+        }
+        self.cv.notify_all();
+    }
+
+    fn push_dead(&self, node: usize, err: String) {
+        if let Ok(mut inner) = self.inner.lock() {
+            if inner.dead[node].is_none() {
+                inner.dead[node] = Some(err);
             }
         }
+        self.cv.notify_all();
+    }
+
+    fn reader_exited(&self) {
+        if let Ok(mut inner) = self.inner.lock() {
+            inner.readers_alive = inner.readers_alive.saturating_sub(1);
+        }
+        self.cv.notify_all();
     }
 }
 
-/// The server's per-node [`Channel`] facade: `send` writes straight to
-/// the node's socket; `recv` pulls that node's next frame out of the
-/// shared mux (buffering other nodes' frames in arrival order).
+/// The threads backend's per-node [`Channel`] facade: `send` writes
+/// straight to the node's socket; `recv` pulls that node's next frame
+/// out of the shared mux (reader threads buffer every node's frames in
+/// arrival order).
 struct MuxChannel {
     node: usize,
     writer: TcpStream,
-    shared: Arc<Mutex<MuxShared>>,
+    shared: Arc<MuxShared>,
 }
 
 impl Channel for MuxChannel {
@@ -327,28 +463,29 @@ impl Channel for MuxChannel {
     }
 
     fn recv(&mut self) -> Result<Vec<u8>> {
-        let mut shared = self.shared.lock().map_err(|_| anyhow!("cluster mux poisoned"))?;
-        shared.recv_for(self.node)
+        self.shared.recv_for(self.node)
     }
 }
 
 fn spawn_reader(
     node: usize,
     mut stream: TcpStream,
-    tx: Sender<ReaderMsg>,
+    shared: Arc<MuxShared>,
 ) -> std::thread::JoinHandle<()> {
-    std::thread::spawn(move || loop {
-        match read_frame(&mut stream, MAX_FRAME_BYTES) {
-            Ok(frame) => {
-                if tx.send((node, Ok(frame))).is_err() {
-                    return; // server side gone; nothing to report to
+    READER_THREADS.fetch_add(1, Ordering::SeqCst);
+    std::thread::spawn(move || {
+        loop {
+            // The whole-frame deadline applies on the threads data
+            // plane too: a trickling peer is cut off, not tolerated.
+            match read_frame_deadline(&mut stream, MAX_FRAME_BYTES, Some(FRAME_DEADLINE)) {
+                Ok(frame) => shared.push_frame(node, frame),
+                Err(e) => {
+                    shared.push_dead(node, format!("{e:#}"));
+                    break;
                 }
             }
-            Err(e) => {
-                let _ = tx.send((node, Err(format!("{e:#}"))));
-                return;
-            }
         }
+        shared.reader_exited();
     })
 }
 
@@ -364,14 +501,25 @@ pub struct ClusterServer {
     listener: TcpListener,
     cfg: RunConfig,
     data: crate::data::Dataset,
+    io: IoBackend,
 }
 
 impl ClusterServer {
+    /// [`ClusterServer::bind_with_io`] with the platform-default I/O
+    /// backend (`poll` on unix, `threads` elsewhere).
+    pub fn bind(addr: &str, cfg: RunConfig) -> Result<ClusterServer> {
+        ClusterServer::bind_with_io(addr, cfg, IoBackend::platform_default())
+    }
+
     /// Validate the config, build the dataset, and bind `addr`
     /// (`"127.0.0.1:0"` picks a free port — [`ClusterServer::local_addr`]
-    /// reports it; the lifecycle tests rely on this).
-    pub fn bind(addr: &str, cfg: RunConfig) -> Result<ClusterServer> {
+    /// reports it; the lifecycle tests rely on this). The chosen
+    /// [`IoBackend`] drives every accepted socket for the whole run.
+    pub fn bind_with_io(addr: &str, cfg: RunConfig, io: IoBackend) -> Result<ClusterServer> {
         cfg.validate()?;
+        if io == IoBackend::Poll && !cfg!(unix) {
+            bail!("the poll I/O backend requires a unix platform; use IoBackend::Threads");
+        }
         let which = Which::parse(&cfg.dataset)?;
         let data = experiments::dataset(which, cfg.scale, cfg.seed);
         if data.d() != cfg.dim {
@@ -384,7 +532,7 @@ impl ClusterServer {
         }
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding listener on {addr}"))?;
-        Ok(ClusterServer { listener, cfg, data })
+        Ok(ClusterServer { listener, cfg, data, io })
     }
 
     /// The bound address (resolves a `:0` bind to the actual port).
@@ -392,24 +540,51 @@ impl ClusterServer {
         self.listener.local_addr().context("resolving listen addr")
     }
 
-    /// Accept, handshake, serve, shut down. Teardown runs on success
-    /// and failure alike: every socket is shut down (turning blocked
-    /// reads into errors) and every reader thread joined, so no run —
-    /// clean, rejected, or mid-round-disconnected — leaks threads or
-    /// sockets.
+    /// Accept, handshake, serve, shut down — on the I/O backend chosen
+    /// at bind time. Teardown runs on success and failure alike:
+    /// every socket is flushed and shut down (turning blocked peer
+    /// reads into errors), and reader threads — if the backend spawned
+    /// any — are joined, so no run leaks threads or sockets.
     pub fn run(self) -> Result<RunRecord> {
+        match self.io {
+            #[cfg(unix)]
+            IoBackend::Poll => self.run_poll(),
+            #[cfg(not(unix))]
+            IoBackend::Poll => bail!("the poll I/O backend requires a unix platform"),
+            IoBackend::Threads => self.run_threads(),
+        }
+    }
+
+    /// The event-driven backend: `super::mux` accepts and handshakes
+    /// all workers inside one `poll(2)` set, then the protocol loop
+    /// pumps the same poller through its per-node channels. No
+    /// per-connection threads anywhere.
+    #[cfg(unix)]
+    fn run_poll(self) -> Result<RunRecord> {
+        let hello = self.cfg.hello();
+        let streams = super::mux::accept_and_handshake(
+            &self.listener,
+            &hello,
+            &|node| welcome_json(&self.cfg, node),
+            self.cfg.nodes,
+        )?;
+        let (mut channels, mux) = super::mux::data_plane(streams);
+        let served = self.serve(&mut channels);
+        drop(channels);
+        super::mux::drain_and_shutdown(&mux);
+        served
+    }
+
+    /// The portable backend: serial blocking handshakes, then one
+    /// reader thread per accepted socket feeding the condvar-signalled
+    /// [`MuxShared`].
+    fn run_threads(self) -> Result<RunRecord> {
         let nodes = self.cfg.nodes;
-        let (tx, rx) = std::sync::mpsc::channel::<ReaderMsg>();
-        let shared = Arc::new(Mutex::new(MuxShared {
-            rx,
-            pending: (0..nodes).map(|_| VecDeque::new()).collect(),
-            dead: vec![None; nodes],
-        }));
+        let shared = Arc::new(MuxShared::new(nodes));
         let mut channels: Vec<Box<dyn Channel>> = Vec::with_capacity(nodes);
         let mut shutdowners: Vec<TcpStream> = Vec::with_capacity(nodes);
         let mut readers: Vec<std::thread::JoinHandle<()>> = Vec::with_capacity(nodes);
         let served = match self.accept_workers(
-            &tx,
             &shared,
             &mut channels,
             &mut shutdowners,
@@ -419,7 +594,6 @@ impl ClusterServer {
             Err(e) => Err(e),
         };
         drop(channels);
-        drop(tx);
         for stream in &shutdowners {
             let _ = stream.shutdown(Shutdown::Both);
         }
@@ -435,8 +609,7 @@ impl ClusterServer {
     /// teardown closes every already-accepted socket.
     fn accept_workers(
         &self,
-        tx: &Sender<ReaderMsg>,
-        shared: &Arc<Mutex<MuxShared>>,
+        shared: &Arc<MuxShared>,
         channels: &mut Vec<Box<dyn Channel>>,
         shutdowners: &mut Vec<TcpStream>,
         readers: &mut Vec<std::thread::JoinHandle<()>>,
@@ -470,8 +643,11 @@ impl ClusterServer {
             stream
                 .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
                 .context("setting handshake timeout")?;
-            let frame = read_frame(&mut stream, MAX_FRAME_BYTES)
-                .with_context(|| format!("reading HELLO from connection {node}"))?;
+            // Socket timeout bounds each read; the whole-frame deadline
+            // bounds a trickling HELLO as a whole.
+            let frame =
+                read_frame_deadline(&mut stream, MAX_FRAME_BYTES, Some(HANDSHAKE_TIMEOUT))
+                    .with_context(|| format!("reading HELLO from connection {node}"))?;
             let worker_hello = Hello::decode(&frame)?;
             if let Err(e) = check_compat(&worker_hello, &server_hello) {
                 let reject =
@@ -480,12 +656,7 @@ impl ClusterServer {
                 let _ = stream.shutdown(Shutdown::Both);
                 return Err(e.push_context(format!("connection {node} failed the handshake")));
             }
-            let welcome = Json::obj(vec![
-                ("proto", Json::Num(PROTOCOL_VERSION as f64)),
-                ("node", Json::Num(node as f64)),
-                ("config", self.cfg.to_json()),
-            ])
-            .to_string();
+            let welcome = welcome_json(&self.cfg, node);
             write_frame(&mut stream, welcome.as_bytes())
                 .with_context(|| format!("sending WELCOME to node {node}"))?;
             stream
@@ -493,7 +664,7 @@ impl ClusterServer {
                 .context("restoring data-plane read timeout")?;
             let reader = stream.try_clone().context("cloning socket for reader thread")?;
             let shutdowner = stream.try_clone().context("cloning socket for shutdown")?;
-            readers.push(spawn_reader(node, reader, tx.clone()));
+            readers.push(spawn_reader(node, reader, Arc::clone(shared)));
             shutdowners.push(shutdowner);
             channels.push(Box::new(MuxChannel {
                 node,
@@ -619,13 +790,17 @@ pub fn run_worker(addr: &str, expect: &Hello, backoff: &Backoff) -> Result<(usiz
     let mut stream = connect_with_retry(addr, backoff)?;
     configure_stream(&stream)?;
     write_frame(&mut stream, &expect.encode()).context("sending HELLO")?;
-    let frame = read_frame(&mut stream, MAX_FRAME_BYTES).context("reading WELCOME")?;
+    let frame = read_frame_deadline(&mut stream, MAX_FRAME_BYTES, Some(FRAME_DEADLINE))
+        .context("reading WELCOME")?;
     let text = std::str::from_utf8(&frame).context("WELCOME frame is not UTF-8")?;
     let j = Json::parse(text).context("WELCOME frame is not JSON")?;
     if let Some(err) = j.get("error") {
         bail!("server rejected handshake: {}", err.as_str().unwrap_or("unknown reason"));
     }
-    let proto = j.req("proto")?.as_usize()? as u64;
+    let proto_str = j.req("proto")?.as_str().context("WELCOME proto must be a string")?;
+    let proto = proto_str
+        .parse::<u64>()
+        .with_context(|| format!("WELCOME proto '{proto_str}' is not a u64"))?;
     if proto != PROTOCOL_VERSION {
         bail!(
             "protocol version mismatch (server speaks v{proto}, \
@@ -761,6 +936,32 @@ mod tests {
             let j = Json::parse(bad).unwrap();
             assert!(schedule_from_json(&j).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn io_backend_parses_and_defaults() {
+        assert_eq!(IoBackend::parse("threads").unwrap(), IoBackend::Threads);
+        if cfg!(unix) {
+            assert_eq!(IoBackend::parse("poll").unwrap(), IoBackend::Poll);
+            assert_eq!(IoBackend::platform_default(), IoBackend::Poll);
+        } else {
+            assert!(IoBackend::parse("poll").is_err());
+            assert_eq!(IoBackend::platform_default(), IoBackend::Threads);
+        }
+        let err = IoBackend::parse("epoll").unwrap_err();
+        assert!(format!("{err:#}").contains("poll | threads"), "{err:#}");
+        assert_eq!(IoBackend::Poll.name(), "poll");
+        assert_eq!(IoBackend::Threads.name(), "threads");
+    }
+
+    #[test]
+    fn welcome_frame_stringifies_proto() {
+        let text = welcome_json(&cfg(), 1);
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.req("proto").unwrap().as_str().unwrap(), PROTOCOL_VERSION.to_string());
+        assert_eq!(j.req("node").unwrap().as_usize().unwrap(), 1);
+        let back = RunConfig::from_json(j.req("config").unwrap()).unwrap();
+        assert_eq!(back, cfg());
     }
 
     #[test]

@@ -884,13 +884,31 @@ pub(crate) fn param_server_sync<B: GradBackend>(
             ws.phase(backend, &mut worker.ef, &mut worker.rng, &mut x, |_| etaf);
             // Server receives the upload and folds it into the aggregate.
             match worker.ef.update() {
+                // Once any node has gone dense the round aggregates in
+                // `agg_dense`; sparse contributions fold straight into
+                // it so nothing is dropped. Spilling `agg` at the
+                // moment the first dense upload arrives (before folding
+                // it) keeps the per-coordinate addition order identical
+                // to the node-id fold contract.
                 Update::Sparse(sv) => {
-                    for (&j, &vj) in sv.idx.iter().zip(&sv.val) {
-                        *agg.entry(j).or_insert(0.0) += vj;
+                    if any_dense {
+                        for (&j, &vj) in sv.idx.iter().zip(&sv.val) {
+                            agg_dense[j as usize] += vj;
+                        }
+                    } else {
+                        for (&j, &vj) in sv.idx.iter().zip(&sv.val) {
+                            *agg.entry(j).or_insert(0.0) += vj;
+                        }
                     }
                 }
                 Update::Dense(g) => {
-                    any_dense = true;
+                    if !any_dense {
+                        any_dense = true;
+                        for (&j, &vj) in agg.iter() {
+                            agg_dense[j as usize] += vj;
+                        }
+                        agg.clear();
+                    }
                     for (a, &gj) in agg_dense.iter_mut().zip(g) {
                         *a += gj;
                     }
@@ -1315,14 +1333,31 @@ pub(crate) fn serve_sync_protocol<B: GradBackend>(
                 {
                     tally.wire_up += dec.payload_bits;
                     tally.upload_acc[node] += accounted_bits;
+                    // Mirrors the simulated engine's mixed-variant
+                    // merge exactly: spill `agg` into `agg_dense` when
+                    // the first dense upload arrives, then fold every
+                    // later sparse upload directly into `agg_dense` —
+                    // same per-coordinate addition order, bit for bit.
                     match update {
                         Update::Sparse(sv) => {
-                            for (&j, &vj) in sv.idx.iter().zip(&sv.val) {
-                                *agg.entry(j).or_insert(0.0) += vj;
+                            if any_dense {
+                                for (&j, &vj) in sv.idx.iter().zip(&sv.val) {
+                                    agg_dense[j as usize] += vj;
+                                }
+                            } else {
+                                for (&j, &vj) in sv.idx.iter().zip(&sv.val) {
+                                    *agg.entry(j).or_insert(0.0) += vj;
+                                }
                             }
                         }
                         Update::Dense(g) => {
-                            any_dense = true;
+                            if !any_dense {
+                                any_dense = true;
+                                for (&j, &vj) in agg.iter() {
+                                    agg_dense[j as usize] += vj;
+                                }
+                                agg.clear();
+                            }
                             for (a, &gj) in agg_dense.iter_mut().zip(&g) {
                                 *a += gj;
                             }
@@ -1906,6 +1941,79 @@ mod tests {
             Topology::ParamServerAsync { nodes: 8, net: NetworkModel::eth_1g() }.workers(),
             8
         );
+    }
+
+    #[test]
+    fn mixed_sparse_dense_round_merges_both_contributions() {
+        // Regression: a round mixing `Update::Dense` and
+        // `Update::Sparse` uploads used to broadcast/apply only the
+        // dense aggregate, silently dropping every sparse node's
+        // contribution. No current compressor mixes variants within a
+        // method, so the mix is injected over hand-built channels —
+        // exactly what a remote peer could always send.
+        let data = data();
+        let mut backend = LogisticModel::new(&data, 1.0 / 300.0);
+        let d = backend.dim();
+        let dense: Vec<f32> = (0..d).map(|j| 0.125 * (j as f32) - 0.5).collect();
+
+        let mut lb = Loopback;
+        let (s0, mut w0) = lb.duplex();
+        let (s1, mut w1) = lb.duplex();
+        let mut ends = vec![s0, s1];
+
+        let dense_up = dense.clone();
+        let script = std::thread::spawn(move || -> Vec<f32> {
+            let mut w = BitWriter::new();
+            let dense_comp = crate::compress::from_spec("identity").unwrap();
+            let sparse_comp = crate::compress::from_spec("top_k:1").unwrap();
+            // Node 0 uploads dense, node 1 sparse — one round.
+            encode_upload(&mut w, 0, 0, 123, dense_comp.as_ref(), &Update::Dense(dense_up));
+            w0.send(w.as_bytes()).unwrap();
+            let mut sv = SparseVec::new(d);
+            sv.push(3, 0.5);
+            sv.push(7, -0.25);
+            encode_upload(&mut w, 0, 1, 77, sparse_comp.as_ref(), &Update::Sparse(sv));
+            w1.send(w.as_bytes()).unwrap();
+            // Drain the broadcast (returned for assertion) and the
+            // shutdown on both worker ends.
+            let bc = w0.recv().unwrap();
+            let g = match decode_msg(&bc, d).unwrap().msg {
+                WireMsg::Broadcast { round: 0, update: Update::Dense(g) } => g,
+                other => panic!("expected dense broadcast for round 0, got {other:?}"),
+            };
+            w1.recv().unwrap();
+            for ch in [&mut w0, &mut w1] {
+                match decode_msg(&ch.recv().unwrap(), d).unwrap().msg {
+                    WireMsg::Shutdown => {}
+                    other => panic!("expected shutdown, got {other:?}"),
+                }
+            }
+            g
+        });
+
+        let mut x = vec![0.0f32; d];
+        let mut record = RunRecord::default();
+        let mut tally = SyncServerTally::new(2);
+        serve_sync_protocol(&mut backend, &mut ends, &mut x, 1, 1, &mut record, &mut tally)
+            .unwrap();
+        let broadcast = script.join().unwrap();
+
+        // Expected aggregate, folded in the server's node-id order:
+        // node 0's dense vector first, then node 1's two coordinates.
+        let mut expected = vec![0.0f32; d];
+        for (e, &v) in expected.iter_mut().zip(&dense) {
+            *e += v;
+        }
+        expected[3] += 0.5;
+        expected[7] += -0.25;
+        assert_eq!(broadcast, expected, "broadcast dropped the sparse contribution");
+        let scale = 1.0 / 2.0f32;
+        for j in 0..d {
+            assert_eq!(x[j], -(expected[j] * scale), "x[{j}] dropped the sparse contribution");
+        }
+        assert_eq!(tally.upload_acc, vec![123, 77]);
+        // Mixed round accounts the broadcast densely.
+        assert_eq!(tally.broadcast_bits, 32 * d as u64);
     }
 
     #[test]

@@ -75,8 +75,9 @@
 //! * [`cluster`] — the multi-process runtime behind `memsgd serve` /
 //!   `memsgd worker`: a JSON-carried [`cluster::RunConfig`], the
 //!   accept/handshake loop with deterministic node-id assignment, and
-//!   reader-thread multiplexing, reproducing the simulated engines
-//!   bit for bit across OS processes.
+//!   two server I/O backends ([`cluster::IoBackend`]: a `poll(2)`
+//!   event loop in `mux`, or portable reader threads), reproducing the
+//!   simulated engines bit for bit across OS processes.
 //! * [`config`] — typed [`config::MethodSpec`] (`memsgd:<comp>`, `sgd`,
 //!   `sgd:qsgd:<levels>`, `sgd:unbiased_rand_k:<k>`) and the legacy
 //!   [`config::Optimizer`] stepping interface.
@@ -95,6 +96,8 @@ pub mod cluster;
 pub mod config;
 pub mod distributed;
 pub mod experiment;
+#[cfg(unix)]
+pub(crate) mod mux;
 pub mod net;
 pub mod parallel;
 pub mod train;

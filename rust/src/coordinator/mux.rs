@@ -1,0 +1,563 @@
+//! `poll(2)`-backed event-driven I/O for the cluster server — the
+//! default server backend on unix (`memsgd serve --io poll`).
+//!
+//! PR 6's server spent one OS thread per accepted socket, parked in a
+//! blocking `read`. That scales the *protocol* but not the process: at
+//! N workers the server carries N sleeping threads, the accept loop
+//! wakes every 25 ms to poll a nonblocking listener, and the serial
+//! handshake lets one connected-but-silent client head-of-line-block
+//! every worker behind it. This module replaces all of that with a
+//! single-threaded event loop over nonblocking sockets:
+//!
+//! * **FFI shim, no new crates** — the loop sits on `poll(2)` through a
+//!   three-line `extern "C"` declaration and a `#[repr(C)]` pollfd
+//!   mirror (the vendored-dependency style of this repo: the libc
+//!   surface we need is one syscall, so we bind it directly).
+//!   `nfds_t` is `c_ulong` on Linux and `c_uint` elsewhere — the one
+//!   platform wrinkle, handled by a cfg-gated alias.
+//! * **Event-driven accept + handshake** ([`accept_and_handshake`]) —
+//!   the listener and every in-flight handshake live in one poll set.
+//!   Node ids are still assigned in accept order (the determinism
+//!   contract), but a client that connects and then stalls only burns
+//!   its own [`super::net::HANDSHAKE_TIMEOUT`]; workers behind it
+//!   handshake concurrently.
+//! * **Multiplexed data plane** ([`data_plane`] / [`PollChannel`]) —
+//!   one [`super::net::FrameAssembler`] per connection turns whatever
+//!   bytes `poll` reports into completed frames. There is **no
+//!   event-loop thread**: the single protocol thread pumps the poller
+//!   from inside [`Channel::recv`] / [`Channel::send`], so the mutex
+//!   around [`Mux`] is uncontended and never held against another
+//!   blocked thread (the thread-backend hazard this PR removes).
+//! * **Per-frame deadlines** — each connection tracks when its
+//!   in-flight frame started; a peer trickling bytes slower than
+//!   [`super::net::FRAME_DEADLINE`] is declared dead even while the
+//!   protocol loop is blocked on a *different* node. `recv` itself is
+//!   bounded by [`super::net::READ_TIMEOUT`].
+//! * **Write backpressure** — `send` enqueues the frame in the
+//!   connection's outbox and pumps the loop until that outbox drains,
+//!   failing after [`super::net::WRITE_TIMEOUT`] without progress. The
+//!   outbox therefore never holds more than one frame: bounded memory,
+//!   blocking-send semantics, and reads from every other node keep
+//!   flowing while a slow peer drains.
+//!
+//! ## Fallback selection
+//!
+//! The portable reader-thread path from PR 6 remains available as
+//! `--io threads` ([`super::cluster::IoBackend`]), and is the only
+//! backend on non-unix targets (this module is compiled on unix only).
+//! Both backends run the identical protocol halves against the same
+//! framing codec, so the golden suites pin them to the same
+//! bit-for-bit trajectories.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::raw::{c_int, c_short};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::cluster::ACCEPT_TIMEOUT;
+use super::net::{
+    check_compat, write_frame, FrameAssembler, Hello, FRAME_DEADLINE, HANDSHAKE_TIMEOUT,
+    READ_TIMEOUT, WRITE_TIMEOUT,
+};
+use super::transport::{Channel, MAX_FRAME_BYTES};
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// poll(2) FFI shim
+// ---------------------------------------------------------------------------
+
+/// `struct pollfd` (POSIX): identical layout on every unix libc.
+#[repr(C)]
+struct PollFd {
+    fd: RawFd,
+    events: c_short,
+    revents: c_short,
+}
+
+const POLLIN: c_short = 0x001;
+const POLLOUT: c_short = 0x004;
+
+/// `nfds_t`: `unsigned long` on Linux/glibc/musl, `unsigned int` on the
+/// BSD family (including macOS).
+#[cfg(target_os = "linux")]
+type NfdsT = std::os::raw::c_ulong;
+#[cfg(not(target_os = "linux"))]
+type NfdsT = std::os::raw::c_uint;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+}
+
+/// One `poll(2)` call with EINTR retry. Returns the number of fds with
+/// nonzero `revents` (0 = timed out).
+fn poll_once(fds: &mut [PollFd], timeout: Duration) -> Result<usize> {
+    let ms = timeout.as_millis().min(i32::MAX as u128) as c_int;
+    loop {
+        // SAFETY: `fds` is a live, exclusively borrowed slice of
+        // `#[repr(C)]` pollfd-layout structs; the kernel writes only
+        // `revents` within the `fds.len()` entries passed.
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = std::io::Error::last_os_error();
+        if err.kind() == ErrorKind::Interrupted {
+            continue;
+        }
+        return Err(err).context("poll(2)");
+    }
+}
+
+/// Poll granularity while a channel operation waits on the loop: events
+/// wake the poller immediately, so this bounds only how often deadline
+/// sweeps run.
+const POLL_TICK: Duration = Duration::from_millis(100);
+
+// ---------------------------------------------------------------------------
+// Accept + handshake
+// ---------------------------------------------------------------------------
+
+/// One accepted connection mid-handshake.
+struct Pending {
+    node: usize,
+    stream: TcpStream,
+    asm: FrameAssembler,
+    /// The framed `WELCOME` bytes still to flush (empty while the
+    /// `HELLO` is being read).
+    outbox: VecDeque<u8>,
+    deadline: Instant,
+    /// The `HELLO` passed compatibility and the `WELCOME` was queued.
+    welcomed: bool,
+    done: bool,
+}
+
+/// Accept exactly `nodes` connections and handshake them concurrently:
+/// listener and every in-flight handshake share one poll set, node ids
+/// are assigned in accept order, and each connection gets
+/// [`HANDSHAKE_TIMEOUT`] from its accept to a fully flushed `WELCOME`.
+/// A compatibility rejection sends the worker an `{"error": reason}`
+/// frame (best-effort, blocking with a timeout — the run is failing
+/// anyway) and fails the run, exactly like the threads backend.
+///
+/// Returns the streams in node-id order, still nonblocking, each paired
+/// with its [`FrameAssembler`] so bytes a worker pipelined behind its
+/// `HELLO` are carried into the data plane instead of dropped.
+pub(crate) fn accept_and_handshake(
+    listener: &TcpListener,
+    server_hello: &Hello,
+    welcome_for: &dyn Fn(usize) -> String,
+    nodes: usize,
+) -> Result<Vec<(TcpStream, FrameAssembler)>> {
+    listener
+        .set_nonblocking(true)
+        .context("setting the listener non-blocking")?;
+    let overall = Instant::now() + ACCEPT_TIMEOUT;
+    let mut pending: Vec<Pending> = Vec::with_capacity(nodes);
+    let mut completed = 0usize;
+    while completed < nodes {
+        let now = Instant::now();
+        if now >= overall {
+            bail!(
+                "only {} of {nodes} workers connected within {}s",
+                pending.len(),
+                ACCEPT_TIMEOUT.as_secs()
+            );
+        }
+        for p in &pending {
+            if !p.done && now >= p.deadline {
+                bail!(
+                    "connection {} did not complete its handshake within {}s",
+                    p.node,
+                    HANDSHAKE_TIMEOUT.as_secs()
+                );
+            }
+        }
+
+        let mut fds: Vec<PollFd> = Vec::with_capacity(pending.len() + 1);
+        let mut which: Vec<usize> = Vec::with_capacity(pending.len() + 1);
+        if pending.len() < nodes {
+            fds.push(PollFd { fd: listener.as_raw_fd(), events: POLLIN, revents: 0 });
+            which.push(usize::MAX);
+        }
+        for (i, p) in pending.iter().enumerate() {
+            if p.done {
+                continue;
+            }
+            let events = if p.welcomed { POLLOUT } else { POLLIN };
+            fds.push(PollFd { fd: p.stream.as_raw_fd(), events, revents: 0 });
+            which.push(i);
+        }
+        // Short timeout: events interrupt it; it only paces the
+        // deadline checks above.
+        if poll_once(&mut fds, Duration::from_millis(25))? == 0 {
+            continue;
+        }
+
+        for (k, fd) in fds.iter().enumerate() {
+            if fd.revents == 0 {
+                continue;
+            }
+            if which[k] == usize::MAX {
+                accept_ready(listener, &mut pending, nodes)?;
+            } else {
+                let p = &mut pending[which[k]];
+                if !p.welcomed {
+                    handshake_read(p, server_hello, welcome_for)?;
+                }
+                // Flush whatever the read just queued (the common case:
+                // the whole WELCOME fits the send buffer immediately).
+                if p.welcomed && !p.done {
+                    handshake_flush(p)?;
+                    if p.done {
+                        completed += 1;
+                    }
+                }
+            }
+        }
+    }
+    pending.sort_by_key(|p| p.node);
+    Ok(pending.into_iter().map(|p| (p.stream, p.asm)).collect())
+}
+
+/// Drain the listener's ready connections (up to `nodes` total).
+fn accept_ready(listener: &TcpListener, pending: &mut Vec<Pending>, nodes: usize) -> Result<()> {
+    while pending.len() < nodes {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(true).context("setting accepted socket non-blocking")?;
+                stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+                let node = pending.len();
+                pending.push(Pending {
+                    node,
+                    stream,
+                    asm: FrameAssembler::new(MAX_FRAME_BYTES),
+                    outbox: VecDeque::new(),
+                    deadline: Instant::now() + HANDSHAKE_TIMEOUT,
+                    welcomed: false,
+                    done: false,
+                });
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) => return Err(e).context("accepting worker connection"),
+        }
+    }
+    Ok(())
+}
+
+/// Pull readable bytes into the pending connection's assembler; when
+/// the `HELLO` completes, check compatibility and queue the `WELCOME`
+/// (or send the rejection and fail the run).
+fn handshake_read(
+    p: &mut Pending,
+    server_hello: &Hello,
+    welcome_for: &dyn Fn(usize) -> String,
+) -> Result<()> {
+    let mut buf = [0u8; 4096];
+    loop {
+        match p.stream.read(&mut buf) {
+            Ok(0) => {
+                bail!("reading HELLO from connection {}: {:#}", p.node, p.asm.eof_error())
+            }
+            Ok(n) => {
+                p.asm
+                    .feed(&buf[..n])
+                    .with_context(|| format!("reading HELLO from connection {}", p.node))?;
+                if let Some(frame) = p.asm.next_frame() {
+                    let worker_hello = Hello::decode(&frame)?;
+                    if let Err(e) = check_compat(&worker_hello, server_hello) {
+                        // Failure path: a short blocking write is fine,
+                        // the run is over either way.
+                        let reject =
+                            Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string();
+                        let _ = p.stream.set_nonblocking(false);
+                        let _ = p.stream.set_write_timeout(Some(HANDSHAKE_TIMEOUT));
+                        let _ = write_frame(&mut p.stream, reject.as_bytes());
+                        let _ = p.stream.shutdown(Shutdown::Both);
+                        return Err(
+                            e.push_context(format!("connection {} failed the handshake", p.node))
+                        );
+                    }
+                    let welcome = welcome_for(p.node).into_bytes();
+                    p.outbox.extend(&(welcome.len() as u32).to_be_bytes());
+                    p.outbox.extend(welcome.iter());
+                    p.welcomed = true;
+                    return Ok(());
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => {
+                return Err(e).context(format!("reading HELLO from connection {}", p.node))
+            }
+        }
+    }
+}
+
+/// Flush as much of the queued `WELCOME` as the socket accepts; marks
+/// the handshake done once the outbox drains.
+fn handshake_flush(p: &mut Pending) -> Result<()> {
+    while !p.outbox.is_empty() {
+        let (head, _) = p.outbox.as_slices();
+        match p.stream.write(head) {
+            Ok(0) => bail!("connection {} closed while flushing WELCOME", p.node),
+            Ok(n) => {
+                p.outbox.drain(..n);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => {
+                return Err(e).context(format!("sending WELCOME to node {}", p.node))
+            }
+        }
+    }
+    p.done = true;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Data plane
+// ---------------------------------------------------------------------------
+
+/// One post-handshake connection in the event loop.
+struct Conn {
+    stream: TcpStream,
+    asm: FrameAssembler,
+    /// Framed bytes queued for this peer (at most one frame — `send`
+    /// drains it before returning).
+    outbox: VecDeque<u8>,
+    /// When the in-flight inbound frame started, for [`FRAME_DEADLINE`].
+    frame_started: Option<Instant>,
+    /// First terminal error; the connection is out of the poll set.
+    dead: Option<String>,
+}
+
+/// The poll backend's shared state: every accepted connection, pumped
+/// by whichever [`PollChannel`] operation is currently blocked. Only
+/// the single protocol thread ever locks it.
+pub(crate) struct Mux {
+    conns: Vec<Conn>,
+}
+
+impl Mux {
+    fn new(streams: Vec<(TcpStream, FrameAssembler)>) -> Mux {
+        let conns = streams
+            .into_iter()
+            .map(|(stream, asm)| {
+                let frame_started = if asm.mid_frame() { Some(Instant::now()) } else { None };
+                Conn { stream, asm, outbox: VecDeque::new(), frame_started, dead: None }
+            })
+            .collect();
+        Mux { conns }
+    }
+
+    /// One event-loop cycle: poll every live connection (write interest
+    /// only where an outbox is queued), service the ready ones, then
+    /// sweep the per-frame deadlines. Returns whether any byte moved.
+    fn pump(&mut self, wait: Duration) -> Result<bool> {
+        let mut fds: Vec<PollFd> = Vec::with_capacity(self.conns.len());
+        let mut which: Vec<usize> = Vec::with_capacity(self.conns.len());
+        for (i, c) in self.conns.iter().enumerate() {
+            if c.dead.is_some() {
+                continue;
+            }
+            let mut events = POLLIN;
+            if !c.outbox.is_empty() {
+                events |= POLLOUT;
+            }
+            fds.push(PollFd { fd: c.stream.as_raw_fd(), events, revents: 0 });
+            which.push(i);
+        }
+        if fds.is_empty() {
+            return Ok(false); // every connection dead; callers report it
+        }
+        let ready = poll_once(&mut fds, wait)?;
+        let mut progressed = false;
+        if ready > 0 {
+            for (k, fd) in fds.iter().enumerate() {
+                if fd.revents != 0 {
+                    progressed |= self.service(which[k]);
+                }
+            }
+        }
+        let now = Instant::now();
+        for c in &mut self.conns {
+            let trickling = c.dead.is_none()
+                && c.asm.mid_frame()
+                && c.frame_started.is_some_and(|t0| now.duration_since(t0) >= FRAME_DEADLINE);
+            if trickling {
+                c.dead = Some(format!(
+                    "frame incomplete after {FRAME_DEADLINE:?} — \
+                     whole-frame deadline exceeded"
+                ));
+            }
+        }
+        Ok(progressed)
+    }
+
+    /// Service one ready connection: flush its outbox, then drain its
+    /// readable bytes into the assembler. Errors land in `dead` — the
+    /// protocol loop reports them on the next operation against the
+    /// node, like the reader-thread backend.
+    fn service(&mut self, i: usize) -> bool {
+        let c = &mut self.conns[i];
+        let mut progressed = false;
+        while !c.outbox.is_empty() {
+            let (head, _) = c.outbox.as_slices();
+            match c.stream.write(head) {
+                Ok(0) => {
+                    c.dead = Some("connection closed while writing".into());
+                    return progressed;
+                }
+                Ok(n) => {
+                    c.outbox.drain(..n);
+                    progressed = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    c.dead = Some(e.to_string());
+                    return progressed;
+                }
+            }
+        }
+        let mut buf = [0u8; 64 * 1024];
+        loop {
+            match c.stream.read(&mut buf) {
+                Ok(0) => {
+                    c.dead = Some(format!("{:#}", c.asm.eof_error()));
+                    break;
+                }
+                Ok(n) => {
+                    progressed = true;
+                    let before = c.asm.frames_completed();
+                    if let Err(e) = c.asm.feed(&buf[..n]) {
+                        c.dead = Some(format!("{e:#}"));
+                        break;
+                    }
+                    if c.asm.mid_frame() {
+                        // A fresh partial frame (or continued one):
+                        // restart the clock only at a frame boundary.
+                        if c.asm.frames_completed() > before || c.frame_started.is_none() {
+                            c.frame_started = Some(Instant::now());
+                        }
+                    } else {
+                        c.frame_started = None;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    c.dead = Some(e.to_string());
+                    break;
+                }
+            }
+        }
+        progressed
+    }
+}
+
+/// Wrap handshaken streams into per-node [`Channel`]s over one shared
+/// [`Mux`]; the second return is the teardown handle for
+/// [`drain_and_shutdown`].
+pub(crate) fn data_plane(
+    streams: Vec<(TcpStream, FrameAssembler)>,
+) -> (Vec<Box<dyn Channel>>, Arc<Mutex<Mux>>) {
+    let nodes = streams.len();
+    let mux = Arc::new(Mutex::new(Mux::new(streams)));
+    let channels = (0..nodes)
+        .map(|node| Box::new(PollChannel { node, mux: Arc::clone(&mux) }) as Box<dyn Channel>)
+        .collect();
+    (channels, mux)
+}
+
+/// Flush every remaining outbox (bounded — error paths may leave the
+/// final frames queued), then shut every socket down so blocked peers
+/// error out instead of hanging.
+pub(crate) fn drain_and_shutdown(mux: &Arc<Mutex<Mux>>) {
+    if let Ok(mut m) = mux.lock() {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while Instant::now() < deadline {
+            let queued = m.conns.iter().any(|c| c.dead.is_none() && !c.outbox.is_empty());
+            if !queued || m.pump(POLL_TICK).is_err() {
+                break;
+            }
+        }
+        for c in &m.conns {
+            let _ = c.stream.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+/// The poll backend's per-node [`Channel`] facade. `recv` and `send`
+/// pump the shared event loop while they wait, so *every* node's
+/// traffic progresses regardless of which node the protocol is blocked
+/// on — the property the reader threads provided, without the threads.
+pub(crate) struct PollChannel {
+    node: usize,
+    mux: Arc<Mutex<Mux>>,
+}
+
+impl Channel for PollChannel {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        let mut mux = self.mux.lock().map_err(|_| anyhow!("cluster mux poisoned"))?;
+        {
+            let c = &mut mux.conns[self.node];
+            if let Some(e) = &c.dead {
+                bail!("sending to node {}: connection lost: {e}", self.node);
+            }
+            if frame.len() > u32::MAX as usize {
+                bail!("frame of {} bytes exceeds the u32 length prefix", frame.len());
+            }
+            c.outbox.extend(&(frame.len() as u32).to_be_bytes());
+            c.outbox.extend(frame.iter());
+        }
+        // Blocking-send semantics with backpressure: pump until this
+        // node's outbox drains, failing after WRITE_TIMEOUT without a
+        // byte of progress toward this peer.
+        let mut last_progress = Instant::now();
+        loop {
+            let queued = mux.conns[self.node].outbox.len();
+            if queued == 0 {
+                return Ok(());
+            }
+            if let Some(e) = &mux.conns[self.node].dead {
+                bail!("sending to node {}: connection lost: {e}", self.node);
+            }
+            if last_progress.elapsed() >= WRITE_TIMEOUT {
+                bail!(
+                    "sending to node {}: write stalled for {WRITE_TIMEOUT:?} — \
+                     peer not draining",
+                    self.node
+                );
+            }
+            mux.pump(POLL_TICK)?;
+            if mux.conns[self.node].outbox.len() < queued {
+                last_progress = Instant::now();
+            }
+        }
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        let mut mux = self.mux.lock().map_err(|_| anyhow!("cluster mux poisoned"))?;
+        let deadline = Instant::now() + READ_TIMEOUT;
+        loop {
+            if let Some(frame) = mux.conns[self.node].asm.next_frame() {
+                return Ok(frame);
+            }
+            if let Some(e) = &mux.conns[self.node].dead {
+                bail!("node {}: connection lost: {e}", self.node);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!("node {}: no frame within {READ_TIMEOUT:?}", self.node);
+            }
+            let wait = deadline.duration_since(now).min(POLL_TICK);
+            mux.pump(wait)?;
+        }
+    }
+}

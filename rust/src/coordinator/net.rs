@@ -6,13 +6,23 @@
 //! socket-shaped — one end of a reliable, ordered, message-framed
 //! duplex link. This module supplies the real thing:
 //!
-//! * [`read_frame`] / [`write_frame`] — the length-delimited framing
-//!   codec over any [`std::io::Read`] / [`std::io::Write`]: a 4-byte
-//!   big-endian length prefix followed by that many payload bytes. The
-//!   reader enforces a `max_frame_bytes` cap **against the prefix,
-//!   before allocating** — TCP bytes are untrusted in a way in-process
+//! * [`FrameAssembler`] — the resumable core of the framing codec: a
+//!   per-connection state machine that consumes bytes in whatever
+//!   chunks they arrive (one `feed` per nonblocking read on the poll
+//!   backend, exact-sized blocking reads on the thread backend) and
+//!   emits completed frames. The `max_frame_bytes` cap is enforced
+//!   **against the 4-byte big-endian length prefix, before
+//!   allocating** — TCP bytes are untrusted in a way in-process
 //!   loopback frames never were, and a hostile peer must not be able to
 //!   make the server allocate gigabytes with five bytes of input.
+//! * [`read_frame`] / [`read_frame_deadline`] / [`write_frame`] — the
+//!   blocking entry points over any [`std::io::Read`] /
+//!   [`std::io::Write`]. `read_frame_deadline` additionally enforces a
+//!   **whole-frame deadline**: the socket read timeout resets on every
+//!   byte, so without it a peer trickling one byte per 59 s could hold
+//!   a connection forever. The deadline is checked between reads, so
+//!   the worst-case hold time is `deadline` plus one socket read
+//!   timeout — bounded either way.
 //! * [`TcpChannel`] — a [`super::transport::Channel`] over one
 //!   [`TcpStream`], with `TCP_NODELAY` and read/write timeouts so a
 //!   silent peer turns into a descriptive error instead of a hung
@@ -42,9 +52,10 @@
 //! after the handshake is the binary wire protocol of
 //! [`super::transport`], one bitstream message per frame.
 
+use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -53,7 +64,11 @@ use crate::util::json::Json;
 
 /// Version of the cluster wire protocol; bumped on any frame-format or
 /// handshake change. Checked exactly (no wildcard) on both sides.
-pub const PROTOCOL_VERSION: u64 = 1;
+///
+/// v2: `proto` travels as a JSON **string** in `HELLO`/`WELCOME` — a
+/// u64 does not fit an f64 JSON number losslessly above 2^53, the same
+/// reason [`super::cluster::RunConfig`] already stringifies its seed.
+pub const PROTOCOL_VERSION: u64 = 2;
 
 /// Data-plane read timeout: how long a blocked `recv` waits for the
 /// peer before failing the run. Generous — a sync-round barrier
@@ -68,6 +83,12 @@ pub const WRITE_TIMEOUT: Duration = Duration::from_secs(60);
 /// Handshake read timeout: a freshly accepted connection must present
 /// its `HELLO` promptly or the server gives up on it.
 pub const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Whole-frame deadline on the data plane: once the first byte of a
+/// frame has arrived, the rest must follow within this budget. The
+/// per-`read` socket timeout ([`READ_TIMEOUT`]) resets on every byte,
+/// so it alone cannot bound a trickling peer — this deadline can.
+pub const FRAME_DEADLINE: Duration = Duration::from_secs(60);
 
 // ---------------------------------------------------------------------------
 // Length-delimited framing
@@ -88,6 +109,178 @@ pub fn write_frame<W: Write>(w: &mut W, frame: &[u8]) -> Result<()> {
     Ok(())
 }
 
+/// Where an in-progress frame stands: collecting the 4-byte length
+/// prefix, or filling the (cap-checked, pre-allocated) payload.
+enum AsmState {
+    Prefix { buf: [u8; 4], got: usize },
+    Payload { buf: Vec<u8>, filled: usize },
+}
+
+/// Resumable frame reassembly: a per-connection state machine that
+/// accepts bytes in arbitrary chunks and emits completed frames.
+///
+/// Both I/O backends share it, so the framing invariants hold once:
+/// the `max_frame_bytes` cap is checked **against the length prefix
+/// before the payload buffer is allocated**, partial frames report
+/// their progress on EOF, and a chunk spanning several frames yields
+/// them all in order. The poll backend feeds it whatever a nonblocking
+/// `read` returned ([`FrameAssembler::feed`]); the blocking paths pull
+/// exactly-sized reads through it ([`FrameAssembler::fill_from`], which
+/// never reads past the current frame's end).
+pub struct FrameAssembler {
+    max_frame_bytes: usize,
+    state: AsmState,
+    ready: VecDeque<Vec<u8>>,
+    frames_completed: u64,
+}
+
+impl FrameAssembler {
+    /// A fresh assembler enforcing `max_frame_bytes` on every frame.
+    pub fn new(max_frame_bytes: usize) -> FrameAssembler {
+        FrameAssembler {
+            max_frame_bytes,
+            state: AsmState::Prefix { buf: [0; 4], got: 0 },
+            ready: VecDeque::new(),
+            frames_completed: 0,
+        }
+    }
+
+    /// Consume one chunk of received bytes, buffering any completed
+    /// frames (pop them with [`FrameAssembler::next_frame`]). Errors on
+    /// an oversized length prefix — the connection is then poisoned and
+    /// must be dropped (resynchronizing an untrusted byte stream after
+    /// a framing violation is not meaningful).
+    pub fn feed(&mut self, mut chunk: &[u8]) -> Result<()> {
+        while !chunk.is_empty() {
+            let mut completed_len = None;
+            match &mut self.state {
+                AsmState::Prefix { buf, got } => {
+                    let take = chunk.len().min(4 - *got);
+                    buf[*got..*got + take].copy_from_slice(&chunk[..take]);
+                    *got += take;
+                    chunk = &chunk[take..];
+                    if *got == 4 {
+                        completed_len = Some(u32::from_be_bytes(*buf) as usize);
+                    }
+                }
+                AsmState::Payload { buf, filled } => {
+                    let take = chunk.len().min(buf.len() - *filled);
+                    buf[*filled..*filled + take].copy_from_slice(&chunk[..take]);
+                    *filled += take;
+                    chunk = &chunk[take..];
+                    if *filled == buf.len() {
+                        let frame = std::mem::take(buf);
+                        self.complete(frame);
+                    }
+                }
+            }
+            if let Some(len) = completed_len {
+                self.begin_payload(len)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// One blocking read, sized to exactly what the current frame still
+    /// needs — never past its end, so interleaving with other readers
+    /// of the same stream stays frame-aligned. Returns the byte count
+    /// (0 = EOF). Call [`FrameAssembler::next_frame`] first; a call
+    /// with a completed frame still buffered reads nothing.
+    pub fn fill_from<R: Read>(&mut self, r: &mut R) -> Result<usize> {
+        let (n, completed_len) = match &mut self.state {
+            AsmState::Prefix { buf, got } => {
+                if !self.ready.is_empty() {
+                    return Ok(0);
+                }
+                let n = r.read(&mut buf[*got..]).context("reading frame length")?;
+                *got += n;
+                let len =
+                    if *got == 4 { Some(u32::from_be_bytes(*buf) as usize) } else { None };
+                (n, len)
+            }
+            AsmState::Payload { buf, filled } => {
+                let n = r.read(&mut buf[*filled..]).context("reading frame payload")?;
+                *filled += n;
+                if *filled == buf.len() {
+                    let frame = std::mem::take(buf);
+                    self.complete(frame);
+                }
+                (n, None)
+            }
+        };
+        if let Some(len) = completed_len {
+            self.begin_payload(len)?;
+        }
+        Ok(n)
+    }
+
+    fn begin_payload(&mut self, len: usize) -> Result<()> {
+        if len > self.max_frame_bytes {
+            bail!(
+                "incoming frame declares {len} bytes, over the max_frame_bytes \
+                 cap of {} — refusing to allocate",
+                self.max_frame_bytes
+            );
+        }
+        if len == 0 {
+            self.complete(Vec::new());
+        } else {
+            self.state = AsmState::Payload { buf: vec![0u8; len], filled: 0 };
+        }
+        Ok(())
+    }
+
+    fn complete(&mut self, frame: Vec<u8>) {
+        self.state = AsmState::Prefix { buf: [0; 4], got: 0 };
+        self.frames_completed += 1;
+        self.ready.push_back(frame);
+    }
+
+    /// Pop the next completed frame, in arrival order.
+    pub fn next_frame(&mut self) -> Option<Vec<u8>> {
+        self.ready.pop_front()
+    }
+
+    /// True while a frame is partially assembled (some bytes consumed,
+    /// frame not complete) — the state per-frame deadlines key on.
+    pub fn mid_frame(&self) -> bool {
+        match &self.state {
+            AsmState::Prefix { got, .. } => *got > 0,
+            AsmState::Payload { .. } => true,
+        }
+    }
+
+    /// Total frames completed over the assembler's lifetime.
+    pub fn frames_completed(&self) -> u64 {
+        self.frames_completed
+    }
+
+    /// The descriptive error for an EOF in the current state.
+    pub fn eof_error(&self) -> anyhow::Error {
+        match &self.state {
+            AsmState::Prefix { got: 0, .. } => anyhow!("connection closed by peer"),
+            AsmState::Prefix { got, .. } => {
+                anyhow!("connection closed mid-frame ({got} of 4 length-prefix bytes)")
+            }
+            AsmState::Payload { buf, filled } => anyhow!(
+                "connection closed mid-frame ({filled} of {} payload bytes)",
+                buf.len()
+            ),
+        }
+    }
+
+    /// Human-readable progress of the in-flight frame, for deadline
+    /// errors.
+    fn progress(&self) -> String {
+        match &self.state {
+            AsmState::Prefix { got, .. } => format!("{got} of 4 length-prefix bytes"),
+            AsmState::Payload { buf, filled } => {
+                format!("{filled} of {} payload bytes", buf.len())
+            }
+        }
+    }
+}
+
 /// Read one length-delimited frame, enforcing `max_frame_bytes`
 /// **against the length prefix before allocating** the payload buffer.
 ///
@@ -98,35 +291,41 @@ pub fn write_frame<W: Write>(w: &mut W, frame: &[u8]) -> Result<()> {
 /// one byte per read still assembles the frame (reads loop until the
 /// declared length arrives or the socket's read timeout trips).
 pub fn read_frame<R: Read>(r: &mut R, max_frame_bytes: usize) -> Result<Vec<u8>> {
-    let mut prefix = [0u8; 4];
-    let mut got = 0usize;
-    while got < 4 {
-        let n = r.read(&mut prefix[got..]).context("reading frame length")?;
+    read_frame_deadline(r, max_frame_bytes, None)
+}
+
+/// [`read_frame`] with a **whole-frame deadline**: once the first byte
+/// of the frame has been consumed, the rest must arrive within
+/// `deadline` or the read fails descriptively. This closes the
+/// slow-loris hole the per-`read` socket timeout leaves open (it
+/// resets on every byte). The deadline is checked between reads, so a
+/// blocking reader's worst-case hold time is `deadline` plus one
+/// socket read timeout.
+pub fn read_frame_deadline<R: Read>(
+    r: &mut R,
+    max_frame_bytes: usize,
+    deadline: Option<Duration>,
+) -> Result<Vec<u8>> {
+    let mut asm = FrameAssembler::new(max_frame_bytes);
+    let started = Instant::now();
+    loop {
+        if let Some(frame) = asm.next_frame() {
+            return Ok(frame);
+        }
+        let n = asm.fill_from(r)?;
         if n == 0 {
-            if got == 0 {
-                bail!("connection closed by peer");
+            return Err(asm.eof_error());
+        }
+        if let Some(limit) = deadline {
+            if asm.mid_frame() && started.elapsed() >= limit {
+                bail!(
+                    "frame incomplete ({}) after {:?} — whole-frame deadline exceeded",
+                    asm.progress(),
+                    limit
+                );
             }
-            bail!("connection closed mid-frame ({got} of 4 length-prefix bytes)");
         }
-        got += n;
     }
-    let len = u32::from_be_bytes(prefix) as usize;
-    if len > max_frame_bytes {
-        bail!(
-            "incoming frame declares {len} bytes, over the max_frame_bytes \
-             cap of {max_frame_bytes} — refusing to allocate"
-        );
-    }
-    let mut frame = vec![0u8; len];
-    let mut filled = 0usize;
-    while filled < len {
-        let n = r.read(&mut frame[filled..]).context("reading frame payload")?;
-        if n == 0 {
-            bail!("connection closed mid-frame ({filled} of {len} payload bytes)");
-        }
-        filled += n;
-    }
-    Ok(frame)
 }
 
 // ---------------------------------------------------------------------------
@@ -177,7 +376,7 @@ impl Channel for TcpChannel {
     }
 
     fn recv(&mut self) -> Result<Vec<u8>> {
-        read_frame(&mut self.stream, self.max_frame_bytes)
+        read_frame_deadline(&mut self.stream, self.max_frame_bytes, Some(FRAME_DEADLINE))
     }
 }
 
@@ -290,10 +489,12 @@ impl Hello {
         }
     }
 
-    /// Serialize to the `HELLO` frame payload.
+    /// Serialize to the `HELLO` frame payload. `proto` goes out as a
+    /// string: a u64 above 2^53 would round through a JSON f64 number
+    /// (the same reason `RunConfig` stringifies its seed).
     pub fn encode(&self) -> Vec<u8> {
         Json::obj(vec![
-            ("proto", Json::Num(self.proto as f64)),
+            ("proto", Json::str(self.proto.to_string())),
             ("dim", Json::Num(self.dim as f64)),
             ("method", Json::str(self.method.clone())),
             ("batch", Json::Num(self.batch as f64)),
@@ -307,8 +508,11 @@ impl Hello {
     pub fn decode(frame: &[u8]) -> Result<Hello> {
         let text = std::str::from_utf8(frame).context("HELLO frame is not UTF-8")?;
         let j = Json::parse(text).context("HELLO frame is not JSON")?;
+        let proto_str = j.req("proto")?.as_str().context("HELLO proto must be a string")?;
         Ok(Hello {
-            proto: j.req("proto")?.as_usize()? as u64,
+            proto: proto_str
+                .parse::<u64>()
+                .with_context(|| format!("HELLO proto '{proto_str}' is not a u64"))?,
             dim: j.req("dim")?.as_usize()?,
             method: j.req("method")?.as_str()?.to_string(),
             batch: j.req("batch")?.as_usize()?,
@@ -465,10 +669,140 @@ mod tests {
             let msg = format!("{err:#}");
             assert!(msg.contains(needle), "expected '{needle}' in '{msg}'");
         };
-        reject(&|w| w.proto = 2, "protocol version mismatch");
+        reject(&|w| w.proto = PROTOCOL_VERSION + 1, "protocol version mismatch");
         reject(&|w| w.dim = 64, "dim mismatch");
         reject(&|w| w.method = "sgd".into(), "method mismatch");
         reject(&|w| w.batch = 9, "batch mismatch");
         reject(&|w| w.sync_every = 9, "sync-interval mismatch");
+    }
+
+    #[test]
+    fn hello_proto_survives_above_f64_mantissa_range() {
+        // 2^60 + 3 is not representable as an f64: a numeric JSON
+        // round-trip would silently land on a neighboring even value.
+        let mut h = Hello::any();
+        h.proto = (1u64 << 60) + 3;
+        let decoded = Hello::decode(&h.encode()).unwrap();
+        assert_eq!(decoded.proto, (1u64 << 60) + 3);
+        assert_eq!(decoded, h);
+    }
+
+    #[test]
+    fn assembler_reassembles_across_arbitrary_chunk_boundaries() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"alpha").unwrap();
+        write_frame(&mut wire, b"").unwrap();
+        write_frame(&mut wire, &[3u8; 257]).unwrap();
+        // Every chunk size must yield the same three frames, including
+        // sizes that split the length prefix and span frame boundaries.
+        for chunk in [1usize, 2, 3, 4, 5, 7, 64, wire.len()] {
+            let mut asm = FrameAssembler::new(1024);
+            for piece in wire.chunks(chunk) {
+                asm.feed(piece).unwrap();
+            }
+            assert_eq!(asm.next_frame().unwrap(), b"alpha", "chunk={chunk}");
+            assert_eq!(asm.next_frame().unwrap(), Vec::<u8>::new(), "chunk={chunk}");
+            assert_eq!(asm.next_frame().unwrap(), vec![3u8; 257], "chunk={chunk}");
+            assert!(asm.next_frame().is_none());
+            assert!(!asm.mid_frame(), "chunk={chunk}");
+            assert_eq!(asm.frames_completed(), 3);
+        }
+    }
+
+    #[test]
+    fn assembler_yields_multiple_frames_from_one_chunk() {
+        let mut wire = Vec::new();
+        for i in 0..5u8 {
+            write_frame(&mut wire, &[i; 9]).unwrap();
+        }
+        let mut asm = FrameAssembler::new(64);
+        asm.feed(&wire).unwrap();
+        for i in 0..5u8 {
+            assert_eq!(asm.next_frame().unwrap(), vec![i; 9]);
+        }
+        assert!(asm.next_frame().is_none());
+    }
+
+    #[test]
+    fn assembler_rejects_oversized_prefix_mid_stream() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"ok").unwrap();
+        wire.extend_from_slice(&u32::MAX.to_be_bytes());
+        let mut asm = FrameAssembler::new(64);
+        let err = asm.feed(&wire).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("refusing to allocate"), "{msg}");
+        // The frame completed before the violation is still delivered.
+        assert_eq!(asm.next_frame().unwrap(), b"ok");
+    }
+
+    #[test]
+    fn assembler_eof_errors_track_state() {
+        let asm = FrameAssembler::new(64);
+        assert!(format!("{:#}", asm.eof_error()).contains("closed by peer"));
+        let mut asm = FrameAssembler::new(64);
+        asm.feed(&[0, 0]).unwrap();
+        assert!(asm.mid_frame());
+        assert!(format!("{:#}", asm.eof_error()).contains("length-prefix"));
+        let mut asm = FrameAssembler::new(64);
+        asm.feed(&[0, 0, 0, 10, 1, 2, 3]).unwrap();
+        let msg = format!("{:#}", asm.eof_error());
+        assert!(msg.contains("3 of 10 payload bytes"), "{msg}");
+    }
+
+    /// A reader that trickles one payload byte per `read`, pausing
+    /// between bytes — the slow-loris shape the per-read socket timeout
+    /// cannot bound.
+    struct TricklingReader {
+        wire: Vec<u8>,
+        pos: usize,
+        pause: Duration,
+    }
+
+    impl Read for TricklingReader {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.wire.len() || out.is_empty() {
+                return Ok(0);
+            }
+            if self.pos > 0 {
+                std::thread::sleep(self.pause);
+            }
+            out[0] = self.wire[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn whole_frame_deadline_stops_a_trickling_writer() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &[8u8; 64]).unwrap();
+        // One byte per 5 ms against a 25 ms whole-frame budget: the
+        // per-read progress keeps every individual read "alive", but
+        // the deadline trips mid-frame.
+        let mut r = TricklingReader { wire: wire.clone(), pos: 0, pause: Duration::from_millis(5) };
+        let err = read_frame_deadline(&mut r, 1024, Some(Duration::from_millis(25))).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("deadline"), "{msg}");
+        assert!(msg.contains("mid-frame") || msg.contains("incomplete"), "{msg}");
+        // The same trickle with no deadline assembles the frame fine.
+        let mut r = TricklingReader { wire, pos: 0, pause: Duration::from_millis(1) };
+        assert_eq!(read_frame(&mut r, 1024).unwrap(), vec![8u8; 64]);
+    }
+
+    #[test]
+    fn deadline_does_not_fire_between_frames() {
+        // A prompt frame passes under a deadline, and silence at the
+        // frame *boundary* afterwards is an EOF ("closed by peer"),
+        // never a deadline error — the deadline only arms mid-frame.
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"prompt").unwrap();
+        let mut r: &[u8] = &wire;
+        let got = read_frame_deadline(&mut r, 1024, Some(FRAME_DEADLINE)).unwrap();
+        assert_eq!(got, b"prompt");
+        let err = read_frame_deadline(&mut r, 1024, Some(FRAME_DEADLINE)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("closed by peer"), "{msg}");
+        assert!(!msg.contains("deadline"), "{msg}");
     }
 }

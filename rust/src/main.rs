@@ -87,7 +87,9 @@ subcommands:
   serve     cluster parameter server: bind --listen ADDR, accept exactly
             --nodes N workers over TCP, run a ps-sync|ps-async job
             across OS processes (same flags as train minus --topology
-            sequential/shared), print the record + a final: line
+            sequential/shared), print the record + a final: line;
+            --io poll|threads picks the socket-multiplexing backend
+            (poll(2) event loop, default on unix | reader threads)
   worker    cluster worker: dial --connect ADDR (bounded retries via
             --retries), handshake, run the assigned wire protocol;
             --expect-method/--expect-dim/--expect-batch/
@@ -557,7 +559,7 @@ fn print_final_line(rec: &RunRecord) {
 /// `--listen`, waits for `--nodes` TCP workers, and runs the shared
 /// server-protocol half against their sockets.
 fn cmd_serve(args: &Args) -> Result<()> {
-    use memsgd::coordinator::cluster::{ClusterServer, RunConfig};
+    use memsgd::coordinator::cluster::{ClusterServer, IoBackend, RunConfig};
     let which = Which::parse(&args.get_str("dataset", "epsilon"))?;
     let scale = args.get("scale", 20usize)?;
     let seed = args.get("seed", 1u64)?;
@@ -590,11 +592,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         network,
         dim,
     };
-    let server = ClusterServer::bind(&listen, cfg)?;
+    // --io poll|threads: the server's socket-multiplexing backend
+    // (default: poll(2) event loop on unix, reader threads elsewhere).
+    let io = match args.opt_str("io") {
+        Some(s) => IoBackend::parse(&s)?,
+        None => IoBackend::platform_default(),
+    };
+    let server = ClusterServer::bind_with_io(&listen, cfg, io)?;
     println!(
-        "serving on {} — waiting for {nodes} worker(s) (connect with \
+        "serving on {} [io={}] — waiting for {nodes} worker(s) (connect with \
          `memsgd worker --connect <addr>`)",
-        server.local_addr()?
+        server.local_addr()?,
+        io.name()
     );
     // Reject unknown flags before blocking on the accept loop.
     args.finish()?;

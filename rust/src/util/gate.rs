@@ -144,6 +144,14 @@ pub fn tcp_roundtrip_qsgd_case() -> String {
     "tcp roundtrip qsgd   s=16 d=2000".to_string()
 }
 
+/// Canonical name of the server-dispatch case: one poll-readiness
+/// chunk carrying 8 framed top-10 uploads pushed through the resumable
+/// `FrameAssembler` and the typed wire decoder — the per-wakeup cost
+/// of the event-driven cluster server's data plane.
+pub fn server_dispatch_case() -> String {
+    "server dispatch 8up  top_10 d=47236".to_string()
+}
+
 /// A fresh-run-only invariant: `slow_case` must be at least `min_ratio`
 /// × slower than `fast_case` (both in the same bench).
 #[derive(Clone, Debug)]

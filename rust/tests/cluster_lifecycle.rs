@@ -6,18 +6,29 @@
 //!   `run_worker` peers (real TCP connections, separate threads standing
 //!   in for separate processes — the byte streams are identical) must
 //!   reproduce the simulated engines bit for bit on both PS topologies.
+//! * **Backend matrix** — every lifecycle and failure case runs under
+//!   each server I/O backend ([`IoBackend::Poll`]'s event loop and
+//!   [`IoBackend::Threads`]'s reader threads): the backends must be
+//!   protocol-indistinguishable, down to the error text.
 //! * **Lifecycle** — handshake version/config mismatches are rejected
 //!   descriptively on both sides, connect retry gives up after its
 //!   bound, a worker dropping mid-round fails the server cleanly, and a
 //!   premature/double `SHUTDOWN` fails the worker cleanly — in every
 //!   case the run *returns* (no hung barrier) and joins its threads.
+//! * **Stress** — a 32-worker run terminates under a watchdog, and the
+//!   poll backend serves it without spawning a single per-connection
+//!   reader thread.
 
 use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::{Mutex, MutexGuard};
 use std::thread;
 use std::time::Duration;
 
 use memsgd::compress::elias::BitWriter;
-use memsgd::coordinator::cluster::{run_worker, ClusterServer, RunConfig};
+use memsgd::coordinator::cluster::{
+    reader_threads_spawned, run_worker, ClusterServer, IoBackend, RunConfig,
+};
 use memsgd::coordinator::net::{read_frame, write_frame, Backoff, Hello, PROTOCOL_VERSION};
 use memsgd::coordinator::transport::encode_shutdown;
 use memsgd::coordinator::{Experiment, LocalUpdate, MethodSpec, Topology};
@@ -47,6 +58,25 @@ fn test_config(topology: &str, nodes: usize) -> RunConfig {
     }
 }
 
+/// The backends every case runs under: both where `poll(2)` exists,
+/// the threaded fallback alone elsewhere.
+fn backends() -> Vec<IoBackend> {
+    if cfg!(unix) {
+        vec![IoBackend::Poll, IoBackend::Threads]
+    } else {
+        vec![IoBackend::Threads]
+    }
+}
+
+/// Tests that assert on the process-global [`reader_threads_spawned`]
+/// counter (or bump it by running a `Threads`-backend cluster) hold
+/// this guard so parallel test threads cannot skew each other's deltas.
+static READER_SERIAL: Mutex<()> = Mutex::new(());
+
+fn reader_serial() -> MutexGuard<'static, ()> {
+    READER_SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Snappy retries for tests — the listener already exists when workers
 /// dial, so this only matters on the failure paths.
 fn fast_backoff() -> Backoff {
@@ -58,10 +88,11 @@ fn fast_backoff() -> Backoff {
 }
 
 /// Run a full serve + N-worker cluster round trip over localhost TCP
-/// and hand back the server record plus each worker's (node, bits).
-fn cluster_run(cfg: RunConfig) -> (RunRecord, Vec<(usize, u64)>) {
+/// under the given I/O backend and hand back the server record plus
+/// each worker's (node, bits).
+fn cluster_run(cfg: RunConfig, io: IoBackend) -> (RunRecord, Vec<(usize, u64)>) {
     let nodes = cfg.nodes;
-    let server = ClusterServer::bind("127.0.0.1:0", cfg).unwrap();
+    let server = ClusterServer::bind_with_io("127.0.0.1:0", cfg, io).unwrap();
     let addr = server.local_addr().unwrap().to_string();
     let server_handle = thread::spawn(move || server.run());
     let workers: Vec<_> = (0..nodes)
@@ -110,89 +141,117 @@ fn assert_cluster_matches_sim(sim: &RunRecord, cluster: &RunRecord, label: &str)
 
 #[test]
 fn multiprocess_sync_run_reproduces_the_simulated_trajectory() {
+    let _serial = reader_serial();
     let cfg = test_config("ps-sync", 2);
-    let (record, stats) = cluster_run(cfg.clone());
     let sim = simulated_twin(&cfg, Topology::ParamServerSync { nodes: 2 });
-    assert_cluster_matches_sim(&sim, &record, "ps-sync cluster");
+    for io in backends() {
+        let label = format!("ps-sync cluster [{}]", io.name());
+        let (record, stats) = cluster_run(cfg.clone(), io);
+        assert_cluster_matches_sim(&sim, &record, &label);
 
-    // Node ids are assigned in accept order: exactly 0..nodes, each
-    // worker reporting the accounted upload bits the server tallied.
-    let mut nodes: Vec<usize> = stats.iter().map(|&(n, _)| n).collect();
-    nodes.sort_unstable();
-    assert_eq!(nodes, vec![0, 1]);
-    let uploaded: u64 = stats.iter().map(|&(_, b)| b).sum();
-    assert!(uploaded > 0, "workers uploaded nothing");
-    assert!(uploaded <= record.total_bits, "worker bits exceed the accounted total");
+        // Node ids are assigned in accept order: exactly 0..nodes, each
+        // worker reporting the accounted upload bits the server tallied.
+        let mut nodes: Vec<usize> = stats.iter().map(|&(n, _)| n).collect();
+        nodes.sort_unstable();
+        assert_eq!(nodes, vec![0, 1], "{label}");
+        let uploaded: u64 = stats.iter().map(|&(_, b)| b).sum();
+        assert!(uploaded > 0, "{label}: workers uploaded nothing");
+        assert!(
+            uploaded <= record.total_bits,
+            "{label}: worker bits exceed the accounted total"
+        );
+    }
 }
 
 #[test]
 fn multiprocess_async_run_reproduces_the_simulated_trajectory() {
+    let _serial = reader_serial();
     let cfg = test_config("ps-async", 2);
-    let (record, stats) = cluster_run(cfg.clone());
     let sim = simulated_twin(
         &cfg,
         Topology::ParamServerAsync { nodes: 2, net: NetworkModel::eth_1g() },
     );
-    assert_cluster_matches_sim(&sim, &record, "ps-async cluster");
-    for key in ["mean_staleness", "max_staleness", "sim_seconds", "link_utilization"] {
-        assert_eq!(sim.extra[key], record.extra[key], "ps-async cluster: {key}");
+    for io in backends() {
+        let label = format!("ps-async cluster [{}]", io.name());
+        let (record, stats) = cluster_run(cfg.clone(), io);
+        assert_cluster_matches_sim(&sim, &record, &label);
+        for key in ["mean_staleness", "max_staleness", "sim_seconds", "link_utilization"] {
+            assert_eq!(sim.extra[key], record.extra[key], "{label}: {key}");
+        }
+        assert_eq!(stats.len(), 2, "{label}");
     }
-    assert_eq!(stats.len(), 2);
 }
 
 #[test]
 fn handshake_version_mismatch_is_rejected_descriptively() {
-    let server = ClusterServer::bind("127.0.0.1:0", test_config("ps-sync", 1)).unwrap();
-    let addr = server.local_addr().unwrap();
-    let server_handle = thread::spawn(move || server.run());
+    for io in backends() {
+        let label = io.name();
+        let server =
+            ClusterServer::bind_with_io("127.0.0.1:0", test_config("ps-sync", 1), io).unwrap();
+        let addr = server.local_addr().unwrap();
+        let server_handle = thread::spawn(move || server.run());
 
-    let mut stream = TcpStream::connect(addr).unwrap();
-    let from_the_future = Hello { proto: 99, ..Hello::any() };
-    write_frame(&mut stream, &from_the_future.encode()).unwrap();
-    let reply = read_frame(&mut stream, 1 << 20).unwrap();
-    let j = Json::parse(std::str::from_utf8(&reply).unwrap()).unwrap();
-    let reason = j.req("error").unwrap().as_str().unwrap().to_string();
-    assert!(
-        reason.contains("protocol version mismatch"),
-        "reject reason not descriptive: {reason}"
-    );
-    assert!(reason.contains("99"), "reject reason omits the offered version: {reason}");
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let from_the_future = Hello { proto: 99, ..Hello::any() };
+        write_frame(&mut stream, &from_the_future.encode()).unwrap();
+        let reply = read_frame(&mut stream, 1 << 20).unwrap();
+        let j = Json::parse(std::str::from_utf8(&reply).unwrap()).unwrap();
+        let reason = j.req("error").unwrap().as_str().unwrap().to_string();
+        assert!(
+            reason.contains("protocol version mismatch"),
+            "[{label}] reject reason not descriptive: {reason}"
+        );
+        assert!(
+            reason.contains("99"),
+            "[{label}] reject reason omits the offered version: {reason}"
+        );
 
-    // The server fails the whole run (and returns — no hung accept
-    // loop, every thread joined inside run()).
-    let err = server_handle.join().unwrap().unwrap_err();
-    let msg = format!("{err:#}");
-    assert!(msg.contains("handshake"), "server error not about the handshake: {msg}");
-    assert!(msg.contains("protocol version mismatch"), "server error lost the cause: {msg}");
+        // The server fails the whole run (and returns — no hung accept
+        // loop, every thread joined inside run()).
+        let err = server_handle.join().unwrap().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("handshake"),
+            "[{label}] server error not about the handshake: {msg}"
+        );
+        assert!(
+            msg.contains("protocol version mismatch"),
+            "[{label}] server error lost the cause: {msg}"
+        );
+    }
 }
 
 #[test]
 fn worker_expectation_mismatch_fails_both_sides() {
-    let server = ClusterServer::bind("127.0.0.1:0", test_config("ps-sync", 1)).unwrap();
-    let addr = server.local_addr().unwrap().to_string();
-    let server_handle = thread::spawn(move || server.run());
+    for io in backends() {
+        let label = io.name();
+        let server =
+            ClusterServer::bind_with_io("127.0.0.1:0", test_config("ps-sync", 1), io).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let server_handle = thread::spawn(move || server.run());
 
-    // This worker insists the cluster run plain SGD; the server is
-    // running memsgd:top_k:1 — a half-compatible cluster would silently
-    // diverge, so both ends must refuse.
-    let expect = Hello { method: "sgd".into(), ..Hello::any() };
-    let worker_err = run_worker(&addr, &expect, &fast_backoff()).unwrap_err();
-    let worker_msg = format!("{worker_err:#}");
-    assert!(
-        worker_msg.contains("server rejected handshake"),
-        "worker error misses the rejection: {worker_msg}"
-    );
-    assert!(
-        worker_msg.contains("method mismatch"),
-        "worker error misses the cause: {worker_msg}"
-    );
+        // This worker insists the cluster run plain SGD; the server is
+        // running memsgd:top_k:1 — a half-compatible cluster would
+        // silently diverge, so both ends must refuse.
+        let expect = Hello { method: "sgd".into(), ..Hello::any() };
+        let worker_err = run_worker(&addr, &expect, &fast_backoff()).unwrap_err();
+        let worker_msg = format!("{worker_err:#}");
+        assert!(
+            worker_msg.contains("server rejected handshake"),
+            "[{label}] worker error misses the rejection: {worker_msg}"
+        );
+        assert!(
+            worker_msg.contains("method mismatch"),
+            "[{label}] worker error misses the cause: {worker_msg}"
+        );
 
-    let server_err = server_handle.join().unwrap().unwrap_err();
-    let server_msg = format!("{server_err:#}");
-    assert!(
-        server_msg.contains("method mismatch"),
-        "server error misses the cause: {server_msg}"
-    );
+        let server_err = server_handle.join().unwrap().unwrap_err();
+        let server_msg = format!("{server_err:#}");
+        assert!(
+            server_msg.contains("method mismatch"),
+            "[{label}] server error misses the cause: {server_msg}"
+        );
+    }
 }
 
 #[test]
@@ -213,27 +272,32 @@ fn connect_retry_gives_up_after_the_bound() {
 
 #[test]
 fn worker_dropping_mid_round_fails_the_server_cleanly() {
-    let server = ClusterServer::bind("127.0.0.1:0", test_config("ps-sync", 1)).unwrap();
-    let addr = server.local_addr().unwrap();
-    let server_handle = thread::spawn(move || server.run());
+    let _serial = reader_serial();
+    for io in backends() {
+        let label = io.name();
+        let server =
+            ClusterServer::bind_with_io("127.0.0.1:0", test_config("ps-sync", 1), io).unwrap();
+        let addr = server.local_addr().unwrap();
+        let server_handle = thread::spawn(move || server.run());
 
-    // Handshake correctly, then vanish before round 0's UPLOAD.
-    let mut stream = TcpStream::connect(addr).unwrap();
-    write_frame(&mut stream, &Hello::any().encode()).unwrap();
-    let welcome = read_frame(&mut stream, 1 << 20).unwrap();
-    let j = Json::parse(std::str::from_utf8(&welcome).unwrap()).unwrap();
-    assert!(j.get("error").is_none(), "handshake unexpectedly rejected");
-    drop(stream);
+        // Handshake correctly, then vanish before round 0's UPLOAD.
+        let mut stream = TcpStream::connect(addr).unwrap();
+        write_frame(&mut stream, &Hello::any().encode()).unwrap();
+        let welcome = read_frame(&mut stream, 1 << 20).unwrap();
+        let j = Json::parse(std::str::from_utf8(&welcome).unwrap()).unwrap();
+        assert!(j.get("error").is_none(), "[{label}] handshake unexpectedly rejected");
+        drop(stream);
 
-    // The server must notice the EOF and fail the run — not sit on the
-    // barrier for a worker that will never upload.
-    let err = server_handle.join().unwrap().unwrap_err();
-    let msg = format!("{err:#}");
-    assert!(msg.contains("node 0"), "server error names no node: {msg}");
-    assert!(
-        msg.contains("connection lost") || msg.contains("connection closed"),
-        "server error misses the disconnect: {msg}"
-    );
+        // The server must notice the EOF and fail the run — not sit on
+        // the barrier for a worker that will never upload.
+        let err = server_handle.join().unwrap().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("node 0"), "[{label}] server error names no node: {msg}");
+        assert!(
+            msg.contains("connection lost") || msg.contains("connection closed"),
+            "[{label}] server error misses the disconnect: {msg}"
+        );
+    }
 }
 
 #[test]
@@ -249,7 +313,7 @@ fn premature_double_shutdown_fails_the_worker_cleanly() {
         let hello = read_frame(&mut stream, 1 << 20).unwrap();
         Hello::decode(&hello).unwrap();
         let welcome = Json::obj(vec![
-            ("proto", Json::Num(PROTOCOL_VERSION as f64)),
+            ("proto", Json::str(PROTOCOL_VERSION.to_string())),
             ("node", Json::Num(0.0)),
             ("config", cfg.to_json()),
         ])
@@ -267,4 +331,54 @@ fn premature_double_shutdown_fails_the_worker_cleanly() {
     let msg = format!("{err:#}");
     assert!(msg.contains("unexpected"), "worker error misses the bogus message: {msg}");
     drop(fake_server.join().unwrap());
+}
+
+/// 32 workers against one server: the run must terminate under a
+/// watchdog on every backend, the poll backend must serve the whole
+/// data plane without spawning a single per-connection reader thread,
+/// and the threads backend must spawn exactly one per node.
+#[test]
+fn stress_32_workers_terminate_without_leaking_reader_threads() {
+    let _serial = reader_serial();
+    let nodes = 32;
+    for io in backends() {
+        let before = reader_threads_spawned();
+        let cfg = test_config("ps-sync", nodes);
+        let (tx, rx) = mpsc::channel();
+        let handle = thread::spawn(move || {
+            tx.send(cluster_run(cfg, io)).ok();
+        });
+        let (record, stats) = match rx.recv_timeout(Duration::from_secs(120)) {
+            Ok(result) => result,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                panic!("32-worker cluster hung past the watchdog [io={}]", io.name())
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // The runner thread panicked before sending — propagate.
+                handle.join().unwrap();
+                unreachable!("runner thread exited without a result");
+            }
+        };
+        handle.join().unwrap();
+
+        let label = format!("32-worker stress [{}]", io.name());
+        assert_eq!(record.steps, 96, "{label}: steps");
+        let mut ids: Vec<usize> = stats.iter().map(|&(n, _)| n).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..nodes).collect::<Vec<_>>(), "{label}: node ids");
+        let uploaded: u64 = stats.iter().map(|&(_, b)| b).sum();
+        assert!(uploaded > 0, "{label}: workers uploaded nothing");
+
+        let spawned = reader_threads_spawned() - before;
+        match io {
+            IoBackend::Poll => assert_eq!(
+                spawned, 0,
+                "{label}: the poll backend must not spawn reader threads"
+            ),
+            IoBackend::Threads => assert_eq!(
+                spawned, nodes,
+                "{label}: one reader thread per node expected"
+            ),
+        }
+    }
 }
