@@ -347,6 +347,55 @@ fn main() {
         });
     }
 
+    // --- ring merge: the server-free engines' per-round fold ------------------
+    // One all-reduce round's aggregation work at the last ring position:
+    // reset the partial, fold one top-10 contribution per node of an
+    // 8-node ring, frame the aggregate for the payload codec. The merge
+    // table keeps the sparse fold O(total nnz); the mixed case injects
+    // one dense contribution mid-fold to price the spill path (the
+    // structural fix for PR 7's mixed sparse/dense aggregation drop),
+    // which turns the remaining folds into O(nnz) dense scatters plus
+    // one O(d) frame fill.
+    {
+        use memsgd::coordinator::experiment::RingPartial;
+
+        let d = 47_236usize;
+        let w_nodes = 8usize;
+        let mut comp = compress::from_spec("top_k:10").unwrap();
+        let mut rng = Prng::new(19);
+        let mut updates = Vec::with_capacity(w_nodes);
+        for node in 0..w_nodes {
+            let x: Vec<f32> = (0..d)
+                .map(|i| (((i + node * 131) % 101) as f32 - 50.0) * 0.01)
+                .collect();
+            let mut out = Update::new_sparse(d);
+            comp.compress(&x, &mut rng, &mut out);
+            updates.push(out);
+        }
+
+        let mut partial = RingPartial::new(d);
+        b.run(&gate::ring_merge_sparse_case(w_nodes), || {
+            partial.begin();
+            for u in &updates {
+                partial.fold(u);
+            }
+            assert!(matches!(partial.fill_update(), Update::Sparse(_)));
+        });
+
+        let dense: Vec<f32> = (0..d).map(|i| ((i % 59) as f32 - 29.0) * 1e-4).collect();
+        let dense_u = Update::Dense(dense);
+        b.run(&gate::ring_merge_mixed_case(w_nodes), || {
+            partial.begin();
+            for (k, u) in updates.iter().enumerate() {
+                partial.fold(u);
+                if k == w_nodes / 2 {
+                    partial.fold(&dense_u);
+                }
+            }
+            assert!(matches!(partial.fill_update(), Update::Dense(_)));
+        });
+    }
+
     // --- weighted averaging overhead ------------------------------------------
     {
         let d = 2_000;

@@ -1,4 +1,5 @@
-//! Multi-process cluster runtime: `memsgd serve` / `memsgd worker`.
+//! Multi-process cluster runtime: `memsgd serve` / `memsgd worker` /
+//! `memsgd ring`.
 //!
 //! PR 5 put the parameter server on a real message-passing wire; this
 //! module takes the wire **off-box**. The server
@@ -9,6 +10,12 @@
 //! a localhost 3-process run reproduces the simulated engines' loss
 //! curves and bit totals exactly (`tests/cluster_lifecycle.rs` pins
 //! this; the CI `cluster-smoke` job diffs the `final:` lines).
+//! [`RingNodeProcess`] is the **server-free** member of the family: one
+//! process per all-reduce ring node, no server process at all — the
+//! same `REDUCE`/`GATHER` frames the threaded engine passes between
+//! threads flow between processes instead (the CI smoke job's
+//! all-reduce case diffs node 0's `final:` line against the simulated
+//! twin).
 //!
 //! ## Protocol
 //!
@@ -80,8 +87,9 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::config::{LocalUpdate, MethodSpec};
 use super::experiment::{
-    finish_async_wire_record, finish_sync_wire_record, record_method_name, serve_async_protocol,
-    serve_sync_protocol, AsyncServerTally, Settings, SyncServerTally, Topology, WireWorker,
+    annotate_local, finish_async_wire_record, finish_sync_wire_record, record_method_name,
+    run_ring_driver, serve_async_protocol, serve_sync_protocol, AsyncServerTally,
+    RingDriverTally, RingNode, Settings, SyncServerTally, Topology, WireWorker,
 };
 use super::net::{
     check_compat, configure_stream, connect_with_retry, read_frame_deadline, write_frame, Backoff,
@@ -209,8 +217,10 @@ impl RunConfig {
         Which::parse(&self.dataset).context("cluster config dataset")?;
         self.local.validate()?;
         match self.topology.as_str() {
-            "ps-sync" | "ps-async" => {}
-            other => bail!("unknown topology '{other}' in cluster config (ps-sync|ps-async)"),
+            "ps-sync" | "ps-async" | "all-reduce" => {}
+            other => bail!(
+                "unknown topology '{other}' in cluster config (ps-sync|ps-async|all-reduce)"
+            ),
         }
         if self.topology == "ps-async" {
             self.network_model()?;
@@ -773,6 +783,10 @@ impl ClusterServer {
                 record.extra.insert("cluster".into(), 1.0);
                 Ok(record)
             }
+            "all-reduce" => bail!(
+                "topology 'all-reduce' is server-free: there is no server process to run — \
+                 launch one `memsgd ring --node I --nodes N` process per node instead"
+            ),
             other => bail!("unknown topology '{other}' (validated config cannot reach this)"),
         }
     }
@@ -857,9 +871,255 @@ pub fn run_worker(addr: &str, expect: &Hello, backoff: &Backoff) -> Result<(usiz
             worker.run_sync(rounds, 1.0 / nodes as f32)?
         }
         "ps-async" => worker.run_async()?,
+        "all-reduce" => bail!(
+            "topology 'all-reduce' is server-free: nodes join as ring peers — \
+             use `memsgd ring`, not `memsgd worker`"
+        ),
         other => bail!("unknown topology '{other}' in server config"),
     };
     Ok((node, bits))
+}
+
+// ---------------------------------------------------------------------------
+// Server-free ring runtime (`memsgd ring`)
+// ---------------------------------------------------------------------------
+
+/// One process of a server-free multi-process all-reduce ring
+/// (`memsgd ring --node I --nodes N`). There is **no server**: every
+/// node is launched with the identical [`RunConfig`]
+/// (`topology = "all-reduce"`), binds a listener for its previous ring
+/// neighbor, dials its next neighbor, and the `REDUCE`/`GATHER` frames
+/// of [`super::transport`] flow one direction around the ring — exactly
+/// the threaded engine's protocol, one process per node. Node 0 drives
+/// the recording (the engine's `run_ring_driver` loop) and returns the
+/// [`RunRecord`]; the other nodes run the same per-round loop (the
+/// engine's `RingNode`) and return `None`.
+///
+/// ## Handshake
+///
+/// Unlike the PS cluster, no side owns the config — every launch
+/// carries it — so the handshake only has to prove the ring is
+/// *compatible*, not distribute state: each node sends its
+/// [`Hello`] fingerprint down its outgoing edge and answers the
+/// fingerprint arriving on its incoming edge with an `{"ok": 1}` frame
+/// (or an `{"error": reason}` rejection that fails the whole ring
+/// descriptively — the ACK travels the reverse direction of the same
+/// socket, which TCP's full duplex permits even though run-time frames
+/// flow one way only). Node ids come from `--node`, not accept order,
+/// so the operator controls the fold order explicitly.
+pub struct RingNodeProcess {
+    listener: TcpListener,
+    cfg: RunConfig,
+    data: crate::data::Dataset,
+    node: usize,
+}
+
+impl RingNodeProcess {
+    /// Validate the config (must be the `all-reduce` topology, `node`
+    /// in range), build the dataset, and bind the listener for the
+    /// previous ring neighbor (`"127.0.0.1:0"` picks a free port —
+    /// [`RingNodeProcess::local_addr`] reports it).
+    pub fn bind(addr: &str, cfg: RunConfig, node: usize) -> Result<RingNodeProcess> {
+        cfg.validate()?;
+        if cfg.topology != "all-reduce" {
+            bail!(
+                "`memsgd ring` runs the all-reduce topology; config says '{}' \
+                 (use `memsgd serve` / `memsgd worker` for the parameter-server topologies)",
+                cfg.topology
+            );
+        }
+        if node >= cfg.nodes {
+            bail!("ring node id {node} out of range for {} nodes", cfg.nodes);
+        }
+        let which = Which::parse(&cfg.dataset)?;
+        let data = experiments::dataset(which, cfg.scale, cfg.seed);
+        if data.d() != cfg.dim {
+            bail!(
+                "cluster config declares dim {} but the {} dataset generator produced d={}",
+                cfg.dim,
+                cfg.dataset,
+                data.d()
+            );
+        }
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding listener on {addr}"))?;
+        Ok(RingNodeProcess { listener, cfg, data, node })
+    }
+
+    /// The bound address (resolves a `:0` bind to the actual port).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("resolving listen addr")
+    }
+
+    /// Accept exactly one inbound connection — the previous ring
+    /// neighbor — within [`ACCEPT_TIMEOUT`].
+    fn accept_prev(&self) -> Result<TcpStream> {
+        self.listener
+            .set_nonblocking(true)
+            .context("setting the ring listener non-blocking")?;
+        let deadline = Instant::now() + ACCEPT_TIMEOUT;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    stream
+                        .set_nonblocking(false)
+                        .context("setting accepted ring socket blocking")?;
+                    return Ok(stream);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!(
+                            "node {}: previous ring node did not connect within {}s",
+                            self.node,
+                            ACCEPT_TIMEOUT.as_secs()
+                        );
+                    }
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) => return Err(e).context("accepting ring connection"),
+            }
+        }
+    }
+
+    /// Dial `next`, handshake both ring edges, and run the node's half
+    /// of the protocol to completion. Returns node 0's [`RunRecord`]
+    /// (with `wire = 1` and `cluster = 1` extras), `None` elsewhere.
+    /// With `nodes = 1` the ring is degenerate — no sockets, no
+    /// transmitted bits, `next` never dialed.
+    pub fn run(self, next: &str, backoff: &Backoff) -> Result<Option<RunRecord>> {
+        let cfg = &self.cfg;
+        let me = self.node;
+        let nodes = cfg.nodes.max(1);
+        let method = MethodSpec::parse(&cfg.method)?;
+        let d = self.data.d();
+        let n = self.data.n();
+        let h = cfg.local.sync_every.max(1);
+        let rounds = (cfg.steps / (nodes * h)).max(1);
+        let scale = 1.0 / nodes as f32;
+
+        // Re-derive this node's RNG stream by replaying the root
+        // generator's splits in node-id order (see `run_worker`).
+        let mut root = Prng::new(cfg.seed);
+        let mut rng = root.split(1);
+        for w in 1..=me {
+            rng = root.split(w as u64 + 1);
+        }
+        let mut backend = LogisticModel::new(&self.data, 1.0 / n as f64);
+        let mut ef = method.error_feedback(d);
+
+        let ring = if nodes > 1 {
+            let hello = cfg.hello();
+            // Dial first and push our fingerprint into the buffer, then
+            // take the inbound edge — every node does the same, so no
+            // accept ever waits on a peer that is itself blocked
+            // accepting.
+            let mut send_stream = connect_with_retry(next, backoff)
+                .with_context(|| format!("node {me}: dialing next ring node at {next}"))?;
+            configure_stream(&send_stream)?;
+            write_frame(&mut send_stream, &hello.encode())
+                .with_context(|| format!("node {me}: sending ring HELLO"))?;
+            let mut recv_stream = self.accept_prev()?;
+            configure_stream(&recv_stream)?;
+            let frame =
+                read_frame_deadline(&mut recv_stream, MAX_FRAME_BYTES, Some(HANDSHAKE_TIMEOUT))
+                    .with_context(|| format!("node {me}: reading ring HELLO from prev node"))?;
+            let peer = Hello::decode(&frame)?;
+            if let Err(e) = check_compat(&peer, &hello) {
+                let reject =
+                    Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string();
+                let _ = write_frame(&mut recv_stream, reject.as_bytes());
+                let _ = recv_stream.shutdown(Shutdown::Both);
+                return Err(
+                    e.push_context(format!("node {me}: previous ring node is incompatible"))
+                );
+            }
+            let ack = Json::obj(vec![("ok", Json::Num(1.0))]).to_string();
+            write_frame(&mut recv_stream, ack.as_bytes())
+                .with_context(|| format!("node {me}: acking ring HELLO"))?;
+            // Our own fingerprint's verdict arrives on the outgoing
+            // edge (the next node wrote it against the run direction).
+            let verdict =
+                read_frame_deadline(&mut send_stream, MAX_FRAME_BYTES, Some(HANDSHAKE_TIMEOUT))
+                    .with_context(|| format!("node {me}: reading ring ACK from next node"))?;
+            let text = std::str::from_utf8(&verdict).context("ring ACK is not UTF-8")?;
+            let j = Json::parse(text).context("ring ACK is not JSON")?;
+            if let Some(err) = j.get("error") {
+                bail!(
+                    "node {me}: next ring node rejected the handshake: {}",
+                    err.as_str().unwrap_or("unknown reason")
+                );
+            }
+            j.req("ok").with_context(|| format!("node {me}: malformed ring ACK"))?;
+            Some((
+                Box::new(TcpChannel::new(recv_stream)?) as Box<dyn Channel>,
+                Box::new(TcpChannel::new(send_stream)?) as Box<dyn Channel>,
+            ))
+        } else {
+            None
+        };
+
+        if me != 0 {
+            let (left, right) = ring.expect("a multi-node ring peer has both edges");
+            let nd = RingNode {
+                left,
+                right,
+                backend,
+                ef,
+                rng,
+                schedule: cfg.schedule.clone(),
+                local: cfg.local,
+                node: me as u32,
+                nodes,
+                d,
+                n,
+            };
+            nd.run(rounds, scale)?;
+            return Ok(None);
+        }
+
+        // Node 0: drive and record. The header-carried tallies
+        // reconstruct the simulated engine's exact accounting; the
+        // cross-node reconciliation against every peer's own counters
+        // lives in the golden tests (the peers' `ef` state is in other
+        // processes).
+        let started = Instant::now();
+        let eval_every = (rounds / cfg.eval_points.max(1)).max(1);
+        let mut record = RunRecord {
+            method: record_method_name(&method, &Topology::AllReduce { nodes }),
+            dataset: self.data.name.clone(),
+            schedule: cfg.schedule.describe(),
+            ..Default::default()
+        };
+        let mut x = vec![0.0f32; d];
+        record.curve.push(LossPoint { t: 0, bits: 0, loss: backend.full_loss(&x) });
+        let mut tally = RingDriverTally::new();
+        let mut ring = ring;
+        run_ring_driver(
+            &mut backend,
+            ring.as_mut().map(|(l, r)| (&mut **l as &mut dyn Channel, &mut **r as &mut dyn Channel)),
+            &mut ef,
+            &mut rng,
+            &cfg.schedule,
+            cfg.local,
+            nodes,
+            rounds,
+            eval_every,
+            &mut x,
+            &mut record,
+            &mut tally,
+        )?;
+        record.steps = rounds * nodes * h;
+        record.total_bits = tally.reduce_bits + tally.gather_bits;
+        record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+        record.extra.insert("workers".into(), nodes as f64);
+        record.extra.insert("upload_bits".into(), tally.gather_acc as f64);
+        record.extra.insert("reduce_bits".into(), tally.reduce_bits as f64);
+        record.extra.insert("gather_bits".into(), tally.gather_bits as f64);
+        record.extra.insert("wire".into(), 1.0);
+        record.extra.insert("cluster".into(), 1.0);
+        annotate_local(&mut record, cfg.local, rounds * nodes * h);
+        Ok(Some(record))
+    }
 }
 
 #[cfg(test)]
@@ -900,6 +1160,11 @@ mod tests {
     #[test]
     fn run_config_validation_is_strict() {
         assert!(cfg().validate().is_ok());
+        // The server-free ring topology is a valid *config*; only the
+        // server refuses to serve it (there is no server to run).
+        let mut ring_cfg = cfg();
+        ring_cfg.topology = "all-reduce".into();
+        assert!(ring_cfg.validate().is_ok());
         let reject = |mutate: &dyn Fn(&mut RunConfig), needle: &str| {
             let mut c = cfg();
             mutate(&mut c);
@@ -908,6 +1173,7 @@ mod tests {
             assert!(msg.contains(needle), "expected '{needle}' in '{msg}'");
         };
         reject(&|c| c.topology = "ring".into(), "unknown topology");
+        reject(&|c| c.topology = "gossip".into(), "unknown topology");
         reject(&|c| c.method = "adam".into(), "method");
         reject(&|c| c.dataset = "mnist".into(), "dataset");
         reject(&|c| c.nodes = 0, "nodes");
@@ -962,6 +1228,18 @@ mod tests {
         assert_eq!(j.req("node").unwrap().as_usize().unwrap(), 1);
         let back = RunConfig::from_json(j.req("config").unwrap()).unwrap();
         assert_eq!(back, cfg());
+    }
+
+    #[test]
+    fn ring_bind_validates_topology_and_node_id() {
+        let err = RingNodeProcess::bind("127.0.0.1:0", cfg(), 0).unwrap_err();
+        assert!(format!("{err:#}").contains("all-reduce"), "{err:#}");
+        let mut c = cfg();
+        c.topology = "all-reduce".into();
+        let err = RingNodeProcess::bind("127.0.0.1:0", c.clone(), 2).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+        let p = RingNodeProcess::bind("127.0.0.1:0", c, 1).unwrap();
+        assert_ne!(p.local_addr().unwrap().port(), 0);
     }
 
     #[test]

@@ -1,11 +1,13 @@
 //! The unified experiment API: **one typed builder + one generic engine
-//! behind all four training topologies**.
+//! behind all six training topologies**.
 //!
 //! The paper's claim is that Mem-SGD keeps vanilla-SGD rates whether it
 //! runs sequentially (Algorithm 1), over lock-free shared memory
-//! (Algorithm 2), or against a parameter server (§1/§5). This module
-//! makes that claim an API fact: every topology executes the *same*
-//! per-worker [`ErrorFeedbackStep`] against the *same*
+//! (Algorithm 2), or against a parameter server (§1/§5) — and the
+//! error-feedback analysis never mentions a server, so the server-free
+//! fabrics (ring all-reduce, gossip) are covered by the same theory.
+//! This module makes that claim an API fact: every topology executes
+//! the *same* per-worker [`ErrorFeedbackStep`] against the *same*
 //! [`GradBackend`] abstraction — only the coordination fabric differs.
 //!
 //! ```no_run
@@ -50,12 +52,15 @@
 //! local step count, the parameter-server engines hold `η` constant
 //! within a sync (indexed by round / server update) — each matches its
 //! pre-local-update behavior exactly at `H = 1`. With the default
-//! `B = 1, H = 1` all four engines reproduce the classic per-sample
-//! trajectories **bit for bit** (`tests/local_update_equivalence.rs`).
+//! `B = 1, H = 1` the four original engines reproduce the classic
+//! per-sample trajectories **bit for bit**
+//! (`tests/local_update_equivalence.rs`); the server-free engines below
+//! follow the `ParamServerSync` division (`steps / (nodes·H)` rounds,
+//! η constant within a round).
 //!
 //! ## Sparse gradient pipeline
 //!
-//! All four engines share one worker phase (`WorkerScratch::phase`),
+//! All engines share one worker phase (`WorkerScratch::phase`),
 //! which runs sparsity-aware whenever the backend advertises
 //! [`GradBackend::supports_sparse_grad`] (CSR models without L2 — the
 //! RCV1 regime where each gradient is a scaled sparse row): local steps
@@ -76,7 +81,8 @@
 //!
 //! ## Wire mode (real threads, real bytes)
 //!
-//! [`Experiment::wire`] moves the two parameter-server topologies from
+//! [`Experiment::wire`] moves the four message-passing topologies
+//! (parameter-server sync/async, all-reduce, gossip) from
 //! the single-threaded simulation onto a real message-passing runtime
 //! ([`super::transport`]): one server thread plus `nodes` worker
 //! threads, every update **serialized through the Elias payload codec**
@@ -95,6 +101,94 @@
 //! curves stay comparable across modes) and reports the measured bytes
 //! that actually crossed the channel in the `wire_*` extras.
 //!
+//! ## Server-free topologies (ring all-reduce, gossip)
+//!
+//! [`Topology::AllReduce`] replaces the parameter server with a ring
+//! fold: each round every node's compressed sync folds into a
+//! circulating partial in node-id order (`REDUCE`, `n − 1` hops — the
+//! fixed floating-point fold order is the **invariant** that keeps
+//! simulated and threaded trajectories bit-identical), the completed
+//! aggregate circulates back (`GATHER`, `n − 1` hops), and every node
+//! applies the mean. Losses equal `ParamServerSync`'s exactly; only the
+//! bit accounting differs (closed-form per-hop ring costs instead of
+//! upload + broadcast):
+//!
+//! ```
+//! use memsgd::coordinator::experiment::{Experiment, Topology};
+//! use memsgd::coordinator::config::MethodSpec;
+//! use memsgd::models::LogisticModel;
+//! use memsgd::optim::Schedule;
+//! # fn main() -> anyhow::Result<()> {
+//! let data = memsgd::data::synthetic::epsilon_like(240, 12, 5);
+//! let record = Experiment::new(LogisticModel::new(&data, 1.0 / 240.0))
+//!     .dataset(&data.name)
+//!     .method(MethodSpec::mem_top_k(1))
+//!     .schedule(Schedule::constant(0.4))
+//!     .topology(Topology::AllReduce { nodes: 3 })
+//!     .steps(120)
+//!     .seed(7)
+//!     .run()?;
+//! assert!(record.method.starts_with("allreduce_"));
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! [`Topology::Gossip`] drops global synchronization entirely: nodes
+//! keep private iterates, and each round a matching drawn on a
+//! configurable neighbor graph ([`GossipGraph`]) from the topology's
+//! own PRNG stream pairs nodes; matched pairs exchange compressed syncs
+//! and apply the pair mean. The matching stream is
+//! `root.split(nodes + 1)`, drawn **after** the worker streams, and
+//! every graph consumes a fixed number of draws per round — so runs
+//! replay bit-for-bit and wire nodes derive the schedule with zero
+//! coordination traffic:
+//!
+//! ```
+//! use memsgd::coordinator::experiment::{Experiment, GossipGraph, Topology};
+//! use memsgd::coordinator::config::MethodSpec;
+//! use memsgd::models::LogisticModel;
+//! use memsgd::optim::Schedule;
+//! # fn main() -> anyhow::Result<()> {
+//! let data = memsgd::data::synthetic::epsilon_like(240, 12, 5);
+//! let record = Experiment::new(LogisticModel::new(&data, 1.0 / 240.0))
+//!     .dataset(&data.name)
+//!     .method(MethodSpec::mem_top_k(1))
+//!     .schedule(Schedule::constant(0.4))
+//!     .topology(Topology::Gossip { nodes: 4, graph: GossipGraph::Ring })
+//!     .steps(160)
+//!     .seed(7)
+//!     .run()?;
+//! assert!(record.method.contains("ring"));
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Both engines accept [`Experiment::wire`] / the builder's transport
+//! hooks exactly like the parameter-server topologies — real threads,
+//! every hop serialized through the payload codec, trajectories still
+//! bit-identical to the simulation (`tests/allreduce_gossip.rs`):
+//!
+//! ```
+//! use memsgd::coordinator::experiment::{Experiment, Topology};
+//! use memsgd::coordinator::config::MethodSpec;
+//! use memsgd::models::LogisticModel;
+//! use memsgd::optim::Schedule;
+//! # fn main() -> anyhow::Result<()> {
+//! let data = memsgd::data::synthetic::epsilon_like(240, 12, 5);
+//! let wired = Experiment::new(LogisticModel::new(&data, 1.0 / 240.0))
+//!     .dataset(&data.name)
+//!     .method(MethodSpec::mem_top_k(1))
+//!     .schedule(Schedule::constant(0.4))
+//!     .topology(Topology::AllReduce { nodes: 3 })
+//!     .steps(120)
+//!     .seed(7)
+//!     .wire(true) // threaded ring over the loopback transport
+//!     .run()?;
+//! assert_eq!(wired.extra.get("wire"), Some(&1.0));
+//! # Ok(())
+//! # }
+//! ```
+//!
 //! The deprecated per-driver entry points
 //! ([`super::train::run`], [`super::parallel::run`],
 //! [`super::distributed::run`], [`super::async_dist::run`]) are thin
@@ -111,18 +205,20 @@ use anyhow::{bail, Result};
 use super::config::{LocalUpdate, MethodSpec};
 use super::parallel::SharedParams;
 use super::transport::{
-    decode_msg, encode_apply, encode_broadcast, encode_go, encode_shutdown, encode_upload,
-    Channel, Loopback, Transport, WireMsg,
+    decode_msg, encode_apply, encode_broadcast, encode_exchange, encode_gather, encode_go,
+    encode_reduce, encode_report, encode_shutdown, encode_upload, Channel, Loopback, Transport,
+    WireMsg,
 };
 use crate::compress::elias::BitWriter;
-use crate::compress::{ActiveIndex, ActiveView, SparseVec, Update};
+use crate::compress::{ActiveIndex, ActiveView, SparseMerge, SparseVec, Update};
 use crate::metrics::{LossPoint, RunRecord};
 use crate::models::GradBackend;
 use crate::optim::{ErrorFeedbackStep, Schedule, WeightedAverage};
 use crate::sim::network::{ComputeModel, NetworkModel};
 use crate::util::prng::Prng;
 
-/// How workers coordinate: the four training fabrics of the paper.
+/// How workers coordinate: the four training fabrics of the paper plus
+/// the two server-free extensions.
 #[derive(Clone, Debug)]
 pub enum Topology {
     /// Algorithm 1: one worker, exact reads, loss curve + optional
@@ -137,6 +233,43 @@ pub enum Topology {
     /// Asynchronous parameter server under a network cost model:
     /// stale gradients, serialized server ingress, simulated time.
     ParamServerAsync { nodes: usize, net: NetworkModel },
+    /// Server-free synchronous ring all-reduce over `nodes` workers:
+    /// each round the compressed syncs fold around the ring in node-id
+    /// order (`REDUCE`), the completed aggregate circulates back
+    /// (`GATHER`), and every node applies the mean — the
+    /// `ParamServerSync` trajectory without a server.
+    AllReduce { nodes: usize },
+    /// Server-free gossip over `nodes` workers with private iterates:
+    /// each round a matching drawn on `graph` from the topology's own
+    /// seeded PRNG stream pairs nodes, matched pairs exchange their
+    /// compressed syncs and apply the pair mean, and the loss curve
+    /// evaluates the node-mean iterate.
+    Gossip { nodes: usize, graph: GossipGraph },
+}
+
+/// The neighbor graph a [`Topology::Gossip`] round matching is drawn
+/// on. Every graph consumes a fixed number of PRNG draws per round, so
+/// wire nodes replay the schedule independently from a clone of the
+/// topology stream (see `gossip_matching`'s invariants).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GossipGraph {
+    /// Any pair may be matched: a uniform random matching from a
+    /// Fisher–Yates permutation paired off consecutively (odd node
+    /// counts leave one node unmatched per round).
+    Complete,
+    /// Only ring-adjacent pairs: one parity draw per round selects the
+    /// even or odd edge set of the ring.
+    Ring,
+}
+
+impl GossipGraph {
+    /// Stable name used in record method strings and the CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            GossipGraph::Complete => "complete",
+            GossipGraph::Ring => "ring",
+        }
+    }
 }
 
 impl Topology {
@@ -147,6 +280,8 @@ impl Topology {
             Topology::SharedMemory { workers } => (*workers).max(1),
             Topology::ParamServerSync { nodes } => (*nodes).max(1),
             Topology::ParamServerAsync { nodes, .. } => (*nodes).max(1),
+            Topology::AllReduce { nodes } => (*nodes).max(1),
+            Topology::Gossip { nodes, .. } => (*nodes).max(1),
         }
     }
 }
@@ -364,6 +499,8 @@ impl<B: GradBackend> Experiment<B> {
                 let hetero = self.hetero;
                 param_server_async(&mut self.backend, nodes, &net, &compute, hetero, &s)
             }
+            Topology::AllReduce { nodes } => all_reduce(&mut self.backend, nodes, &s),
+            Topology::Gossip { nodes, graph } => gossip(&mut self.backend, nodes, graph, &s),
             Topology::SharedMemory { .. } => bail!(
                 "SharedMemory replicates the backend across threads; \
                  use run() (backend must be Clone + Send)"
@@ -411,10 +548,16 @@ impl<B: GradBackend + Clone + Send> Experiment<B> {
                         &s,
                     )
                 }
+                Topology::AllReduce { nodes } => {
+                    all_reduce_wire(&mut self.backend, nodes, &mut *transport, &s)
+                }
+                Topology::Gossip { nodes, graph } => {
+                    gossip_wire(&mut self.backend, nodes, graph, &mut *transport, &s)
+                }
                 other => bail!(
-                    "wire transport applies to the parameter-server topologies \
-                     (ParamServerSync / ParamServerAsync); got {other:?} — drop \
-                     .wire(true) or change the topology"
+                    "wire transport applies to the message-passing topologies \
+                     (ParamServerSync / ParamServerAsync / AllReduce / Gossip); \
+                     got {other:?} — drop .wire(true) or change the topology"
                 ),
             };
         }
@@ -448,6 +591,18 @@ pub(crate) fn record_method_name(method: &MethodSpec, topology: &Topology) -> St
                 format!("async_memsgd({},W={w},{})", comp.spec_string(), net.name)
             }
             other => format!("async_{}(W={w},{})", other.name(), net.name),
+        },
+        Topology::AllReduce { .. } => match method {
+            MethodSpec::MemSgd { comp } => {
+                format!("allreduce_memsgd({},W={w})", comp.spec_string())
+            }
+            other => format!("allreduce_{}(W={w})", other.name()),
+        },
+        Topology::Gossip { graph, .. } => match method {
+            MethodSpec::MemSgd { comp } => {
+                format!("gossip_memsgd({},W={w},{})", comp.spec_string(), graph.name())
+            }
+            other => format!("gossip_{}(W={w},{})", other.name(), graph.name()),
         },
     }
 }
@@ -679,7 +834,7 @@ impl WorkerScratch {
 /// map (`batch`, `sync_every`, and the total samples consumed). Default
 /// schedules leave the record untouched so legacy records stay
 /// byte-identical.
-fn annotate_local(record: &mut RunRecord, local: LocalUpdate, local_steps: usize) {
+pub(crate) fn annotate_local(record: &mut RunRecord, local: LocalUpdate, local_steps: usize) {
     if !local.is_default() {
         let batch = local.batch.max(1);
         record.extra.insert("batch".into(), batch as f64);
@@ -947,6 +1102,416 @@ pub(crate) fn param_server_sync<B: GradBackend>(
     record.extra.insert("workers".into(), nodes as f64);
     record.extra.insert("upload_bits".into(), uploads as f64);
     record.extra.insert("broadcast_bits".into(), broadcast_bits as f64);
+    annotate_local(&mut record, local, rounds * nodes * h);
+    Ok(record)
+}
+
+// ---------------------------------------------------------------------------
+// Server-free topologies: ring all-reduce and gossip
+// ---------------------------------------------------------------------------
+
+/// The running aggregate of a server-free fold (a ring-reduce round or
+/// a gossip pair): a sparse accumulator with an O(1)-membership merge
+/// table ([`SparseMerge`]), spilling to a dense buffer the moment any
+/// folded update is dense. The spill happens *before* the dense update
+/// folds — so the per-coordinate addition order is exactly the caller's
+/// fold order no matter which contribution went dense (the mixed
+/// sparse/dense aggregation drop of PR 7, designed out structurally).
+///
+/// The simulated engines and every wire node fold through this one
+/// type, so simulated and threaded trajectories agree **by
+/// construction** — there is no second fold implementation to drift.
+pub struct RingPartial {
+    d: usize,
+    sv: SparseVec,
+    merge: SparseMerge,
+    dense: Vec<f32>,
+    any_dense: bool,
+    /// Scratch [`Update`] for the payload codec (refilled per frame).
+    out: Update,
+}
+
+impl RingPartial {
+    pub fn new(d: usize) -> RingPartial {
+        RingPartial {
+            d,
+            sv: SparseVec::new(d),
+            merge: SparseMerge::new(),
+            dense: vec![0.0; d],
+            any_dense: false,
+            out: Update::new_sparse(d),
+        }
+    }
+
+    /// Start a fold: reset the merge table (O(previous support)) and
+    /// clear the accumulator. The dense buffer is re-zeroed only when
+    /// the previous fold spilled.
+    pub fn begin(&mut self) {
+        self.merge.finish(&self.sv);
+        self.merge.begin(self.d, &mut self.sv);
+        if self.any_dense {
+            self.dense.iter_mut().for_each(|v| *v = 0.0);
+            self.any_dense = false;
+        }
+    }
+
+    /// Fold one contribution into the aggregate. Callers fold in a
+    /// fixed order (node-id around the ring, lower-id-first in a gossip
+    /// pair); per coordinate the additions happen in exactly that
+    /// arrival order.
+    pub fn fold(&mut self, u: &Update) {
+        match u {
+            Update::Sparse(sv) => {
+                if self.any_dense {
+                    for (&j, &vj) in sv.idx.iter().zip(&sv.val) {
+                        self.dense[j as usize] += vj;
+                    }
+                } else {
+                    for (&j, &vj) in sv.idx.iter().zip(&sv.val) {
+                        self.merge.add(&mut self.sv, j, vj);
+                    }
+                }
+            }
+            Update::Dense(g) => {
+                if !self.any_dense {
+                    self.any_dense = true;
+                    for (&j, &vj) in self.sv.idx.iter().zip(&self.sv.val) {
+                        self.dense[j as usize] += vj;
+                    }
+                }
+                for (a, &gj) in self.dense.iter_mut().zip(g) {
+                    *a += gj;
+                }
+            }
+        }
+    }
+
+    /// Paper-accounted cost of transmitting this aggregate one hop —
+    /// the per-hop analog of the PS broadcast accounting (leaf syncs
+    /// use their method's own accounting; merged aggregates use the
+    /// closed form).
+    pub fn cost_bits(&self, idx_bits: u64) -> u64 {
+        if self.any_dense {
+            32 * self.d as u64
+        } else {
+            self.sv.idx.len() as u64 * (32 + idx_bits)
+        }
+    }
+
+    /// Frame the aggregate as an [`Update`] for the payload codec (the
+    /// sync server's `bc_update` refill idiom — no per-frame alloc once
+    /// warm).
+    pub fn fill_update(&mut self) -> &Update {
+        if self.any_dense {
+            match &mut self.out {
+                Update::Dense(g) => {
+                    g.clear();
+                    g.extend_from_slice(&self.dense);
+                }
+                other => *other = Update::Dense(self.dense.clone()),
+            }
+        } else {
+            let sv = self.out.sparse_mut(self.d);
+            for (&j, &vj) in self.sv.idx.iter().zip(&self.sv.val) {
+                sv.push(j, vj);
+            }
+        }
+        &self.out
+    }
+
+    /// Apply the scaled aggregate to an iterate: `x[j] -= v[j]·scale`,
+    /// one op per touched coordinate — the literal expression a wire
+    /// node evaluates on the decoded aggregate
+    /// ([`Update::sub_scaled_from`]), so both sides produce identical
+    /// iterate bits.
+    pub fn apply(&self, scale: f32, x: &mut [f32]) {
+        if self.any_dense {
+            for (xj, a) in x.iter_mut().zip(&self.dense) {
+                *xj -= *a * scale;
+            }
+        } else {
+            for (&j, &vj) in self.sv.idx.iter().zip(&self.sv.val) {
+                x[j as usize] -= vj * scale;
+            }
+        }
+    }
+}
+
+/// Closed-form transmission cost of one already-materialized update —
+/// what [`RingPartial::cost_bits`] reports, computable from a decoded
+/// frame (the payload codec preserves the entry list exactly, so both
+/// sides of a hop agree).
+pub(crate) fn update_cost_bits(u: &Update, d: usize, idx_bits: u64) -> u64 {
+    match u {
+        Update::Sparse(sv) => sv.idx.len() as u64 * (32 + idx_bits),
+        Update::Dense(_) => 32 * d as u64,
+    }
+}
+
+/// Derive one gossip round's matching into `pairs` (normalized
+/// `(low, high)`, folded lower-id-first) and return the unmatched node,
+/// if any.
+///
+/// Invariants the wire engine leans on:
+/// * **Fixed draw count per round** — `nodes − 1` draws for
+///   [`GossipGraph::Complete`] (Fisher–Yates), exactly 1 for
+///   [`GossipGraph::Ring`] (the parity draw) — so every node can replay
+///   the full schedule independently from a clone of the topology
+///   stream and all nodes agree on every round's matching without any
+///   coordination traffic.
+/// * The topology stream is `root.split(nodes + 1)`, drawn **after**
+///   the worker streams `1..=nodes`, so adding gossip never perturbs
+///   the worker trajectories' RNG contract.
+pub(crate) fn gossip_matching(
+    graph: GossipGraph,
+    nodes: usize,
+    rng: &mut Prng,
+    perm: &mut Vec<usize>,
+    pairs: &mut Vec<(usize, usize)>,
+) -> Option<usize> {
+    pairs.clear();
+    match graph {
+        GossipGraph::Complete => {
+            perm.clear();
+            perm.extend(0..nodes);
+            for i in (1..nodes).rev() {
+                let j = rng.below(i + 1);
+                perm.swap(i, j);
+            }
+            let mut k = 0;
+            while k + 1 < nodes {
+                let (a, b) = (perm[k], perm[k + 1]);
+                pairs.push((a.min(b), a.max(b)));
+                k += 2;
+            }
+            (nodes % 2 == 1).then(|| perm[nodes - 1])
+        }
+        GossipGraph::Ring => {
+            let p = rng.below(2);
+            if nodes < 2 {
+                return (nodes == 1).then_some(0);
+            }
+            if nodes % 2 == 0 {
+                // Parity p selects the even or odd edge set; the odd
+                // set wraps the ring once.
+                for m in 0..nodes / 2 {
+                    let a = (p + 2 * m) % nodes;
+                    let b = (p + 2 * m + 1) % nodes;
+                    pairs.push((a.min(b), a.max(b)));
+                }
+                None
+            } else {
+                // Odd ring: the selected edge set is a path matching;
+                // one endpoint sits out.
+                for m in 0..nodes / 2 {
+                    pairs.push((p + 2 * m, p + 2 * m + 1));
+                }
+                Some(if p == 0 { nodes - 1 } else { 0 })
+            }
+        }
+    }
+}
+
+/// Simulated ring all-reduce: the `ParamServerSync` schedule (same
+/// phases, same RNG streams, same mean-apply) with the server replaced
+/// by a ring fold — node `i` folds its sync into the circulating
+/// partial and forwards it (`REDUCE`, `n − 1` hops), the last node
+/// completes the aggregate, and it circulates back (`GATHER`, `n − 1`
+/// hops) so every node applies the mean. `total_bits` is what crosses
+/// the ring (closed-form per-hop costs, split into the `reduce_bits` /
+/// `gather_bits` extras); the methods' own accounted sync bits land in
+/// the `upload_bits` extra. Losses match [`param_server_sync`] exactly
+/// (per-coordinate FP fold order is the same node-id order); with one
+/// node nothing crosses a wire and the trajectory is
+/// [`sequential`]'s (H = 1, no averaging).
+pub(crate) fn all_reduce<B: GradBackend>(
+    backend: &mut B,
+    nodes: usize,
+    s: &Settings,
+) -> Result<RunRecord> {
+    let nodes = nodes.max(1);
+    let d = backend.dim();
+    let n = backend.n();
+    let local = s.local;
+    let h = local.sync_every.max(1);
+    let rounds = (s.steps / (nodes * h)).max(1);
+    let mut root_rng = Prng::new(s.seed);
+
+    struct Node {
+        ef: ErrorFeedbackStep,
+        rng: Prng,
+    }
+    let mut workers: Vec<Node> = (0..nodes)
+        .map(|w| Node {
+            ef: s.method.error_feedback(d),
+            rng: root_rng.split(w as u64 + 1),
+        })
+        .collect();
+
+    let mut x = vec![0.0f32; d];
+    let mut ws = WorkerScratch::new(d, n, local);
+    let mut partial = RingPartial::new(d);
+    let idx_bits = crate::compress::sparse::index_bits(d);
+    let mut reduce_bits = 0u64;
+    let mut gather_bits = 0u64;
+
+    let eval_every = (rounds / s.eval_points.max(1)).max(1);
+    let mut record = RunRecord {
+        method: record_method_name(&s.method, &Topology::AllReduce { nodes }),
+        dataset: s.dataset.clone(),
+        schedule: s.schedule.describe(),
+        ..Default::default()
+    };
+    let started = Instant::now();
+    record.curve.push(LossPoint { t: 0, bits: 0, loss: backend.full_loss(&x) });
+
+    let scale = 1.0 / nodes as f32;
+    for round in 0..rounds {
+        // η held constant within a round, as in the PS-sync engine.
+        let etaf = s.schedule.eta(round) as f32;
+        partial.begin();
+        for (w, worker) in workers.iter_mut().enumerate() {
+            ws.phase(backend, &mut worker.ef, &mut worker.rng, &mut x, |_| etaf);
+            partial.fold(worker.ef.update());
+            // REDUCE hop w → w+1 carries the partial holding nodes
+            // 0..=w; the last node completes the fold and forwards
+            // nothing.
+            if w + 1 < nodes {
+                reduce_bits += partial.cost_bits(idx_bits);
+            }
+        }
+        // GATHER: the completed aggregate circulates n − 1 hops.
+        gather_bits += (nodes as u64 - 1) * partial.cost_bits(idx_bits);
+        partial.apply(scale, &mut x);
+
+        if (round + 1) % eval_every == 0 || round + 1 == rounds {
+            record.curve.push(LossPoint {
+                t: round + 1,
+                bits: reduce_bits + gather_bits,
+                loss: backend.full_loss(&x),
+            });
+        }
+    }
+
+    let uploads: u64 = workers.iter().map(|w| w.ef.bits_sent).sum();
+    record.steps = rounds * nodes * h;
+    record.total_bits = reduce_bits + gather_bits;
+    record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+    record.extra.insert("workers".into(), nodes as f64);
+    record.extra.insert("upload_bits".into(), uploads as f64);
+    record.extra.insert("reduce_bits".into(), reduce_bits as f64);
+    record.extra.insert("gather_bits".into(), gather_bits as f64);
+    annotate_local(&mut record, local, rounds * nodes * h);
+    Ok(record)
+}
+
+/// Simulated gossip: `nodes` private iterates, one matching per round
+/// on the configured graph ([`gossip_matching`] — drawn from the
+/// topology's own PRNG stream `root.split(nodes + 1)`). Matched pairs
+/// fold lower-id-first through [`RingPartial`] and both apply the pair
+/// mean; an unmatched node applies its own sync alone (those bits are
+/// accounted in the `self_sync_bits` extra, not in `total_bits` —
+/// nothing crossed a wire). The loss curve evaluates the node-mean
+/// iterate, folded in node-id order.
+pub(crate) fn gossip<B: GradBackend>(
+    backend: &mut B,
+    nodes: usize,
+    graph: GossipGraph,
+    s: &Settings,
+) -> Result<RunRecord> {
+    let nodes = nodes.max(1);
+    let d = backend.dim();
+    let n = backend.n();
+    let local = s.local;
+    let h = local.sync_every.max(1);
+    let rounds = (s.steps / (nodes * h)).max(1);
+    let mut root_rng = Prng::new(s.seed);
+
+    struct Node {
+        ef: ErrorFeedbackStep,
+        rng: Prng,
+        x: Vec<f32>,
+    }
+    let mut workers: Vec<Node> = (0..nodes)
+        .map(|w| Node {
+            ef: s.method.error_feedback(d),
+            rng: root_rng.split(w as u64 + 1),
+            x: vec![0.0; d],
+        })
+        .collect();
+    // Topology stream — split AFTER the worker streams so the worker
+    // trajectories keep the module's RNG contract unchanged.
+    let mut match_rng = root_rng.split(nodes as u64 + 1);
+
+    let mut ws = WorkerScratch::new(d, n, local);
+    let mut partial = RingPartial::new(d);
+    let mut sync_bits = vec![0u64; nodes];
+    let mut perm = Vec::new();
+    let mut pairs = Vec::new();
+    let mut xbar = vec![0.0f32; d];
+    let mut transmitted = 0u64;
+    let mut self_bits = 0u64;
+
+    let eval_every = (rounds / s.eval_points.max(1)).max(1);
+    let mut record = RunRecord {
+        method: record_method_name(&s.method, &Topology::Gossip { nodes, graph }),
+        dataset: s.dataset.clone(),
+        schedule: s.schedule.describe(),
+        ..Default::default()
+    };
+    let started = Instant::now();
+    record.curve.push(LossPoint { t: 0, bits: 0, loss: backend.full_loss(&xbar) });
+
+    for round in 0..rounds {
+        let etaf = s.schedule.eta(round) as f32;
+        for (w, worker) in workers.iter_mut().enumerate() {
+            sync_bits[w] = ws.phase(backend, &mut worker.ef, &mut worker.rng, &mut worker.x, |_| {
+                etaf
+            });
+        }
+        let unpaired = gossip_matching(graph, nodes, &mut match_rng, &mut perm, &mut pairs);
+        for &(a, b) in &pairs {
+            // Fold lower-id-first — the fixed pair fold order every
+            // wire node reproduces — and both apply the pair mean.
+            partial.begin();
+            partial.fold(workers[a].ef.update());
+            partial.fold(workers[b].ef.update());
+            partial.apply(0.5, &mut workers[a].x);
+            partial.apply(0.5, &mut workers[b].x);
+            // Each partner transmits its own sync once.
+            transmitted += sync_bits[a] + sync_bits[b];
+        }
+        if let Some(u) = unpaired {
+            let wkr = &mut workers[u];
+            wkr.ef.update().sub_from(&mut wkr.x);
+            self_bits += sync_bits[u];
+        }
+
+        if (round + 1) % eval_every == 0 || round + 1 == rounds {
+            // Node-mean iterate, folded in node-id order.
+            xbar.iter_mut().for_each(|v| *v = 0.0);
+            for worker in workers.iter() {
+                for (sm, &xi) in xbar.iter_mut().zip(&worker.x) {
+                    *sm += xi;
+                }
+            }
+            let ns = 1.0 / nodes as f32;
+            xbar.iter_mut().for_each(|v| *v *= ns);
+            record.curve.push(LossPoint {
+                t: round + 1,
+                bits: transmitted,
+                loss: backend.full_loss(&xbar),
+            });
+        }
+    }
+
+    let uploads: u64 = workers.iter().map(|w| w.ef.bits_sent).sum();
+    record.steps = rounds * nodes * h;
+    record.total_bits = transmitted;
+    record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+    record.extra.insert("workers".into(), nodes as f64);
+    record.extra.insert("upload_bits".into(), uploads as f64);
+    record.extra.insert("self_sync_bits".into(), self_bits as f64);
     annotate_local(&mut record, local, rounds * nodes * h);
     Ok(record)
 }
@@ -1818,6 +2383,711 @@ pub(crate) fn param_server_async_wire<B: GradBackend + Clone + Send>(
     Ok(record)
 }
 
+// ---------------------------------------------------------------------------
+// Server-free wire engines: threaded ring all-reduce and gossip
+// ---------------------------------------------------------------------------
+
+/// Generic join for server-free node threads (the
+/// [`join_wire_workers`] contract for outcome types richer than a bit
+/// count): `primary` — the driver's own protocol outcome — keeps error
+/// priority, then node errors and panics surface with the failing node
+/// named. `first_node` offsets the reported ids (the ring driver is
+/// node 0, so its thread peers start at 1).
+fn join_node_outcomes<T>(
+    handles: Vec<std::thread::ScopedJoinHandle<'_, Result<T>>>,
+    primary: Result<()>,
+    first_node: usize,
+) -> Result<Vec<T>> {
+    let mut out = Vec::with_capacity(handles.len());
+    let mut node_err: Option<anyhow::Error> = None;
+    for (i, hd) in handles.into_iter().enumerate() {
+        let node = first_node + i;
+        match hd.join() {
+            Ok(Ok(v)) => out.push(v),
+            Ok(Err(e)) => {
+                if node_err.is_none() {
+                    node_err = Some(anyhow::anyhow!("node {node}: {e:#}"));
+                }
+            }
+            Err(_) => {
+                if node_err.is_none() {
+                    node_err = Some(anyhow::anyhow!("node {node} panicked"));
+                }
+            }
+        }
+    }
+    primary?;
+    if let Some(e) = node_err {
+        return Err(e);
+    }
+    Ok(out)
+}
+
+/// Per-node state of a threaded all-reduce ring node (nodes
+/// `1..nodes`; node 0 is the recording driver on the engine thread —
+/// [`run_ring_driver`]). The multi-process cluster runtime
+/// ([`super::cluster`]) builds the same state around accepted/connected
+/// TCP sockets and runs the same protocol loop.
+pub(crate) struct RingNode<B> {
+    /// Recv side: frames from node `node − 1`.
+    pub(crate) left: Box<dyn Channel>,
+    /// Send side: frames to node `(node + 1) % nodes`.
+    pub(crate) right: Box<dyn Channel>,
+    pub(crate) backend: B,
+    pub(crate) ef: ErrorFeedbackStep,
+    pub(crate) rng: Prng,
+    pub(crate) schedule: Schedule,
+    pub(crate) local: LocalUpdate,
+    pub(crate) node: u32,
+    pub(crate) nodes: usize,
+    pub(crate) d: usize,
+    pub(crate) n: usize,
+}
+
+/// What a ring node reports at join: its accounted sync bits, the
+/// closed-form cost of the hops it sent, and the frame/payload bits it
+/// measured — the driver reconciles all of it against the header
+/// tallies.
+#[derive(Default)]
+pub(crate) struct RingOutcome {
+    pub(crate) acc_bits: u64,
+    pub(crate) hop_bits: u64,
+    pub(crate) reduce_frame_bits: u64,
+    pub(crate) gather_frame_bits: u64,
+    pub(crate) reduce_payload_bits: u64,
+    pub(crate) gather_payload_bits: u64,
+}
+
+impl<B: GradBackend> RingNode<B> {
+    /// The non-driver ring protocol, per round: phase, fold the
+    /// incoming `REDUCE` partial with this node's own sync, forward the
+    /// partial (or, as the last node, originate the `GATHER`), then
+    /// apply the round aggregate. Ring teardown is by endpoint drop —
+    /// an error anywhere cascades as "channel closed" along the ring,
+    /// so no node can hang on a dead peer.
+    pub(crate) fn run(mut self, rounds: usize, scale: f32) -> Result<RingOutcome> {
+        let me = self.node as usize;
+        let last = me == self.nodes - 1;
+        let idx_bits = crate::compress::sparse::index_bits(self.d);
+        let mut x = vec![0.0f32; self.d];
+        let mut ws = WorkerScratch::new(self.d, self.n, self.local);
+        let mut w = BitWriter::new();
+        let mut partial = RingPartial::new(self.d);
+        let mut out = RingOutcome::default();
+        for round in 0..rounds {
+            let etaf = self.schedule.eta(round) as f32;
+            let bits = ws.phase(&mut self.backend, &mut self.ef, &mut self.rng, &mut x, |_| etaf);
+            let frame = self.left.recv()?;
+            let dec = decode_msg(&frame, self.d)?;
+            let (acc_sum, hops_in) = match dec.msg {
+                WireMsg::Reduce { round: r, node, accounted_bits, hop_bits, update }
+                    if r == round as u64 && node as usize + 1 == me =>
+                {
+                    out.reduce_payload_bits += dec.payload_bits;
+                    partial.begin();
+                    partial.fold(&update);
+                    partial.fold(self.ef.update());
+                    (accounted_bits + bits, hop_bits)
+                }
+                other => bail!("node {me}: unexpected {other:?} in round {round}"),
+            };
+            if last {
+                // The fold is complete: originate the GATHER carrying
+                // the round's accounted-bit sum and reduce hop total.
+                let agg_cost = partial.cost_bits(idx_bits);
+                encode_gather(&mut w, round as u64, acc_sum, hops_in, partial.fill_update());
+                self.right.send(w.as_bytes())?;
+                out.hop_bits += agg_cost;
+                out.gather_frame_bits += w.as_bytes().len() as u64 * 8;
+                partial.apply(scale, &mut x);
+            } else {
+                let hop = partial.cost_bits(idx_bits);
+                encode_reduce(
+                    &mut w,
+                    round as u64,
+                    self.node,
+                    acc_sum,
+                    hops_in + hop,
+                    partial.fill_update(),
+                );
+                self.right.send(w.as_bytes())?;
+                out.hop_bits += hop;
+                out.reduce_frame_bits += w.as_bytes().len() as u64 * 8;
+                // Wait for the completed aggregate to come around
+                // (origin: node nodes−1, forwarded 0 → 1 → … → nodes−2).
+                let frame = self.left.recv()?;
+                let dec = decode_msg(&frame, self.d)?;
+                match dec.msg {
+                    WireMsg::Gather { round: r, update, .. } if r == round as u64 => {
+                        out.gather_payload_bits += dec.payload_bits;
+                        if me + 2 < self.nodes {
+                            // Forward the frame verbatim so every hop
+                            // transmits identical bytes.
+                            self.right.send(&frame)?;
+                            out.hop_bits += update_cost_bits(&update, self.d, idx_bits);
+                            out.gather_frame_bits += frame.len() as u64 * 8;
+                        }
+                        update.sub_scaled_from(scale, &mut x);
+                    }
+                    other => bail!("node {me}: unexpected {other:?} in round {round}"),
+                }
+            }
+        }
+        out.acc_bits = self.ef.bits_sent;
+        Ok(out)
+    }
+}
+
+/// The driver-side tallies of a ring run: header-carried sums (for the
+/// loss curve and the join-time reconciliation) plus the driver's own
+/// [`RingOutcome`].
+pub(crate) struct RingDriverTally {
+    /// Σ `GATHER.accounted_bits` over rounds — every node's accounted
+    /// sync bits, carried around the ring.
+    pub(crate) gather_acc: u64,
+    /// Σ `GATHER.hop_bits` — the closed-form reduce-phase cost.
+    pub(crate) reduce_bits: u64,
+    /// `(nodes − 1) · cost(aggregate)` per round — the gather cost,
+    /// recomputed from the decoded aggregate.
+    pub(crate) gather_bits: u64,
+    /// The driver's own sends/receives.
+    pub(crate) own: RingOutcome,
+}
+
+impl RingDriverTally {
+    pub(crate) fn new() -> RingDriverTally {
+        RingDriverTally {
+            gather_acc: 0,
+            reduce_bits: 0,
+            gather_bits: 0,
+            own: RingOutcome::default(),
+        }
+    }
+}
+
+/// The driver (node 0) half of the ring protocol: phases like any
+/// other node, originates each round's `REDUCE`, receives the `GATHER`
+/// from the last node (forwarding it on rings of more than two nodes),
+/// applies the mean, and records the loss curve with the simulated
+/// engine's exact bit accounting (reconstructed from the header
+/// tallies). `ring` is `None` only for a single-node run, where
+/// nothing crosses a wire. Shared by the threaded engine and the
+/// multi-process cluster runtime.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_ring_driver<B: GradBackend>(
+    backend: &mut B,
+    mut ring: Option<(&mut dyn Channel, &mut dyn Channel)>,
+    ef: &mut ErrorFeedbackStep,
+    rng: &mut Prng,
+    schedule: &Schedule,
+    local: LocalUpdate,
+    nodes: usize,
+    rounds: usize,
+    eval_every: usize,
+    x: &mut [f32],
+    record: &mut RunRecord,
+    tally: &mut RingDriverTally,
+) -> Result<()> {
+    let d = x.len();
+    let idx_bits = crate::compress::sparse::index_bits(d);
+    let scale = 1.0 / nodes as f32;
+    let mut ws = WorkerScratch::new(d, backend.n(), local);
+    let mut w = BitWriter::new();
+    let mut partial = RingPartial::new(d);
+    for round in 0..rounds {
+        let etaf = schedule.eta(round) as f32;
+        let bits = ws.phase(backend, ef, rng, x, |_| etaf);
+        partial.begin();
+        partial.fold(ef.update());
+        if let Some((left, right)) = ring.as_mut() {
+            let hop = partial.cost_bits(idx_bits);
+            encode_reduce(&mut w, round as u64, 0, bits, hop, partial.fill_update());
+            right
+                .send(w.as_bytes())
+                .map_err(|e| e.push_context("driver: REDUCE send to node 1"))?;
+            tally.own.hop_bits += hop;
+            tally.own.reduce_frame_bits += w.as_bytes().len() as u64 * 8;
+            let frame = left
+                .recv()
+                .map_err(|e| e.push_context(format!("driver: GATHER recv from node {}", nodes - 1)))?;
+            let dec = decode_msg(&frame, d)?;
+            match dec.msg {
+                WireMsg::Gather { round: r, accounted_bits, hop_bits, update }
+                    if r == round as u64 =>
+                {
+                    tally.own.gather_payload_bits += dec.payload_bits;
+                    tally.gather_acc += accounted_bits;
+                    tally.reduce_bits += hop_bits;
+                    let agg_cost = update_cost_bits(&update, d, idx_bits);
+                    tally.gather_bits += (nodes as u64 - 1) * agg_cost;
+                    if nodes > 2 {
+                        right
+                            .send(&frame)
+                            .map_err(|e| e.push_context("driver: GATHER forward to node 1"))?;
+                        tally.own.hop_bits += agg_cost;
+                        tally.own.gather_frame_bits += frame.len() as u64 * 8;
+                    }
+                    update.sub_scaled_from(scale, x);
+                }
+                other => bail!("driver: unexpected {other:?} in round {round}"),
+            }
+        } else {
+            // Single node: the degenerate ring — nothing transmits.
+            tally.gather_acc += bits;
+            partial.apply(scale, x);
+        }
+        if (round + 1) % eval_every == 0 || round + 1 == rounds {
+            record.curve.push(LossPoint {
+                t: round + 1,
+                bits: tally.reduce_bits + tally.gather_bits,
+                loss: backend.full_loss(x),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Threaded ring all-reduce: node 0 (the recorder) on this thread and
+/// `nodes − 1` worker threads, every partial serialized through the
+/// payload codec and carried one directed ring edge at a time.
+/// Trajectory, loss curve, accounted bits, and every extra are
+/// **bit-identical** to [`all_reduce`] (`tests/allreduce_gossip.rs`);
+/// measured bytes land in the `wire_*` extras. All ring traffic is
+/// sent from the `server` end of each duplex, so a
+/// [`super::transport::CountingTransport`] attributes it to its
+/// broadcast counter.
+pub(crate) fn all_reduce_wire<B: GradBackend + Clone + Send>(
+    backend: &mut B,
+    nodes: usize,
+    transport: &mut dyn Transport,
+    s: &Settings,
+) -> Result<RunRecord> {
+    let nodes = nodes.max(1);
+    let d = backend.dim();
+    let n = backend.n();
+    let local = s.local;
+    let h = local.sync_every.max(1);
+    let rounds = (s.steps / (nodes * h)).max(1);
+    let scale = 1.0 / nodes as f32;
+    let mut root_rng = Prng::new(s.seed);
+
+    // One duplex per directed ring edge i → (i+1) % nodes, created in
+    // edge order; the sender keeps the server end.
+    let mut send_to_next: Vec<Option<Box<dyn Channel>>> = (0..nodes).map(|_| None).collect();
+    let mut recv_from_prev: Vec<Option<Box<dyn Channel>>> = (0..nodes).map(|_| None).collect();
+    if nodes > 1 {
+        for i in 0..nodes {
+            let (se, we) = transport.duplex();
+            send_to_next[i] = Some(se);
+            recv_from_prev[(i + 1) % nodes] = Some(we);
+        }
+    }
+    // Node state in node-id order so the RNG split sequence matches the
+    // simulated engine exactly (driver = node 0 = split(1)).
+    let mut driver_ef = s.method.error_feedback(d);
+    let mut driver_rng = root_rng.split(1);
+    let mut ring_nodes: Vec<RingNode<B>> = Vec::with_capacity(nodes.saturating_sub(1));
+    for w in 1..nodes {
+        ring_nodes.push(RingNode {
+            left: recv_from_prev[w].take().expect("ring edge"),
+            right: send_to_next[w].take().expect("ring edge"),
+            backend: backend.clone(),
+            ef: s.method.error_feedback(d),
+            rng: root_rng.split(w as u64 + 1),
+            schedule: s.schedule.clone(),
+            local,
+            node: w as u32,
+            nodes,
+            d,
+            n,
+        });
+    }
+
+    let mut record = RunRecord {
+        method: record_method_name(&s.method, &Topology::AllReduce { nodes }),
+        dataset: s.dataset.clone(),
+        schedule: s.schedule.describe(),
+        ..Default::default()
+    };
+    let started = Instant::now();
+    let mut x = vec![0.0f32; d];
+    let eval_every = (rounds / s.eval_points.max(1)).max(1);
+    record.curve.push(LossPoint { t: 0, bits: 0, loss: backend.full_loss(&x) });
+
+    let mut tally = RingDriverTally::new();
+    let outcomes = std::thread::scope(|scope| -> Result<Vec<RingOutcome>> {
+        let mut handles = Vec::with_capacity(ring_nodes.len());
+        for nd in ring_nodes {
+            handles.push(scope.spawn(move || nd.run(rounds, scale)));
+        }
+        let mut left = recv_from_prev[0].take();
+        let mut right = send_to_next[0].take();
+        let ring = match (left.as_deref_mut(), right.as_deref_mut()) {
+            (Some(l), Some(r)) => Some((l, r)),
+            _ => None,
+        };
+        let served = run_ring_driver(
+            backend,
+            ring,
+            &mut driver_ef,
+            &mut driver_rng,
+            &s.schedule,
+            local,
+            nodes,
+            rounds,
+            eval_every,
+            &mut x,
+            &mut record,
+            &mut tally,
+        );
+        // Drop the driver's endpoints either way: a failure cascades as
+        // "channel closed" around the ring instead of hanging the join.
+        drop(left);
+        drop(right);
+        join_node_outcomes(handles, served, 1)
+    })?;
+
+    // Accounted-vs-header reconciliation (the ring analog of
+    // `check_wire_accounting`): every node's sync accounting must match
+    // what the GATHER headers carried, and every hop's closed-form cost
+    // must match what the headers/aggregates tallied.
+    let reported_acc = driver_ef.bits_sent + outcomes.iter().map(|o| o.acc_bits).sum::<u64>();
+    if tally.gather_acc != reported_acc {
+        bail!(
+            "wire protocol desync: nodes counted {reported_acc} accounted sync bits, \
+             gather headers tallied {}",
+            tally.gather_acc
+        );
+    }
+    let sent_hops = tally.own.hop_bits + outcomes.iter().map(|o| o.hop_bits).sum::<u64>();
+    if sent_hops != tally.reduce_bits + tally.gather_bits {
+        bail!(
+            "wire protocol desync: ring hops sent {sent_hops} closed-form bits, \
+             headers tallied {}",
+            tally.reduce_bits + tally.gather_bits
+        );
+    }
+
+    let reduce_payload: u64 = outcomes.iter().map(|o| o.reduce_payload_bits).sum();
+    let gather_payload: u64 = tally.own.gather_payload_bits
+        + outcomes.iter().map(|o| o.gather_payload_bits).sum::<u64>();
+    let reduce_frames: u64 =
+        tally.own.reduce_frame_bits + outcomes.iter().map(|o| o.reduce_frame_bits).sum::<u64>();
+    let gather_frames: u64 =
+        tally.own.gather_frame_bits + outcomes.iter().map(|o| o.gather_frame_bits).sum::<u64>();
+
+    record.steps = rounds * nodes * h;
+    record.total_bits = tally.reduce_bits + tally.gather_bits;
+    record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+    record.extra.insert("workers".into(), nodes as f64);
+    record.extra.insert("upload_bits".into(), reported_acc as f64);
+    record.extra.insert("reduce_bits".into(), tally.reduce_bits as f64);
+    record.extra.insert("gather_bits".into(), tally.gather_bits as f64);
+    record.extra.insert("wire".into(), 1.0);
+    record.extra.insert("wire_reduce_payload_bits".into(), reduce_payload as f64);
+    record.extra.insert("wire_gather_payload_bits".into(), gather_payload as f64);
+    record.extra.insert("wire_reduce_frame_bits".into(), reduce_frames as f64);
+    record.extra.insert("wire_gather_frame_bits".into(), gather_frames as f64);
+    record
+        .extra
+        .insert("wire_frame_bits".into(), (reduce_frames + gather_frames) as f64);
+    annotate_local(&mut record, local, rounds * nodes * h);
+    Ok(record)
+}
+
+/// Per-node state of a threaded gossip node. Every node holds one edge
+/// channel per potential partner plus a monitor channel to the
+/// recording driver; the matching schedule is replayed locally from
+/// `match_rng` (a clone of the topology stream), so rounds need no
+/// coordination traffic at all.
+pub(crate) struct GossipNode<B> {
+    /// Edge channels indexed by partner node id (`None` at own index).
+    pub(crate) peers: Vec<Option<Box<dyn Channel>>>,
+    /// Channel to the recording driver (`REPORT` frames at eval rounds).
+    pub(crate) monitor: Box<dyn Channel>,
+    pub(crate) backend: B,
+    pub(crate) ef: ErrorFeedbackStep,
+    pub(crate) rng: Prng,
+    pub(crate) match_rng: Prng,
+    pub(crate) schedule: Schedule,
+    pub(crate) local: LocalUpdate,
+    pub(crate) graph: GossipGraph,
+    pub(crate) node: u32,
+    pub(crate) nodes: usize,
+    pub(crate) d: usize,
+    pub(crate) n: usize,
+}
+
+/// What a gossip node reports at join; the driver reconciles
+/// `transmitted_bits` against the node's final `REPORT` header.
+#[derive(Default)]
+pub(crate) struct GossipOutcome {
+    pub(crate) acc_bits: u64,
+    pub(crate) transmitted_bits: u64,
+    pub(crate) self_sync_bits: u64,
+    pub(crate) exchange_payload_bits: u64,
+    pub(crate) exchange_frame_bits: u64,
+    pub(crate) report_frame_bits: u64,
+}
+
+impl<B: GradBackend> GossipNode<B> {
+    /// The gossip node protocol, per round: phase, replay the round's
+    /// matching, exchange compressed syncs with the matched partner
+    /// (both send, then both receive — frames are small and the fabric
+    /// buffers, so no deadlock), fold lower-id-first, apply the pair
+    /// mean; unmatched rounds apply the own sync alone. At eval rounds
+    /// the node `REPORT`s its dense iterate to the driver.
+    pub(crate) fn run(mut self, rounds: usize, eval_every: usize) -> Result<GossipOutcome> {
+        let me = self.node as usize;
+        let mut x = vec![0.0f32; self.d];
+        let mut ws = WorkerScratch::new(self.d, self.n, self.local);
+        let mut w = BitWriter::new();
+        let mut partial = RingPartial::new(self.d);
+        let mut perm = Vec::new();
+        let mut pairs = Vec::new();
+        let mut report = Update::new_dense(self.d);
+        let mut out = GossipOutcome::default();
+        for round in 0..rounds {
+            let etaf = self.schedule.eta(round) as f32;
+            let bits = ws.phase(&mut self.backend, &mut self.ef, &mut self.rng, &mut x, |_| etaf);
+            let unpaired =
+                gossip_matching(self.graph, self.nodes, &mut self.match_rng, &mut perm, &mut pairs);
+            if unpaired == Some(me) {
+                self.ef.update().sub_from(&mut x);
+                out.self_sync_bits += bits;
+            } else {
+                let &(a, b) = pairs
+                    .iter()
+                    .find(|&&(a, b)| a == me || b == me)
+                    .expect("every non-unpaired node is matched");
+                let partner = if a == me { b } else { a };
+                encode_exchange(
+                    &mut w,
+                    round as u64,
+                    self.node,
+                    bits,
+                    self.ef.compressor(),
+                    self.ef.update(),
+                );
+                let ch = self.peers[partner].as_mut().expect("edge channel for partner");
+                ch.send(w.as_bytes())
+                    .map_err(|e| anyhow::anyhow!("exchange send to node {partner}: {e:#}"))?;
+                out.exchange_frame_bits += w.as_bytes().len() as u64 * 8;
+                out.transmitted_bits += bits;
+                let frame = ch
+                    .recv()
+                    .map_err(|e| anyhow::anyhow!("exchange recv from node {partner}: {e:#}"))?;
+                let dec = decode_msg(&frame, self.d)?;
+                match dec.msg {
+                    WireMsg::Exchange { round: r, node, update, .. }
+                        if r == round as u64 && node as usize == partner =>
+                    {
+                        out.exchange_payload_bits += dec.payload_bits;
+                        partial.begin();
+                        if me == a {
+                            partial.fold(self.ef.update());
+                            partial.fold(&update);
+                        } else {
+                            partial.fold(&update);
+                            partial.fold(self.ef.update());
+                        }
+                        partial.apply(0.5, &mut x);
+                    }
+                    other => bail!(
+                        "unexpected {other:?} from partner {partner} in round {round}"
+                    ),
+                }
+            }
+            if (round + 1) % eval_every == 0 || round + 1 == rounds {
+                match &mut report {
+                    Update::Dense(g) => {
+                        g.clear();
+                        g.extend_from_slice(&x);
+                    }
+                    other => *other = Update::Dense(x.clone()),
+                }
+                encode_report(&mut w, round as u64, self.node, out.transmitted_bits, &report);
+                self.monitor.send(w.as_bytes())?;
+                out.report_frame_bits += w.as_bytes().len() as u64 * 8;
+            }
+        }
+        out.acc_bits = self.ef.bits_sent;
+        Ok(out)
+    }
+}
+
+/// Threaded gossip: `nodes` worker threads with private iterates, a
+/// driver on this thread that only listens — each node replays the
+/// matching schedule locally and `REPORT`s its iterate at eval rounds,
+/// where the driver folds the node-mean in node-id order and records
+/// the loss. Trajectory, curve, accounted bits, and every extra are
+/// **bit-identical** to [`gossip`] on both transports
+/// (`tests/allreduce_gossip.rs`).
+pub(crate) fn gossip_wire<B: GradBackend + Clone + Send>(
+    backend: &mut B,
+    nodes: usize,
+    graph: GossipGraph,
+    transport: &mut dyn Transport,
+    s: &Settings,
+) -> Result<RunRecord> {
+    let nodes = nodes.max(1);
+    let d = backend.dim();
+    let n = backend.n();
+    let local = s.local;
+    let h = local.sync_every.max(1);
+    let rounds = (s.steps / (nodes * h)).max(1);
+    let mut root_rng = Prng::new(s.seed);
+
+    // Edge channels for every pair (a, b), a < b, in lexicographic
+    // order — the lower-id node keeps the server end. The matching
+    // never needs more than these.
+    let mut peer_ends: Vec<Vec<Option<Box<dyn Channel>>>> =
+        (0..nodes).map(|_| (0..nodes).map(|_| None).collect()).collect();
+    for a in 0..nodes {
+        for b in (a + 1)..nodes {
+            let (se, we) = transport.duplex();
+            peer_ends[a][b] = Some(se);
+            peer_ends[b][a] = Some(we);
+        }
+    }
+    // Monitors + per-node RNG streams in node-id order; the topology
+    // stream is split after every worker stream (the gossip RNG
+    // contract), then cloned into each node for local replay.
+    let mut monitors: Vec<Box<dyn Channel>> = Vec::with_capacity(nodes);
+    let mut node_parts: Vec<(Vec<Option<Box<dyn Channel>>>, Box<dyn Channel>, Prng)> =
+        Vec::with_capacity(nodes);
+    for (w_id, peers) in peer_ends.into_iter().enumerate() {
+        let (drv_end, node_end) = transport.duplex();
+        monitors.push(drv_end);
+        node_parts.push((peers, node_end, root_rng.split(w_id as u64 + 1)));
+    }
+    let match_rng = root_rng.split(nodes as u64 + 1);
+    let mut gossip_nodes: Vec<GossipNode<B>> = Vec::with_capacity(nodes);
+    for (w_id, (peers, monitor, rng)) in node_parts.into_iter().enumerate() {
+        gossip_nodes.push(GossipNode {
+            peers,
+            monitor,
+            backend: backend.clone(),
+            ef: s.method.error_feedback(d),
+            rng,
+            match_rng: match_rng.clone(),
+            schedule: s.schedule.clone(),
+            local,
+            graph,
+            node: w_id as u32,
+            nodes,
+            d,
+            n,
+        });
+    }
+
+    let mut record = RunRecord {
+        method: record_method_name(&s.method, &Topology::Gossip { nodes, graph }),
+        dataset: s.dataset.clone(),
+        schedule: s.schedule.describe(),
+        ..Default::default()
+    };
+    let started = Instant::now();
+    let mut xbar = vec![0.0f32; d];
+    let eval_every = (rounds / s.eval_points.max(1)).max(1);
+    record.curve.push(LossPoint { t: 0, bits: 0, loss: backend.full_loss(&xbar) });
+
+    let mut report_acc = vec![0u64; nodes];
+    let mut report_payload = 0u64;
+    let outcomes = std::thread::scope(|scope| -> Result<Vec<GossipOutcome>> {
+        let mut handles = Vec::with_capacity(nodes);
+        for nd in gossip_nodes {
+            handles.push(scope.spawn(move || nd.run(rounds, eval_every)));
+        }
+        // The driver only listens: at every eval round it folds the
+        // reported iterates into the node-mean (node-id order — the
+        // simulated engine's exact expressions) and records the loss.
+        let served = (|| -> Result<()> {
+            for round in 0..rounds {
+                if (round + 1) % eval_every == 0 || round + 1 == rounds {
+                    xbar.iter_mut().for_each(|v| *v = 0.0);
+                    for (node, mon) in monitors.iter_mut().enumerate() {
+                        let frame = mon.recv().map_err(|e| {
+                            e.push_context(format!("driver: REPORT recv from node {node}"))
+                        })?;
+                        let dec = decode_msg(&frame, d)?;
+                        match dec.msg {
+                            WireMsg::Report { round: r, node: nid, accounted_bits, update }
+                                if r == round as u64 && nid == node as u32 =>
+                            {
+                                report_payload += dec.payload_bits;
+                                report_acc[node] = accounted_bits;
+                                match update {
+                                    Update::Dense(g) => {
+                                        for (sm, &xi) in xbar.iter_mut().zip(&g) {
+                                            *sm += xi;
+                                        }
+                                    }
+                                    other => bail!(
+                                        "driver: REPORT payload must be dense, got {other:?}"
+                                    ),
+                                }
+                            }
+                            other => bail!(
+                                "driver: unexpected {other:?} from node {node} in round {round}"
+                            ),
+                        }
+                    }
+                    let ns = 1.0 / nodes as f32;
+                    xbar.iter_mut().for_each(|v| *v *= ns);
+                    record.curve.push(LossPoint {
+                        t: round + 1,
+                        bits: report_acc.iter().sum(),
+                        loss: backend.full_loss(&xbar),
+                    });
+                }
+            }
+            Ok(())
+        })();
+        // Drop the monitor ends either way so a node blocked on a
+        // report send errors out instead of hanging the join.
+        drop(monitors);
+        join_node_outcomes(handles, served, 0)
+    })?;
+
+    // Per-node reconciliation: each node's final REPORT header carried
+    // its cumulative transmitted accounting — it must equal what the
+    // node reported at join.
+    for (node, (hdr, o)) in report_acc.iter().zip(&outcomes).enumerate() {
+        if *hdr != o.transmitted_bits {
+            bail!(
+                "wire protocol desync: node {node} reported {} transmitted bits, \
+                 report headers tallied {hdr}",
+                o.transmitted_bits
+            );
+        }
+    }
+
+    let transmitted: u64 = outcomes.iter().map(|o| o.transmitted_bits).sum();
+    let uploads: u64 = outcomes.iter().map(|o| o.acc_bits).sum();
+    let self_bits: u64 = outcomes.iter().map(|o| o.self_sync_bits).sum();
+    let exch_payload: u64 = outcomes.iter().map(|o| o.exchange_payload_bits).sum();
+    let exch_frames: u64 = outcomes.iter().map(|o| o.exchange_frame_bits).sum();
+    let report_frames: u64 = outcomes.iter().map(|o| o.report_frame_bits).sum();
+
+    record.steps = rounds * nodes * h;
+    record.total_bits = transmitted;
+    record.elapsed_ms = started.elapsed().as_secs_f64() * 1e3;
+    record.extra.insert("workers".into(), nodes as f64);
+    record.extra.insert("upload_bits".into(), uploads as f64);
+    record.extra.insert("self_sync_bits".into(), self_bits as f64);
+    record.extra.insert("wire".into(), 1.0);
+    record.extra.insert("wire_exchange_payload_bits".into(), exch_payload as f64);
+    record.extra.insert("wire_report_payload_bits".into(), report_payload as f64);
+    record.extra.insert("wire_exchange_frame_bits".into(), exch_frames as f64);
+    record.extra.insert("wire_report_frame_bits".into(), report_frames as f64);
+    record
+        .extra
+        .insert("wire_frame_bits".into(), (exch_frames + report_frames) as f64);
+    annotate_local(&mut record, local, rounds * nodes * h);
+    Ok(record)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1880,14 +3150,14 @@ mod tests {
     }
 
     #[test]
-    fn wire_requires_a_parameter_server_topology_and_run() {
+    fn wire_requires_a_message_passing_topology_and_run() {
         let data = data();
         let err = Experiment::new(LogisticModel::new(&data, 1.0 / 300.0))
             .topology(Topology::SharedMemory { workers: 2 })
             .wire(true)
             .run()
             .unwrap_err();
-        assert!(format!("{err:#}").contains("parameter-server"), "{err:#}");
+        assert!(format!("{err:#}").contains("message-passing"), "{err:#}");
         let err = Experiment::new(LogisticModel::new(&data, 1.0 / 300.0))
             .topology(Topology::ParamServerSync { nodes: 2 })
             .wire(true)
@@ -1941,6 +3211,205 @@ mod tests {
             Topology::ParamServerAsync { nodes: 8, net: NetworkModel::eth_1g() }.workers(),
             8
         );
+        assert_eq!(Topology::AllReduce { nodes: 5 }.workers(), 5);
+        assert_eq!(Topology::AllReduce { nodes: 0 }.workers(), 1);
+        assert_eq!(
+            Topology::Gossip { nodes: 6, graph: GossipGraph::Complete }.workers(),
+            6
+        );
+    }
+
+    #[test]
+    fn ring_partial_merges_mixed_contributions_in_fold_order() {
+        // The PR 7 bug class: a fold mixing sparse and dense
+        // contributions must keep every entry, with per-coordinate
+        // additions in exactly the caller's fold order no matter where
+        // the spill to dense happens.
+        let d = 8;
+        let mut partial = RingPartial::new(d);
+        let mut sv = SparseVec::new(d);
+        sv.push(3, 0.5);
+        sv.push(7, -0.25);
+        let sparse = Update::Sparse(sv);
+        let dense: Vec<f32> = (0..d).map(|j| 0.125 * (j as f32) - 0.5).collect();
+
+        // sparse-then-dense: the sparse entries spill, then the dense
+        // vector folds on top.
+        partial.begin();
+        partial.fold(&sparse);
+        partial.fold(&Update::Dense(dense.clone()));
+        assert_eq!(partial.cost_bits(crate::compress::sparse::index_bits(d)), 32 * d as u64);
+        let mut x = vec![0.0f32; d];
+        partial.apply(1.0, &mut x);
+        for j in 0..d {
+            let s = match j {
+                3 => 0.5f32,
+                7 => -0.25f32,
+                _ => 0.0,
+            };
+            assert_eq!(x[j], -((0.0 + s) + dense[j]), "x[{j}] lost a contribution");
+        }
+
+        // begin() resets across rounds: a pure-sparse fold after a
+        // dense spill is accounted and applied sparsely again.
+        partial.begin();
+        partial.fold(&sparse);
+        let idx_bits = crate::compress::sparse::index_bits(d);
+        assert_eq!(partial.cost_bits(idx_bits), 2 * (32 + idx_bits));
+        let mut y = vec![0.0f32; d];
+        partial.apply(0.5, &mut y);
+        assert_eq!(y[3], -0.25);
+        assert_eq!(y[7], 0.125);
+        assert_eq!(y.iter().filter(|v| **v != 0.0).count(), 2);
+
+        // The codec frame preserves the entry list, so both sides of a
+        // hop compute the same closed-form cost.
+        let u = partial.fill_update();
+        assert_eq!(update_cost_bits(u, d, idx_bits), 2 * (32 + idx_bits));
+    }
+
+    #[test]
+    fn gossip_matching_is_deterministic_with_fixed_draws() {
+        // Same seed -> same schedule; every round consumes a fixed
+        // number of draws, so two clones replaying independently agree
+        // round by round (the wire engine's zero-coordination replay).
+        for graph in [GossipGraph::Complete, GossipGraph::Ring] {
+            for nodes in 1..=5 {
+                let mut a = Prng::new(42).split(nodes as u64 + 1);
+                let mut b = a.clone();
+                let (mut perm_a, mut pairs_a) = (Vec::new(), Vec::new());
+                let (mut perm_b, mut pairs_b) = (Vec::new(), Vec::new());
+                for round in 0..12 {
+                    let ua = gossip_matching(graph, nodes, &mut a, &mut perm_a, &mut pairs_a);
+                    let ub = gossip_matching(graph, nodes, &mut b, &mut perm_b, &mut pairs_b);
+                    assert_eq!(ua, ub, "{graph:?} n={nodes} round={round}");
+                    assert_eq!(pairs_a, pairs_b, "{graph:?} n={nodes} round={round}");
+                    // Every node is matched exactly once or unpaired.
+                    let mut seen = vec![0u32; nodes];
+                    for &(lo, hi) in &pairs_a {
+                        assert!(lo < hi && hi < nodes, "non-normalized pair ({lo},{hi})");
+                        seen[lo] += 1;
+                        seen[hi] += 1;
+                    }
+                    if let Some(u) = ua {
+                        assert_eq!(seen[u], 0, "unpaired node {u} also matched");
+                        seen[u] += 1;
+                    }
+                    assert!(seen.iter().all(|&c| c == 1), "{graph:?} n={nodes}: {seen:?}");
+                    if graph == GossipGraph::Ring && nodes >= 2 {
+                        for &(lo, hi) in &pairs_a {
+                            assert!(
+                                hi - lo == 1 || (lo == 0 && hi == nodes - 1),
+                                "({lo},{hi}) is not a ring edge of n={nodes}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_sim_matches_param_server_sync_losses() {
+        // Same phases, same RNG streams, same node-id fold order, same
+        // mean-apply — the ring changes only what the bits are charged
+        // to, so the loss trajectory is identical.
+        let data = data();
+        let run = |topology: Topology| {
+            Experiment::new(LogisticModel::new(&data, 1.0 / 300.0))
+                .method(MethodSpec::mem_top_k(2))
+                .schedule(Schedule::constant(0.5))
+                .topology(topology)
+                .steps(600)
+                .eval_points(4)
+                .seed(11)
+                .run()
+                .unwrap()
+        };
+        let ps = run(Topology::ParamServerSync { nodes: 3 });
+        let ring = run(Topology::AllReduce { nodes: 3 });
+        assert_eq!(ps.curve.len(), ring.curve.len());
+        for (p, r) in ps.curve.iter().zip(&ring.curve) {
+            assert_eq!(p.t, r.t);
+            assert_eq!(p.loss, r.loss, "loss diverged at t={}", p.t);
+        }
+        assert_eq!(ps.extra["upload_bits"], ring.extra["upload_bits"]);
+        assert!(ring.extra["reduce_bits"] > 0.0);
+        assert!(ring.extra["gather_bits"] > 0.0);
+        assert_eq!(
+            ring.total_bits,
+            (ring.extra["reduce_bits"] + ring.extra["gather_bits"]) as u64
+        );
+    }
+
+    #[test]
+    fn all_reduce_single_node_matches_sequential() {
+        // n = 1: nothing crosses a wire; the trajectory is the
+        // sequential engine's (H = 1, no averaging) bit for bit, and
+        // the ring charges zero transmitted bits.
+        let data = data();
+        let seq = Experiment::new(LogisticModel::new(&data, 1.0 / 300.0))
+            .method(MethodSpec::mem_top_k(2))
+            .schedule(Schedule::constant(0.5))
+            .steps(900)
+            .eval_points(3)
+            .seed(5)
+            .average(false)
+            .run()
+            .unwrap();
+        let ring = Experiment::new(LogisticModel::new(&data, 1.0 / 300.0))
+            .method(MethodSpec::mem_top_k(2))
+            .schedule(Schedule::constant(0.5))
+            .topology(Topology::AllReduce { nodes: 1 })
+            .steps(900)
+            .eval_points(3)
+            .seed(5)
+            .run()
+            .unwrap();
+        assert_eq!(ring.total_bits, 0, "a 1-node ring transmits nothing");
+        assert_eq!(seq.curve.len(), ring.curve.len());
+        for (sp, rp) in seq.curve.iter().zip(&ring.curve) {
+            assert_eq!(sp.t, rp.t);
+            assert_eq!(sp.loss, rp.loss, "loss diverged at t={}", sp.t);
+        }
+    }
+
+    #[test]
+    fn gossip_sim_runs_and_accounts_on_both_graphs() {
+        let data = data();
+        for graph in [GossipGraph::Complete, GossipGraph::Ring] {
+            // Odd node count: every round leaves one node unpaired, so
+            // self-sync bits must show up in the extras.
+            let rec = Experiment::new(LogisticModel::new(&data, 1.0 / 300.0))
+                .method(MethodSpec::mem_top_k(2))
+                .schedule(Schedule::constant(0.5))
+                .topology(Topology::Gossip { nodes: 3, graph })
+                .steps(600)
+                .eval_points(4)
+                .seed(11)
+                .run()
+                .unwrap();
+            assert_eq!(rec.extra["workers"], 3.0);
+            assert!(rec.total_bits > 0, "{graph:?}: paired exchanges transmit");
+            assert!(rec.extra["self_sync_bits"] > 0.0, "{graph:?}: odd n leaves one out");
+            assert_eq!(
+                rec.extra["upload_bits"],
+                rec.total_bits as f64 + rec.extra["self_sync_bits"],
+                "{graph:?}: every accounted sync is transmitted or self-applied"
+            );
+            assert!(rec.final_loss() < rec.curve[0].loss, "{graph:?}: no progress");
+            // Determinism: the same seed replays bit for bit.
+            let again = Experiment::new(LogisticModel::new(&data, 1.0 / 300.0))
+                .method(MethodSpec::mem_top_k(2))
+                .schedule(Schedule::constant(0.5))
+                .topology(Topology::Gossip { nodes: 3, graph })
+                .steps(600)
+                .eval_points(4)
+                .seed(11)
+                .run()
+                .unwrap();
+            assert_eq!(rec.curve, again.curve, "{graph:?}: seeded replay diverged");
+        }
     }
 
     #[test]
@@ -2038,6 +3507,28 @@ mod tests {
         assert_eq!(
             record_method_name(&MethodSpec::Sgd, &Topology::ParamServerSync { nodes: 2 }),
             "dist_sgd(W=2)"
+        );
+        assert_eq!(
+            record_method_name(&m, &Topology::AllReduce { nodes: 4 }),
+            "allreduce_memsgd(top_k:1,W=4)"
+        );
+        assert_eq!(
+            record_method_name(&MethodSpec::Sgd, &Topology::AllReduce { nodes: 3 }),
+            "allreduce_sgd(W=3)"
+        );
+        assert_eq!(
+            record_method_name(
+                &m,
+                &Topology::Gossip { nodes: 4, graph: GossipGraph::Complete }
+            ),
+            "gossip_memsgd(top_k:1,W=4,complete)"
+        );
+        assert_eq!(
+            record_method_name(
+                &MethodSpec::Sgd,
+                &Topology::Gossip { nodes: 5, graph: GossipGraph::Ring }
+            ),
+            "gossip_sgd(W=5,ring)"
         );
     }
 }

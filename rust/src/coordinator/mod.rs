@@ -27,6 +27,35 @@
 //! | `SharedMemory { workers }` | Algorithm 2: lock-free threads, unsynchronized reads/writes (§4.4) |
 //! | `ParamServerSync { nodes }` | synchronous data-parallel rounds, per-node memories, both directions accounted (§1/§5) |
 //! | `ParamServerAsync { nodes, net }` | stale gradients + serialized server ingress under a network cost model (§1.1) |
+//! | `AllReduce { nodes }` | server-free ring reduce+gather of the same compressed syncs — the error-feedback analysis never names a server |
+//! | `Gossip { nodes, graph }` | decentralized pairwise averaging on a seeded random matching (complete or ring neighbor graph) |
+//!
+//! ## Invariants (what the golden suites pin)
+//!
+//! * **Floating-point fold order is fixed and explicit.** Every
+//!   aggregation folds contributions in node-id order: the PS server
+//!   folds uploads `0, 1, …, W−1` regardless of arrival order, the
+//!   ring folds around the ring starting at the driver, and a gossip
+//!   pair folds lower-id-first. Simulated and threaded/multi-process
+//!   engines share the single fold implementation
+//!   ([`experiment::RingPartial`] for the server-free engines), so
+//!   trajectories agree **bit for bit** — `tests/wire_protocol.rs`,
+//!   `tests/cluster_lifecycle.rs`, and `tests/allreduce_gossip.rs`
+//!   diff them float-for-float.
+//! * **Deadline semantics.** Blocking reads on the wire carry absolute
+//!   deadlines ([`net::read_frame_deadline`]): a peer death surfaces as
+//!   a descriptive error naming the node, never a hang
+//!   (`tests/failure_injection.rs`), and every engine thread is joined
+//!   on both the success and the error path.
+//! * **Tie-breaking is deterministic.** Compressor selection ties break
+//!   toward the lowest coordinate index (the `util::select` contract),
+//!   which is what lets the dense and active-set scans — and therefore
+//!   every topology — pick identical support sets.
+//! * **Accounted bits reconcile with transmitted bits.** Each wire
+//!   engine records both the paper-accounted cost and the measured
+//!   frame bytes on the channel; the suites assert the two reconcile
+//!   exactly per direction (uploads/broadcasts, reduce/gather hops,
+//!   gossip exchanges).
 //!
 //! ## Migration from the deprecated per-driver entry points
 //!
@@ -57,12 +86,13 @@
 //! ## Modules
 //!
 //! * [`experiment`] — the typed builder, the [`experiment::Topology`]
-//!   enum, and the four generic engines (all `GradBackend`-generic; no
+//!   enum, and the six generic engines (all `GradBackend`-generic; no
 //!   engine names a concrete model) — plus the threaded **wire**
 //!   engines behind `Experiment::wire`, which run the two
-//!   parameter-server topologies as real server/worker threads
-//!   exchanging Elias-coded updates, bit-identical to the simulation
-//!   (`tests/wire_protocol.rs`).
+//!   parameter-server topologies and the two server-free topologies
+//!   (ring all-reduce, gossip) as real threads exchanging Elias-coded
+//!   updates, bit-identical to the simulation
+//!   (`tests/wire_protocol.rs`, `tests/allreduce_gossip.rs`).
 //! * [`transport`] — the message-passing fabric of the wire engines:
 //!   the socket-shaped [`transport::Transport`]/[`transport::Channel`]
 //!   abstraction, the in-process loopback, the byte-counting wrapper,
@@ -73,11 +103,14 @@
 //!   ([`net::Hello`]), and bounded-backoff connect
 //!   ([`net::connect_with_retry`]).
 //! * [`cluster`] — the multi-process runtime behind `memsgd serve` /
-//!   `memsgd worker`: a JSON-carried [`cluster::RunConfig`], the
-//!   accept/handshake loop with deterministic node-id assignment, and
-//!   two server I/O backends ([`cluster::IoBackend`]: a `poll(2)`
-//!   event loop in `mux`, or portable reader threads), reproducing the
-//!   simulated engines bit for bit across OS processes.
+//!   `memsgd worker` / `memsgd ring`: a JSON-carried
+//!   [`cluster::RunConfig`], the accept/handshake loop with
+//!   deterministic node-id assignment, two server I/O backends
+//!   ([`cluster::IoBackend`]: a `poll(2)` event loop in `mux`, or
+//!   portable reader threads), and the server-free
+//!   [`cluster::RingNodeProcess`] (one OS process per ring node, no
+//!   server at all), reproducing the simulated engines bit for bit
+//!   across OS processes.
 //! * [`config`] — typed [`config::MethodSpec`] (`memsgd:<comp>`, `sgd`,
 //!   `sgd:qsgd:<levels>`, `sgd:unbiased_rand_k:<k>`) and the legacy
 //!   [`config::Optimizer`] stepping interface.
@@ -104,4 +137,4 @@ pub mod train;
 pub mod transport;
 
 pub use config::{LocalUpdate, MethodSpec};
-pub use experiment::{Experiment, Topology};
+pub use experiment::{Experiment, GossipGraph, Topology};

@@ -32,6 +32,10 @@
 //! GO        := γ(3) γ(version+1)
 //! APPLY     := γ(4) γ(version+1) payload
 //! SHUTDOWN  := γ(5)
+//! REDUCE    := γ(6) γ(round+1) γ(node+1) γ(accounted_bits+1) γ(hop_bits+1) payload
+//! GATHER    := γ(7) γ(round+1) γ(accounted_bits+1) γ(hop_bits+1) payload
+//! EXCHANGE  := γ(8) γ(round+1) γ(node+1) γ(accounted_bits+1) payload
+//! REPORT    := γ(9) γ(round+1) γ(node+1) γ(accounted_bits+1) payload
 //! ```
 //!
 //! * `UPLOAD` — worker → server: one node's compressed sync for a
@@ -55,6 +59,28 @@
 //!   guarantees a worker has applied every update the server applied
 //!   before its next `GO`.
 //! * `SHUTDOWN` — server → workers: the run is over.
+//! * `REDUCE` — ring node `i` → node `i+1` (all-reduce engine): the
+//!   running partial aggregate of this round's updates, folded in node
+//!   id order `0..=i`. `node` names the sender (receivers validate the
+//!   ring discipline); `accounted_bits` carries the running sum of the
+//!   senders' paper-accounted sync bits, and `hop_bits` the running sum
+//!   of the closed-form per-hop transmission costs (this hop included),
+//!   so the recording node can reconcile header tallies against what
+//!   the nodes report at join — and reproduce the simulated engine's
+//!   bit curve without seeing the intermediate partials.
+//! * `GATHER` — ring node → its right neighbor (all-reduce engine): the
+//!   completed round aggregate circulating back around the ring.
+//!   `accounted_bits` is the full round's accounted-bit sum and
+//!   `hop_bits` the round's total reduce-phase hop cost (both fixed as
+//!   the frame is forwarded verbatim hop by hop).
+//! * `EXCHANGE` — gossip node → its matched partner: the sender's own
+//!   compressed sync for the round, payload framed by the producing
+//!   compressor like `UPLOAD`. `node` names the sender;
+//!   `accounted_bits` is that sync's paper-accounted cost.
+//! * `REPORT` — gossip node → the recording driver at an eval round:
+//!   the node's dense iterate, with `accounted_bits` carrying the
+//!   node's *cumulative* transmitted accounting so the driver can
+//!   cross-check the join-time tallies.
 //!
 //! ## Accounted vs transmitted bits
 //!
@@ -247,6 +273,10 @@ const MSG_BROADCAST: u64 = 2;
 const MSG_GO: u64 = 3;
 const MSG_APPLY: u64 = 4;
 const MSG_SHUTDOWN: u64 = 5;
+const MSG_REDUCE: u64 = 6;
+const MSG_GATHER: u64 = 7;
+const MSG_EXCHANGE: u64 = 8;
+const MSG_REPORT: u64 = 9;
 
 /// A decoded wire message (see the module docs for the frame format).
 #[derive(Debug)]
@@ -261,6 +291,14 @@ pub enum WireMsg {
     Apply { version: u64, update: Update },
     /// Server → workers: the run is over.
     Shutdown,
+    /// Ring node → right neighbor (all-reduce): running partial fold.
+    Reduce { round: u64, node: u32, accounted_bits: u64, hop_bits: u64, update: Update },
+    /// Ring node → right neighbor (all-reduce): completed aggregate.
+    Gather { round: u64, accounted_bits: u64, hop_bits: u64, update: Update },
+    /// Gossip node → matched partner: the sender's compressed sync.
+    Exchange { round: u64, node: u32, accounted_bits: u64, update: Update },
+    /// Gossip node → driver (eval rounds): the node's dense iterate.
+    Report { round: u64, node: u32, accounted_bits: u64, update: Update },
 }
 
 /// [`decode_msg`]'s result: the message plus the measured bit length of
@@ -323,6 +361,82 @@ pub fn encode_shutdown(w: &mut BitWriter) {
     w.put_gamma(MSG_SHUTDOWN);
 }
 
+/// Encode a `REDUCE` into `w` (cleared first) with the generic update
+/// codec — the partial aggregate is a merged update, not one
+/// compressor's output, so it goes through the self-describing
+/// [`crate::compress::elias::encode_payload_update`] framing. Returns
+/// the payload bit count.
+pub fn encode_reduce(
+    w: &mut BitWriter,
+    round: u64,
+    node: u32,
+    accounted_bits: u64,
+    hop_bits: u64,
+    update: &Update,
+) -> u64 {
+    w.clear();
+    w.put_gamma(MSG_REDUCE);
+    w.put_gamma(round + 1);
+    w.put_gamma(node as u64 + 1);
+    w.put_gamma(accounted_bits + 1);
+    w.put_gamma(hop_bits + 1);
+    crate::compress::elias::encode_payload_update(update, w)
+}
+
+/// Encode a `GATHER` into `w` (cleared first) with the generic update
+/// codec. Returns the payload bit count.
+pub fn encode_gather(
+    w: &mut BitWriter,
+    round: u64,
+    accounted_bits: u64,
+    hop_bits: u64,
+    update: &Update,
+) -> u64 {
+    w.clear();
+    w.put_gamma(MSG_GATHER);
+    w.put_gamma(round + 1);
+    w.put_gamma(accounted_bits + 1);
+    w.put_gamma(hop_bits + 1);
+    crate::compress::elias::encode_payload_update(update, w)
+}
+
+/// Encode an `EXCHANGE` into `w` (cleared first); like `UPLOAD`, the
+/// payload is the sender's own compressed sync, so it is framed by the
+/// producing compressor's typed codec ([`Compressor::encode_payload`]).
+/// Returns the payload bit count.
+pub fn encode_exchange(
+    w: &mut BitWriter,
+    round: u64,
+    node: u32,
+    accounted_bits: u64,
+    comp: &dyn Compressor,
+    update: &Update,
+) -> u64 {
+    w.clear();
+    w.put_gamma(MSG_EXCHANGE);
+    w.put_gamma(round + 1);
+    w.put_gamma(node as u64 + 1);
+    w.put_gamma(accounted_bits + 1);
+    comp.encode_payload(update, w)
+}
+
+/// Encode a `REPORT` into `w` (cleared first) with the generic update
+/// codec. Returns the payload bit count.
+pub fn encode_report(
+    w: &mut BitWriter,
+    round: u64,
+    node: u32,
+    accounted_bits: u64,
+    update: &Update,
+) -> u64 {
+    w.clear();
+    w.put_gamma(MSG_REPORT);
+    w.put_gamma(round + 1);
+    w.put_gamma(node as u64 + 1);
+    w.put_gamma(accounted_bits + 1);
+    crate::compress::elias::encode_payload_update(update, w)
+}
+
 /// Decode one frame. Total on arbitrary input (truncation, corruption,
 /// unknown kinds, hostile counts — all descriptive errors, never
 /// panics); update payloads are validated against `dim`.
@@ -367,6 +481,34 @@ pub fn decode_msg(frame: &[u8], dim: usize) -> Result<DecodedMsg> {
             (WireMsg::Apply { version, update }, payload)
         }
         MSG_SHUTDOWN => (WireMsg::Shutdown, 0),
+        MSG_REDUCE | MSG_EXCHANGE | MSG_REPORT => {
+            let round = r.get_gamma()? - 1;
+            let node = r.get_gamma()? - 1;
+            if node > u32::MAX as u64 {
+                bail!("decoded node id {node} out of range");
+            }
+            let node = node as u32;
+            let accounted_bits = r.get_gamma()? - 1;
+            let hop_bits = if kind == MSG_REDUCE { r.get_gamma()? - 1 } else { 0 };
+            let before = r.consumed();
+            let update = decode_payload(&mut r, dim)?;
+            let payload = r.consumed() - before;
+            let msg = match kind {
+                MSG_REDUCE => WireMsg::Reduce { round, node, accounted_bits, hop_bits, update },
+                MSG_EXCHANGE => WireMsg::Exchange { round, node, accounted_bits, update },
+                _ => WireMsg::Report { round, node, accounted_bits, update },
+            };
+            (msg, payload)
+        }
+        MSG_GATHER => {
+            let round = r.get_gamma()? - 1;
+            let accounted_bits = r.get_gamma()? - 1;
+            let hop_bits = r.get_gamma()? - 1;
+            let before = r.consumed();
+            let update = decode_payload(&mut r, dim)?;
+            let payload = r.consumed() - before;
+            (WireMsg::Gather { round, accounted_bits, hop_bits, update }, payload)
+        }
         other => bail!("unknown wire message kind {other}"),
     };
     Ok(DecodedMsg { msg, payload_bits })
@@ -468,6 +610,60 @@ mod tests {
         let dec = decode_msg(w.as_bytes(), 4).unwrap();
         assert_eq!(dec.payload_bits, bits);
         assert!(matches!(dec.msg, WireMsg::Broadcast { round: 9, .. }));
+    }
+
+    #[test]
+    fn ring_and_gossip_messages_roundtrip() {
+        let mut w = BitWriter::new();
+        let mut sv = SparseVec::new(64);
+        sv.push(3, 0.5);
+        sv.push(60, -2.0);
+        let partial = Update::Sparse(sv);
+        let bits = encode_reduce(&mut w, 4, 2, 900, 128, &partial);
+        let dec = decode_msg(w.as_bytes(), 64).unwrap();
+        assert_eq!(dec.payload_bits, bits);
+        match dec.msg {
+            WireMsg::Reduce { round, node, accounted_bits, hop_bits, update } => {
+                assert_eq!((round, node, accounted_bits, hop_bits), (4, 2, 900, 128));
+                assert_eq!(update.to_dense(64), partial.to_dense(64));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+
+        let bits = encode_gather(&mut w, 4, 3600, 384, &partial);
+        let dec = decode_msg(w.as_bytes(), 64).unwrap();
+        assert_eq!(dec.payload_bits, bits);
+        match dec.msg {
+            WireMsg::Gather { round, accounted_bits, hop_bits, update } => {
+                assert_eq!((round, accounted_bits, hop_bits), (4, 3600, 384));
+                assert_eq!(update.to_dense(64), partial.to_dense(64));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+
+        let comp = from_spec("top_k:2").unwrap();
+        let bits = encode_exchange(&mut w, 7, 1, 450, comp.as_ref(), &partial);
+        let dec = decode_msg(w.as_bytes(), 64).unwrap();
+        assert_eq!(dec.payload_bits, bits);
+        match dec.msg {
+            WireMsg::Exchange { round, node, accounted_bits, update } => {
+                assert_eq!((round, node, accounted_bits), (7, 1, 450));
+                assert_eq!(update.to_dense(64), partial.to_dense(64));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+
+        let iterate = Update::Dense(vec![1.0, -0.5, 0.25]);
+        let bits = encode_report(&mut w, 9, 5, 12345, &iterate);
+        let dec = decode_msg(w.as_bytes(), 3).unwrap();
+        assert_eq!(dec.payload_bits, bits);
+        match dec.msg {
+            WireMsg::Report { round, node, accounted_bits, update } => {
+                assert_eq!((round, node, accounted_bits), (9, 5, 12345));
+                assert_eq!(update.to_dense(3), vec![1.0, -0.5, 0.25]);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
     }
 
     #[test]

@@ -18,7 +18,7 @@
 use anyhow::{bail, Result};
 
 use memsgd::coordinator::train::{self, TrainConfig};
-use memsgd::coordinator::{LocalUpdate, MethodSpec, Topology};
+use memsgd::coordinator::{GossipGraph, LocalUpdate, MethodSpec, Topology};
 use memsgd::experiments::{self, Which};
 use memsgd::metrics::{self, summary_table, RunRecord};
 use memsgd::optim::Schedule;
@@ -55,6 +55,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("train") => cmd_train(args),
         Some("serve") => cmd_serve(args),
         Some("worker") => cmd_worker(args),
+        Some("ring") => cmd_ring(args),
         Some("bench-gate") => cmd_bench_gate(args),
         Some("info") => cmd_info(args),
         Some(other) => bail!("unknown subcommand '{other}' (see --help in README)"),
@@ -81,7 +82,8 @@ subcommands:
   async     async vs sync parameter server under a network model
   e2e       transformer LM through the PJRT artifacts (full stack)
   train     one ad-hoc run (--method, --epochs, --dataset, --topology
-            sequential|shared|ps-sync|ps-async, --workers-count N,
+            sequential|shared|ps-sync|ps-async|all-reduce|gossip,
+            --workers-count N, --gossip-graph complete|ring,
             --batch B, --local-steps H, --wire,
             --wire-transport loopback|tcp, ...)
   serve     cluster parameter server: bind --listen ADDR, accept exactly
@@ -94,6 +96,10 @@ subcommands:
             --retries), handshake, run the assigned wire protocol;
             --expect-method/--expect-dim/--expect-batch/
             --expect-local-steps pin what the server must be running
+  ring      one node of the server-free all-reduce ring: bind --listen
+            ADDR, dial the successor --next ADDR, run the ring protocol
+            peer-to-peer (no server process); --node I --nodes N place
+            this process in the ring, node 0 prints the final: line
   bench-gate  CI perf gate: compare a fresh hot-path bench JSON against
             the committed baseline (--baseline BENCH_hot_path.json,
             --fresh run.json); exits nonzero on >25% normalized median
@@ -112,7 +118,8 @@ wire mode (train, ps-sync/ps-async only): --wire runs real server/worker
 cluster mode: memsgd serve --listen 127.0.0.1:7070 --nodes 2 ... plus
   one memsgd worker --connect 127.0.0.1:7070 per node runs the same
   protocol across separate OS processes, bit-identical to --wire
-  (see README 'Cluster quickstart')";
+  (see README 'Cluster quickstart'); all-reduce has no server — launch
+  one memsgd ring process per node instead";
 
 fn out_dir(args: &Args) -> String {
     args.get_str("out", "results")
@@ -481,8 +488,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         return finish(args, "train", std::slice::from_ref(&rec));
     }
 
-    // --topology sequential|shared|ps-sync|ps-async [--workers-count N]:
-    // the same method/schedule on any coordination fabric.
+    // --topology sequential|shared|ps-sync|ps-async|all-reduce|gossip
+    // [--workers-count N]: the same method/schedule on any coordination
+    // fabric. Unknown strings are rejected here with the full menu —
+    // never silently defaulted.
     let topology = match args.get_str("topology", "sequential").as_str() {
         "sequential" | "seq" => Topology::Sequential,
         "shared" | "shared-memory" => Topology::SharedMemory { workers },
@@ -496,7 +505,21 @@ fn cmd_train(args: &Args) -> Result<()> {
             };
             Topology::ParamServerAsync { nodes: workers, net }
         }
-        other => bail!("unknown topology '{other}' (sequential|shared|ps-sync|ps-async)"),
+        "all-reduce" | "allreduce" | "ring" => Topology::AllReduce { nodes: workers },
+        "gossip" => {
+            // --gossip-graph complete|ring: who may pair with whom each
+            // round (complete = any node, ring = adjacent nodes only).
+            let graph = match args.get_str("gossip-graph", "complete").as_str() {
+                "complete" | "full" => GossipGraph::Complete,
+                "ring" => GossipGraph::Ring,
+                other => bail!("unknown gossip graph '{other}' (complete|ring)"),
+            };
+            Topology::Gossip { nodes: workers, graph }
+        }
+        other => bail!(
+            "unknown topology '{other}' \
+             (sequential|shared|ps-sync|ps-async|all-reduce|gossip)"
+        ),
     };
     // --wire: run the parameter-server topologies on the threaded
     // message-passing runtime (real Elias-coded bytes over an
@@ -639,6 +662,71 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let backoff = Backoff { attempts, ..Backoff::default() };
     let (node, bits) = run_worker(&addr, &expect, &backoff)?;
     println!("worker {node} done: {bits} accounted upload bits");
+    Ok(())
+}
+
+/// `memsgd ring` — one node of the server-free all-reduce ring. Every
+/// process binds `--listen`, dials its successor `--next`, and speaks
+/// the ring reduce/gather protocol peer-to-peer; there is no server.
+/// Node 0 doubles as the driver: it owns the `RunRecord` and prints the
+/// same `final:` line CI diffs against the simulated twin
+/// (`train --topology all-reduce`).
+fn cmd_ring(args: &Args) -> Result<()> {
+    use memsgd::coordinator::cluster::{RingNodeProcess, RunConfig};
+    use memsgd::coordinator::net::Backoff;
+    let which = Which::parse(&args.get_str("dataset", "epsilon"))?;
+    let scale = args.get("scale", 20usize)?;
+    let seed = args.get("seed", 1u64)?;
+    let method = MethodSpec::parse(&args.get_str("method", "memsgd:top_k:1"))?;
+    let epochs = args.get("epochs", 1usize)?;
+    let gamma = args.get("gamma", 2.0f64)?;
+    let evals = args.get("evals", 10usize)?;
+    let nodes = args.get("nodes", 2usize)?;
+    let node = args.get("node", 0usize)?;
+    let local = LocalUpdate::new(args.get("batch", 1usize)?, args.get("local-steps", 1usize)?)?;
+    let listen = args.get_str("listen", "127.0.0.1:7080");
+    let next = args.get_str("next", "127.0.0.1:7080");
+    let attempts = args.get("retries", 8u32)?;
+    let out = out_dir(args);
+    // Same derivation as `serve`: steps/schedule come from the dataset
+    // *shape*; every ring process rebuilds the data from the config, so
+    // all nodes must be launched with identical experiment flags.
+    let (n, dim) = experiments::dataset_shape(which, scale);
+    let steps = epochs * n;
+    let schedule = method.paper_schedule(dim, n, gamma, which.shift_multiplier(), None);
+    let cfg = RunConfig {
+        dataset: which.name().into(),
+        scale,
+        seed,
+        method: method.spec_string(),
+        schedule,
+        steps,
+        eval_points: evals,
+        nodes,
+        local,
+        topology: "all-reduce".into(),
+        network: "1g".into(),
+        dim,
+    };
+    let ring = RingNodeProcess::bind(&listen, cfg, node)?;
+    println!(
+        "ring node {node}/{nodes} on {} — dialing successor {next}",
+        ring.local_addr()?
+    );
+    // Reject unknown flags before blocking on the handshake.
+    args.finish()?;
+    let backoff = Backoff { attempts, ..Backoff::default() };
+    match ring.run(&next, &backoff)? {
+        Some(rec) => {
+            print_curves(std::slice::from_ref(&rec));
+            println!("\n{}", summary_table(std::slice::from_ref(&rec)));
+            print_final_line(&rec);
+            let path = format!("{out}/ring.json");
+            metrics::write_records(&path, std::slice::from_ref(&rec))?;
+            println!("records -> {path}");
+        }
+        None => println!("ring node {node} done"),
+    }
     Ok(())
 }
 

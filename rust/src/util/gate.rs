@@ -152,6 +152,22 @@ pub fn server_dispatch_case() -> String {
     "server dispatch 8up  top_10 d=47236".to_string()
 }
 
+/// Canonical name of the ring-merge case: folding `w` top-10 sparse
+/// partials into one `RingPartial` aggregate and materializing the
+/// mixed update, at the RCV1 dimension — the per-round merge cost every
+/// all-reduce hop pays (the sparse-aware fold that replaces the
+/// parameter server's aggregation slot).
+pub fn ring_merge_sparse_case(w: usize) -> String {
+    format!("ring merge sparse  W={w:<2} top_10 d=47236")
+}
+
+/// Canonical name of the ring-merge case with one dense contribution in
+/// the mix — the spill path: the sparse partial is re-anchored into a
+/// dense buffer in fixed node-id fold order.
+pub fn ring_merge_mixed_case(w: usize) -> String {
+    format!("ring merge mixed   W={w:<2} top_10 d=47236")
+}
+
 /// A fresh-run-only invariant: `slow_case` must be at least `min_ratio`
 /// × slower than `fast_case` (both in the same bench).
 #[derive(Clone, Debug)]

@@ -1,0 +1,430 @@
+//! Server-free topology suite: the threaded AllReduce ring and Gossip
+//! engines against their single-threaded simulations, on every
+//! transport backend, plus the multi-process ring runtime.
+//!
+//! * **Golden trajectories** — `Topology::AllReduce` and
+//!   `Topology::Gossip` in wire mode must reproduce the simulated
+//!   engines **bit for bit** (loss curve, accounted bits, every extra
+//!   the simulation reports) on every `MethodSpec` × `LocalUpdate`
+//!   combination and on **every transport backend** (in-process
+//!   `Loopback` and kernel-socket `TcpTransport`), with every update
+//!   round-tripping through the Elias payload codec and real channels
+//!   between threads.
+//! * **Trajectory semantics** — AllReduce with n nodes is the same
+//!   synchronous-aggregation algorithm as the parameter server: its
+//!   loss trajectory must equal `ParamServerSync` point for point (only
+//!   the bit accounting differs — ring hops vs upload+broadcast).
+//! * **Wire accounting** — the `wire_frame_bits` a run reports must
+//!   equal the bytes independently counted at the channel boundary
+//!   (`CountingTransport`). The ring convention (the sender of every
+//!   directed edge holds the transport's server end) routes all ring
+//!   traffic to the broadcast counter; gossip splits across both.
+//! * **Cluster runtime** — `RingNodeProcess` peers over localhost TCP
+//!   (separate threads standing in for separate processes — the byte
+//!   streams are identical) must reproduce the simulated AllReduce
+//!   record bit for bit, with node 0 owning the record.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use memsgd::coordinator::cluster::{RingNodeProcess, RunConfig};
+use memsgd::coordinator::net::{Backoff, TcpTransport};
+use memsgd::coordinator::transport::{CountingTransport, Loopback, Transport};
+use memsgd::coordinator::{Experiment, GossipGraph, LocalUpdate, MethodSpec, Topology};
+use memsgd::data::Dataset;
+use memsgd::experiments::{self, Which};
+use memsgd::metrics::RunRecord;
+use memsgd::models::LogisticModel;
+use memsgd::optim::Schedule;
+
+fn data() -> Dataset {
+    memsgd::data::synthetic::epsilon_like(240, 12, 5)
+}
+
+/// Every method kind the engines accept (the `wire_protocol.rs` list):
+/// memory-carrying sparsifiers, data-dependent operators, memory-free
+/// baselines, and the scaled unbiased estimator.
+fn all_methods() -> Vec<MethodSpec> {
+    [
+        "memsgd:top_k:2",
+        "memsgd:rand_k:2",
+        "memsgd:random_p:0.5",
+        "memsgd:block_top_k:3",
+        "memsgd:sign",
+        "memsgd:threshold:0.25",
+        "memsgd:qsgd:8",
+        "sgd",
+        "sgd:qsgd:8",
+        "sgd:unbiased_rand_k:2",
+    ]
+    .iter()
+    .map(|s| MethodSpec::parse(s).unwrap())
+    .collect()
+}
+
+fn all_locals() -> Vec<LocalUpdate> {
+    vec![LocalUpdate::default(), LocalUpdate::new(2, 3).unwrap()]
+}
+
+fn backends() -> Vec<(&'static str, fn() -> Box<dyn Transport>)> {
+    vec![
+        ("loopback", || Box::new(Loopback) as Box<dyn Transport>),
+        ("tcp", || Box::new(TcpTransport) as Box<dyn Transport>),
+    ]
+}
+
+/// Bit-for-bit record equality: curve (t, accounted bits, f64 loss),
+/// step/bit totals, and every extra the simulated engine reports. The
+/// wire record may add `wire_*` keys on top; nothing the simulation
+/// wrote may differ.
+fn assert_records_match(sim: &RunRecord, wired: &RunRecord, label: &str) {
+    assert_eq!(sim.method, wired.method, "{label}: method");
+    assert_eq!(sim.dataset, wired.dataset, "{label}: dataset");
+    assert_eq!(sim.schedule, wired.schedule, "{label}: schedule");
+    assert_eq!(sim.steps, wired.steps, "{label}: steps");
+    assert_eq!(sim.total_bits, wired.total_bits, "{label}: total_bits");
+    assert_eq!(sim.curve, wired.curve, "{label}: loss curve (t/bits/loss, bit-for-bit)");
+    for (key, val) in &sim.extra {
+        assert_eq!(
+            wired.extra.get(key),
+            Some(val),
+            "{label}: extra[{key}] diverged"
+        );
+    }
+    assert_eq!(wired.extra.get("wire"), Some(&1.0), "{label}: wire marker");
+    assert!(wired.extra["wire_frame_bits"] > 0.0, "{label}: no frames counted");
+}
+
+fn all_reduce_exp(
+    data: &Dataset,
+    method: MethodSpec,
+    local: LocalUpdate,
+    transport: Option<Box<dyn Transport>>,
+) -> RunRecord {
+    let exp = Experiment::new(LogisticModel::new(data, 1.0 / 240.0))
+        .dataset(&data.name)
+        .method(method)
+        .schedule(Schedule::constant(0.4))
+        .topology(Topology::AllReduce { nodes: 3 })
+        .steps(540)
+        .eval_points(4)
+        .seed(7)
+        .local_update(local);
+    match transport {
+        Some(t) => exp.wire_transport(t),
+        None => exp,
+    }
+    .run()
+    .unwrap()
+}
+
+#[test]
+fn threaded_all_reduce_is_bit_identical_on_every_method_and_schedule() {
+    let data = data();
+    for method in all_methods() {
+        for local in all_locals() {
+            let label = format!("{} B={} H={}", method.name(), local.batch, local.sync_every);
+            let sim = all_reduce_exp(&data, method.clone(), local, None);
+            for (backend, make) in backends() {
+                let wired = all_reduce_exp(&data, method.clone(), local, Some(make()));
+                let label = format!("{label} [{backend}]");
+                assert_records_match(&sim, &wired, &label);
+                // The ring split must account for every frame bit and
+                // every accounted bit: total = reduce hops + gather hops.
+                assert_eq!(
+                    wired.extra["wire_reduce_frame_bits"]
+                        + wired.extra["wire_gather_frame_bits"],
+                    wired.extra["wire_frame_bits"],
+                    "{label}: per-leg frame bits don't sum to the total"
+                );
+                assert_eq!(
+                    wired.extra["reduce_bits"] + wired.extra["gather_bits"],
+                    wired.total_bits as f64,
+                    "{label}: accounted legs don't sum to total_bits"
+                );
+                assert!(
+                    wired.extra["wire_reduce_payload_bits"]
+                        <= wired.extra["wire_reduce_frame_bits"],
+                    "{label}: reduce payload exceeds reduce frames"
+                );
+                assert!(
+                    wired.extra["wire_gather_payload_bits"]
+                        <= wired.extra["wire_gather_frame_bits"],
+                    "{label}: gather payload exceeds gather frames"
+                );
+            }
+        }
+    }
+}
+
+fn gossip_exp(
+    data: &Dataset,
+    method: MethodSpec,
+    local: LocalUpdate,
+    graph: GossipGraph,
+    transport: Option<Box<dyn Transport>>,
+) -> RunRecord {
+    let exp = Experiment::new(LogisticModel::new(data, 1.0 / 240.0))
+        .dataset(&data.name)
+        .method(method)
+        .schedule(Schedule::constant(0.4))
+        .topology(Topology::Gossip { nodes: 3, graph })
+        .steps(540)
+        .eval_points(4)
+        .seed(7)
+        .local_update(local);
+    match transport {
+        Some(t) => exp.wire_transport(t),
+        None => exp,
+    }
+    .run()
+    .unwrap()
+}
+
+#[test]
+fn threaded_gossip_is_bit_identical_on_every_method_graph_and_schedule() {
+    let data = data();
+    for method in all_methods() {
+        for local in all_locals() {
+            for graph in [GossipGraph::Complete, GossipGraph::Ring] {
+                let label = format!(
+                    "gossip {} B={} H={} {}",
+                    method.name(),
+                    local.batch,
+                    local.sync_every,
+                    graph.name()
+                );
+                let sim = gossip_exp(&data, method.clone(), local, graph, None);
+                for (backend, make) in backends() {
+                    let wired = gossip_exp(&data, method.clone(), local, graph, Some(make()));
+                    let label = format!("{label} [{backend}]");
+                    assert_records_match(&sim, &wired, &label);
+                    assert_eq!(
+                        wired.extra["wire_exchange_frame_bits"]
+                            + wired.extra["wire_report_frame_bits"],
+                        wired.extra["wire_frame_bits"],
+                        "{label}: per-kind frame bits don't sum to the total"
+                    );
+                    assert!(
+                        wired.extra["wire_exchange_payload_bits"]
+                            <= wired.extra["wire_exchange_frame_bits"],
+                        "{label}: exchange payload exceeds exchange frames"
+                    );
+                    assert!(
+                        wired.extra["wire_report_payload_bits"]
+                            <= wired.extra["wire_report_frame_bits"],
+                        "{label}: report payload exceeds report frames"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// AllReduce is the same synchronous aggregation as the parameter
+/// server — only the fabric (and therefore the bit accounting)
+/// differs. The loss trajectories must be equal point for point, and
+/// the nodes' accounted sync bits must agree.
+#[test]
+fn all_reduce_trajectory_equals_param_server_sync() {
+    let data = data();
+    let run = |topology: Topology| {
+        Experiment::new(LogisticModel::new(&data, 1.0 / 240.0))
+            .dataset(&data.name)
+            .method(MethodSpec::mem_top_k(2))
+            .schedule(Schedule::constant(0.4))
+            .topology(topology)
+            .steps(540)
+            .eval_points(4)
+            .seed(7)
+            .run()
+            .unwrap()
+    };
+    let ps = run(Topology::ParamServerSync { nodes: 3 });
+    let ring = run(Topology::AllReduce { nodes: 3 });
+    assert_eq!(ps.steps, ring.steps, "steps");
+    assert_eq!(ps.curve.len(), ring.curve.len(), "eval points");
+    for (p, r) in ps.curve.iter().zip(&ring.curve) {
+        assert_eq!(p.t, r.t, "eval round");
+        assert_eq!(p.loss, r.loss, "loss at t={} (bit-for-bit)", p.t);
+    }
+    assert_eq!(
+        ps.extra["upload_bits"], ring.extra["upload_bits"],
+        "accounted sync bits"
+    );
+}
+
+#[test]
+fn reported_ring_and_gossip_bits_equal_bytes_counted_on_the_channel() {
+    let data = data();
+    for (backend, make) in backends() {
+        // AllReduce: every directed ring edge is a duplex whose sender
+        // holds the server end, so every byte of ring traffic lands on
+        // the broadcast counter and none on the upload counter.
+        let transport = CountingTransport::new(make());
+        let counter = transport.counter();
+        let up = transport.upload_counter();
+        let down = transport.broadcast_counter();
+        let rec = Experiment::new(LogisticModel::new(&data, 1.0 / 240.0))
+            .dataset(&data.name)
+            .method(MethodSpec::mem_top_k(2))
+            .schedule(Schedule::constant(0.4))
+            .topology(Topology::AllReduce { nodes: 3 })
+            .steps(540)
+            .eval_points(4)
+            .seed(3)
+            .wire_transport(Box::new(transport))
+            .run()
+            .unwrap();
+        let label = format!("all-reduce [{backend}]");
+        let counted_bits = counter.load(Ordering::Relaxed) * 8;
+        assert_eq!(
+            rec.extra["wire_frame_bits"], counted_bits as f64,
+            "{label}: reported frame bits != bytes on the channel"
+        );
+        assert_eq!(
+            down.load(Ordering::Relaxed) * 8,
+            counted_bits,
+            "{label}: ring traffic must all flow sender->successor (server ends)"
+        );
+        assert_eq!(up.load(Ordering::Relaxed), 0, "{label}: no upload-end traffic in a ring");
+
+        // Gossip: edge duplexes put the lower-id node on the server end
+        // and monitors put the driver there, so exchange bytes split
+        // across both counters and REPORT bytes land on upload — the
+        // two counters must still account for every byte.
+        let transport = CountingTransport::new(make());
+        let counter = transport.counter();
+        let up = transport.upload_counter();
+        let down = transport.broadcast_counter();
+        let rec = Experiment::new(LogisticModel::new(&data, 1.0 / 240.0))
+            .dataset(&data.name)
+            .method(MethodSpec::mem_top_k(2))
+            .schedule(Schedule::constant(0.4))
+            .topology(Topology::Gossip { nodes: 3, graph: GossipGraph::Complete })
+            .steps(540)
+            .eval_points(4)
+            .seed(3)
+            .wire_transport(Box::new(transport))
+            .run()
+            .unwrap();
+        let label = format!("gossip [{backend}]");
+        let counted_bits = counter.load(Ordering::Relaxed) * 8;
+        let up_bits = up.load(Ordering::Relaxed) * 8;
+        let down_bits = down.load(Ordering::Relaxed) * 8;
+        assert_eq!(
+            rec.extra["wire_frame_bits"], counted_bits as f64,
+            "{label}: reported frame bits != bytes on the channel"
+        );
+        assert_eq!(
+            up_bits + down_bits,
+            counted_bits,
+            "{label}: direction split loses bytes"
+        );
+        assert!(up_bits > 0, "{label}: REPORT frames must flow node->driver");
+    }
+}
+
+/// Deliberately tiny multi-process config (the `cluster_lifecycle.rs`
+/// shape): epsilon at a scale that floors n at 64 samples, d = 2000.
+fn ring_config(nodes: usize) -> RunConfig {
+    RunConfig {
+        dataset: "epsilon".into(),
+        scale: 100_000,
+        seed: 11,
+        method: "memsgd:top_k:1".into(),
+        schedule: Schedule::constant(0.1),
+        steps: 96,
+        eval_points: 3,
+        nodes,
+        local: LocalUpdate::default(),
+        topology: "all-reduce".into(),
+        network: "1g".into(),
+        dim: 2000,
+    }
+}
+
+fn fast_backoff() -> Backoff {
+    Backoff {
+        attempts: 8,
+        base: Duration::from_millis(1),
+        cap: Duration::from_millis(20),
+    }
+}
+
+/// Three `RingNodeProcess` peers over localhost TCP sockets, no server
+/// process anywhere: node 0's record must reproduce the simulated
+/// AllReduce trajectory bit for bit, nodes 1..n return no record, and
+/// the whole ring terminates under a watchdog.
+#[test]
+fn multiprocess_ring_reproduces_the_simulated_trajectory() {
+    let nodes = 3;
+    let cfg = ring_config(nodes);
+
+    let which = Which::parse(&cfg.dataset).unwrap();
+    let data = experiments::dataset(which, cfg.scale, cfg.seed);
+    let sim = Experiment::new(LogisticModel::new(&data, 1.0 / data.n() as f64))
+        .dataset(&data.name)
+        .method(MethodSpec::parse(&cfg.method).unwrap())
+        .schedule(cfg.schedule.clone())
+        .topology(Topology::AllReduce { nodes })
+        .steps(cfg.steps)
+        .eval_points(cfg.eval_points)
+        .seed(cfg.seed)
+        .local_update(cfg.local)
+        .run()
+        .unwrap();
+
+    // Bind every node first (ports are known before anyone dials), then
+    // let each dial its successor concurrently.
+    let procs: Vec<RingNodeProcess> = (0..nodes)
+        .map(|i| RingNodeProcess::bind("127.0.0.1:0", cfg.clone(), i).unwrap())
+        .collect();
+    let addrs: Vec<String> =
+        procs.iter().map(|p| p.local_addr().unwrap().to_string()).collect();
+    let (tx, rx) = mpsc::channel();
+    let handles: Vec<_> = procs
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let next = addrs[(i + 1) % nodes].clone();
+            let tx = tx.clone();
+            thread::spawn(move || {
+                tx.send((i, p.run(&next, &fast_backoff()))).ok();
+            })
+        })
+        .collect();
+    drop(tx);
+
+    let mut record = None;
+    for _ in 0..nodes {
+        let (node, result) = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("ring hung past the watchdog");
+        match result.unwrap() {
+            Some(rec) => {
+                assert_eq!(node, 0, "only node 0 owns the record");
+                record = Some(rec);
+            }
+            None => assert_ne!(node, 0, "node 0 returned no record"),
+        }
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let record = record.expect("node 0 produced no record");
+
+    assert_eq!(sim.method, record.method, "method");
+    assert_eq!(sim.dataset, record.dataset, "dataset");
+    assert_eq!(sim.schedule, record.schedule, "schedule");
+    assert_eq!(sim.steps, record.steps, "steps");
+    assert_eq!(sim.total_bits, record.total_bits, "total_bits");
+    assert_eq!(sim.curve, record.curve, "loss curve (bit-for-bit)");
+    for (key, val) in &sim.extra {
+        assert_eq!(record.extra.get(key), Some(val), "extra[{key}] diverged");
+    }
+    assert_eq!(record.extra.get("cluster"), Some(&1.0), "cluster marker");
+    assert_eq!(record.extra.get("wire"), Some(&1.0), "wire marker");
+}

@@ -1,11 +1,19 @@
 //! Failure-injection suite: the coordinator must degrade loudly (errors)
 //! or safely (finite, bounded state) under hostile inputs — non-finite
 //! gradients, malformed data files, corrupted checkpoints, absurd
-//! configurations.
+//! configurations, and peers vanishing mid-protocol on the server-free
+//! wire engines.
 
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::Result;
 use memsgd::compress::{self, Update};
 use memsgd::coordinator::checkpoint::Checkpoint;
 use memsgd::coordinator::train::{self, TrainConfig};
+use memsgd::coordinator::transport::{Channel, Loopback, Transport};
+use memsgd::coordinator::{Experiment, GossipGraph, MethodSpec, Topology};
 use memsgd::data::{libsvm, synthetic, Dataset};
 use memsgd::models::{GradBackend, LogisticModel};
 use memsgd::optim::{MemSgd, Schedule};
@@ -214,6 +222,145 @@ fn all_same_label_dataset_is_separable_and_converges() {
         opt.step(&grad, 0.5, &mut rng);
     }
     assert!(model.full_loss(&opt.x) < 0.3);
+}
+
+// ---------------------------------------------------------------------------
+// Server-free wire engines: peers vanishing mid-protocol
+// ---------------------------------------------------------------------------
+
+/// A channel end that hangs up after a budget of successful sends: the
+/// next send errors and drops the underlying channel, so the peer's
+/// blocked `recv` observes a closed channel — exactly what a killed
+/// process looks like to the survivor.
+struct CutChannel {
+    inner: Option<Box<dyn Channel>>,
+    sends_left: usize,
+}
+
+impl Channel for CutChannel {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        if self.sends_left == 0 {
+            self.inner = None; // hang up: the peer sees "channel closed"
+            anyhow::bail!("injected fault: peer hung up mid-round");
+        }
+        self.sends_left -= 1;
+        match self.inner.as_mut() {
+            Some(c) => c.send(frame),
+            None => anyhow::bail!("injected fault: peer hung up mid-round"),
+        }
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        match self.inner.as_mut() {
+            Some(c) => c.recv(),
+            None => anyhow::bail!("injected fault: peer hung up mid-round"),
+        }
+    }
+}
+
+/// A transport that cuts the server end of the `target`-th duplex it
+/// hands out after `sends` successful sends. Duplex creation order is
+/// part of the engines' documented contracts (ring: directed edge
+/// `i → (i+1) % n` in edge order; gossip: edges `(a, b)` for `a < b` in
+/// lexicographic order, then one monitor per node), so the target index
+/// selects exactly one known link.
+struct CutTransport {
+    inner: Box<dyn Transport>,
+    next: usize,
+    target: usize,
+    sends: usize,
+}
+
+impl Transport for CutTransport {
+    fn duplex(&mut self) -> (Box<dyn Channel>, Box<dyn Channel>) {
+        let (se, we) = self.inner.duplex();
+        let i = self.next;
+        self.next += 1;
+        if i == self.target {
+            (Box::new(CutChannel { inner: Some(se), sends_left: self.sends }), we)
+        } else {
+            (se, we)
+        }
+    }
+}
+
+/// Run an experiment with one cut link under a watchdog (the transport
+/// is built inside the watchdog thread — `dyn Transport` is not
+/// `Send`). The engines' teardown contract is that an error anywhere
+/// cascades as "channel closed" around the fabric (every endpoint
+/// dropped on the error path), so a dead peer can never hang the run;
+/// `thread::scope` inside the engine guarantees every node thread is
+/// joined before the error returns.
+fn run_with_watchdog(
+    topology: Topology,
+    target: usize,
+    sends: usize,
+) -> Result<memsgd::metrics::RunRecord> {
+    let (tx, rx) = mpsc::channel();
+    let handle = thread::spawn(move || {
+        let transport = CutTransport {
+            inner: Box::new(Loopback),
+            next: 0,
+            target,
+            sends,
+        };
+        let data = synthetic::epsilon_like(240, 12, 5);
+        let result = Experiment::new(LogisticModel::new(&data, 1.0 / 240.0))
+            .dataset(&data.name)
+            .method(MethodSpec::mem_top_k(2))
+            .schedule(Schedule::constant(0.4))
+            .topology(topology)
+            .steps(150)
+            .eval_points(3)
+            .seed(7)
+            .wire_transport(Box::new(transport))
+            .run();
+        tx.send(result).ok();
+    });
+    let result = rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("wire engine hung past the watchdog with a dead peer");
+    handle.join().unwrap();
+    result
+}
+
+/// A ring peer closing mid-reduce: node 2's ring edge to the driver is
+/// cut after two rounds, so its third GATHER send fails and every other
+/// node observes a closed channel. The run must fail descriptively —
+/// the error names the node the driver lost — and must return (no hung
+/// recv, all threads joined).
+#[test]
+fn ring_peer_closing_mid_reduce_fails_descriptively_without_hanging() {
+    // Duplex order is edge order: 0→1, 1→2, 2→0. Target index 2 cuts
+    // the 2→0 edge whose server (sending) end node 2 holds.
+    let err = run_with_watchdog(Topology::AllReduce { nodes: 3 }, 2, 2)
+        .expect_err("a cut ring edge must fail the run");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("node 2"), "error does not name the lost node: {msg}");
+    assert!(
+        msg.contains("channel closed") || msg.contains("injected fault"),
+        "error misses the disconnect: {msg}"
+    );
+}
+
+/// A gossip neighbor dropping mid-exchange: node 0's edge to node 1 is
+/// cut after two paired exchanges, so node 0 dies mid-exchange and the
+/// recording driver finds its next REPORT missing. The run must fail
+/// descriptively with the dead node named, and must return.
+#[test]
+fn gossip_neighbor_dropping_mid_exchange_fails_descriptively_without_hanging() {
+    // Duplex order: edges (0,1), (0,2), (1,2), then monitors 0, 1, 2.
+    // Target index 0 cuts the (0,1) edge whose server (lower-id) end
+    // node 0 holds.
+    let err =
+        run_with_watchdog(Topology::Gossip { nodes: 3, graph: GossipGraph::Complete }, 0, 2)
+            .expect_err("a cut gossip edge must fail the run");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("node 0"), "error does not name the dead node: {msg}");
+    assert!(
+        msg.contains("channel closed") || msg.contains("injected fault"),
+        "error misses the disconnect: {msg}"
+    );
 }
 
 /// Sparse updates applied to the wrong-dimension vector are a programmer
