@@ -347,6 +347,81 @@ fn main() {
         });
     }
 
+    // --- degraded-quorum fold + SNAPSHOT codec (the failure hot paths) --------
+    // The drop-round policy's steady-state server cost: decode the 7
+    // live top-10 uploads of an 8-slot round (the dead slot skipped in
+    // node-id order, exactly as `serve_sync_protocol` skips it), fold
+    // them into the sparse aggregate, frame the quorum-mean (1/7)
+    // pre-scaled broadcast, and apply it to the server iterate. Plus
+    // the rejoin/restart control-plane frames: SNAPSHOT encode (the
+    // restarted server re-syncing a replica) and decode (the rejoining
+    // worker seeding its model) of the full dense iterate at the RCV1
+    // dimension — the one O(d)-payload message in the failure protocol,
+    // priced here so resync cost stays visible in the baseline.
+    {
+        use memsgd::compress::elias::BitWriter;
+        use memsgd::compress::Compressor;
+        use memsgd::coordinator::transport::{
+            decode_msg, encode_broadcast, encode_snapshot, encode_upload, WireMsg,
+        };
+        use std::collections::BTreeMap;
+
+        let d = 47_236usize;
+        let mut comp = compress::from_spec("top_k:10").unwrap();
+        let mut rng = Prng::new(23);
+        let mut frames = Vec::new();
+        for node in 0..8u32 {
+            if node == 3 {
+                continue; // the dead slot: drop-round's fold never sees it
+            }
+            let x: Vec<f32> = (0..d)
+                .map(|i| (((i + node as usize * 173) % 103) as f32 - 51.0) * 0.01)
+                .collect();
+            let mut out = Update::new_sparse(d);
+            comp.compress(&x, &mut rng, &mut out);
+            let mut w = BitWriter::new();
+            encode_upload(&mut w, 0, node, 1_234, &*comp, &out);
+            frames.push(w.as_bytes().to_vec());
+        }
+        let mut x = vec![0.01f32; d];
+        let mut agg: BTreeMap<u32, f32> = BTreeMap::new();
+        let mut bc = Update::new_sparse(d);
+        let mut w = BitWriter::new();
+        b.run(&gate::server_fold_quorum_case(), || {
+            agg.clear();
+            for frame in &frames {
+                match decode_msg(frame, d).unwrap().msg {
+                    WireMsg::Upload { update: Update::Sparse(sv), .. } => {
+                        for (&j, &vj) in sv.idx.iter().zip(&sv.val) {
+                            *agg.entry(j).or_insert(0.0) += vj;
+                        }
+                    }
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            let scale = 1.0 / 7.0f32;
+            let sv = bc.sparse_mut(d);
+            for (&j, &vj) in agg.iter() {
+                sv.push(j, vj * scale);
+            }
+            w.clear();
+            encode_broadcast(&mut w, 0, &bc);
+            for (&j, &vj) in agg.iter() {
+                x[j as usize] -= vj * scale;
+            }
+        });
+
+        let model = Update::Dense((0..d).map(|i| ((i % 71) as f32 - 35.0) * 1e-3).collect());
+        b.run(&gate::snapshot_encode_case(), || {
+            w.clear();
+            encode_snapshot(&mut w, 24, &model);
+        });
+        let bytes = w.as_bytes().to_vec();
+        b.run(&gate::snapshot_decode_case(), || {
+            decode_msg(&bytes, d).unwrap();
+        });
+    }
+
     // --- ring merge: the server-free engines' per-round fold ------------------
     // One all-reduce round's aggregation work at the last ring position:
     // reset the partial, fold one top-10 contribution per node of an

@@ -22,6 +22,14 @@
 //! checkpoints as `batch = 1` and `run_resumable` refuses mismatches.
 //!
 //! No compression, no external deps; `d = 47'236` checkpoints are ~0.9 MB.
+//!
+//! [`ClusterCheckpoint`] is the *cluster-level* sibling (`memsgd serve
+//! --checkpoint`): the server's model, round counter, and per-node
+//! liveness mask in their own container (magic `MEMSGDCL`). It is
+//! deliberately smaller than the sequential checkpoint — worker error
+//! memories live in other processes and die with them, so a server
+//! restart resumes the *model*, not the suppressed mass; restart runs
+//! are tested for completion and finiteness, never golden-pinned.
 
 use std::fs;
 use std::io::{Cursor, Read as _, Write as _};
@@ -235,6 +243,118 @@ impl Checkpoint {
     }
 }
 
+const CLUSTER_MAGIC: &[u8; 8] = b"MEMSGDCL";
+const CLUSTER_VERSION: u32 = 1;
+
+/// A cluster server's mid-run state (`memsgd serve --checkpoint`): the
+/// model, the next round to serve, and which nodes the failure policy
+/// has marked dead. Saved atomically every `--checkpoint-every` rounds
+/// by `serve_sync_protocol`; loaded at bind time so a killed server
+/// restarts where it left off.
+///
+/// Format (little-endian):
+///
+/// ```text
+/// magic "MEMSGDCL" | version u32 | round u64 | d u64 | x [f32; d]
+/// | nodes u64 | dead [u8; nodes]
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterCheckpoint {
+    /// The next round the restarted serve starts at.
+    pub round: u64,
+    /// The server model at that round boundary.
+    pub x: Vec<f32>,
+    /// Per-node liveness mask (`true` = marked dead by the policy).
+    pub dead: Vec<bool>,
+}
+
+impl ClusterCheckpoint {
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let d = self.x.len();
+        let mut out = Vec::with_capacity(32 + d * 4 + self.dead.len());
+        out.extend_from_slice(CLUSTER_MAGIC);
+        out.extend_from_slice(&CLUSTER_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&(d as u64).to_le_bytes());
+        for &v in &self.x {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.dead.len() as u64).to_le_bytes());
+        out.extend(self.dead.iter().map(|&b| b as u8));
+        out
+    }
+
+    /// Parse from bytes (validates magic, version, lengths — checked
+    /// arithmetic, like the sequential container).
+    pub fn from_bytes(bytes: &[u8]) -> Result<ClusterCheckpoint> {
+        let mut cur = Cursor::new(bytes);
+        let mut magic = [0u8; 8];
+        cur.read_exact(&mut magic).context("truncated magic")?;
+        if &magic != CLUSTER_MAGIC {
+            bail!("not a memsgd cluster checkpoint (bad magic)");
+        }
+        let version = read_u32(&mut cur)?;
+        if version == 0 || version > CLUSTER_VERSION {
+            bail!(
+                "unsupported cluster checkpoint version {version} \
+                 (expected <= {CLUSTER_VERSION})"
+            );
+        }
+        let round = read_u64(&mut cur)?;
+        let d = read_u64(&mut cur)? as usize;
+        let remaining = bytes.len() as u64 - cur.position();
+        let need = (d as u64)
+            .checked_mul(4)
+            .and_then(|v| v.checked_add(8))
+            .ok_or_else(|| anyhow::anyhow!("implausible cluster checkpoint dimension {d}"))?;
+        if remaining < need {
+            bail!("cluster checkpoint truncated: d={d} but only {remaining} bytes left");
+        }
+        let mut x = vec![0.0f32; d];
+        for v in &mut x {
+            *v = f32::from_le_bytes(read_arr(&mut cur)?);
+        }
+        let nodes = read_u64(&mut cur)? as usize;
+        let left = bytes.len() as u64 - cur.position();
+        if (nodes as u64) > left {
+            bail!("cluster checkpoint truncated: {nodes} nodes but only {left} bytes left");
+        }
+        let mut dead = Vec::with_capacity(nodes);
+        for _ in 0..nodes {
+            let mut b = [0u8; 1];
+            cur.read_exact(&mut b).context("truncated liveness mask")?;
+            dead.push(match b[0] {
+                0 => false,
+                1 => true,
+                other => bail!("bad liveness flag {other}"),
+            });
+        }
+        Ok(ClusterCheckpoint { round, x, dead })
+    }
+
+    /// Write to a file (atomically: temp + rename, like [`Checkpoint`]).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = fs::File::create(&tmp)
+                .with_context(|| format!("create {}", tmp.display()))?;
+            f.write_all(&self.to_bytes())?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, path).with_context(|| format!("rename into {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Read from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<ClusterCheckpoint> {
+        let bytes = fs::read(path.as_ref())
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        ClusterCheckpoint::from_bytes(&bytes)
+    }
+}
+
 fn read_u32(cur: &mut Cursor<&[u8]>) -> Result<u32> {
     Ok(u32::from_le_bytes(read_arr(cur)?))
 }
@@ -364,6 +484,39 @@ mod tests {
         let mut bad_version = bytes;
         bad_version[8] = 99;
         assert!(Checkpoint::from_bytes(&bad_version).is_err());
+    }
+
+    #[test]
+    fn cluster_checkpoint_roundtrips_bytes_and_file() {
+        let ck = ClusterCheckpoint {
+            round: 17,
+            x: (0..40).map(|i| (i as f32 * 0.43).sin()).collect(),
+            dead: vec![false, true, false, false],
+        };
+        let back = ClusterCheckpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back, ck);
+        let dir = std::env::temp_dir().join("memsgd_cluster_ck_test");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cluster.ck");
+        ck.save(&path).unwrap();
+        assert_eq!(ClusterCheckpoint::load(&path).unwrap(), ck);
+        fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn cluster_checkpoint_rejects_garbage_and_truncation() {
+        assert!(ClusterCheckpoint::from_bytes(b"junk").is_err());
+        let ck = ClusterCheckpoint { round: 3, x: vec![1.0; 8], dead: vec![false; 2] };
+        let bytes = ck.to_bytes();
+        assert!(ClusterCheckpoint::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] ^= 0xFF;
+        assert!(ClusterCheckpoint::from_bytes(&bad_magic).is_err());
+        // The two containers must not parse as each other.
+        let (opt, rng) = trained_state(5);
+        let seq = Checkpoint::capture(&opt, "top_k:2", &rng, None).to_bytes();
+        assert!(ClusterCheckpoint::from_bytes(&seq).is_err());
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
     }
 
     #[test]

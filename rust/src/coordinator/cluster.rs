@@ -85,17 +85,20 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::checkpoint::ClusterCheckpoint;
 use super::config::{LocalUpdate, MethodSpec};
 use super::experiment::{
     annotate_local, finish_async_wire_record, finish_sync_wire_record, record_method_name,
     run_ring_driver, serve_async_protocol, serve_sync_protocol, AsyncServerTally,
-    RingDriverTally, RingNode, Settings, SyncServerTally, Topology, WireWorker,
+    RingDriverTally, RingNode, Settings, SyncServe, SyncServerTally, Topology, WireWorker,
 };
+use super::faults::{rejoin_rng, DeadChannel, FailurePolicy, FaultSpec};
 use super::net::{
-    check_compat, configure_stream, connect_with_retry, read_frame_deadline, write_frame, Backoff,
-    Hello, TcpChannel, FRAME_DEADLINE, HANDSHAKE_TIMEOUT, PROTOCOL_VERSION, READ_TIMEOUT,
+    check_compat, configure_stream, connect_with_retry, handshake_with_retry,
+    read_frame_deadline, write_frame, Backoff, FrameAssembler, Hello, TcpChannel,
+    FRAME_DEADLINE, HANDSHAKE_TIMEOUT, PROTOCOL_VERSION, READ_TIMEOUT,
 };
-use super::transport::{Channel, MAX_FRAME_BYTES};
+use super::transport::{decode_msg, Channel, WireMsg, MAX_FRAME_BYTES};
 use crate::experiments::{self, Which};
 use crate::metrics::{LossPoint, RunRecord};
 use crate::models::{GradBackend, LogisticModel};
@@ -206,6 +209,18 @@ pub struct RunConfig {
     pub network: String,
     /// Model dimension — pinned in the handshake.
     pub dim: usize,
+    /// What the server does when a worker dies mid-run
+    /// (`--failure-policy`; defaults to fail-fast, today's behavior).
+    pub failure_policy: FailurePolicy,
+    /// Server-side fault plan (`--fault-plan` on `serve`/`ring`;
+    /// `None` = no injected faults). Workers injecting their own faults
+    /// use the `memsgd worker --fault-plan` flag instead — a plan must
+    /// wrap exactly one side of each link.
+    pub fault_plan: Option<FaultSpec>,
+    /// First round to serve — nonzero only when the server restarted
+    /// from a cluster checkpoint; workers then consume an opening
+    /// `SNAPSHOT` frame before the data plane starts.
+    pub start_round: usize,
 }
 
 impl RunConfig {
@@ -233,6 +248,25 @@ impl RunConfig {
         }
         if self.dim == 0 {
             bail!("cluster config: dim must be set");
+        }
+        match self.failure_policy {
+            FailurePolicy::FailFast => {}
+            FailurePolicy::DropRound { .. } => {
+                if self.topology == "all-reduce" {
+                    bail!(
+                        "cluster config: drop-round applies to the parameter-server \
+                         topologies; every all-reduce ring hop is load-bearing"
+                    );
+                }
+            }
+            FailurePolicy::WaitRejoin { .. } => {
+                if self.topology != "ps-sync" {
+                    bail!(
+                        "cluster config: wait-rejoin requires the ps-sync topology \
+                         (only the sync server re-syncs a rejoiner from a SNAPSHOT)"
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -276,6 +310,17 @@ impl RunConfig {
             ("topology", Json::str(self.topology.clone())),
             ("network", Json::str(self.network.clone())),
             ("dim", Json::Num(self.dim as f64)),
+            ("failure_policy", Json::str(self.failure_policy.spec_string())),
+            (
+                "fault_plan",
+                Json::str(
+                    self.fault_plan
+                        .as_ref()
+                        .map(|s| s.spec_string())
+                        .unwrap_or_else(|| "none".to_string()),
+                ),
+            ),
+            ("start_round", Json::Num(self.start_round as f64)),
         ])
     }
 
@@ -301,6 +346,20 @@ impl RunConfig {
             topology: j.req("topology")?.as_str()?.to_string(),
             network: j.req("network")?.as_str()?.to_string(),
             dim: j.req("dim")?.as_usize()?,
+            // The failure keys are optional with pre-fault defaults, so
+            // frames from older peers still parse (and mean fail-fast).
+            failure_policy: match j.get("failure_policy") {
+                Some(v) => FailurePolicy::parse(v.as_str()?)?,
+                None => FailurePolicy::FailFast,
+            },
+            fault_plan: match j.get("fault_plan") {
+                Some(v) => FaultSpec::parse(v.as_str()?)?,
+                None => None,
+            },
+            start_round: match j.get("start_round") {
+                Some(v) => v.as_usize()?,
+                None => 0,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -391,6 +450,10 @@ struct MuxInner {
     pending: Vec<VecDeque<Vec<u8>>>,
     dead: Vec<Option<String>>,
     readers_alive: usize,
+    /// Per-node reader generation: a rejoin bumps it, and pushes from a
+    /// stale reader (the old socket's thread racing its own teardown)
+    /// are discarded instead of re-killing the revived node.
+    gen: Vec<u64>,
 }
 
 impl MuxShared {
@@ -400,6 +463,7 @@ impl MuxShared {
                 pending: (0..nodes).map(|_| VecDeque::new()).collect(),
                 dead: vec![None; nodes],
                 readers_alive: nodes,
+                gen: vec![0; nodes],
             }),
             cv: Condvar::new(),
         }
@@ -432,16 +496,18 @@ impl MuxShared {
         }
     }
 
-    fn push_frame(&self, node: usize, frame: Vec<u8>) {
+    fn push_frame(&self, node: usize, gen: u64, frame: Vec<u8>) {
         if let Ok(mut inner) = self.inner.lock() {
-            inner.pending[node].push_back(frame);
+            if inner.gen[node] == gen {
+                inner.pending[node].push_back(frame);
+            }
         }
         self.cv.notify_all();
     }
 
-    fn push_dead(&self, node: usize, err: String) {
+    fn push_dead(&self, node: usize, gen: u64, err: String) {
         if let Ok(mut inner) = self.inner.lock() {
-            if inner.dead[node].is_none() {
+            if inner.gen[node] == gen && inner.dead[node].is_none() {
                 inner.dead[node] = Some(err);
             }
         }
@@ -453,6 +519,19 @@ impl MuxShared {
             inner.readers_alive = inner.readers_alive.saturating_sub(1);
         }
         self.cv.notify_all();
+    }
+
+    /// Re-arm a node slot for a rejoined connection: clear buffered
+    /// frames and the death marker, count the fresh reader, and bump
+    /// the generation so the old reader's dying gasps are ignored.
+    /// Returns the new generation to hand to [`spawn_reader`].
+    fn revive(&self, node: usize) -> Result<u64> {
+        let mut inner = self.lock()?;
+        inner.pending[node].clear();
+        inner.dead[node] = None;
+        inner.readers_alive += 1;
+        inner.gen[node] += 1;
+        Ok(inner.gen[node])
     }
 }
 
@@ -475,10 +554,18 @@ impl Channel for MuxChannel {
     fn recv(&mut self) -> Result<Vec<u8>> {
         self.shared.recv_for(self.node)
     }
+
+    fn hangup(&mut self) {
+        // Both directions: the reader thread holds a clone of this
+        // socket, and shutting it down turns its blocked read into an
+        // immediate error instead of a deadline wait.
+        let _ = self.writer.shutdown(Shutdown::Both);
+    }
 }
 
 fn spawn_reader(
     node: usize,
+    gen: u64,
     mut stream: TcpStream,
     shared: Arc<MuxShared>,
 ) -> std::thread::JoinHandle<()> {
@@ -488,9 +575,9 @@ fn spawn_reader(
             // The whole-frame deadline applies on the threads data
             // plane too: a trickling peer is cut off, not tolerated.
             match read_frame_deadline(&mut stream, MAX_FRAME_BYTES, Some(FRAME_DEADLINE)) {
-                Ok(frame) => shared.push_frame(node, frame),
+                Ok(frame) => shared.push_frame(node, gen, frame),
                 Err(e) => {
-                    shared.push_dead(node, format!("{e:#}"));
+                    shared.push_dead(node, gen, format!("{e:#}"));
                     break;
                 }
             }
@@ -512,6 +599,11 @@ pub struct ClusterServer {
     cfg: RunConfig,
     data: crate::data::Dataset,
     io: IoBackend,
+    /// Cluster checkpoint sink: `(path, every-N-rounds)`.
+    checkpoint: Option<(std::path::PathBuf, usize)>,
+    /// The checkpoint this serve resumes from (loaded at
+    /// [`ClusterServer::with_checkpoint`] time when the file exists).
+    resume: Option<ClusterCheckpoint>,
 }
 
 impl ClusterServer {
@@ -542,7 +634,60 @@ impl ClusterServer {
         }
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding listener on {addr}"))?;
-        Ok(ClusterServer { listener, cfg, data, io })
+        Ok(ClusterServer { listener, cfg, data, io, checkpoint: None, resume: None })
+    }
+
+    /// Arm cluster checkpointing (`serve --checkpoint path
+    /// --checkpoint-every N`): the sync serve saves a
+    /// [`ClusterCheckpoint`] every `every` rounds (and at the end), and
+    /// if `path` already holds one, this serve *resumes* from it — the
+    /// model and round counter restored, the `WELCOME` config carrying
+    /// the nonzero `start_round` so every worker seeds its replica from
+    /// the opening `SNAPSHOT`. Restart runs resume the model, not the
+    /// workers' error memories (those died with their processes), so
+    /// they are tested for completion and finiteness, never
+    /// golden-pinned.
+    pub fn with_checkpoint(
+        mut self,
+        path: std::path::PathBuf,
+        every: usize,
+    ) -> Result<ClusterServer> {
+        if self.cfg.topology != "ps-sync" {
+            bail!(
+                "--checkpoint applies to the ps-sync topology; '{}' has no \
+                 round boundary to checkpoint at",
+                self.cfg.topology
+            );
+        }
+        if path.exists() {
+            let ck = ClusterCheckpoint::load(&path)?;
+            if ck.x.len() != self.cfg.dim {
+                bail!(
+                    "cluster checkpoint {} holds d={}, run has d={}",
+                    path.display(),
+                    ck.x.len(),
+                    self.cfg.dim
+                );
+            }
+            if ck.dead.len() != self.cfg.nodes {
+                bail!(
+                    "cluster checkpoint {} holds {} nodes, run has {}",
+                    path.display(),
+                    ck.dead.len(),
+                    self.cfg.nodes
+                );
+            }
+            self.cfg.start_round = ck.round as usize;
+            self.resume = Some(ck);
+        }
+        self.checkpoint = Some((path, every.max(1)));
+        Ok(self)
+    }
+
+    /// The round the run will open at — nonzero only when
+    /// [`ClusterServer::with_checkpoint`] found an existing checkpoint.
+    pub fn start_round(&self) -> usize {
+        self.cfg.start_round
     }
 
     /// The bound address (resolves a `:0` bind to the actual port).
@@ -579,7 +724,26 @@ impl ClusterServer {
             self.cfg.nodes,
         )?;
         let (mut channels, mux) = super::mux::data_plane(streams);
-        let served = self.serve(&mut channels);
+        let served = if let FailurePolicy::WaitRejoin { timeout } = self.cfg.failure_policy {
+            let mut rejoin = |node: usize,
+                              _next_round: u64,
+                              _x: &[f32]|
+             -> Result<Option<Box<dyn Channel>>> {
+                match accept_rejoin(&self.listener, &hello, &self.cfg, node, timeout)? {
+                    None => Ok(None),
+                    Some(stream) => {
+                        stream
+                            .set_nonblocking(true)
+                            .context("setting rejoined socket non-blocking")?;
+                        let asm = FrameAssembler::new(MAX_FRAME_BYTES);
+                        Ok(Some(super::mux::adopt(&mux, node, stream, asm)?))
+                    }
+                }
+            };
+            self.serve(&mut channels, Some(&mut rejoin))
+        } else {
+            self.serve(&mut channels, None)
+        };
         drop(channels);
         super::mux::drain_and_shutdown(&mux);
         served
@@ -600,7 +764,41 @@ impl ClusterServer {
             &mut shutdowners,
             &mut readers,
         ) {
-            Ok(()) => self.serve(&mut channels),
+            Ok(()) => {
+                if let FailurePolicy::WaitRejoin { timeout } = self.cfg.failure_policy {
+                    let hello = self.cfg.hello();
+                    let mut rejoin = |node: usize,
+                                      _next_round: u64,
+                                      _x: &[f32]|
+                     -> Result<Option<Box<dyn Channel>>> {
+                        match accept_rejoin(&self.listener, &hello, &self.cfg, node, timeout)? {
+                            None => Ok(None),
+                            Some(stream) => {
+                                stream
+                                    .set_read_timeout(Some(READ_TIMEOUT))
+                                    .context("restoring data-plane read timeout")?;
+                                let gen = shared.revive(node)?;
+                                let reader = stream
+                                    .try_clone()
+                                    .context("cloning socket for reader thread")?;
+                                let shutdowner = stream
+                                    .try_clone()
+                                    .context("cloning socket for shutdown")?;
+                                readers.push(spawn_reader(node, gen, reader, Arc::clone(&shared)));
+                                shutdowners.push(shutdowner);
+                                Ok(Some(Box::new(MuxChannel {
+                                    node,
+                                    writer: stream,
+                                    shared: Arc::clone(&shared),
+                                })))
+                            }
+                        }
+                    };
+                    self.serve(&mut channels, Some(&mut rejoin))
+                } else {
+                    self.serve(&mut channels, None)
+                }
+            }
             Err(e) => Err(e),
         };
         drop(channels);
@@ -674,7 +872,7 @@ impl ClusterServer {
                 .context("restoring data-plane read timeout")?;
             let reader = stream.try_clone().context("cloning socket for reader thread")?;
             let shutdowner = stream.try_clone().context("cloning socket for shutdown")?;
-            readers.push(spawn_reader(node, reader, Arc::clone(shared)));
+            readers.push(spawn_reader(node, 0, reader, Arc::clone(shared)));
             shutdowners.push(shutdowner);
             channels.push(Box::new(MuxChannel {
                 node,
@@ -693,7 +891,16 @@ impl ClusterServer {
     /// threaded engines' second bookkeeping source (worker `ef`
     /// counters) is out of reach across process boundaries, so the
     /// cross-check lives in the golden tests instead.
-    fn serve(&self, ends: &mut [Box<dyn Channel>]) -> Result<RunRecord> {
+    ///
+    /// `rejoin` is the backend-specific `WaitRejoin` hook (re-accept on
+    /// the listener, swap the fresh socket into the data plane) — `None`
+    /// under the other policies.
+    #[allow(clippy::type_complexity)]
+    fn serve(
+        &self,
+        ends: &mut [Box<dyn Channel>],
+        rejoin: Option<&mut dyn FnMut(usize, u64, &[f32]) -> Result<Option<Box<dyn Channel>>>>,
+    ) -> Result<RunRecord> {
         let cfg = &self.cfg;
         let method = MethodSpec::parse(&cfg.method)?;
         let n = self.data.n();
@@ -710,6 +917,8 @@ impl ClusterServer {
             seed: cfg.seed,
             dataset: self.data.name.clone(),
             local: cfg.local,
+            policy: cfg.failure_policy,
+            faults: cfg.fault_plan.clone(),
         };
         let started = Instant::now();
         let mut x = vec![0.0f32; d];
@@ -717,6 +926,25 @@ impl ClusterServer {
             "ps-sync" => {
                 let rounds = (cfg.steps / (nodes * h)).max(1);
                 let eval_every = (rounds / cfg.eval_points.max(1)).max(1);
+                // The server-side half of a `--fault-plan`: wrap the
+                // accepted channels in place (workers injecting their
+                // own faults leave this unset — one side per link).
+                if let Some(spec) = &cfg.fault_plan {
+                    let plan = spec.plan(nodes, rounds)?;
+                    for (node, ch) in ends.iter_mut().enumerate() {
+                        let inner =
+                            std::mem::replace(ch, Box::new(DeadChannel::new(node)) as Box<_>);
+                        *ch = plan.wrap(node, inner);
+                    }
+                }
+                let mut ctl = SyncServe::with_policy(nodes, cfg.failure_policy);
+                ctl.start_round = cfg.start_round.min(rounds);
+                ctl.checkpoint = self.checkpoint.clone();
+                ctl.rejoin = rejoin;
+                if let Some(ck) = &self.resume {
+                    x.copy_from_slice(&ck.x);
+                    ctl.dead = ck.dead.clone();
+                }
                 let mut record = RunRecord {
                     method: record_method_name(&method, &Topology::ParamServerSync { nodes }),
                     dataset: s.dataset.clone(),
@@ -732,6 +960,7 @@ impl ClusterServer {
                     rounds,
                     eval_every,
                     &mut record,
+                    &mut ctl,
                     &mut tally,
                 )?;
                 let uploads: u64 = tally.upload_acc.iter().sum();
@@ -763,6 +992,18 @@ impl ClusterServer {
                     schedule: s.schedule.describe(),
                     ..Default::default()
                 };
+                // The async fault plan expands against the per-worker
+                // turn budget — the identical expression the simulated
+                // twin uses, so the schedules line up bit for bit.
+                if let Some(spec) = &cfg.fault_plan {
+                    let plan = spec.plan(nodes, (total_syncs / nodes).max(2))?;
+                    for (node, ch) in ends.iter_mut().enumerate() {
+                        let inner =
+                            std::mem::replace(ch, Box::new(DeadChannel::new(node)) as Box<_>);
+                        *ch = plan.wrap(node, inner);
+                    }
+                }
+                let mut dead = vec![false; nodes];
                 record.curve.push(LossPoint { t: 0, bits: 0, loss: backend.full_loss(&x) });
                 let mut tally = AsyncServerTally::new(nodes);
                 serve_async_protocol(
@@ -776,6 +1017,8 @@ impl ClusterServer {
                     total_syncs,
                     eval_every,
                     &mut record,
+                    cfg.failure_policy,
+                    &mut dead,
                     &mut tally,
                 )?;
                 let total_bits: u64 = tally.upload_acc.iter().sum();
@@ -792,25 +1035,114 @@ impl ClusterServer {
     }
 }
 
+/// Wait up to `timeout` on the (already nonblocking) listener for a
+/// replacement worker rejoining as `node` — the `WaitRejoin` accept
+/// path, shared by both I/O backends. Only a `HELLO` carrying
+/// `resume: true` and passing [`check_compat`] is welcomed; everything
+/// else gets a descriptive `{"error": …}` frame and the wait continues.
+/// Returns the handshaken blocking stream, or `None` on timeout (the
+/// node then stays dead and the run continues degraded).
+fn accept_rejoin(
+    listener: &TcpListener,
+    server_hello: &Hello,
+    cfg: &RunConfig,
+    node: usize,
+    timeout: Duration,
+) -> Result<Option<TcpStream>> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                // One rejoiner at a time is the contract (the serve is
+                // parked between rounds), so a blocking handshake with
+                // socket timeouts is enough here. A dud connection is
+                // dropped and the wait continues — only the deadline
+                // ends it.
+                let handshaken = (|| -> Result<()> {
+                    stream
+                        .set_nonblocking(false)
+                        .context("setting rejoining socket blocking")?;
+                    configure_stream(&stream)?;
+                    stream
+                        .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+                        .context("setting handshake timeout")?;
+                    let frame = read_frame_deadline(
+                        &mut stream,
+                        MAX_FRAME_BYTES,
+                        Some(HANDSHAKE_TIMEOUT),
+                    )
+                    .context("reading rejoin HELLO")?;
+                    let worker_hello = Hello::decode(&frame)?;
+                    if !worker_hello.resume {
+                        let reject = Json::obj(vec![(
+                            "error",
+                            Json::str("run in progress; reconnect with --resume"),
+                        )])
+                        .to_string();
+                        let _ = write_frame(&mut stream, reject.as_bytes());
+                        bail!("rejoining connection did not set the resume flag");
+                    }
+                    if let Err(e) = check_compat(&worker_hello, server_hello) {
+                        let reject =
+                            Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string();
+                        let _ = write_frame(&mut stream, reject.as_bytes());
+                        return Err(e.push_context("rejoining connection is incompatible"));
+                    }
+                    write_frame(&mut stream, welcome_json(cfg, node).as_bytes())
+                        .context("sending rejoin WELCOME")?;
+                    Ok(())
+                })();
+                match handshaken {
+                    Ok(()) => return Ok(Some(stream)),
+                    Err(_) => {
+                        let _ = stream.shutdown(Shutdown::Both);
+                        continue;
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Ok(None);
+                }
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => return Err(e).context("accepting rejoining worker"),
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Worker
 // ---------------------------------------------------------------------------
 
-/// A worker process: dial the server (with bounded-backoff retries),
-/// handshake, rebuild the dataset and RNG stream the config names, and
-/// run the wire-worker protocol to completion. Returns the assigned
-/// node id and the accounted upload bits.
-pub fn run_worker(addr: &str, expect: &Hello, backoff: &Backoff) -> Result<(usize, u64)> {
-    let mut stream = connect_with_retry(addr, backoff)?;
-    configure_stream(&stream)?;
-    write_frame(&mut stream, &expect.encode()).context("sending HELLO")?;
-    let frame = read_frame_deadline(&mut stream, MAX_FRAME_BYTES, Some(FRAME_DEADLINE))
-        .context("reading WELCOME")?;
+/// A worker process: dial the server and run the **whole handshake**
+/// with bounded-backoff retries ([`handshake_with_retry`] — a worker
+/// started before its server survives both the refused connect and the
+/// accepted-but-not-yet-serving window), rebuild the dataset and RNG
+/// stream the config names, and run the wire-worker protocol to
+/// completion. Returns the assigned node id and the accounted upload
+/// bits.
+///
+/// `resume = true` sends a rejoin `HELLO`: the server answers the
+/// `WELCOME` with a model `SNAPSHOT` frame, and the worker starts at
+/// the carried round on a fresh error memory and the disjoint
+/// [`rejoin_rng`] stream. `fault_plan` wraps this worker's own channel
+/// with the plan's faults for its node, ops mirrored
+/// ([`super::faults::FaultPlan::wrap_peer`]) — the worker-side way to
+/// script a chaos run whose server replays the same plan string in its
+/// simulated twin.
+pub fn run_worker(
+    addr: &str,
+    expect: &Hello,
+    backoff: &Backoff,
+    resume: bool,
+    fault_plan: Option<&FaultSpec>,
+) -> Result<(usize, u64)> {
+    let mut hello = expect.clone();
+    hello.resume = resume;
+    let (stream, frame) = handshake_with_retry(addr, &hello, backoff)?;
     let text = std::str::from_utf8(&frame).context("WELCOME frame is not UTF-8")?;
     let j = Json::parse(text).context("WELCOME frame is not JSON")?;
-    if let Some(err) = j.get("error") {
-        bail!("server rejected handshake: {}", err.as_str().unwrap_or("unknown reason"));
-    }
     let proto_str = j.req("proto")?.as_str().context("WELCOME proto must be a string")?;
     let proto = proto_str
         .parse::<u64>()
@@ -848,29 +1180,75 @@ pub fn run_worker(addr: &str, expect: &Hello, backoff: &Backoff) -> Result<(usiz
     // Re-derive this node's RNG stream: `split` advances the root, so
     // replay the splits in node-id order exactly as the single-process
     // engines perform them (worker w gets the root's (w+1)-th split).
+    // A snapshot-resumed worker overrides this with the disjoint
+    // `rejoin_rng` stream below.
     let mut root = Prng::new(cfg.seed);
     let mut rng = root.split(1);
     for w in 1..=node {
         rng = root.split(w as u64 + 1);
     }
 
-    let worker = WireWorker {
-        ch: Box::new(TcpChannel::new(stream)?) as Box<dyn Channel>,
-        backend: LogisticModel::new(&data, 1.0 / n as f64),
-        ef: method.error_feedback(d),
-        rng,
-        schedule: cfg.schedule.clone(),
-        local: cfg.local,
-        node: node as u32,
-        d,
-        n,
-    };
     let bits = match cfg.topology.as_str() {
         "ps-sync" => {
             let rounds = (cfg.steps / (nodes * h)).max(1);
-            worker.run_sync(rounds, 1.0 / nodes as f32)?
+            let mut ch: Box<dyn Channel> = Box::new(TcpChannel::new(stream)?);
+            if let Some(spec) = fault_plan {
+                ch = spec.plan(nodes, rounds)?.wrap_peer(node, ch);
+            }
+            // A rejoiner — and every worker of a checkpoint-restarted
+            // server — opens on a model SNAPSHOT: seed the replica from
+            // it, start at the carried round, and switch to the
+            // disjoint rejoin RNG stream (fresh error memory; the old
+            // incarnation's suppressed mass died with it).
+            let (start_round, x0) = if resume || cfg.start_round > 0 {
+                let frame = ch.recv().context("reading SNAPSHOT")?;
+                match decode_msg(&frame, d)?.msg {
+                    WireMsg::Snapshot { next_round, update } => {
+                        rng = rejoin_rng(cfg.seed, node as u32, next_round);
+                        (next_round as usize, update.to_dense(d))
+                    }
+                    other => bail!("expected a SNAPSHOT frame, got {other:?}"),
+                }
+            } else {
+                (0, vec![0.0f32; d])
+            };
+            let worker = WireWorker {
+                ch,
+                backend: LogisticModel::new(&data, 1.0 / n as f64),
+                ef: method.error_feedback(d),
+                rng,
+                schedule: cfg.schedule.clone(),
+                local: cfg.local,
+                node: node as u32,
+                d,
+                n,
+            };
+            // Protocol v3 broadcasts arrive pre-scaled by the server's
+            // 1/live quorum factor; replicas apply scale 1.0.
+            worker.run_sync_from(start_round, rounds, 1.0, x0)?
         }
-        "ps-async" => worker.run_async()?,
+        "ps-async" => {
+            if resume {
+                bail!("--resume applies to the ps-sync topology (async workers have no round boundary to rejoin at)");
+            }
+            let mut ch: Box<dyn Channel> = Box::new(TcpChannel::new(stream)?);
+            if let Some(spec) = fault_plan {
+                let total_syncs = cfg.steps / h;
+                ch = spec.plan(nodes, (total_syncs / nodes).max(2))?.wrap_peer(node, ch);
+            }
+            let worker = WireWorker {
+                ch,
+                backend: LogisticModel::new(&data, 1.0 / n as f64),
+                ef: method.error_feedback(d),
+                rng,
+                schedule: cfg.schedule.clone(),
+                local: cfg.local,
+                node: node as u32,
+                d,
+                n,
+            };
+            worker.run_async()?
+        }
         "all-reduce" => bail!(
             "topology 'all-reduce' is server-free: nodes join as ring peers — \
              use `memsgd ring`, not `memsgd worker`"
@@ -986,7 +1364,18 @@ impl RingNodeProcess {
     /// (with `wire = 1` and `cluster = 1` extras), `None` elsewhere.
     /// With `nodes = 1` the ring is degenerate — no sockets, no
     /// transmitted bits, `next` never dialed.
-    pub fn run(self, next: &str, backoff: &Backoff) -> Result<Option<RunRecord>> {
+    ///
+    /// `fault_plan` (from this node's own `--fault-plan` flag) wraps
+    /// the **inbound** ring edge, mirroring the simulated engine's
+    /// `plan.wrap(me, left)` — every hop is load-bearing in a ring, so
+    /// only fail-fast semantics apply (an injected cut takes the whole
+    /// ring down by design).
+    pub fn run(
+        self,
+        next: &str,
+        backoff: &Backoff,
+        fault_plan: Option<&FaultSpec>,
+    ) -> Result<Option<RunRecord>> {
         let cfg = &self.cfg;
         let me = self.node;
         let nodes = cfg.nodes.max(1);
@@ -1050,10 +1439,11 @@ impl RingNodeProcess {
                 );
             }
             j.req("ok").with_context(|| format!("node {me}: malformed ring ACK"))?;
-            Some((
-                Box::new(TcpChannel::new(recv_stream)?) as Box<dyn Channel>,
-                Box::new(TcpChannel::new(send_stream)?) as Box<dyn Channel>,
-            ))
+            let mut left: Box<dyn Channel> = Box::new(TcpChannel::new(recv_stream)?);
+            if let Some(spec) = fault_plan {
+                left = spec.plan(nodes, rounds)?.wrap(me, left);
+            }
+            Some((left, Box::new(TcpChannel::new(send_stream)?) as Box<dyn Channel>))
         } else {
             None
         };
@@ -1140,6 +1530,9 @@ mod tests {
             topology: "ps-sync".into(),
             network: "1g".into(),
             dim: 2000,
+            failure_policy: FailurePolicy::FailFast,
+            fault_plan: None,
+            start_round: 0,
         }
     }
 
@@ -1154,6 +1547,66 @@ mod tests {
             let json = c.to_json().to_string();
             let back = RunConfig::from_json(&Json::parse(&json).unwrap()).unwrap();
             assert_eq!(back, c, "{json}");
+        }
+    }
+
+    #[test]
+    fn run_config_json_round_trips_failure_fields() {
+        let c = RunConfig {
+            failure_policy: FailurePolicy::DropRound { min_quorum: 2 },
+            fault_plan: FaultSpec::parse("kill:1:42").unwrap(),
+            start_round: 17,
+            ..cfg()
+        };
+        let json = c.to_json().to_string();
+        let back = RunConfig::from_json(&Json::parse(&json).unwrap()).unwrap();
+        assert_eq!(back, c, "{json}");
+    }
+
+    #[test]
+    fn run_config_json_defaults_failure_fields_for_old_peers() {
+        // A WELCOME frame from a pre-v3 server carries none of the
+        // failure keys; it must parse and mean fail-fast, no plan,
+        // round zero.
+        let json = cfg().to_json().to_string();
+        let j = Json::parse(&json).unwrap();
+        let stripped = Json::obj(
+            ["dataset", "scale", "seed", "method", "schedule", "steps", "eval_points",
+             "nodes", "batch", "sync_every", "topology", "network", "dim"]
+                .iter()
+                .map(|k| (*k, j.req(k).unwrap().clone()))
+                .collect(),
+        );
+        let back = RunConfig::from_json(&stripped).unwrap();
+        assert_eq!(back.failure_policy, FailurePolicy::FailFast);
+        assert!(back.fault_plan.is_none());
+        assert_eq!(back.start_round, 0);
+    }
+
+    #[test]
+    fn run_config_validation_enforces_the_policy_matrix() {
+        // drop-round needs a server to form a quorum; every all-reduce
+        // ring hop is load-bearing.
+        let mut c = cfg();
+        c.topology = "all-reduce".into();
+        c.failure_policy = FailurePolicy::DropRound { min_quorum: 1 };
+        let msg = format!("{:#}", c.validate().unwrap_err());
+        assert!(msg.contains("all-reduce"), "{msg}");
+        // wait-rejoin needs the sync server's SNAPSHOT re-sync.
+        let mut c = cfg();
+        c.topology = "ps-async".into();
+        c.failure_policy = FailurePolicy::WaitRejoin { timeout: Duration::from_secs(5) };
+        let msg = format!("{:#}", c.validate().unwrap_err());
+        assert!(msg.contains("ps-sync") || msg.contains("sync server"), "{msg}");
+        // ps-sync accepts all three policies.
+        for policy in [
+            FailurePolicy::FailFast,
+            FailurePolicy::DropRound { min_quorum: 1 },
+            FailurePolicy::WaitRejoin { timeout: Duration::from_secs(5) },
+        ] {
+            let mut c = cfg();
+            c.failure_policy = policy;
+            assert!(c.validate().is_ok());
         }
     }
 

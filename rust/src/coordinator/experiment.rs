@@ -203,11 +203,12 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use super::config::{LocalUpdate, MethodSpec};
+use super::faults::{DeadChannel, FailurePolicy, FaultSpec, PEER_HUNG_UP};
 use super::parallel::SharedParams;
 use super::transport::{
     decode_msg, encode_apply, encode_broadcast, encode_exchange, encode_gather, encode_go,
-    encode_reduce, encode_report, encode_shutdown, encode_upload, Channel, Loopback, Transport,
-    WireMsg,
+    encode_reduce, encode_report, encode_shutdown, encode_snapshot, encode_upload, Channel,
+    Loopback, Transport, WireMsg,
 };
 use crate::compress::elias::BitWriter;
 use crate::compress::{ActiveIndex, ActiveView, SparseMerge, SparseVec, Update};
@@ -296,6 +297,8 @@ pub(crate) struct Settings {
     pub seed: u64,
     pub dataset: String,
     pub local: LocalUpdate,
+    pub policy: FailurePolicy,
+    pub faults: Option<FaultSpec>,
 }
 
 /// Builder for one training run: backend × method × schedule × topology.
@@ -333,6 +336,8 @@ pub struct Experiment<B: GradBackend> {
     local: LocalUpdate,
     wire: bool,
     transport: Option<Box<dyn Transport>>,
+    policy: FailurePolicy,
+    faults: Option<FaultSpec>,
 }
 
 impl<B: GradBackend> Experiment<B> {
@@ -354,6 +359,8 @@ impl<B: GradBackend> Experiment<B> {
             local: LocalUpdate::default(),
             wire: false,
             transport: None,
+            policy: FailurePolicy::FailFast,
+            faults: None,
         }
     }
 
@@ -460,6 +467,33 @@ impl<B: GradBackend> Experiment<B> {
         self
     }
 
+    /// What happens when a node dies mid-run (default: fail fast, the
+    /// historical behavior). `DropRound` applies to the parameter-server
+    /// topologies — the server aggregates the surviving quorum and the
+    /// survivors' error memories carry the suppressed mass; `WaitRejoin`
+    /// needs a listener to re-accept on and is therefore only honored by
+    /// the multi-process cluster runtime (`memsgd serve`).
+    pub fn failure_policy(mut self, policy: FailurePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Inject a seeded [`FaultSpec`] into the run: the spec expands into
+    /// a per-node [`super::faults::FaultPlan`] once the engine knows the
+    /// round count, and the same spec + seed replays the same deaths in
+    /// the simulated and wire engines alike.
+    pub fn fault_plan(mut self, spec: FaultSpec) -> Self {
+        self.faults = Some(spec);
+        self
+    }
+
+    /// Parse a `kill:1:42`-style `--fault-plan` spec (the CLI edge);
+    /// `"none"` clears any previously set plan.
+    pub fn parse_fault_plan(mut self, spec: &str) -> Result<Self> {
+        self.faults = FaultSpec::parse(spec)?;
+        Ok(self)
+    }
+
     fn settings(&self) -> Settings {
         Settings {
             method: self.method.clone(),
@@ -470,7 +504,43 @@ impl<B: GradBackend> Experiment<B> {
             seed: self.seed,
             dataset: self.dataset.clone(),
             local: self.local,
+            policy: self.policy,
+            faults: self.faults.clone(),
         }
+    }
+
+    /// The failure-policy × topology support matrix (the same matrix
+    /// `docs/ARCHITECTURE.md` documents): reject combinations loudly at
+    /// the builder edge instead of silently ignoring the knob.
+    fn validate_failure_config(&self) -> Result<()> {
+        let ps = matches!(
+            self.topology,
+            Topology::ParamServerSync { .. } | Topology::ParamServerAsync { .. }
+        );
+        match self.policy {
+            FailurePolicy::FailFast => {}
+            FailurePolicy::WaitRejoin { .. } => bail!(
+                "wait-rejoin requires the multi-process cluster runtime \
+                 (memsgd serve) — in-process runs have no listener for the \
+                 dead node to reconnect to"
+            ),
+            FailurePolicy::DropRound { .. } if ps => {}
+            FailurePolicy::DropRound { .. } => bail!(
+                "drop-round applies to the parameter-server topologies; \
+                 {:?} has no server to drop a node from (every ring hop \
+                 and gossip exchange is load-bearing)",
+                self.topology
+            ),
+        }
+        if self.faults.is_some() && !ps {
+            bail!(
+                "--fault-plan expands against the parameter-server round \
+                 structure; got {:?} — inject ring/gossip faults by wrapping \
+                 a transport in FaultyTransport (or memsgd ring --fault-plan)",
+                self.topology
+            );
+        }
+        Ok(())
     }
 
     /// Run on the calling thread without requiring `B: Clone + Send` —
@@ -484,6 +554,7 @@ impl<B: GradBackend> Experiment<B> {
         // literally constructed zero/overflowing LocalUpdate is refused,
         // not silently clamped.
         self.local.validate()?;
+        self.validate_failure_config()?;
         if self.wire {
             bail!(
                 "the wire engines spawn worker threads and replicate the backend; \
@@ -528,6 +599,7 @@ impl<B: GradBackend + Clone + Send> Experiment<B> {
     /// Execute the run and return the unified [`RunRecord`].
     pub fn run(mut self) -> Result<RunRecord> {
         self.local.validate()?;
+        self.validate_failure_config()?;
         if self.wire {
             let s = self.settings();
             let mut transport = self.transport.take().unwrap_or_else(|| Box::new(Loopback));
@@ -1009,6 +1081,15 @@ pub(crate) fn param_server_sync<B: GradBackend>(
         })
         .collect();
 
+    // The simulated twin of the wire fault machinery: expand the plan
+    // against the same (nodes, rounds) shape the wire server uses, so a
+    // fixed spec kills the same node in the same round on both paths.
+    let deaths: Vec<Option<u64>> = match &s.faults {
+        Some(spec) => spec.plan(nodes, rounds)?.sim_deaths(nodes)?,
+        None => vec![None; nodes],
+    };
+    let mut dead = vec![false; nodes];
+
     let mut x = vec![0.0f32; d];
     let mut ws = WorkerScratch::new(d, n, local);
     // Server-side aggregation buffer: coordinate → summed update.
@@ -1033,7 +1114,23 @@ pub(crate) fn param_server_sync<B: GradBackend>(
         let etaf = s.schedule.eta(round) as f32;
         agg.clear();
         let mut any_dense = false;
-        for worker in workers.iter_mut() {
+        for (widx, worker) in workers.iter_mut().enumerate() {
+            if dead[widx] {
+                continue;
+            }
+            if deaths[widx].is_some_and(|at| round as u64 >= at) {
+                // Mirror of the wire cut: the server-side recv for this
+                // node fails in round `at`, so rounds 0..at contributed
+                // and nothing after. The node's error memory keeps the
+                // suppressed mass it never got to ship.
+                match s.policy {
+                    FailurePolicy::FailFast => bail!("node {widx}: {PEER_HUNG_UP}"),
+                    _ => {
+                        dead[widx] = true;
+                        continue;
+                    }
+                }
+            }
             // H local error-compensated steps from the *current
             // broadcast* x, then one compressed upload per node.
             ws.phase(backend, &mut worker.ef, &mut worker.rng, &mut x, |_| etaf);
@@ -1070,8 +1167,21 @@ pub(crate) fn param_server_sync<B: GradBackend>(
                 }
             }
         }
-        // Server applies the mean update and broadcasts it.
-        let scale = 1.0 / nodes as f32;
+        // Server applies the mean update and broadcasts it. The mean is
+        // over the *live* quorum — with every node alive `live == nodes`
+        // and `1.0 / live as f32` is bit-identical to the historical
+        // expression, so fault-free trajectories are unchanged.
+        let live = dead.iter().filter(|&&dd| !dd).count();
+        if live == 0 {
+            bail!("round {round}: every node is dead");
+        }
+        if let FailurePolicy::DropRound { min_quorum } = s.policy {
+            let quorum = min_quorum.max(1);
+            if live < quorum {
+                bail!("round {round}: {live} live nodes below the drop-round quorum of {quorum}");
+            }
+        }
+        let scale = 1.0 / live as f32;
         if any_dense {
             for (xj, a) in x.iter_mut().zip(agg_dense.iter_mut()) {
                 *xj -= *a * scale;
@@ -1545,6 +1655,16 @@ pub(crate) fn param_server_async<B: GradBackend>(
     // as before).
     let grads_per_sync = (local.batch.max(1) * h) as f64;
     let total_syncs = s.steps / h;
+    // Async fault plans count per-worker *turns* rather than global
+    // rounds (a worker owns roughly `total_syncs / nodes` turns), so
+    // the plan expands against that per-node shape — the wire twin uses
+    // the identical expression.
+    let deaths: Vec<Option<u64>> = match &s.faults {
+        Some(spec) => spec.plan(nodes, (total_syncs / nodes).max(2))?.sim_deaths(nodes)?,
+        None => vec![None; nodes],
+    };
+    let mut turns = vec![0u64; nodes];
+    let mut dead = vec![false; nodes];
     let mut root_rng = Prng::new(s.seed);
 
     struct AsyncNode {
@@ -1605,8 +1725,36 @@ pub(crate) fn param_server_async<B: GradBackend>(
     record.curve.push(LossPoint { t: 0, bits: 0, loss: backend.full_loss(&x) });
 
     while version < total_syncs as u64 {
-        let Reverse(ev) = queue.pop().expect("queue never empties");
+        let Some(Reverse(ev)) = queue.pop() else {
+            bail!("server update {version}: every worker is dead before the sync budget completed");
+        };
         now_ns = now_ns.max(ev.t_ns);
+        if dead[ev.worker] {
+            continue;
+        }
+        if deaths[ev.worker].is_some_and(|at| turns[ev.worker] >= at) {
+            // Mirror of the wire cut: the server's recv for this worker's
+            // `at`-th turn fails, so the worker completed exactly `at`
+            // turns and never requeues.
+            match s.policy {
+                FailurePolicy::FailFast => bail!("node {}: {PEER_HUNG_UP}", ev.worker),
+                _ => {
+                    dead[ev.worker] = true;
+                    let live = dead.iter().filter(|&&dd| !dd).count();
+                    if let FailurePolicy::DropRound { min_quorum } = s.policy {
+                        let quorum = min_quorum.max(1);
+                        if live < quorum {
+                            bail!(
+                                "server update {version}: {live} live nodes below the \
+                                 drop-round quorum of {quorum}"
+                            );
+                        }
+                    }
+                    continue;
+                }
+            }
+        }
+        turns[ev.worker] += 1;
         let w = &mut workers[ev.worker];
 
         // The worker finished its local phase (computed on the x it
@@ -1685,18 +1833,25 @@ pub(crate) fn param_server_async<B: GradBackend>(
 fn join_wire_workers(
     handles: Vec<std::thread::ScopedJoinHandle<'_, Result<u64>>>,
     served: Result<()>,
+    dead: &[bool],
 ) -> Result<Vec<u64>> {
     let mut bits = Vec::with_capacity(handles.len());
     let mut worker_err: Option<anyhow::Error> = None;
     for (node, hd) in handles.into_iter().enumerate() {
+        // A node the failure policy marked dead is *expected* to come
+        // back with an error (its endpoint was cut); its accounted bits
+        // live in the server tally instead.
+        let tolerated = dead.get(node).copied().unwrap_or(false);
         match hd.join() {
             Ok(Ok(b)) => bits.push(b),
             Ok(Err(e)) => {
-                if worker_err.is_none() {
+                bits.push(0);
+                if worker_err.is_none() && !tolerated {
                     worker_err = Some(anyhow::anyhow!("worker {node}: {e:#}"));
                 }
             }
             Err(_) => {
+                bits.push(0);
                 if worker_err.is_none() {
                     worker_err = Some(anyhow::anyhow!("worker {node} panicked"));
                 }
@@ -1712,18 +1867,24 @@ fn join_wire_workers(
 
 /// Cross-check the accounted bits the workers carried in their upload
 /// headers (`upload_acc`, the server tally) against what their
-/// error-feedback states counted (`worker_bits`, returned at join).
-/// Returns the total — the record's upload accounting.
-fn check_wire_accounting(upload_acc: &[u64], worker_bits: &[u64]) -> Result<u64> {
-    let tallied: u64 = upload_acc.iter().sum();
-    let reported: u64 = worker_bits.iter().sum();
-    if tallied != reported {
-        bail!(
-            "wire protocol desync: workers counted {reported} upload bits, \
-             server tallied {tallied}"
-        );
+/// error-feedback states counted (`worker_bits`, returned at join) —
+/// per node, skipping nodes the failure policy marked dead (a dead
+/// node's thread died before it could report; the server tally is the
+/// ground truth for what it shipped). Returns the total — the record's
+/// upload accounting.
+fn check_wire_accounting(upload_acc: &[u64], worker_bits: &[u64], dead: &[bool]) -> Result<u64> {
+    for (node, (&tallied, &reported)) in upload_acc.iter().zip(worker_bits).enumerate() {
+        if dead.get(node).copied().unwrap_or(false) {
+            continue;
+        }
+        if tallied != reported {
+            bail!(
+                "wire protocol desync: node {node} counted {reported} upload bits, \
+                 server tallied {tallied}"
+            );
+        }
     }
-    Ok(tallied)
+    Ok(upload_acc.iter().sum())
 }
 
 /// Per-node state of a wire-engine worker thread: the channel endpoint,
@@ -1753,11 +1914,27 @@ impl<B: GradBackend> WireWorker<B> {
     /// one final `SHUTDOWN` from the server (the explicit end-of-run
     /// drain). Returns the accounted upload bits (cross-checked by the
     /// server).
-    pub(crate) fn run_sync(mut self, rounds: usize, scale: f32) -> Result<u64> {
-        let mut x = vec![0.0f32; self.d];
+    pub(crate) fn run_sync(self, rounds: usize, scale: f32) -> Result<u64> {
+        let x = vec![0.0f32; self.d];
+        self.run_sync_from(0, rounds, scale, x)
+    }
+
+    /// [`WireWorker::run_sync`] resumed mid-run: start at `start_round`
+    /// against a caller-supplied replica `x` (a fresh process seeds it
+    /// from the server's `SNAPSHOT` frame; the error memory starts
+    /// empty, which is exactly the rejoin contract — suppressed mass
+    /// that died with the old incarnation is gone, and the analysis
+    /// only ever bounded the memory, never required it).
+    pub(crate) fn run_sync_from(
+        mut self,
+        start_round: usize,
+        rounds: usize,
+        scale: f32,
+        mut x: Vec<f32>,
+    ) -> Result<u64> {
         let mut ws = WorkerScratch::new(self.d, self.n, self.local);
         let mut w = BitWriter::new();
-        for round in 0..rounds {
+        for round in start_round..rounds {
             // η is held constant within a round, exactly as in the
             // simulated engine.
             let etaf = self.schedule.eta(round) as f32;
@@ -1857,6 +2034,52 @@ impl SyncServerTally {
     }
 }
 
+/// Failure-handling state for one synchronous serve: the policy, which
+/// nodes are dead, where to resume, and the optional rejoin /
+/// checkpoint hooks that only the multi-process runtime wires up. The
+/// threaded in-process engine builds it with [`SyncServe::with_policy`];
+/// the historical behavior is [`SyncServe::fail_fast`].
+pub(crate) struct SyncServe<'a> {
+    /// What to do when a node's recv/send fails mid-round.
+    pub(crate) policy: FailurePolicy,
+    /// First round to serve (> 0 after a checkpoint restart; the server
+    /// opens by pushing a `SNAPSHOT` so every replica starts aligned).
+    pub(crate) start_round: usize,
+    /// Liveness mask by node id: dead nodes are skipped in the fold and
+    /// excluded from the quorum mean. Inspected by the caller after the
+    /// serve to tolerate the dead nodes' thread errors at join.
+    pub(crate) dead: Vec<bool>,
+    /// Cluster checkpoint sink: (path, every-N-rounds).
+    pub(crate) checkpoint: Option<(std::path::PathBuf, usize)>,
+    /// `WaitRejoin` hook: given (node, next_round, model), block until
+    /// the node reconnects and return its fresh channel — the serve then
+    /// pushes a `SNAPSHOT` before the next round. `Ok(None)` means
+    /// nobody came back in time; the node stays dead and the run
+    /// continues degraded.
+    #[allow(clippy::type_complexity)]
+    pub(crate) rejoin:
+        Option<&'a mut dyn FnMut(usize, u64, &[f32]) -> Result<Option<Box<dyn Channel>>>>,
+}
+
+impl SyncServe<'_> {
+    /// Today's default: the first dead peer fails the run.
+    pub(crate) fn fail_fast(nodes: usize) -> SyncServe<'static> {
+        SyncServe::with_policy(nodes, FailurePolicy::FailFast)
+    }
+
+    /// A serve from round 0 with all nodes live under `policy` and no
+    /// rejoin/checkpoint hooks.
+    pub(crate) fn with_policy(nodes: usize, policy: FailurePolicy) -> SyncServe<'static> {
+        SyncServe {
+            policy,
+            start_round: 0,
+            dead: vec![false; nodes],
+            checkpoint: None,
+            rejoin: None,
+        }
+    }
+}
+
 /// The server half of the synchronous wire protocol: `rounds`
 /// node-id-ordered aggregation rounds against one channel per node,
 /// then a `SHUTDOWN` drained to every worker. Exactly the simulated
@@ -1865,6 +2088,15 @@ impl SyncServerTally {
 /// cluster runtime ([`super::cluster`]) against accepted sockets with
 /// worker processes, and both reproduce [`param_server_sync`]
 /// bit for bit.
+///
+/// Failure semantics live in `ctl` ([`SyncServe`]): under
+/// [`FailurePolicy::FailFast`] any channel error aborts the serve
+/// (historical behavior, bit-identical trajectories); under
+/// `DropRound`/`WaitRejoin` the failing node is hung up, swapped for a
+/// [`DeadChannel`], and the round completes on the surviving quorum —
+/// the broadcast carries the quorum mean (values pre-scaled by
+/// `1 / live`, replicas apply scale `1.0`), which with every node live
+/// is bit-identical to the historical `1 / nodes` mean.
 pub(crate) fn serve_sync_protocol<B: GradBackend>(
     backend: &mut B,
     ends: &mut [Box<dyn Channel>],
@@ -1872,86 +2104,160 @@ pub(crate) fn serve_sync_protocol<B: GradBackend>(
     rounds: usize,
     eval_every: usize,
     record: &mut RunRecord,
+    ctl: &mut SyncServe<'_>,
     tally: &mut SyncServerTally,
 ) -> Result<()> {
-    let nodes = ends.len().max(1);
     let d = x.len();
-    let scale = 1.0 / nodes as f32;
     let idx_bits = crate::compress::sparse::index_bits(d);
     let mut agg: BTreeMap<u32, f32> = BTreeMap::new();
     let mut agg_dense = vec![0.0f32; d];
     let mut bc_update = Update::new_sparse(d);
     let mut w = BitWriter::new();
-    for round in 0..rounds {
+    // A restarted server re-syncs every replica before serving: the
+    // workers' first recv is the SNAPSHOT, then round `start_round`
+    // proceeds as usual.
+    if ctl.start_round > 0 {
+        let snap = Update::Dense(x.to_vec());
+        let payload = encode_snapshot(&mut w, ctl.start_round as u64, &snap);
+        for (node, ch) in ends.iter_mut().enumerate() {
+            if ctl.dead[node] {
+                continue;
+            }
+            ch.send(w.as_bytes())?;
+            tally.wire_bc += payload;
+            tally.wire_frames_down += w.as_bytes().len() as u64 * 8;
+        }
+    }
+    for round in ctl.start_round..rounds {
         agg.clear();
         let mut any_dense = false;
+        let mut lost: Vec<usize> = Vec::new();
         // Node-id-ordered aggregation: one blocking recv per node
         // channel, in id order — the simulated engine's exact
-        // floating-point fold order.
+        // floating-point fold order (dead nodes are skipped, which
+        // keeps the fold order identical to the simulated twin's
+        // live-node iteration).
         for (node, ch) in ends.iter_mut().enumerate() {
-            let frame = ch.recv()?;
-            tally.wire_frames_up += frame.len() as u64 * 8;
-            let dec = decode_msg(&frame, d)?;
-            match dec.msg {
-                WireMsg::Upload { round: r, node: nid, accounted_bits, update }
-                    if r == round as u64 && nid == node as u32 =>
-                {
-                    tally.wire_up += dec.payload_bits;
-                    tally.upload_acc[node] += accounted_bits;
-                    // Mirrors the simulated engine's mixed-variant
-                    // merge exactly: spill `agg` into `agg_dense` when
-                    // the first dense upload arrives, then fold every
-                    // later sparse upload directly into `agg_dense` —
-                    // same per-coordinate addition order, bit for bit.
-                    match update {
-                        Update::Sparse(sv) => {
-                            if any_dense {
-                                for (&j, &vj) in sv.idx.iter().zip(&sv.val) {
-                                    agg_dense[j as usize] += vj;
+            if ctl.dead[node] {
+                continue;
+            }
+            let folded = (|| -> Result<()> {
+                let frame = ch.recv()?;
+                tally.wire_frames_up += frame.len() as u64 * 8;
+                let dec = decode_msg(&frame, d)?;
+                match dec.msg {
+                    WireMsg::Upload { round: r, node: nid, accounted_bits, update }
+                        if r == round as u64 && nid == node as u32 =>
+                    {
+                        tally.wire_up += dec.payload_bits;
+                        tally.upload_acc[node] += accounted_bits;
+                        // Mirrors the simulated engine's mixed-variant
+                        // merge exactly: spill `agg` into `agg_dense` when
+                        // the first dense upload arrives, then fold every
+                        // later sparse upload directly into `agg_dense` —
+                        // same per-coordinate addition order, bit for bit.
+                        match update {
+                            Update::Sparse(sv) => {
+                                if any_dense {
+                                    for (&j, &vj) in sv.idx.iter().zip(&sv.val) {
+                                        agg_dense[j as usize] += vj;
+                                    }
+                                } else {
+                                    for (&j, &vj) in sv.idx.iter().zip(&sv.val) {
+                                        *agg.entry(j).or_insert(0.0) += vj;
+                                    }
                                 }
-                            } else {
-                                for (&j, &vj) in sv.idx.iter().zip(&sv.val) {
-                                    *agg.entry(j).or_insert(0.0) += vj;
+                            }
+                            Update::Dense(g) => {
+                                if !any_dense {
+                                    any_dense = true;
+                                    for (&j, &vj) in agg.iter() {
+                                        agg_dense[j as usize] += vj;
+                                    }
+                                    agg.clear();
+                                }
+                                for (a, &gj) in agg_dense.iter_mut().zip(&g) {
+                                    *a += gj;
                                 }
                             }
                         }
-                        Update::Dense(g) => {
-                            if !any_dense {
-                                any_dense = true;
-                                for (&j, &vj) in agg.iter() {
-                                    agg_dense[j as usize] += vj;
-                                }
-                                agg.clear();
-                            }
-                            for (a, &gj) in agg_dense.iter_mut().zip(&g) {
-                                *a += gj;
-                            }
-                        }
+                        Ok(())
+                    }
+                    other => {
+                        bail!("server: unexpected {other:?} from node {node} in round {round}")
                     }
                 }
-                other => {
-                    bail!("server: unexpected {other:?} from node {node} in round {round}")
+            })();
+            if let Err(e) = folded {
+                match ctl.policy {
+                    FailurePolicy::FailFast => {
+                        return Err(e.push_context(format!("node {node}")));
+                    }
+                    _ => {
+                        // The node is dead to this run: close our end
+                        // (drops a loopback sender, shuts down a TCP
+                        // socket — either way the peer unblocks) and
+                        // park a DeadChannel in its slot. Its accepted
+                        // uploads stay in the aggregate history; the
+                        // mass it failed to ship lives on in whatever
+                        // error memory survives on its side.
+                        ch.hangup();
+                        *ch = Box::new(DeadChannel::new(node));
+                        ctl.dead[node] = true;
+                        lost.push(node);
+                    }
                 }
             }
         }
-        // Frame the (unscaled) aggregate for the replicas.
+        // The round mean is over the *live* quorum. With every node
+        // alive `1.0 / live as f32` is bit-identical to the historical
+        // `1.0 / nodes as f32`, so fault-free runs are unchanged.
+        let live = ctl.dead.iter().filter(|&&dd| !dd).count();
+        if live == 0 {
+            bail!("round {round}: every node is dead");
+        }
+        if let FailurePolicy::DropRound { min_quorum } = ctl.policy {
+            let quorum = min_quorum.max(1);
+            if live < quorum {
+                bail!("round {round}: {live} live nodes below the drop-round quorum of {quorum}");
+            }
+        }
+        let scale = 1.0 / live as f32;
+        // Frame the aggregate for the replicas, values pre-scaled by
+        // the quorum mean — replicas apply scale 1.0, so they need no
+        // liveness knowledge (and `v * scale * 1.0` keeps the raw-f32
+        // payload bits identical to the historical unscaled frame +
+        // `1 / nodes` replica apply when everyone is alive).
         if any_dense {
             match &mut bc_update {
                 Update::Dense(g) => {
                     g.clear();
-                    g.extend_from_slice(&agg_dense);
+                    g.extend(agg_dense.iter().map(|a| a * scale));
                 }
-                other => *other = Update::Dense(agg_dense.clone()),
+                other => *other = Update::Dense(agg_dense.iter().map(|a| a * scale).collect()),
             }
         } else {
             let sv = bc_update.sparse_mut(d);
             for (&j, &vj) in agg.iter() {
-                sv.push(j, vj);
+                sv.push(j, vj * scale);
             }
         }
         let payload = encode_broadcast(&mut w, round as u64, &bc_update);
-        for ch in ends.iter_mut() {
-            ch.send(w.as_bytes())?;
+        for (node, ch) in ends.iter_mut().enumerate() {
+            if ctl.dead[node] {
+                continue;
+            }
+            if let Err(e) = ch.send(w.as_bytes()) {
+                match ctl.policy {
+                    FailurePolicy::FailFast => return Err(e.push_context(format!("node {node}"))),
+                    _ => {
+                        ch.hangup();
+                        *ch = Box::new(DeadChannel::new(node));
+                        ctl.dead[node] = true;
+                        continue;
+                    }
+                }
+            }
             tally.wire_bc += payload;
             tally.wire_frames_down += w.as_bytes().len() as u64 * 8;
         }
@@ -1977,13 +2283,57 @@ pub(crate) fn serve_sync_protocol<B: GradBackend>(
                 loss: backend.full_loss(x),
             });
         }
+        // Wait-rejoin: give every node lost this round a chance to come
+        // back before the next round. The rejoined replica is re-synced
+        // with a SNAPSHOT naming the round it resumes at.
+        if !lost.is_empty() && matches!(ctl.policy, FailurePolicy::WaitRejoin { .. }) {
+            if let Some(rejoin) = ctl.rejoin.as_mut() {
+                for node in lost {
+                    if let Some(mut ch) = rejoin(node, round as u64 + 1, x)? {
+                        let snap = Update::Dense(x.to_vec());
+                        let payload = encode_snapshot(&mut w, round as u64 + 1, &snap);
+                        ch.send(w.as_bytes())?;
+                        tally.wire_bc += payload;
+                        tally.wire_frames_down += w.as_bytes().len() as u64 * 8;
+                        ends[node] = ch;
+                        ctl.dead[node] = false;
+                    }
+                }
+            }
+        }
+        // Cluster checkpoint: model + round counter + liveness, written
+        // atomically so a killed server restarts from here.
+        if let Some((path, every)) = &ctl.checkpoint {
+            let every = (*every).max(1);
+            if (round + 1) % every == 0 || round + 1 == rounds {
+                let ckpt = super::checkpoint::ClusterCheckpoint {
+                    round: round as u64 + 1,
+                    x: x.to_vec(),
+                    dead: ctl.dead.clone(),
+                };
+                ckpt.save(path)?;
+            }
+        }
     }
-    // Clean shutdown: drain a SHUTDOWN to every worker so both sides
-    // agree the run is over before any endpoint closes.
+    // Clean shutdown: drain a SHUTDOWN to every live worker so both
+    // sides agree the run is over before any endpoint closes. Under a
+    // lenient policy a node dying this late is recorded, not fatal.
     encode_shutdown(&mut w);
-    for ch in ends.iter_mut() {
-        ch.send(w.as_bytes())?;
-        tally.wire_frames_down += w.as_bytes().len() as u64 * 8;
+    for (node, ch) in ends.iter_mut().enumerate() {
+        if ctl.dead[node] {
+            continue;
+        }
+        match ch.send(w.as_bytes()) {
+            Ok(()) => tally.wire_frames_down += w.as_bytes().len() as u64 * 8,
+            Err(e) => match ctl.policy {
+                FailurePolicy::FailFast => return Err(e.push_context(format!("node {node}"))),
+                _ => {
+                    ch.hangup();
+                    *ch = Box::new(DeadChannel::new(node));
+                    ctl.dead[node] = true;
+                }
+            },
+        }
     }
     Ok(())
 }
@@ -2040,7 +2390,13 @@ pub(crate) fn param_server_sync_wire<B: GradBackend + Clone + Send>(
     let local = s.local;
     let h = local.sync_every.max(1);
     let rounds = (s.steps / (nodes * h)).max(1);
-    let scale = 1.0 / nodes as f32;
+    // The fault plan decorates the *server-side* channel ends, so an
+    // injected cut surfaces exactly where a real peer death would: in
+    // the server's recv for that node.
+    let plan = match &s.faults {
+        Some(spec) => Some(spec.plan(nodes, rounds)?),
+        None => None,
+    };
     let mut root_rng = Prng::new(s.seed);
 
     // Channels and per-node state, created in node-id order so the RNG
@@ -2049,6 +2405,10 @@ pub(crate) fn param_server_sync_wire<B: GradBackend + Clone + Send>(
     let mut workers: Vec<WireWorker<B>> = Vec::with_capacity(nodes);
     for w in 0..nodes {
         let (se, we) = transport.duplex();
+        let se = match &plan {
+            Some(p) => p.wrap(w, se),
+            None => se,
+        };
         server_ends.push(se);
         workers.push(WireWorker {
             ch: we,
@@ -2075,11 +2435,14 @@ pub(crate) fn param_server_sync_wire<B: GradBackend + Clone + Send>(
     record.curve.push(LossPoint { t: 0, bits: 0, loss: backend.full_loss(&x) });
 
     let mut tally = SyncServerTally::new(nodes);
+    let mut ctl = SyncServe::with_policy(nodes, s.policy);
 
     let worker_bits = std::thread::scope(|scope| -> Result<Vec<u64>> {
         let mut handles = Vec::with_capacity(nodes);
         for wk in workers {
-            handles.push(scope.spawn(move || wk.run_sync(rounds, scale)));
+            // Replicas apply scale 1.0: the broadcast values arrive
+            // pre-scaled by the server's quorum mean.
+            handles.push(scope.spawn(move || wk.run_sync(rounds, 1.0)));
         }
 
         // The server protocol. An error falls through to the drop
@@ -2093,12 +2456,13 @@ pub(crate) fn param_server_sync_wire<B: GradBackend + Clone + Send>(
             rounds,
             eval_every,
             &mut record,
+            &mut ctl,
             &mut tally,
         );
         drop(server_ends);
-        join_wire_workers(handles, served)
+        join_wire_workers(handles, served, &ctl.dead)
     })?;
-    let uploads = check_wire_accounting(&tally.upload_acc, &worker_bits)?;
+    let uploads = check_wire_accounting(&tally.upload_acc, &worker_bits, &ctl.dead)?;
 
     finish_sync_wire_record(&mut record, s, nodes, rounds, uploads, &tally, started);
     Ok(record)
@@ -2144,6 +2508,13 @@ impl AsyncServerTally {
 /// model exactly as simulated, and a `SHUTDOWN` drains to every worker
 /// at the end. Shared by the threaded engine and the cluster runtime;
 /// both reproduce [`param_server_async`] bit for bit.
+///
+/// Failure semantics: under [`FailurePolicy::FailFast`] any channel
+/// error aborts the serve; otherwise the failing worker is hung up,
+/// swapped for a [`DeadChannel`], removed from the event heap (its turn
+/// neither advances the version nor requeues), and the run continues on
+/// the survivors. `dead` is caller-owned so the join can tolerate the
+/// dead nodes' thread errors.
 #[allow(clippy::too_many_arguments)] // the simulated engine's state, spelled out
 pub(crate) fn serve_async_protocol<B: GradBackend>(
     backend: &mut B,
@@ -2156,6 +2527,8 @@ pub(crate) fn serve_async_protocol<B: GradBackend>(
     total_syncs: usize,
     eval_every: usize,
     record: &mut RunRecord,
+    policy: FailurePolicy,
+    dead: &mut [bool],
     tally: &mut AsyncServerTally,
 ) -> Result<()> {
     let d = x.len();
@@ -2171,29 +2544,69 @@ pub(crate) fn serve_async_protocol<B: GradBackend>(
     let mut w = BitWriter::new();
 
     while tally.version < total_syncs as u64 {
-        let Reverse(ev) = queue.pop().expect("queue never empties");
+        let Some(Reverse(ev)) = queue.pop() else {
+            bail!(
+                "server update {}: every worker is dead before the sync budget completed",
+                tally.version
+            );
+        };
         tally.now_ns = tally.now_ns.max(ev.t_ns);
+        if dead[ev.worker] {
+            // Killed by an APPLY-send failure after its turn was already
+            // queued; discard the stale event.
+            continue;
+        }
 
         // The heap names the worker; it computes one phase at
         // η(version) against its (current) replica and uploads.
-        encode_go(&mut w, tally.version);
-        ends[ev.worker].send(w.as_bytes())?;
-        tally.wire_frames_down += w.as_bytes().len() as u64 * 8;
-        let frame = ends[ev.worker].recv()?;
-        tally.wire_frames_up += frame.len() as u64 * 8;
-        let dec = decode_msg(&frame, d)?;
-        let (bits, update) = match dec.msg {
-            WireMsg::Upload { round, node, accounted_bits, update }
-                if round == tally.version && node == ev.worker as u32 =>
-            {
-                tally.wire_up += dec.payload_bits;
-                (accounted_bits, update)
+        let turn = (|| -> Result<(u64, Update)> {
+            encode_go(&mut w, tally.version);
+            ends[ev.worker].send(w.as_bytes())?;
+            tally.wire_frames_down += w.as_bytes().len() as u64 * 8;
+            let frame = ends[ev.worker].recv()?;
+            tally.wire_frames_up += frame.len() as u64 * 8;
+            let dec = decode_msg(&frame, d)?;
+            match dec.msg {
+                WireMsg::Upload { round, node, accounted_bits, update }
+                    if round == tally.version && node == ev.worker as u32 =>
+                {
+                    tally.wire_up += dec.payload_bits;
+                    Ok((accounted_bits, update))
+                }
+                other => bail!(
+                    "server: unexpected {other:?} from node {} at version {}",
+                    ev.worker,
+                    tally.version
+                ),
             }
-            other => bail!(
-                "server: unexpected {other:?} from node {} at version {}",
-                ev.worker,
-                tally.version
-            ),
+        })();
+        let (bits, update) = match turn {
+            Ok(v) => v,
+            Err(e) => match policy {
+                FailurePolicy::FailFast => {
+                    return Err(e.push_context(format!("node {}", ev.worker)));
+                }
+                _ => {
+                    let ch = &mut ends[ev.worker];
+                    ch.hangup();
+                    *ch = Box::new(DeadChannel::new(ev.worker));
+                    dead[ev.worker] = true;
+                    let live = dead.iter().filter(|&&dd| !dd).count();
+                    if let FailurePolicy::DropRound { min_quorum } = policy {
+                        let quorum = min_quorum.max(1);
+                        if live < quorum {
+                            bail!(
+                                "server update {}: {live} live nodes below the \
+                                 drop-round quorum of {quorum}",
+                                tally.version
+                            );
+                        }
+                    }
+                    // The dead worker's turn neither advances the
+                    // version nor requeues; the heap forgets it.
+                    continue;
+                }
+            },
         };
         tally.upload_acc[ev.worker] += bits;
 
@@ -2208,11 +2621,24 @@ pub(crate) fn serve_async_protocol<B: GradBackend>(
         let arrive_ns = link_free_ns + latency_ns;
         tally.now_ns = tally.now_ns.max(arrive_ns);
 
-        // Apply on the server, then replicate to every worker.
+        // Apply on the server, then replicate to every live worker.
         update.sub_from(x);
         let payload = encode_apply(&mut w, tally.version, &update);
-        for ch in ends.iter_mut() {
-            ch.send(w.as_bytes())?;
+        for (node, ch) in ends.iter_mut().enumerate() {
+            if dead[node] {
+                continue;
+            }
+            if let Err(e) = ch.send(w.as_bytes()) {
+                match policy {
+                    FailurePolicy::FailFast => return Err(e.push_context(format!("node {node}"))),
+                    _ => {
+                        ch.hangup();
+                        *ch = Box::new(DeadChannel::new(node));
+                        dead[node] = true;
+                        continue;
+                    }
+                }
+            }
             tally.wire_apply += payload;
             tally.wire_frames_down += w.as_bytes().len() as u64 * 8;
         }
@@ -2236,9 +2662,21 @@ pub(crate) fn serve_async_protocol<B: GradBackend>(
         }
     }
     encode_shutdown(&mut w);
-    for ch in ends.iter_mut() {
-        ch.send(w.as_bytes())?;
-        tally.wire_frames_down += w.as_bytes().len() as u64 * 8;
+    for (node, ch) in ends.iter_mut().enumerate() {
+        if dead[node] {
+            continue;
+        }
+        match ch.send(w.as_bytes()) {
+            Ok(()) => tally.wire_frames_down += w.as_bytes().len() as u64 * 8,
+            Err(e) => match policy {
+                FailurePolicy::FailFast => return Err(e.push_context(format!("node {node}"))),
+                _ => {
+                    ch.hangup();
+                    *ch = Box::new(DeadChannel::new(node));
+                    dead[node] = true;
+                }
+            },
+        }
     }
     Ok(())
 }
@@ -2312,6 +2750,11 @@ pub(crate) fn param_server_async_wire<B: GradBackend + Clone + Send>(
     let h = local.sync_every.max(1);
     let grads_per_sync = (local.batch.max(1) * h) as f64;
     let total_syncs = s.steps / h;
+    // Same per-worker-turn plan shape as the simulated twin.
+    let plan = match &s.faults {
+        Some(spec) => Some(spec.plan(nodes, (total_syncs / nodes).max(2))?),
+        None => None,
+    };
     let mut root_rng = Prng::new(s.seed);
 
     let mut server_ends: Vec<Box<dyn Channel>> = Vec::with_capacity(nodes);
@@ -2319,6 +2762,10 @@ pub(crate) fn param_server_async_wire<B: GradBackend + Clone + Send>(
     let mut slow = Vec::with_capacity(nodes);
     for w in 0..nodes {
         let (se, we) = transport.duplex();
+        let se = match &plan {
+            Some(p) => p.wrap(w, se),
+            None => se,
+        };
         server_ends.push(se);
         workers.push(WireWorker {
             ch: we,
@@ -2355,6 +2802,7 @@ pub(crate) fn param_server_async_wire<B: GradBackend + Clone + Send>(
     record.curve.push(LossPoint { t: 0, bits: 0, loss: backend.full_loss(&x) });
 
     let mut tally = AsyncServerTally::new(nodes);
+    let mut dead = vec![false; nodes];
     let worker_bits = std::thread::scope(|scope| -> Result<Vec<u64>> {
         let mut handles = Vec::with_capacity(nodes);
         for wk in workers {
@@ -2371,14 +2819,16 @@ pub(crate) fn param_server_async_wire<B: GradBackend + Clone + Send>(
             total_syncs,
             eval_every,
             &mut record,
+            s.policy,
+            &mut dead,
             &mut tally,
         );
         // Drop the server ends either way so blocked workers error out
         // instead of hanging the join.
         drop(server_ends);
-        join_wire_workers(handles, served)
+        join_wire_workers(handles, served, &dead)
     })?;
-    let total_bits = check_wire_accounting(&tally.upload_acc, &worker_bits)?;
+    let total_bits = check_wire_accounting(&tally.upload_acc, &worker_bits, &dead)?;
     finish_async_wire_record(&mut record, s, nodes, total_bits, &tally, started);
     Ok(record)
 }
@@ -3463,7 +3913,8 @@ mod tests {
         let mut x = vec![0.0f32; d];
         let mut record = RunRecord::default();
         let mut tally = SyncServerTally::new(2);
-        serve_sync_protocol(&mut backend, &mut ends, &mut x, 1, 1, &mut record, &mut tally)
+        let mut ctl = SyncServe::fail_fast(2);
+        serve_sync_protocol(&mut backend, &mut ends, &mut x, 1, 1, &mut record, &mut ctl, &mut tally)
             .unwrap();
         let broadcast = script.join().unwrap();
 
@@ -3475,8 +3926,11 @@ mod tests {
         }
         expected[3] += 0.5;
         expected[7] += -0.25;
-        assert_eq!(broadcast, expected, "broadcast dropped the sparse contribution");
+        // The broadcast carries the quorum mean (values pre-scaled by
+        // 1/live); replicas apply it at scale 1.0.
         let scale = 1.0 / 2.0f32;
+        let scaled: Vec<f32> = expected.iter().map(|v| v * scale).collect();
+        assert_eq!(broadcast, scaled, "broadcast dropped the sparse contribution");
         for j in 0..d {
             assert_eq!(x[j], -(expected[j] * scale), "x[{j}] dropped the sparse contribution");
         }

@@ -1,0 +1,802 @@
+//! Deterministic fault injection and the failure policies that absorb
+//! the injected faults.
+//!
+//! The paper's own mechanism motivates this module: error feedback
+//! accumulates whatever gradient mass did not ship, so a contribution
+//! lost to a dead peer this round is not gone — it is carried in the
+//! survivor's memory and shipped later. That makes graceful degradation
+//! theory-backed rather than heuristic, and this module supplies both
+//! halves of testing it:
+//!
+//! * **Fault plans** ([`FaultSpec`] → [`FaultPlan`]): a seeded,
+//!   per-node, per-operation schedule of injected faults (cut the
+//!   connection, drop a frame, corrupt a byte, delay an operation),
+//!   drawn from the crate [`Prng`] so the same `spec:seed` string
+//!   replays the exact same schedule bit for bit — in-process, across
+//!   OS processes, and in CI.
+//! * **Fault wrappers** ([`FaultyChannel`] / [`FaultyTransport`]):
+//!   decorators over the existing [`Channel`] / [`Transport`] traits
+//!   that count operations on the wrapped endpoint and fire the
+//!   scheduled faults. The engines underneath are unmodified — they see
+//!   a peer that genuinely misbehaves.
+//! * **Failure policies** ([`FailurePolicy`]): what an engine does when
+//!   a peer dies. `FailFast` is today's behavior (one dead peer fails
+//!   the run, every thread still joined). `DropRound` aggregates the
+//!   quorum that arrived, marks the dead node, and keeps going — the
+//!   suppressed mass stays in the dead node's error memory, exactly the
+//!   regime Alistarh et al. and Basu et al. analyze. `WaitRejoin`
+//!   additionally lets a replacement worker handshake back in and
+//!   resume from a model `SNAPSHOT` frame.
+//!
+//! ## Counting contract
+//!
+//! A fault is addressed `(op, at)`: it fires on the `at`-th (0-indexed)
+//! `send` or `recv` **performed on the wrapped endpoint**. On the
+//! parameter-server sync protocol the server performs exactly one
+//! `recv` per node per round, so "cut node 3's channel at recv #5"
+//! reads as "node 3 dies in round 5, having contributed rounds 0–4" —
+//! which is also exactly what the simulated twin replays
+//! ([`FaultPlan::sim_deaths`]). A plan wrapped on the *worker* side of
+//! the same link uses the mirrored ops ([`FaultPlan::wrap_peer`]):
+//! a server-side `recv` cut is a worker-side `send` cut. Wrap a plan on
+//! **one** side of a link, never both — double-wrapping injects every
+//! fault twice.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::transport::{Channel, Transport};
+use crate::util::prng::Prng;
+
+/// The error text an injected connection cut surfaces as, on both the
+/// cut operation itself and every operation after it. Tests match on
+/// this substring to distinguish injected faults from real I/O errors.
+pub const PEER_HUNG_UP: &str = "injected fault: peer hung up mid-round";
+
+// ---------------------------------------------------------------------------
+// Failure policies
+// ---------------------------------------------------------------------------
+
+/// What an engine does when a peer dies mid-run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailurePolicy {
+    /// Today's behavior and the default: the first dead peer fails the
+    /// whole run with a descriptive error naming the node. Every
+    /// surviving thread is still joined.
+    FailFast,
+    /// Aggregate the quorum that arrived, mark the dead node, keep
+    /// going. The dead node's unsent mass stays in its error memory
+    /// (simulated) or is simply never folded (wire) — the surviving
+    /// trajectory is still deterministic. The run fails only when live
+    /// nodes drop below `min_quorum`.
+    DropRound {
+        /// Minimum live nodes required to continue (clamped to ≥ 1).
+        min_quorum: usize,
+    },
+    /// Like `DropRound`, but after each degraded round the server waits
+    /// up to `timeout` for a replacement worker to handshake back in
+    /// with a `resume` Hello; the rejoiner is re-synced from a model
+    /// `SNAPSHOT` frame. Only the multi-process cluster runtime can
+    /// accept new connections mid-run, so `Experiment` rejects this
+    /// policy outside `memsgd serve`.
+    WaitRejoin {
+        /// How long to wait for a rejoining worker each degraded round.
+        timeout: Duration,
+    },
+}
+
+impl Default for FailurePolicy {
+    fn default() -> FailurePolicy {
+        FailurePolicy::FailFast
+    }
+}
+
+impl FailurePolicy {
+    /// Parse a policy spec string: `fail-fast`, `drop-round` (quorum 1),
+    /// `drop-round:<quorum>`, or `wait-rejoin:<secs>`.
+    pub fn parse(spec: &str) -> Result<FailurePolicy> {
+        if spec == "fail-fast" {
+            return Ok(FailurePolicy::FailFast);
+        }
+        if spec == "drop-round" {
+            return Ok(FailurePolicy::DropRound { min_quorum: 1 });
+        }
+        if let Some(q) = spec.strip_prefix("drop-round:") {
+            let min_quorum = q
+                .parse::<usize>()
+                .with_context(|| format!("bad drop-round quorum '{q}'"))?;
+            return Ok(FailurePolicy::DropRound { min_quorum });
+        }
+        if let Some(s) = spec.strip_prefix("wait-rejoin:") {
+            let secs = s
+                .parse::<u64>()
+                .with_context(|| format!("bad wait-rejoin timeout '{s}'"))?;
+            return Ok(FailurePolicy::WaitRejoin { timeout: Duration::from_secs(secs) });
+        }
+        bail!(
+            "unknown failure policy '{spec}' \
+             (expected fail-fast, drop-round[:<quorum>], or wait-rejoin:<secs>)"
+        );
+    }
+
+    /// The canonical spec string [`FailurePolicy::parse`] accepts back.
+    pub fn spec_string(&self) -> String {
+        match self {
+            FailurePolicy::FailFast => "fail-fast".to_string(),
+            FailurePolicy::DropRound { min_quorum } => format!("drop-round:{min_quorum}"),
+            FailurePolicy::WaitRejoin { timeout } => {
+                format!("wait-rejoin:{}", timeout.as_secs())
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault plans
+// ---------------------------------------------------------------------------
+
+/// Which endpoint operation a fault fires on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultOp {
+    /// Fires on the `at`-th `send` performed on the wrapped endpoint.
+    Send,
+    /// Fires on the `at`-th `recv` performed on the wrapped endpoint.
+    Recv,
+}
+
+impl FaultOp {
+    fn mirrored(self) -> FaultOp {
+        match self {
+            FaultOp::Send => FaultOp::Recv,
+            FaultOp::Recv => FaultOp::Send,
+        }
+    }
+}
+
+/// What an injected fault does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Swallow the frame: a faulted `send` reports success without
+    /// transmitting; a faulted `recv` discards the arrived frame and
+    /// keeps reading.
+    DropFrame,
+    /// Sleep `ms` milliseconds before performing the operation — the
+    /// straggler / deadline-pressure fault.
+    Delay {
+        /// Injected latency in milliseconds.
+        ms: u64,
+    },
+    /// XOR one byte of the frame (at `offset % len`) — the torn-wire
+    /// fault the hardened decoders must survive.
+    CorruptByte {
+        /// Byte position, reduced modulo the frame length.
+        offset: u64,
+        /// Nonzero XOR mask applied to that byte.
+        xor: u8,
+    },
+    /// Hang up the connection: the operation and every one after it
+    /// fail with [`PEER_HUNG_UP`], and the wrapped endpoint is dropped
+    /// so the real peer observes a genuine close.
+    Cut,
+}
+
+impl FaultAction {
+    fn describe(&self) -> String {
+        match self {
+            FaultAction::DropFrame => "drop-frame".to_string(),
+            FaultAction::Delay { ms } => format!("delay:{ms}ms"),
+            FaultAction::CorruptByte { offset, xor } => {
+                format!("corrupt-byte:+{offset}^{xor:#04x}")
+            }
+            FaultAction::Cut => "cut".to_string(),
+        }
+    }
+}
+
+/// One scheduled fault on one endpoint: fire `action` on the `at`-th
+/// (0-indexed) operation of kind `op`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fault {
+    /// Which operation kind is counted.
+    pub op: FaultOp,
+    /// 0-indexed operation count at which the fault fires.
+    pub at: u64,
+    /// What happens when it fires.
+    pub action: FaultAction,
+}
+
+impl Fault {
+    fn describe(&self) -> String {
+        let op = match self.op {
+            FaultOp::Send => "send",
+            FaultOp::Recv => "recv",
+        };
+        format!("{op} #{} {}", self.at, self.action.describe())
+    }
+}
+
+/// A parsed `--fault-plan` spec: a fault class plus the seed that
+/// materializes it into a concrete [`FaultPlan`] once the run's node
+/// count and round count are known.
+///
+/// Spec grammar (`parse` rejects anything else):
+///
+/// ```text
+/// none                    no faults (parses to Option::None)
+/// kill:<k>:<seed>         k distinct victims, each cut at a seeded round
+/// drop:<k>:<seed>         k victims, one dropped frame each
+/// corrupt:<k>:<seed>      k victims, one corrupted byte each
+/// delay:<k>:<ms>:<seed>   k victims, one <ms>-millisecond stall each
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    class: FaultClass,
+    seed: u64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum FaultClass {
+    Kill { k: usize },
+    Drop { k: usize },
+    Corrupt { k: usize },
+    Delay { k: usize, ms: u64 },
+}
+
+impl FaultSpec {
+    /// Parse a `--fault-plan` spec string; `none` parses to `None`.
+    pub fn parse(spec: &str) -> Result<Option<FaultSpec>> {
+        if spec == "none" {
+            return Ok(None);
+        }
+        let parts: Vec<&str> = spec.split(':').collect();
+        let usize_at = |i: usize, what: &str| -> Result<usize> {
+            parts[i]
+                .parse::<usize>()
+                .with_context(|| format!("bad {what} '{}' in fault plan '{spec}'", parts[i]))
+        };
+        let u64_at = |i: usize, what: &str| -> Result<u64> {
+            parts[i]
+                .parse::<u64>()
+                .with_context(|| format!("bad {what} '{}' in fault plan '{spec}'", parts[i]))
+        };
+        let class = match (parts[0], parts.len()) {
+            ("kill", 3) => FaultClass::Kill { k: usize_at(1, "victim count")? },
+            ("drop", 3) => FaultClass::Drop { k: usize_at(1, "victim count")? },
+            ("corrupt", 3) => FaultClass::Corrupt { k: usize_at(1, "victim count")? },
+            ("delay", 4) => FaultClass::Delay {
+                k: usize_at(1, "victim count")?,
+                ms: u64_at(2, "delay milliseconds")?,
+            },
+            _ => bail!(
+                "unknown fault plan '{spec}' (expected none, kill:<k>:<seed>, \
+                 drop:<k>:<seed>, corrupt:<k>:<seed>, or delay:<k>:<ms>:<seed>)"
+            ),
+        };
+        let seed = u64_at(parts.len() - 1, "seed")?;
+        Ok(Some(FaultSpec { class, seed }))
+    }
+
+    /// The canonical spec string [`FaultSpec::parse`] accepts back.
+    pub fn spec_string(&self) -> String {
+        match self.class {
+            FaultClass::Kill { k } => format!("kill:{k}:{}", self.seed),
+            FaultClass::Drop { k } => format!("drop:{k}:{}", self.seed),
+            FaultClass::Corrupt { k } => format!("corrupt:{k}:{}", self.seed),
+            FaultClass::Delay { k, ms } => format!("delay:{k}:{ms}:{}", self.seed),
+        }
+    }
+
+    /// Materialize the concrete per-node schedule for a run of `nodes`
+    /// endpoints over `rounds` rounds. Deterministic in the spec alone:
+    /// the same `(spec, nodes, rounds)` triple always yields the
+    /// byte-identical plan (the replay contract the proptest pins).
+    ///
+    /// Victims are drawn distinct and scheduled in sorted node order;
+    /// every fault round is drawn from `[1, rounds)` so round 0 always
+    /// completes at full quorum (the engines need one full round to be
+    /// comparable across policies). Requires `rounds ≥ 2` for that
+    /// reason, and clamps the victim count to `nodes`.
+    pub fn plan(&self, nodes: usize, rounds: usize) -> Result<FaultPlan> {
+        if nodes == 0 {
+            bail!("fault plan '{}' needs at least one node", self.spec_string());
+        }
+        if rounds < 2 {
+            bail!(
+                "fault plan '{}' needs at least 2 rounds (round 0 always \
+                 completes at full quorum), run has {rounds}",
+                self.spec_string()
+            );
+        }
+        let (k, action_for): (usize, Box<dyn Fn(&mut Prng) -> FaultAction>) = match self.class {
+            FaultClass::Kill { k } => (k, Box::new(|_| FaultAction::Cut)),
+            FaultClass::Drop { k } => (k, Box::new(|_| FaultAction::DropFrame)),
+            FaultClass::Corrupt { k } => (
+                k,
+                Box::new(|rng: &mut Prng| FaultAction::CorruptByte {
+                    offset: rng.next_u64(),
+                    xor: (rng.below(255) + 1) as u8,
+                }),
+            ),
+            FaultClass::Delay { k, ms } => (k, Box::new(move |_| FaultAction::Delay { ms })),
+        };
+        let mut rng = Prng::new(self.seed);
+        let mut victims = Vec::new();
+        rng.sample_distinct(nodes, k.min(nodes), &mut victims);
+        victims.sort_unstable();
+        let mut faults: BTreeMap<usize, Vec<Fault>> = BTreeMap::new();
+        for &v in &victims {
+            let at = 1 + rng.below(rounds - 1) as u64;
+            let action = action_for(&mut rng);
+            faults
+                .entry(v as usize)
+                .or_default()
+                .push(Fault { op: FaultOp::Recv, at, action });
+        }
+        Ok(FaultPlan { spec: self.spec_string(), faults })
+    }
+}
+
+/// A concrete, materialized fault schedule: for each affected node, the
+/// ordered faults on that node's channel. Plans are authored from the
+/// viewpoint of the endpoint that will be wrapped (the server end of a
+/// PS link, the node's own end of a ring link): `op` counts operations
+/// **on the wrapped endpoint**.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    spec: String,
+    faults: BTreeMap<usize, Vec<Fault>>,
+}
+
+impl FaultPlan {
+    /// An empty plan (wraps nothing, injects nothing).
+    pub fn none() -> FaultPlan {
+        FaultPlan { spec: "none".to_string(), faults: BTreeMap::new() }
+    }
+
+    /// Manual plan: cut `node`'s channel on its `at`-th `send` — the
+    /// shape the legacy `CutTransport` test fixture injected.
+    pub fn cut_send(node: usize, at: u64) -> FaultPlan {
+        FaultPlan {
+            spec: format!("manual:cut-send:{node}:{at}"),
+            faults: BTreeMap::from([(
+                node,
+                vec![Fault { op: FaultOp::Send, at, action: FaultAction::Cut }],
+            )]),
+        }
+    }
+
+    /// Manual plan: cut `node`'s channel on its `at`-th `recv`.
+    pub fn cut_recv(node: usize, at: u64) -> FaultPlan {
+        FaultPlan {
+            spec: format!("manual:cut-recv:{node}:{at}"),
+            faults: BTreeMap::from([(
+                node,
+                vec![Fault { op: FaultOp::Recv, at, action: FaultAction::Cut }],
+            )]),
+        }
+    }
+
+    /// The spec string this plan was materialized from.
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// True when the plan schedules no faults at all.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// The scheduled faults for `node` (empty slice when unaffected).
+    pub fn faults_for(&self, node: usize) -> &[Fault] {
+        self.faults.get(&node).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// The round a node's channel is cut, if any: the earliest `at` of
+    /// a `Cut` fault on it (one server `recv` per node per round on the
+    /// sync protocol, so the recv count *is* the round count).
+    pub fn death_round(&self, node: usize) -> Option<u64> {
+        self.faults_for(node)
+            .iter()
+            .filter(|f| f.action == FaultAction::Cut)
+            .map(|f| f.at)
+            .min()
+    }
+
+    /// Mirror the plan into the simulated engines: per node, the round
+    /// at which it dies (`None` = survives). Only pure kill plans have
+    /// a simulated twin — frame drops, byte corruption, and delays are
+    /// wire phenomena with no simulated counterpart — so any other
+    /// fault kind is rejected loudly.
+    pub fn sim_deaths(&self, nodes: usize) -> Result<Vec<Option<u64>>> {
+        let mut deaths = vec![None; nodes];
+        for (&node, faults) in &self.faults {
+            if node >= nodes {
+                bail!(
+                    "fault plan '{}' targets node {node}, run has {nodes} nodes",
+                    self.spec
+                );
+            }
+            for f in faults {
+                if f.action != FaultAction::Cut {
+                    bail!(
+                        "fault plan '{}' schedules a non-cut fault ({}) — only kill \
+                         plans mirror into the simulated engines",
+                        self.spec,
+                        f.describe()
+                    );
+                }
+            }
+            deaths[node] = self.death_round(node);
+        }
+        Ok(deaths)
+    }
+
+    /// Wrap `node`'s channel with this plan's faults for it; channels
+    /// of unaffected nodes pass through unwrapped (zero overhead).
+    pub fn wrap(&self, node: usize, ch: Box<dyn Channel>) -> Box<dyn Channel> {
+        let faults = self.faults_for(node);
+        if faults.is_empty() {
+            ch
+        } else {
+            Box::new(FaultyChannel::new(ch, faults.to_vec()))
+        }
+    }
+
+    /// [`FaultPlan::wrap`] for the *opposite* endpoint of the link the
+    /// plan was authored for: every `op` is mirrored (a server-side
+    /// `recv` cut is a worker-side `send` cut), so a worker process can
+    /// apply the same plan string the server-side twin replays.
+    pub fn wrap_peer(&self, node: usize, ch: Box<dyn Channel>) -> Box<dyn Channel> {
+        let faults = self.faults_for(node);
+        if faults.is_empty() {
+            ch
+        } else {
+            let mirrored = faults
+                .iter()
+                .map(|f| Fault { op: f.op.mirrored(), ..*f })
+                .collect();
+            Box::new(FaultyChannel::new(ch, mirrored))
+        }
+    }
+
+    /// Deterministic, human-readable serialization of the full
+    /// schedule — the byte-identity surface the replay proptest pins.
+    pub fn describe(&self) -> String {
+        let mut out = format!("fault-plan {}\n", self.spec);
+        for (node, faults) in &self.faults {
+            for f in faults {
+                out.push_str(&format!("node {node}: {}\n", f.describe()));
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault wrappers
+// ---------------------------------------------------------------------------
+
+/// A [`Channel`] decorator that counts operations and fires scheduled
+/// [`Fault`]s. After a `Cut` the wrapped endpoint is dropped (so the
+/// real peer observes a genuine close) and every further operation
+/// fails with [`PEER_HUNG_UP`].
+pub struct FaultyChannel {
+    inner: Option<Box<dyn Channel>>,
+    faults: Vec<Fault>,
+    sends: u64,
+    recvs: u64,
+}
+
+impl FaultyChannel {
+    /// Wrap `inner` with the given fault schedule.
+    pub fn new(inner: Box<dyn Channel>, faults: Vec<Fault>) -> FaultyChannel {
+        FaultyChannel { inner: Some(inner), faults, sends: 0, recvs: 0 }
+    }
+
+    fn cut(&mut self) -> anyhow::Error {
+        if let Some(mut ch) = self.inner.take() {
+            ch.hangup();
+        }
+        anyhow!(PEER_HUNG_UP)
+    }
+}
+
+impl Channel for FaultyChannel {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        let at = self.sends;
+        self.sends += 1;
+        let mut owned: Option<Vec<u8>> = None;
+        for i in 0..self.faults.len() {
+            let f = self.faults[i];
+            if f.op != FaultOp::Send || f.at != at {
+                continue;
+            }
+            match f.action {
+                FaultAction::Cut => return Err(self.cut()),
+                FaultAction::DropFrame => return Ok(()),
+                FaultAction::Delay { ms } => std::thread::sleep(Duration::from_millis(ms)),
+                FaultAction::CorruptByte { offset, xor } => {
+                    let buf = owned.get_or_insert_with(|| frame.to_vec());
+                    if !buf.is_empty() {
+                        let i = (offset % buf.len() as u64) as usize;
+                        buf[i] ^= xor;
+                    }
+                }
+            }
+        }
+        let ch = self.inner.as_mut().ok_or_else(|| anyhow!(PEER_HUNG_UP))?;
+        ch.send(owned.as_deref().unwrap_or(frame))
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        loop {
+            let at = self.recvs;
+            self.recvs += 1;
+            let mut drop_frame = false;
+            let mut corruptions: Vec<(u64, u8)> = Vec::new();
+            for i in 0..self.faults.len() {
+                let f = self.faults[i];
+                if f.op != FaultOp::Recv || f.at != at {
+                    continue;
+                }
+                match f.action {
+                    FaultAction::Cut => return Err(self.cut()),
+                    FaultAction::DropFrame => drop_frame = true,
+                    FaultAction::Delay { ms } => {
+                        std::thread::sleep(Duration::from_millis(ms))
+                    }
+                    FaultAction::CorruptByte { offset, xor } => {
+                        corruptions.push((offset, xor))
+                    }
+                }
+            }
+            let ch = self.inner.as_mut().ok_or_else(|| anyhow!(PEER_HUNG_UP))?;
+            let mut frame = ch.recv()?;
+            if drop_frame {
+                continue; // discard the arrived frame, keep reading
+            }
+            for (offset, xor) in corruptions {
+                if !frame.is_empty() {
+                    let i = (offset % frame.len() as u64) as usize;
+                    frame[i] ^= xor;
+                }
+            }
+            return Ok(frame);
+        }
+    }
+
+    fn hangup(&mut self) {
+        if let Some(ch) = self.inner.as_mut() {
+            ch.hangup();
+        }
+    }
+}
+
+/// A [`Transport`] decorator: the `i`-th `duplex()`'s **first** end
+/// (the server/observer end, by the engines' convention) is wrapped
+/// with the plan's faults for node `i`. Unaffected duplexes pass
+/// through untouched, so an empty plan is exactly the inner transport.
+pub struct FaultyTransport {
+    inner: Box<dyn Transport>,
+    plan: FaultPlan,
+    next: usize,
+}
+
+impl FaultyTransport {
+    /// Wrap `inner` so its future duplexes carry `plan`'s faults.
+    pub fn new(inner: Box<dyn Transport>, plan: FaultPlan) -> FaultyTransport {
+        FaultyTransport { inner, plan, next: 0 }
+    }
+}
+
+impl Transport for FaultyTransport {
+    fn duplex(&mut self) -> (Box<dyn Channel>, Box<dyn Channel>) {
+        let i = self.next;
+        self.next += 1;
+        let (observer, peer) = self.inner.duplex();
+        (self.plan.wrap(i, observer), peer)
+    }
+}
+
+/// The channel a failure policy swaps in for a node it has marked dead:
+/// every operation fails descriptively, and — crucially — the node's
+/// *original* channel end has been dropped, so an in-process loopback
+/// peer blocked on `recv` unblocks with "channel closed" instead of
+/// hanging until a deadline.
+pub struct DeadChannel {
+    node: usize,
+}
+
+impl DeadChannel {
+    /// A dead-end channel for `node`.
+    pub fn new(node: usize) -> DeadChannel {
+        DeadChannel { node }
+    }
+}
+
+impl Channel for DeadChannel {
+    fn send(&mut self, _frame: &[u8]) -> Result<()> {
+        bail!("node {} marked dead by the failure policy", self.node);
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        bail!("node {} marked dead by the failure policy", self.node);
+    }
+}
+
+/// The RNG stream a rejoining worker resumes on. It must be (a)
+/// deterministic from `(seed, node, next_round)` alone — both the
+/// server's simulated twin and the rejoining process derive it
+/// independently — and (b) disjoint from every stream the original
+/// incarnation consumed, so a rejoin never replays gradients.
+pub fn rejoin_rng(seed: u64, node: u32, next_round: u64) -> Prng {
+    Prng::new(seed)
+        .split((node as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15) ^ (next_round + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transport::Loopback;
+
+    #[test]
+    fn policy_specs_roundtrip() {
+        for spec in ["fail-fast", "drop-round:3", "wait-rejoin:45"] {
+            let p = FailurePolicy::parse(spec).unwrap();
+            assert_eq!(p.spec_string(), spec);
+        }
+        assert_eq!(
+            FailurePolicy::parse("drop-round").unwrap(),
+            FailurePolicy::DropRound { min_quorum: 1 }
+        );
+        assert_eq!(FailurePolicy::default(), FailurePolicy::FailFast);
+        for bad in ["", "failfast", "drop-round:x", "wait-rejoin", "wait-rejoin:-1"] {
+            assert!(FailurePolicy::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn fault_specs_roundtrip_and_reject_junk() {
+        assert!(FaultSpec::parse("none").unwrap().is_none());
+        for spec in ["kill:2:42", "drop:1:7", "corrupt:3:99", "delay:2:250:5"] {
+            let s = FaultSpec::parse(spec).unwrap().unwrap();
+            assert_eq!(s.spec_string(), spec);
+        }
+        for bad in ["", "kill", "kill:2", "kill:2:42:9", "delay:2:5", "explode:1:2", "kill:x:1"] {
+            assert!(FaultSpec::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn plans_replay_bit_for_bit_and_differ_across_seeds() {
+        let spec = FaultSpec::parse("kill:3:1234").unwrap().unwrap();
+        let a = spec.plan(8, 30).unwrap();
+        let b = spec.plan(8, 30).unwrap();
+        assert_eq!(a.describe(), b.describe());
+        assert_eq!(a, b);
+        let other = FaultSpec::parse("kill:3:1235").unwrap().unwrap();
+        assert_ne!(a.describe(), other.plan(8, 30).unwrap().describe());
+    }
+
+    #[test]
+    fn kill_plans_never_kill_round_zero_and_stay_in_range() {
+        for seed in 0..50u64 {
+            let spec = FaultSpec::parse(&format!("kill:4:{seed}")).unwrap().unwrap();
+            let plan = spec.plan(6, 11).unwrap();
+            let deaths = plan.sim_deaths(6).unwrap();
+            assert_eq!(deaths.iter().filter(|d| d.is_some()).count(), 4, "seed={seed}");
+            for d in deaths.into_iter().flatten() {
+                assert!((1..11).contains(&d), "seed={seed} round={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_rejects_degenerate_runs_and_clamps_victims() {
+        let spec = FaultSpec::parse("kill:9:1").unwrap().unwrap();
+        assert!(spec.plan(0, 10).is_err());
+        assert!(spec.plan(4, 1).is_err());
+        // More victims than nodes: clamped, every node scheduled once.
+        let plan = spec.plan(4, 10).unwrap();
+        assert_eq!((0..4).filter(|&n| !plan.faults_for(n).is_empty()).count(), 4);
+    }
+
+    #[test]
+    fn sim_deaths_reject_non_kill_plans() {
+        let spec = FaultSpec::parse("corrupt:1:3").unwrap().unwrap();
+        let err = spec.plan(4, 10).unwrap().sim_deaths(4).unwrap_err();
+        assert!(format!("{err:#}").contains("only kill plans"), "{err:#}");
+        let narrow = FaultPlan::cut_recv(7, 2).sim_deaths(4).unwrap_err();
+        assert!(format!("{narrow:#}").contains("targets node 7"), "{narrow:#}");
+    }
+
+    #[test]
+    fn cut_send_fires_on_the_scheduled_send() {
+        let (server, worker) = Loopback.duplex();
+        let mut faulty = FaultPlan::cut_send(0, 2).wrap(0, server);
+        let mut worker = worker;
+        faulty.send(b"a").unwrap();
+        faulty.send(b"b").unwrap();
+        let err = faulty.send(b"c").unwrap_err();
+        assert!(format!("{err:#}").contains(PEER_HUNG_UP), "{err:#}");
+        // Every later operation fails the same way; the peer sees a close.
+        assert!(faulty.recv().is_err());
+        assert_eq!(worker.recv().unwrap(), b"a");
+        assert_eq!(worker.recv().unwrap(), b"b");
+        assert!(worker.recv().is_err(), "peer must observe the hangup");
+    }
+
+    #[test]
+    fn recv_faults_drop_corrupt_and_cut() {
+        let (server, worker) = Loopback.duplex();
+        let faults = vec![
+            Fault { op: FaultOp::Recv, at: 0, action: FaultAction::DropFrame },
+            Fault {
+                op: FaultOp::Recv,
+                at: 2,
+                action: FaultAction::CorruptByte { offset: 5, xor: 0xFF },
+            },
+            Fault { op: FaultOp::Recv, at: 3, action: FaultAction::Cut },
+        ];
+        let mut faulty = FaultyChannel::new(server, faults);
+        let mut worker = worker;
+        for frame in [b"one", b"two", b"xyz"] {
+            worker.send(frame).unwrap();
+        }
+        // recv #0 drops "one" and keeps reading, yielding "two".
+        assert_eq!(faulty.recv().unwrap(), b"two");
+        // recv #2 corrupts byte 5 % 3 = 2 of "xyz".
+        assert_eq!(faulty.recv().unwrap(), [b'x', b'y', b'z' ^ 0xFF]);
+        let err = faulty.recv().unwrap_err();
+        assert!(format!("{err:#}").contains(PEER_HUNG_UP), "{err:#}");
+    }
+
+    #[test]
+    fn transport_wraps_only_affected_duplexes() {
+        let mut t = FaultyTransport::new(Box::new(Loopback), FaultPlan::cut_send(1, 0));
+        let (mut s0, mut w0) = t.duplex();
+        let (mut s1, _w1) = t.duplex();
+        s0.send(b"fine").unwrap();
+        assert_eq!(w0.recv().unwrap(), b"fine");
+        let err = s1.send(b"doomed").unwrap_err();
+        assert!(format!("{err:#}").contains(PEER_HUNG_UP), "{err:#}");
+    }
+
+    #[test]
+    fn wrap_peer_mirrors_ops() {
+        // A recv-cut plan wrapped on the peer side cuts on *send*.
+        let plan = FaultPlan::cut_recv(0, 1);
+        let (_server, worker) = Loopback.duplex();
+        let mut peer = plan.wrap_peer(0, worker);
+        peer.send(b"round 0").unwrap();
+        let err = peer.send(b"round 1").unwrap_err();
+        assert!(format!("{err:#}").contains(PEER_HUNG_UP), "{err:#}");
+    }
+
+    #[test]
+    fn dead_channel_is_descriptive() {
+        let mut ch = DeadChannel::new(3);
+        let err = ch.send(b"x").unwrap_err();
+        assert!(format!("{err:#}").contains("node 3 marked dead"), "{err:#}");
+        assert!(ch.recv().is_err());
+    }
+
+    #[test]
+    fn rejoin_rng_is_deterministic_and_disjoint() {
+        let a: Vec<u64> = (0..8).map({
+            let mut r = rejoin_rng(7, 2, 5);
+            move |_| r.next_u64()
+        }).collect();
+        let b: Vec<u64> = (0..8).map({
+            let mut r = rejoin_rng(7, 2, 5);
+            move |_| r.next_u64()
+        }).collect();
+        assert_eq!(a, b);
+        let mut other_node = rejoin_rng(7, 3, 5);
+        let mut other_round = rejoin_rng(7, 2, 6);
+        assert_ne!(a[0], other_node.next_u64());
+        assert_ne!(a[0], other_round.next_u64());
+    }
+}

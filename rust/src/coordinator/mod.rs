@@ -47,6 +47,14 @@
 //!   a descriptive error naming the node, never a hang
 //!   (`tests/failure_injection.rs`), and every engine thread is joined
 //!   on both the success and the error path.
+//! * **Failure semantics are a policy, and degraded runs replay.**
+//!   What happens *after* the deadline trips is chosen by
+//!   [`faults::FailurePolicy`]: fail fast (default), drop the dead
+//!   node and aggregate the surviving quorum, or wait for a rejoin.
+//!   Fault schedules are seeded ([`faults::FaultPlan`]), so a degraded
+//!   run is as replayable as a healthy one — under a fixed plan the
+//!   simulated and wire engines still agree bit for bit
+//!   (`tests/chaos.rs`).
 //! * **Tie-breaking is deterministic.** Compressor selection ties break
 //!   toward the lowest coordinate index (the `util::select` contract),
 //!   which is what lets the dense and active-set scans — and therefore
@@ -97,6 +105,12 @@
 //!   the socket-shaped [`transport::Transport`]/[`transport::Channel`]
 //!   abstraction, the in-process loopback, the byte-counting wrapper,
 //!   and the typed wire-message codec (frame format documented there).
+//! * [`faults`] — deterministic fault injection and failure policies:
+//!   seeded per-node fault schedules ([`faults::FaultPlan`]) behind
+//!   `--fault-plan`, [`faults::FaultyChannel`] /
+//!   [`faults::FaultyTransport`] decorators over the transport traits,
+//!   and the [`faults::FailurePolicy`] knob
+//!   (fail-fast / drop-round / wait-rejoin) every engine honors.
 //! * [`net`] — the TCP backend of the same abstraction:
 //!   length-delimited frames on real sockets ([`net::TcpChannel`] /
 //!   [`net::TcpTransport`]), the version/config handshake
@@ -129,6 +143,7 @@ pub mod cluster;
 pub mod config;
 pub mod distributed;
 pub mod experiment;
+pub mod faults;
 #[cfg(unix)]
 pub(crate) mod mux;
 pub mod net;
@@ -138,3 +153,4 @@ pub mod transport;
 
 pub use config::{LocalUpdate, MethodSpec};
 pub use experiment::{Experiment, GossipGraph, Topology};
+pub use faults::{FailurePolicy, FaultPlan, FaultSpec};

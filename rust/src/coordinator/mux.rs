@@ -461,6 +461,27 @@ impl Mux {
     }
 }
 
+/// Replace a dead connection with a freshly handshaken one (the
+/// `WaitRejoin` path): the new nonblocking stream takes the node's slot
+/// in the poll set — outbox cleared, assembler carried over from the
+/// handshake — and a fresh [`PollChannel`] facade is returned. The old
+/// socket (if any) is shut down first so its peer unblocks.
+pub(crate) fn adopt(
+    mux: &Arc<Mutex<Mux>>,
+    node: usize,
+    stream: TcpStream,
+    asm: FrameAssembler,
+) -> Result<Box<dyn Channel>> {
+    let mut m = mux.lock().map_err(|_| anyhow!("cluster mux poisoned"))?;
+    if node >= m.conns.len() {
+        bail!("adopting node {node}, mux has {} slots", m.conns.len());
+    }
+    let _ = m.conns[node].stream.shutdown(Shutdown::Both);
+    let frame_started = if asm.mid_frame() { Some(Instant::now()) } else { None };
+    m.conns[node] = Conn { stream, asm, outbox: VecDeque::new(), frame_started, dead: None };
+    Ok(Box::new(PollChannel { node, mux: Arc::clone(mux) }))
+}
+
 /// Wrap handshaken streams into per-node [`Channel`]s over one shared
 /// [`Mux`]; the second return is the teardown handle for
 /// [`drain_and_shutdown`].
@@ -558,6 +579,19 @@ impl Channel for PollChannel {
             }
             let wait = deadline.duration_since(now).min(POLL_TICK);
             mux.pump(wait)?;
+        }
+    }
+
+    /// Shut the node's socket down and take it out of the poll set —
+    /// the failure-policy hangup. The peer's blocked read errors out
+    /// immediately instead of waiting for a deadline.
+    fn hangup(&mut self) {
+        if let Ok(mut m) = self.mux.lock() {
+            let c = &mut m.conns[self.node];
+            let _ = c.stream.shutdown(Shutdown::Both);
+            if c.dead.is_none() {
+                c.dead = Some("hung up by the failure policy".into());
+            }
         }
     }
 }

@@ -68,7 +68,14 @@ use crate::util::json::Json;
 /// v2: `proto` travels as a JSON **string** in `HELLO`/`WELCOME` — a
 /// u64 does not fit an f64 JSON number losslessly above 2^53, the same
 /// reason [`super::cluster::RunConfig`] already stringifies its seed.
-pub const PROTOCOL_VERSION: u64 = 2;
+///
+/// v3: `HELLO` gains the `resume` flag (a rejoining worker announcing
+/// it needs a model `SNAPSHOT`, not round-0 state), the data plane
+/// gains the `SNAPSHOT` frame kind, and sync `BROADCAST` values are
+/// **pre-scaled by the server** (workers apply them at scale 1.0, so
+/// the server can divide by the live-node count on degraded rounds).
+/// Each of the three silently corrupts a v2 pairing, hence the bump.
+pub const PROTOCOL_VERSION: u64 = 3;
 
 /// Data-plane read timeout: how long a blocked `recv` waits for the
 /// peer before failing the run. Generous — a sync-round barrier
@@ -378,6 +385,13 @@ impl Channel for TcpChannel {
     fn recv(&mut self) -> Result<Vec<u8>> {
         read_frame_deadline(&mut self.stream, self.max_frame_bytes, Some(FRAME_DEADLINE))
     }
+
+    fn hangup(&mut self) {
+        // Best-effort: the peer's blocked reads fail promptly instead of
+        // waiting out a deadline. A failed shutdown means the socket is
+        // already gone, which is the goal state anyway.
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
 }
 
 /// A [`Transport`] whose every [`Transport::duplex`] is a freshly
@@ -461,6 +475,83 @@ pub fn connect_with_retry(addr: &str, policy: &Backoff) -> Result<TcpStream> {
     }
 }
 
+/// How one handshake attempt failed: transiently (worth retrying — the
+/// server may still be binding its protocol state) or permanently (a
+/// well-formed `{"error": …}` rejection frame; the server saw the
+/// `HELLO` and said no, so retrying the same `HELLO` cannot succeed).
+enum HandshakeFailure {
+    Transient(anyhow::Error),
+    Rejected(anyhow::Error),
+}
+
+/// One complete connection attempt: dial, configure, send `hello`,
+/// read the server's answer frame.
+fn handshake_once(
+    addr: &str,
+    hello: &Hello,
+) -> std::result::Result<(TcpStream, Vec<u8>), HandshakeFailure> {
+    use HandshakeFailure::Transient;
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| Transient(anyhow!("connecting to {addr}: {e}")))?;
+    configure_stream(&stream).map_err(Transient)?;
+    stream
+        .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+        .map_err(|e| Transient(anyhow!("setting handshake timeout: {e}")))?;
+    write_frame(&mut stream, &hello.encode())
+        .map_err(|e| Transient(e.push_context("sending HELLO")))?;
+    let reply = read_frame_deadline(&mut stream, MAX_FRAME_BYTES, Some(HANDSHAKE_TIMEOUT))
+        .map_err(|e| Transient(e.push_context("awaiting WELCOME")))?;
+    if let Ok(text) = std::str::from_utf8(&reply) {
+        if let Ok(j) = Json::parse(text) {
+            if let Some(Ok(msg)) = j.get("error").map(|v| v.as_str()) {
+                return Err(HandshakeFailure::Rejected(anyhow!(
+                    "server rejected handshake: {msg}"
+                )));
+            }
+        }
+    }
+    stream
+        .set_read_timeout(Some(READ_TIMEOUT))
+        .map_err(|e| Transient(anyhow!("restoring data-plane read timeout: {e}")))?;
+    Ok((stream, reply))
+}
+
+/// Dial `addr` and run the full handshake — `HELLO` out, answer frame
+/// back — retrying the *whole* attempt (fresh connection included) with
+/// bounded exponential backoff on any transient failure. This covers
+/// the gap [`connect_with_retry`] leaves: a server that `accept`s while
+/// still binding its protocol state fails the handshake, not the
+/// connect, and a worker started before its server must survive both.
+/// A well-formed `{"error": …}` rejection is permanent and surfaces
+/// immediately without further attempts. Returns the connected stream
+/// (data-plane timeouts restored) and the server's answer frame.
+pub fn handshake_with_retry(
+    addr: &str,
+    hello: &Hello,
+    policy: &Backoff,
+) -> Result<(TcpStream, Vec<u8>)> {
+    let mut delay = policy.base;
+    let mut last: Option<anyhow::Error> = None;
+    for attempt in 0..policy.attempts {
+        if attempt > 0 {
+            std::thread::sleep(delay);
+            delay = delay.checked_mul(2).unwrap_or(policy.cap).min(policy.cap);
+        }
+        match handshake_once(addr, hello) {
+            Ok(ok) => return Ok(ok),
+            Err(HandshakeFailure::Rejected(e)) => return Err(e),
+            Err(HandshakeFailure::Transient(e)) => last = Some(e),
+        }
+    }
+    match last {
+        Some(e) => Err(anyhow!(
+            "handshake with {addr} failed after {} attempts: {e:#}",
+            policy.attempts
+        )),
+        None => bail!("handshake with {addr}: zero attempts configured"),
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Handshake
 // ---------------------------------------------------------------------------
@@ -475,6 +566,10 @@ pub struct Hello {
     pub method: String,
     pub batch: usize,
     pub sync_every: usize,
+    /// A rejoining worker: it missed rounds and needs the server to
+    /// answer the `WELCOME` with a model `SNAPSHOT` frame before the
+    /// data plane resumes. Servers not expecting a rejoin reject it.
+    pub resume: bool,
 }
 
 impl Hello {
@@ -486,6 +581,7 @@ impl Hello {
             method: String::new(),
             batch: 0,
             sync_every: 0,
+            resume: false,
         }
     }
 
@@ -499,12 +595,15 @@ impl Hello {
             ("method", Json::str(self.method.clone())),
             ("batch", Json::Num(self.batch as f64)),
             ("sync_every", Json::Num(self.sync_every as f64)),
+            ("resume", Json::Bool(self.resume)),
         ])
         .to_string()
         .into_bytes()
     }
 
-    /// Parse a `HELLO` frame payload.
+    /// Parse a `HELLO` frame payload. `resume` defaults to `false` when
+    /// absent (the field is advisory; the version check is what rejects
+    /// old peers).
     pub fn decode(frame: &[u8]) -> Result<Hello> {
         let text = std::str::from_utf8(frame).context("HELLO frame is not UTF-8")?;
         let j = Json::parse(text).context("HELLO frame is not JSON")?;
@@ -517,6 +616,10 @@ impl Hello {
             method: j.req("method")?.as_str()?.to_string(),
             batch: j.req("batch")?.as_usize()?,
             sync_every: j.req("sync_every")?.as_usize()?,
+            resume: match j.get("resume") {
+                Some(v) => v.as_bool().context("HELLO resume must be a bool")?,
+                None => false,
+            },
         })
     }
 }
@@ -656,6 +759,7 @@ mod tests {
             method: "memsgd:top_k:1".into(),
             batch: 2,
             sync_every: 3,
+            resume: false,
         };
         let decoded = Hello::decode(&server.encode()).unwrap();
         assert_eq!(decoded, server);
@@ -674,6 +778,62 @@ mod tests {
         reject(&|w| w.method = "sgd".into(), "method mismatch");
         reject(&|w| w.batch = 9, "batch mismatch");
         reject(&|w| w.sync_every = 9, "sync-interval mismatch");
+    }
+
+    #[test]
+    fn hello_resume_roundtrips_and_defaults_false() {
+        let mut h = Hello::any();
+        h.resume = true;
+        assert_eq!(Hello::decode(&h.encode()).unwrap(), h);
+        // A frame without the field (the v2 shape) decodes as false.
+        let legacy = br#"{"proto":"3","dim":0,"method":"","batch":0,"sync_every":0}"#;
+        assert!(!Hello::decode(legacy).unwrap().resume);
+    }
+
+    #[test]
+    fn handshake_retries_past_a_dropped_connection() {
+        // The server accepts the first connection and drops it without a
+        // WELCOME (the "still binding its protocol state" shape), then
+        // serves the second attempt properly: the worker must retry the
+        // whole handshake, not just the connect.
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (first, _) = listener.accept().unwrap();
+            drop(first);
+            let (mut second, _) = listener.accept().unwrap();
+            let hello = read_frame(&mut second, MAX_FRAME_BYTES).unwrap();
+            assert!(Hello::decode(&hello).is_ok());
+            write_frame(&mut second, br#"{"welcome":true}"#).unwrap();
+        });
+        let policy =
+            Backoff { attempts: 4, base: Duration::from_millis(5), cap: Duration::from_millis(40) };
+        let (_stream, reply) = handshake_with_retry(&addr, &Hello::any(), &policy).unwrap();
+        assert_eq!(reply, br#"{"welcome":true}"#);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn handshake_rejection_is_permanent() {
+        // A well-formed {"error": ...} frame must surface immediately —
+        // exactly one accept happens, so a retry would hang, and the
+        // short join proves none was attempted.
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            let _ = read_frame(&mut conn, MAX_FRAME_BYTES).unwrap();
+            write_frame(&mut conn, br#"{"error":"dim mismatch, go away"}"#).unwrap();
+        });
+        let policy =
+            Backoff { attempts: 5, base: Duration::from_secs(2), cap: Duration::from_secs(2) };
+        let start = Instant::now();
+        let err = handshake_with_retry(&addr, &Hello::any(), &policy).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rejected"), "{msg}");
+        assert!(msg.contains("dim mismatch, go away"), "{msg}");
+        assert!(start.elapsed() < Duration::from_secs(1), "must not have retried");
+        server.join().unwrap();
     }
 
     #[test]

@@ -36,6 +36,7 @@
 //! GATHER    := γ(7) γ(round+1) γ(accounted_bits+1) γ(hop_bits+1) payload
 //! EXCHANGE  := γ(8) γ(round+1) γ(node+1) γ(accounted_bits+1) payload
 //! REPORT    := γ(9) γ(round+1) γ(node+1) γ(accounted_bits+1) payload
+//! SNAPSHOT  := γ(10) γ(next_round+1) payload
 //! ```
 //!
 //! * `UPLOAD` — worker → server: one node's compressed sync for a
@@ -81,6 +82,14 @@
 //!   the node's dense iterate, with `accounted_bits` carrying the
 //!   node's *cumulative* transmitted accounting so the driver can
 //!   cross-check the join-time tallies.
+//! * `SNAPSHOT` — server → one worker: the full dense model iterate,
+//!   sent to re-sync a worker that was not present for the preceding
+//!   rounds — a rejoiner under [`super::faults::FailurePolicy`]'s
+//!   `WaitRejoin`, or every worker of a run restarted from a cluster
+//!   checkpoint. `next_round` is the first round the receiver will
+//!   participate in; the receiver replaces its replica with the payload
+//!   verbatim (no folding), zeroes its error memory, and reseeds its
+//!   gradient stream from [`super::faults::rejoin_rng`].
 //!
 //! ## Accounted vs transmitted bits
 //!
@@ -139,6 +148,13 @@ pub trait Channel: Send {
     fn send(&mut self, frame: &[u8]) -> Result<()>;
     /// Block for the next frame.
     fn recv(&mut self) -> Result<Vec<u8>>;
+    /// Best-effort local close: after this, the *peer*'s blocked
+    /// operations should fail promptly (socket backends shut the
+    /// stream down). Failure policies call it when marking a node dead
+    /// so a half-open connection cannot hold a deadline hostage.
+    /// Default: no-op — in-process backends rely on drop for the same
+    /// effect.
+    fn hangup(&mut self) {}
 }
 
 /// A transport fabric: hands out duplex channel pairs. The engines call
@@ -277,6 +293,7 @@ const MSG_REDUCE: u64 = 6;
 const MSG_GATHER: u64 = 7;
 const MSG_EXCHANGE: u64 = 8;
 const MSG_REPORT: u64 = 9;
+const MSG_SNAPSHOT: u64 = 10;
 
 /// A decoded wire message (see the module docs for the frame format).
 #[derive(Debug)]
@@ -299,6 +316,10 @@ pub enum WireMsg {
     Exchange { round: u64, node: u32, accounted_bits: u64, update: Update },
     /// Gossip node → driver (eval rounds): the node's dense iterate.
     Report { round: u64, node: u32, accounted_bits: u64, update: Update },
+    /// Server → one worker: full model re-sync for a rejoiner or a
+    /// checkpoint restart; `next_round` is the first round the
+    /// receiver participates in.
+    Snapshot { next_round: u64, update: Update },
 }
 
 /// [`decode_msg`]'s result: the message plus the measured bit length of
@@ -437,6 +458,16 @@ pub fn encode_report(
     crate::compress::elias::encode_payload_update(update, w)
 }
 
+/// Encode a `SNAPSHOT` into `w` (cleared first) with the generic
+/// update codec — the model iterate is a dense vector, not one
+/// compressor's output. Returns the payload bit count.
+pub fn encode_snapshot(w: &mut BitWriter, next_round: u64, update: &Update) -> u64 {
+    w.clear();
+    w.put_gamma(MSG_SNAPSHOT);
+    w.put_gamma(next_round + 1);
+    crate::compress::elias::encode_payload_update(update, w)
+}
+
 /// Decode one frame. Total on arbitrary input (truncation, corruption,
 /// unknown kinds, hostile counts — all descriptive errors, never
 /// panics); update payloads are validated against `dim`.
@@ -508,6 +539,13 @@ pub fn decode_msg(frame: &[u8], dim: usize) -> Result<DecodedMsg> {
             let update = decode_payload(&mut r, dim)?;
             let payload = r.consumed() - before;
             (WireMsg::Gather { round, accounted_bits, hop_bits, update }, payload)
+        }
+        MSG_SNAPSHOT => {
+            let next_round = r.get_gamma()? - 1;
+            let before = r.consumed();
+            let update = decode_payload(&mut r, dim)?;
+            let payload = r.consumed() - before;
+            (WireMsg::Snapshot { next_round, update }, payload)
         }
         other => bail!("unknown wire message kind {other}"),
     };
@@ -661,6 +699,22 @@ mod tests {
             WireMsg::Report { round, node, accounted_bits, update } => {
                 assert_eq!((round, node, accounted_bits), (9, 5, 12345));
                 assert_eq!(update.to_dense(3), vec![1.0, -0.5, 0.25]);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrips_a_dense_model() {
+        let mut w = BitWriter::new();
+        let model = Update::Dense(vec![0.5, -1.25, 0.0, 3.0]);
+        let bits = encode_snapshot(&mut w, 17, &model);
+        let dec = decode_msg(w.as_bytes(), 4).unwrap();
+        assert_eq!(dec.payload_bits, bits);
+        match dec.msg {
+            WireMsg::Snapshot { next_round, update } => {
+                assert_eq!(next_round, 17);
+                assert_eq!(update.to_dense(4), vec![0.5, -1.25, 0.0, 3.0]);
             }
             other => panic!("wrong kind: {other:?}"),
         }

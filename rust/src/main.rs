@@ -18,7 +18,7 @@
 use anyhow::{bail, Result};
 
 use memsgd::coordinator::train::{self, TrainConfig};
-use memsgd::coordinator::{GossipGraph, LocalUpdate, MethodSpec, Topology};
+use memsgd::coordinator::{FailurePolicy, FaultSpec, GossipGraph, LocalUpdate, MethodSpec, Topology};
 use memsgd::experiments::{self, Which};
 use memsgd::metrics::{self, summary_table, RunRecord};
 use memsgd::optim::Schedule;
@@ -119,7 +119,23 @@ cluster mode: memsgd serve --listen 127.0.0.1:7070 --nodes 2 ... plus
   one memsgd worker --connect 127.0.0.1:7070 per node runs the same
   protocol across separate OS processes, bit-identical to --wire
   (see README 'Cluster quickstart'); all-reduce has no server — launch
-  one memsgd ring process per node instead";
+  one memsgd ring process per node instead
+failure injection (train, serve, worker, ring): --fault-plan
+  none|kill:K:SEED|drop:K:SEED|corrupt:K:SEED|delay:K:MS:SEED draws a
+  deterministic per-node fault schedule from SEED — the same spec
+  replays bit-for-bit in the simulator and on the wire (on worker/ring
+  the plan wraps that process's own sockets; on train/serve it wraps
+  the server side)
+failure policies (train, serve): --failure-policy
+  fail-fast (default: first fault aborts the run) |
+  drop-round[:QUORUM] (ps topologies: fold the survivors, scale by the
+  live count, lost mass re-enters via error feedback) |
+  wait-rejoin:SECS (ps-sync serve: hold the round open for a
+  reconnecting worker; pair with worker --resume)
+checkpointed server (serve, ps-sync): --checkpoint PATH
+  [--checkpoint-every N] snapshots model+round+liveness every N rounds;
+  restarting the same command resumes mid-run, workers re-sync from a
+  model SNAPSHOT frame";
 
 fn out_dir(args: &Args) -> String {
     args.get_str("out", "results")
@@ -488,6 +504,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         return finish(args, "train", std::slice::from_ref(&rec));
     }
 
+    // --failure-policy / --fault-plan: deterministic fault injection
+    // and the policy that absorbs it. Parsed here (the CLI is the parse
+    // edge); the policy × topology matrix is validated by the
+    // experiment itself.
+    let policy = FailurePolicy::parse(&args.get_str("failure-policy", "fail-fast"))?;
+    let faults = FaultSpec::parse(&args.get_str("fault-plan", "none"))?;
+
     // --topology sequential|shared|ps-sync|ps-async|all-reduce|gossip
     // [--workers-count N]: the same method/schedule on any coordination
     // fabric. Unknown strings are rejected here with the full menu —
@@ -536,7 +559,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         .eval_points(evals)
         .seed(seed)
         .local_update(local)
-        .wire(wire);
+        .wire(wire)
+        .failure_policy(policy);
+    if let Some(spec) = faults {
+        exp = exp.fault_plan(spec);
+    }
     if let Some(t) = transport {
         use memsgd::coordinator::net::TcpTransport;
         use memsgd::coordinator::transport::Loopback;
@@ -595,6 +622,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let listen = args.get_str("listen", "127.0.0.1:7070");
     let topology = args.get_str("topology", "ps-sync");
     let network = args.get_str("network", "1g");
+    let failure_policy = FailurePolicy::parse(&args.get_str("failure-policy", "fail-fast"))?;
+    let fault_plan = FaultSpec::parse(&args.get_str("fault-plan", "none"))?;
     let out = out_dir(args);
     // Derive steps/schedule from the dataset *shape* — `bind` builds the
     // actual data once, and every worker rebuilds it from the config.
@@ -614,6 +643,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         topology,
         network,
         dim,
+        failure_policy,
+        fault_plan,
+        start_round: 0,
     };
     // --io poll|threads: the server's socket-multiplexing backend
     // (default: poll(2) event loop on unix, reader threads elsewhere).
@@ -621,7 +653,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(s) => IoBackend::parse(&s)?,
         None => IoBackend::platform_default(),
     };
-    let server = ClusterServer::bind_with_io(&listen, cfg, io)?;
+    let mut server = ClusterServer::bind_with_io(&listen, cfg, io)?;
+    // --checkpoint PATH [--checkpoint-every N]: periodic cluster
+    // checkpoints (model + round + liveness). If PATH already holds one,
+    // the run resumes from its round and every worker opens on a model
+    // SNAPSHOT instead of round 0.
+    if let Some(path) = args.opt_str("checkpoint") {
+        let every = args.get("checkpoint-every", 10usize)?;
+        server = server.with_checkpoint(path.into(), every)?;
+        if server.start_round() > 0 {
+            println!("checkpoint found — resuming from round {}", server.start_round());
+        }
+    }
     println!(
         "serving on {} [io={}] — waiting for {nodes} worker(s) (connect with \
          `memsgd worker --connect <addr>`)",
@@ -658,9 +701,15 @@ fn cmd_worker(args: &Args) -> Result<()> {
     expect.dim = args.get("expect-dim", 0usize)?;
     expect.batch = args.get("expect-batch", 0usize)?;
     expect.sync_every = args.get("expect-local-steps", 0usize)?;
+    // --resume: announce this process replaces a dead worker — the
+    // server (under wait-rejoin) re-syncs it from a model SNAPSHOT.
+    // --fault-plan: deterministic faults on THIS worker's own socket
+    // (the server side is wrapped by `serve --fault-plan`, never both).
+    let resume = args.flag("resume");
+    let fault_plan = FaultSpec::parse(&args.get_str("fault-plan", "none"))?;
     args.finish()?;
     let backoff = Backoff { attempts, ..Backoff::default() };
-    let (node, bits) = run_worker(&addr, &expect, &backoff)?;
+    let (node, bits) = run_worker(&addr, &expect, &backoff, resume, fault_plan.as_ref())?;
     println!("worker {node} done: {bits} accounted upload bits");
     Ok(())
 }
@@ -707,7 +756,13 @@ fn cmd_ring(args: &Args) -> Result<()> {
         topology: "all-reduce".into(),
         network: "1g".into(),
         dim,
+        failure_policy: FailurePolicy::FailFast,
+        fault_plan: None,
+        start_round: 0,
     };
+    // --fault-plan wraps this node's inbound ring edge; every hop is
+    // load-bearing, so injected faults are fail-fast by construction.
+    let fault_plan = FaultSpec::parse(&args.get_str("fault-plan", "none"))?;
     let ring = RingNodeProcess::bind(&listen, cfg, node)?;
     println!(
         "ring node {node}/{nodes} on {} — dialing successor {next}",
@@ -716,7 +771,7 @@ fn cmd_ring(args: &Args) -> Result<()> {
     // Reject unknown flags before blocking on the handshake.
     args.finish()?;
     let backoff = Backoff { attempts, ..Backoff::default() };
-    match ring.run(&next, &backoff)? {
+    match ring.run(&next, &backoff, fault_plan.as_ref())? {
         Some(rec) => {
             print_curves(std::slice::from_ref(&rec));
             println!("\n{}", summary_table(std::slice::from_ref(&rec)));

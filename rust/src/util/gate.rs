@@ -168,6 +168,27 @@ pub fn ring_merge_mixed_case(w: usize) -> String {
     format!("ring merge mixed   W={w:<2} top_10 d=47236")
 }
 
+/// Canonical name of the cluster `SNAPSHOT` encode case: framing the
+/// full dense model at the RCV1 dimension — the frame a restarted or
+/// rejoin-serving server pushes to re-sync a replica.
+pub fn snapshot_encode_case() -> String {
+    "snapshot encode     dense d=47236".to_string()
+}
+
+/// Canonical name of the matching `SNAPSHOT` decode case (the rejoining
+/// worker's cost to seed its replica from the frame).
+pub fn snapshot_decode_case() -> String {
+    "snapshot decode     dense d=47236".to_string()
+}
+
+/// Canonical name of the degraded-quorum server fold: one sync round's
+/// aggregation of 7 live top-10 uploads out of 8 node slots (the dead
+/// slot skipped, quorum mean at `1/7`) — the drop-round policy's
+/// steady-state hot path.
+pub fn server_fold_quorum_case() -> String {
+    "server fold 7of8    top_10 d=47236".to_string()
+}
+
 /// A fresh-run-only invariant: `slow_case` must be at least `min_ratio`
 /// × slower than `fast_case` (both in the same bench).
 #[derive(Clone, Debug)]

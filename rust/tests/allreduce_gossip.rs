@@ -32,7 +32,7 @@ use std::time::Duration;
 use memsgd::coordinator::cluster::{RingNodeProcess, RunConfig};
 use memsgd::coordinator::net::{Backoff, TcpTransport};
 use memsgd::coordinator::transport::{CountingTransport, Loopback, Transport};
-use memsgd::coordinator::{Experiment, GossipGraph, LocalUpdate, MethodSpec, Topology};
+use memsgd::coordinator::{Experiment, FailurePolicy, GossipGraph, LocalUpdate, MethodSpec, Topology};
 use memsgd::data::Dataset;
 use memsgd::experiments::{self, Which};
 use memsgd::metrics::RunRecord;
@@ -343,6 +343,9 @@ fn ring_config(nodes: usize) -> RunConfig {
         topology: "all-reduce".into(),
         network: "1g".into(),
         dim: 2000,
+        failure_policy: FailurePolicy::FailFast,
+        fault_plan: None,
+        start_round: 0,
     }
 }
 
@@ -392,7 +395,7 @@ fn multiprocess_ring_reproduces_the_simulated_trajectory() {
             let next = addrs[(i + 1) % nodes].clone();
             let tx = tx.clone();
             thread::spawn(move || {
-                tx.send((i, p.run(&next, &fast_backoff()))).ok();
+                tx.send((i, p.run(&next, &fast_backoff(), None))).ok();
             })
         })
         .collect();

@@ -1,0 +1,381 @@
+//! Chaos suite: deterministic fault injection end to end.
+//!
+//! * **Plan replay** — a hand-rolled proptest over seeds: any
+//!   `--fault-plan` spec materializes into a byte-identical schedule
+//!   every time it is expanded, schedules respect the shape invariants
+//!   (victims in range, fault rounds in `[1, rounds)`), and different
+//!   seeds actually produce different schedules.
+//! * **Policy trajectories** — a `drop-round` run with an injected kill
+//!   is pinned bit-for-bit across the simulated engine, the threaded
+//!   loopback wire engine, and real TCP sockets: the server outlives
+//!   the death, folds the surviving quorum, and every path agrees on
+//!   the loss curve and the accounted bits.
+//! * **Stress** — 16 workers with three seeded deaths under `drop-round`
+//!   terminate under a watchdog with a finite model.
+//! * **Cluster runtime** — a worker dialing before the server binds
+//!   retries through the handshake; `wait-rejoin` re-syncs a
+//!   replacement worker from a model `SNAPSHOT` on both I/O backends;
+//!   a checkpointed server restart resumes mid-run and completes.
+
+use std::collections::HashSet;
+use std::net::TcpListener;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use memsgd::coordinator::cluster::{run_worker, ClusterServer, IoBackend, RunConfig};
+use memsgd::coordinator::net::{Backoff, Hello, TcpTransport};
+use memsgd::coordinator::transport::Loopback;
+use memsgd::coordinator::{
+    Experiment, FailurePolicy, FaultSpec, LocalUpdate, MethodSpec, Topology,
+};
+use memsgd::experiments::{self, Which};
+use memsgd::metrics::RunRecord;
+use memsgd::models::LogisticModel;
+use memsgd::optim::Schedule;
+
+// ---------------------------------------------------------------------------
+// Plan replay: determinism across seeds
+// ---------------------------------------------------------------------------
+
+/// Hand-rolled proptest: 50 seeds × every fault class. Expanding the
+/// same spec twice must agree byte for byte (`describe()` is the replay
+/// surface CI diffs), every fault must target a real node in a round in
+/// `[1, rounds)` (round 0 always completes), and kill plans must name
+/// exactly `k` distinct victims.
+#[test]
+fn any_fault_plan_seed_replays_byte_identically() {
+    let (nodes, rounds) = (8usize, 24usize);
+    for seed in 0..50u64 {
+        for class in ["kill:2", "drop:3", "corrupt:1", "delay:2:40"] {
+            let spec = FaultSpec::parse(&format!("{class}:{seed}")).unwrap().unwrap();
+            let a = spec.plan(nodes, rounds).unwrap();
+            let b = spec.plan(nodes, rounds).unwrap();
+            assert_eq!(a, b, "{class}:{seed}");
+            assert_eq!(a.describe(), b.describe(), "{class}:{seed}");
+            assert!(!a.is_empty(), "{class}:{seed} scheduled nothing");
+            let mut victims = 0usize;
+            for node in 0..nodes {
+                let faults = a.faults_for(node);
+                victims += usize::from(!faults.is_empty());
+                for f in faults {
+                    assert!(
+                        (1..rounds as u64).contains(&f.at),
+                        "{class}:{seed} node {node} fires at {} (rounds {rounds})",
+                        f.at
+                    );
+                }
+            }
+            let k = class.split(':').nth(1).unwrap().parse::<usize>().unwrap();
+            assert_eq!(victims, k, "{class}:{seed} victim count");
+            // Nothing outside the node range (faults_for covered 0..nodes;
+            // sim_deaths bails on out-of-range targets).
+            if class.starts_with("kill") {
+                let deaths = a.sim_deaths(nodes).unwrap();
+                assert_eq!(deaths.iter().flatten().count(), k, "{class}:{seed}");
+            }
+        }
+    }
+    // The seed must matter: 50 kill schedules cannot collapse to a few.
+    let distinct: HashSet<String> = (0..50u64)
+        .map(|s| {
+            FaultSpec::parse(&format!("kill:2:{s}"))
+                .unwrap()
+                .unwrap()
+                .plan(nodes, rounds)
+                .unwrap()
+                .describe()
+        })
+        .collect();
+    assert!(distinct.len() > 25, "only {} distinct schedules from 50 seeds", distinct.len());
+}
+
+// ---------------------------------------------------------------------------
+// Drop-round: simulated ≡ loopback ≡ TCP, bit for bit
+// ---------------------------------------------------------------------------
+
+const DROP_SEED: u64 = 11;
+const DROP_PLAN: &str = "kill:1:77";
+
+fn drop_round_run(wire: Option<&str>) -> RunRecord {
+    let data = experiments::dataset(Which::parse("epsilon").unwrap(), 100_000, DROP_SEED);
+    let mut exp = Experiment::new(LogisticModel::new(&data, 1.0 / data.n() as f64))
+        .dataset(&data.name)
+        .method(MethodSpec::parse("memsgd:top_k:1").unwrap())
+        .schedule(Schedule::constant(0.1))
+        .topology(Topology::ParamServerSync { nodes: 4 })
+        .steps(96)
+        .eval_points(3)
+        .seed(DROP_SEED)
+        .failure_policy(FailurePolicy::DropRound { min_quorum: 2 })
+        .fault_plan(FaultSpec::parse(DROP_PLAN).unwrap().unwrap());
+    exp = match wire {
+        None => exp,
+        Some("loopback") => exp.wire_transport(Box::new(Loopback)),
+        Some("tcp") => exp.wire_transport(Box::new(TcpTransport)),
+        Some(other) => unreachable!("{other}"),
+    };
+    exp.run().unwrap()
+}
+
+/// The error-compensated partial-aggregation contract: one seeded kill
+/// under `drop-round`, and the simulated engine, the threaded loopback
+/// engine, and real TCP sockets produce the *same* trajectory — curve,
+/// accounted bits, steps — while the server outlives the death.
+#[test]
+fn drop_round_pins_sim_loopback_and_tcp_bit_for_bit() {
+    // The plan really schedules a death inside the run (rounds = 24).
+    let deaths = FaultSpec::parse(DROP_PLAN)
+        .unwrap()
+        .unwrap()
+        .plan(4, 24)
+        .unwrap()
+        .sim_deaths(4)
+        .unwrap();
+    assert_eq!(deaths.iter().flatten().count(), 1, "plan must kill exactly one node");
+
+    let sim = drop_round_run(None);
+    for transport in ["loopback", "tcp"] {
+        let wire = drop_round_run(Some(transport));
+        assert_eq!(sim.curve, wire.curve, "[{transport}] loss curve diverged");
+        assert_eq!(sim.total_bits, wire.total_bits, "[{transport}] total_bits");
+        assert_eq!(sim.steps, wire.steps, "[{transport}] steps");
+        assert_eq!(sim.method, wire.method, "[{transport}] method");
+    }
+
+    // And the death left a mark: the degraded trajectory differs from
+    // the fault-free one (same seed, full quorum).
+    let data = experiments::dataset(Which::parse("epsilon").unwrap(), 100_000, DROP_SEED);
+    let healthy = Experiment::new(LogisticModel::new(&data, 1.0 / data.n() as f64))
+        .dataset(&data.name)
+        .method(MethodSpec::parse("memsgd:top_k:1").unwrap())
+        .schedule(Schedule::constant(0.1))
+        .topology(Topology::ParamServerSync { nodes: 4 })
+        .steps(96)
+        .eval_points(3)
+        .seed(DROP_SEED)
+        .run()
+        .unwrap();
+    assert_ne!(healthy.curve, sim.curve, "the injected kill changed nothing");
+}
+
+/// 16 workers, three seeded deaths, quorum 4: the threaded wire engine
+/// must terminate under a watchdog (every worker thread joined inside
+/// the engine), keep the model finite, and keep serving the survivors.
+#[test]
+fn stress_16_workers_survive_three_drop_round_deaths() {
+    let (tx, rx) = mpsc::channel();
+    let handle = thread::spawn(move || {
+        let data = experiments::dataset(Which::parse("epsilon").unwrap(), 100_000, 5);
+        let rec = Experiment::new(LogisticModel::new(&data, 1.0 / data.n() as f64))
+            .dataset(&data.name)
+            .method(MethodSpec::parse("memsgd:top_k:1").unwrap())
+            .schedule(Schedule::constant(0.1))
+            .topology(Topology::ParamServerSync { nodes: 16 })
+            .steps(16 * 24)
+            .eval_points(3)
+            .seed(5)
+            .failure_policy(FailurePolicy::DropRound { min_quorum: 4 })
+            .fault_plan(FaultSpec::parse("kill:3:909").unwrap().unwrap())
+            .wire(true)
+            .run();
+        tx.send(rec).ok();
+    });
+    let rec = rx
+        .recv_timeout(Duration::from_secs(120))
+        .expect("16-worker drop-round run hung past the watchdog")
+        .unwrap();
+    handle.join().unwrap();
+    assert!(rec.final_loss().is_finite(), "degraded model went non-finite");
+    assert!(rec.curve.iter().all(|p| p.loss.is_finite()));
+    assert!(rec.total_bits > 0);
+}
+
+// ---------------------------------------------------------------------------
+// Cluster runtime: retries, rejoin, restart
+// ---------------------------------------------------------------------------
+
+fn chaos_config(nodes: usize, steps: usize) -> RunConfig {
+    RunConfig {
+        dataset: "epsilon".into(),
+        scale: 100_000,
+        seed: 11,
+        method: "memsgd:top_k:1".into(),
+        schedule: Schedule::constant(0.1),
+        steps,
+        eval_points: 3,
+        nodes,
+        local: LocalUpdate::default(),
+        topology: "ps-sync".into(),
+        network: "1g".into(),
+        dim: 2000,
+        failure_policy: FailurePolicy::FailFast,
+        fault_plan: None,
+        start_round: 0,
+    }
+}
+
+fn backends() -> Vec<IoBackend> {
+    if cfg!(unix) {
+        vec![IoBackend::Poll, IoBackend::Threads]
+    } else {
+        vec![IoBackend::Threads]
+    }
+}
+
+fn patient_backoff() -> Backoff {
+    Backoff {
+        attempts: 60,
+        base: Duration::from_millis(5),
+        cap: Duration::from_millis(50),
+    }
+}
+
+/// The `--retries` bound must cover the *handshake*, not just the TCP
+/// connect: a worker launched before its server exists keeps retrying
+/// (connection refused, then possibly a reset mid-handshake) and
+/// converges once the server binds.
+#[test]
+fn worker_dialing_before_the_server_binds_retries_through_the_handshake() {
+    // Reserve a port, free it, and dial it before anything listens.
+    let addr = {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.local_addr().unwrap().to_string()
+    };
+    let worker_addr = addr.clone();
+    let worker = thread::spawn(move || {
+        run_worker(&worker_addr, &Hello::any(), &patient_backoff(), false, None)
+    });
+    thread::sleep(Duration::from_millis(150));
+    let server =
+        ClusterServer::bind_with_io(&addr, chaos_config(1, 48), IoBackend::platform_default())
+            .unwrap();
+    let rec = server.run().unwrap();
+    let (node, bits) = worker.join().unwrap().expect("worker must win via retries");
+    assert_eq!(node, 0);
+    assert!(bits > 0, "worker uploaded nothing");
+    assert!(rec.final_loss().is_finite());
+}
+
+/// `wait-rejoin` end to end on both I/O backends: the server-side fault
+/// plan kills one worker mid-run, the server holds the round open, a
+/// replacement dials with `--resume`, is re-synced from a model
+/// `SNAPSHOT` into the dead node's slot, and the run completes.
+#[test]
+fn wait_rejoin_resyncs_a_replacement_worker_from_a_snapshot() {
+    let nodes = 2;
+    let steps = 96; // rounds = 48
+    let spec = FaultSpec::parse("kill:1:13").unwrap().unwrap();
+    let deaths = spec.plan(nodes, 48).unwrap().sim_deaths(nodes).unwrap();
+    let victim = deaths.iter().position(|d| d.is_some()).expect("plan kills someone");
+
+    for io in backends() {
+        let label = io.name();
+        let mut cfg = chaos_config(nodes, steps);
+        cfg.failure_policy = FailurePolicy::WaitRejoin { timeout: Duration::from_secs(60) };
+        cfg.fault_plan = Some(spec.clone());
+
+        let (tx, rx) = mpsc::channel();
+        let handle = thread::spawn(move || {
+            let server = ClusterServer::bind_with_io("127.0.0.1:0", cfg, io).unwrap();
+            let addr = server.local_addr().unwrap().to_string();
+            let server_handle = thread::spawn(move || server.run());
+            let originals: Vec<_> = (0..nodes)
+                .map(|_| {
+                    let addr = addr.clone();
+                    thread::spawn(move || {
+                        run_worker(&addr, &Hello::any(), &patient_backoff(), false, None)
+                    })
+                })
+                .collect();
+            // The replacement dials immediately; its connection parks in
+            // the listener backlog until the server reaches the death
+            // round and starts accepting rejoiners.
+            let rejoin_addr = addr.clone();
+            let replacement = thread::spawn(move || {
+                run_worker(&rejoin_addr, &Hello::any(), &patient_backoff(), true, None)
+            });
+            let record = server_handle.join().unwrap();
+            let original_results: Vec<_> =
+                originals.into_iter().map(|w| w.join().unwrap()).collect();
+            let replacement_result = replacement.join().unwrap();
+            tx.send((record, original_results, replacement_result)).ok();
+        });
+        let (record, original_results, replacement_result) = rx
+            .recv_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|_| panic!("[{label}] wait-rejoin cluster hung past the watchdog"));
+        handle.join().unwrap();
+
+        let record = record.unwrap_or_else(|e| panic!("[{label}] server failed: {e:#}"));
+        assert!(record.final_loss().is_finite(), "[{label}]");
+        assert_eq!(record.steps, steps, "[{label}]");
+
+        // Exactly the victim's original process died; the survivor and
+        // the replacement both completed, the replacement in the
+        // victim's slot.
+        let failed: Vec<usize> = original_results
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.is_err())
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(failed.len(), 1, "[{label}] exactly one original worker must die");
+        let (rejoined_node, _) = replacement_result
+            .unwrap_or_else(|e| panic!("[{label}] replacement failed: {e:#}"));
+        assert_eq!(rejoined_node, victim, "[{label}] replacement landed in the wrong slot");
+    }
+}
+
+/// A checkpointed server restart: phase 1 runs to completion writing
+/// cluster checkpoints; phase 2 reuses the file with a longer budget,
+/// resumes at the recorded round (`start_round` > 0), re-syncs fresh
+/// workers from the opening `SNAPSHOT`, and completes.
+#[test]
+fn checkpointed_server_restart_resumes_mid_run_and_completes() {
+    let dir = std::env::temp_dir().join(format!("memsgd_chaos_ck_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cluster.ck");
+    let _ = std::fs::remove_file(&path);
+
+    let run_cluster = |cfg: RunConfig, path: std::path::PathBuf, expect_start: usize| {
+        let nodes = cfg.nodes;
+        let server =
+            ClusterServer::bind_with_io("127.0.0.1:0", cfg, IoBackend::platform_default())
+                .unwrap()
+                .with_checkpoint(path, 1)
+                .unwrap();
+        assert_eq!(server.start_round(), expect_start);
+        let addr = server.local_addr().unwrap().to_string();
+        let server_handle = thread::spawn(move || server.run());
+        let workers: Vec<_> = (0..nodes)
+            .map(|_| {
+                let addr = addr.clone();
+                thread::spawn(move || {
+                    run_worker(&addr, &Hello::any(), &patient_backoff(), false, None)
+                })
+            })
+            .collect();
+        let record = server_handle.join().unwrap().unwrap();
+        let stats: Vec<(usize, u64)> =
+            workers.into_iter().map(|w| w.join().unwrap().unwrap()).collect();
+        (record, stats)
+    };
+
+    // Phase 1: 24 rounds, checkpoint every round — the file ends at 24.
+    let (rec1, _) = run_cluster(chaos_config(2, 48), path.clone(), 0);
+    assert!(rec1.final_loss().is_finite());
+    assert!(path.exists(), "no cluster checkpoint written");
+
+    // Phase 2: same shape, doubled budget (48 rounds). The restart must
+    // pick up at round 24 and serve only the remainder; fresh workers
+    // (no --resume flag needed — the WELCOME carries start_round) seed
+    // their replicas from the opening SNAPSHOT.
+    let (rec2, stats) = run_cluster(chaos_config(2, 96), path.clone(), 24);
+    assert!(rec2.final_loss().is_finite());
+    assert_eq!(rec2.steps, 96);
+    let mut ids: Vec<usize> = stats.iter().map(|&(n, _)| n).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1]);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

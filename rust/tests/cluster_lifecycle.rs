@@ -31,7 +31,7 @@ use memsgd::coordinator::cluster::{
 };
 use memsgd::coordinator::net::{read_frame, write_frame, Backoff, Hello, PROTOCOL_VERSION};
 use memsgd::coordinator::transport::encode_shutdown;
-use memsgd::coordinator::{Experiment, LocalUpdate, MethodSpec, Topology};
+use memsgd::coordinator::{Experiment, FailurePolicy, LocalUpdate, MethodSpec, Topology};
 use memsgd::experiments::{self, Which};
 use memsgd::metrics::RunRecord;
 use memsgd::models::LogisticModel;
@@ -55,6 +55,9 @@ fn test_config(topology: &str, nodes: usize) -> RunConfig {
         topology: topology.into(),
         network: "1g".into(),
         dim: 2000,
+        failure_policy: FailurePolicy::FailFast,
+        fault_plan: None,
+        start_round: 0,
     }
 }
 
@@ -98,7 +101,7 @@ fn cluster_run(cfg: RunConfig, io: IoBackend) -> (RunRecord, Vec<(usize, u64)>) 
     let workers: Vec<_> = (0..nodes)
         .map(|_| {
             let addr = addr.clone();
-            thread::spawn(move || run_worker(&addr, &Hello::any(), &fast_backoff()))
+            thread::spawn(move || run_worker(&addr, &Hello::any(), &fast_backoff(), false, None))
         })
         .collect();
     let record = server_handle.join().unwrap().unwrap();
@@ -234,7 +237,7 @@ fn worker_expectation_mismatch_fails_both_sides() {
         // running memsgd:top_k:1 — a half-compatible cluster would
         // silently diverge, so both ends must refuse.
         let expect = Hello { method: "sgd".into(), ..Hello::any() };
-        let worker_err = run_worker(&addr, &expect, &fast_backoff()).unwrap_err();
+        let worker_err = run_worker(&addr, &expect, &fast_backoff(), false, None).unwrap_err();
         let worker_msg = format!("{worker_err:#}");
         assert!(
             worker_msg.contains("server rejected handshake"),
@@ -262,7 +265,7 @@ fn connect_retry_gives_up_after_the_bound() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         listener.local_addr().unwrap().to_string()
     };
-    let err = run_worker(&addr, &Hello::any(), &fast_backoff()).unwrap_err();
+    let err = run_worker(&addr, &Hello::any(), &fast_backoff(), false, None).unwrap_err();
     let msg = format!("{err:#}");
     assert!(
         msg.contains("after 2 attempts"),
@@ -327,7 +330,7 @@ fn premature_double_shutdown_fails_the_worker_cleanly() {
         stream // keep the socket open until the worker has decided
     });
 
-    let err = run_worker(&addr, &Hello::any(), &fast_backoff()).unwrap_err();
+    let err = run_worker(&addr, &Hello::any(), &fast_backoff(), false, None).unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("unexpected"), "worker error misses the bogus message: {msg}");
     drop(fake_server.join().unwrap());

@@ -11,9 +11,10 @@ use std::time::Duration;
 use anyhow::Result;
 use memsgd::compress::{self, Update};
 use memsgd::coordinator::checkpoint::Checkpoint;
+use memsgd::coordinator::faults::FaultyTransport;
 use memsgd::coordinator::train::{self, TrainConfig};
-use memsgd::coordinator::transport::{Channel, Loopback, Transport};
-use memsgd::coordinator::{Experiment, GossipGraph, MethodSpec, Topology};
+use memsgd::coordinator::transport::Loopback;
+use memsgd::coordinator::{Experiment, FaultPlan, GossipGraph, MethodSpec, Topology};
 use memsgd::data::{libsvm, synthetic, Dataset};
 use memsgd::models::{GradBackend, LogisticModel};
 use memsgd::optim::{MemSgd, Schedule};
@@ -228,82 +229,30 @@ fn all_same_label_dataset_is_separable_and_converges() {
 // Server-free wire engines: peers vanishing mid-protocol
 // ---------------------------------------------------------------------------
 
-/// A channel end that hangs up after a budget of successful sends: the
-/// next send errors and drops the underlying channel, so the peer's
-/// blocked `recv` observes a closed channel — exactly what a killed
-/// process looks like to the survivor.
-struct CutChannel {
-    inner: Option<Box<dyn Channel>>,
-    sends_left: usize,
-}
-
-impl Channel for CutChannel {
-    fn send(&mut self, frame: &[u8]) -> Result<()> {
-        if self.sends_left == 0 {
-            self.inner = None; // hang up: the peer sees "channel closed"
-            anyhow::bail!("injected fault: peer hung up mid-round");
-        }
-        self.sends_left -= 1;
-        match self.inner.as_mut() {
-            Some(c) => c.send(frame),
-            None => anyhow::bail!("injected fault: peer hung up mid-round"),
-        }
-    }
-
-    fn recv(&mut self) -> Result<Vec<u8>> {
-        match self.inner.as_mut() {
-            Some(c) => c.recv(),
-            None => anyhow::bail!("injected fault: peer hung up mid-round"),
-        }
-    }
-}
-
-/// A transport that cuts the server end of the `target`-th duplex it
-/// hands out after `sends` successful sends. Duplex creation order is
-/// part of the engines' documented contracts (ring: directed edge
-/// `i → (i+1) % n` in edge order; gossip: edges `(a, b)` for `a < b` in
-/// lexicographic order, then one monitor per node), so the target index
-/// selects exactly one known link.
-struct CutTransport {
-    inner: Box<dyn Transport>,
-    next: usize,
-    target: usize,
-    sends: usize,
-}
-
-impl Transport for CutTransport {
-    fn duplex(&mut self) -> (Box<dyn Channel>, Box<dyn Channel>) {
-        let (se, we) = self.inner.duplex();
-        let i = self.next;
-        self.next += 1;
-        if i == self.target {
-            (Box::new(CutChannel { inner: Some(se), sends_left: self.sends }), we)
-        } else {
-            (se, we)
-        }
-    }
-}
-
 /// Run an experiment with one cut link under a watchdog (the transport
 /// is built inside the watchdog thread — `dyn Transport` is not
-/// `Send`). The engines' teardown contract is that an error anywhere
-/// cascades as "channel closed" around the fabric (every endpoint
-/// dropped on the error path), so a dead peer can never hang the run;
-/// `thread::scope` inside the engine guarantees every node thread is
-/// joined before the error returns.
+/// `Send`). The cut is injected by the promoted coordinator fault
+/// machinery: [`FaultyTransport`] wraps the `target`-th duplex's
+/// server/observer end with a [`FaultPlan::cut_send`] that hangs up on
+/// the `sends`-th (0-indexed) send and drops the wrapped endpoint, so
+/// the peer's blocked `recv` observes a genuine close. Duplex creation
+/// order is part of the engines' documented contracts (ring: directed
+/// edge `i → (i+1) % n` in edge order; gossip: edges `(a, b)` for
+/// `a < b` in lexicographic order, then one monitor per node), so the
+/// target index selects exactly one known link. The engines' teardown
+/// contract is that an error anywhere cascades as "channel closed"
+/// around the fabric (every endpoint dropped on the error path), so a
+/// dead peer can never hang the run; `thread::scope` inside the engine
+/// guarantees every node thread is joined before the error returns.
 fn run_with_watchdog(
     topology: Topology,
     target: usize,
-    sends: usize,
+    sends: u64,
 ) -> Result<memsgd::metrics::RunRecord> {
     let (tx, rx) = mpsc::channel();
     let handle = thread::spawn(move || {
-        let transport = CutTransport {
-            inner: Box::new(Loopback),
-            next: 0,
-            target,
-            sends,
-        };
+        let transport =
+            FaultyTransport::new(Box::new(Loopback), FaultPlan::cut_send(target, sends));
         let data = synthetic::epsilon_like(240, 12, 5);
         let result = Experiment::new(LogisticModel::new(&data, 1.0 / 240.0))
             .dataset(&data.name)
