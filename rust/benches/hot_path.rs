@@ -262,6 +262,38 @@ fn main() {
         });
     }
 
+    // --- composed compressor: quantization ∘ sparsification -------------------
+    // The `qsgd:16(top_k:100)` pipeline at the RCV1 dimension: the scan
+    // case prices the full compress (top-100 selection + per-coordinate
+    // stochastic quantization on the kept values); the encode/decode pair
+    // prices the native `TAG_COMPOSED` payload (gamma deltas + sign bits
+    // + gamma levels — 22 bits/coordinate vs the sparse frame's 48).
+    {
+        use memsgd::compress::elias::{decode_payload, BitReader, BitWriter};
+        use memsgd::compress::Compressor;
+
+        let d = 47_236usize;
+        let mut comp = compress::from_spec("qsgd:16(top_k:100)").unwrap();
+        let mut rng = Prng::new(29);
+        let mut out = Update::new_sparse(d);
+        let x: Vec<f32> = (0..d).map(|i| ((i % 101) as f32 - 50.0) * 0.01).collect();
+        b.run(&gate::composed_scan_case(), || {
+            comp.compress(&x, &mut rng, &mut out);
+        });
+        // `encode_payload` rides the operator's native level scratch from
+        // the last compress, so the frame is the 22-bit/coordinate form.
+        let mut w = BitWriter::new();
+        b.run(&gate::composed_encode_case(), || {
+            w.clear();
+            comp.encode_payload(&out, &mut w);
+        });
+        let bytes = w.as_bytes().to_vec();
+        b.run(&gate::composed_decode_case(), || {
+            let mut r = BitReader::new(&bytes);
+            decode_payload(&mut r, d).unwrap();
+        });
+    }
+
     // --- TCP round trip: encode → localhost socket → decode -------------------
     // The cluster runtime's per-message data-plane cost: payload encode,
     // 4-byte length framing, one kernel-socket hop, frame read, payload

@@ -1,0 +1,220 @@
+//! Adaptive unbiased sparsification — Wangni et al. (NeurIPS 2018),
+//! "Gradient Sparsification for Communication-Efficient Distributed
+//! Optimization": keep coordinate `i` with probability
+//! `p_i = min(1, c·|x_i|)`, where `c` solves `Σ p_i = budget`, and
+//! rescale kept values by `1/p_i`.
+//!
+//! The estimator is *unbiased* (`E[comp(x)] = x`) with variance
+//! `Σ x_i²·(1/p_i − 1)` — the probability profile is the one that
+//! minimizes that variance under the expected-sparsity constraint
+//! (Wangni et al., §3.2), so large coordinates are kept almost surely
+//! while small ones are dropped (and amplified on the rare keep) to
+//! stay honest in expectation.
+//!
+//! Unlike rand-k, the *expected* number of kept coordinates is `budget`
+//! but the realized cardinality varies per draw; unlike top-k the
+//! operator is unbiased, so it composes with averaging without a
+//! systematic bias term. `contraction_k()` reports the in-expectation
+//! kept count `budget.min(d)` — the Definition 2.1 inequality itself is
+//! **not** guaranteed by the 1/p rescaling (a flat vector has variance
+//! `‖x‖²·(d/k − 1)`), which the property suite checks against the
+//! closed-form variance instead.
+
+use super::{Compressor, Update};
+use crate::util::prng::Prng;
+
+/// Wangni-style adaptive sparsifier with expected budget `k`.
+#[derive(Clone, Debug)]
+pub struct AdaptiveSparse {
+    pub budget: usize,
+    /// Solve scratch: nonzero magnitudes, sorted descending.
+    mags: Vec<f64>,
+}
+
+impl AdaptiveSparse {
+    pub fn new(budget: usize) -> Self {
+        assert!(budget >= 1, "adaptive requires budget >= 1");
+        AdaptiveSparse { budget, mags: Vec::new() }
+    }
+
+    /// Solve for the probability scale `c` of `p_i = min(1, c·|x_i|)`
+    /// with `Σ p_i = budget`: sort the nonzero magnitudes descending and
+    /// clamp the largest `t` to probability one, where `t` is the
+    /// smallest count for which `c = (budget − t)/Σ_{i>t} a_i` leaves
+    /// every unclamped `c·a_i ≤ 1` (Wangni et al., Algorithm 2).
+    ///
+    /// Returns `f64::INFINITY` when `budget` covers every nonzero (all
+    /// probabilities clamp to one — the operator is exact) and `0.0` on
+    /// the zero vector.
+    fn solve_scale(&mut self, x: &[f32]) -> f64 {
+        self.mags.clear();
+        for &v in x {
+            if v != 0.0 {
+                self.mags.push(v.abs() as f64);
+            }
+        }
+        let m = self.mags.len();
+        if m == 0 {
+            return 0.0;
+        }
+        if m <= self.budget {
+            return f64::INFINITY;
+        }
+        self.mags.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+        let k = self.budget as f64;
+        let mut tail: f64 = self.mags.iter().sum();
+        let mut t = 0usize;
+        let mut c = k / tail;
+        // Clamp one magnitude per round; `c` hits 0 at t = budget < m at
+        // the latest, so the loop always exits with `t < m`.
+        while c * self.mags[t] > 1.0 {
+            tail -= self.mags[t];
+            t += 1;
+            debug_assert!(t < m, "more clamped entries than the budget");
+            c = (k - t as f64) / tail;
+        }
+        c
+    }
+
+    /// Per-coordinate keep probabilities for `x` (zeros get 0) — the
+    /// closed-form side of the variance property checked in
+    /// `tests/proptest_invariants.rs`.
+    pub fn keep_probabilities(&mut self, x: &[f32], out: &mut Vec<f64>) {
+        let c = self.solve_scale(x);
+        out.clear();
+        out.extend(x.iter().map(|&v| {
+            if v == 0.0 {
+                0.0
+            } else {
+                (c * v.abs() as f64).min(1.0)
+            }
+        }));
+    }
+}
+
+impl Compressor for AdaptiveSparse {
+    fn name(&self) -> String {
+        format!("adaptive_{}", self.budget)
+    }
+
+    /// In-expectation kept count `budget.min(d)` — the analogue of
+    /// rand-k's `k`, reported so the stepsize-shift heuristics have a
+    /// sparsity scale to work with. See the module docs: the 1/p
+    /// rescaling means the Definition 2.1 *inequality* is not implied.
+    fn contraction_k(&self, d: usize) -> Option<f64> {
+        Some(self.budget.min(d) as f64)
+    }
+
+    fn compress(&mut self, x: &[f32], rng: &mut Prng, out: &mut Update) -> u64 {
+        let d = x.len();
+        let c = self.solve_scale(x);
+        let sp = out.sparse_mut(d);
+        for (i, &v) in x.iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            let p = (c * v.abs() as f64).min(1.0);
+            if rng.bernoulli(p) {
+                // Clamped coordinates (p = 1) ship exactly; the rest are
+                // amplified by 1/p so the estimator stays unbiased.
+                let val = if p >= 1.0 { v } else { (v as f64 / p) as f32 };
+                sp.push(i as u32, val);
+            }
+        }
+        sp.encoded_bits()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn keep_all_when_budget_covers_nonzeros() {
+        let x = vec![0.0f32, 1.0, -2.0, 0.0, 0.5];
+        let mut c = AdaptiveSparse::new(3);
+        let mut rng = Prng::new(1);
+        let mut out = Update::new_sparse(x.len());
+        c.compress(&x, &mut rng, &mut out);
+        // Exactly the nonzeros, unscaled (p = 1 everywhere).
+        assert_eq!(out.to_dense(x.len()), x);
+    }
+
+    #[test]
+    fn zero_vector_sends_nothing() {
+        let mut c = AdaptiveSparse::new(4);
+        let mut rng = Prng::new(2);
+        let mut out = Update::new_sparse(16);
+        let bits = c.compress(&[0.0; 16], &mut rng, &mut out);
+        assert_eq!(out.nnz(), 0);
+        assert_eq!(bits, 0);
+    }
+
+    #[test]
+    fn probabilities_sum_to_budget_and_respect_clamps() {
+        let x = vec![10.0f32, -3.0, 1.0, 0.5, 0.0, 0.25, -0.125, 0.0625];
+        let mut c = AdaptiveSparse::new(3);
+        let mut p = Vec::new();
+        c.keep_probabilities(&x, &mut p);
+        assert_eq!(p.len(), x.len());
+        let sum: f64 = p.iter().sum();
+        assert!((sum - 3.0).abs() < 1e-9, "sum(p) = {sum}");
+        assert!(p.iter().all(|&pi| (0.0..=1.0).contains(&pi)));
+        // The dominant coordinate clamps to certainty; zeros get 0.
+        assert_eq!(p[0], 1.0);
+        assert_eq!(p[4], 0.0);
+        // Unclamped probabilities are proportional to magnitude.
+        assert!((p[2] / p[3] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unbiased_and_budget_in_expectation() {
+        let mut rng = Prng::new(7);
+        let x: Vec<f32> = (0..24).map(|_| rng.normal_f32()).collect();
+        let budget = 6;
+        let mut c = AdaptiveSparse::new(budget);
+        let mut out = Update::new_sparse(x.len());
+        let trials = 20_000;
+        let mut acc = vec![0.0f64; x.len()];
+        let mut nnz_acc = 0usize;
+        for _ in 0..trials {
+            c.compress(&x, &mut rng, &mut out);
+            nnz_acc += out.nnz();
+            if let Update::Sparse(s) = &out {
+                for (&i, &v) in s.idx.iter().zip(&s.val) {
+                    acc[i as usize] += v as f64;
+                }
+            }
+        }
+        let norm = stats::l2_norm(&x);
+        for (j, (&xj, &aj)) in x.iter().zip(&acc).enumerate() {
+            let mean = aj / trials as f64;
+            assert!(
+                (mean - xj as f64).abs() < 0.05 * norm,
+                "coord {j}: mean={mean} x={xj}"
+            );
+        }
+        let mean_nnz = nnz_acc as f64 / trials as f64;
+        assert!(
+            (mean_nnz - budget as f64).abs() < 0.1,
+            "E[nnz] = {mean_nnz}, budget = {budget}"
+        );
+    }
+
+    #[test]
+    fn spec_parsing() {
+        assert_eq!(
+            crate::compress::from_spec("adaptive:100").unwrap().name(),
+            "adaptive_100"
+        );
+        assert!(crate::compress::from_spec("adaptive").is_err());
+        assert!(crate::compress::from_spec("adaptive:0").is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "budget >= 1")]
+    fn rejects_zero_budget() {
+        AdaptiveSparse::new(0);
+    }
+}

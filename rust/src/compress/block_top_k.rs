@@ -69,8 +69,9 @@ impl Compressor for BlockTopK {
             }
             start = end;
         }
-        // Same accounting as top-k (footnote 5): value + index per entry.
-        (s.nnz() as u64) * (32 + (d.max(2) as f64).log2().ceil() as u64)
+        // Same accounting as top-k/rand-k/threshold (footnote 5): one
+        // site for the formula instead of a hand-rolled float log.
+        s.encoded_bits()
     }
 }
 
@@ -148,5 +149,21 @@ mod tests {
         let x = vec![1.0f32, 0.0, -2.0];
         let y = run(&x, 10);
         assert_eq!(y, x);
+    }
+
+    #[test]
+    fn bit_accounting_matches_encoded_bits() {
+        // The compressor must charge exactly SparseVec::encoded_bits —
+        // the hand-rolled `log2().ceil()` it replaced agreed at d ≥ 2
+        // but overcharged one bit per entry at d = 1.
+        for &d in &[1usize, 2, 47_236] {
+            let x: Vec<f32> = (0..d).map(|i| (i % 5) as f32 - 2.0).collect();
+            let mut c = BlockTopK::new(3);
+            let mut rng = Prng::new(7);
+            let mut out = Update::new_sparse(d);
+            let bits = c.compress(&x, &mut rng, &mut out);
+            let Update::Sparse(s) = &out else { panic!("sparse expected") };
+            assert_eq!(bits, s.encoded_bits(), "d={d}");
+        }
     }
 }

@@ -1,0 +1,336 @@
+//! Composed compression: QSGD quantization applied to the values an
+//! inner sparsifier keeps — the Qsparse-local-SGD operator family of
+//! Basu et al. (NeurIPS 2019).
+//!
+//! The inner stage selects coordinates (top-k, rand-k, random-p,
+//! block-top-k, threshold, adaptive); the outer stage quantizes the
+//! kept values to `s` levels against the ℓ₂ norm of the *kept* vector,
+//! with Alistarh et al.'s unbiased stochastic rounding. The wire then
+//! carries one norm scalar plus, per kept coordinate, an index, a sign
+//! bit, and a level in `0..=s` — far below the 32-bit raw value the
+//! plain sparsifiers pay (`TAG_COMPOSED` in [`super::elias`]).
+//!
+//! Contraction algebra (Qsparse Lemma 1): if the inner stage is a
+//! `k`-contraction and the quantizer has relative variance bound
+//! `ω = min(m/s², √m/s)` on its `m ≈ ⌈k⌉`-dimensional input, the
+//! composition is a `(1 − ω)·k`-contraction — see
+//! [`composed_contraction`]. A quantizer too coarse for the inner
+//! sparsity (`ω ≥ 1`) voids the guarantee and the operator reports
+//! `None`, running memory-free like plain QSGD.
+//!
+//! Zero levels keep their index on the wire (as exact `+0.0` values):
+//! the kept-coordinate set — and therefore the accounted bit count —
+//! stays the deterministic choice of the inner stage, and server
+//! aggregation slots match the plain sparsifier's exactly.
+
+use super::{elias, Compressor, Update};
+use crate::util::prng::Prng;
+use crate::util::stats;
+
+/// QSGD with `levels` applied to the output of `inner` (a
+/// sparse-emitting operator — enforced at the spec parse edge by
+/// [`super::CompressorSpec::parse`]).
+pub struct Composed {
+    pub levels: u32,
+    inner: Box<dyn Compressor>,
+    /// Inner stage's output (always `Update::Sparse` for valid inners).
+    inner_out: Update,
+    /// Quantization-order scratch: entry ranks sorted by index.
+    order: Vec<u32>,
+    /// Wire scratch of the last compression: sorted indices, signed
+    /// levels, kept-vector norm, and dimension — what
+    /// [`Compressor::encode_payload`] frames natively. Disabled (never
+    /// matching) when `levels` exceeds the payload's i32 level range.
+    wire_idx: Vec<u32>,
+    wire_levels: Vec<i32>,
+    wire_norm: f32,
+    wire_dim: usize,
+}
+
+/// Product-form contraction of quantization ∘ sparsification (Qsparse
+/// Lemma 1): inner `k`-contraction, outer `s`-level QSGD with variance
+/// bound `ω = min(m/s², √m/s)` evaluated at the effective dimension
+/// `m = ⌈k⌉` clamped to `[1, d]`. Returns `(1 − ω)·k`, or `None` when
+/// `ω ≥ 1` (no contraction guarantee survives the quantizer).
+pub fn composed_contraction(levels: u32, inner_k: f64, d: usize) -> Option<f64> {
+    let m = (inner_k.ceil().max(1.0) as usize).min(d.max(1)) as f64;
+    let s = levels as f64;
+    let omega = (m / (s * s)).min(m.sqrt() / s);
+    if omega >= 1.0 {
+        return None;
+    }
+    Some((1.0 - omega) * inner_k)
+}
+
+impl Composed {
+    pub fn new(levels: u32, inner: Box<dyn Compressor>) -> Self {
+        assert!(levels >= 1, "composed quantizer requires at least one level");
+        Composed {
+            levels,
+            inner,
+            inner_out: Update::new_sparse(0),
+            order: Vec::new(),
+            wire_idx: Vec::new(),
+            wire_levels: Vec::new(),
+            wire_norm: 0.0,
+            wire_dim: usize::MAX,
+        }
+    }
+
+    /// Whether `update` is exactly the dequantization of the stored wire
+    /// scratch — the mirror of `elias::decode_payload`'s composed arm,
+    /// so a `true` guarantees the framed payload decodes back to
+    /// `update` bit for bit.
+    fn scratch_matches(&self, update: &Update) -> bool {
+        let Update::Sparse(sp) = update else { return false };
+        if sp.dim != self.wire_dim || sp.nnz() != self.wire_idx.len() {
+            return false;
+        }
+        let sf = self.levels as f32;
+        sp.idx.iter().zip(&sp.val).zip(self.wire_idx.iter().zip(&self.wire_levels)).all(
+            |((&i, &v), (&wi, &wl))| {
+                let want = if wl == 0 {
+                    0.0f32
+                } else {
+                    let sgn = if wl < 0 { -1.0f32 } else { 1.0 };
+                    self.wire_norm * sgn * (wl.unsigned_abs() as f32 / sf)
+                };
+                i == wi && want.to_bits() == v.to_bits()
+            },
+        )
+    }
+
+    /// Accounted wire cost: one norm scalar plus, per kept entry, a
+    /// footnote-5 index, a sign bit, and a fixed-width level in `0..=s`
+    /// (`⌊log₂ s⌋ + 1` bits) — the composed analogue of
+    /// `SparseVec::encoded_bits`.
+    fn accounted_bits(&self, nnz: u64, d: usize) -> u64 {
+        let level_bits = (32 - self.levels.leading_zeros()) as u64;
+        32 + nnz * (super::sparse::index_bits(d) + 1 + level_bits)
+    }
+}
+
+impl Compressor for Composed {
+    fn name(&self) -> String {
+        format!(
+            "qsgd_{}({})",
+            super::qsgd::level_suffix(self.levels),
+            self.inner.name()
+        )
+    }
+
+    fn contraction_k(&self, d: usize) -> Option<f64> {
+        composed_contraction(self.levels, self.inner.contraction_k(d)?, d)
+    }
+
+    fn compress(&mut self, x: &[f32], rng: &mut Prng, out: &mut Update) -> u64 {
+        let d = x.len();
+        self.inner.compress(x, rng, &mut self.inner_out);
+        let s = match &self.inner_out {
+            Update::Sparse(s) => s,
+            Update::Dense(_) => unreachable!("composed inner stages emit sparse updates"),
+        };
+        // Canonical ascending-index order for quantization and the wire:
+        // fixes the rng draw sequence regardless of the inner stage's
+        // emission order.
+        self.order.clear();
+        self.order.extend(0..s.nnz() as u32);
+        self.order.sort_unstable_by_key(|&r| s.idx[r as usize]);
+        let norm = stats::l2_norm(&s.val) as f32;
+        let track_wire = self.levels <= i32::MAX as u32;
+        self.wire_idx.clear();
+        self.wire_levels.clear();
+        self.wire_norm = norm;
+        self.wire_dim = if track_wire { d } else { usize::MAX };
+        let sl = self.levels as f32;
+        let sp = out.sparse_mut(d);
+        for &rank in &self.order {
+            let i = s.idx[rank as usize];
+            let v = s.val[rank as usize];
+            let (level, value) = if norm == 0.0 || v == 0.0 {
+                // Zero-valued padding entries keep their slot, exactly
+                // +0.0 — same convention as the QSGD zero level.
+                (0i32, 0.0f32)
+            } else {
+                let u = v.abs() / norm * sl; // in [0, s]
+                let l = u.floor();
+                let p = u - l;
+                let lv = l + if rng.bernoulli(p as f64) { 1.0 } else { 0.0 };
+                if lv == 0.0 {
+                    (0, 0.0)
+                } else {
+                    let mag = if track_wire { lv as i32 } else { 0 };
+                    let mag = if v < 0.0 { -mag } else { mag };
+                    (mag, norm * v.signum() * (lv / sl))
+                }
+            };
+            sp.push(i, value);
+            if track_wire {
+                self.wire_idx.push(i);
+                self.wire_levels.push(level);
+            }
+        }
+        self.accounted_bits(sp.nnz() as u64, d)
+    }
+
+    /// Frame the native `(norm, sorted indices, signed levels)` stream
+    /// when `update` is verifiably the last compression this operator
+    /// produced; otherwise fall back to the generic codec (always exact).
+    fn encode_payload(&self, update: &Update, w: &mut elias::BitWriter) -> u64 {
+        if self.scratch_matches(update) {
+            elias::encode_payload_composed(
+                self.levels,
+                self.wire_norm,
+                &self.wire_idx,
+                &self.wire_levels,
+                self.wire_dim,
+                w,
+            )
+        } else {
+            elias::encode_payload_update(update, w)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::elias::{decode_payload, BitReader, BitWriter};
+    use crate::compress::sparse::index_bits;
+    use crate::compress::{from_spec, TopK};
+
+    fn composed(levels: u32, k: usize) -> Composed {
+        Composed::new(levels, Box::new(TopK::new(k)))
+    }
+
+    #[test]
+    fn keeps_the_inner_selection_with_quantized_values() {
+        let x = vec![0.1f32, -5.0, 0.2, 3.0, 0.05, -0.4];
+        let mut c = composed(16, 2);
+        let mut rng = Prng::new(3);
+        let mut out = Update::new_sparse(x.len());
+        c.compress(&x, &mut rng, &mut out);
+        let Update::Sparse(s) = &out else { panic!("sparse expected") };
+        // Top-2 selection survives, index-sorted.
+        assert_eq!(s.idx, vec![1, 3]);
+        // Values sit on the quantization grid of the kept-vector norm.
+        let norm = stats::l2_norm(&[-5.0f32, 3.0]) as f32;
+        for (&v, &xv) in s.val.iter().zip(&[-5.0f32, 3.0]) {
+            let level = v.abs() / norm * 16.0;
+            assert!((level - level.round()).abs() < 1e-4, "v={v} level={level}");
+            assert!(v == 0.0 || v.signum() == xv.signum());
+        }
+    }
+
+    #[test]
+    fn accounted_bits_are_deterministic_and_below_plain_topk() {
+        let d = 47_236usize;
+        let mut rng = Prng::new(5);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let mut c = composed(16, 100);
+        let mut out = Update::new_sparse(d);
+        let bits = c.compress(&x, &mut rng, &mut out);
+        // 32-bit norm + 100·(16-bit index + sign + 5-bit level).
+        assert_eq!(bits, 32 + 100 * (index_bits(d) + 1 + 5));
+        let plain = 100 * (32 + index_bits(d));
+        assert!(bits < plain, "composed {bits} >= plain top-k {plain}");
+    }
+
+    #[test]
+    fn unbiased_given_the_inner_selection() {
+        // Conditioned on top-k keeping a fixed coordinate set, the
+        // quantized values must average to the kept values.
+        let x = vec![4.0f32, -3.0, 0.0, 0.01, 2.0];
+        let mut c = composed(4, 3);
+        let mut rng = Prng::new(11);
+        let mut out = Update::new_sparse(x.len());
+        let trials = 30_000;
+        let mut acc = vec![0.0f64; x.len()];
+        for _ in 0..trials {
+            c.compress(&x, &mut rng, &mut out);
+            if let Update::Sparse(s) = &out {
+                for (&i, &v) in s.idx.iter().zip(&s.val) {
+                    acc[i as usize] += v as f64;
+                }
+            }
+        }
+        for &j in &[0usize, 1, 4] {
+            let mean = acc[j] / trials as f64;
+            assert!(
+                (mean - x[j] as f64).abs() < 0.05 * x[j].abs() as f64 + 0.02,
+                "coord {j}: mean={mean} x={}",
+                x[j]
+            );
+        }
+    }
+
+    #[test]
+    fn contraction_is_the_lemma_1_product() {
+        // qsgd:16(top_k:100) at d = 47236: m = 100,
+        // ω = min(100/256, 10/16) = 0.390625 → k_eff = 60.9375.
+        let c = composed(16, 100);
+        let k = c.contraction_k(47_236).unwrap();
+        assert!((k - (1.0 - 0.390625) * 100.0).abs() < 1e-9, "k = {k}");
+        // A 1-level quantizer on a wide selection voids the guarantee.
+        assert_eq!(composed(1, 100).contraction_k(47_236), None);
+        // k > d clamps through the inner operator's own cap.
+        assert_eq!(
+            composed(16, 3).contraction_k(2),
+            composed_contraction(16, 2.0, 2)
+        );
+    }
+
+    #[test]
+    fn native_payload_roundtrips_bitwise() {
+        let d = 500usize;
+        let mut rng = Prng::new(17);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let mut c = composed(16, 20);
+        let mut out = Update::new_sparse(d);
+        c.compress(&x, &mut rng, &mut out);
+        let mut w = BitWriter::new();
+        let bits = c.encode_payload(&out, &mut w);
+        // The native frame beats the generic 32-bit-value sparse frame.
+        let mut generic = BitWriter::new();
+        let generic_bits = elias::encode_payload_update(&out, &mut generic);
+        assert!(bits < generic_bits, "native {bits} >= generic {generic_bits}");
+        let mut r = BitReader::new(w.as_bytes());
+        let back = decode_payload(&mut r, d).unwrap();
+        assert_eq!(r.consumed(), bits);
+        let want: Vec<u32> = out.to_dense(d).iter().map(|v| v.to_bits()).collect();
+        let got: Vec<u32> = back.to_dense(d).iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want);
+        // Sparse entry sets (incl. zero-level padding) survive exactly.
+        let (Update::Sparse(a), Update::Sparse(b)) = (&out, &back) else {
+            panic!("kind changed through the codec");
+        };
+        assert_eq!(a.idx, b.idx);
+        // A foreign update still round-trips via the generic fallback.
+        let foreign = Update::new_sparse(d);
+        let mut w = BitWriter::new();
+        let bits = c.encode_payload(&foreign, &mut w);
+        let mut r = BitReader::new(w.as_bytes());
+        let back = decode_payload(&mut r, d).unwrap();
+        assert_eq!(r.consumed(), bits);
+        assert_eq!(back.to_dense(d), foreign.to_dense(d));
+    }
+
+    #[test]
+    fn zero_vector_sends_padding_only() {
+        let mut c = composed(16, 4);
+        let mut rng = Prng::new(1);
+        let mut out = Update::new_sparse(32);
+        c.compress(&[0.0f32; 32], &mut rng, &mut out);
+        // top-k on a zero vector keeps nothing; the composed frame is
+        // just the norm scalar.
+        assert_eq!(out.nnz(), 0);
+    }
+
+    #[test]
+    fn spec_parsing_and_name() {
+        let c = from_spec("qsgd:16(top_k:100)").unwrap();
+        assert_eq!(c.name(), "qsgd_4bit(top_100)");
+        let c = from_spec("qsgd:6(rand_k:3)").unwrap();
+        assert_eq!(c.name(), "qsgd_s6(rand_3)");
+    }
+}

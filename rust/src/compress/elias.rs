@@ -38,6 +38,7 @@
 //! | [`TAG_DENSE_NZ`] | `γ(d+1)`, [`encode_sparse`] of the bitwise-nonzero entries | dense vectors that are mostly `+0.0` |
 //! | [`TAG_SIGN`] | `γ(d+1)`, f32 scale, `d` sign bits (omitted at scale 0) | 1Bit-SGD sign compression |
 //! | [`TAG_QSGD`] | `γ(d+1)`, `γ(s)`, [`encode_qsgd`] | QSGD quantization |
+//! | [`TAG_COMPOSED`] | `γ(d+1)`, `γ(s)`, f32 norm, `γ(nnz+1)`, per entry `γ(Δ+1)`, sign bit, `γ(level+1)` | quantization ∘ sparsification ([`super::Composed`]) |
 //!
 //! The generic dense encoder chooses `TAG_DENSE_NZ` vs `TAG_DENSE_RAW`
 //! by exact bit cost, so the choice is a deterministic function of the
@@ -340,6 +341,11 @@ pub const TAG_DENSE_NZ: u64 = 3;
 pub const TAG_SIGN: u64 = 4;
 /// Frame tag: QSGD quantization — `γ(s)` then an [`encode_qsgd`] body.
 pub const TAG_QSGD: u64 = 5;
+/// Frame tag: composed quantization ∘ sparsification — a sparse index
+/// list whose values are `s`-level quantizations of the kept vector
+/// (norm scalar + sign/level per entry). Zero levels keep their index
+/// (decoded as exact `+0.0`), so the kept-coordinate set round-trips.
+pub const TAG_COMPOSED: u64 = 6;
 
 /// Frame a sparse update: `γ(TAG_SPARSE)` + [`encode_sparse`].
 /// Returns the payload bit count (tag included).
@@ -433,6 +439,42 @@ pub fn encode_payload_qsgd(s: u32, norm: f32, levels: &[i32], w: &mut BitWriter)
     w.bits() - before
 }
 
+/// Frame a composed quantization-∘-sparsification payload:
+/// `γ(TAG_COMPOSED)`, `γ(d+1)`, `γ(s)`, the f32 kept-vector norm,
+/// `γ(nnz+1)`, then per entry (indices strictly ascending): `γ(Δ+1)`,
+/// one sign bit, `γ(|level|+1)` with `level ∈ 0..=s`. The decoder
+/// dequantizes with the compressor's literal expression
+/// `norm · sign · (level / s)` (zero levels become exact `+0.0`), so
+/// the payload reconstructs the transmitted sparse update bit for bit.
+pub fn encode_payload_composed(
+    s: u32,
+    norm: f32,
+    idx: &[u32],
+    levels: &[i32],
+    dim: usize,
+    w: &mut BitWriter,
+) -> u64 {
+    debug_assert!(s >= 1);
+    debug_assert_eq!(idx.len(), levels.len());
+    debug_assert!(idx.windows(2).all(|p| p[0] < p[1]), "indices must ascend");
+    let before = w.bits();
+    w.put_gamma(TAG_COMPOSED);
+    w.put_gamma(dim as u64 + 1);
+    w.put_gamma(s as u64);
+    w.put_f32(norm);
+    w.put_gamma(idx.len() as u64 + 1);
+    let mut prev = 0u64;
+    for (rank, (&i, &l)) in idx.iter().zip(levels).enumerate() {
+        let i = i as u64;
+        let delta = if rank == 0 { i } else { i - prev - 1 };
+        prev = i;
+        w.put_gamma(delta + 1);
+        w.put_bit(l < 0);
+        w.put_gamma(l.unsigned_abs() as u64 + 1);
+    }
+    w.bits() - before
+}
+
 /// Frame any [`Update`] through the generic codecs — the default of
 /// [`super::Compressor::encode_payload`].
 pub fn encode_payload_update(update: &Update, w: &mut BitWriter) -> u64 {
@@ -506,6 +548,52 @@ pub fn decode_payload(r: &mut BitReader<'_>, dim: usize) -> Result<Update> {
                 }
             }
             Ok(Update::Dense(g))
+        }
+        TAG_COMPOSED => {
+            expect_dim(r, dim)?;
+            let s = r.get_gamma()?;
+            if s > i32::MAX as u64 {
+                bail!("decoded composed level count {s} out of range");
+            }
+            let sf = s as f32;
+            let norm = r.get_f32()?;
+            let nnz = r.get_gamma()? - 1;
+            if nnz > dim as u64 {
+                bail!("decoded nnz {nnz} exceeds dimension {dim}");
+            }
+            let mut out = SparseVec::new(dim);
+            let mut prev = 0u64;
+            for rank in 0..nnz {
+                let delta = r.get_gamma()? - 1;
+                let i = if rank == 0 {
+                    delta
+                } else {
+                    match prev.checked_add(1).and_then(|p| p.checked_add(delta)) {
+                        Some(i) => i,
+                        None => bail!("decoded index overflows (Δ {delta} after {prev})"),
+                    }
+                };
+                prev = i;
+                if i >= dim as u64 {
+                    bail!("decoded index {i} out of dimension {dim}");
+                }
+                let neg = r.get_bit()?;
+                let mag = r.get_gamma()? - 1;
+                if mag > i32::MAX as u64 {
+                    bail!("decoded level magnitude {mag} out of i32 range");
+                }
+                let v = if mag == 0 {
+                    // Zero levels are exact +0.0 — the padding slots of
+                    // the inner sparsifier's selection.
+                    0.0f32
+                } else {
+                    let sgn = if neg { -1.0f32 } else { 1.0 };
+                    // The compressor's literal dequantization expression.
+                    norm * sgn * (mag as u32 as f32 / sf)
+                };
+                out.push(i as u32, v);
+            }
+            Ok(Update::Sparse(out))
         }
         other => bail!("unknown payload tag {other}"),
     }
@@ -817,6 +905,71 @@ mod tests {
         let back = decode_payload(&mut r, 8).unwrap();
         assert_eq!(r.consumed(), bits);
         assert_eq!(bits_of(&back, 8), bits_of(&Update::Dense(g), 8));
+    }
+
+    #[test]
+    fn payload_composed_roundtrips_the_dequantized_update_bitwise() {
+        let s = 16u32;
+        let norm = 1.7320508f32;
+        // Includes a zero level: its index must survive as exact +0.0.
+        let idx = vec![3u32, 17, 40, 44];
+        let levels = vec![5i32, 0, -16, 1];
+        let sf = s as f32;
+        let mut want = SparseVec::new(50);
+        for (&i, &l) in idx.iter().zip(&levels) {
+            let v = if l == 0 {
+                0.0
+            } else {
+                let sgn = if l < 0 { -1.0f32 } else { 1.0 };
+                norm * sgn * (l.unsigned_abs() as f32 / sf)
+            };
+            want.push(i, v);
+        }
+        let mut w = BitWriter::new();
+        let bits = encode_payload_composed(s, norm, &idx, &levels, 50, &mut w);
+        let mut r = BitReader::new(w.as_bytes());
+        let back = decode_payload(&mut r, 50).unwrap();
+        assert_eq!(r.consumed(), bits);
+        let Update::Sparse(b) = &back else { panic!("sparse expected") };
+        assert_eq!(b.idx, want.idx, "index set (incl. the zero-level slot)");
+        let want_bits: Vec<u32> = want.val.iter().map(|v| v.to_bits()).collect();
+        let got_bits: Vec<u32> = b.val.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got_bits, want_bits);
+    }
+
+    #[test]
+    fn composed_hostile_fields_are_rejected() {
+        // Hostile nnz: bail before allocation.
+        let mut w = BitWriter::new();
+        w.put_gamma(TAG_COMPOSED);
+        w.put_gamma(101); // d = 100
+        w.put_gamma(16);
+        w.put_f32(1.0);
+        w.put_gamma(1u64 << 40);
+        let mut r = BitReader::new(w.as_bytes());
+        let err = decode_payload(&mut r, 100).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds dimension"), "{err:#}");
+        // Hostile level magnitude: beyond i32 is a descriptive error.
+        let mut w = BitWriter::new();
+        w.put_gamma(TAG_COMPOSED);
+        w.put_gamma(101);
+        w.put_gamma(16);
+        w.put_f32(1.0);
+        w.put_gamma(2); // nnz = 1
+        w.put_gamma(1); // index 0
+        w.put_bit(false);
+        w.put_gamma((1u64 << 40) + 1);
+        let mut r = BitReader::new(w.as_bytes());
+        let err = decode_payload(&mut r, 100).unwrap_err();
+        assert!(format!("{err:#}").contains("out of i32 range"), "{err:#}");
+        // Hostile level count: s beyond i32 is refused up front.
+        let mut w = BitWriter::new();
+        w.put_gamma(TAG_COMPOSED);
+        w.put_gamma(101);
+        w.put_gamma(1u64 << 40);
+        let mut r = BitReader::new(w.as_bytes());
+        let err = decode_payload(&mut r, 100).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
     }
 
     #[test]

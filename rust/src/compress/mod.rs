@@ -19,6 +19,14 @@
 //!   a data-dependent contraction with guaranteed `k ≥ 1`.
 //! * [`threshold::Threshold`] — Aji & Heafield's [1] relative-threshold
 //!   sparsification with adaptive cardinality.
+//! * [`adaptive::AdaptiveSparse`] — Wangni et al.'s unbiased adaptive
+//!   sparsifier: keep coordinate `i` with probability `min(1, c·|x_i|)`
+//!   where `c` solves for an expected budget, rescaling kept values by
+//!   `1/p_i`.
+//! * [`composed::Composed`] — quantization ∘ sparsification in the style
+//!   of Qsparse-local-SGD (Basu et al.): QSGD levels over a sparsifier's
+//!   kept values, with the Lemma 1 product-form contraction. Spec grammar
+//!   `qsgd:16(top_k:100)`.
 //! * [`identity`] — `comp = id` (vanilla SGD baseline; a d-contraction).
 //!
 //! Every operator implements [`Compressor`], producing a reusable
@@ -26,7 +34,9 @@
 //! the wire (the currency of Figures 3 and the communication claims).
 
 pub mod active;
+pub mod adaptive;
 pub mod block_top_k;
+pub mod composed;
 pub mod elias;
 pub mod qsgd;
 pub mod rand_k;
@@ -39,7 +49,9 @@ pub mod top_k;
 use anyhow::{bail, Result};
 
 pub use active::{ActiveIndex, ActiveView};
+pub use adaptive::AdaptiveSparse;
 pub use block_top_k::BlockTopK;
+pub use composed::{composed_contraction, Composed};
 pub use qsgd::Qsgd;
 pub use rand_k::RandK;
 pub use random_p::RandomP;
@@ -261,13 +273,54 @@ pub enum CompressorSpec {
     /// QSGD random quantizer: `levels`, optional sparsity-aware effective
     /// dimension for the Appendix-B bit accounting.
     Qsgd { levels: u32, eff: Option<usize> },
+    /// Wangni et al. adaptive unbiased sparsifier with expected budget.
+    Adaptive { budget: usize },
+    /// Quantization ∘ sparsification (`qsgd:16(top_k:100)`): QSGD with
+    /// `levels` applied to the kept values of the `inner` sparsifier.
+    Composed { levels: u32, inner: Box<CompressorSpec> },
 }
 
 impl CompressorSpec {
     /// Parse a spec string. **Strict**: every `:`-separated component
     /// must be consumed — `top_k:1:junk` is an error, not a silently
     /// truncated `top_k:1`.
+    ///
+    /// Composition grammar: `qsgd:<levels>(<inner>)` — the outer must be
+    /// a bare quantizer, the inner a sparsifier that emits a coordinate
+    /// list, and nesting is rejected (one quantization layer suffices;
+    /// the Lemma 1 algebra below is for a single product).
     pub fn parse(spec: &str) -> Result<CompressorSpec> {
+        // The paren branch runs before the `:`-split so inner specs keep
+        // their own colons (`qsgd:16(top_k:100)`).
+        if let Some(open) = spec.find('(') {
+            if !spec.ends_with(')') || spec.len() == open + 1 {
+                bail!("composed spec '{spec}' must end with ')'");
+            }
+            let inner_str = &spec[open + 1..spec.len() - 1];
+            if inner_str.contains('(') {
+                bail!("nested composition in '{spec}' is not supported");
+            }
+            let levels = match CompressorSpec::parse(&spec[..open])? {
+                CompressorSpec::Qsgd { levels, eff: None } => levels,
+                CompressorSpec::Qsgd { eff: Some(_), .. } => bail!(
+                    "composed outer in '{spec}' must not override the effective \
+                     dimension — bits are accounted from the inner selection"
+                ),
+                other => bail!(
+                    "composed outer must be a quantizer (qsgd:<levels>), got '{}' in '{spec}'",
+                    other.spec_string()
+                ),
+            };
+            let inner = CompressorSpec::parse(inner_str)?;
+            if !inner.composable_inner() {
+                bail!(
+                    "composed inner must be a sparsifier emitting a coordinate \
+                     list, got '{}' in '{spec}'",
+                    inner.spec_string()
+                );
+            }
+            return Ok(CompressorSpec::Composed { levels, inner: Box::new(inner) });
+        }
         let mut parts = spec.split(':');
         let kind = parts.next().unwrap_or_default();
         let arg = parts.next();
@@ -322,7 +375,15 @@ impl CompressorSpec {
                 CompressorSpec::RandomP { p }
             }
             "qsgd" => {
-                let levels = parse_k(arg, "qsgd")? as u32;
+                // `as u32` here would silently truncate: `qsgd:4294967297`
+                // used to parse as levels = 1.
+                let raw = parse_k(arg, "qsgd")?;
+                let levels = u32::try_from(raw).map_err(|_| {
+                    anyhow::anyhow!(
+                        "qsgd level count {raw} exceeds u32 range (max {})",
+                        u32::MAX
+                    )
+                })?;
                 let eff = match arg2 {
                     Some(v) => Some(
                         v.parse::<usize>()
@@ -335,6 +396,10 @@ impl CompressorSpec {
             "block_top_k" | "block" => {
                 no_arg2("block_top_k")?;
                 CompressorSpec::BlockTopK { k: parse_k(arg, "block_top_k")? }
+            }
+            "adaptive" => {
+                no_arg2("adaptive")?;
+                CompressorSpec::Adaptive { budget: parse_k(arg, "adaptive")? }
             }
             "sign" | "1bit" => {
                 if let Some(extra) = arg {
@@ -359,6 +424,22 @@ impl CompressorSpec {
         })
     }
 
+    /// Whether this spec emits a sparse coordinate list that a quantizer
+    /// can stack on — the legal inner position of `qsgd:s(inner)`.
+    /// Dense emitters (identity, qsgd, sign) are excluded: the composed
+    /// wire frame codes a coordinate list.
+    fn composable_inner(&self) -> bool {
+        matches!(
+            self,
+            CompressorSpec::TopK { .. }
+                | CompressorSpec::RandK { .. }
+                | CompressorSpec::RandomP { .. }
+                | CompressorSpec::BlockTopK { .. }
+                | CompressorSpec::Threshold { .. }
+                | CompressorSpec::Adaptive { .. }
+        )
+    }
+
     /// Instantiate the operator. Infallible: every variant holds
     /// already-validated parameters.
     pub fn build(&self) -> Box<dyn Compressor> {
@@ -372,6 +453,11 @@ impl CompressorSpec {
             CompressorSpec::Threshold { tau } => Box::new(Threshold::new(*tau)),
             CompressorSpec::Qsgd { levels, eff } => {
                 Box::new(Qsgd::with_effective_dim(*levels, *eff))
+            }
+            CompressorSpec::Adaptive { budget } => Box::new(AdaptiveSparse::new(*budget)),
+            CompressorSpec::Composed { levels, inner } => {
+                debug_assert!(inner.composable_inner(), "parse edge admits sparsifiers only");
+                Box::new(Composed::new(*levels, inner.build()))
             }
         }
     }
@@ -389,7 +475,11 @@ impl CompressorSpec {
             CompressorSpec::Sign => "sign_1bit".into(),
             CompressorSpec::Threshold { tau } => format!("threshold_{tau}"),
             CompressorSpec::Qsgd { levels, .. } => {
-                format!("qsgd_{}bit", (*levels as f64).log2().round() as u32)
+                format!("qsgd_{}", qsgd::level_suffix(*levels))
+            }
+            CompressorSpec::Adaptive { budget } => format!("adaptive_{budget}"),
+            CompressorSpec::Composed { levels, inner } => {
+                format!("qsgd_{}({})", qsgd::level_suffix(*levels), inner.name())
             }
         }
     }
@@ -411,6 +501,10 @@ impl CompressorSpec {
             }
             CompressorSpec::Sign | CompressorSpec::Threshold { .. } => Some(1.0),
             CompressorSpec::Qsgd { .. } => None,
+            CompressorSpec::Adaptive { budget } => Some((*budget).min(d) as f64),
+            CompressorSpec::Composed { levels, inner } => {
+                composed_contraction(*levels, inner.contraction_k(d)?, d)
+            }
         }
     }
 
@@ -428,13 +522,18 @@ impl CompressorSpec {
                 Some(e) => format!("qsgd:{levels}:{e}"),
                 None => format!("qsgd:{levels}"),
             },
+            CompressorSpec::Adaptive { budget } => format!("adaptive:{budget}"),
+            CompressorSpec::Composed { levels, inner } => {
+                format!("qsgd:{levels}({})", inner.spec_string())
+            }
         }
     }
 }
 
 /// Parse a compressor spec string: `top_k:1`, `rand_k:10`, `random_p:0.5`,
 /// `qsgd:16` (levels), `qsgd:16:71` (levels + effective sparsity-aware
-/// dimension, Appendix B), or `identity`.
+/// dimension, Appendix B), `adaptive:100` (Wangni expected budget),
+/// `qsgd:16(top_k:100)` (quantization ∘ sparsification), or `identity`.
 ///
 /// Thin shim over [`CompressorSpec::parse`] + [`CompressorSpec::build`];
 /// kept for call sites that go straight from a string to an operator.
@@ -493,9 +592,63 @@ mod tests {
         assert_eq!(from_spec("random_p:0.25").unwrap().name(), "random_p_0.25");
         assert_eq!(from_spec("qsgd:16").unwrap().name(), "qsgd_4bit");
         assert_eq!(from_spec("identity").unwrap().name(), "identity");
+        assert_eq!(from_spec("adaptive:100").unwrap().name(), "adaptive_100");
+        assert_eq!(
+            from_spec("qsgd:16(top_k:100)").unwrap().name(),
+            "qsgd_4bit(top_100)"
+        );
         assert!(from_spec("nope").is_err());
         assert!(from_spec("top_k").is_err());
         assert!(from_spec("top_k:x").is_err());
+    }
+
+    #[test]
+    fn composed_grammar_is_strict() {
+        // The outer must be a bare quantizer (no eff-dim override)...
+        assert!(from_spec("top_k:3(rand_k:1)").is_err());
+        assert!(from_spec("qsgd:16:71(top_k:1)").is_err());
+        // ...the inner must emit a coordinate list...
+        assert!(from_spec("qsgd:16(qsgd:8)").is_err());
+        assert!(from_spec("qsgd:16(identity)").is_err());
+        assert!(from_spec("qsgd:16(sign)").is_err());
+        // ...and no nesting, trailing junk, or unbalanced parens.
+        assert!(from_spec("qsgd:16(qsgd:8(top_k:1))").is_err());
+        assert!(from_spec("qsgd:16(top_k:1)x").is_err());
+        assert!(from_spec("qsgd:16(top_k:1").is_err());
+        assert!(from_spec("qsgd:16()").is_err());
+        assert!(from_spec("top_k:1)").is_err());
+        // Every composable sparsifier is accepted inside.
+        for inner in ["top_k:3", "rand_k:3", "random_p:0.5", "block_top_k:4", "threshold:0.25", "adaptive:3"] {
+            assert!(from_spec(&format!("qsgd:16({inner})")).is_ok(), "{inner}");
+        }
+    }
+
+    #[test]
+    fn qsgd_levels_beyond_u32_are_rejected_not_truncated() {
+        // 2^32 + 1 used to truncate to levels = 1 via `as u32`.
+        let err = from_spec("qsgd:4294967297").unwrap_err();
+        assert!(
+            format!("{err:#}").contains("exceeds u32 range"),
+            "unexpected error: {err:#}"
+        );
+        assert!(from_spec("qsgd:4294967296").is_err());
+        // The largest representable level count still parses.
+        assert_eq!(
+            from_spec("qsgd:4294967295").unwrap().name(),
+            "qsgd_s4294967295"
+        );
+    }
+
+    #[test]
+    fn qsgd_names_distinguish_non_power_of_two_levels() {
+        // `log2().round()` used to name both of these `qsgd_3bit`,
+        // colliding their metric-record keys.
+        assert_eq!(from_spec("qsgd:6").unwrap().name(), "qsgd_s6");
+        assert_eq!(from_spec("qsgd:8").unwrap().name(), "qsgd_3bit");
+        assert_ne!(
+            CompressorSpec::parse("qsgd:6").unwrap().name(),
+            CompressorSpec::parse("qsgd:8").unwrap().name()
+        );
     }
 
     #[test]
@@ -508,6 +661,8 @@ mod tests {
         assert!(from_spec("random_p:0.5:x").is_err());
         assert!(from_spec("threshold:0.25:x").is_err());
         assert!(from_spec("qsgd:16:71:zz").is_err());
+        assert!(from_spec("adaptive:3:j").is_err());
+        assert!(from_spec("qsgd:16(top_k:1:j)").is_err());
         // ...while fully-consumed specs still parse.
         assert!(from_spec("qsgd:16:71").is_ok());
     }
@@ -521,6 +676,9 @@ mod tests {
         assert!(from_spec("threshold:0").is_err());
         assert!(from_spec("threshold:2").is_err());
         assert!(from_spec("qsgd:0").is_err());
+        assert!(from_spec("adaptive:0").is_err());
+        assert!(from_spec("qsgd:0(top_k:1)").is_err());
+        assert!(from_spec("qsgd:16(top_k:0)").is_err());
     }
 
     #[test]
@@ -535,6 +693,9 @@ mod tests {
             "threshold:0.25",
             "qsgd:16",
             "qsgd:16:71",
+            "adaptive:100",
+            "qsgd:16(top_k:100)",
+            "qsgd:6(rand_k:3)",
         ] {
             let parsed = CompressorSpec::parse(spec).unwrap();
             assert_eq!(
@@ -551,6 +712,17 @@ mod tests {
         assert_eq!(
             CompressorSpec::parse("qsgd:16:71").unwrap(),
             CompressorSpec::Qsgd { levels: 16, eff: Some(71) }
+        );
+        assert_eq!(
+            CompressorSpec::parse("qsgd:16(top_k:100)").unwrap(),
+            CompressorSpec::Composed {
+                levels: 16,
+                inner: Box::new(CompressorSpec::TopK { k: 100 })
+            }
+        );
+        assert_eq!(
+            CompressorSpec::parse("adaptive:100").unwrap(),
+            CompressorSpec::Adaptive { budget: 100 }
         );
         assert_eq!(CompressorSpec::TopK { k: 3 }.contraction_k(100), Some(3.0));
         assert_eq!(CompressorSpec::Qsgd { levels: 16, eff: None }.contraction_k(100), None);
@@ -572,6 +744,13 @@ mod tests {
             "threshold:0.25",
             "qsgd:16",
             "qsgd:16:71",
+            "qsgd:6", // non-power-of-two levels: exact `s6` naming
+            "adaptive:3",
+            "adaptive:100",
+            "qsgd:16(top_k:3)",
+            "qsgd:6(rand_k:3)",
+            "qsgd:1(top_k:3)", // ω ≥ 1: composed contraction is None
+            "qsgd:16(adaptive:3)",
         ] {
             let typed = CompressorSpec::parse(spec).unwrap();
             let built = typed.build();

@@ -17,6 +17,20 @@ use super::{elias, Compressor, Update};
 use crate::util::prng::Prng;
 use crate::util::stats;
 
+/// Canonical display suffix for a QSGD level count: `4bit` style for
+/// powers of two, exact `s6` style otherwise. `log2().round()` here used
+/// to name both `qsgd:6` and `qsgd:8` as `qsgd_3bit`, colliding their
+/// metric-record keys. Shared by [`Qsgd::name`],
+/// [`super::CompressorSpec::name`], and the method-level mirror in
+/// `coordinator::config` so the three sites cannot drift.
+pub fn level_suffix(levels: u32) -> String {
+    if levels.is_power_of_two() {
+        format!("{}bit", levels.trailing_zeros())
+    } else {
+        format!("s{levels}")
+    }
+}
+
 /// QSGD quantizer with `levels = s` and optional sparsity-aware effective
 /// dimension for the bit accounting.
 #[derive(Clone, Debug)]
@@ -81,7 +95,7 @@ impl Qsgd {
 
 impl Compressor for Qsgd {
     fn name(&self) -> String {
-        format!("qsgd_{}bit", (self.levels as f64).log2().round() as u32)
+        format!("qsgd_{}", level_suffix(self.levels))
     }
 
     /// QSGD is unbiased but not a k-contraction in the sense of
@@ -259,6 +273,11 @@ mod tests {
         assert_eq!(Qsgd::new(4).name(), "qsgd_2bit");
         assert_eq!(Qsgd::new(16).name(), "qsgd_4bit");
         assert_eq!(Qsgd::new(256).name(), "qsgd_8bit");
+        // Non-powers of two get exact names instead of colliding with
+        // the nearest power (both 6 and 8 used to round to "3bit").
+        assert_eq!(Qsgd::new(6).name(), "qsgd_s6");
+        assert_ne!(Qsgd::new(6).name(), Qsgd::new(8).name());
+        assert_eq!(Qsgd::new(1).name(), "qsgd_0bit");
     }
 
     #[test]

@@ -197,7 +197,7 @@ impl MethodSpec {
             MethodSpec::MemSgd { comp } => format!("memsgd({})", comp.name()),
             MethodSpec::Sgd => "sgd".into(),
             MethodSpec::SgdQsgd { levels, .. } => {
-                format!("sgd_qsgd_{}bit", (*levels as f64).log2().round() as u32)
+                format!("sgd_qsgd_{}", crate::compress::qsgd::level_suffix(*levels))
             }
             MethodSpec::SgdUnbiasedRandK { k } => format!("sgd_unbiased_rand_{k}"),
         }
@@ -371,8 +371,18 @@ mod tests {
     fn names_are_infallible() {
         assert_eq!(MethodSpec::parse("memsgd:top_k:1").unwrap().name(), "memsgd(top_1)");
         assert_eq!(MethodSpec::parse("sgd:qsgd:256").unwrap().name(), "sgd_qsgd_8bit");
+        // Non-power-of-two levels keep exact names (no log2 rounding).
+        assert_eq!(MethodSpec::parse("sgd:qsgd:6").unwrap().name(), "sgd_qsgd_s6");
         assert_eq!(MethodSpec::parse("sgd").unwrap().name(), "sgd");
         assert_eq!(MethodSpec::mem_top_k(3).name(), "memsgd(top_3)");
+        assert_eq!(
+            MethodSpec::parse("memsgd:qsgd:16(top_k:100)").unwrap().name(),
+            "memsgd(qsgd_4bit(top_100))"
+        );
+        assert_eq!(
+            MethodSpec::parse("memsgd:adaptive:100").unwrap().name(),
+            "memsgd(adaptive_100)"
+        );
     }
 
     #[test]
@@ -384,6 +394,8 @@ mod tests {
             "sgd:qsgd:16",
             "sgd:qsgd:16:71",
             "sgd:unbiased_rand_k:10",
+            "memsgd:adaptive:100",
+            "memsgd:qsgd:16(top_k:100)",
         ] {
             let m = MethodSpec::parse(spec).unwrap();
             assert_eq!(MethodSpec::parse(&m.spec_string()).unwrap(), m, "{spec}");

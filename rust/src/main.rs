@@ -7,6 +7,7 @@
 //! memsgd figure3 --dataset epsilon [--scale 20] [--epochs 2] [--gamma0 1.0]
 //! memsgd figure4 --dataset epsilon [--workers 1,2,4,8,12,16,20,24] [--threads]
 //! memsgd figure5 --dataset rcv1   [--scale 40]
+//! memsgd bitsloss --k 100 [--scale 100] [--steps 10000]  # composition payoff
 //! memsgd e2e     [--steps 200] [--k 100]      # transformer through PJRT
 //! memsgd train   --method memsgd:top_k:1 [--topology shared] ...  # ad-hoc run
 //! memsgd info                                  # runtime / artifact status
@@ -48,6 +49,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("figure4") => cmd_figure4(args),
         Some("figure5") => cmd_figure5(args),
         Some("figure6") => cmd_figure6(args),
+        Some("bitsloss") => cmd_bitsloss(args),
         Some("section22") => cmd_section22(args),
         Some("theory") => cmd_theory(args),
         Some("async") => cmd_async(args),
@@ -77,11 +79,16 @@ subcommands:
   figure4   multicore speedup: threads + DES model (paper Figure 4)
   figure5   gamma0 grid search (paper Figure 5)
   figure6   time-to-accuracy on 1GbE/10GbE/100Gb links (extension)
+  bitsloss  bits on the wire to a shared target loss: top_k:K vs the
+            composed qsgd:16(top_k:K) vs adaptive:K (--k K, extension)
   section22 variance blow-up of unbiased sparsification (paper §2.2)
   theory    Lemma 3.2 memory envelope on a live run
   async     async vs sync parameter server under a network model
   e2e       transformer LM through the PJRT artifacts (full stack)
-  train     one ad-hoc run (--method, --epochs, --dataset, --topology
+  train     one ad-hoc run (--method memsgd:top_k:100 — compressor
+            specs compose: memsgd:qsgd:16(top_k:100) quantizes the
+            kept coordinates, memsgd:adaptive:100 keeps ~100 coords
+            with Wangni probabilities; --epochs, --dataset, --topology
             sequential|shared|ps-sync|ps-async|all-reduce|gossip,
             --workers-count N, --gossip-graph complete|ring,
             --batch B, --local-steps H, --wire,
@@ -282,6 +289,42 @@ fn cmd_figure6(args: &Args) -> Result<()> {
         ]));
     }
     let path = format!("{}/figure6_{}.json", out_dir(args), which.name());
+    std::fs::create_dir_all(out_dir(args))?;
+    std::fs::write(&path, memsgd::util::json::Json::Arr(obj).to_string_pretty())?;
+    println!("wrote {path}");
+    args.finish()
+}
+
+fn cmd_bitsloss(args: &Args) -> Result<()> {
+    use memsgd::experiments::extensions;
+    let which = Which::parse(&args.get_str("dataset", "epsilon"))?;
+    let scale = args.get("scale", 100usize)?;
+    let steps = args.get("steps", 10_000usize)?;
+    let k = args.get("k", 100usize)?;
+    let seed = args.get("seed", 1u64)?;
+    println!(
+        "bits-vs-loss (extension) — top_k:{k} vs qsgd:16(top_k:{k}) vs adaptive:{k} \
+         on {} (scale {scale}, {steps} steps)\n",
+        which.name()
+    );
+    let res = extensions::bits_vs_loss(which, scale, steps, k, seed)?;
+    println!("{}", res.table());
+    let mut obj = Vec::new();
+    for c in &res.cells {
+        obj.push(memsgd::util::json::Json::obj(vec![
+            ("method", memsgd::util::json::Json::str(&c.method)),
+            ("final_loss", memsgd::util::json::Json::Num(c.final_loss)),
+            ("total_bits", memsgd::util::json::Json::Num(c.total_bits as f64)),
+            (
+                "bits_to_target",
+                memsgd::util::json::Json::Num(
+                    c.bits_to_target.map(|b| b as f64).unwrap_or(f64::NAN),
+                ),
+            ),
+            ("bits_per_step", memsgd::util::json::Json::Num(c.bits_per_step)),
+        ]));
+    }
+    let path = format!("{}/bitsloss_{}.json", out_dir(args), which.name());
     std::fs::create_dir_all(out_dir(args))?;
     std::fs::write(&path, memsgd::util::json::Json::Arr(obj).to_string_pretty())?;
     println!("wrote {path}");

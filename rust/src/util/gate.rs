@@ -130,6 +130,25 @@ pub fn wire_decode_qsgd_case() -> String {
     "wire decode qsgd    s=16 d=2000".to_string()
 }
 
+/// Canonical name of the composed-compressor scan case: one full
+/// `qsgd:16(top_k:100)` compress (top-100 selection + per-coordinate
+/// stochastic quantization) at the RCV1 dimension — the per-step cost a
+/// composed method adds over the plain sparsifier.
+pub fn composed_scan_case() -> String {
+    "composed scan       top_100 qsgd16 d=47236".to_string()
+}
+
+/// Canonical name of the composed payload encode case (the native
+/// `TAG_COMPOSED` frame: gamma deltas + sign bits + gamma levels).
+pub fn composed_encode_case() -> String {
+    "composed encode     top_100 qsgd16 d=47236".to_string()
+}
+
+/// Canonical name of the matching composed payload decode case.
+pub fn composed_decode_case() -> String {
+    "composed decode     top_100 qsgd16 d=47236".to_string()
+}
+
 /// Canonical name of the TCP encode→socket→decode round-trip case for a
 /// top-10 sparse payload at the RCV1 dimension — the full per-message
 /// cost of the cluster runtime's data plane (payload encode, length

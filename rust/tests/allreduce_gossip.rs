@@ -55,6 +55,8 @@ fn all_methods() -> Vec<MethodSpec> {
         "memsgd:sign",
         "memsgd:threshold:0.25",
         "memsgd:qsgd:8",
+        "memsgd:qsgd:8(top_k:2)",
+        "memsgd:adaptive:3",
         "sgd",
         "sgd:qsgd:8",
         "sgd:unbiased_rand_k:2",

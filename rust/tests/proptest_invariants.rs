@@ -411,6 +411,8 @@ fn prop_payload_roundtrip_every_compressor() {
             "sign".to_string(),
             "threshold:0.3".to_string(),
             "qsgd:8".to_string(),
+            format!("qsgd:8(top_k:{k})"),
+            format!("adaptive:{k}"),
         ];
         let spec = &specs[rng.below(specs.len())];
         let mut comp = compress::from_spec(spec).unwrap();
@@ -426,6 +428,169 @@ fn prop_payload_roundtrip_every_compressor() {
         let want: Vec<u32> = out.to_dense(d).iter().map(|v| v.to_bits()).collect();
         let got: Vec<u32> = back.to_dense(d).iter().map(|v| v.to_bits()).collect();
         ensure(got == want, format!("{spec} d={d}: payload not bit-exact"))
+    });
+}
+
+/// Composed contraction: `contraction_k()` must be exactly the Qsparse
+/// Lemma 1 product of the parts, and the composed operator's residual
+/// second moment must respect the claimed bound in expectation
+/// (pointwise inner top-k selection, randomized outer quantizer).
+#[test]
+fn prop_composed_contraction_matches_product_form_in_expectation() {
+    check("composed-contraction", 10, |rng| {
+        let d = 8 + rng.below(48);
+        let k = 1 + rng.below(d.min(12));
+        let s = 1u32 << (2 + rng.below(5)); // 4..64 levels
+        let spec = format!("qsgd:{s}(top_k:{k})");
+        let mut comp = compress::from_spec(&spec).unwrap();
+        let inner_k = compress::from_spec(&format!("top_k:{k}"))
+            .unwrap()
+            .contraction_k(d)
+            .unwrap();
+        let claimed = comp.contraction_k(d);
+        ensure(
+            claimed == compress::composed_contraction(s, inner_k, d),
+            format!("{spec}: claimed k is not the Lemma 1 product"),
+        )?;
+        let Some(kk) = claimed else { return Ok(()) };
+        let x = random_vec(rng, d);
+        let x2 = stats::l2_norm_sq(&x);
+        let trials = 2_000;
+        let mut acc = 0.0f64;
+        let mut out = Update::new_sparse(d);
+        for _ in 0..trials {
+            comp.compress(&x, rng, &mut out);
+            let dense = out.to_dense(d);
+            let resid: Vec<f32> = x.iter().zip(&dense).map(|(a, b)| a - b).collect();
+            acc += stats::l2_norm_sq(&resid);
+        }
+        let mean = acc / trials as f64;
+        // Lemma 1 gives an upper bound, not an equality: slack on the
+        // bound side only, for quantizer sampling noise.
+        let bound = (1.0 - kk / d as f64) * x2;
+        ensure(
+            mean <= bound * 1.05 + 0.02 * x2 + 1e-9,
+            format!("{spec} d={d}: E residual {mean} > claimed bound {bound}"),
+        )
+    });
+}
+
+/// Adaptive sparsification: keep probabilities realize the budget, the
+/// estimator is unbiased, the expected kept count is `contraction_k()`'s
+/// reported budget, and the residual second moment matches the closed
+/// form `Σ x_i²·(1/p_i − 1)` — the in-expectation semantics documented
+/// in `compress/adaptive.rs` (the Definition 2.1 inequality itself is
+/// not claimed).
+#[test]
+fn prop_adaptive_unbiased_with_closed_form_variance() {
+    check("adaptive-expectation", 8, |rng| {
+        let d = 4 + rng.below(24);
+        let budget = 1 + rng.below(d.min(8));
+        let x = random_vec(rng, d);
+        let x2 = stats::l2_norm_sq(&x);
+        let mut a = compress::AdaptiveSparse::new(budget);
+        let mut p = Vec::new();
+        a.keep_probabilities(&x, &mut p);
+        let nz = x.iter().filter(|&&v| v != 0.0).count();
+        let psum: f64 = p.iter().sum();
+        ensure_close(
+            psum,
+            budget.min(nz) as f64,
+            1e-9,
+            1e-9,
+            "sum of keep probabilities",
+        )?;
+        ensure(
+            a.contraction_k(d) == Some(budget.min(d) as f64),
+            "contraction_k must report the in-expectation budget",
+        )?;
+        let trials = 5_000;
+        let mut acc = vec![0.0f64; d];
+        let mut nnz_acc = 0usize;
+        let mut var_acc = 0.0f64;
+        let mut out = Update::new_sparse(d);
+        for _ in 0..trials {
+            a.compress(&x, rng, &mut out);
+            nnz_acc += out.nnz();
+            let dense = out.to_dense(d);
+            for (s, &v) in acc.iter_mut().zip(&dense) {
+                *s += v as f64;
+            }
+            let resid: Vec<f32> = x.iter().zip(&dense).map(|(a, b)| a - b).collect();
+            var_acc += stats::l2_norm_sq(&resid);
+        }
+        let norm = stats::l2_norm(&x);
+        for (j, (&xj, &aj)) in x.iter().zip(&acc).enumerate() {
+            ensure_close(
+                aj / trials as f64,
+                xj as f64,
+                0.0,
+                0.15 * norm + 1e-6,
+                &format!("unbiasedness at coord {j} of d={d}"),
+            )?;
+        }
+        ensure_close(
+            nnz_acc as f64 / trials as f64,
+            budget.min(nz) as f64,
+            0.05,
+            0.15,
+            "expected kept count",
+        )?;
+        let want: f64 = x
+            .iter()
+            .zip(&p)
+            .filter(|(_, &pi)| pi > 0.0)
+            .map(|(&xi, &pi)| (xi as f64).powi(2) * (1.0 / pi - 1.0))
+            .sum();
+        ensure_close(
+            var_acc / trials as f64,
+            want,
+            0.2,
+            0.05 * x2 + 1e-9,
+            "closed-form variance",
+        )
+    });
+}
+
+/// Composed-payload robustness: truncating a valid `TAG_COMPOSED` frame
+/// at any byte cut must error cleanly, and a single-bit flip must at
+/// worst error — an `Ok` keeps the structural invariants. Arbitrary-
+/// byte totality for the tag is covered by
+/// `prop_wire_decoders_are_total_on_arbitrary_bytes` above.
+#[test]
+fn prop_composed_payload_survives_truncation_and_corruption() {
+    use memsgd::compress::elias::{decode_payload, BitReader, BitWriter};
+    check("composed-payload-robustness", 150, |rng| {
+        let d = 2 + rng.below(400);
+        let k = 1 + rng.below(d.min(16));
+        let mut comp = compress::from_spec(&format!("qsgd:8(top_k:{k})")).unwrap();
+        let x = random_vec(rng, d);
+        let mut out = Update::new_sparse(d);
+        comp.compress(&x, rng, &mut out);
+        let mut w = BitWriter::new();
+        let bits = comp.encode_payload(&out, &mut w);
+        let bytes = w.as_bytes();
+        // A prefix with fewer than the content bits must fail cleanly.
+        let cut = rng.below(((bits - 1) / 8) as usize + 1);
+        ensure(
+            decode_payload(&mut BitReader::new(&bytes[..cut]), d).is_err(),
+            format!("truncated composed frame decoded at byte {cut}"),
+        )?;
+        // A random single-bit flip inside the content region.
+        let mut corrupt = bytes.to_vec();
+        let flip = rng.below(bits as usize);
+        corrupt[flip / 8] ^= 1 << (7 - (flip % 8));
+        if let Ok(u) = decode_payload(&mut BitReader::new(&corrupt), d) {
+            ensure(u.to_dense(d).len() == d, "corrupt decode broke the dimension")?;
+            if let Update::Sparse(s) = &u {
+                ensure(s.nnz() <= d, "corrupt decode broke the nnz bound")?;
+                ensure(
+                    s.idx.iter().all(|&i| (i as usize) < d),
+                    "corrupt decode broke the index bound",
+                )?;
+            }
+        }
+        Ok(())
     });
 }
 

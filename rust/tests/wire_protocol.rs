@@ -43,6 +43,7 @@ fn data() -> Dataset {
 
 /// Every method kind the engines accept: memory-carrying sparsifiers
 /// (active-scan and dense-route), the data-dependent operators, the
+/// composed quantization-∘-sparsification and adaptive operators, the
 /// memory-free baselines, and the scaled unbiased estimator.
 fn all_methods() -> Vec<MethodSpec> {
     [
@@ -53,6 +54,8 @@ fn all_methods() -> Vec<MethodSpec> {
         "memsgd:sign",
         "memsgd:threshold:0.25",
         "memsgd:qsgd:8",
+        "memsgd:qsgd:8(top_k:2)",
+        "memsgd:adaptive:3",
         "sgd",
         "sgd:qsgd:8",
         "sgd:unbiased_rand_k:2",
@@ -304,6 +307,8 @@ fn payload_codec_reconciles_accounted_bits_for_every_compressor_spec() {
         "threshold:0.25",
         "qsgd:8",
         "qsgd:8:32",
+        "qsgd:8(top_k:3)",
+        "adaptive:5",
     ];
     for spec in specs {
         let cspec = CompressorSpec::parse(spec).unwrap();
@@ -338,7 +343,8 @@ fn payload_codec_reconciles_accounted_bits_for_every_compressor_spec() {
                 | CompressorSpec::RandK { .. }
                 | CompressorSpec::RandomP { .. }
                 | CompressorSpec::BlockTopK { .. }
-                | CompressorSpec::Threshold { .. } => {
+                | CompressorSpec::Threshold { .. }
+                | CompressorSpec::Adaptive { .. } => {
                     let nnz = match &out {
                         Update::Sparse(s) => s.nnz() as u64,
                         Update::Dense(_) => panic!("{spec}: sparse update expected"),
@@ -385,6 +391,25 @@ fn payload_codec_reconciles_accounted_bits_for_every_compressor_spec() {
                     let naive = (s.log2() + 1.0) * deff;
                     let elias = 3.0 * s * (s + deff.sqrt()) + 32.0;
                     assert_eq!(accounted, naive.min(elias).ceil() as u64, "{spec} t={t}");
+                    assert!(wire > 0, "{spec} t={t}");
+                }
+                // Composed: the accounting is the closed form 32 + nnz·
+                // (index + sign + level bits). The wire frame was
+                // validated exact above; its norm scalar cannot be
+                // recovered from the quantized update alone, so like
+                // QSGD the reconciliation asserts the accounted formula
+                // and that a positive payload was framed.
+                CompressorSpec::Composed { levels, .. } => {
+                    let nnz = match &out {
+                        Update::Sparse(s) => s.nnz() as u64,
+                        Update::Dense(_) => panic!("{spec}: sparse update expected"),
+                    };
+                    let level_bits = (32 - levels.leading_zeros()) as u64;
+                    assert_eq!(
+                        accounted,
+                        32 + nnz * (index_bits(d) + 1 + level_bits),
+                        "{spec} t={t}: accounted != composed closed form"
+                    );
                     assert!(wire > 0, "{spec} t={t}");
                 }
             }
